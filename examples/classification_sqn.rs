@@ -1,0 +1,66 @@
+//! Task 3 scenario (paper §3.3): binary classification with the stochastic
+//! quasi-Newton method (Byrd et al. 2016), comparing the explicit
+//! Algorithm-4 Hessian against the two-loop recursion and printing the
+//! convergence trace + classification accuracy.
+//!
+//!     cargo run --release --example classification_sqn
+
+use simopt::backend::native::{NativeLr, NativeMode};
+use simopt::backend::HessianMode;
+use simopt::opt::{run_sqn, SqnConfig};
+use simopt::rng::StreamTree;
+use simopt::sim::ClassifyData;
+use simopt::tasks::classification::sigmoid;
+
+fn accuracy(data: &ClassifyData, w: &[f32]) -> f64 {
+    let mut correct = 0usize;
+    for i in 0..data.n_samples {
+        let u: f32 = data.row(i).iter().zip(w).map(|(x, wj)| x * wj).sum();
+        let pred = if sigmoid(u) > 0.5 { 1.0 } else { 0.0 };
+        if pred == data.z[i] {
+            correct += 1;
+        }
+    }
+    correct as f64 / data.n_samples as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 256; // features (paper: 50..5000, N = 30n samples)
+    let tree = StreamTree::new(31);
+    let data = ClassifyData::generate(&tree, n);
+    println!("dataset: {} samples × {} binary features, 10% label noise\n",
+             data.n_samples, n);
+
+    let cfg = SqnConfig {
+        iters: 400,
+        batch: 50,      // paper's b
+        hbatch: 300,    // paper's b_H
+        l_every: 10,    // paper's L
+        memory: 25,     // paper's M
+        beta: 2.0,      // paper's β
+        track_every: 40,
+        track_rows: 2048,
+    };
+
+    for (mode, tag) in [(HessianMode::Explicit, "Algorithm 4 (explicit H)"),
+                        (HessianMode::TwoLoop, "two-loop recursion")] {
+        let mut backend = NativeLr::new(&data, NativeMode::Sequential, mode);
+        let t = std::time::Instant::now();
+        let (w, trace) = run_sqn(&mut backend, &data, &cfg, &tree.subtree(&[1]))?;
+        let secs = t.elapsed().as_secs_f64();
+        println!("{}:", tag);
+        println!("  time {:.3}s  pairs accepted {}  rejected {}",
+                 secs, trace.pairs_accepted, trace.pairs_rejected);
+        for &(k, loss) in &trace.checkpoints {
+            println!("  iter {:>4}: tracked BCE {:.4}", k, loss);
+        }
+        println!("  train accuracy: {:.1}% (noise ceiling ≈ 90%)\n",
+                 accuracy(&data, &w) * 100.0);
+    }
+
+    println!("Note: both Hessian applications compute the same direction — \
+              the explicit form is the paper's GPU-friendly O(Mn²) matrix \
+              showcase, the two-loop form the O(Mn) classic; see \
+              `cargo bench --bench ablation_hessian`.");
+    Ok(())
+}

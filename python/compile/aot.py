@@ -1,0 +1,244 @@
+"""AOT lowering: every (entry × size) in the spec table → one HLO-text
+artifact + a manifest the Rust runtime validates shapes against.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out ../artifacts [--full]
+                       [--entries mv_epoch,nv_grad] [--paper-batches]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32, I32, U32 = "f32", "i32", "u32"
+_DTYPES = {F32: jnp.float32, I32: jnp.int32, U32: jnp.uint32}
+
+
+def to_hlo_text(lowered, return_tuple=True) -> str:
+    """`return_tuple=False` is used for single-output programs whose output
+    the Rust runtime wants to keep as a *device buffer* and feed into the
+    next program via `execute_b` (PJRT cannot feed a tuple buffer back as an
+    array input)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple)
+    return comp.as_hlo_text()
+
+
+def _arg(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+class Spec:
+    """One artifact: entry point, static params, and typed I/O signature.
+
+    `tuple_output=False` marks single-output programs lowered without the
+    result tuple so the Rust runtime can keep the output device-resident.
+    """
+
+    def __init__(self, entry, fn, params, inputs, outputs, task,
+                 tuple_output=True):
+        self.entry = entry
+        self.fn = fn
+        self.params = params                       # static (baked-in) params
+        self.inputs = inputs                       # [(name, shape, dtype)]
+        self.outputs = outputs                     # [(name, shape, dtype)]
+        self.task = task
+        self.tuple_output = tuple_output
+        if not tuple_output:
+            assert len(outputs) == 1, "untupled artifacts are single-output"
+        ptag = "_".join(f"{k}{v}" for k, v in params.items())
+        self.name = f"{entry}_{ptag}" if ptag else entry
+
+    def lower(self):
+        args = [_arg(s, t) for _, s, t in self.inputs]
+        return jax.jit(self.fn).lower(*args)
+
+    def hlo_text(self):
+        return to_hlo_text(self.lower(), return_tuple=self.tuple_output)
+
+    def manifest_entry(self):
+        return {
+            "name": self.name,
+            "entry": self.entry,
+            "task": self.task,
+            "file": f"{self.name}.hlo.txt",
+            "params": self.params,
+            "tuple_output": self.tuple_output,
+            "inputs": [{"name": n, "shape": list(s), "dtype": t}
+                       for n, s, t in self.inputs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": t}
+                        for n, s, t in self.outputs],
+        }
+
+
+def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
+                nv_samples=32, lr_batch=64, lr_hbatch=256, lr_mem=25):
+    """The full artifact table.  Dimension lists come from the CLI; batch
+    and inner-loop parameters mirror the paper's §4.1 settings (modulo the
+    tile-friendly rounding documented in DESIGN.md §10)."""
+    specs = []
+
+    for d in mv_dims:
+        n, m = mv_samples, mv_inner
+        specs.append(Spec(
+            "mv_epoch",
+            functools.partial(model.mv_epoch, n_samples=n, m_inner=m),
+            {"d": d, "n": n, "m": m},
+            [("w", (d,), F32), ("mu", (d,), F32), ("sigma", (d,), F32),
+             ("key", (2,), U32), ("k_epoch", (), I32)],
+            [("w_out", (d,), F32), ("obj", (), F32)],
+            "mean_variance"))
+
+    # per-iteration dispatch ablation (A1): one mid-size variant
+    if mv_dims:
+        d, n, m = mv_dims[len(mv_dims) // 2], mv_samples, mv_inner
+        specs.append(Spec(
+            "mv_grad_step",
+            functools.partial(model.mv_grad_step, m_inner=m),
+            {"d": d, "n": n, "m": m},
+            [("c", (n, d), F32), ("rbar", (d,), F32), ("w", (d,), F32),
+             ("k_epoch", (), I32), ("m_iter", (), I32)],
+            [("w_out", (d,), F32), ("obj", (), F32)],
+            "mean_variance"))
+
+    for d in nv_dims:
+        s = nv_samples
+        specs.append(Spec(
+            "nv_grad",
+            functools.partial(model.nv_grad, n_samples=s),
+            {"d": d, "s": s},
+            [("x", (d,), F32), ("mu", (d,), F32), ("sigma", (d,), F32),
+             ("kc", (d,), F32), ("h", (d,), F32), ("v", (d,), F32),
+             ("key", (2,), U32)],
+            [("grad", (d,), F32), ("obj", (), F32)],
+            "newsvendor"))
+        # device-resident epoch path (§Perf): sample the panel once per
+        # epoch, keep it on device, evaluate gradients against the buffer
+        specs.append(Spec(
+            "nv_panel",
+            functools.partial(model.nv_panel, n_samples=s),
+            {"d": d, "s": s},
+            [("mu", (d,), F32), ("sigma", (d,), F32), ("key", (2,), U32)],
+            [("panel", (s, d), F32)],
+            "newsvendor"))
+        specs.append(Spec(
+            "nv_grad_panel", model.nv_grad_panel, {"d": d, "s": s},
+            [("x", (d,), F32), ("panel", (s, d), F32), ("kc", (d,), F32),
+             ("h", (d,), F32), ("v", (d,), F32)],
+            [("grad", (d,), F32), ("obj", (), F32)],
+            "newsvendor"))
+
+    for n in lr_dims:
+        b, bh, mem = lr_batch, lr_hbatch, lr_mem
+        rows = 30 * n  # paper's N = 30n dataset convention
+        specs.append(Spec(
+            "lr_grad", model.lr_grad, {"n": n, "b": b},
+            [("w", (n,), F32), ("xb", (b, n), F32), ("zb", (b,), F32)],
+            [("grad", (n,), F32), ("loss", (), F32)],
+            "classification"))
+        specs.append(Spec(
+            "lr_hvp", model.lr_hvp, {"n": n, "bh": bh},
+            [("wbar", (n,), F32), ("s", (n,), F32), ("xh", (bh, n), F32)],
+            [("y", (n,), F32)],
+            "classification"))
+        # device-resident dataset path (§Perf): the full design matrix is
+        # uploaded once; per-iteration inputs shrink to (w, idx)
+        specs.append(Spec(
+            "lr_grad_ds", model.lr_grad_ds, {"n": n, "b": b, "rows": rows},
+            [("w", (n,), F32), ("x_full", (rows, n), F32),
+             ("z_full", (rows,), F32), ("idx", (b,), I32)],
+            [("grad", (n,), F32), ("loss", (), F32)],
+            "classification"))
+        specs.append(Spec(
+            "lr_hvp_ds", model.lr_hvp_ds, {"n": n, "bh": bh, "rows": rows},
+            [("wbar", (n,), F32), ("s", (n,), F32), ("x_full", (rows, n), F32),
+             ("idx", (bh,), I32)],
+            [("y", (n,), F32)],
+            "classification"))
+        specs.append(Spec(
+            "lr_hbuild", model.lr_hbuild, {"n": n, "mem": mem},
+            [("s_mem", (mem, n), F32), ("y_mem", (mem, n), F32),
+             ("m_count", (), I32)],
+            [("h", (n, n), F32)],
+            "classification"))
+        specs.append(Spec(
+            "lr_happly", model.lr_happly, {"n": n},
+            [("h", (n, n), F32), ("g", (n,), F32)],
+            [("d", (n,), F32)],
+            "classification"))
+        specs.append(Spec(
+            "lr_dir_twoloop", model.lr_dir_twoloop, {"n": n, "mem": mem},
+            [("s_mem", (mem, n), F32), ("y_mem", (mem, n), F32),
+             ("m_count", (), I32), ("g", (n,), F32)],
+            [("d", (n,), F32)],
+            "classification"))
+
+    return specs
+
+
+DEFAULT_MV = [128, 512, 2048]
+DEFAULT_NV = [256, 2048, 16384]
+DEFAULT_LR = [64, 256, 1024]
+FULL_MV = DEFAULT_MV + [8192]
+FULL_NV = DEFAULT_NV + [65536]
+FULL_LR = DEFAULT_LR + [2048]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--entries", default="",
+                    help="comma-separated entry filter (default: all)")
+    ap.add_argument("--full", action="store_true",
+                    help="add the larger paper-scale size variants")
+    ap.add_argument("--paper-batches", action="store_true",
+                    help="use the paper's b=50, b_H=300 instead of the "
+                         "tile-friendly 64/256")
+    ap.add_argument("--mv-dims", default="", help="override, e.g. 128,512")
+    ap.add_argument("--nv-dims", default="")
+    ap.add_argument("--lr-dims", default="")
+    args = ap.parse_args()
+
+    def dims(flag, default, full):
+        if flag:
+            return [int(x) for x in flag.split(",") if x]
+        return full if args.full else default
+
+    kw = {}
+    if args.paper_batches:
+        kw.update(lr_batch=50, lr_hbatch=300)
+    specs = build_specs(dims(args.mv_dims, DEFAULT_MV, FULL_MV),
+                        dims(args.nv_dims, DEFAULT_NV, FULL_NV),
+                        dims(args.lr_dims, DEFAULT_LR, FULL_LR), **kw)
+    if args.entries:
+        keep = set(args.entries.split(","))
+        specs = [s for s in specs if s.entry in keep]
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    for spec in specs:
+        path = os.path.join(args.out, f"{spec.name}.hlo.txt")
+        text = spec.hlo_text()
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(spec.manifest_entry())
+        print(f"  {spec.name}: {len(text)} chars")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(specs)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

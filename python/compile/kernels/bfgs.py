@@ -1,0 +1,66 @@
+"""L1 Pallas kernel for Algorithm 4 (Hessian updating): the symmetric BFGS
+rank update applied tile-by-tile over the n×n inverse-Hessian approximation.
+
+Expanding the paper's update with hy = H y (H symmetric) and q = yᵀ H y:
+
+  H′ = (I − ρ s yᵀ) H (I − ρ y sᵀ) + ρ s sᵀ
+     = H − ρ s (hy)ᵀ − ρ (hy) sᵀ + (ρ² q + ρ) s sᵀ
+
+so each (i, j) tile of H′ needs only the (i, j) tile of H plus the i- and
+j-tiles of s and hy and two scalars — a perfectly parallel 2-D grid with no
+cross-tile reduction: the "large-scale matrix operations" showcase of the
+paper's second-order method.  The matvec hy = H y and the scalar q are
+computed by XLA outside the kernel (they fuse into the surrounding graph).
+
+A masked update (ρ = 0 ⇒ coef = [0, 0]) leaves H unchanged, which is how the
+fori_loop in model.lr_hbuild skips invalid correction-memory slots.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bfgs_update_kernel(h_ref, si_ref, sj_ref, hyi_ref, hyj_ref, coef_ref,
+                        o_ref):
+    rho = coef_ref[0]
+    c2 = coef_ref[1]                      # ρ²q + ρ
+    si = si_ref[...]                      # (tile,) rows
+    sj = sj_ref[...]                      # (tile,) cols
+    hyi = hyi_ref[...]
+    hyj = hyj_ref[...]
+    o_ref[...] = (h_ref[...]
+                  - rho * (si[:, None] * hyj[None, :])
+                  - rho * (hyi[:, None] * sj[None, :])
+                  + c2 * (si[:, None] * sj[None, :]))
+
+
+def pick_tile(n, budget_bytes=1 << 20):
+    """Power-of-two tile edge dividing n with two f32 tiles within budget."""
+    tile = 1
+    while tile * 2 <= n and n % (tile * 2) == 0 \
+            and 2 * (tile * 2) ** 2 * 4 <= budget_bytes:
+        tile *= 2
+    return tile
+
+
+def bfgs_rank_update(h, s, hy, coef, tile=None):
+    """One Algorithm-4 update H′ from H (n, n), s, hy (n,), coef = [ρ, ρ²q+ρ]."""
+    n = h.shape[0]
+    t = tile or pick_tile(n)
+    if n % t != 0:
+        raise ValueError(f"tile={t} must divide n={n}")
+    row = pl.BlockSpec((t,), lambda i, j: (i,))
+    col = pl.BlockSpec((t,), lambda i, j: (j,))
+    return pl.pallas_call(
+        _bfgs_update_kernel,
+        grid=(n // t, n // t),
+        in_specs=[
+            pl.BlockSpec((t, t), lambda i, j: (i, j)),
+            row, col, row, col,
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), h.dtype),
+        interpret=True,
+    )(h, s, s, hy, hy, coef)

@@ -1,0 +1,98 @@
+"""L1 Pallas kernels for Task 3 (binary classification): fused logistic
+minibatch gradient/loss and the Gauss-Newton Hessian-vector product.
+
+Both kernels stream row tiles of the design-matrix batch through VMEM and
+accumulate the n-length output across grid steps:
+
+  grad:  u = X_t w;  c = σ(u);  g += (c − z_t) Xᵀ_t;  loss += Σ bce(u, z_t)
+  hvp:   u = X_t w;  a = σ(u)(1−σ(u));  y += (a ⊙ (X_t s)) Xᵀ_t
+
+The fusion (matvec + nonlinearity + rank-reduction in one pass) is the
+TPU-shaped version of the paper's per-sample CUDA threads: two MXU matvecs
+and a VPU sigmoid per tile, the d×1 accumulator resident in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .mv_grad import pick_tile_n
+
+
+def _lr_grad_kernel(x_ref, z_ref, w_ref, g_ref, l_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    xb = x_ref[...]                       # (tile_b, n)
+    z = z_ref[...]                        # (tile_b,)
+    u = xb @ w_ref[...]                   # (tile_b,)
+    c = jax.nn.sigmoid(u)
+    g_ref[...] += (c - z) @ xb            # (n,)
+    # stable BCE: max(u,0) − u·z + log1p(e^{−|u|}), summed (mean taken outside)
+    l_ref[...] += jnp.sum(
+        jnp.maximum(u, 0.0) - u * z + jnp.log1p(jnp.exp(-jnp.abs(u)))
+    )[None]
+
+
+def lr_grad(w, xb, zb, tile_b=None):
+    """Minibatch logistic gradient (paper eq. (12)) and mean BCE loss."""
+    b, n = xb.shape
+    tb = tile_b or pick_tile_n(b, n)
+    if b % tb != 0:
+        raise ValueError(f"tile_b={tb} must divide b={b}")
+    g, l = pl.pallas_call(
+        _lr_grad_kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, n), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), w.dtype),
+            jax.ShapeDtypeStruct((1,), w.dtype),
+        ),
+        interpret=True,
+    )(xb, zb, w)
+    return g / b, l[0] / b
+
+
+def _lr_hvp_kernel(x_ref, w_ref, s_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...]                       # (tile_b, n)
+    u = xb @ w_ref[...]
+    c = jax.nn.sigmoid(u)
+    a = c * (1.0 - c)
+    o_ref[...] += (a * (xb @ s_ref[...])) @ xb
+
+
+def lr_hvp(wbar, s, xh, tile_b=None):
+    """Sub-sampled Hessian-vector product (paper eq. (13)) for the correction
+    pair y_t = ∇²F(ω̄_t)·s_t of Algorithm 3 line 18."""
+    bh, n = xh.shape
+    tb = tile_b or pick_tile_n(bh, n)
+    if bh % tb != 0:
+        raise ValueError(f"tile_b={tb} must divide b_H={bh}")
+    vec = pl.BlockSpec((n,), lambda i: (0,))
+    out = pl.pallas_call(
+        _lr_hvp_kernel,
+        grid=(bh // tb,),
+        in_specs=[pl.BlockSpec((tb, n), lambda i: (i, 0)), vec, vec],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((n,), wbar.dtype),
+        interpret=True,
+    )(xh, wbar, s)
+    return out / bh

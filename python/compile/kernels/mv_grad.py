@@ -1,0 +1,71 @@
+"""L1 Pallas kernel for Task 1 (mean-variance portfolio): the centered
+covariance matvec  (CᵀC)·w  computed in a single pass over the sample panel,
+never materializing the d×d covariance matrix.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the paper's CUDA story tiles
+the N×d sample panel across threadblocks; here each grid step streams one
+row-tile of C through VMEM, does the two MXU matvecs (C_tile @ w, then
+u @ C_tile) and accumulates into the d-length output that stays resident in
+VMEM across the whole grid.
+
+VMEM budget per grid step (f32): tile_n·d (panel tile) + 2·d (w, out).
+With tile_n = 8 lanes of 128·k columns this sits well under the ~16 MiB VMEM
+of a TPU core for d ≤ 2¹⁸; the AOT spec keeps tile_n·d ≤ 1 MiB by default.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cov_matvec_kernel(c_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    c = c_ref[...]                 # (tile_n, d) panel tile
+    u = c @ w_ref[...]             # (tile_n,)  MXU matvec #1
+    o_ref[...] += u @ c            # (d,)       MXU matvec #2, accumulate
+
+
+def pick_tile_n(n, d, budget_bytes=1 << 20):
+    """Largest power-of-two row tile that divides n and keeps the panel tile
+    within the VMEM budget."""
+    tile = 1
+    while tile * 2 <= n and n % (tile * 2) == 0 \
+            and tile * 2 * d * 4 <= budget_bytes:
+        tile *= 2
+    return tile
+
+
+def cov_matvec(c, w, tile_n=None):
+    """(CᵀC) w for C (n, d), w (d,) — unscaled; callers divide by (n−1)."""
+    n, d = c.shape
+    tn = tile_n or pick_tile_n(n, d)
+    if n % tn != 0:
+        raise ValueError(f"tile_n={tn} must divide n={n}")
+    return pl.pallas_call(
+        _cov_matvec_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), c.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(c, w)
+
+
+def mv_grad(c, rbar, w):
+    """∇f̂(w) = Ĉw − R̄ using the kernel; Ĉ = CᵀC/(n−1)."""
+    n = c.shape[0]
+    return cov_matvec(c, w) / (n - 1) - rbar
+
+
+def mv_obj(c, rbar, w):
+    """f̂(w) = ½ wᵀĈw − wᵀR̄ using the kernel."""
+    n = c.shape[0]
+    return 0.5 * jnp.dot(w, cov_matvec(c, w)) / (n - 1) - jnp.dot(w, rbar)

@@ -1,0 +1,164 @@
+"""Pure-jnp correctness oracles for every Pallas kernel and L2 entry point.
+
+These are the ground truth the pytest suite checks the Pallas kernels and the
+AOT-lowered programs against.  They are deliberately written in the most
+direct form (materializing intermediates, no tiling) so that a mismatch
+always points at the kernel, not the oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-10
+
+
+# ---------------------------------------------------------------------------
+# Task 1 — mean-variance portfolio (paper §3.1)
+# ---------------------------------------------------------------------------
+
+def cov_matvec_ref(c, w):
+    """(CᵀC)w for the centered sample panel C (n, d) — no 1/(n-1) scaling."""
+    return c.T @ (c @ w)
+
+
+def mv_grad_ref(c, rbar, w):
+    """∇f̂(w) = Ĉw − R̄ with Ĉ the empirical covariance of the samples."""
+    n = c.shape[0]
+    return cov_matvec_ref(c, w) / (n - 1) - rbar
+
+
+def mv_obj_ref(c, rbar, w):
+    """f̂(w) = ½ wᵀĈw − wᵀR̄  (paper eq. (4))."""
+    n = c.shape[0]
+    return 0.5 * jnp.dot(w, cov_matvec_ref(c, w)) / (n - 1) - jnp.dot(w, rbar)
+
+
+def simplex_lmo_ref(g):
+    """argmin_{s ∈ W} sᵀg over W = {s ≥ 0, 1ᵀs ≤ 1}: a vertex of the simplex.
+
+    The minimum is attained at e_j for j = argmin g when min g < 0, and at the
+    origin otherwise.
+    """
+    j = jnp.argmin(g)
+    d = g.shape[0]
+    return jnp.where(g[j] < 0, jax.nn.one_hot(j, d, dtype=g.dtype),
+                     jnp.zeros(d, g.dtype))
+
+
+def mv_epoch_ref(w, mu, sigma, key, k_epoch, n_samples, m_inner):
+    """Reference for one Frank-Wolfe epoch (Alg. 1 lines 5-12): resample once,
+    run m_inner FW steps with step size 2/(kM+m+2)."""
+    d = w.shape[0]
+    r = mu[None, :] + sigma[None, :] * jax.random.normal(
+        key, (n_samples, d), dtype=w.dtype)
+    rbar = r.mean(axis=0)
+    c = r - rbar[None, :]
+    for m in range(m_inner):
+        g = mv_grad_ref(c, rbar, w)
+        s = simplex_lmo_ref(g)
+        gamma = 2.0 / (k_epoch * m_inner + m + 2.0)
+        w = w + gamma * (s - w)
+    return w, mv_obj_ref(c, rbar, w)
+
+
+# ---------------------------------------------------------------------------
+# Task 2 — multi-product newsvendor (paper §3.2)
+# ---------------------------------------------------------------------------
+
+def nv_stats_ref(demand, x):
+    """Per-product Monte-Carlo statistics over the demand panel (s, d):
+    indicator mean  mean_s 1{D ≤ x},
+    overage mean    mean_s max(x − D, 0),
+    underage mean   mean_s max(D − x, 0).
+    """
+    le = (demand <= x[None, :]).astype(x.dtype)
+    diff = x[None, :] - demand
+    return le.mean(axis=0), jnp.maximum(diff, 0).mean(axis=0), \
+        jnp.maximum(-diff, 0).mean(axis=0)
+
+
+def nv_grad_ref(x, demand, kc, h, v):
+    """MC gradient (paper eq. (9)): f̂ⱼ′ = kⱼ − vⱼ + (hⱼ+vⱼ)·mean 1{d ≤ xⱼ}."""
+    ind, _, _ = nv_stats_ref(demand, x)
+    return kc - v + (h + v) * ind
+
+
+def nv_obj_ref(x, demand, kc, h, v):
+    """Empirical expected cost (paper eq. (6), sample-average form)."""
+    _, over, under = nv_stats_ref(demand, x)
+    return jnp.dot(kc, x) + jnp.dot(h, over) + jnp.dot(v, under)
+
+
+# ---------------------------------------------------------------------------
+# Task 3 — logistic binary classification (paper §3.3)
+# ---------------------------------------------------------------------------
+
+def lr_grad_ref(w, xb, zb):
+    """Minibatch gradient (12) and mean BCE loss of the logistic model."""
+    u = xb @ w
+    c = jax.nn.sigmoid(u)
+    b = xb.shape[0]
+    g = xb.T @ (c - zb) / b
+    # numerically stable BCE: max(u,0) − u·z + log(1 + e^{−|u|})
+    loss = jnp.mean(jnp.maximum(u, 0) - u * zb + jnp.log1p(jnp.exp(-jnp.abs(u))))
+    return g, loss
+
+
+def lr_hvp_ref(wbar, s, xh):
+    """Sub-sampled Hessian-vector product (13): ∇²F(ω̄)s = Xᵀdiag(a)Xs / b_H
+    with a = c(1−c)."""
+    u = xh @ wbar
+    c = jax.nn.sigmoid(u)
+    a = c * (1.0 - c)
+    return xh.T @ (a * (xh @ s)) / xh.shape[0]
+
+
+def lr_hbuild_ref(s_mem, y_mem, m_count):
+    """Algorithm 4 (explicit H): H ← (I−ρsyᵀ)H(I−ρysᵀ)+ρssᵀ over the valid
+    correction pairs, H₀ = (sᵀy)/(yᵀy)·I from the newest pair.
+
+    s_mem, y_mem: (mem, n) with rows [0, m_count) valid, oldest first.
+    """
+    mem, n = s_mem.shape
+    m_count = int(m_count)
+    if m_count <= 0:
+        return jnp.eye(n, dtype=s_mem.dtype)
+    s_l, y_l = s_mem[m_count - 1], y_mem[m_count - 1]
+    gamma = jnp.dot(s_l, y_l) / jnp.maximum(jnp.dot(y_l, y_l), EPS)
+    h = gamma * jnp.eye(n, dtype=s_mem.dtype)
+    for j in range(m_count):
+        s, y = s_mem[j], y_mem[j]
+        rho = 1.0 / jnp.maximum(jnp.dot(y, s), EPS)
+        e = jnp.eye(n, dtype=s_mem.dtype)
+        h = (e - rho * jnp.outer(s, y)) @ h @ (e - rho * jnp.outer(y, s)) \
+            + rho * jnp.outer(s, s)
+    return h
+
+
+def lr_dir_ref(s_mem, y_mem, m_count, g):
+    """H·g via the explicit Algorithm-4 matrix (oracle for both lr_hdir paths)."""
+    return lr_hbuild_ref(s_mem, y_mem, m_count) @ g
+
+
+def lr_twoloop_ref(s_mem, y_mem, m_count, g):
+    """Classic L-BFGS two-loop recursion over the valid pairs (oldest first in
+    memory); mathematically identical to lr_dir_ref."""
+    m_count = int(m_count)
+    if m_count <= 0:
+        return g
+    alphas = []
+    q = g
+    for j in range(m_count - 1, -1, -1):
+        s, y = s_mem[j], y_mem[j]
+        rho = 1.0 / jnp.maximum(jnp.dot(y, s), EPS)
+        a = rho * jnp.dot(s, q)
+        q = q - a * y
+        alphas.append((j, a, rho))
+    s_l, y_l = s_mem[m_count - 1], y_mem[m_count - 1]
+    gamma = jnp.dot(s_l, y_l) / jnp.maximum(jnp.dot(y_l, y_l), EPS)
+    r = gamma * q
+    for j, a, rho in reversed(alphas):
+        s, y = s_mem[j], y_mem[j]
+        b = rho * jnp.dot(y, r)
+        r = r + s * (a - b)
+    return r

@@ -1,0 +1,219 @@
+"""L2 — the paper's compute graphs, one jittable entry point per program the
+Rust coordinator executes.  Sampling happens *inside* the graph (threefry
+keys are inputs), so a whole resample-epoch is a single device dispatch and
+Python never appears on the request path.
+
+Entry points (all f32; key is uint32[2]; counters are int32 scalars):
+
+  mv_epoch       (w, mu, sigma, key, k_epoch) -> (w', f̂)       Alg. 1 epoch
+  mv_grad_step   (c, rbar, w, k_epoch, m)     -> (w', f̂)       1 FW step (A1)
+  nv_grad        (x, mu, sigma, kc, h, v, key)-> (∇f̂, f̂)       Alg. 2 line 7
+  lr_grad        (w, xb, zb)                  -> (∇F̂, loss)    eq. (12)
+  lr_hvp         (wbar, s, xh)                -> y              eq. (13)
+  lr_hbuild      (s_mem, y_mem, m_count)      -> H              Alg. 4
+  lr_happly      (h, g)                       -> H·g
+  lr_dir_twoloop (s_mem, y_mem, m_count, g)   -> H·g            (ablation A2)
+
+All are shape-monomorphic: python/compile/aot.py lowers one artifact per
+(entry × size) listed in its spec table.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import bfgs as bfgs_k
+from .kernels import logreg as logreg_k
+from .kernels import mv_grad as mv_k
+from .kernels import nv_grad as nv_k
+
+EPS = 1e-10
+
+
+# ---------------------------------------------------------------------------
+# Task 1 — mean-variance Frank-Wolfe (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def simplex_lmo(g):
+    """Analytic LMO over W = {w ≥ 0, 1ᵀw ≤ 1}: e_{argmin g} if min g < 0,
+    else the origin (Algorithm 1 line 8)."""
+    j = jnp.argmin(g)
+    d = g.shape[0]
+    return jnp.where(g[j] < 0, jax.nn.one_hot(j, d, dtype=g.dtype),
+                     jnp.zeros(d, g.dtype))
+
+
+def _fw_simplex_step(c, rbar, w, k_epoch, m, m_inner):
+    """One FW step on the current sample panel: gradient via the L1 kernel,
+    analytic LMO, step size γ = 2/(kM+m+2) (Algorithm 1 lines 7-10)."""
+    g = mv_k.mv_grad(c, rbar, w)
+    s = simplex_lmo(g)
+    gamma = 2.0 / (k_epoch.astype(w.dtype) * m_inner
+                   + m.astype(w.dtype) + 2.0)
+    return w + gamma * (s - w)
+
+
+def mv_epoch(w, mu, sigma, key, k_epoch, *, n_samples, m_inner):
+    """One full epoch of Algorithm 1: resample the return panel once, run
+    m_inner Frank-Wolfe steps, report the final empirical objective."""
+    d = w.shape[0]
+    r = mu[None, :] + sigma[None, :] * jax.random.normal(
+        key, (n_samples, d), dtype=w.dtype)
+    rbar = jnp.mean(r, axis=0)
+    c = r - rbar[None, :]
+
+    def body(m, w):
+        return _fw_simplex_step(c, rbar, w, k_epoch, m, m_inner)
+
+    w = lax.fori_loop(0, m_inner, body, w)
+    return w, mv_k.mv_obj(c, rbar, w)
+
+
+def mv_grad_step(c, rbar, w, k_epoch, m, *, m_inner):
+    """Per-iteration variant for ablation A1: the host keeps the sample panel
+    and dispatches one FW step at a time (paying the host↔device boundary on
+    every step, like a naive per-op GPU offload)."""
+    w = _fw_simplex_step(c, rbar, w, k_epoch, m, m_inner)
+    return w, mv_k.mv_obj(c, rbar, w)
+
+
+# ---------------------------------------------------------------------------
+# Task 2 — newsvendor gradient program (Algorithm 2 line 7)
+# ---------------------------------------------------------------------------
+
+def nv_grad(x, mu, sigma, kc, h, v, key, *, n_samples):
+    """Sample the demand panel in-graph, return the MC gradient (9) and the
+    sample-average cost (6).  The LP LMO (line 8) runs on the Rust side."""
+    d = x.shape[0]
+    demand = mu[None, :] + sigma[None, :] * jax.random.normal(
+        key, (n_samples, d), dtype=x.dtype)
+    return nv_k.nv_grad_obj(x, demand, kc, h, v)
+
+
+def nv_panel(mu, sigma, key, *, n_samples):
+    """Device-resident epoch path (§Perf): sample the epoch's demand panel
+    once.  The Rust runtime keeps the output as a PJRT buffer and feeds it
+    to `nv_grad_panel` for all M inner iterations — Algorithm 2 line 5 with
+    zero host↔device panel traffic."""
+    d = mu.shape[0]
+    return mu[None, :] + sigma[None, :] * jax.random.normal(
+        key, (n_samples, d), dtype=mu.dtype)
+
+
+def nv_grad_panel(x, panel, kc, h, v):
+    """Gradient (9) + cost (6) against an existing demand panel."""
+    return nv_k.nv_grad_obj(x, panel, kc, h, v)
+
+
+# ---------------------------------------------------------------------------
+# Task 3 — SQN programs (Algorithms 3 and 4)
+# ---------------------------------------------------------------------------
+
+def lr_grad(w, xb, zb):
+    """Minibatch stochastic gradient (12) + mean BCE loss."""
+    return logreg_k.lr_grad(w, xb, zb)
+
+
+def lr_hvp(wbar, s, xh):
+    """Correction-pair product y_t = ∇̂²F(ω̄_t)·s_t (Algorithm 3 line 18)."""
+    return logreg_k.lr_hvp(wbar, s, xh)
+
+
+def lr_grad_ds(w, x_full, z_full, idx):
+    """Device-resident dataset path (§Perf): the full (N×n) design matrix is
+    uploaded once and stays a PJRT buffer; the per-iteration inputs are just
+    (w, minibatch indices).  The in-graph gather replaces the host-side
+    row copy."""
+    xb = jnp.take(x_full, idx, axis=0)
+    zb = jnp.take(z_full, idx, axis=0)
+    return logreg_k.lr_grad(w, xb, zb)
+
+
+def lr_hvp_ds(wbar, s, x_full, idx):
+    """Device-resident variant of the Hessian batch (Algorithm 3 line 17)."""
+    xh = jnp.take(x_full, idx, axis=0)
+    return logreg_k.lr_hvp(wbar, s, xh)
+
+
+def lr_hbuild(s_mem, y_mem, m_count, *, use_pallas=False):
+    """Algorithm 4: build the explicit inverse-Hessian approximation H_t from
+    the correction memory (rows [0, m_count) valid, oldest first).
+
+    Invalid slots are skipped by zeroing ρ, which turns the rank update into
+    the identity.
+
+    `use_pallas` selects the L1 tiled kernel.  The AOT'd artifact uses the
+    fused jnp form: under interpret=True the Pallas grid lowers to a long
+    chain of dynamic-slice ops that costs ~360 ms per rebuild at n=1024 on
+    CPU-PJRT (EXPERIMENTS.md §Perf L2-1); on a real TPU the Mosaic-compiled
+    kernel is the right choice and the flag flips back.
+    """
+    mem, n = s_mem.shape
+    idx = jnp.maximum(m_count - 1, 0)
+    s_l = jnp.take(s_mem, idx, axis=0)
+    y_l = jnp.take(y_mem, idx, axis=0)
+    gamma = jnp.where(
+        m_count > 0,
+        jnp.dot(s_l, y_l) / jnp.maximum(jnp.dot(y_l, y_l), EPS),
+        jnp.asarray(1.0, s_mem.dtype))
+    h0 = gamma * jnp.eye(n, dtype=s_mem.dtype)
+
+    def body(j, h):
+        s = s_mem[j]
+        y = y_mem[j]
+        denom = jnp.dot(y, s)
+        valid = jnp.logical_and(j < m_count, denom > EPS)
+        rho = jnp.where(valid, 1.0 / jnp.maximum(denom, EPS),
+                        jnp.asarray(0.0, s_mem.dtype))
+        hy = h @ y
+        q = jnp.dot(y, hy)
+        c2 = rho * rho * q + rho
+        if use_pallas:
+            coef = jnp.stack([rho, c2])
+            return bfgs_k.bfgs_rank_update(h, s, hy, coef)
+        # fused jnp form: H − ρ·s hyᵀ − ρ·hy sᵀ + (ρ²q+ρ)·s sᵀ
+        return (h
+                - rho * jnp.outer(s, hy)
+                - rho * jnp.outer(hy, s)
+                + c2 * jnp.outer(s, s))
+
+    return lax.fori_loop(0, mem, body, h0)
+
+
+def lr_happly(h, g):
+    """Direction d = H_t·g (Algorithm 3 line 11).  Plain MXU matvec; XLA
+    fuses it — no Pallas needed."""
+    return h @ g
+
+
+def lr_dir_twoloop(s_mem, y_mem, m_count, g):
+    """O(mem·n) two-loop recursion computing the same H_t·g as
+    lr_hbuild∘lr_happly — ablation A2 against the paper's explicit-matrix
+    Algorithm 4."""
+    mem, n = s_mem.shape
+    dots = jnp.sum(y_mem * s_mem, axis=1)                      # (mem,)
+    valid = jnp.logical_and(jnp.arange(mem) < m_count, dots > EPS)
+    rho = jnp.where(valid, 1.0 / jnp.maximum(dots, EPS), 0.0).astype(g.dtype)
+
+    def bwd(i, carry):
+        q, alpha = carry
+        j = mem - 1 - i
+        a = rho[j] * jnp.dot(s_mem[j], q)
+        return q - a * y_mem[j], alpha.at[j].set(a)
+
+    q, alpha = lax.fori_loop(0, mem, bwd, (g, jnp.zeros(mem, g.dtype)))
+
+    idx = jnp.maximum(m_count - 1, 0)
+    s_l = jnp.take(s_mem, idx, axis=0)
+    y_l = jnp.take(y_mem, idx, axis=0)
+    gamma = jnp.where(
+        m_count > 0,
+        jnp.dot(s_l, y_l) / jnp.maximum(jnp.dot(y_l, y_l), EPS),
+        jnp.asarray(1.0, g.dtype))
+    r = gamma * q
+
+    def fwd(j, r):
+        b = rho[j] * jnp.dot(y_mem[j], r)
+        return r + s_mem[j] * (alpha[j] - b)
+
+    return lax.fori_loop(0, mem, fwd, r)

@@ -1,0 +1,35 @@
+"""Shared fixtures/strategies for the kernel and model test suites.
+
+Pallas kernels run under interpret=True, which is slow per call — the
+hypothesis settings below cap example counts so the full suite stays fast
+while still sweeping the shape/seed space.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Global hypothesis profile: interpret-mode kernels are expensive per example.
+settings.register_profile(
+    "kernels",
+    max_examples=12,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _x64_off():
+    # The AOT artifacts are f32; keep the test environment identical.
+    jax.config.update("jax_enable_x64", False)
+
+
+def rngkey(seed):
+    return jax.random.PRNGKey(seed)
+
+
+def assert_close(a, b, rtol=1e-5, atol=1e-6):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=rtol, atol=atol)

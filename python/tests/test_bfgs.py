@@ -1,0 +1,142 @@
+"""Algorithm 4 (Hessian updating) — Pallas rank-update kernel, explicit-H
+build, and the two-loop ablation, all against the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels import bfgs as bfgsk
+from compile.kernels import ref
+
+from .conftest import assert_close, rngkey
+
+
+def _pairs(seed, mem, n, scale=0.1):
+    """Correction pairs with positive curvature (sᵀy > 0), as produced by a
+    convex problem."""
+    s = jax.random.normal(rngkey(seed), (mem, n)) * scale
+    # y = A s with A SPD ⇒ sᵀy > 0
+    a = jax.random.normal(rngkey(seed + 1), (n, n)) * 0.1
+    spd = a @ a.T + jnp.eye(n)
+    y = s @ spd.T
+    return s, y
+
+
+@given(st.integers(0, 10_000), st.sampled_from([8, 16, 64]))
+def test_rank_update_kernel_matches_formula(seed, n):
+    s, y = _pairs(seed, 1, n)
+    s, y = s[0], y[0]
+    h = jnp.eye(n) * 0.7
+    hy = h @ y
+    rho = 1.0 / jnp.dot(y, s)
+    q = jnp.dot(y, hy)
+    coef = jnp.stack([rho, rho * rho * q + rho])
+    got = bfgsk.bfgs_rank_update(h, s, hy, coef)
+    e = jnp.eye(n)
+    want = (e - rho * jnp.outer(s, y)) @ h @ (e - rho * jnp.outer(y, s)) \
+        + rho * jnp.outer(s, s)
+    assert_close(got, want, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 4, 8]))
+def test_rank_update_tile_invariance(seed, tile):
+    n = 16
+    s, y = _pairs(seed, 1, n)
+    s, y = s[0], y[0]
+    h = jnp.eye(n)
+    hy = h @ y
+    rho = 1.0 / jnp.dot(y, s)
+    coef = jnp.stack([rho, rho * rho * jnp.dot(y, hy) + rho])
+    a = bfgsk.bfgs_rank_update(h, s, hy, coef, tile=tile)
+    b = bfgsk.bfgs_rank_update(h, s, hy, coef, tile=n)
+    assert_close(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_rank_update_zero_rho_is_identity():
+    """coef = [0,0] must leave H untouched — the masking mechanism that
+    skips invalid correction slots."""
+    n = 8
+    h = jax.random.normal(rngkey(0), (n, n))
+    s = jax.random.normal(rngkey(1), (n,)) * 1e3   # garbage slot contents
+    hy = jax.random.normal(rngkey(2), (n,)) * 1e3
+    got = bfgsk.bfgs_rank_update(h, s, hy, jnp.zeros(2))
+    assert_close(got, h, rtol=0, atol=0)
+
+
+@given(st.integers(0, 10_000), st.integers(0, 6))
+def test_hbuild_matches_ref(seed, m_count):
+    mem, n = 6, 16
+    s, y = _pairs(seed, mem, n)
+    got = model.lr_hbuild(s, y, jnp.int32(m_count))
+    want = ref.lr_hbuild_ref(s, y, m_count)
+    assert_close(got, want, rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(0, 10_000))
+def test_hbuild_symmetric_psd(seed):
+    """H_t from BFGS with positive-curvature pairs is symmetric PSD."""
+    s, y = _pairs(seed, 5, 12)
+    h = np.asarray(model.lr_hbuild(s, y, jnp.int32(5)), dtype=np.float64)
+    np.testing.assert_allclose(h, h.T, rtol=1e-4, atol=1e-5)
+    evals = np.linalg.eigvalsh((h + h.T) / 2)
+    assert evals.min() > -1e-4
+
+
+def test_hbuild_secant_condition():
+    """After the update with pair (s,y), H must satisfy H y = s for the most
+    recent pair (the defining BFGS property)."""
+    s, y = _pairs(3, 4, 10)
+    h = model.lr_hbuild(s, y, jnp.int32(4))
+    assert_close(h @ y[3], s[3], rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6))
+def test_twoloop_matches_explicit(seed, m_count):
+    """Ablation A2 precondition: two-loop and explicit Algorithm 4 compute
+    the same direction."""
+    mem, n = 6, 16
+    s, y = _pairs(seed, mem, n)
+    g = jax.random.normal(rngkey(seed + 7), (n,))
+    d1 = model.lr_dir_twoloop(s, y, jnp.int32(m_count), g)
+    d2 = ref.lr_dir_ref(s, y, m_count, g)
+    assert_close(d1, d2, rtol=1e-3, atol=1e-4)
+
+
+def test_twoloop_mcount_zero_is_gradient():
+    s, y = _pairs(1, 4, 8)
+    g = jax.random.normal(rngkey(2), (8,))
+    got = model.lr_dir_twoloop(s, y, jnp.int32(0), g)
+    assert_close(got, g, rtol=1e-6, atol=1e-6)
+
+
+def test_garbage_in_invalid_slots_is_ignored():
+    """Slots ≥ m_count may hold arbitrary data without changing results."""
+    mem, n, mc = 5, 12, 2
+    s, y = _pairs(11, mem, n)
+    s_dirty = s.at[mc:].set(1e6)
+    y_dirty = y.at[mc:].set(-1e6)
+    g = jax.random.normal(rngkey(3), (n,))
+    a = model.lr_dir_twoloop(s, y, jnp.int32(mc), g)
+    b = model.lr_dir_twoloop(s_dirty, y_dirty, jnp.int32(mc), g)
+    assert_close(a, b, rtol=1e-5, atol=1e-6)
+    ha = model.lr_hbuild(s, y, jnp.int32(mc))
+    hb = model.lr_hbuild(s_dirty, y_dirty, jnp.int32(mc))
+    assert_close(ha, hb, rtol=1e-5, atol=1e-6)
+
+
+def test_happly_is_matvec():
+    n = 8
+    h = jax.random.normal(rngkey(4), (n, n))
+    g = jax.random.normal(rngkey(5), (n,))
+    assert_close(model.lr_happly(h, g), h @ g, rtol=0, atol=0)
+
+
+def test_sqn_direction_is_descent():
+    """On a quadratic with positive-curvature pairs, −H g must be a descent
+    direction: gᵀHg > 0."""
+    s, y = _pairs(21, 5, 16)
+    g = jax.random.normal(rngkey(6), (16,))
+    d = model.lr_dir_twoloop(s, y, jnp.int32(5), g)
+    assert float(jnp.dot(g, d)) > 0

@@ -1,0 +1,109 @@
+"""Task 3 kernels vs the oracle (paper §3.3, eqs. (10)-(13))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels import logreg as lrk
+from compile.kernels import ref
+
+from .conftest import assert_close, rngkey
+
+
+def _dataset(seed, b, n):
+    x = (jax.random.uniform(rngkey(seed), (b, n)) > 0.5).astype(jnp.float32)
+    w_true = jax.random.normal(rngkey(seed + 1), (n,))
+    z = (x @ w_true > 0).astype(jnp.float32)
+    w = jax.random.normal(rngkey(seed + 2), (n,)) * 0.1
+    return x, z, w
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([8, 16, 64]),
+       st.sampled_from([16, 48, 128]))
+def test_lr_grad_matches_ref(seed, b, n):
+    x, z, w = _dataset(seed, b, n)
+    g, loss = lrk.lr_grad(w, x, z)
+    g_r, loss_r = ref.lr_grad_ref(w, x, z)
+    assert_close(g, g_r, rtol=1e-4, atol=1e-6)
+    assert_close(loss, loss_r, rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 8]))
+def test_lr_grad_tile_invariance(seed, tile):
+    x, z, w = _dataset(seed, 16, 32)
+    g, loss = lrk.lr_grad(w, x, z, tile_b=tile)
+    g_r, loss_r = ref.lr_grad_ref(w, x, z)
+    assert_close(g, g_r, rtol=1e-4, atol=1e-6)
+    assert_close(loss, loss_r, rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+def test_lr_grad_matches_autodiff(seed):
+    """The fused kernel must agree with jax.grad of the loss itself."""
+    x, z, w = _dataset(seed, 16, 24)
+
+    def loss_fn(w):
+        u = x @ w
+        return jnp.mean(jnp.maximum(u, 0) - u * z
+                        + jnp.log1p(jnp.exp(-jnp.abs(u))))
+
+    g_auto = jax.grad(loss_fn)(w)
+    g, _ = lrk.lr_grad(w, x, z)
+    assert_close(g, g_auto, rtol=1e-4, atol=1e-5)
+
+
+def test_lr_grad_extreme_logits_stable():
+    """Loss must stay finite for |u| large (the stable-BCE form)."""
+    n = 8
+    x = jnp.ones((4, n), jnp.float32)
+    z = jnp.array([0.0, 1.0, 0.0, 1.0])
+    w = jnp.full((n,), 50.0)  # u = 400
+    g, loss = lrk.lr_grad(w, x, z)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@given(st.integers(0, 10_000))
+def test_lr_hvp_matches_ref(seed):
+    x, _, w = _dataset(seed, 32, 24)
+    s = jax.random.normal(rngkey(seed + 3), (24,))
+    assert_close(lrk.lr_hvp(w, s, x), ref.lr_hvp_ref(w, s, x),
+                 rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(0, 10_000))
+def test_lr_hvp_matches_autodiff_hessian(seed):
+    """∇²F s from the kernel == full autodiff Hessian times s (logistic loss
+    has exactly the Gauss-Newton Hessian — no residual term)."""
+    b, n = 16, 12
+    x, z, w = _dataset(seed, b, n)
+    s = jax.random.normal(rngkey(seed + 4), (n,))
+
+    def loss_fn(w):
+        u = x @ w
+        return jnp.mean(jnp.maximum(u, 0) - u * z
+                        + jnp.log1p(jnp.exp(-jnp.abs(u))))
+
+    hess = jax.hessian(loss_fn)(w)
+    assert_close(lrk.lr_hvp(w, s, x), hess @ s, rtol=1e-3, atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+def test_lr_hvp_psd(seed):
+    """The logistic Hessian is PSD: sᵀ(∇²F)s ≥ 0 for any direction."""
+    x, _, w = _dataset(seed, 32, 16)
+    s = jax.random.normal(rngkey(seed + 5), (16,))
+    y = lrk.lr_hvp(w, s, x)
+    assert float(jnp.dot(s, y)) >= -1e-6
+
+
+def test_lr_model_entries_delegate():
+    x, z, w = _dataset(0, 16, 24)
+    s = jax.random.normal(rngkey(6), (24,))
+    g1, l1 = model.lr_grad(w, x, z)
+    g2, l2 = lrk.lr_grad(w, x, z)
+    assert_close(g1, g2, rtol=0, atol=0)
+    assert_close(model.lr_hvp(w, s, x), lrk.lr_hvp(w, s, x), rtol=0, atol=0)

@@ -1,0 +1,159 @@
+"""Task 1 kernels/model vs the pure-jnp oracle (paper §3.1, Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels import mv_grad as mvk
+from compile.kernels import ref
+
+from .conftest import assert_close, rngkey
+
+
+def _panel(seed, n, d, scale=1.0):
+    r = jax.random.normal(rngkey(seed), (n, d)) * scale
+    rbar = r.mean(axis=0)
+    return r - rbar[None, :], rbar
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([8, 16, 64]),
+       st.sampled_from([4, 32, 96, 128]))
+def test_cov_matvec_matches_ref(seed, n, d):
+    c, _ = _panel(seed, n, d)
+    w = jax.random.normal(rngkey(seed + 1), (d,))
+    assert_close(mvk.cov_matvec(c, w), ref.cov_matvec_ref(c, w),
+                 rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4, 8]))
+def test_cov_matvec_tile_invariance(seed, tile):
+    """The grid decomposition must not change the result."""
+    c, _ = _panel(seed, 16, 32)
+    w = jax.random.normal(rngkey(seed + 1), (32,))
+    assert_close(mvk.cov_matvec(c, w, tile_n=tile),
+                 ref.cov_matvec_ref(c, w), rtol=1e-4, atol=1e-4)
+
+
+def test_cov_matvec_rejects_non_dividing_tile():
+    c, _ = _panel(0, 10, 8)
+    with pytest.raises(ValueError):
+        mvk.cov_matvec(c, jnp.ones(8), tile_n=4)
+
+
+@given(st.integers(0, 10_000))
+def test_mv_grad_and_obj_match_ref(seed):
+    c, rbar = _panel(seed, 16, 48)
+    w = jax.nn.softmax(jax.random.normal(rngkey(seed + 1), (48,)))
+    assert_close(mvk.mv_grad(c, rbar, w), ref.mv_grad_ref(c, rbar, w),
+                 rtol=1e-4, atol=1e-5)
+    assert_close(mvk.mv_obj(c, rbar, w), ref.mv_obj_ref(c, rbar, w),
+                 rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([4, 16, 64]))
+def test_simplex_lmo_is_optimal_vertex(seed, d):
+    """LMO output must be feasible and attain min_{s∈W} sᵀg, which over the
+    capped simplex is min(0, min_j g_j)."""
+    g = jax.random.normal(rngkey(seed), (d,))
+    s = model.simplex_lmo(g)
+    s_np = np.asarray(s)
+    assert (s_np >= 0).all() and s_np.sum() <= 1 + 1e-6
+    value = float(jnp.dot(s, g))
+    expected = min(0.0, float(g.min()))
+    assert abs(value - expected) < 1e-6
+
+
+def test_simplex_lmo_all_positive_gradient_returns_origin():
+    g = jnp.array([0.5, 1.0, 2.0])
+    assert_close(model.simplex_lmo(g), jnp.zeros(3))
+
+
+@given(st.integers(0, 5_000), st.integers(0, 30))
+def test_mv_epoch_matches_ref(seed, k_epoch):
+    d, n, m = 32, 16, 5
+    w = jnp.ones(d) / d
+    mu = jax.random.uniform(rngkey(seed), (d,), minval=-1, maxval=1)
+    sigma = jax.random.uniform(rngkey(seed + 1), (d,), minval=0.001,
+                               maxval=0.025)
+    key = jnp.array([0, seed], dtype=jnp.uint32)
+    w1, o1 = model.mv_epoch(w, mu, sigma, key, jnp.int32(k_epoch),
+                            n_samples=n, m_inner=m)
+    w2, o2 = ref.mv_epoch_ref(w, mu, sigma, key, k_epoch, n, m)
+    assert_close(w1, w2, rtol=1e-4, atol=1e-6)
+    assert_close(o1, o2, rtol=1e-3, atol=1e-5)
+
+
+@given(st.integers(0, 5_000))
+def test_mv_epoch_keeps_iterate_in_simplex(seed):
+    d = 24
+    w = jnp.ones(d) / d
+    mu = jax.random.uniform(rngkey(seed), (d,), minval=-1, maxval=1)
+    sigma = jnp.full((d,), 0.01)
+    key = jnp.array([1, seed], dtype=jnp.uint32)
+    w1, _ = model.mv_epoch(w, mu, sigma, key, jnp.int32(0),
+                           n_samples=8, m_inner=10)
+    w1 = np.asarray(w1)
+    assert (w1 >= -1e-6).all()
+    assert w1.sum() <= 1 + 1e-5
+
+
+def test_mv_epoch_is_deterministic_in_key():
+    d = 16
+    w = jnp.ones(d) / d
+    mu = jnp.zeros(d)
+    sigma = jnp.full((d,), 0.02)
+    key = jnp.array([3, 4], dtype=jnp.uint32)
+    a = model.mv_epoch(w, mu, sigma, key, jnp.int32(1), n_samples=8,
+                       m_inner=3)
+    b = model.mv_epoch(w, mu, sigma, key, jnp.int32(1), n_samples=8,
+                       m_inner=3)
+    assert_close(a[0], b[0], rtol=0, atol=0)
+
+
+def test_mv_grad_step_composes_to_epoch():
+    """m_inner per-iteration dispatches on a fixed panel == the in-graph loop
+    (the A1 ablation's correctness precondition)."""
+    d, n, m = 32, 16, 5
+    w = jnp.ones(d) / d
+    mu = jax.random.uniform(rngkey(9), (d,), minval=-1, maxval=1)
+    sigma = jnp.full((d,), 0.01)
+    key = jnp.array([0, 77], dtype=jnp.uint32)
+    r = mu[None, :] + sigma[None, :] * jax.random.normal(key, (n, d))
+    rbar = r.mean(axis=0)
+    c = r - rbar[None, :]
+    w_steps = w
+    for mm in range(m):
+        w_steps, obj = model.mv_grad_step(c, rbar, w_steps, jnp.int32(2),
+                                          jnp.int32(mm), m_inner=m)
+    w_epoch, obj_epoch = model.mv_epoch(w, mu, sigma, key, jnp.int32(2),
+                                        n_samples=n, m_inner=m)
+    assert_close(w_steps, w_epoch, rtol=1e-5, atol=1e-6)
+    assert_close(obj, obj_epoch, rtol=1e-4, atol=1e-6)
+
+
+def test_fw_converges_on_fixed_panel():
+    """On a frozen sample panel the FW objective must decrease towards the
+    sample optimum (sanity for the step-size schedule)."""
+    d, n = 16, 512
+    mu = jax.random.uniform(rngkey(5), (d,), minval=-0.5, maxval=1.0)
+    sigma = jnp.full((d,), 0.02)
+    key = jnp.array([0, 123], dtype=jnp.uint32)
+    w = jnp.ones(d) / d
+    # objective at the starting point, on the same frozen panel
+    r = mu[None, :] + sigma[None, :] * jax.random.normal(key, (n, d))
+    rbar = r.mean(axis=0)
+    c = r - rbar[None, :]
+    obj0 = float(ref.mv_obj_ref(c, rbar, w))
+    objs = []
+    for k in range(8):
+        w, obj = model.mv_epoch(w, mu, sigma, key, jnp.int32(k),
+                                n_samples=n, m_inner=10)
+        objs.append(float(obj))
+    assert objs[-1] < obj0
+    # and the trace is non-increasing up to MC-free tolerance (same panel)
+    for a, b in zip(objs, objs[1:]):
+        assert b <= a + 1e-6

@@ -1,0 +1,114 @@
+"""Task 2 kernels/model vs the oracle (paper §3.2, Algorithm 2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels import nv_grad as nvk
+from compile.kernels import ref
+
+from .conftest import assert_close, rngkey
+
+
+def _instance(seed, s, d):
+    k1, k2, k3 = (rngkey(seed + i) for i in range(3))
+    demand = 20 + 30 * jax.random.uniform(k1, (s, d))
+    x = 20 + 30 * jax.random.uniform(k2, (d,))
+    kc = 1 + jax.random.uniform(k3, (d,))
+    h = 0.2 + 0.3 * jax.random.uniform(k1, (d,))
+    v = 3 + 2 * jax.random.uniform(k2, (d,))
+    return demand, x, kc, h, v
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([4, 8, 32]),
+       st.sampled_from([16, 64, 96, 256]))
+def test_nv_stats_matches_ref(seed, s, d):
+    demand, x, *_ = _instance(seed, s, d)
+    ind, over, under = nvk.nv_stats(demand, x)
+    ind_r, over_r, under_r = ref.nv_stats_ref(demand, x)
+    assert_close(ind, ind_r)
+    assert_close(over, over_r, rtol=1e-5, atol=1e-5)
+    assert_close(under, under_r, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 4, 16]))
+def test_nv_stats_tile_invariance(seed, tile):
+    demand, x, *_ = _instance(seed, 8, 32)
+    a = nvk.nv_stats(demand, x, tile_d=tile)
+    b = ref.nv_stats_ref(demand, x)
+    for got, want in zip(a, b):
+        assert_close(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(0, 10_000))
+def test_nv_grad_obj_matches_ref(seed):
+    demand, x, kc, h, v = _instance(seed, 8, 64)
+    g, o = nvk.nv_grad_obj(x, demand, kc, h, v)
+    assert_close(g, ref.nv_grad_ref(x, demand, kc, h, v), rtol=1e-5,
+                 atol=1e-5)
+    assert_close(o, ref.nv_obj_ref(x, demand, kc, h, v), rtol=1e-5,
+                 atol=1e-4)
+
+
+def test_nv_indicator_bounds():
+    """The CDF estimate lives in [0,1], so the gradient is bracketed by
+    k−v (all demand above x) and k+h (all demand below x)."""
+    demand, x, kc, h, v = _instance(3, 16, 32)
+    g, _ = nvk.nv_grad_obj(x, demand, kc, h, v)
+    g = np.asarray(g)
+    lo, hi = np.asarray(kc - v), np.asarray(kc + h)
+    assert (g >= lo - 1e-5).all() and (g <= hi + 1e-5).all()
+
+
+def test_nv_grad_extreme_stock_levels():
+    """x below every sample ⇒ indicator 0 ⇒ grad = k−v; x above every
+    sample ⇒ indicator 1 ⇒ grad = k+h."""
+    demand, _, kc, h, v = _instance(4, 8, 16)
+    x_lo = jnp.full((16,), -1e6)
+    x_hi = jnp.full((16,), 1e6)
+    g_lo, _ = nvk.nv_grad_obj(x_lo, demand, kc, h, v)
+    g_hi, _ = nvk.nv_grad_obj(x_hi, demand, kc, h, v)
+    assert_close(g_lo, kc - v, rtol=1e-6, atol=1e-6)
+    assert_close(g_hi, kc + h, rtol=1e-6, atol=1e-6)
+
+
+@given(st.integers(0, 5_000))
+def test_nv_model_entry_matches_manual_sampling(seed):
+    """model.nv_grad's in-graph sampling must equal manually sampling with
+    the same key and calling the kernel."""
+    d, s = 32, 8
+    mu = 20 + 30 * jax.random.uniform(rngkey(seed), (d,))
+    sigma = 10 + 10 * jax.random.uniform(rngkey(seed + 1), (d,))
+    x = mu * 1.1
+    kc = jnp.ones(d) * 2
+    h = jnp.ones(d) * 0.5
+    v = jnp.ones(d) * 5
+    key = jnp.array([2, seed], dtype=jnp.uint32)
+    g1, o1 = model.nv_grad(x, mu, sigma, kc, h, v, key, n_samples=s)
+    demand = mu[None, :] + sigma[None, :] * jax.random.normal(key, (s, d))
+    g2 = ref.nv_grad_ref(x, demand, kc, h, v)
+    o2 = ref.nv_obj_ref(x, demand, kc, h, v)
+    assert_close(g1, g2, rtol=1e-5, atol=1e-5)
+    assert_close(o1, o2, rtol=1e-5, atol=1e-4)
+
+
+def test_nv_fractile_stationarity():
+    """With no resource constraints the optimum is the critical fractile
+    x* = Φ⁻¹((v−k)/(v+h)); the MC gradient must vanish there as S grows."""
+    d = 8
+    mu = jnp.full((d,), 40.0)
+    sigma = jnp.full((d,), 5.0)
+    kc = jnp.full((d,), 2.0)
+    h = jnp.full((d,), 1.0)
+    v = jnp.full((d,), 6.0)
+    # fractile (v-k)/(v+h) = 4/7
+    from scipy.stats import norm
+    q = float(norm.ppf(4.0 / 7.0))
+    x_star = mu + q * sigma
+    key = jnp.array([0, 9], dtype=jnp.uint32)
+    demand = mu[None, :] + sigma[None, :] * jax.random.normal(key, (4096, d))
+    g = ref.nv_grad_ref(x_star, demand, kc, h, v)
+    assert float(jnp.abs(g).max()) < 0.5  # (h+v)=7 scale, MC noise ~7/√4096

@@ -1,0 +1,102 @@
+"""Device-resident entry points (§Perf P1): nv_panel / nv_grad_panel and
+lr_grad_ds / lr_hvp_ds must compute exactly what the monolithic entries and
+the oracle compute."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+from .conftest import assert_close, rngkey
+
+
+@given(st.integers(0, 5_000))
+def test_nv_panel_plus_grad_equals_monolithic(seed):
+    """nv_grad(x, μ, σ, ..., key) == nv_grad_panel(x, nv_panel(μ, σ, key))."""
+    d, s = 32, 8
+    mu = 20 + 30 * jax.random.uniform(rngkey(seed), (d,))
+    sigma = 10 + 10 * jax.random.uniform(rngkey(seed + 1), (d,))
+    x = mu * 0.9
+    kc = jnp.full((d,), 2.0)
+    h = jnp.full((d,), 0.4)
+    v = jnp.full((d,), 5.0)
+    key = jnp.array([3, seed], dtype=jnp.uint32)
+    g1, o1 = model.nv_grad(x, mu, sigma, kc, h, v, key, n_samples=s)
+    panel = model.nv_panel(mu, sigma, key, n_samples=s)
+    g2, o2 = model.nv_grad_panel(x, panel, kc, h, v)
+    assert_close(g1, g2, rtol=0, atol=0)
+    assert_close(o1, o2, rtol=0, atol=0)
+
+
+def test_nv_panel_statistics():
+    d, s = 16, 4096
+    mu = jnp.full((d,), 35.0)
+    sigma = jnp.full((d,), 12.0)
+    key = jnp.array([0, 11], dtype=jnp.uint32)
+    panel = model.nv_panel(mu, sigma, key, n_samples=s)
+    assert panel.shape == (s, d)
+    col_means = np.asarray(panel.mean(axis=0))
+    assert np.abs(col_means - 35.0).max() < 1.0
+    col_stds = np.asarray(panel.std(axis=0))
+    assert np.abs(col_stds - 12.0).max() < 1.0
+
+
+@given(st.integers(0, 5_000))
+def test_lr_grad_ds_equals_gathered(seed):
+    """In-graph index gather == host-side row gather (the CRN contract
+    between the native and xla arms)."""
+    n, rows, b = 24, 96, 16
+    x_full = (jax.random.uniform(rngkey(seed), (rows, n)) > 0.5).astype(jnp.float32)
+    z_full = (jax.random.uniform(rngkey(seed + 1), (rows,)) > 0.5).astype(jnp.float32)
+    w = jax.random.normal(rngkey(seed + 2), (n,)) * 0.1
+    idx = jax.random.randint(rngkey(seed + 3), (b,), 0, rows)
+    g1, l1 = model.lr_grad_ds(w, x_full, z_full, idx)
+    xb = x_full[idx]
+    zb = z_full[idx]
+    g2, l2 = ref.lr_grad_ref(w, xb, zb)
+    assert_close(g1, g2, rtol=1e-4, atol=1e-6)
+    assert_close(l1, l2, rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(0, 5_000))
+def test_lr_hvp_ds_equals_gathered(seed):
+    n, rows, bh = 16, 64, 32
+    x_full = (jax.random.uniform(rngkey(seed), (rows, n)) > 0.5).astype(jnp.float32)
+    wbar = jax.random.normal(rngkey(seed + 1), (n,)) * 0.1
+    s = jax.random.normal(rngkey(seed + 2), (n,))
+    idx = jax.random.randint(rngkey(seed + 3), (bh,), 0, rows)
+    y1 = model.lr_hvp_ds(wbar, s, x_full, idx)
+    y2 = ref.lr_hvp_ref(wbar, s, x_full[idx])
+    assert_close(y1, y2, rtol=1e-4, atol=1e-6)
+
+
+@given(st.integers(0, 5_000), st.integers(1, 5))
+def test_hbuild_jnp_and_pallas_paths_agree(seed, m_count):
+    """§Perf P2 swapped the AOT'd lr_hbuild to the fused jnp form; both
+    lowerings must compute the same H (the Pallas path remains the L1
+    reference for TPU lowering)."""
+    mem, n = 5, 16
+    s_mem = jax.random.normal(rngkey(seed), (mem, n)) * 0.1
+    a = jax.random.normal(rngkey(seed + 1), (n, n)) * 0.1
+    spd = a @ a.T + jnp.eye(n)
+    y_mem = s_mem @ spd.T
+    h_jnp = model.lr_hbuild(s_mem, y_mem, jnp.int32(m_count))
+    h_pal = model.lr_hbuild(s_mem, y_mem, jnp.int32(m_count), use_pallas=True)
+    assert_close(h_jnp, h_pal, rtol=1e-4, atol=1e-5)
+    assert_close(h_jnp, ref.lr_hbuild_ref(s_mem, y_mem, m_count),
+                 rtol=1e-3, atol=1e-4)
+
+
+def test_resident_specs_in_default_manifest():
+    from compile import aot
+    specs = aot.build_specs([32], [64], [16], mv_samples=8, mv_inner=3,
+                            nv_samples=8, lr_batch=8, lr_hbatch=16, lr_mem=4)
+    entries = {s.entry for s in specs}
+    for required in ["nv_panel", "nv_grad_panel", "lr_grad_ds", "lr_hvp_ds"]:
+        assert required in entries, f"{required} missing from spec table"
+    # rows convention: N = 30n
+    ds = next(s for s in specs if s.entry == "lr_grad_ds")
+    assert ds.params["rows"] == 30 * ds.params["n"]

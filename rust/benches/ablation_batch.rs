@@ -1,0 +1,61 @@
+//! Ablation A4: sample-batch scaling — how the per-epoch cost of each arm
+//! scales with the Monte-Carlo panel size N (the paper resamples N draws per
+//! gradient estimate; §4.1 uses 25-50).
+//!
+//! The vectorized arm amortizes panel growth (one fused dispatch), while the
+//! sequential arm's cost grows linearly from the start — the per-sample loop
+//! the paper's §2.2 describes.  Native-only axis here; the XLA artifact's N
+//! is baked at AOT time (N=64 default), so its single point is included when
+//! available.
+
+mod common;
+
+use simopt::backend::native::{NativeMode, NativeMv};
+use simopt::bench::Bench;
+use simopt::opt::run_mv;
+use simopt::rng::StreamTree;
+use simopt::sim::AssetUniverse;
+
+fn main() {
+    let epochs = common::env_usize("SIMOPT_BENCH_EPOCHS", 8);
+    let reps = common::env_usize("SIMOPT_BENCH_REPS", 3);
+    let d = common::env_usize("SIMOPT_BENCH_D", 2048);
+    let batches = [16usize, 32, 64, 128, 256];
+
+    let tree = StreamTree::new(42);
+    let universe = AssetUniverse::generate(&tree, d);
+    let w0 = vec![1.0f32 / d as f32; d];
+    let mut bench = Bench::new("ablation_batch").warmup(1).reps(reps);
+
+    for &n in &batches {
+        let mut backend =
+            NativeMv::new(universe.clone(), n, 25, NativeMode::Sequential);
+        bench.case(&format!("native_d{}_N{}", d, n), || {
+            run_mv(&mut backend, w0.clone(), epochs, &tree.subtree(&[7]))
+                .unwrap();
+        });
+    }
+
+    if common::artifacts_built() {
+        if let Ok(engine) = simopt::runtime::Engine::new("artifacts") {
+            for n in engine.manifest.available_params("mv_epoch", "n") {
+                if let Ok(mut xla) = simopt::backend::xla::XlaMv::new(
+                    &engine, &universe, n as usize, 25) {
+                    bench.case(&format!("xla_d{}_N{}", d, n), || {
+                        run_mv(&mut xla, w0.clone(), epochs,
+                               &tree.subtree(&[7])).unwrap();
+                    });
+                }
+            }
+        }
+    }
+    bench.finish();
+
+    // linear-scaling check on the native arm
+    let t16 = bench.find(&format!("native_d{}_N16", d)).map(|m| m.mean_s);
+    let t256 = bench.find(&format!("native_d{}_N256", d)).map(|m| m.mean_s);
+    if let (Some(a), Some(b)) = (t16, t256) {
+        println!("native cost ratio N=256/N=16: {:.1}× (linear would be 16×)",
+                 b / a.max(1e-12));
+    }
+}

@@ -1,0 +1,65 @@
+//! Ablation A1: fused-epoch dispatch vs per-iteration dispatch.
+//!
+//! The paper attributes part of the GPU win to executing the whole
+//! sampling+iteration loop on-device.  This bench quantifies the host↔device
+//! boundary: `mv_epoch` (one dispatch per epoch, sampling in-graph) against
+//! `mv_grad_step` (M dispatches per epoch, panel shipped on every call).
+
+mod common;
+
+use simopt::backend::xla::{XlaMv, XlaMvStepwise};
+use simopt::bench::{speedup, Bench};
+use simopt::opt::run_mv;
+use simopt::rng::StreamTree;
+use simopt::runtime::Engine;
+use simopt::sim::AssetUniverse;
+
+fn main() {
+    if !common::artifacts_built() {
+        eprintln!("[bench] artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::new("artifacts").expect("engine");
+    // the step artifact is AOT'd at one (mid-size) configuration
+    let meta = engine
+        .manifest
+        .artifacts
+        .iter()
+        .find(|a| a.entry == "mv_grad_step")
+        .expect("mv_grad_step artifact");
+    let d = meta.params["d"] as usize;
+    let n = meta.params["n"] as usize;
+    let m = meta.params["m"] as usize;
+    let epochs = common::env_usize("SIMOPT_BENCH_EPOCHS", 10);
+    let reps = common::env_usize("SIMOPT_BENCH_REPS", 5);
+
+    let tree = StreamTree::new(42);
+    let universe = AssetUniverse::generate(&tree, d);
+    let w0 = vec![1.0f32 / d as f32; d];
+
+    let mut bench = Bench::new("ablation_dispatch").warmup(1).reps(reps);
+
+    let mut fused = XlaMv::new(&engine, &universe, n, m).expect("fused");
+    let fused_m = bench
+        .case(&format!("fused_epoch_d{}", d), || {
+            run_mv(&mut fused, w0.clone(), epochs, &tree.subtree(&[1])).unwrap();
+        })
+        .clone();
+
+    let mut step = XlaMvStepwise::new(&engine, &universe, n, m).expect("step");
+    let step_m = bench
+        .case(&format!("per_iteration_d{}", d), || {
+            run_mv(&mut step, w0.clone(), epochs, &tree.subtree(&[1])).unwrap();
+        })
+        .clone();
+
+    bench.finish();
+    println!(
+        "fused-epoch speedup over per-iteration dispatch: {:.2}×\n\
+         (M = {} dispatches + {}×{} panel transfers per epoch avoided)",
+        speedup(&step_m, &fused_m),
+        m,
+        n,
+        d
+    );
+}

@@ -1,0 +1,59 @@
+//! Ablation A2: Algorithm 4's explicit O(Mn²) inverse-Hessian build vs the
+//! O(Mn) two-loop recursion, on both backends.
+//!
+//! The paper showcases the explicit form as GPU-friendly matrix work; the
+//! two-loop form is what a CPU implementation would normally choose.  This
+//! bench shows the crossover.
+
+mod common;
+
+use simopt::backend::HessianMode;
+use simopt::config::{BackendKind, TaskKind};
+use simopt::coordinator::{Coordinator, ExperimentSpec};
+use simopt::bench::Bench;
+
+fn main() {
+    if !common::artifacts_built() {
+        eprintln!("[bench] artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let iters = common::env_usize("SIMOPT_BENCH_EPOCHS", 150);
+    let reps = common::env_usize("SIMOPT_BENCH_REPS", 3);
+    let sizes = common::env_sizes(vec![64, 256, 1024]);
+    let mut coord = Coordinator::new("artifacts", "results").unwrap();
+    let mut bench = Bench::new("ablation_hessian");
+
+    for &n in &sizes {
+        for backend in [BackendKind::Native, BackendKind::Xla] {
+            for (mode, tag) in [(HessianMode::Explicit, "explicitH"),
+                                (HessianMode::TwoLoop, "twoloop")] {
+                let spec = ExperimentSpec::new(TaskKind::Classification, backend)
+                    .size(n)
+                    .epochs(iters)
+                    .replications(reps)
+                    .seed(42)
+                    .hessian(mode);
+                eprintln!("[ablation_hessian] {} {} n={}", backend, tag, n);
+                let res = coord.run(&spec).expect("run");
+                let samples: Vec<f64> =
+                    res.reps.iter().map(|r| r.total_s).collect();
+                bench.record(&format!("{}_{}_n{}", backend, tag, n), &samples);
+            }
+        }
+    }
+    bench.finish();
+
+    // headline: explicit/twoloop ratio per backend at the largest size
+    let n = sizes.last().unwrap();
+    for backend in ["native", "xla"] {
+        let e = bench.find(&format!("{}_explicitH_n{}", backend, n));
+        let t = bench.find(&format!("{}_twoloop_n{}", backend, n));
+        if let (Some(e), Some(t)) = (e, t) {
+            println!(
+                "{} @ n={}: explicit-H costs {:.2}× the two-loop recursion",
+                backend, n,
+                e.mean_s / t.mean_s.max(1e-12)
+            );
+        }
+    }
+}

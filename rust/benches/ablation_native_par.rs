@@ -1,0 +1,61 @@
+//! Ablation A3: sequential native vs thread-pooled native.
+//!
+//! Separates "more CPU threads" from "vectorized execution" in the speedup
+//! attribution: on the paper's thesis, CPU parallelism alone should not
+//! close the gap to the fused XLA arm (and on a 1-core box it cannot).
+
+mod common;
+
+use simopt::bench::Bench;
+use simopt::config::{BackendKind, TaskKind};
+use simopt::coordinator::{Coordinator, ExperimentSpec};
+
+fn main() {
+    let epochs = common::env_usize("SIMOPT_BENCH_EPOCHS", 8);
+    let reps = common::env_usize("SIMOPT_BENCH_REPS", 3);
+    let sizes = common::env_sizes(vec![512, 2048]);
+    let mut coord = Coordinator::new("artifacts", "results").unwrap();
+    let mut bench = Bench::new("ablation_native_par");
+
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("available parallelism: {} threads", threads);
+
+    for &d in &sizes {
+        for backend in [BackendKind::Native, BackendKind::NativePar] {
+            let spec = ExperimentSpec::new(TaskKind::MeanVariance, backend)
+                .size(d)
+                .epochs(epochs)
+                .replications(reps)
+                .seed(42);
+            let res = coord.run(&spec).expect("run");
+            let samples: Vec<f64> = res.reps.iter().map(|r| r.total_s).collect();
+            bench.record(&format!("{}_d{}", backend, d), &samples);
+        }
+        if common::artifacts_built()
+            && !sizes.iter().any(|_| false)
+        {
+            // include the xla arm as the reference point when available
+            let spec = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Xla)
+                .size(d)
+                .epochs(epochs)
+                .replications(reps)
+                .seed(42);
+            if let Ok(res) = coord.run(&spec) {
+                let samples: Vec<f64> =
+                    res.reps.iter().map(|r| r.total_s).collect();
+                bench.record(&format!("xla_d{}", d), &samples);
+            }
+        }
+    }
+    bench.finish();
+    for &d in &sizes {
+        let seq = bench.find(&format!("native_d{}", d));
+        let par = bench.find(&format!("native_par_d{}", d));
+        if let (Some(s), Some(p)) = (seq, par) {
+            println!("d={}: thread-pool speedup {:.2}× over sequential",
+                     d, s.mean_s / p.mean_s.max(1e-12));
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Shared bench scaffolding: environment knobs + the standard Figure-2
+//! sweep runner used by the per-task bench binaries.
+//!
+//! Knobs (environment variables, so `cargo bench` stays argument-free):
+//!   SIMOPT_BENCH_REPS    replications per cell           (default 5)
+//!   SIMOPT_BENCH_EPOCHS  FW epochs / SQN iters per rep   (task default)
+//!   SIMOPT_BENCH_SIZES   comma list overriding the size axis
+//!   SIMOPT_BENCH_FULL    =1 → include the largest AOT'd sizes
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use simopt::bench::Bench;
+use simopt::config::{BackendKind, TaskKind};
+use simopt::coordinator::{report, Coordinator, RunResult, SweepSpec};
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn env_sizes(default: Vec<usize>) -> Vec<usize> {
+    match std::env::var("SIMOPT_BENCH_SIZES") {
+        Ok(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+        Err(_) => default,
+    }
+}
+
+pub fn artifacts_built() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Run the Figure-2 protocol for one task and print/persist the table.
+pub fn run_figure2(task: TaskKind, default_epochs: usize) {
+    if !artifacts_built() {
+        eprintln!("[bench] artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let mut sweep = SweepSpec::figure2(task);
+    sweep.sizes = env_sizes(sweep.sizes);
+    sweep.reps = env_usize("SIMOPT_BENCH_REPS", 5);
+    sweep.epochs = env_usize("SIMOPT_BENCH_EPOCHS", default_epochs);
+    sweep.backends = vec![BackendKind::Native, BackendKind::Xla];
+
+    let mut coord = Coordinator::new("artifacts", "results").unwrap();
+    let results = coord.sweep(&sweep).expect("sweep");
+    emit(task, &format!("fig2_{}", task), &results);
+}
+
+/// Print per-cell rows through the bench harness + the paper-shaped table.
+pub fn emit(task: TaskKind, name: &str, results: &[RunResult]) {
+    let mut bench = Bench::new(name);
+    for r in results {
+        let samples: Vec<f64> = r.reps.iter().map(|rep| rep.total_s).collect();
+        bench.record(
+            &format!("{}_{}_d{}", task, r.spec.backend, r.spec.size),
+            &samples,
+        );
+    }
+    bench.finish();
+    println!("{}", report::figure2_markdown(results));
+    report::write_report("results", name, results, &[0.1, 0.25, 0.5, 1.0])
+        .expect("write report");
+    println!("[bench] full report under results/{}_*", name);
+}

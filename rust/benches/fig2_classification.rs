@@ -1,0 +1,9 @@
+//! Figure 2 (bottom panel): Task 3 SQN computation time vs feature count.
+//! Paper protocol: K=2000 iterations, n in {50,500,1000,5000}, b=50,
+//! b_H=300.  Scaled defaults; see DESIGN.md §2.
+
+mod common;
+
+fn main() {
+    common::run_figure2(simopt::config::TaskKind::Classification, 200);
+}

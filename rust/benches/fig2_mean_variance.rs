@@ -1,0 +1,12 @@
+//! Figure 2 (top-left panel): Task 1 mean-variance computation time vs
+//! problem size, native (sequential CPU) vs xla (vectorized), mean ± 2σ.
+//!
+//! Paper protocol: K=1500 epochs, sizes 5e2..1e5, 7 reps.  Defaults here are
+//! scaled for the 1-core box (see DESIGN.md §2); raise with
+//! SIMOPT_BENCH_EPOCHS / SIMOPT_BENCH_SIZES / SIMOPT_BENCH_REPS.
+
+mod common;
+
+fn main() {
+    common::run_figure2(simopt::config::TaskKind::MeanVariance, 10);
+}

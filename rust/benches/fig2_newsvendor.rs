@@ -1,0 +1,9 @@
+//! Figure 2 (top-right panel): Task 2 newsvendor computation time vs size.
+//! The LP LMO runs on the host in both arms; the Monte-Carlo gradient is the
+//! backend-differentiated piece.
+
+mod common;
+
+fn main() {
+    common::run_figure2(simopt::config::TaskKind::Newsvendor, 8);
+}

@@ -1,0 +1,93 @@
+//! Microbenchmarks over the substrates: the profile that drives the L3 perf
+//! pass (EXPERIMENTS.md §Perf).  Covers the native hot-path kernels, the LP
+//! LMO, RNG throughput, and the raw PJRT dispatch floor.
+
+mod common;
+
+use simopt::bench::Bench;
+use simopt::linalg::{blocked, Mat};
+use simopt::lp::{self, LpProblem};
+use simopt::rng::{NormalSampler, Philox, StreamTree};
+use simopt::sim::NewsvendorInstance;
+use simopt::tasks::newsvendor::NvLmo;
+
+fn main() {
+    let reps = common::env_usize("SIMOPT_BENCH_REPS", 20);
+    let mut bench = Bench::new("micro_substrates").warmup(2).reps(reps);
+
+    // RNG throughput: 1M uniforms / 1M normals
+    let mut rng = Philox::new(1);
+    bench.case("philox_1M_u32", || {
+        let mut acc = 0u32;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(rng.next_u32());
+        }
+        std::hint::black_box(acc);
+    });
+    let mut norm = NormalSampler::from_seed(2);
+    bench.case("boxmuller_1M_normals", || {
+        let mut acc = 0.0f32;
+        for _ in 0..1_000_000 {
+            acc += norm.next();
+        }
+        std::hint::black_box(acc);
+    });
+
+    // matvec kernels at the Fig-2 panel shape (N=64, d=2048)
+    let mut p = Philox::new(3);
+    let c = Mat::from_vec(64, 2048,
+                          (0..64 * 2048).map(|_| p.uniform_f32(-1.0, 1.0)).collect());
+    let w: Vec<f32> = (0..2048).map(|_| p.uniform_f32(0.0, 1.0)).collect();
+    let mut u = vec![0.0f32; 64];
+    let mut g = vec![0.0f32; 2048];
+    bench.case("matvec_seq_64x2048", || {
+        c.matvec(&w, &mut u);
+        c.matvec_t(&u, &mut g);
+        std::hint::black_box(&g);
+    });
+    bench.case("matvec_blocked_64x2048", || {
+        blocked::matvec_blocked(&c, &w, &mut u);
+        blocked::matvec_t_blocked(&c, &u, &mut g);
+        std::hint::black_box(&g);
+    });
+
+    // LP LMO at the newsvendor bench shape (d=2048, m=8)
+    let inst = NewsvendorInstance::generate(&StreamTree::new(4), 2048, 8, 0.6);
+    let mut lmo = NvLmo::new(&inst);
+    let grad: Vec<f32> = (0..2048).map(|j| if j % 3 == 0 { -1.0 } else { 0.5 }).collect();
+    bench.case("lp_lmo_d2048_m8", || {
+        std::hint::black_box(lmo.solve(&grad).unwrap());
+    });
+
+    // generic dense LP (50 vars × 20 constraints)
+    let mut p2 = Philox::new(5);
+    let lp_prob = LpProblem::new(
+        (0..50).map(|_| p2.uniform_f32(-2.0, 2.0) as f64).collect(),
+        (0..20 * 50).map(|_| p2.uniform_f32(0.1, 1.0) as f64).collect(),
+        (0..20).map(|_| p2.uniform_f32(1.0, 5.0) as f64).collect(),
+    );
+    bench.case("lp_dense_50x20", || {
+        std::hint::black_box(lp::solve(&lp_prob));
+    });
+
+    // PJRT dispatch floor: smallest artifact end-to-end
+    if common::artifacts_built() {
+        if let Ok(engine) = simopt::runtime::Engine::new("artifacts") {
+            if let Ok(exec) = engine.load_by_params("lr_happly", &[("n", 64)]) {
+                let h = vec![0.0f32; 64 * 64];
+                let gv = vec![1.0f32; 64];
+                bench.case("pjrt_dispatch_floor_happly64", || {
+                    std::hint::black_box(
+                        exec.call(&[
+                            simopt::runtime::Arg::F32(&h),
+                            simopt::runtime::Arg::F32(&gv),
+                        ])
+                        .unwrap(),
+                    );
+                });
+            }
+        }
+    }
+
+    bench.finish();
+}

@@ -1,0 +1,70 @@
+//! Execution backends — the paper's CPU-vs-GPU axis as traits.
+//!
+//! Each of the three tasks has a narrow backend interface covering exactly
+//! the work the paper offloads to the accelerator; everything else
+//! (LMO LPs, correction-memory bookkeeping, step sizes, batching) is
+//! backend-independent and lives in the drivers under [`crate::opt`].
+//!
+//! Implementations:
+//! * [`native`] — sequential scalar Rust (the paper's CPU arm); also hosts
+//!   the thread-pooled variant for ablation A3.
+//! * [`xla`] — AOT-compiled XLA artifacts through PJRT (the vectorized
+//!   "GPU-style" arm).
+
+pub mod native;
+pub mod xla;
+
+use anyhow::Result;
+
+use crate::tasks::CorrectionMemory;
+
+/// Task 1: one full Algorithm-1 epoch (resample + `m_inner` FW steps).
+///
+/// `key` addresses the epoch's Monte-Carlo panel; the same key must
+/// reproduce the same panel (counter-based RNG on both arms).
+pub trait MvBackend {
+    fn name(&self) -> &'static str;
+
+    /// Returns the updated iterate and the end-of-epoch empirical objective.
+    fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
+        -> Result<(Vec<f32>, f64)>;
+}
+
+/// Task 2: the Monte-Carlo gradient + objective estimate at `x`
+/// (Algorithm 2 line 7).  The LP LMO stays in the driver.
+pub trait NvBackend {
+    fn name(&self) -> &'static str;
+
+    fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
+        -> Result<(Vec<f32>, f64)>;
+}
+
+/// Task 3: the SQN compute kernels (Algorithm 3).  The driver samples the
+/// minibatch *indices* (shared across arms — CRN); each backend owns its
+/// data path: the native arm gathers rows on the host, the XLA arm keeps
+/// the full design matrix resident on the device and gathers in-graph.
+pub trait LrBackend {
+    fn name(&self) -> &'static str;
+
+    /// Minibatch gradient (12) + mean loss at rows `idx` of `data`.
+    fn grad(&mut self, w: &[f32], data: &crate::sim::ClassifyData,
+            idx: &[usize]) -> Result<(Vec<f32>, f64)>;
+
+    /// Sub-sampled Hessian-vector product (13) at rows `idx`.
+    fn hvp(&mut self, wbar: &[f32], s: &[f32],
+           data: &crate::sim::ClassifyData, idx: &[usize])
+        -> Result<Vec<f32>>;
+
+    /// H_t·g via Algorithm 4 over the correction memory.
+    fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
+        -> Result<Vec<f32>>;
+}
+
+/// Which Hessian application Algorithm 4 uses (ablation A2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HessianMode {
+    /// The paper's explicit (I−ρsyᵀ)H(I−ρysᵀ)+ρssᵀ matrix build, O(Mn²).
+    Explicit,
+    /// Two-loop recursion, O(Mn).
+    TwoLoop,
+}

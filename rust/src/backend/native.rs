@@ -1,0 +1,445 @@
+//! Native CPU backends: sequential scalar execution (the paper's CPU arm)
+//! plus the thread-pooled variant used by ablation A3.
+//!
+//! The sequential arm deliberately mirrors the paper's §2.2 description of
+//! CPU execution — "processing each sample individually" — while remaining
+//! idiomatic Rust (no artificial slowdowns): row-by-row matvecs, per-sample
+//! indicator counting, per-sample sigmoid accumulation.
+
+use anyhow::Result;
+
+use crate::linalg::matrix::Mat;
+use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use crate::tasks::classification as lr;
+use crate::tasks::mean_variance as mv;
+use crate::tasks::newsvendor as nv;
+use crate::tasks::CorrectionMemory;
+use crate::util::pool::parallel_map_chunks;
+
+use super::{HessianMode, LrBackend, MvBackend, NvBackend};
+
+/// Degree of intra-gradient parallelism for the `native_par` ablation.
+#[derive(Debug, Clone, Copy)]
+pub enum NativeMode {
+    /// Pure sequential (the paper's CPU arm).
+    Sequential,
+    /// Panel split across `threads` OS threads + blocked kernels (A3).
+    Parallel { threads: usize },
+}
+
+// ---------------------------------------------------------------------------
+// Task 1
+// ---------------------------------------------------------------------------
+
+/// Sequential/parallel mean-variance epochs over a sampled return panel.
+pub struct NativeMv {
+    universe: AssetUniverse,
+    n_samples: usize,
+    m_inner: usize,
+    mode: NativeMode,
+    // scratch (reused across epochs)
+    panel: Mat,
+    scratch: mv::MvScratch,
+}
+
+impl NativeMv {
+    pub fn new(universe: AssetUniverse, n_samples: usize, m_inner: usize,
+               mode: NativeMode) -> Self {
+        let d = universe.dim();
+        NativeMv {
+            universe,
+            n_samples,
+            m_inner,
+            mode,
+            panel: Mat::zeros(n_samples, d),
+            scratch: mv::MvScratch::new(n_samples, d),
+        }
+    }
+
+    fn resample(&mut self, key: [u32; 2]) -> Vec<f32> {
+        let seed = (key[0] as u64) << 32 | key[1] as u64;
+        let mut sampler = crate::rng::NormalSampler::from_seed(seed);
+        self.universe.sample_panel(&mut sampler, self.n_samples,
+                                   &mut self.panel.data);
+        let rbar = self.panel.col_means();
+        self.panel.center_rows(&rbar);
+        rbar
+    }
+
+    /// Cᵀ(Cw)/(n−1) into `scratch.g` (no R̄ subtraction — the epoch loop
+    /// finishes the gradient).
+    fn grad_dispatch(&mut self, w: &[f32]) {
+        match self.mode {
+            NativeMode::Sequential => {
+                let n = self.n_samples;
+                self.panel.matvec(w, &mut self.scratch.u);
+                self.panel.matvec_t(&self.scratch.u, &mut self.scratch.g);
+                let inv = 1.0 / (n as f32 - 1.0);
+                for v in self.scratch.g.iter_mut() {
+                    *v *= inv;
+                }
+            }
+            NativeMode::Parallel { threads } => {
+                // split the sample axis: u = C w in parallel chunks, then
+                // the reduction g = Cᵀu in parallel column chunks
+                let d = self.universe.dim();
+                let n = self.n_samples;
+                let panel = &self.panel;
+                let u: Vec<f32> = parallel_map_chunks(n, threads, |r| {
+                    let mut part = Vec::with_capacity(r.len());
+                    for i in r {
+                        part.push(crate::linalg::blocked::dot4(panel.row(i), w));
+                    }
+                    part
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+                let g_parts = parallel_map_chunks(d, threads, |cols| {
+                    let mut part = vec![0.0f32; cols.len()];
+                    for i in 0..n {
+                        let ui = u[i];
+                        let row = panel.row(i);
+                        for (o, j) in cols.clone().enumerate() {
+                            part[o] += ui * row[j];
+                        }
+                    }
+                    (cols.start, part)
+                });
+                for (start, part) in g_parts {
+                    self.scratch.g[start..start + part.len()]
+                        .copy_from_slice(&part);
+                }
+                self.scratch.u.copy_from_slice(&u);
+                let inv = 1.0 / (n as f32 - 1.0);
+                for v in self.scratch.g.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+}
+
+impl MvBackend for NativeMv {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            NativeMode::Sequential => "native",
+            NativeMode::Parallel { .. } => "native_par",
+        }
+    }
+
+    fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        let rbar = self.resample(key);
+        let mut w = w.to_vec();
+        let m_inner = self.m_inner;
+        for m in 0..m_inner {
+            self.grad_dispatch(&w);
+            // grad_dispatch leaves Cᵀ(Cw)/(n−1) (sequential path already
+            // subtracted nothing since rbar slice was empty) — finish:
+            for j in 0..w.len() {
+                self.scratch.g[j] -= rbar[j];
+            }
+            let s = mv::simplex_lmo(&self.scratch.g);
+            let gamma = crate::opt::schedule::fw_gamma(k_epoch, m, m_inner);
+            mv::fw_vertex_update(&mut w, s, gamma);
+        }
+        let obj = mv::objective(&self.panel, &rbar, &w, &mut self.scratch);
+        Ok((w, obj))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 2
+// ---------------------------------------------------------------------------
+
+pub struct NativeNv {
+    inst: NewsvendorInstance,
+    s_samples: usize,
+    mode: NativeMode,
+    panel: Vec<f32>,
+    panel_key: Option<[u32; 2]>,
+}
+
+impl NativeNv {
+    pub fn new(inst: NewsvendorInstance, s_samples: usize, mode: NativeMode)
+        -> Self {
+        let d = inst.dim();
+        NativeNv {
+            inst,
+            s_samples,
+            mode,
+            panel: vec![0.0; s_samples * d],
+            panel_key: None,
+        }
+    }
+
+    pub fn instance(&self) -> &NewsvendorInstance {
+        &self.inst
+    }
+
+    fn ensure_panel(&mut self, key: [u32; 2]) {
+        if self.panel_key == Some(key) {
+            return; // same epoch key ⇒ same panel (counter-based RNG)
+        }
+        let seed = (key[0] as u64) << 32 | key[1] as u64;
+        let mut sampler = crate::rng::NormalSampler::from_seed(seed);
+        self.inst.sample_panel(&mut sampler, self.s_samples, &mut self.panel);
+        self.panel_key = Some(key);
+    }
+}
+
+impl NvBackend for NativeNv {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            NativeMode::Sequential => "native",
+            NativeMode::Parallel { .. } => "native_par",
+        }
+    }
+
+    fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        self.ensure_panel(key);
+        let d = self.inst.dim();
+        let mut g = vec![0.0f32; d];
+        match self.mode {
+            NativeMode::Sequential => {
+                nv::grad(&self.inst, &self.panel, self.s_samples, x, &mut g);
+            }
+            NativeMode::Parallel { threads } => {
+                let inst = &self.inst;
+                let panel = &self.panel;
+                let s = self.s_samples;
+                let parts = parallel_map_chunks(d, threads, |cols| {
+                    let mut part = vec![0.0f32; cols.len()];
+                    for (o, j) in cols.clone().enumerate() {
+                        let mut count = 0u32;
+                        for r in 0..s {
+                            if panel[r * d + j] <= x[j] {
+                                count += 1;
+                            }
+                        }
+                        let cdf = count as f32 / s as f32;
+                        part[o] = inst.k[j] - inst.v[j]
+                            + (inst.h[j] + inst.v[j]) * cdf;
+                    }
+                    (cols.start, part)
+                });
+                for (start, part) in parts {
+                    g[start..start + part.len()].copy_from_slice(&part);
+                }
+            }
+        }
+        let obj = nv::objective(&self.inst, &self.panel, self.s_samples, x);
+        Ok((g, obj))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 3
+// ---------------------------------------------------------------------------
+
+pub struct NativeLr {
+    n: usize,
+    mode: NativeMode,
+    pub hessian_mode: HessianMode,
+    // gather scratch (reused, no allocation in the iteration loop)
+    xb: Vec<f32>,
+    zb: Vec<f32>,
+    // Algorithm 4 cache: H_t is rebuilt only when the correction memory
+    // changes (every L iterations), then applied as a matvec per step —
+    // the same schedule the paper's Algorithm 3 line 11 implies.
+    h_cache: Option<(u64, Mat)>,
+    mem_generation: u64,
+}
+
+impl NativeLr {
+    pub fn new(data: &ClassifyData, mode: NativeMode,
+               hessian_mode: HessianMode) -> Self {
+        Self::with_dim(data.n_features, mode, hessian_mode)
+    }
+
+    pub fn with_dim(n: usize, mode: NativeMode, hessian_mode: HessianMode)
+        -> Self {
+        NativeLr {
+            n,
+            mode,
+            hessian_mode,
+            xb: Vec::new(),
+            zb: Vec::new(),
+            h_cache: None,
+            mem_generation: 0,
+        }
+    }
+}
+
+impl LrBackend for NativeLr {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            NativeMode::Sequential => "native",
+            NativeMode::Parallel { .. } => "native_par",
+        }
+    }
+
+    fn grad(&mut self, w: &[f32], data: &ClassifyData, idx: &[usize])
+        -> Result<(Vec<f32>, f64)> {
+        let n = self.n;
+        anyhow::ensure!(w.len() == n, "w dim {} != {}", w.len(), n);
+        anyhow::ensure!(data.n_features == n, "dataset feature mismatch");
+        data.gather(idx, &mut self.xb, &mut self.zb);
+        let (xb, zb) = (&self.xb, &self.zb);
+        let mut g = vec![0.0f32; n];
+        let loss = match self.mode {
+            NativeMode::Sequential => lr::grad(w, xb, zb, &mut g),
+            NativeMode::Parallel { threads } => {
+                let b = zb.len();
+                let parts = parallel_map_chunks(b, threads, |rows| {
+                    let mut gp = vec![0.0f32; n];
+                    let mut lp = 0.0f64;
+                    for i in rows {
+                        let row = &xb[i * n..(i + 1) * n];
+                        let u = crate::linalg::blocked::dot4(row, w);
+                        let c = lr::sigmoid(u);
+                        let r = c - zb[i];
+                        for j in 0..n {
+                            gp[j] += r * row[j];
+                        }
+                        lp += lr::bce(u, zb[i]) as f64;
+                    }
+                    (gp, lp)
+                });
+                let mut loss = 0.0f64;
+                for (gp, lp) in parts {
+                    for j in 0..n {
+                        g[j] += gp[j];
+                    }
+                    loss += lp;
+                }
+                let inv = 1.0 / b as f32;
+                g.iter_mut().for_each(|v| *v *= inv);
+                loss / b as f64
+            }
+        };
+        Ok((g, loss))
+    }
+
+    fn hvp(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
+           idx: &[usize]) -> Result<Vec<f32>> {
+        // a new correction pair is about to land ⇒ H_t will change
+        self.mem_generation += 1;
+        data.gather(idx, &mut self.xb, &mut self.zb);
+        let mut out = vec![0.0f32; self.n];
+        lr::hvp(wbar, s, &self.xb, &mut out);
+        Ok(out)
+    }
+
+    fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
+        -> Result<Vec<f32>> {
+        Ok(match self.hessian_mode {
+            HessianMode::Explicit => {
+                let rebuild = match &self.h_cache {
+                    Some((generation, _)) => *generation != self.mem_generation,
+                    None => true,
+                };
+                if rebuild {
+                    self.h_cache = Some((self.mem_generation,
+                                         lr::hbuild_explicit(mem)));
+                }
+                let (_, h) = self.h_cache.as_ref().unwrap();
+                let mut d = vec![0.0f32; g.len()];
+                h.matvec(g, &mut d);
+                d
+            }
+            HessianMode::TwoLoop => lr::hdir_twoloop(mem, g),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StreamTree;
+
+    #[test]
+    fn mv_epoch_feasible_and_deterministic() {
+        let u = AssetUniverse::generate(&StreamTree::new(1), 32);
+        let mut b = NativeMv::new(u.clone(), 16, 5, NativeMode::Sequential);
+        let w0 = vec![1.0 / 32.0; 32];
+        let (w1, o1) = b.epoch(&w0, 0, [1, 2]).unwrap();
+        assert!(crate::tasks::mean_variance::in_simplex(&w1, 1e-5));
+        let mut b2 = NativeMv::new(u, 16, 5, NativeMode::Sequential);
+        let (w2, o2) = b2.epoch(&w0, 0, [1, 2]).unwrap();
+        assert_eq!(w1, w2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn mv_parallel_matches_sequential() {
+        let u = AssetUniverse::generate(&StreamTree::new(2), 24);
+        let w0 = vec![1.0 / 24.0; 24];
+        let mut seq = NativeMv::new(u.clone(), 16, 4, NativeMode::Sequential);
+        let mut par =
+            NativeMv::new(u, 16, 4, NativeMode::Parallel { threads: 3 });
+        let (w1, o1) = seq.epoch(&w0, 1, [3, 4]).unwrap();
+        let (w2, o2) = par.epoch(&w0, 1, [3, 4]).unwrap();
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-4, "{} vs {}", a, b);
+        }
+        assert!((o1 - o2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nv_panel_cached_per_key() {
+        let inst = NewsvendorInstance::generate(&StreamTree::new(3), 16, 2, 0.6);
+        let x = inst.feasible_start();
+        let mut b = NativeNv::new(inst, 8, NativeMode::Sequential);
+        let (g1, o1) = b.grad_obj(&x, [7, 7]).unwrap();
+        let (g2, o2) = b.grad_obj(&x, [7, 7]).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(o1, o2);
+        let (g3, _) = b.grad_obj(&x, [7, 8]).unwrap();
+        assert_ne!(g1, g3); // different epoch key ⇒ different panel
+    }
+
+    #[test]
+    fn nv_parallel_matches_sequential() {
+        let inst = NewsvendorInstance::generate(&StreamTree::new(4), 32, 3, 0.6);
+        let x = inst.feasible_start();
+        let mut seq = NativeNv::new(inst.clone(), 16, NativeMode::Sequential);
+        let mut par =
+            NativeNv::new(inst, 16, NativeMode::Parallel { threads: 4 });
+        let (g1, o1) = seq.grad_obj(&x, [1, 1]).unwrap();
+        let (g2, o2) = par.grad_obj(&x, [1, 1]).unwrap();
+        assert_eq!(g1, g2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn lr_parallel_matches_sequential() {
+        let data = ClassifyData::generate(&StreamTree::new(5), 16);
+        let mut seq = NativeLr::new(&data, NativeMode::Sequential,
+                                    HessianMode::Explicit);
+        let mut par = NativeLr::new(&data,
+                                    NativeMode::Parallel { threads: 3 },
+                                    HessianMode::Explicit);
+        let w = vec![0.05f32; 16];
+        let idx: Vec<usize> = (0..64).collect();
+        let (g1, l1) = seq.grad(&w, &data, &idx).unwrap();
+        let (g2, l2) = par.grad(&w, &data, &idx).unwrap();
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert!((l1 - l2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lr_bad_shapes_rejected() {
+        let data = ClassifyData::generate(&StreamTree::new(6), 8);
+        let mut b = NativeLr::with_dim(16, NativeMode::Sequential,
+                                       HessianMode::TwoLoop);
+        // backend dimension disagrees with both w and the dataset
+        let w = vec![0.0f32; 16];
+        assert!(b.grad(&w, &data, &[0, 1]).is_err());
+        assert!(b.grad(&[0.0; 8], &data, &[0, 1]).is_err());
+    }
+}

@@ -1,0 +1,522 @@
+//! XLA backends: the vectorized "GPU-style" arm.  Each backend holds
+//! compiled artifact handles from the [`crate::runtime::Engine`] and turns
+//! trait calls into PJRT dispatches.
+//!
+//! Task 1 is the showcase: one `mv_epoch` dispatch covers the panel
+//! resampling *and* all M Frank-Wolfe steps (sampling + LMO + updates fused
+//! into a single XLA program), so the host↔device boundary is crossed once
+//! per epoch (ablation A1 measures the alternative).
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::exec::DeviceBuf;
+use crate::runtime::{exec, Arg, BufArg, Engine, Exec};
+use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use crate::tasks::CorrectionMemory;
+
+use super::{HessianMode, LrBackend, MvBackend, NvBackend};
+
+// ---------------------------------------------------------------------------
+// Task 1
+// ---------------------------------------------------------------------------
+
+pub struct XlaMv {
+    exec: Rc<Exec>,
+    mu: Vec<f32>,
+    sigma: Vec<f32>,
+}
+
+impl XlaMv {
+    /// Loads the `mv_epoch` artifact matching the universe's dimension and
+    /// the requested panel shape.
+    pub fn new(engine: &Engine, universe: &AssetUniverse, n_samples: usize,
+               m_inner: usize) -> Result<Self> {
+        let d = universe.dim() as i64;
+        let exec = engine
+            .load_by_params(
+                "mv_epoch",
+                &[("d", d), ("n", n_samples as i64), ("m", m_inner as i64)],
+            )
+            .context("loading mv_epoch artifact")?;
+        Ok(XlaMv { exec, mu: universe.mu.clone(), sigma: universe.sigma.clone() })
+    }
+}
+
+impl MvBackend for XlaMv {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        let outs = self.exec.call(&[
+            Arg::F32(w),
+            Arg::F32(&self.mu),
+            Arg::F32(&self.sigma),
+            Arg::U32(&key),
+            Arg::ScalarI32(k_epoch as i32),
+        ])?;
+        let w_out = exec::f32_vec(&outs[0])?;
+        let obj = exec::f32_scalar(&outs[1])? as f64;
+        Ok((w_out, obj))
+    }
+}
+
+/// Per-iteration dispatch variant (ablation A1): the host owns the panel
+/// and pays a dispatch + panel transfer per FW step.
+pub struct XlaMvStepwise {
+    exec: Rc<Exec>,
+    universe: AssetUniverse,
+    n_samples: usize,
+    m_inner: usize,
+    // host-side panel staging
+    panel: Vec<f32>,
+    rbar: Vec<f32>,
+}
+
+impl XlaMvStepwise {
+    pub fn new(engine: &Engine, universe: &AssetUniverse, n_samples: usize,
+               m_inner: usize) -> Result<Self> {
+        let d = universe.dim() as i64;
+        let exec = engine.load_by_params(
+            "mv_grad_step",
+            &[("d", d), ("n", n_samples as i64), ("m", m_inner as i64)],
+        )?;
+        let d = universe.dim();
+        Ok(XlaMvStepwise {
+            exec,
+            universe: universe.clone(),
+            n_samples,
+            m_inner,
+            panel: vec![0.0; n_samples * d],
+            rbar: vec![0.0; d],
+        })
+    }
+}
+
+impl MvBackend for XlaMvStepwise {
+    fn name(&self) -> &'static str {
+        "xla_stepwise"
+    }
+
+    fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        // Host-side resample + centering (mirrors the native arm), then one
+        // dispatch per FW step.
+        let d = self.universe.dim();
+        let seed = (key[0] as u64) << 32 | key[1] as u64;
+        let mut sampler = crate::rng::NormalSampler::from_seed(seed);
+        self.universe.sample_panel(&mut sampler, self.n_samples, &mut self.panel);
+        // column means
+        self.rbar.iter_mut().for_each(|v| *v = 0.0);
+        for s in 0..self.n_samples {
+            for j in 0..d {
+                self.rbar[j] += self.panel[s * d + j];
+            }
+        }
+        let inv = 1.0 / self.n_samples as f32;
+        self.rbar.iter_mut().for_each(|v| *v *= inv);
+        for s in 0..self.n_samples {
+            for j in 0..d {
+                self.panel[s * d + j] -= self.rbar[j];
+            }
+        }
+        let mut w = w.to_vec();
+        let mut obj = 0.0f32;
+        for m in 0..self.m_inner {
+            let outs = self.exec.call(&[
+                Arg::F32(&self.panel),
+                Arg::F32(&self.rbar),
+                Arg::F32(&w),
+                Arg::ScalarI32(k_epoch as i32),
+                Arg::ScalarI32(m as i32),
+            ])?;
+            w = exec::f32_vec(&outs[0])?;
+            obj = exec::f32_scalar(&outs[1])?;
+        }
+        Ok((w, obj as f64))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 2
+// ---------------------------------------------------------------------------
+
+/// Device-resident newsvendor backend (§Perf): per epoch, `nv_panel`
+/// samples the demand panel ONCE into a PJRT buffer that never leaves the
+/// device; each of the M inner iterations runs `nv_grad_panel` against it
+/// (per-call host traffic: one d-vector up, one d-vector + scalar down).
+/// Cost vectors are uploaded once at construction.
+pub struct XlaNv {
+    panel_exec: Rc<Exec>,
+    grad_exec: Rc<Exec>,
+    mu_buf: DeviceBuf,
+    sigma_buf: DeviceBuf,
+    kc_buf: DeviceBuf,
+    h_buf: DeviceBuf,
+    v_buf: DeviceBuf,
+    panel: Option<([u32; 2], DeviceBuf)>,
+}
+
+impl XlaNv {
+    pub fn new(engine: &Engine, inst: &NewsvendorInstance, s_samples: usize)
+        -> Result<Self> {
+        let req = [("d", inst.dim() as i64), ("s", s_samples as i64)];
+        let panel_exec = engine.load_by_params("nv_panel", &req)?;
+        let grad_exec = engine.load_by_params("nv_grad_panel", &req)?;
+        // nv_panel inputs: (mu, sigma, key); nv_grad_panel: (x, panel, kc, h, v)
+        let mu_buf = panel_exec.upload(0, Arg::F32(&inst.mu))?;
+        let sigma_buf = panel_exec.upload(1, Arg::F32(&inst.sigma))?;
+        let kc_buf = grad_exec.upload(2, Arg::F32(&inst.k))?;
+        let h_buf = grad_exec.upload(3, Arg::F32(&inst.h))?;
+        let v_buf = grad_exec.upload(4, Arg::F32(&inst.v))?;
+        Ok(XlaNv {
+            panel_exec,
+            grad_exec,
+            mu_buf,
+            sigma_buf,
+            kc_buf,
+            h_buf,
+            v_buf,
+            panel: None,
+        })
+    }
+
+    fn ensure_panel(&mut self, key: [u32; 2]) -> Result<()> {
+        if matches!(&self.panel, Some((k, _)) if *k == key) {
+            return Ok(());
+        }
+        // Sample on device, round-trip the panel through the host once per
+        // epoch, and park it as a buffer for the M inner iterations.  (A
+        // fully device-side chain needs untupled outputs, which this
+        // xla_extension build mis-sizes under execute_b — see runtime docs.)
+        let outs = self.panel_exec.call_b(&[
+            BufArg::Dev(&self.mu_buf),
+            BufArg::Dev(&self.sigma_buf),
+            BufArg::Host(Arg::U32(&key)),
+        ])?;
+        let panel_host = exec::f32_vec(&outs[0])?;
+        let buf = self.grad_exec.upload(1, Arg::F32(&panel_host))?;
+        self.panel = Some((key, buf));
+        Ok(())
+    }
+}
+
+impl NvBackend for XlaNv {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        self.ensure_panel(key)?;
+        let (_, panel) = self.panel.as_ref().unwrap();
+        let outs = self.grad_exec.call_b(&[
+            BufArg::Host(Arg::F32(x)),
+            BufArg::Dev(panel),
+            BufArg::Dev(&self.kc_buf),
+            BufArg::Dev(&self.h_buf),
+            BufArg::Dev(&self.v_buf),
+        ])?;
+        let g = exec::f32_vec(&outs[0])?;
+        let obj = exec::f32_scalar(&outs[1])? as f64;
+        Ok((g, obj))
+    }
+}
+
+/// Per-call variant (ablation A5): the original `nv_grad` artifact that
+/// resamples the panel in-graph on EVERY gradient call and ships all cost
+/// vectors per dispatch — the naive offload pattern.
+pub struct XlaNvPerCall {
+    exec: Rc<Exec>,
+    inst: NewsvendorInstance,
+}
+
+impl XlaNvPerCall {
+    pub fn new(engine: &Engine, inst: &NewsvendorInstance, s_samples: usize)
+        -> Result<Self> {
+        let exec = engine.load_by_params(
+            "nv_grad",
+            &[("d", inst.dim() as i64), ("s", s_samples as i64)],
+        )?;
+        Ok(XlaNvPerCall { exec, inst: inst.clone() })
+    }
+}
+
+impl NvBackend for XlaNvPerCall {
+    fn name(&self) -> &'static str {
+        "xla_percall"
+    }
+
+    fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        let outs = self.exec.call(&[
+            Arg::F32(x),
+            Arg::F32(&self.inst.mu),
+            Arg::F32(&self.inst.sigma),
+            Arg::F32(&self.inst.k),
+            Arg::F32(&self.inst.h),
+            Arg::F32(&self.inst.v),
+            Arg::U32(&key),
+        ])?;
+        let g = exec::f32_vec(&outs[0])?;
+        let obj = exec::f32_scalar(&outs[1])? as f64;
+        Ok((g, obj))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 3
+// ---------------------------------------------------------------------------
+
+/// Device-resident SQN backend (§Perf):
+/// * the full (N×n) design matrix + labels are uploaded ONCE at
+///   construction and gathered in-graph per minibatch (`lr_grad_ds` /
+///   `lr_hvp_ds`) — per-iteration host traffic is (w, idx) up, (g, loss)
+///   down;
+/// * in explicit-H mode the Algorithm-4 matrix is built on device
+///   (`lr_hbuild`, untupled) and stays a PJRT buffer; `lr_happly` consumes
+///   it directly — the n×n matrix never crosses the host boundary.
+pub struct XlaLr {
+    grad_exec: Rc<Exec>,
+    hvp_exec: Rc<Exec>,
+    hbuild_exec: Option<Rc<Exec>>,
+    happly_exec: Option<Rc<Exec>>,
+    twoloop_exec: Option<Rc<Exec>>,
+    pub hessian_mode: HessianMode,
+    n: usize,
+    memory: usize,
+    x_buf: DeviceBuf,
+    z_buf: DeviceBuf,
+    /// Device-resident H: (memory generation it was built from, buffer).
+    h_buf: Option<(u64, DeviceBuf)>,
+    mem_generation: u64,
+    /// Scratch for i32 index conversion.
+    idx_i32: Vec<i32>,
+}
+
+impl XlaLr {
+    pub fn new(engine: &Engine, data: &ClassifyData, batch: usize,
+               hbatch: usize, memory: usize, hessian_mode: HessianMode)
+        -> Result<Self> {
+        let n = data.n_features as i64;
+        let rows = data.n_samples as i64;
+        let grad_exec = engine.load_by_params(
+            "lr_grad_ds", &[("n", n), ("b", batch as i64), ("rows", rows)])
+            .context("lr_grad_ds artifact (rows must equal 30·n)")?;
+        let hvp_exec = engine.load_by_params(
+            "lr_hvp_ds", &[("n", n), ("bh", hbatch as i64), ("rows", rows)])?;
+        let (hbuild_exec, happly_exec, twoloop_exec) = match hessian_mode {
+            HessianMode::Explicit => (
+                Some(engine.load_by_params(
+                    "lr_hbuild", &[("n", n), ("mem", memory as i64)])?),
+                Some(engine.load_by_params("lr_happly", &[("n", n)])?),
+                None,
+            ),
+            HessianMode::TwoLoop => (
+                None,
+                None,
+                Some(engine.load_by_params(
+                    "lr_dir_twoloop", &[("n", n), ("mem", memory as i64)])?),
+            ),
+        };
+        // lr_grad_ds inputs: (w, x_full, z_full, idx)
+        let x_buf = grad_exec.upload(1, Arg::F32(&data.x))?;
+        let z_buf = grad_exec.upload(2, Arg::F32(&data.z))?;
+        Ok(XlaLr {
+            grad_exec,
+            hvp_exec,
+            hbuild_exec,
+            happly_exec,
+            twoloop_exec,
+            hessian_mode,
+            n: data.n_features,
+            memory,
+            x_buf,
+            z_buf,
+            h_buf: None,
+            mem_generation: 0,
+            idx_i32: Vec::new(),
+        })
+    }
+
+    /// Pad the correction memory into the fixed (mem × n) artifact layout.
+    fn padded_mem(&self, mem: &CorrectionMemory) -> (Vec<f32>, Vec<f32>, i32) {
+        let mut s = vec![0.0f32; self.memory * self.n];
+        let mut y = vec![0.0f32; self.memory * self.n];
+        let count = mem.count.min(self.memory);
+        let take = count * self.n;
+        s[..take].copy_from_slice(&mem.s_mem[..take]);
+        y[..take].copy_from_slice(&mem.y_mem[..take]);
+        (s, y, count as i32)
+    }
+
+    fn idx_arg(&mut self, idx: &[usize]) {
+        self.idx_i32.clear();
+        self.idx_i32.extend(idx.iter().map(|&i| i as i32));
+    }
+}
+
+impl LrBackend for XlaLr {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn grad(&mut self, w: &[f32], _data: &ClassifyData, idx: &[usize])
+        -> Result<(Vec<f32>, f64)> {
+        self.idx_arg(idx);
+        let outs = self.grad_exec.call_b(&[
+            BufArg::Host(Arg::F32(w)),
+            BufArg::Dev(&self.x_buf),
+            BufArg::Dev(&self.z_buf),
+            BufArg::Host(Arg::I32(&self.idx_i32)),
+        ])?;
+        let g = exec::f32_vec(&outs[0])?;
+        let loss = exec::f32_scalar(&outs[1])? as f64;
+        Ok((g, loss))
+    }
+
+    fn hvp(&mut self, wbar: &[f32], s: &[f32], _data: &ClassifyData,
+           idx: &[usize]) -> Result<Vec<f32>> {
+        // memory contents changed ⇒ invalidate the resident H
+        self.mem_generation += 1;
+        self.idx_arg(idx);
+        let outs = self.hvp_exec.call_b(&[
+            BufArg::Host(Arg::F32(wbar)),
+            BufArg::Host(Arg::F32(s)),
+            BufArg::Dev(&self.x_buf),
+            BufArg::Host(Arg::I32(&self.idx_i32)),
+        ])?;
+        exec::f32_vec(&outs[0])
+    }
+
+    fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
+        -> Result<Vec<f32>> {
+        match self.hessian_mode {
+            HessianMode::Explicit => {
+                // Algorithm 4: H_t changes only when a new pair arrives
+                // (every L iterations) — rebuild on device then, reuse the
+                // buffer between.
+                let rebuild = match &self.h_buf {
+                    Some((generation, _)) => *generation != self.mem_generation,
+                    None => true,
+                };
+                if rebuild {
+                    let (s, y, count) = self.padded_mem(mem);
+                    let outs = self.hbuild_exec.as_ref().unwrap().call(&[
+                        Arg::F32(&s),
+                        Arg::F32(&y),
+                        Arg::ScalarI32(count),
+                    ])?;
+                    // one n×n round-trip per rebuild (every L iterations),
+                    // then the matrix stays device-resident for the L
+                    // direction applications
+                    let h_host = exec::f32_vec(&outs[0])?;
+                    let h = self.happly_exec
+                        .as_ref()
+                        .unwrap()
+                        .upload(0, Arg::F32(&h_host))?;
+                    self.h_buf = Some((self.mem_generation, h));
+                }
+                let (_, h) = self.h_buf.as_ref().unwrap();
+                let outs = self.happly_exec.as_ref().unwrap().call_b(&[
+                    BufArg::Dev(h),
+                    BufArg::Host(Arg::F32(g)),
+                ])?;
+                exec::f32_vec(&outs[0])
+            }
+            HessianMode::TwoLoop => {
+                let (s, y, count) = self.padded_mem(mem);
+                let outs = self.twoloop_exec.as_ref().unwrap().call(&[
+                    Arg::F32(&s),
+                    Arg::F32(&y),
+                    Arg::ScalarI32(count),
+                    Arg::F32(g),
+                ])?;
+                exec::f32_vec(&outs[0])
+            }
+        }
+    }
+}
+
+/// Per-call SQN variant (ablation A5): ships the gathered minibatch on
+/// every gradient call and the full n×n Hessian across the boundary twice
+/// per direction — the naive offload pattern the resident path replaces.
+pub struct XlaLrPerCall {
+    grad_exec: Rc<Exec>,
+    hvp_exec: Rc<Exec>,
+    twoloop_exec: Rc<Exec>,
+    memory: usize,
+    n: usize,
+    xb: Vec<f32>,
+    zb: Vec<f32>,
+}
+
+impl XlaLrPerCall {
+    pub fn new(engine: &Engine, data: &ClassifyData, batch: usize,
+               hbatch: usize, memory: usize) -> Result<Self> {
+        let n = data.n_features as i64;
+        Ok(XlaLrPerCall {
+            grad_exec: engine.load_by_params(
+                "lr_grad", &[("n", n), ("b", batch as i64)])?,
+            hvp_exec: engine.load_by_params(
+                "lr_hvp", &[("n", n), ("bh", hbatch as i64)])?,
+            twoloop_exec: engine.load_by_params(
+                "lr_dir_twoloop", &[("n", n), ("mem", memory as i64)])?,
+            memory,
+            n: data.n_features,
+            xb: Vec::new(),
+            zb: Vec::new(),
+        })
+    }
+}
+
+impl LrBackend for XlaLrPerCall {
+    fn name(&self) -> &'static str {
+        "xla_percall"
+    }
+
+    fn grad(&mut self, w: &[f32], data: &ClassifyData, idx: &[usize])
+        -> Result<(Vec<f32>, f64)> {
+        data.gather(idx, &mut self.xb, &mut self.zb);
+        let outs = self.grad_exec.call(&[
+            Arg::F32(w),
+            Arg::F32(&self.xb),
+            Arg::F32(&self.zb),
+        ])?;
+        let g = exec::f32_vec(&outs[0])?;
+        let loss = exec::f32_scalar(&outs[1])? as f64;
+        Ok((g, loss))
+    }
+
+    fn hvp(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
+           idx: &[usize]) -> Result<Vec<f32>> {
+        data.gather(idx, &mut self.xb, &mut self.zb);
+        let outs = self
+            .hvp_exec
+            .call(&[Arg::F32(wbar), Arg::F32(s), Arg::F32(&self.xb)])?;
+        exec::f32_vec(&outs[0])
+    }
+
+    fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
+        -> Result<Vec<f32>> {
+        let mut s = vec![0.0f32; self.memory * self.n];
+        let mut y = vec![0.0f32; self.memory * self.n];
+        let count = mem.count.min(self.memory);
+        let take = count * self.n;
+        s[..take].copy_from_slice(&mem.s_mem[..take]);
+        y[..take].copy_from_slice(&mem.y_mem[..take]);
+        let outs = self.twoloop_exec.call(&[
+            Arg::F32(&s),
+            Arg::F32(&y),
+            Arg::ScalarI32(count as i32),
+            Arg::F32(g),
+        ])?;
+        exec::f32_vec(&outs[0])
+    }
+}
+
+// Cross-backend agreement tests live in rust/tests/integration_runtime.rs
+// (they need compiled artifacts).

@@ -1,0 +1,219 @@
+//! Benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warm-up, repetition, robust summary statistics, and the
+//! markdown/CSV emitters every `rust/benches/*.rs` target uses to print the
+//! paper-shaped tables (Figure 2 rows, Table 2 rows, ablations).
+//!
+//! Timing protocol per case: `warmup` untimed runs, then `reps` timed runs;
+//! we report mean, ±2σ (the paper's band), min, and median.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::stats::OnlineStats;
+use crate::util::timer::{fmt_duration, Timer};
+
+/// One measured case (a row in a bench table).
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub label: String,
+    pub reps: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub median_s: f64,
+}
+
+impl Measurement {
+    pub fn band2(&self) -> (f64, f64) {
+        (self.mean_s - 2.0 * self.std_s, self.mean_s + 2.0 * self.std_s)
+    }
+}
+
+/// Collects measurements and renders them.
+pub struct Bench {
+    pub name: String,
+    warmup: usize,
+    reps: usize,
+    rows: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Keep default effort low on the 1-core CI box; benches can override.
+        Bench { name: name.to_string(), warmup: 1, reps: 5, rows: Vec::new() }
+    }
+
+    pub fn warmup(mut self, w: usize) -> Self {
+        self.warmup = w;
+        self
+    }
+
+    pub fn reps(mut self, r: usize) -> Self {
+        self.reps = r;
+        self
+    }
+
+    /// Time `f` under the harness protocol and record a row.
+    pub fn case<F: FnMut()>(&mut self, label: &str, mut f: F) -> &Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        let mut stats = OnlineStats::new();
+        for _ in 0..self.reps.max(1) {
+            let t = Timer::start();
+            f();
+            let s = t.elapsed_s();
+            samples.push(s);
+            stats.push(s);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        self.rows.push(Measurement {
+            label: label.to_string(),
+            reps: self.reps,
+            mean_s: stats.mean(),
+            std_s: stats.std(),
+            min_s: stats.min(),
+            median_s: median,
+        });
+        self.rows.last().unwrap()
+    }
+
+    /// Record an externally-timed sample set (e.g. per-epoch times collected
+    /// inside a driver).
+    pub fn record(&mut self, label: &str, samples_s: &[f64]) -> &Measurement {
+        let mut stats = OnlineStats::new();
+        for &s in samples_s {
+            stats.push(s);
+        }
+        let mut sorted = samples_s.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if sorted.is_empty() { f64::NAN } else { sorted[sorted.len() / 2] };
+        self.rows.push(Measurement {
+            label: label.to_string(),
+            reps: samples_s.len(),
+            mean_s: stats.mean(),
+            std_s: stats.std(),
+            min_s: stats.min(),
+            median_s: median,
+        });
+        self.rows.last().unwrap()
+    }
+
+    pub fn rows(&self) -> &[Measurement] {
+        &self.rows
+    }
+
+    pub fn find(&self, label: &str) -> Option<&Measurement> {
+        self.rows.iter().find(|m| m.label == label)
+    }
+
+    /// Markdown table in the shape the paper's figures report:
+    /// label, mean, ±2σ band, min, median.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("### {}\n\n", self.name));
+        out.push_str("| case | mean | ±2σ | min | median | reps |\n");
+        out.push_str("|---|---|---|---|---|---|\n");
+        for m in &self.rows {
+            out.push_str(&format!(
+                "| {} | {} | ±{} | {} | {} | {} |\n",
+                m.label,
+                fmt_duration(m.mean_s),
+                fmt_duration(2.0 * m.std_s),
+                fmt_duration(m.min_s),
+                fmt_duration(m.median_s),
+                m.reps
+            ));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label,reps,mean_s,std_s,min_s,median_s\n");
+        for m in &self.rows {
+            out.push_str(&format!(
+                "{},{},{:.9},{:.9},{:.9},{:.9}\n",
+                m.label, m.reps, m.mean_s, m.std_s, m.min_s, m.median_s
+            ));
+        }
+        out
+    }
+
+    /// Print markdown to stdout and persist CSV under `results/bench/`.
+    pub fn finish(&self) {
+        println!("{}", self.to_markdown());
+        let dir = Path::new("results").join("bench");
+        if fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{}.csv", self.name));
+            if let Ok(mut f) = fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+                println!("[bench] wrote {}", path.display());
+            }
+        }
+    }
+}
+
+/// Speedup helper for the paper's headline "GPU is 3-6× faster" rows.
+pub fn speedup(baseline: &Measurement, accelerated: &Measurement) -> f64 {
+    if accelerated.mean_s == 0.0 {
+        return f64::INFINITY;
+    }
+    baseline.mean_s / accelerated.mean_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_records_row() {
+        let mut b = Bench::new("t").warmup(0).reps(3);
+        b.case("noop", || {});
+        assert_eq!(b.rows().len(), 1);
+        let m = &b.rows()[0];
+        assert_eq!(m.reps, 3);
+        assert!(m.mean_s >= 0.0);
+        assert!(m.min_s <= m.mean_s + 1e-9);
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bench::new("t");
+        let m = b.record("ext", &[1.0, 2.0, 3.0]).clone();
+        assert!((m.mean_s - 2.0).abs() < 1e-12);
+        assert!((m.median_s - 2.0).abs() < 1e-12);
+        assert_eq!(m.min_s, 1.0);
+    }
+
+    #[test]
+    fn markdown_and_csv_shapes() {
+        let mut b = Bench::new("shape");
+        b.record("a", &[0.5, 0.5]);
+        let md = b.to_markdown();
+        assert!(md.contains("| a |"));
+        assert!(md.contains("±"));
+        let csv = b.to_csv();
+        assert!(csv.lines().count() == 2);
+        assert!(csv.starts_with("label,"));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mut b = Bench::new("s");
+        let slow = b.record("slow", &[4.0]).clone();
+        let fast = b.record("fast", &[1.0]).clone();
+        assert!((speedup(&slow, &fast) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn find_by_label() {
+        let mut b = Bench::new("f");
+        b.record("x", &[1.0]);
+        assert!(b.find("x").is_some());
+        assert!(b.find("y").is_none());
+    }
+}

@@ -1,0 +1,217 @@
+//! Typed configuration shared by the CLI, coordinator, and benches.
+
+use std::fmt;
+
+/// Which of the paper's three tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// §3.1 mean-variance portfolio (Frank-Wolfe, Algorithm 1)
+    MeanVariance,
+    /// §3.2 multi-product newsvendor (Frank-Wolfe + LP LMO, Algorithm 2)
+    Newsvendor,
+    /// §3.3 binary classification (SQN, Algorithms 3-4)
+    Classification,
+}
+
+impl TaskKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mv" | "mean_variance" | "mean-variance" | "portfolio" => {
+                Some(TaskKind::MeanVariance)
+            }
+            "nv" | "newsvendor" | "news_vendor" | "inventory" => Some(TaskKind::Newsvendor),
+            "lr" | "classification" | "logistic" => Some(TaskKind::Classification),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TaskKind::MeanVariance => "mean_variance",
+            TaskKind::Newsvendor => "newsvendor",
+            TaskKind::Classification => "classification",
+        }
+    }
+
+    pub fn all() -> [TaskKind; 3] {
+        [TaskKind::MeanVariance, TaskKind::Newsvendor, TaskKind::Classification]
+    }
+}
+
+impl fmt::Display for TaskKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Execution model — the paper's CPU/GPU axis (DESIGN.md §2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Sequential scalar Rust — the paper's "CPU processes samples
+    /// individually" arm.
+    Native,
+    /// Thread-pooled native (ablation A3: CPU parallelism without
+    /// vectorized fusion).
+    NativePar,
+    /// AOT-compiled XLA artifacts via PJRT — the vectorized "GPU-style" arm.
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" | "cpu" | "seq" => Some(BackendKind::Native),
+            "native_par" | "native-par" | "par" => Some(BackendKind::NativePar),
+            "xla" | "gpu" | "pjrt" => Some(BackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::NativePar => "native_par",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Paper §4.1 parameters with this repo's defaults (DESIGN.md §10 documents
+/// the scaling deviations).
+#[derive(Debug, Clone)]
+pub struct TaskParams {
+    /// Problem dimension (assets / products / features).
+    pub size: usize,
+    /// Samples per gradient estimate (panel rows).
+    pub samples: usize,
+    /// Frank-Wolfe steps between resampling (Algorithms 1-2 `M`).
+    pub m_inner: usize,
+    /// Epochs (Algorithms 1-2 `K`) or SQN iterations (Algorithm 3 `k`).
+    pub iters: usize,
+    /// SQN minibatch `b`.
+    pub batch: usize,
+    /// SQN Hessian batch `b_H`.
+    pub hbatch: usize,
+    /// SQN memory `M`.
+    pub memory: usize,
+    /// SQN update spacing `L`.
+    pub l_every: usize,
+    /// SQN step scale β (α_k = β/k).
+    pub beta: f32,
+    /// Newsvendor resource count.
+    pub resources: usize,
+    /// Newsvendor capacity tightness.
+    pub tightness: f32,
+}
+
+impl TaskParams {
+    pub fn defaults(task: TaskKind, size: usize) -> Self {
+        match task {
+            TaskKind::MeanVariance => TaskParams {
+                size,
+                samples: 64,
+                m_inner: 25,
+                iters: 40,
+                batch: 0,
+                hbatch: 0,
+                memory: 0,
+                l_every: 0,
+                beta: 0.0,
+                resources: 0,
+                tightness: 1.0,
+            },
+            TaskKind::Newsvendor => TaskParams {
+                size,
+                samples: 32,
+                m_inner: 25,
+                iters: 40,
+                batch: 0,
+                hbatch: 0,
+                memory: 0,
+                l_every: 0,
+                beta: 0.0,
+                resources: 8,
+                tightness: 0.6,
+            },
+            TaskKind::Classification => TaskParams {
+                size,
+                samples: 0,
+                m_inner: 0,
+                iters: 400,
+                batch: 64,
+                hbatch: 256,
+                memory: 25,
+                l_every: 10,
+                beta: 2.0,
+                resources: 0,
+                tightness: 1.0,
+            },
+        }
+    }
+}
+
+/// Default size sweeps per task (the Figure-2 x-axes, scaled per DESIGN §2).
+pub fn default_sizes(task: TaskKind) -> Vec<usize> {
+    match task {
+        TaskKind::MeanVariance => vec![128, 512, 2048],
+        TaskKind::Newsvendor => vec![256, 2048, 16384],
+        TaskKind::Classification => vec![64, 256, 1024],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_parse_aliases() {
+        assert_eq!(TaskKind::parse("mv"), Some(TaskKind::MeanVariance));
+        assert_eq!(TaskKind::parse("Portfolio"), Some(TaskKind::MeanVariance));
+        assert_eq!(TaskKind::parse("NV"), Some(TaskKind::Newsvendor));
+        assert_eq!(TaskKind::parse("logistic"), Some(TaskKind::Classification));
+        assert_eq!(TaskKind::parse("wat"), None);
+    }
+
+    #[test]
+    fn backend_parse_aliases() {
+        assert_eq!(BackendKind::parse("cpu"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("gpu"), Some(BackendKind::Xla));
+        assert_eq!(BackendKind::parse("native_par"), Some(BackendKind::NativePar));
+        assert_eq!(BackendKind::parse(""), None);
+    }
+
+    #[test]
+    fn display_roundtrip() {
+        for t in TaskKind::all() {
+            assert_eq!(TaskKind::parse(t.as_str()), Some(t));
+        }
+        for b in [BackendKind::Native, BackendKind::NativePar, BackendKind::Xla] {
+            assert_eq!(BackendKind::parse(b.as_str()), Some(b));
+        }
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let p = TaskParams::defaults(TaskKind::Classification, 256);
+        assert_eq!(p.size, 256);
+        assert!(p.batch > 0 && p.hbatch > p.batch);
+        assert!(p.memory > 0 && p.l_every > 0);
+        let p = TaskParams::defaults(TaskKind::Newsvendor, 64);
+        assert!(p.resources > 0);
+        assert!(p.tightness < 1.0);
+    }
+
+    #[test]
+    fn sweep_sizes_ascending() {
+        for t in TaskKind::all() {
+            let sizes = default_sizes(t);
+            assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

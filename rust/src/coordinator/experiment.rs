@@ -1,0 +1,176 @@
+//! Experiment specifications: one run (task × backend × size × reps) and
+//! full sweeps (the Figure-2 protocol).
+
+use anyhow::{ensure, Result};
+
+use crate::backend::HessianMode;
+use crate::config::{BackendKind, TaskKind, TaskParams};
+
+/// One experiment cell.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub task: TaskKind,
+    pub backend: BackendKind,
+    pub size: usize,
+    pub reps: usize,
+    pub seed: u64,
+    pub hessian_mode: HessianMode,
+    /// SQN loss-tracking cadence (iterations).
+    pub track_every: usize,
+    pub params: TaskParams,
+}
+
+impl ExperimentSpec {
+    pub fn new(task: TaskKind, backend: BackendKind) -> Self {
+        let size = crate::config::default_sizes(task)[0];
+        ExperimentSpec {
+            task,
+            backend,
+            size,
+            reps: 5,
+            seed: 42,
+            hessian_mode: HessianMode::Explicit,
+            track_every: 10,
+            params: TaskParams::defaults(task, size),
+        }
+    }
+
+    pub fn size(mut self, size: usize) -> Self {
+        self.size = size;
+        self.params.size = size;
+        self
+    }
+
+    /// Epochs (FW) / iterations (SQN).
+    pub fn epochs(mut self, iters: usize) -> Self {
+        self.params.iters = iters;
+        self
+    }
+
+    pub fn replications(mut self, reps: usize) -> Self {
+        self.reps = reps;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn samples(mut self, samples: usize) -> Self {
+        self.params.samples = samples;
+        self
+    }
+
+    pub fn hessian(mut self, mode: HessianMode) -> Self {
+        self.hessian_mode = mode;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.size > 0, "size must be positive");
+        ensure!(self.reps > 0, "reps must be positive");
+        ensure!(self.params.iters > 0, "iters must be positive");
+        match self.task {
+            TaskKind::Classification => {
+                ensure!(self.params.batch > 0, "batch must be positive");
+                ensure!(self.params.hbatch > 0, "hbatch must be positive");
+                ensure!(self.params.l_every > 0, "l_every must be positive");
+                ensure!(self.params.memory > 0, "memory must be positive");
+            }
+            _ => {
+                ensure!(self.params.samples > 0, "samples must be positive");
+                ensure!(self.params.m_inner > 0, "m_inner must be positive");
+            }
+        }
+        Ok(())
+    }
+
+    /// Label used in reports and CSV files.
+    pub fn label(&self) -> String {
+        format!("{}_{}_d{}", self.task, self.backend, self.size)
+    }
+}
+
+/// The Figure-2 protocol: one task, a size axis, a set of backends.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub task: TaskKind,
+    pub sizes: Vec<usize>,
+    pub backends: Vec<BackendKind>,
+    pub reps: usize,
+    pub epochs: usize,
+    pub seed: u64,
+}
+
+impl SweepSpec {
+    pub fn figure2(task: TaskKind) -> Self {
+        SweepSpec {
+            task,
+            sizes: crate::config::default_sizes(task),
+            backends: vec![BackendKind::Native, BackendKind::Xla],
+            reps: 5,
+            epochs: match task {
+                TaskKind::Classification => 200,
+                _ => 10,
+            },
+            seed: 42,
+        }
+    }
+
+    pub fn spec_for(&self, size: usize, backend: BackendKind) -> ExperimentSpec {
+        ExperimentSpec::new(self.task, backend)
+            .size(size)
+            .epochs(self.epochs)
+            .replications(self.reps)
+            .seed(self.seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_chains() {
+        let s = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Xla)
+            .size(512)
+            .epochs(7)
+            .replications(3)
+            .seed(9)
+            .samples(16);
+        assert_eq!(s.size, 512);
+        assert_eq!(s.params.size, 512);
+        assert_eq!(s.params.iters, 7);
+        assert_eq!(s.reps, 3);
+        assert_eq!(s.seed, 9);
+        assert_eq!(s.params.samples, 16);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_zeroes() {
+        let mut s = ExperimentSpec::new(TaskKind::Newsvendor, BackendKind::Native);
+        s.reps = 0;
+        assert!(s.validate().is_err());
+        let mut s = ExperimentSpec::new(TaskKind::Classification, BackendKind::Native);
+        s.params.batch = 0;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn sweep_expands_grid() {
+        let sw = SweepSpec::figure2(TaskKind::MeanVariance);
+        assert_eq!(sw.sizes.len(), 3);
+        assert_eq!(sw.backends.len(), 2);
+        let spec = sw.spec_for(128, BackendKind::Native);
+        assert_eq!(spec.size, 128);
+        assert_eq!(spec.reps, sw.reps);
+    }
+
+    #[test]
+    fn label_shape() {
+        let s = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Xla);
+        assert_eq!(s.label(), format!("mean_variance_xla_d{}", s.size));
+    }
+}

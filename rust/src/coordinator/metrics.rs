@@ -1,0 +1,214 @@
+//! Per-replication records and cross-replication aggregation — the
+//! statistics behind Figure 2 (time mean ± 2σ) and Table 2 (RSE ± 2σ at
+//! checkpoints).
+
+use crate::opt::{FwTrace, SqnTrace};
+use crate::util::stats::{self, OnlineStats};
+
+use super::experiment::ExperimentSpec;
+
+/// One replication's outcome.
+#[derive(Debug, Clone)]
+pub struct RepRecord {
+    /// Total optimization wall-clock (tracking excluded).
+    pub total_s: f64,
+    /// Objective trace (per epoch for FW, per checkpoint for SQN).
+    pub objs: Vec<f64>,
+    /// Iteration indices the objective trace corresponds to.
+    pub obj_iters: Vec<usize>,
+    /// Wall-clock per epoch/iteration.
+    pub step_s: Vec<f64>,
+}
+
+impl RepRecord {
+    pub fn from_fw(t: FwTrace) -> Self {
+        let total_s = t.total_s();
+        let obj_iters = (1..=t.objs.len()).collect();
+        RepRecord { total_s, objs: t.objs, obj_iters, step_s: t.epoch_s }
+    }
+
+    pub fn from_sqn(t: SqnTrace) -> Self {
+        let total_s = t.total_s();
+        let obj_iters = t.checkpoints.iter().map(|&(k, _)| k).collect();
+        RepRecord {
+            total_s,
+            objs: t.tracked_losses(),
+            obj_iters,
+            step_s: t.iter_s,
+        }
+    }
+
+    /// RSE trace against this replication's final objective (the paper's
+    /// Table-2 definition).
+    pub fn rse_trace(&self) -> Vec<f64> {
+        stats::rse_trace(&self.objs)
+    }
+}
+
+/// Aggregated outcome of one experiment cell.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub spec: ExperimentSpec,
+    pub reps: Vec<RepRecord>,
+}
+
+impl RunResult {
+    pub fn new(spec: ExperimentSpec, reps: Vec<RepRecord>) -> Self {
+        RunResult { spec, reps }
+    }
+
+    /// Mean/σ of total runtime across replications.
+    pub fn time_stats(&self) -> OnlineStats {
+        let mut s = OnlineStats::new();
+        for r in &self.reps {
+            s.push(r.total_s);
+        }
+        s
+    }
+
+    /// Mean/σ of per-step (epoch or iteration) time across all reps+steps.
+    pub fn step_stats(&self) -> OnlineStats {
+        let mut s = OnlineStats::new();
+        for r in &self.reps {
+            for &v in &r.step_s {
+                s.push(v);
+            }
+        }
+        s
+    }
+
+    /// (mean, std) of the RSE at trace index `idx` across replications.
+    pub fn rse_at_index(&self, idx: usize) -> (f64, f64) {
+        let vals: Vec<f64> = self
+            .reps
+            .iter()
+            .map(|r| stats::at_checkpoint(&r.rse_trace(), idx))
+            .filter(|v| v.is_finite())
+            .collect();
+        (stats::mean(&vals), stats::std(&vals))
+    }
+
+    /// RSE checkpoints at fractional positions of the trace (e.g. 0.05 =
+    /// 5% through the run), as (fraction, iteration, mean, std).
+    pub fn rse_checkpoints(&self, fracs: &[f64]) -> Vec<(f64, usize, f64, f64)> {
+        let len = self.reps.first().map(|r| r.objs.len()).unwrap_or(0);
+        if len == 0 {
+            return Vec::new();
+        }
+        fracs
+            .iter()
+            .map(|&f| {
+                let idx = ((len as f64 * f).round() as usize).min(len - 1);
+                let it = self
+                    .reps
+                    .first()
+                    .map(|r| r.obj_iters.get(idx).copied().unwrap_or(idx))
+                    .unwrap_or(idx);
+                let (m, s) = self.rse_at_index(idx);
+                (f, it, m, s)
+            })
+            .collect()
+    }
+
+    /// Final objective statistics across replications (accuracy agreement).
+    pub fn final_obj_stats(&self) -> OnlineStats {
+        let mut s = OnlineStats::new();
+        for r in &self.reps {
+            if let Some(&o) = r.objs.last() {
+                s.push(o);
+            }
+        }
+        s
+    }
+
+    pub fn summary(&self) -> String {
+        let t = self.time_stats();
+        format!(
+            "{}: {} reps, total {:.3}s ±{:.3}s, final obj {:.6} ±{:.6}",
+            self.spec.label(),
+            self.reps.len(),
+            t.mean(),
+            2.0 * t.std(),
+            self.final_obj_stats().mean(),
+            2.0 * self.final_obj_stats().std(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HessianMode;
+    use crate::config::{BackendKind, TaskKind, TaskParams};
+
+    fn dummy_spec() -> ExperimentSpec {
+        ExperimentSpec {
+            task: TaskKind::MeanVariance,
+            backend: BackendKind::Native,
+            size: 8,
+            reps: 2,
+            seed: 1,
+            hessian_mode: HessianMode::Explicit,
+            track_every: 1,
+            params: TaskParams::defaults(TaskKind::MeanVariance, 8),
+        }
+    }
+
+    fn rec(objs: Vec<f64>, step: f64) -> RepRecord {
+        let n = objs.len();
+        RepRecord {
+            total_s: step * n as f64,
+            objs,
+            obj_iters: (1..=n).collect(),
+            step_s: vec![step; n],
+        }
+    }
+
+    #[test]
+    fn from_fw_preserves_trace() {
+        let t = FwTrace { objs: vec![3.0, 2.0, 1.0], epoch_s: vec![0.1; 3] };
+        let r = RepRecord::from_fw(t);
+        assert_eq!(r.objs, vec![3.0, 2.0, 1.0]);
+        assert!((r.total_s - 0.3).abs() < 1e-12);
+        assert_eq!(r.obj_iters, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn time_stats_aggregates() {
+        let rr = RunResult::new(dummy_spec(), vec![
+            rec(vec![2.0, 1.0], 0.5),
+            rec(vec![2.0, 1.0], 1.5),
+        ]);
+        let t = rr.time_stats();
+        assert!((t.mean() - 2.0).abs() < 1e-12); // (1.0 + 3.0)/2
+        assert_eq!(t.count(), 2);
+        let s = rr.step_stats();
+        assert_eq!(s.count(), 4);
+    }
+
+    #[test]
+    fn rse_checkpoints_shape() {
+        let rr = RunResult::new(dummy_spec(), vec![
+            rec(vec![10.0, 5.0, 2.0, 1.0], 0.1),
+            rec(vec![8.0, 4.0, 2.0, 1.0], 0.1),
+        ]);
+        let cps = rr.rse_checkpoints(&[0.0, 0.5, 1.0]);
+        assert_eq!(cps.len(), 3);
+        // early checkpoint has higher RSE than the final one (which is 0)
+        assert!(cps[0].2 > cps[2].2);
+        assert_eq!(cps[2].2, 0.0);
+    }
+
+    #[test]
+    fn empty_runs_dont_panic() {
+        let rr = RunResult::new(dummy_spec(), vec![]);
+        assert_eq!(rr.time_stats().count(), 0);
+        assert!(rr.rse_checkpoints(&[0.5]).is_empty());
+    }
+
+    #[test]
+    fn summary_contains_label() {
+        let rr = RunResult::new(dummy_spec(), vec![rec(vec![1.0], 0.1)]);
+        assert!(rr.summary().contains("mean_variance_native_d8"));
+    }
+}

@@ -1,0 +1,409 @@
+//! L3 coordination: experiment specs → replicated runs → aggregated,
+//! paper-shaped reports.
+//!
+//! The coordinator owns the PJRT engine (XLA jobs run on its thread — the
+//! PJRT handles are not `Send`; the CPU runtime parallelizes compute
+//! internally) and fans native replications out over a thread pool.
+
+pub mod experiment;
+pub mod metrics;
+pub mod report;
+
+pub use experiment::{ExperimentSpec, SweepSpec};
+pub use metrics::{RepRecord, RunResult};
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::native::{NativeLr, NativeMode, NativeMv, NativeNv};
+use crate::backend::xla::{XlaLr, XlaMv, XlaNv};
+use crate::backend::{LrBackend, MvBackend, NvBackend};
+use crate::config::{BackendKind, TaskKind};
+use crate::opt::{frank_wolfe, sqn};
+use crate::rng::StreamTree;
+use crate::runtime::Engine;
+use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use crate::tasks::NvLmo;
+use crate::util::pool::parallel_map;
+
+/// Path offset for replication subtrees (keeps problem-generation streams
+/// and replication streams disjoint).
+const REP_PATH_BASE: u64 = 1_000;
+
+pub struct Coordinator {
+    artifact_dir: String,
+    pub results_dir: String,
+    engine: Option<Engine>,
+    /// Threads for native replication fan-out.
+    pub native_threads: usize,
+}
+
+impl Coordinator {
+    pub fn new(artifact_dir: &str, results_dir: &str) -> Result<Self> {
+        std::fs::create_dir_all(results_dir).ok();
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Ok(Coordinator {
+            artifact_dir: artifact_dir.to_string(),
+            results_dir: results_dir.to_string(),
+            engine: None,
+            native_threads: threads,
+        })
+    }
+
+    /// Lazily initialize the PJRT engine (only when an XLA job runs).
+    pub fn engine(&mut self) -> Result<&Engine> {
+        if self.engine.is_none() {
+            self.engine = Some(
+                Engine::new(&self.artifact_dir)
+                    .context("initializing PJRT engine")?,
+            );
+        }
+        Ok(self.engine.as_ref().unwrap())
+    }
+
+    /// Run one experiment (task × backend × size × reps).
+    pub fn run(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
+        spec.validate()?;
+        match spec.task {
+            TaskKind::MeanVariance => self.run_mv(spec),
+            TaskKind::Newsvendor => self.run_nv(spec),
+            TaskKind::Classification => self.run_lr(spec),
+        }
+    }
+
+    /// Run a full sweep (the Figure-2 protocol): every size × backend.
+    pub fn sweep(&mut self, sweep: &SweepSpec) -> Result<Vec<RunResult>> {
+        let mut out = Vec::new();
+        for &size in &sweep.sizes {
+            for &backend in &sweep.backends {
+                let spec = sweep.spec_for(size, backend);
+                eprintln!(
+                    "[sweep] {} size={} backend={} reps={}",
+                    spec.task, size, backend, spec.reps
+                );
+                out.push(self.run(&spec)?);
+            }
+        }
+        Ok(out)
+    }
+
+    // -- task runners --------------------------------------------------------
+
+    fn run_mv(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
+        let tree = StreamTree::new(spec.seed);
+        let universe = AssetUniverse::generate(&tree, spec.size);
+        let p = &spec.params;
+        let w0 = vec![1.0f32 / spec.size as f32; spec.size];
+        let reps = spec.reps;
+
+        let records: Vec<RepRecord> = match spec.backend {
+            BackendKind::Xla => {
+                let engine = self.engine()?;
+                let mut backend =
+                    XlaMv::new(engine, &universe, p.samples, p.m_inner)?;
+                (0..reps)
+                    .map(|r| {
+                        let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
+                        let (_, trace) = frank_wolfe::run_mv(
+                            &mut backend, w0.clone(), p.iters, &sub)?;
+                        Ok(RepRecord::from_fw(trace))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            BackendKind::Native | BackendKind::NativePar => {
+                let mode = native_mode(spec.backend, self.native_threads);
+                let results = parallel_map(reps, self.native_threads, |r| {
+                    let mut backend = NativeMv::new(
+                        universe.clone(), p.samples, p.m_inner, mode);
+                    let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
+                    frank_wolfe::run_mv(&mut backend, w0.clone(), p.iters, &sub)
+                        .map(|(_, t)| RepRecord::from_fw(t))
+                });
+                results.into_iter().collect::<Result<_>>()?
+            }
+        };
+        Ok(RunResult::new(spec.clone(), records))
+    }
+
+    fn run_nv(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
+        let tree = StreamTree::new(spec.seed);
+        let inst = NewsvendorInstance::generate(
+            &tree, spec.size, spec.params.resources, spec.params.tightness);
+        let p = &spec.params;
+        let x0 = inst.feasible_start();
+        let reps = spec.reps;
+
+        let records: Vec<RepRecord> = match spec.backend {
+            BackendKind::Xla => {
+                let engine = self.engine()?;
+                let mut backend = XlaNv::new(engine, &inst, p.samples)?;
+                (0..reps)
+                    .map(|r| {
+                        let mut lmo = NvLmo::new(&inst);
+                        let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
+                        let (_, trace) = frank_wolfe::run_nv(
+                            &mut backend, &mut lmo, x0.clone(), p.iters,
+                            p.m_inner, &sub)?;
+                        Ok(RepRecord::from_fw(trace))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            BackendKind::Native | BackendKind::NativePar => {
+                let mode = native_mode(spec.backend, self.native_threads);
+                let results = parallel_map(reps, self.native_threads, |r| {
+                    let mut backend =
+                        NativeNv::new(inst.clone(), p.samples, mode);
+                    let mut lmo = NvLmo::new(&inst);
+                    let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
+                    frank_wolfe::run_nv(&mut backend, &mut lmo, x0.clone(),
+                                        p.iters, p.m_inner, &sub)
+                        .map(|(_, t)| RepRecord::from_fw(t))
+                });
+                results.into_iter().collect::<Result<_>>()?
+            }
+        };
+        Ok(RunResult::new(spec.clone(), records))
+    }
+
+    fn run_lr(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
+        let tree = StreamTree::new(spec.seed);
+        let data = ClassifyData::generate(&tree, spec.size);
+        let p = &spec.params;
+        let cfg = sqn::SqnConfig {
+            iters: p.iters,
+            batch: p.batch,
+            hbatch: p.hbatch,
+            l_every: p.l_every,
+            memory: p.memory,
+            beta: p.beta,
+            track_every: spec.track_every,
+            track_rows: 2048,
+        };
+        let reps = spec.reps;
+
+        let records: Vec<RepRecord> = match spec.backend {
+            BackendKind::Xla => {
+                let engine = self.engine()?;
+                let mut backend = XlaLr::new(engine, &data, p.batch, p.hbatch,
+                                             p.memory, spec.hessian_mode)?;
+                (0..reps)
+                    .map(|r| {
+                        let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
+                        let (_, trace) =
+                            sqn::run_sqn(&mut backend, &data, &cfg, &sub)?;
+                        Ok(RepRecord::from_sqn(trace))
+                    })
+                    .collect::<Result<_>>()?
+            }
+            BackendKind::Native | BackendKind::NativePar => {
+                let mode = native_mode(spec.backend, self.native_threads);
+                let results = parallel_map(reps, self.native_threads, |r| {
+                    let mut backend =
+                        NativeLr::new(&data, mode, spec.hessian_mode);
+                    let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
+                    sqn::run_sqn(&mut backend, &data, &cfg, &sub)
+                        .map(|(_, t)| RepRecord::from_sqn(t))
+                });
+                results.into_iter().collect::<Result<_>>()?
+            }
+        };
+        Ok(RunResult::new(spec.clone(), records))
+    }
+
+    /// Instantiate a boxed backend for one-off use (examples, benches).
+    pub fn make_mv_backend(&mut self, spec: &ExperimentSpec,
+                           universe: &AssetUniverse)
+        -> Result<Box<dyn MvBackend>> {
+        let p = &spec.params;
+        Ok(match spec.backend {
+            BackendKind::Xla => Box::new(XlaMv::new(
+                self.engine()?, universe, p.samples, p.m_inner)?),
+            b => Box::new(NativeMv::new(
+                universe.clone(), p.samples, p.m_inner,
+                native_mode(b, self.native_threads))),
+        })
+    }
+
+    pub fn make_nv_backend(&mut self, spec: &ExperimentSpec,
+                           inst: &NewsvendorInstance)
+        -> Result<Box<dyn NvBackend>> {
+        let p = &spec.params;
+        Ok(match spec.backend {
+            BackendKind::Xla => {
+                Box::new(XlaNv::new(self.engine()?, inst, p.samples)?)
+            }
+            b => Box::new(NativeNv::new(
+                inst.clone(), p.samples, native_mode(b, self.native_threads))),
+        })
+    }
+
+    pub fn make_lr_backend(&mut self, spec: &ExperimentSpec,
+                           data: &ClassifyData) -> Result<Box<dyn LrBackend>> {
+        let p = &spec.params;
+        Ok(match spec.backend {
+            BackendKind::Xla => Box::new(XlaLr::new(
+                self.engine()?, data, p.batch, p.hbatch, p.memory,
+                spec.hessian_mode)?),
+            b => Box::new(NativeLr::with_dim(
+                data.n_features, native_mode(b, self.native_threads),
+                spec.hessian_mode)),
+        })
+    }
+}
+
+fn native_mode(kind: BackendKind, threads: usize) -> NativeMode {
+    match kind {
+        BackendKind::Native => NativeMode::Sequential,
+        BackendKind::NativePar => NativeMode::Parallel { threads },
+        BackendKind::Xla => {
+            // callers dispatch Xla before reaching here
+            unreachable!("native_mode called with Xla")
+        }
+    }
+}
+
+/// Validate that every artifact a spec needs exists before running (fail
+/// fast with an actionable message).
+pub fn check_artifacts(engine: &Engine, spec: &ExperimentSpec) -> Result<()> {
+    if spec.backend != BackendKind::Xla {
+        return Ok(());
+    }
+    let p = &spec.params;
+    let missing: Vec<String> = match spec.task {
+        TaskKind::MeanVariance => {
+            let req = [("d", spec.size as i64), ("n", p.samples as i64),
+                       ("m", p.m_inner as i64)];
+            if engine.manifest.find("mv_epoch", &req).is_none() {
+                vec![format!("mv_epoch d={} n={} m={}", spec.size, p.samples,
+                             p.m_inner)]
+            } else {
+                vec![]
+            }
+        }
+        TaskKind::Newsvendor => {
+            let req = [("d", spec.size as i64), ("s", p.samples as i64)];
+            if engine.manifest.find("nv_grad", &req).is_none() {
+                vec![format!("nv_grad d={} s={}", spec.size, p.samples)]
+            } else {
+                vec![]
+            }
+        }
+        TaskKind::Classification => {
+            let n = spec.size as i64;
+            let mut m = Vec::new();
+            if engine.manifest.find("lr_grad", &[("n", n)]).is_none() {
+                m.push(format!("lr_grad n={}", n));
+            }
+            if engine.manifest.find("lr_hvp", &[("n", n)]).is_none() {
+                m.push(format!("lr_hvp n={}", n));
+            }
+            m
+        }
+    };
+    if !missing.is_empty() {
+        bail!(
+            "missing artifacts: {} — regenerate with \
+             `cd python && python -m compile.aot --out ../artifacts \
+             --{}-dims {}`",
+            missing.join(", "),
+            match spec.task {
+                TaskKind::MeanVariance => "mv",
+                TaskKind::Newsvendor => "nv",
+                TaskKind::Classification => "lr",
+            },
+            spec.size
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HessianMode;
+    use crate::config::TaskParams;
+
+    fn tiny_spec(task: TaskKind) -> ExperimentSpec {
+        let size = match task {
+            TaskKind::MeanVariance => 16,
+            TaskKind::Newsvendor => 16,
+            TaskKind::Classification => 16,
+        };
+        let mut params = TaskParams::defaults(task, size);
+        match task {
+            TaskKind::Classification => {
+                params.iters = 30;
+                params.batch = 16;
+                params.hbatch = 32;
+                params.l_every = 5;
+                params.memory = 3;
+            }
+            _ => {
+                params.iters = 4;
+                params.m_inner = 3;
+                params.samples = 8;
+            }
+        }
+        ExperimentSpec {
+            task,
+            backend: BackendKind::Native,
+            size,
+            reps: 2,
+            seed: 7,
+            hessian_mode: HessianMode::Explicit,
+            track_every: 5,
+            params,
+        }
+    }
+
+    #[test]
+    fn native_mv_run_produces_records() {
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let res = c.run(&tiny_spec(TaskKind::MeanVariance)).unwrap();
+        assert_eq!(res.reps.len(), 2);
+        assert!(res.reps[0].total_s > 0.0);
+        assert_eq!(res.reps[0].objs.len(), 4);
+        // replications with different streams differ
+        assert_ne!(res.reps[0].objs, res.reps[1].objs);
+    }
+
+    #[test]
+    fn native_nv_run_produces_records() {
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let res = c.run(&tiny_spec(TaskKind::Newsvendor)).unwrap();
+        assert_eq!(res.reps.len(), 2);
+        assert!(res.reps[0].objs.iter().all(|o| o.is_finite()));
+    }
+
+    #[test]
+    fn native_lr_run_produces_records() {
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let res = c.run(&tiny_spec(TaskKind::Classification)).unwrap();
+        assert_eq!(res.reps.len(), 2);
+        assert!(!res.reps[0].objs.is_empty());
+    }
+
+    #[test]
+    fn run_is_reproducible() {
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let spec = tiny_spec(TaskKind::MeanVariance);
+        let a = c.run(&spec).unwrap();
+        let b = c.run(&spec).unwrap();
+        assert_eq!(a.reps[0].objs, b.reps[0].objs);
+        assert_eq!(a.reps[1].objs, b.reps[1].objs);
+    }
+
+    #[test]
+    fn invalid_spec_rejected() {
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let mut spec = tiny_spec(TaskKind::MeanVariance);
+        spec.reps = 0;
+        assert!(c.run(&spec).is_err());
+    }
+}

@@ -1,0 +1,305 @@
+//! Paper-shaped report rendering: Figure-2 timing tables (size × backend,
+//! mean ± 2σ, speedup column) and Table-2 RSE tables, as markdown + CSV,
+//! persisted under `results/`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::BackendKind;
+use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::timer::fmt_duration;
+
+use super::metrics::RunResult;
+
+/// Paper Table 2 reference rows (RSE %, ±2σ %), for side-by-side printing.
+pub const PAPER_TABLE2: &[(&str, [(f64, f64); 4])] = &[
+    // (column, [(rse, band) at iters 50, 100, 500, 1000])
+    ("asset5k_gpu", [(85.07, 9.74), (62.41, 5.46), (24.07, 4.97), (13.39, 2.86)]),
+    ("asset5k_cpu", [(83.19, 10.65), (63.71, 4.86), (25.62, 5.87), (12.93, 3.96)]),
+    ("inv10k_gpu", [(89.92, 7.02), (76.25, 8.49), (40.94, 8.11), (20.58, 5.78)]),
+    ("inv10k_cpu", [(88.73, 7.33), (72.93, 9.45), (38.52, 8.53), (23.67, 6.48)]),
+    ("class1k_gpu", [(72.16, 8.44), (51.06, 5.92), (31.29, 4.07), (15.59, 4.00)]),
+    ("class1k_cpu", [(76.25, 7.74), (53.46, 5.10), (29.67, 5.21), (16.77, 3.71)]),
+];
+
+/// Figure-2-shaped timing table: rows = sizes, columns = backends, plus a
+/// speedup column (sequential-native / xla) — the paper's headline ratio.
+pub fn figure2_markdown(results: &[RunResult]) -> String {
+    // group by (size) → backend → result
+    let mut by_size: BTreeMap<usize, BTreeMap<String, &RunResult>> = BTreeMap::new();
+    let mut backends: Vec<String> = Vec::new();
+    for r in results {
+        let b = r.spec.backend.to_string();
+        if !backends.contains(&b) {
+            backends.push(b.clone());
+        }
+        by_size.entry(r.spec.size).or_default().insert(b, r);
+    }
+    let task = results
+        .first()
+        .map(|r| r.spec.task.to_string())
+        .unwrap_or_default();
+    let mut out = format!("### Figure 2 — {} computation time\n\n", task);
+    out.push_str("| size |");
+    for b in &backends {
+        out.push_str(&format!(" {} (mean ±2σ) |", b));
+    }
+    out.push_str(" speedup native/xla |\n|---|");
+    for _ in &backends {
+        out.push_str("---|");
+    }
+    out.push_str("---|\n");
+    for (size, row) in &by_size {
+        out.push_str(&format!("| {} |", size));
+        for b in &backends {
+            match row.get(b) {
+                Some(r) => {
+                    let t = r.time_stats();
+                    out.push_str(&format!(
+                        " {} ±{} |",
+                        fmt_duration(t.mean()),
+                        fmt_duration(2.0 * t.std())
+                    ));
+                }
+                None => out.push_str(" – |"),
+            }
+        }
+        let speed = match (
+            row.get(&BackendKind::Native.to_string()),
+            row.get(&BackendKind::Xla.to_string()),
+        ) {
+            (Some(n), Some(x)) => {
+                let (nm, xm) = (n.time_stats().mean(), x.time_stats().mean());
+                if xm > 0.0 {
+                    format!("{:.2}×", nm / xm)
+                } else {
+                    "–".into()
+                }
+            }
+            _ => "–".into(),
+        };
+        out.push_str(&format!(" {} |\n", speed));
+    }
+    out
+}
+
+/// Table-2-shaped accuracy table: RSE ± 2σ at fractional checkpoints per
+/// backend, with the paper's reference rows appended.
+pub fn table2_markdown(results: &[RunResult], fracs: &[f64]) -> String {
+    let task = results
+        .first()
+        .map(|r| r.spec.task.to_string())
+        .unwrap_or_default();
+    let mut out = format!("### Table 2 — {} RSE by iteration\n\n", task);
+    out.push_str("| checkpoint (frac, iter) |");
+    for r in results {
+        out.push_str(&format!(" {} (d={}) |", r.spec.backend, r.spec.size));
+    }
+    out.push_str("\n|---|");
+    for _ in results {
+        out.push_str("---|");
+    }
+    out.push('\n');
+    if let Some(first) = results.first() {
+        let anchor = first.rse_checkpoints(fracs);
+        for (row, &(frac, it, _, _)) in anchor.iter().enumerate() {
+            out.push_str(&format!("| {:.1}% (it {}) |", frac * 100.0, it));
+            for r in results {
+                let cps = r.rse_checkpoints(fracs);
+                match cps.get(row) {
+                    Some(&(_, _, m, sd)) => out.push_str(&format!(
+                        " {} |",
+                        crate::util::stats::fmt_pm(m, sd)
+                    )),
+                    None => out.push_str(" – |"),
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out.push_str(
+        "\nPaper reference (Table 2, iters 50/100/500/1000 of 10000):\n\n",
+    );
+    out.push_str("| column | it 50 | it 100 | it 500 | it 1000 |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for (name, cells) in PAPER_TABLE2 {
+        out.push_str(&format!("| {} |", name));
+        for (m, band) in cells {
+            out.push_str(&format!(" {:.2}% (±{:.2}%) |", m, band));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// CSV with one row per (size, backend): timing + final objective stats.
+pub fn results_csv(results: &[RunResult]) -> String {
+    let mut out = String::from(
+        "task,backend,size,reps,total_mean_s,total_std_s,step_mean_s,\
+         final_obj_mean,final_obj_std\n",
+    );
+    for r in results {
+        let t = r.time_stats();
+        let st = r.step_stats();
+        let fo = r.final_obj_stats();
+        out.push_str(&format!(
+            "{},{},{},{},{:.9},{:.9},{:.9},{:.9},{:.9}\n",
+            r.spec.task,
+            r.spec.backend,
+            r.spec.size,
+            r.reps.len(),
+            t.mean(),
+            t.std(),
+            st.mean(),
+            fo.mean(),
+            fo.std()
+        ));
+    }
+    out
+}
+
+/// Full per-epoch convergence traces as CSV (for the Figure-2 RSE panels).
+pub fn traces_csv(results: &[RunResult]) -> String {
+    let mut out = String::from("task,backend,size,rep,iter,obj,rse_pct\n");
+    for r in results {
+        for (rep_i, rep) in r.reps.iter().enumerate() {
+            let rse = rep.rse_trace();
+            for (i, (&o, &e)) in rep.objs.iter().zip(&rse).enumerate() {
+                let it = rep.obj_iters.get(i).copied().unwrap_or(i + 1);
+                out.push_str(&format!(
+                    "{},{},{},{},{},{:.9},{:.6}\n",
+                    r.spec.task, r.spec.backend, r.spec.size, rep_i, it, o, e
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// JSON summary (machine-readable results index).
+pub fn results_json(results: &[RunResult]) -> Value {
+    arr(results
+        .iter()
+        .map(|r| {
+            let t = r.time_stats();
+            obj(vec![
+                ("task", s(&r.spec.task.to_string())),
+                ("backend", s(&r.spec.backend.to_string())),
+                ("size", num(r.spec.size as f64)),
+                ("reps", num(r.reps.len() as f64)),
+                ("total_mean_s", num(t.mean())),
+                ("total_std_s", num(t.std())),
+                ("final_obj", num(r.final_obj_stats().mean())),
+            ])
+        })
+        .collect())
+}
+
+/// Persist the full report bundle under `dir`.
+pub fn write_report(dir: impl AsRef<Path>, name: &str, results: &[RunResult],
+                    fracs: &[f64]) -> Result<()> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join(format!("{}_fig2.md", name)),
+              figure2_markdown(results))?;
+    fs::write(dir.join(format!("{}_table2.md", name)),
+              table2_markdown(results, fracs))?;
+    fs::write(dir.join(format!("{}_summary.csv", name)), results_csv(results))?;
+    fs::write(dir.join(format!("{}_traces.csv", name)), traces_csv(results))?;
+    fs::write(
+        dir.join(format!("{}_summary.json", name)),
+        results_json(results).to_string_pretty(),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HessianMode;
+    use crate::config::{TaskKind, TaskParams};
+    use crate::coordinator::{ExperimentSpec, RepRecord};
+
+    fn fake_result(backend: BackendKind, size: usize, step: f64) -> RunResult {
+        let spec = ExperimentSpec {
+            task: TaskKind::MeanVariance,
+            backend,
+            size,
+            reps: 2,
+            seed: 1,
+            hessian_mode: HessianMode::Explicit,
+            track_every: 1,
+            params: TaskParams::defaults(TaskKind::MeanVariance, size),
+        };
+        let rec = |sc: f64| RepRecord {
+            total_s: step * sc * 4.0,
+            objs: vec![4.0, 2.0, 1.5, 1.0],
+            obj_iters: vec![1, 2, 3, 4],
+            step_s: vec![step * sc; 4],
+        };
+        RunResult::new(spec, vec![rec(1.0), rec(1.1)])
+    }
+
+    fn sample_results() -> Vec<RunResult> {
+        vec![
+            fake_result(BackendKind::Native, 128, 0.4),
+            fake_result(BackendKind::Xla, 128, 0.1),
+            fake_result(BackendKind::Native, 512, 4.0),
+            fake_result(BackendKind::Xla, 512, 0.5),
+        ]
+    }
+
+    #[test]
+    fn figure2_table_contains_speedups() {
+        let md = figure2_markdown(&sample_results());
+        assert!(md.contains("| 128 |"));
+        assert!(md.contains("| 512 |"));
+        assert!(md.contains("4.00×")); // 0.4/0.1
+        assert!(md.contains("8.00×")); // 4.0/0.5
+    }
+
+    #[test]
+    fn table2_includes_paper_reference() {
+        let md = table2_markdown(&sample_results()[..2], &[0.25, 1.0]);
+        assert!(md.contains("Paper reference"));
+        assert!(md.contains("asset5k_gpu"));
+        assert!(md.contains("85.07%"));
+    }
+
+    #[test]
+    fn csv_has_row_per_result() {
+        let csv = results_csv(&sample_results());
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.contains("mean_variance,native,128,2,"));
+    }
+
+    #[test]
+    fn traces_csv_covers_all_points() {
+        let csv = traces_csv(&sample_results()[..1]);
+        // header + 2 reps × 4 points
+        assert_eq!(csv.lines().count(), 9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let v = results_json(&sample_results());
+        let text = v.to_string_pretty();
+        let back = crate::util::json::Value::parse(&text).unwrap();
+        assert_eq!(back.as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn write_report_creates_files() {
+        let dir = std::env::temp_dir().join("simopt_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_report(&dir, "t", &sample_results(), &[0.5, 1.0]).unwrap();
+        for suffix in ["t_fig2.md", "t_table2.md", "t_summary.csv",
+                       "t_traces.csv", "t_summary.json"] {
+            assert!(dir.join(suffix).exists(), "{} missing", suffix);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

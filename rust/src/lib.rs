@@ -1,0 +1,57 @@
+//! # simopt — simulation optimization on an AOT-compiled XLA runtime
+//!
+//! Production-shaped reproduction of *"A Preliminary Study on Accelerating
+//! Simulation Optimization with GPU Implementation"* (He, Liu, Wu, Zheng,
+//! Zhu; 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: experiment scheduling,
+//!   replication fan-out, the Frank-Wolfe / stochastic-quasi-Newton drivers,
+//!   the LP solver backing the newsvendor linear subproblem, metrics and
+//!   report generation.  Python never runs here.
+//! * **L2 (python/compile/model.py)** — the paper's compute graphs in JAX,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, validated against a pure-jnp oracle at build time.
+//!
+//! The paper's CPU-vs-GPU axis is reproduced as an execution-model axis
+//! (see DESIGN.md §2): [`backend::native`] executes every algorithm with
+//! sequential scalar loops (the paper's description of CPU execution), while
+//! [`backend::xla`] dispatches the same algorithm to the vectorized,
+//! XLA-fused artifacts through PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use simopt::coordinator::{Coordinator, ExperimentSpec};
+//! use simopt::config::{BackendKind, TaskKind};
+//!
+//! let spec = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Native)
+//!     .size(128)
+//!     .epochs(20)
+//!     .replications(3)
+//!     .seed(7);
+//! let mut coord = Coordinator::new("artifacts", "results").unwrap();
+//! let result = coord.run(&spec).unwrap();
+//! println!("{}", result.summary());
+//! ```
+
+pub mod backend;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod linalg;
+pub mod lp;
+pub mod opt;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tasks;
+pub mod util;
+
+/// Convenience re-exports for the examples and benches.
+pub mod prelude {
+    pub use crate::backend::{LrBackend, MvBackend, NvBackend};
+    pub use crate::config::{BackendKind, TaskKind};
+    pub use crate::coordinator::{Coordinator, ExperimentSpec, RunResult};
+    pub use crate::rng::{Philox, StreamTree};
+}

@@ -1,0 +1,218 @@
+//! Dense row-major matrix and the sequential matvec/matmul kernels used by
+//! the native backend (the paper's "CPU" arm).
+
+use super::vector::dot;
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f32>>) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|v| v.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in &rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// y = A x (sequential, row-by-row).
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+    }
+
+    /// y = Aᵀ x without forming the transpose (accumulate down columns).
+    pub fn matvec_t(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.fill(0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let row = self.row(i);
+            for j in 0..self.cols {
+                y[j] += xi * row[j];
+            }
+        }
+    }
+
+    /// C = A·B (naive triple loop with row-major friendly ordering).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows);
+        let mut c = Mat::zeros(self.rows, b.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let aik = self.get(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                let crow = c.row_mut(i);
+                for j in 0..b.cols {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.get(i, j);
+            }
+        }
+        t
+    }
+
+    /// Column means — R̄ in Algorithm 1's panel.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut m = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for j in 0..self.cols {
+                m[j] += row[j] as f64;
+            }
+        }
+        m.iter().map(|&s| (s / self.rows.max(1) as f64) as f32).collect()
+    }
+
+    /// Subtract `mu` from every row in place — panel centering.
+    pub fn center_rows(&mut self, mu: &[f32]) {
+        assert_eq!(mu.len(), self.cols);
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for j in 0..self.cols {
+                row[j] -= mu[j];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Mat {
+        Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]])
+    }
+
+    #[test]
+    fn constructors() {
+        let m = sample();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert_eq!(m.get(1, 2), 6.0);
+        let e = Mat::eye(3);
+        assert_eq!(e.get(1, 1), 1.0);
+        assert_eq!(e.get(0, 1), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        Mat::from_rows(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let m = sample();
+        let mut y = [0.0f32; 2];
+        m.matvec(&[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, [-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matvec_t_equals_transpose_matvec() {
+        let m = sample();
+        let x = [2.0f32, -3.0];
+        let mut y1 = [0.0f32; 3];
+        m.matvec_t(&x, &mut y1);
+        let t = m.transpose();
+        let mut y2 = [0.0f32; 3];
+        t.matvec(&x, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let m = sample();
+        let e = Mat::eye(3);
+        assert_eq!(m.matmul(&e), m);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(vec![vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = sample();
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn centering_zeroes_means() {
+        let mut m = sample();
+        let mu = m.col_means();
+        assert_eq!(mu, vec![2.5, 3.5, 4.5]);
+        m.center_rows(&mu);
+        for v in m.col_means() {
+            assert!(v.abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear algebra for the native (CPU) backend.
+//!
+//! Two tiers, mirroring the paper's CPU-vs-GPU framing:
+//! * [`vector`] / [`matrix`] — straightforward sequential implementations
+//!   (the "CPU processes each sample individually" arm);
+//! * [`blocked`] — cache-blocked, multi-accumulator versions used by the
+//!   `native_par`/optimized ablation (A3) to separate *CPU parallelism*
+//!   from *vectorized execution* in the speedup attribution.
+
+pub mod blocked;
+pub mod matrix;
+pub mod vector;
+
+pub use matrix::Mat;

@@ -1,0 +1,157 @@
+//! Sequential vector kernels (f32 storage, f64 accumulation where it guards
+//! against catastrophic cancellation at the panel sizes the paper sweeps).
+
+/// Dot product with f64 accumulator.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for i in 0..a.len() {
+        acc += a[i] as f64 * b[i] as f64;
+    }
+    acc as f32
+}
+
+/// y ← y + alpha·x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// y ← alpha·x + beta·y
+#[inline]
+pub fn axpby(alpha: f32, x: &[f32], beta: f32, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] = alpha * x[i] + beta * y[i];
+    }
+}
+
+#[inline]
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+#[inline]
+pub fn add_assign(x: &[f32], y: &mut [f32]) {
+    axpy(1.0, x, y);
+}
+
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+pub fn norm2(a: &[f32]) -> f32 {
+    (dot(a, a) as f64).sqrt() as f32
+}
+
+pub fn linf(a: &[f32]) -> f32 {
+    a.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+pub fn sum(a: &[f32]) -> f32 {
+    a.iter().map(|&v| v as f64).sum::<f64>() as f32
+}
+
+/// Index of the minimum element (first on ties); None for empty input.
+pub fn argmin(a: &[f32]) -> Option<usize> {
+    if a.is_empty() {
+        return None;
+    }
+    let mut best = 0;
+    for i in 1..a.len() {
+        if a[i] < a[best] {
+            best = i;
+        }
+    }
+    Some(best)
+}
+
+/// Max |a-b| — the tolerance check for cross-backend agreement tests.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs()))
+}
+
+/// FW iterate update  w ← w + γ(s − w)  (Algorithm 1 line 10), in place.
+pub fn fw_update(w: &mut [f32], s: &[f32], gamma: f32) {
+    debug_assert_eq!(w.len(), s.len());
+    for i in 0..w.len() {
+        w[i] += gamma * (s[i] - w[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_cancellation_resistant() {
+        // f32-naive summation of [1e8, 1, -1e8] * [1,1,1] loses the 1.
+        let a = [1e8f32, 1.0, -1e8];
+        let b = [1.0f32, 1.0, 1.0];
+        assert_eq!(dot(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn axpy_axpby() {
+        let x = [1.0f32, 2.0];
+        let mut y = [10.0f32, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        axpby(1.0, &x, 0.5, &mut y);
+        assert_eq!(y, [7.0, 14.0]);
+    }
+
+    #[test]
+    fn norms_and_sums() {
+        let v = [3.0f32, -4.0];
+        assert_eq!(norm2(&v), 5.0);
+        assert_eq!(linf(&v), 4.0);
+        assert_eq!(sum(&v), -1.0);
+    }
+
+    #[test]
+    fn argmin_cases() {
+        assert_eq!(argmin(&[3.0, 1.0, 2.0]), Some(1));
+        assert_eq!(argmin(&[1.0, 1.0]), Some(0)); // first on ties
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn fw_update_is_convex_combination() {
+        let mut w = [0.5f32, 0.5];
+        fw_update(&mut w, &[1.0, 0.0], 0.25);
+        assert!((w[0] - 0.625).abs() < 1e-7);
+        assert!((w[1] - 0.375).abs() < 1e-7);
+        // gamma=0 no-op, gamma=1 jumps to s
+        let mut w2 = [0.3f32, 0.7];
+        fw_update(&mut w2, &[1.0, 0.0], 0.0);
+        assert_eq!(w2, [0.3, 0.7]);
+        fw_update(&mut w2, &[1.0, 0.0], 1.0);
+        assert_eq!(w2, [1.0, 0.0]);
+    }
+
+    #[test]
+    fn diff_helpers() {
+        let mut out = [0.0f32; 2];
+        sub(&[3.0, 5.0], &[1.0, 10.0], &mut out);
+        assert_eq!(out, [2.0, -5.0]);
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense linear programming for the Frank-Wolfe linear subproblem of the
+//! constrained newsvendor task (Algorithm 2 line 8):
+//! `min c·x  s.t.  A x <= b, x >= 0`.
+//!
+//! The paper's JAX implementation leans on an off-the-shelf LP routine for
+//! this; offline we build the substrate ourselves: a two-phase primal
+//! simplex on a dense tableau with Bland's anti-cycling rule
+//! ([`simplex::solve`]).
+
+pub mod simplex;
+
+pub use simplex::{is_feasible, solve, LpProblem, LpResult};

@@ -1,0 +1,491 @@
+//! Two-phase primal simplex on a dense tableau.
+//!
+//! Solves  min cᵀx  s.t.  Ax ≤ b, x ≥ 0  (b of any sign).
+//!
+//! * Rows with negative right-hand side are negated (their slack becomes a
+//!   surplus) and receive an artificial variable; phase 1 minimizes the sum
+//!   of artificials to find a basic feasible solution.
+//! * Phase 2 optimizes the real objective from that basis.
+//! * Pivot selection uses Dantzig's rule with a Bland fallback after a pivot
+//!   budget, guaranteeing termination on degenerate instances.
+//!
+//! Internals run in f64 regardless of the caller's precision; the
+//! Frank-Wolfe driver feeds f32 gradients and reads back f32 vertices.
+
+const EPS: f64 = 1e-9;
+
+/// Problem statement: minimize `c·x` subject to `a x ≤ b`, `x ≥ 0`.
+#[derive(Debug, Clone)]
+pub struct LpProblem {
+    pub c: Vec<f64>,
+    /// Row-major m×n constraint matrix.
+    pub a: Vec<f64>,
+    pub b: Vec<f64>,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl LpProblem {
+    pub fn new(c: Vec<f64>, a: Vec<f64>, b: Vec<f64>) -> Self {
+        let n = c.len();
+        let m = b.len();
+        assert_eq!(a.len(), m * n, "A must be m×n row-major");
+        LpProblem { c, a, b, m, n }
+    }
+
+    pub fn from_f32(c: &[f32], a: &[f32], b: &[f32]) -> Self {
+        Self::new(
+            c.iter().map(|&v| v as f64).collect(),
+            a.iter().map(|&v| v as f64).collect(),
+            b.iter().map(|&v| v as f64).collect(),
+        )
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum LpResult {
+    Optimal {
+        x: Vec<f64>,
+        obj: f64,
+        /// Objective-row values at the slack columns at optimality
+        /// (σᵢ ≥ 0); the LP dual prices are yᵢ = −σᵢ.  Used by the
+        /// column-generation LMO to price external columns:
+        /// r_j = c_j + Σᵢ σᵢ aᵢⱼ.
+        duals: Vec<f64>,
+    },
+    Unbounded,
+    Infeasible,
+}
+
+impl LpResult {
+    pub fn x(&self) -> Option<&[f64]> {
+        match self {
+            LpResult::Optimal { x, .. } => Some(x),
+            _ => None,
+        }
+    }
+
+    pub fn duals(&self) -> Option<&[f64]> {
+        match self {
+            LpResult::Optimal { duals, .. } => Some(duals),
+            _ => None,
+        }
+    }
+
+    pub fn obj(&self) -> Option<f64> {
+        match self {
+            LpResult::Optimal { obj, .. } => Some(*obj),
+            _ => None,
+        }
+    }
+}
+
+struct Tableau {
+    /// (m+1) × (cols+1); last row = objective, last col = RHS.
+    t: Vec<f64>,
+    m: usize,
+    cols: usize,
+    basis: Vec<usize>,
+}
+
+impl Tableau {
+    #[inline]
+    fn at(&self, r: usize, c: usize) -> f64 {
+        self.t[r * (self.cols + 1) + c]
+    }
+
+    #[inline]
+    fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.t[r * (self.cols + 1) + c]
+    }
+
+    fn rhs(&self, r: usize) -> f64 {
+        self.at(r, self.cols)
+    }
+
+    fn pivot(&mut self, pr: usize, pc: usize) {
+        let w = self.cols + 1;
+        let piv = self.at(pr, pc);
+        debug_assert!(piv.abs() > EPS);
+        let inv = 1.0 / piv;
+        for c in 0..w {
+            self.t[pr * w + c] *= inv;
+        }
+        for r in 0..=self.m {
+            if r == pr {
+                continue;
+            }
+            let factor = self.at(r, pc);
+            if factor.abs() <= EPS {
+                continue;
+            }
+            for c in 0..w {
+                let v = self.t[pr * w + c];
+                self.t[r * w + c] -= factor * v;
+            }
+        }
+        self.basis[pr] = pc;
+    }
+
+    /// One simplex phase: returns false if unbounded.
+    /// `allowed` restricts entering columns (used to bar artificials in
+    /// phase 2).
+    fn optimize(&mut self, allowed: &dyn Fn(usize) -> bool) -> bool {
+        // Dantzig until the budget, then Bland (guaranteed finite).
+        let budget = 50 * (self.m + self.cols);
+        let mut iters = 0usize;
+        loop {
+            iters += 1;
+            let bland = iters > budget;
+            // entering column: objective row coefficient < -EPS
+            let mut enter: Option<usize> = None;
+            let mut best = -EPS;
+            for c in 0..self.cols {
+                if !allowed(c) {
+                    continue;
+                }
+                let red = self.at(self.m, c);
+                if bland {
+                    if red < -EPS {
+                        enter = Some(c);
+                        break;
+                    }
+                } else if red < best {
+                    best = red;
+                    enter = Some(c);
+                }
+            }
+            let Some(pc) = enter else { return true };
+            // leaving row: min ratio test (Bland tie-break on basis index)
+            let mut leave: Option<usize> = None;
+            let mut best_ratio = f64::INFINITY;
+            for r in 0..self.m {
+                let a = self.at(r, pc);
+                if a > EPS {
+                    let ratio = self.rhs(r) / a;
+                    let better = ratio < best_ratio - EPS
+                        || (ratio < best_ratio + EPS
+                            && leave.map(|l| self.basis[r] < self.basis[l]).unwrap_or(false));
+                    if better {
+                        best_ratio = ratio;
+                        leave = Some(r);
+                    }
+                }
+            }
+            let Some(pr) = leave else { return false };
+            self.pivot(pr, pc);
+        }
+    }
+}
+
+/// Solve the LP.  See module docs for the algorithm.
+pub fn solve(p: &LpProblem) -> LpResult {
+    let (m, n) = (p.m, p.n);
+    if m == 0 {
+        // Only x ≥ 0: bounded iff c ≥ 0, optimum at the origin.
+        return if p.c.iter().all(|&ci| ci >= -EPS) {
+            LpResult::Optimal { x: vec![0.0; n], obj: 0.0, duals: vec![] }
+        } else {
+            LpResult::Unbounded
+        };
+    }
+
+    // Normalize rows to b ≥ 0 and track which need artificials.
+    let mut a = p.a.clone();
+    let mut b = p.b.clone();
+    let mut slack_sign = vec![1.0f64; m];
+    for r in 0..m {
+        if b[r] < 0.0 {
+            b[r] = -b[r];
+            for c in 0..n {
+                a[r * n + c] = -a[r * n + c];
+            }
+            slack_sign[r] = -1.0; // slack col becomes -1 ⇒ artificial needed
+        }
+    }
+    let needs_art: Vec<bool> = slack_sign.iter().map(|&s| s < 0.0).collect();
+    let n_art = needs_art.iter().filter(|&&x| x).count();
+    let cols = n + m + n_art;
+    let w = cols + 1;
+    let mut t = vec![0.0f64; (m + 1) * w];
+
+    // Constraint rows.
+    let mut art_col = n + m;
+    let mut basis = vec![0usize; m];
+    for r in 0..m {
+        for c in 0..n {
+            t[r * w + c] = a[r * n + c];
+        }
+        t[r * w + n + r] = slack_sign[r]; // slack (or surplus)
+        if needs_art[r] {
+            t[r * w + art_col] = 1.0;
+            basis[r] = art_col;
+            art_col += 1;
+        } else {
+            basis[r] = n + r;
+        }
+        t[r * w + cols] = b[r];
+    }
+
+    let mut tab = Tableau { t, m, cols, basis };
+
+    // ---- Phase 1 ----------------------------------------------------------
+    if n_art > 0 {
+        // objective: minimize sum of artificials; price out basic artificials
+        for c in n + m..cols {
+            *tab.at_mut(m, c) = 1.0;
+        }
+        for r in 0..m {
+            if needs_art[r] {
+                let w1 = tab.cols + 1;
+                for c in 0..w1 {
+                    let v = tab.t[r * w1 + c];
+                    tab.t[m * w1 + c] -= v;
+                }
+            }
+        }
+        let bounded = tab.optimize(&|_| true);
+        debug_assert!(bounded, "phase 1 is bounded below by 0");
+        let phase1_obj = -tab.rhs(m);
+        if phase1_obj > 1e-7 {
+            return LpResult::Infeasible;
+        }
+        // Drive any residual artificial out of the basis.
+        for r in 0..m {
+            if tab.basis[r] >= n + m {
+                let mut swapped = false;
+                for c in 0..n + m {
+                    if tab.at(r, c).abs() > EPS {
+                        tab.pivot(r, c);
+                        swapped = true;
+                        break;
+                    }
+                }
+                if !swapped {
+                    // Redundant row: keep the (zero-valued) artificial basic;
+                    // it can never re-enter (barred in phase 2).
+                }
+            }
+        }
+    }
+
+    // ---- Phase 2 ----------------------------------------------------------
+    // Reset objective row to the real costs, then price out basic variables.
+    {
+        let w2 = tab.cols + 1;
+        for c in 0..w2 {
+            tab.t[m * w2 + c] = 0.0;
+        }
+        for c in 0..n {
+            tab.t[m * w2 + c] = p.c[c];
+        }
+        for r in 0..m {
+            let bc = tab.basis[r];
+            let coef = tab.t[m * w2 + bc];
+            if coef.abs() > EPS {
+                for c in 0..w2 {
+                    let v = tab.t[r * w2 + c];
+                    tab.t[m * w2 + c] -= coef * v;
+                }
+            }
+        }
+    }
+    let bounded = tab.optimize(&|c| c < n + m); // artificials barred
+    if !bounded {
+        return LpResult::Unbounded;
+    }
+
+    let mut x = vec![0.0f64; n];
+    for r in 0..m {
+        if tab.basis[r] < n {
+            x[tab.basis[r]] = tab.rhs(r).max(0.0);
+        }
+    }
+    let obj = p.c.iter().zip(&x).map(|(c, v)| c * v).sum();
+    // σᵢ: objective-row entries at the slack columns.  Rows that were
+    // negated for phase 1 flip the slack sign, so un-flip here.
+    let duals = (0..m)
+        .map(|i| tab.at(m, n + i) * slack_sign[i])
+        .collect();
+    LpResult::Optimal { x, obj, duals }
+}
+
+/// Feasibility check used by tests and the FW driver's debug assertions.
+pub fn is_feasible(p: &LpProblem, x: &[f64], tol: f64) -> bool {
+    if x.iter().any(|&v| v < -tol) {
+        return false;
+    }
+    for r in 0..p.m {
+        let lhs: f64 = (0..p.n).map(|c| p.a[r * p.n + c] * x[c]).sum();
+        if lhs > p.b[r] + tol {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(res: &LpResult, want_x: &[f64], want_obj: f64) {
+        match res {
+            LpResult::Optimal { x, obj, .. } => {
+                assert!((obj - want_obj).abs() < 1e-6, "obj {} want {}", obj, want_obj);
+                for (a, b) in x.iter().zip(want_x) {
+                    assert!((a - b).abs() < 1e-6, "x {:?} want {:?}", x, want_x);
+                }
+            }
+            other => panic!("expected optimal, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn textbook_max_problem() {
+        // max 3x + 5y s.t. x ≤ 4, 2y ≤ 12, 3x + 2y ≤ 18  → (2, 6), 36
+        let p = LpProblem::new(
+            vec![-3.0, -5.0],
+            vec![1.0, 0.0, 0.0, 2.0, 3.0, 2.0],
+            vec![4.0, 12.0, 18.0],
+        );
+        assert_opt(&solve(&p), &[2.0, 6.0], -36.0);
+    }
+
+    #[test]
+    fn origin_optimal_when_costs_positive() {
+        let p = LpProblem::new(vec![1.0, 2.0], vec![1.0, 1.0], vec![10.0]);
+        assert_opt(&solve(&p), &[0.0, 0.0], 0.0);
+    }
+
+    #[test]
+    fn unbounded_detected() {
+        // min -x with only y constrained
+        let p = LpProblem::new(vec![-1.0, 0.0], vec![0.0, 1.0], vec![5.0]);
+        assert_eq!(solve(&p), LpResult::Unbounded);
+    }
+
+    #[test]
+    fn unbounded_no_constraints() {
+        let p = LpProblem::new(vec![-1.0], vec![], vec![]);
+        assert_eq!(solve(&p), LpResult::Unbounded);
+        let p2 = LpProblem::new(vec![1.0], vec![], vec![]);
+        assert_opt(&solve(&p2), &[0.0], 0.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        // x ≤ -1 with x ≥ 0 is empty
+        let p = LpProblem::new(vec![1.0], vec![1.0], vec![-1.0]);
+        assert_eq!(solve(&p), LpResult::Infeasible);
+    }
+
+    #[test]
+    fn negative_rhs_feasible_via_phase1() {
+        // -x ≤ -2 ⇔ x ≥ 2; min x → x = 2
+        let p = LpProblem::new(vec![1.0], vec![-1.0], vec![-2.0]);
+        assert_opt(&solve(&p), &[2.0], 2.0);
+    }
+
+    #[test]
+    fn equality_via_pair_of_inequalities() {
+        // x + y ≤ 5 and -(x+y) ≤ -5 ⇒ x + y = 5; min 2x + y → (0,5)
+        let p = LpProblem::new(
+            vec![2.0, 1.0],
+            vec![1.0, 1.0, -1.0, -1.0],
+            vec![5.0, -5.0],
+        );
+        assert_opt(&solve(&p), &[0.0, 5.0], 5.0);
+    }
+
+    #[test]
+    fn degenerate_cycling_guard() {
+        // Classic Beale cycling example (degenerate); Bland fallback must
+        // terminate with the optimum -0.05.
+        let p = LpProblem::new(
+            vec![-0.75, 150.0, -0.02, 6.0],
+            vec![
+                0.25, -60.0, -0.04, 9.0,
+                0.5, -90.0, -0.02, 3.0,
+                0.0, 0.0, 1.0, 0.0,
+            ],
+            vec![0.0, 0.0, 1.0],
+        );
+        match solve(&p) {
+            LpResult::Optimal { obj, .. } => assert!((obj + 0.05).abs() < 1e-6, "obj {}", obj),
+            other => panic!("expected optimal, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn simplex_lmo_shape() {
+        // FW subproblem over a capped simplex: min g·s, s ≥ 0, Σs ≤ 1 —
+        // LP answer must equal the analytic vertex rule.
+        let g = [0.3f64, -2.0, 0.7];
+        let p = LpProblem::new(g.to_vec(), vec![1.0, 1.0, 1.0], vec![1.0]);
+        assert_opt(&solve(&p), &[0.0, 1.0, 0.0], -2.0);
+        // all-positive gradient → origin
+        let p2 = LpProblem::new(vec![0.3, 2.0, 0.7], vec![1.0, 1.0, 1.0], vec![1.0]);
+        assert_opt(&solve(&p2), &[0.0, 0.0, 0.0], 0.0);
+    }
+
+    #[test]
+    fn redundant_constraints_ok() {
+        // Duplicate rows should not confuse the basis bookkeeping.
+        let p = LpProblem::new(
+            vec![-1.0, -1.0],
+            vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.0],
+            vec![4.0, 4.0, 3.0],
+        );
+        match solve(&p) {
+            LpResult::Optimal { obj, x, .. } => {
+                assert!((obj + 4.0).abs() < 1e-6);
+                assert!(is_feasible(&p, &x, 1e-7));
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn solution_always_feasible() {
+        // Random small instances: whatever the optimum, it must be feasible
+        // and no worse than any sampled feasible point.
+        use crate::rng::Philox;
+        let mut rng = Philox::new(17);
+        for case in 0..50 {
+            let n = 2 + (case % 3);
+            let m = 1 + (case % 4);
+            let c: Vec<f64> = (0..n).map(|_| rng.uniform_f32(-2.0, 2.0) as f64).collect();
+            let a: Vec<f64> = (0..m * n).map(|_| rng.uniform_f32(0.1, 1.5) as f64).collect();
+            let b: Vec<f64> = (0..m).map(|_| rng.uniform_f32(0.5, 4.0) as f64).collect();
+            let p = LpProblem::new(c.clone(), a, b);
+            match solve(&p) {
+                LpResult::Optimal { x, obj, .. } => {
+                    assert!(is_feasible(&p, &x, 1e-6), "case {}", case);
+                    // compare against random feasible points (scaled corners)
+                    for trial in 0..20 {
+                        let mut y = vec![0.0f64; n];
+                        for v in y.iter_mut() {
+                            *v = rng.next_f64() * 2.0;
+                        }
+                        // scale into feasibility
+                        let mut worst = 1.0f64;
+                        for r in 0..p.m {
+                            let lhs: f64 = (0..n).map(|j| p.a[r * n + j] * y[j]).sum();
+                            if lhs > p.b[r] {
+                                worst = worst.min(p.b[r] / lhs);
+                            }
+                        }
+                        for v in y.iter_mut() {
+                            *v *= worst;
+                        }
+                        let oy: f64 = c.iter().zip(&y).map(|(ci, yi)| ci * yi).sum();
+                        assert!(obj <= oy + 1e-6, "case {} trial {}: {} > {}", case, trial, obj, oy);
+                    }
+                }
+                // positive technology matrix + positive capacity is always
+                // feasible (origin) and bounded
+                other => panic!("case {}: unexpected {:?}", case, other),
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! The paper's optimization algorithms, backend-generic.
+//!
+//! * [`frank_wolfe`] — Algorithms 1 (simplex LMO, fused epochs) and 2
+//!   (LP LMO, per-iteration gradients);
+//! * [`sqn`] — Algorithm 3 (stochastic quasi-Newton) with Algorithm 4
+//!   Hessian updating delegated to the backend;
+//! * [`schedule`] — the step-size rules.
+
+pub mod frank_wolfe;
+pub mod schedule;
+pub mod sqn;
+
+pub use frank_wolfe::{run_mv, run_nv, FwTrace};
+pub use sqn::{run_sqn, SqnConfig, SqnTrace};

@@ -1,0 +1,54 @@
+//! Step-size schedules (paper Algorithms 1-3).
+
+/// Frank-Wolfe step γ = 2/(kM + m + 2) (Algorithm 1 line 9 / Algorithm 2
+/// line 9): `k` is the epoch, `m` the inner iteration, `m_inner` = M.
+#[inline]
+pub fn fw_gamma(k_epoch: usize, m: usize, m_inner: usize) -> f32 {
+    2.0 / (k_epoch as f32 * m_inner as f32 + m as f32 + 2.0)
+}
+
+/// SQN step α_k = β/k (Algorithm 3 line 7, 1-indexed k).
+#[inline]
+pub fn sqn_alpha(beta: f32, k: usize) -> f32 {
+    debug_assert!(k >= 1);
+    beta / k as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_matches_formula_and_decays() {
+        assert_eq!(fw_gamma(0, 0, 25), 1.0); // 2/(0+0+2)
+        assert!((fw_gamma(1, 0, 25) - 2.0 / 27.0).abs() < 1e-7);
+        assert!((fw_gamma(2, 3, 25) - 2.0 / 55.0).abs() < 1e-7);
+        // strictly decreasing along the flattened iteration index
+        let mut last = f32::INFINITY;
+        for k in 0..4 {
+            for m in 0..25 {
+                let g = fw_gamma(k, m, 25);
+                assert!(g < last);
+                assert!(g > 0.0 && g <= 1.0);
+                last = g;
+            }
+        }
+    }
+
+    #[test]
+    fn gamma_continuous_across_epoch_boundary() {
+        // last step of epoch k and first of epoch k+1 are adjacent in the
+        // global schedule
+        let end = fw_gamma(0, 24, 25); // 2/(24+2)
+        let next = fw_gamma(1, 0, 25); // 2/(25+2)
+        assert!(next < end);
+        assert!((1.0 / next - 1.0 / end - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_is_beta_over_k() {
+        assert_eq!(sqn_alpha(2.0, 1), 2.0);
+        assert_eq!(sqn_alpha(2.0, 4), 0.5);
+        assert!(sqn_alpha(2.0, 100) < sqn_alpha(2.0, 99));
+    }
+}

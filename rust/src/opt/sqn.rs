@@ -1,0 +1,250 @@
+//! Stochastic quasi-Newton driver (paper Algorithm 3, Byrd et al. 2016),
+//! generic over [`LrBackend`].
+//!
+//! The driver owns everything execution-model independent: minibatch index
+//! sampling (shared between arms for CRN), the ω̄ averaging, the correction
+//! memory, and the gradient/Hessian batch gathering.  The backend supplies
+//! the three compute kernels (grad, hvp, H·g).
+
+use anyhow::Result;
+
+use crate::backend::LrBackend;
+use crate::rng::StreamTree;
+use crate::sim::ClassifyData;
+use crate::tasks::CorrectionMemory;
+use crate::util::timer::Timer;
+
+use super::schedule::sqn_alpha;
+
+#[derive(Debug, Clone)]
+pub struct SqnConfig {
+    /// Total iterations K.
+    pub iters: usize,
+    /// Minibatch size b.
+    pub batch: usize,
+    /// Hessian batch size b_H.
+    pub hbatch: usize,
+    /// Correction-pair spacing L.
+    pub l_every: usize,
+    /// Memory size M.
+    pub memory: usize,
+    /// Step scale β (α_k = β/k).
+    pub beta: f32,
+    /// Evaluate the tracked loss every this many iterations (0 = never).
+    pub track_every: usize,
+    /// Rows of the fixed evaluation subset used for the tracked loss.
+    pub track_rows: usize,
+}
+
+impl SqnConfig {
+    pub fn paper_defaults(iters: usize) -> Self {
+        SqnConfig {
+            iters,
+            batch: 50,
+            hbatch: 300,
+            l_every: 10,
+            memory: 25,
+            beta: 2.0,
+            track_every: 10,
+            track_rows: 2048,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SqnTrace {
+    /// (iteration, tracked full-subset loss) checkpoints.
+    pub checkpoints: Vec<(usize, f64)>,
+    /// Minibatch loss per iteration (noisy diagnostic).
+    pub batch_loss: Vec<f64>,
+    /// Wall-clock seconds per iteration (compute only, tracking excluded).
+    pub iter_s: Vec<f64>,
+    /// Number of correction pairs accepted.
+    pub pairs_accepted: usize,
+    /// Number of pairs rejected for curvature.
+    pub pairs_rejected: usize,
+}
+
+impl SqnTrace {
+    pub fn total_s(&self) -> f64 {
+        self.iter_s.iter().sum()
+    }
+
+    /// Checkpoint losses as a plain trace (for RSE computation).
+    pub fn tracked_losses(&self) -> Vec<f64> {
+        self.checkpoints.iter().map(|&(_, l)| l).collect()
+    }
+}
+
+/// Run Algorithm 3.  `tree` is the replication-level stream; minibatch
+/// draws use paths `[1, k]`, Hessian batches `[2, t]`.
+pub fn run_sqn<B: LrBackend + ?Sized>(
+    backend: &mut B,
+    data: &ClassifyData,
+    cfg: &SqnConfig,
+    tree: &StreamTree,
+) -> Result<(Vec<f32>, SqnTrace)> {
+    let n = data.n_features;
+    let mut w = vec![0.0f32; n];
+    let mut trace = SqnTrace::default();
+    let mut mem = CorrectionMemory::new(cfg.memory, n);
+
+    // ω̄ accumulators (Algorithm 3 lines 3, 7, 15)
+    let mut wbar_acc = vec![0.0f32; n];
+    let mut wbar_prev: Option<Vec<f32>> = None;
+    let mut t_count: i64 = -1;
+
+    // Fixed evaluation subset for the tracked loss (identical across arms).
+    let eval_rows: Vec<usize> = {
+        let mut rng = tree.stream(&[0xE7A1]);
+        let rows = cfg.track_rows.min(data.n_samples);
+        rng.sample_indices(data.n_samples, rows)
+    };
+    let mut xe: Vec<f32> = Vec::new();
+    let mut ze: Vec<f32> = Vec::new();
+    data.gather(&eval_rows, &mut xe, &mut ze);
+
+    for k in 1..=cfg.iters {
+        let timer = Timer::start();
+        // -- Algorithm 3 line 5: choose the minibatch S ---------------------
+        // (indices only — each backend owns its gather path: host rows for
+        // native, in-graph take() against the resident dataset for XLA)
+        let mut rng = tree.stream(&[1, k as u64]);
+        let idx = rng.sample_indices(data.n_samples, cfg.batch.min(data.n_samples));
+
+        // -- line 6: stochastic gradient -----------------------------------
+        let (g, loss) = backend.grad(&w, data, &idx)?;
+
+        // -- line 7: ω̄ accumulation + step size ---------------------------
+        for j in 0..n {
+            wbar_acc[j] += w[j];
+        }
+        let alpha = sqn_alpha(cfg.beta, k);
+
+        // -- lines 8-12: gradient or quasi-Newton step ---------------------
+        if k <= 2 * cfg.l_every || mem.is_empty() {
+            for j in 0..n {
+                w[j] -= alpha * g[j];
+            }
+        } else {
+            let d = backend.direction(&mem, &g)?;
+            for j in 0..n {
+                w[j] -= alpha * d[j];
+            }
+        }
+
+        // -- lines 13-21: correction pairs every L iterations --------------
+        if k % cfg.l_every == 0 {
+            t_count += 1;
+            let inv = 1.0 / cfg.l_every as f32;
+            let wbar_t: Vec<f32> = wbar_acc.iter().map(|&v| v * inv).collect();
+            if t_count > 0 {
+                let prev = wbar_prev.as_ref().expect("t>0 ⇒ previous ω̄");
+                let s_t: Vec<f32> =
+                    wbar_t.iter().zip(prev).map(|(a, b)| a - b).collect();
+                // line 17: Hessian subsample S_H
+                let mut hrng = tree.stream(&[2, t_count as u64]);
+                let hidx = hrng.sample_indices(
+                    data.n_samples, cfg.hbatch.min(data.n_samples));
+                // line 18: y_t = ∇²F(ω̄_t) s_t
+                let y_t = backend.hvp(&wbar_t, &s_t, data, &hidx)?;
+                if mem.push(&s_t, &y_t) {
+                    trace.pairs_accepted += 1;
+                } else {
+                    trace.pairs_rejected += 1;
+                }
+            }
+            wbar_prev = Some(wbar_t);
+            wbar_acc.iter_mut().for_each(|v| *v = 0.0);
+        }
+        trace.iter_s.push(timer.elapsed_s());
+        trace.batch_loss.push(loss);
+
+        // -- convergence tracking (outside the timed region) ---------------
+        if cfg.track_every > 0 && (k % cfg.track_every == 0 || k == 1) {
+            let l = crate::tasks::classification::full_loss(&w, &xe, &ze);
+            trace.checkpoints.push((k, l));
+        }
+    }
+    Ok((w, trace))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::{NativeLr, NativeMode};
+    use crate::backend::HessianMode;
+
+    fn small_cfg(iters: usize) -> SqnConfig {
+        SqnConfig {
+            iters,
+            batch: 32,
+            hbatch: 64,
+            l_every: 5,
+            memory: 4,
+            beta: 2.0,
+            track_every: 10,
+            track_rows: 512,
+        }
+    }
+
+    #[test]
+    fn sqn_reduces_loss() {
+        let tree = StreamTree::new(21);
+        let data = ClassifyData::generate(&tree, 24);
+        let mut b = NativeLr::new(&data, NativeMode::Sequential,
+                                  HessianMode::Explicit);
+        let (w, trace) = run_sqn(&mut b, &data, &small_cfg(120), &tree).unwrap();
+        assert_eq!(w.len(), 24);
+        let first = trace.checkpoints.first().unwrap().1;
+        let last = trace.checkpoints.last().unwrap().1;
+        assert!(last < first, "loss {} !< {}", last, first);
+        assert!(last < 0.6, "should beat chance-level BCE, got {}", last);
+        assert!(trace.pairs_accepted > 0);
+    }
+
+    #[test]
+    fn sqn_enters_quasi_newton_phase() {
+        let tree = StreamTree::new(22);
+        let data = ClassifyData::generate(&tree, 16);
+        let mut b = NativeLr::new(&data, NativeMode::Sequential,
+                                  HessianMode::TwoLoop);
+        let cfg = small_cfg(40);
+        let (_, trace) = run_sqn(&mut b, &data, &cfg, &tree).unwrap();
+        // after 2L = 10 iterations pairs start accumulating every L
+        assert!(trace.pairs_accepted + trace.pairs_rejected >= 5);
+        assert_eq!(trace.iter_s.len(), 40);
+        assert_eq!(trace.batch_loss.len(), 40);
+    }
+
+    #[test]
+    fn sqn_deterministic_given_tree() {
+        let tree = StreamTree::new(23);
+        let data = ClassifyData::generate(&tree, 12);
+        let run = || {
+            let mut b = NativeLr::new(&data, NativeMode::Sequential,
+                                      HessianMode::Explicit);
+            run_sqn(&mut b, &data, &small_cfg(30), &tree).unwrap()
+        };
+        let (w1, t1) = run();
+        let (w2, t2) = run();
+        assert_eq!(w1, w2);
+        assert_eq!(t1.batch_loss, t2.batch_loss);
+    }
+
+    #[test]
+    fn explicit_and_twoloop_converge_similarly() {
+        let tree = StreamTree::new(24);
+        let data = ClassifyData::generate(&tree, 16);
+        let cfg = small_cfg(100);
+        let mut be = NativeLr::new(&data, NativeMode::Sequential,
+                                   HessianMode::Explicit);
+        let mut bt = NativeLr::new(&data, NativeMode::Sequential,
+                                   HessianMode::TwoLoop);
+        let (_, te) = run_sqn(&mut be, &data, &cfg, &tree).unwrap();
+        let (_, tt) = run_sqn(&mut bt, &data, &cfg, &tree).unwrap();
+        let le = te.checkpoints.last().unwrap().1;
+        let lt = tt.checkpoints.last().unwrap().1;
+        assert!((le - lt).abs() < 0.05, "explicit {} vs twoloop {}", le, lt);
+    }
+}

@@ -1,0 +1,21 @@
+//! Counter-based random numbers for reproducible, parallel simulation.
+//!
+//! The paper's experiments hinge on common random numbers across the CPU and
+//! GPU arms ("apart from the computation hardware, all other parameters
+//! remain the same").  We reproduce that discipline with:
+//!
+//! * [`Philox`] — Philox4x32-10 (Salmon et al. 2011), the same family JAX's
+//!   threefry belongs to: stateless, counter-indexed, splittable.
+//! * [`normal`] — Box-Muller transform over Philox uniforms.
+//! * [`StreamTree`] — a hierarchical seed derivation
+//!   (experiment → replication → epoch) so every Monte-Carlo panel has an
+//!   independent, reconstructible stream, and the XLA backend receives a
+//!   unique in-graph threefry key per (replication, epoch).
+
+pub mod normal;
+pub mod philox;
+pub mod streams;
+
+pub use normal::NormalSampler;
+pub use philox::Philox;
+pub use streams::StreamTree;

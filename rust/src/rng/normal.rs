@@ -1,0 +1,141 @@
+//! Gaussian sampling over Philox uniforms (Box-Muller, pair-cached).
+//!
+//! Box-Muller rather than ziggurat: branch-free inner math, no tables, and
+//! statistically exact — at the sample counts the paper's tasks use
+//! (25-600 per estimate) generation is never the bottleneck; see
+//! `benches/micro_substrates.rs` for the measured cost.
+
+use super::philox::Philox;
+
+/// Pair-caching standard-normal sampler.
+#[derive(Debug, Clone)]
+pub struct NormalSampler {
+    rng: Philox,
+    spare: Option<f32>,
+}
+
+impl NormalSampler {
+    pub fn new(rng: Philox) -> Self {
+        NormalSampler { rng, spare: None }
+    }
+
+    pub fn from_seed(seed: u64) -> Self {
+        Self::new(Philox::new(seed))
+    }
+
+    /// One standard normal draw.
+    #[inline]
+    pub fn next(&mut self) -> f32 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        // Box-Muller on (0,1] × [0,1) uniforms
+        let u1 = 1.0 - self.rng.next_f32(); // (0, 1]
+        let u2 = self.rng.next_f32();
+        let r = (-2.0 * (u1 as f64).ln()).sqrt() as f32;
+        let theta = 2.0 * std::f32::consts::PI * u2;
+        let (s, c) = theta.sin_cos();
+        self.spare = Some(r * s);
+        r * c
+    }
+
+    /// N(mu, sigma²) draw.
+    #[inline]
+    pub fn normal(&mut self, mu: f32, sigma: f32) -> f32 {
+        mu + sigma * self.next()
+    }
+
+    /// Fill `out` with one row per sample: out[s*d + j] ~ N(mu[j], sigma[j]²).
+    /// This is the CPU-sequential analogue of the in-graph panel sampling the
+    /// XLA artifacts perform.
+    pub fn fill_panel(&mut self, mu: &[f32], sigma: &[f32], samples: usize,
+                      out: &mut [f32]) {
+        let d = mu.len();
+        assert_eq!(sigma.len(), d);
+        assert_eq!(out.len(), samples * d);
+        for s in 0..samples {
+            let row = &mut out[s * d..(s + 1) * d];
+            for j in 0..d {
+                row[j] = self.normal(mu[j], sigma[j]);
+            }
+        }
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Philox {
+        self.spare = None; // interleaving raw draws invalidates the cache
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_standard_normal() {
+        let mut s = NormalSampler::from_seed(11);
+        let n = 200_000;
+        let (mut m1, mut m2, mut m3, mut m4) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for _ in 0..n {
+            let x = s.next() as f64;
+            m1 += x;
+            m2 += x * x;
+            m3 += x * x * x;
+            m4 += x * x * x * x;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.01, "mean {}", m1 / nf);
+        assert!((m2 / nf - 1.0).abs() < 0.02, "var {}", m2 / nf);
+        assert!((m3 / nf).abs() < 0.05, "skew {}", m3 / nf);
+        assert!((m4 / nf - 3.0).abs() < 0.1, "kurtosis {}", m4 / nf);
+    }
+
+    #[test]
+    fn location_scale() {
+        let mut s = NormalSampler::from_seed(3);
+        let n = 50_000;
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for _ in 0..n {
+            let x = s.normal(40.0, 5.0) as f64;
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!((mean - 40.0).abs() < 0.1);
+        assert!((var - 25.0).abs() < 0.6);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = NormalSampler::from_seed(5);
+        let mut b = NormalSampler::from_seed(5);
+        for _ in 0..64 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn panel_shape_and_columns() {
+        let mu = [0.0f32, 100.0];
+        let sigma = [1.0f32, 0.0];
+        let samples = 1000;
+        let mut out = vec![0.0f32; samples * 2];
+        NormalSampler::from_seed(8).fill_panel(&mu, &sigma, samples, &mut out);
+        // sigma=0 column is exactly mu
+        for s in 0..samples {
+            assert_eq!(out[s * 2 + 1], 100.0);
+        }
+        let col0_mean: f32 = (0..samples).map(|s| out[s * 2]).sum::<f32>() / samples as f32;
+        assert!(col0_mean.abs() < 0.15);
+    }
+
+    #[test]
+    fn all_finite() {
+        let mut s = NormalSampler::from_seed(999);
+        for _ in 0..100_000 {
+            assert!(s.next().is_finite());
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Philox4x32-10 counter-based RNG (Salmon, Moraes, Dror, Shaw; SC'11).
+//!
+//! Stateless in the cryptographic sense: output block i is a pure function
+//! of (key, counter=i).  This gives us O(1) jump-ahead, trivially
+//! independent streams per (replication, epoch), and bit-reproducible runs
+//! regardless of threading — the properties the L'Ecuyer et al. (2017) GPU
+//! RNG survey calls out and that JAX's own threefry shares.
+
+const PHILOX_M0: u32 = 0xD251_1F53;
+const PHILOX_M1: u32 = 0xCD9E_8D57;
+const PHILOX_W0: u32 = 0x9E37_79B9;
+const PHILOX_W1: u32 = 0xBB67_AE85;
+const ROUNDS: usize = 10;
+
+/// Iterator-style wrapper around the Philox block function.
+#[derive(Debug, Clone)]
+pub struct Philox {
+    key: [u32; 2],
+    counter: u64,
+    /// Buffered outputs from the current block.
+    buf: [u32; 4],
+    buf_pos: usize,
+}
+
+#[inline]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+/// The raw Philox4x32-10 block function: 4 output words per (key, counter).
+pub fn philox4x32(key: [u32; 2], counter: [u32; 4]) -> [u32; 4] {
+    let mut c = counter;
+    let mut k = key;
+    for _ in 0..ROUNDS {
+        let (hi0, lo0) = mulhilo(PHILOX_M0, c[0]);
+        let (hi1, lo1) = mulhilo(PHILOX_M1, c[2]);
+        c = [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0];
+        k = [k[0].wrapping_add(PHILOX_W0), k[1].wrapping_add(PHILOX_W1)];
+    }
+    c
+}
+
+impl Philox {
+    pub fn new(seed: u64) -> Self {
+        Philox {
+            key: [(seed >> 32) as u32, seed as u32],
+            counter: 0,
+            buf: [0; 4],
+            buf_pos: 4, // force refill
+        }
+    }
+
+    /// Same key, but starting at an arbitrary block — O(1) jump-ahead.
+    pub fn at_block(seed: u64, block: u64) -> Self {
+        let mut p = Self::new(seed);
+        p.counter = block;
+        p
+    }
+
+    pub fn key(&self) -> [u32; 2] {
+        self.key
+    }
+
+    fn refill(&mut self) {
+        let ctr = [self.counter as u32, (self.counter >> 32) as u32, 0, 0];
+        self.buf = philox4x32(self.key, ctr);
+        self.counter = self.counter.wrapping_add(1);
+        self.buf_pos = 0;
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.buf_pos >= 4 {
+            self.refill();
+        }
+        let v = self.buf[self.buf_pos];
+        self.buf_pos += 1;
+        v
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (self.next_u32() as u64) << 32 | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1) with 24 bits of mantissa (f32-grade).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53 bits of mantissa.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.next_f32() * (hi - lo)
+    }
+
+    /// Uniform integer in [0, n) by rejection-free Lemire reduction.
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        ((self.next_u32() as u64 * n as u64) >> 32) as u32
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {} from {}", k, n);
+        // For small k relative to n use a set-based draw; else shuffle.
+        if k * 8 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let i = self.below(n as u32) as usize;
+                if seen.insert(i) {
+                    out.push(i);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below((n - i) as u32) as usize;
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_answer_zero_key_zero_counter() {
+        // Philox4x32-10 with key=0, ctr=0 — reference value from the
+        // Random123 distribution's kat_vectors.
+        let out = philox4x32([0, 0], [0, 0, 0, 0]);
+        assert_eq!(out, [0x6627_e8d5, 0xe169_c58d, 0xbc57_ac4c, 0x9b00_dbd8]);
+    }
+
+    #[test]
+    fn known_answer_ff_key() {
+        // key=ff.., ctr=ff.. from Random123 kat_vectors.
+        let out = philox4x32(
+            [0xffff_ffff, 0xffff_ffff],
+            [0xffff_ffff, 0xffff_ffff, 0xffff_ffff, 0xffff_ffff],
+        );
+        assert_eq!(out, [0x408f_276d, 0x41c8_3b0e, 0xa20b_c7c6, 0x6d54_51fd]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Philox::new(42);
+        let mut b = Philox::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Philox::new(1);
+        let mut b = Philox::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn jump_ahead_matches_sequential() {
+        let mut seq = Philox::new(9);
+        for _ in 0..8 {
+            seq.next_u32(); // consume blocks 0..2 (4 words per block)
+        }
+        let mut jumped = Philox::at_block(9, 2);
+        assert_eq!(seq.next_u32(), jumped.next_u32());
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut p = Philox::new(7);
+        let n = 100_000;
+        let mut sum = 0.0f64;
+        let mut sum2 = 0.0f64;
+        for _ in 0..n {
+            let x = p.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            sum2 += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.01, "mean {}", mean);
+        assert!((var - 1.0 / 12.0).abs() < 0.01, "var {}", var);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut p = Philox::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[p.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "bucket count {}", c);
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut p = Philox::new(5);
+        for (n, k) in [(100, 5), (50, 50), (1000, 100)] {
+            let idx = p.sample_indices(n, k);
+            assert_eq!(idx.len(), k);
+            let set: std::collections::HashSet<_> = idx.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(idx.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot sample")]
+    fn sample_more_than_population_panics() {
+        Philox::new(0).sample_indices(3, 4);
+    }
+}

@@ -1,0 +1,377 @@
+//! PJRT execution engine: compile-once cache + typed, shape-checked calls.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactMeta, Dtype, Manifest};
+
+/// A typed argument to an artifact call.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    U32(&'a [u32]),
+    I32(&'a [i32]),
+    ScalarI32(i32),
+    ScalarF32(f32),
+}
+
+impl<'a> Arg<'a> {
+    fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(_) | Arg::ScalarF32(_) => Dtype::F32,
+            Arg::U32(_) => Dtype::U32,
+            Arg::I32(_) | Arg::ScalarI32(_) => Dtype::I32,
+        }
+    }
+
+    fn elements(&self) -> usize {
+        match self {
+            Arg::F32(v) => v.len(),
+            Arg::U32(v) => v.len(),
+            Arg::I32(v) => v.len(),
+            Arg::ScalarI32(_) | Arg::ScalarF32(_) => 1,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::F32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                bytes_of(v),
+            )?,
+            Arg::U32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U32,
+                shape,
+                bytes_of(v),
+            )?,
+            Arg::I32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                shape,
+                bytes_of(v),
+            )?,
+            Arg::ScalarI32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                shape,
+                &v.to_le_bytes(),
+            )?,
+            Arg::ScalarF32(v) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                shape,
+                &v.to_le_bytes(),
+            )?,
+        };
+        Ok(lit)
+    }
+}
+
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: plain-old-data reinterpretation for f32/u32 slices.
+    unsafe {
+        std::slice::from_raw_parts(
+            v.as_ptr() as *const u8,
+            std::mem::size_of_val(v),
+        )
+    }
+}
+
+/// A device-resident buffer pinned to its source literal (PJRT host→device
+/// transfers are asynchronous; dropping the literal early is a
+/// use-after-free).
+pub struct DeviceBuf {
+    buf: xla::PjRtBuffer,
+    _lit: xla::Literal,
+}
+
+impl DeviceBuf {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// A buffer-or-host argument for the device-resident call path.
+pub enum BufArg<'a> {
+    /// Host data, uploaded for this call.
+    Host(Arg<'a>),
+    /// An existing device buffer (e.g. a prior upload) — no host↔device
+    /// traffic.
+    Dev(&'a DeviceBuf),
+}
+
+/// One compiled artifact, callable with shape-checked arguments.
+pub struct Exec {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+}
+
+impl Exec {
+    fn check_args(&self, n_args: usize) -> Result<()> {
+        if n_args != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                n_args
+            );
+        }
+        Ok(())
+    }
+
+    fn check_host_arg(&self, pos: usize, arg: &Arg) -> Result<()> {
+        let spec = &self.meta.inputs[pos];
+        if arg.dtype() != spec.dtype {
+            bail!(
+                "{}: input '{}' expects {:?}, got {:?}",
+                self.meta.name, spec.name, spec.dtype, arg.dtype()
+            );
+        }
+        if arg.elements() != spec.elements() {
+            bail!(
+                "{}: input '{}' expects {} elements (shape {:?}), got {}",
+                self.meta.name, spec.name, spec.elements(), spec.shape,
+                arg.elements()
+            );
+        }
+        Ok(())
+    }
+
+    /// Upload host data as a device buffer shaped like input `pos` of this
+    /// artifact (for long-lived constants: cost vectors, datasets, ...).
+    ///
+    /// `buffer_from_host_literal` is asynchronous: the source literal must
+    /// stay alive until the transfer completes (the crate exposes no await
+    /// hook).  [`DeviceBuf`] pins the literal for the buffer's lifetime.
+    pub fn upload(&self, pos: usize, arg: Arg) -> Result<DeviceBuf> {
+        self.check_host_arg(pos, &arg)?;
+        let lit = arg.to_literal(&self.meta.inputs[pos].shape)?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceBuf { buf, _lit: lit })
+    }
+
+    fn unpack_outputs(&self, bufs: Vec<Vec<xla::PjRtBuffer>>)
+        -> Result<Vec<xla::Literal>> {
+        let mut first = bufs
+            .into_iter()
+            .next()
+            .context("no device output")?
+            .into_iter()
+            .next()
+            .context("no buffer output")?
+            .to_literal_sync()?;
+        let outs = if self.meta.tuple_output {
+            first.decompose_tuple()?
+        } else {
+            vec![first]
+        };
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+
+    /// Execute with typed host args; returns one `Literal` per output.
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<xla::Literal>> {
+        self.check_args(args.len())?;
+        let mut literals = Vec::with_capacity(args.len());
+        for (pos, arg) in args.iter().enumerate() {
+            self.check_host_arg(pos, arg)?;
+            literals.push(arg.to_literal(&self.meta.inputs[pos].shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        self.unpack_outputs(result)
+    }
+
+    /// Execute with a mix of host args (uploaded per call) and resident
+    /// device buffers; outputs come back to the host.
+    ///
+    /// PJRT execution is asynchronous: the per-call uploads must stay alive
+    /// until the outputs have been materialized (`to_literal_sync` blocks on
+    /// the computation), so `_owned` is dropped only after unpacking.
+    pub fn call_b(&self, args: &[BufArg]) -> Result<Vec<xla::Literal>> {
+        let (result, _owned) = self.execute_mixed(args)?;
+        let outs = self.unpack_outputs(result)?;
+        Ok(outs)
+    }
+
+    /// Raw `execute_b` passthrough (debug/bench instrumentation).
+    pub fn raw_execute_b(&self, bufs: &[&xla::PjRtBuffer])
+        -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute_b::<&xla::PjRtBuffer>(bufs)?)
+    }
+
+    fn execute_mixed(&self, args: &[BufArg])
+        -> Result<(Vec<Vec<xla::PjRtBuffer>>, Vec<DeviceBuf>)> {
+        self.check_args(args.len())?;
+        // Per-call uploads live here — returned to the caller so they
+        // outlive the (asynchronous) computation.
+        let mut owned: Vec<DeviceBuf> = Vec::new();
+        let mut order: Vec<(bool, usize)> = Vec::with_capacity(args.len());
+        for (pos, arg) in args.iter().enumerate() {
+            match arg {
+                BufArg::Host(a) => {
+                    self.check_host_arg(pos, a)?;
+                    let lit = a.to_literal(&self.meta.inputs[pos].shape)?;
+                    let buf = self.client.buffer_from_host_literal(None, &lit)?;
+                    owned.push(DeviceBuf { buf, _lit: lit });
+                    order.push((true, owned.len() - 1));
+                }
+                BufArg::Dev(_) => order.push((false, pos)),
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = order
+            .iter()
+            .map(|&(is_owned, i)| {
+                if is_owned {
+                    &owned[i].buf
+                } else {
+                    match args[i] {
+                        BufArg::Dev(b) => b.buffer(),
+                        _ => unreachable!(),
+                    }
+                }
+            })
+            .collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        drop(refs);
+        Ok((result, owned))
+    }
+
+    /// Convenience: call and convert every output to `Vec<f32>`.
+    pub fn call_f32(&self, args: &[Arg]) -> Result<Vec<Vec<f32>>> {
+        self.call(args)?
+            .iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// Literal → Vec<f32> helper.
+pub fn f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Literal → f32 scalar helper.
+pub fn f32_scalar(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Compile-once artifact engine over a PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Load (compile-once) an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(Rc::clone(e));
+        }
+        let meta = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("artifact '{}' not in manifest", name))?
+            .clone();
+        let path = self.manifest.hlo_path(&meta);
+        let path_str = path
+            .to_str()
+            .context("artifact path is not valid UTF-8")?;
+        anyhow::ensure!(
+            path.exists(),
+            "artifact file {} missing — re-run `make artifacts`",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let exec = Rc::new(Exec { meta, exe, client: self.client.clone() });
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), Rc::clone(&exec));
+        Ok(exec)
+    }
+
+    /// Load by (entry, param requirements), e.g. `("mv_epoch", &[("d", 128)])`.
+    pub fn load_by_params(&self, entry: &str, reqs: &[(&str, i64)])
+        -> Result<Rc<Exec>> {
+        let meta = self.manifest.find(entry, reqs).with_context(|| {
+            format!(
+                "no artifact for entry '{}' with params {:?}; available: {:?} — \
+                 re-run `make artifacts` (or aot.py with --mv-dims/--nv-dims/--lr-dims)",
+                entry,
+                reqs,
+                self.manifest
+                    .artifacts
+                    .iter()
+                    .filter(|a| a.entry == entry)
+                    .map(|a| &a.name)
+                    .collect::<Vec<_>>()
+            )
+        })?;
+        let name = meta.name.clone();
+        self.load(&name)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// No `Send`/`Sync`: the underlying PJRT handles are raw pointers.  The
+// coordinator schedules all XLA jobs on the thread owning the Engine; the
+// CPU PJRT runtime itself multithreads the compute internally.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_shapes_and_dtypes() {
+        let v = [1.0f32, 2.0];
+        let a = Arg::F32(&v);
+        assert_eq!(a.dtype(), Dtype::F32);
+        assert_eq!(a.elements(), 2);
+        assert_eq!(Arg::ScalarI32(5).elements(), 1);
+        assert_eq!(Arg::ScalarI32(5).dtype(), Dtype::I32);
+        let k = [1u32, 2];
+        assert_eq!(Arg::U32(&k).dtype(), Dtype::U32);
+    }
+
+    #[test]
+    fn bytes_of_roundtrip() {
+        let v = [1.0f32, -2.5];
+        let b = bytes_of(&v);
+        assert_eq!(b.len(), 8);
+        assert_eq!(f32::from_le_bytes(b[0..4].try_into().unwrap()), 1.0);
+        assert_eq!(f32::from_le_bytes(b[4..8].try_into().unwrap()), -2.5);
+    }
+
+    // Engine-level integration tests live in rust/tests/integration_runtime.rs
+    // (they need the artifacts directory and a PJRT client).
+}

@@ -1,0 +1,269 @@
+//! `artifacts/manifest.json` schema: the typed contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "u32" => Dtype::U32,
+            other => bail!("unsupported dtype '{}' in manifest", other),
+        })
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        4
+    }
+}
+
+/// One input or output tensor signature.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1) // scalar () → 1
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(Value::as_str)
+            .context("io entry missing 'name'")?
+            .to_string();
+        let shape = v
+            .get("shape")
+            .and_then(Value::as_arr)
+            .context("io entry missing 'shape'")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim must be a nonneg int"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            v.get("dtype").and_then(Value::as_str).context("io missing dtype")?,
+        )?;
+        Ok(IoSpec { name, shape, dtype })
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub entry: String,
+    pub task: String,
+    pub file: String,
+    pub params: BTreeMap<String, i64>,
+    /// Whether the program returns a result tuple (aot.py default) or a
+    /// bare single output (device-resident chaining, see runtime docs).
+    pub tuple_output: bool,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let get_str = |k: &str| -> Result<String> {
+            Ok(v.get(k)
+                .and_then(Value::as_str)
+                .with_context(|| format!("artifact missing '{}'", k))?
+                .to_string())
+        };
+        let mut params = BTreeMap::new();
+        if let Some(p) = v.get("params").and_then(Value::as_obj) {
+            for (k, pv) in p {
+                params.insert(
+                    k.clone(),
+                    pv.as_i64().with_context(|| format!("param '{}' not an int", k))?,
+                );
+            }
+        }
+        let ios = |k: &str| -> Result<Vec<IoSpec>> {
+            v.get(k)
+                .and_then(Value::as_arr)
+                .with_context(|| format!("artifact missing '{}'", k))?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            name: get_str("name")?,
+            entry: get_str("entry")?,
+            task: get_str("task")?,
+            file: get_str("file")?,
+            params,
+            tuple_output: v
+                .get("tuple_output")
+                .and_then(Value::as_bool)
+                .unwrap_or(true),
+            inputs: ios("inputs")?,
+            outputs: ios("outputs")?,
+        })
+    }
+
+    /// Does this artifact match every (key, value) requirement?
+    pub fn matches(&self, entry: &str, reqs: &[(&str, i64)]) -> bool {
+        self.entry == entry
+            && reqs.iter().all(|(k, v)| self.params.get(*k) == Some(v))
+    }
+}
+
+/// The parsed manifest + artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let root = Value::parse(text).context("manifest.json is not valid JSON")?;
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Value::as_arr)
+            .context("manifest missing 'artifacts' array")?
+            .iter()
+            .map(ArtifactMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// First artifact matching `entry` + param requirements.
+    pub fn find(&self, entry: &str, reqs: &[(&str, i64)]) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.matches(entry, reqs))
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// All values of integer parameter `key` available for `entry`, sorted —
+    /// how the sweep CLI discovers which sizes were AOT-compiled.
+    pub fn available_params(&self, entry: &str, key: &str) -> Vec<i64> {
+        let mut out: Vec<i64> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == entry)
+            .filter_map(|a| a.params.get(key).copied())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "mv_epoch_d128_n64_m25", "entry": "mv_epoch",
+         "task": "mean_variance", "file": "mv_epoch_d128_n64_m25.hlo.txt",
+         "params": {"d": 128, "n": 64, "m": 25},
+         "inputs": [
+           {"name": "w", "shape": [128], "dtype": "f32"},
+           {"name": "key", "shape": [2], "dtype": "u32"},
+           {"name": "k_epoch", "shape": [], "dtype": "i32"}],
+         "outputs": [
+           {"name": "w_out", "shape": [128], "dtype": "f32"},
+           {"name": "obj", "shape": [], "dtype": "f32"}]},
+        {"name": "mv_epoch_d512_n64_m25", "entry": "mv_epoch",
+         "task": "mean_variance", "file": "mv_epoch_d512_n64_m25.hlo.txt",
+         "params": {"d": 512, "n": 64, "m": 25},
+         "inputs": [], "outputs": []}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts[0];
+        assert_eq!(a.entry, "mv_epoch");
+        assert_eq!(a.params["d"], 128);
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![128]);
+        assert_eq!(a.inputs[1].dtype, Dtype::U32);
+        assert_eq!(a.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(a.inputs[2].elements(), 1);
+    }
+
+    #[test]
+    fn find_by_params() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert!(m.find("mv_epoch", &[("d", 128)]).is_some());
+        assert!(m.find("mv_epoch", &[("d", 512), ("n", 64)]).is_some());
+        assert!(m.find("mv_epoch", &[("d", 999)]).is_none());
+        assert!(m.find("nv_grad", &[]).is_none());
+    }
+
+    #[test]
+    fn available_params_sorted() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.available_params("mv_epoch", "d"), vec![128, 512]);
+        assert!(m.available_params("nv_grad", "d").is_empty());
+    }
+
+    #[test]
+    fn hlo_path_joins_dir() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a/b")).unwrap();
+        let p = m.hlo_path(&m.artifacts[0]);
+        assert_eq!(p, PathBuf::from("/a/b/mv_epoch_d128_n64_m25.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+        let bad_dtype = r#"{"artifacts":[{"name":"x","entry":"e","task":"t",
+            "file":"f","params":{},
+            "inputs":[{"name":"a","shape":[1],"dtype":"f64"}],
+            "outputs":[]}]}"#;
+        assert!(Manifest::parse(bad_dtype, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercised against the actual artifacts when they exist (CI runs
+        // `make artifacts` first).
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(!m.artifacts.is_empty());
+            assert!(!m.available_params("mv_epoch", "d").is_empty());
+        }
+    }
+}

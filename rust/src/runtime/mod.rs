@@ -1,0 +1,19 @@
+//! The AOT bridge: load `artifacts/*.hlo.txt` produced by
+//! `python/compile/aot.py`, compile them on the PJRT CPU client, and expose
+//! typed, shape-checked execution to the backends.
+//!
+//! Interchange is HLO **text** (see DESIGN.md §6): jax ≥ 0.5 serializes
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids.
+//!
+//! ```no_run
+//! use simopt::runtime::{Engine, Arg};
+//! let engine = Engine::new("artifacts").unwrap();
+//! let exec = engine.load_by_params("mv_epoch", &[("d", 128)]).unwrap();
+//! ```
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::{Arg, BufArg, DeviceBuf, Engine, Exec};
+pub use manifest::{ArtifactMeta, Dtype, IoSpec, Manifest};

@@ -1,0 +1,163 @@
+//! Synthetic binary-classification dataset for Task 3 (paper §4.1, after
+//! Mukherjee et al. 2013 and Byrd et al. 2016): N = 30n samples of n binary
+//! features; labels from a random linear rule with 10% label noise.
+
+use crate::rng::StreamTree;
+
+#[derive(Debug, Clone)]
+pub struct ClassifyData {
+    /// Row-major N×n design matrix (binary features stored as f32 0/1).
+    pub x: Vec<f32>,
+    /// Labels in {0, 1}.
+    pub z: Vec<f32>,
+    pub n_features: usize,
+    pub n_samples: usize,
+    /// The generating hyperplane (for diagnostics only — the optimizer never
+    /// sees it).
+    pub w_true: Vec<f32>,
+}
+
+impl ClassifyData {
+    /// Paper construction: `n_samples = 30 * n_features`, features ~
+    /// Bernoulli(0.5), labels `1{x·w_true > 0}` flipped with prob. 10%.
+    pub fn generate(tree: &StreamTree, n_features: usize) -> Self {
+        Self::generate_with(tree, n_features, 30 * n_features, 0.10)
+    }
+
+    pub fn generate_with(tree: &StreamTree, n_features: usize,
+                         n_samples: usize, noise: f32) -> Self {
+        let mut rng = tree.stream(&[0xC1A55]);
+        let mut norm = tree.normal(&[0xC1A55, 1]);
+        let w_true: Vec<f32> = (0..n_features).map(|_| norm.next()).collect();
+        // E[x·w] over Bernoulli(0.5) features is Σw/2; center the threshold
+        // so classes stay balanced.
+        let threshold: f32 = w_true.iter().sum::<f32>() * 0.5;
+        let mut x = vec![0.0f32; n_samples * n_features];
+        let mut z = vec![0.0f32; n_samples];
+        for i in 0..n_samples {
+            let row = &mut x[i * n_features..(i + 1) * n_features];
+            let mut score = 0.0f32;
+            for (j, cell) in row.iter_mut().enumerate() {
+                let bit = (rng.next_u32() & 1) as f32;
+                *cell = bit;
+                score += bit * w_true[j];
+            }
+            let mut label = if score > threshold { 1.0 } else { 0.0 };
+            if rng.next_f32() < noise {
+                label = 1.0 - label;
+            }
+            z[i] = label;
+        }
+        ClassifyData { x, z, n_features, n_samples, w_true }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Gather rows `idx` into a dense (|idx| × n) minibatch buffer — the
+    /// shared data path both backends consume (CRN-pairable).
+    pub fn gather(&self, idx: &[usize], xb: &mut Vec<f32>, zb: &mut Vec<f32>) {
+        xb.clear();
+        zb.clear();
+        xb.reserve(idx.len() * self.n_features);
+        zb.reserve(idx.len());
+        for &i in idx {
+            xb.extend_from_slice(self.row(i));
+            zb.push(self.z[i]);
+        }
+    }
+
+    /// Fraction of positive labels (class balance diagnostic).
+    pub fn positive_rate(&self) -> f64 {
+        self.z.iter().map(|&v| v as f64).sum::<f64>() / self.n_samples as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_follow_paper_convention() {
+        let d = ClassifyData::generate(&StreamTree::new(1), 50);
+        assert_eq!(d.n_features, 50);
+        assert_eq!(d.n_samples, 1500);
+        assert_eq!(d.x.len(), 1500 * 50);
+        assert_eq!(d.z.len(), 1500);
+    }
+
+    #[test]
+    fn features_are_binary() {
+        let d = ClassifyData::generate(&StreamTree::new(2), 16);
+        assert!(d.x.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert!(d.z.iter().all(|&v| v == 0.0 || v == 1.0));
+        // features roughly balanced
+        let ones: f64 = d.x.iter().map(|&v| v as f64).sum();
+        let frac = ones / d.x.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "feature rate {}", frac);
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        let d = ClassifyData::generate(&StreamTree::new(3), 64);
+        let p = d.positive_rate();
+        assert!((0.3..0.7).contains(&p), "positive rate {}", p);
+    }
+
+    #[test]
+    fn noise_rate_close_to_requested() {
+        // With zero noise, labels are exactly the linear rule.
+        let d0 = ClassifyData::generate_with(&StreamTree::new(4), 32, 2000, 0.0);
+        let threshold: f32 = d0.w_true.iter().sum::<f32>() * 0.5;
+        let mismatches = (0..d0.n_samples)
+            .filter(|&i| {
+                let score: f32 = d0
+                    .row(i)
+                    .iter()
+                    .zip(&d0.w_true)
+                    .map(|(x, w)| x * w)
+                    .sum();
+                let want = if score > threshold { 1.0 } else { 0.0 };
+                d0.z[i] != want
+            })
+            .count();
+        assert_eq!(mismatches, 0);
+        // With 10% noise the mismatch rate is near 10%.
+        let d1 = ClassifyData::generate_with(&StreamTree::new(4), 32, 2000, 0.10);
+        let mism = (0..d1.n_samples)
+            .filter(|&i| {
+                let score: f32 = d1
+                    .row(i)
+                    .iter()
+                    .zip(&d1.w_true)
+                    .map(|(x, w)| x * w)
+                    .sum();
+                let want = if score > threshold { 1.0 } else { 0.0 };
+                d1.z[i] != want
+            })
+            .count() as f64
+            / d1.n_samples as f64;
+        assert!((mism - 0.10).abs() < 0.03, "noise rate {}", mism);
+    }
+
+    #[test]
+    fn gather_minibatch() {
+        let d = ClassifyData::generate(&StreamTree::new(5), 8);
+        let mut xb = Vec::new();
+        let mut zb = Vec::new();
+        d.gather(&[0, 5, 2], &mut xb, &mut zb);
+        assert_eq!(xb.len(), 3 * 8);
+        assert_eq!(zb, vec![d.z[0], d.z[5], d.z[2]]);
+        assert_eq!(&xb[8..16], d.row(5));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ClassifyData::generate(&StreamTree::new(6), 16);
+        let b = ClassifyData::generate(&StreamTree::new(6), 16);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.z, b.z);
+    }
+}

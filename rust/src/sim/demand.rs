@@ -1,0 +1,236 @@
+//! Multi-product newsvendor instance generator for Task 2 (paper §3.2/§4.1).
+//!
+//! Demands: independent N(μⱼ, σⱼ²), μⱼ ~ U(20,50), σⱼ ~ U(10,20) (paper).
+//! Cost structure (paper leaves it unspecified; Niederhoff 2007 economics):
+//! unit cost kⱼ, holding hⱼ, selling value vⱼ with vⱼ > kⱼ so products are
+//! profitable and the critical fractile (vⱼ−kⱼ)/(vⱼ+hⱼ) sits in (0,1).
+//! Resources: an M×N technology matrix with positive requirements and
+//! capacities set to a fraction of the unconstrained optimum's usage so the
+//! budget constraints genuinely bind (otherwise the LP LMO is trivial).
+
+use crate::linalg::Mat;
+use crate::rng::{NormalSampler, StreamTree};
+
+#[derive(Debug, Clone)]
+pub struct NewsvendorInstance {
+    pub mu: Vec<f32>,
+    pub sigma: Vec<f32>,
+    /// Unit procurement cost kⱼ.
+    pub k: Vec<f32>,
+    /// Unit holding cost hⱼ.
+    pub h: Vec<f32>,
+    /// Unit selling value vⱼ (lost-sales penalty).
+    pub v: Vec<f32>,
+    /// M×N technology matrix (resource i usage per unit of product j).
+    pub a: Mat,
+    /// Capacity per resource.
+    pub cap: Vec<f32>,
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation, |ε|<1.15e-9)
+/// — used for the critical-fractile reference solution.
+pub fn norm_ppf(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0, "p in (0,1)");
+    const A: [f64; 6] = [-3.969683028665376e+01, 2.209460984245205e+02,
+        -2.759285104469687e+02, 1.383577518672690e+02,
+        -3.066479806614716e+01, 2.506628277459239e+00];
+    const B: [f64; 5] = [-5.447609879822406e+01, 1.615858368580409e+02,
+        -1.556989798598866e+02, 6.680131188771972e+01,
+        -1.328068155288572e+01];
+    const C: [f64; 6] = [-7.784894002430293e-03, -3.223964580411365e-01,
+        -2.400758277161838e+00, -2.549732539343734e+00,
+        4.374664141464968e+00, 2.938163982698783e+00];
+    const D: [f64; 4] = [7.784695709041462e-03, 3.224671290700398e-01,
+        2.445134137142996e+00, 3.754408661907416e+00];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+impl NewsvendorInstance {
+    /// Generate an instance with `d` products and `m_resources` constraints.
+    /// `tightness` ∈ (0,1]: capacity as a fraction of the unconstrained
+    /// optimum's resource usage (lower = more binding).
+    pub fn generate(tree: &StreamTree, d: usize, m_resources: usize,
+                    tightness: f32) -> Self {
+        let mut rng = tree.stream(&[0xDE3A2D]);
+        let mu: Vec<f32> = (0..d).map(|_| rng.uniform_f32(20.0, 50.0)).collect();
+        let sigma: Vec<f32> = (0..d).map(|_| rng.uniform_f32(10.0, 20.0)).collect();
+        let k: Vec<f32> = (0..d).map(|_| rng.uniform_f32(1.0, 3.0)).collect();
+        let h: Vec<f32> = (0..d).map(|_| rng.uniform_f32(0.1, 0.5)).collect();
+        // v > k: margin above cost
+        let v: Vec<f32> = k.iter().map(|&kj| kj + rng.uniform_f32(1.0, 5.0)).collect();
+        let mut a = Mat::zeros(m_resources, d);
+        for i in 0..m_resources {
+            for j in 0..d {
+                a.set(i, j, rng.uniform_f32(0.2, 1.2));
+            }
+        }
+        // capacity from the unconstrained fractile solution
+        let x_star = Self::fractile_solution(&mu, &sigma, &k, &h, &v);
+        let mut cap = vec![0.0f32; m_resources];
+        for i in 0..m_resources {
+            let usage: f64 = (0..d)
+                .map(|j| a.get(i, j) as f64 * x_star[j] as f64)
+                .sum();
+            cap[i] = (usage as f32) * tightness;
+        }
+        NewsvendorInstance { mu, sigma, k, h, v, a, cap }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mu.len()
+    }
+
+    pub fn resources(&self) -> usize {
+        self.cap.len()
+    }
+
+    /// The unconstrained optimum: xⱼ* = μⱼ + σⱼ·Φ⁻¹((vⱼ−kⱼ)/(vⱼ+hⱼ))
+    /// (critical fractile of eq. (8) set to zero).
+    pub fn fractile_solution(mu: &[f32], sigma: &[f32], k: &[f32], h: &[f32],
+                             v: &[f32]) -> Vec<f32> {
+        mu.iter()
+            .zip(sigma)
+            .zip(k.iter().zip(h.iter().zip(v)))
+            .map(|((&m, &s), (&kj, (&hj, &vj)))| {
+                let frac = ((vj - kj) / (vj + hj)) as f64;
+                let frac = frac.clamp(1e-6, 1.0 - 1e-6);
+                (m as f64 + s as f64 * norm_ppf(frac)).max(0.0) as f32
+            })
+            .collect()
+    }
+
+    pub fn unconstrained_optimum(&self) -> Vec<f32> {
+        Self::fractile_solution(&self.mu, &self.sigma, &self.k, &self.h, &self.v)
+    }
+
+    /// Sample an (s × d) demand panel row-major into `out`.
+    pub fn sample_panel(&self, sampler: &mut NormalSampler, s: usize,
+                        out: &mut [f32]) {
+        sampler.fill_panel(&self.mu, &self.sigma, s, out);
+    }
+
+    /// A feasible starting point: the origin scaled toward the fractile
+    /// solution until every resource constraint holds.
+    pub fn feasible_start(&self) -> Vec<f32> {
+        let mut x = self.unconstrained_optimum();
+        let mut shrink = 1.0f32;
+        for i in 0..self.resources() {
+            let usage: f32 = (0..self.dim())
+                .map(|j| self.a.get(i, j) * x[j])
+                .sum();
+            if usage > self.cap[i] && usage > 0.0 {
+                shrink = shrink.min(self.cap[i] / usage);
+            }
+        }
+        let shrink = shrink * 0.9; // strictly interior
+        for v in x.iter_mut() {
+            *v *= shrink;
+        }
+        x
+    }
+
+    /// Check Ax ≤ cap, x ≥ 0 within `tol`.
+    pub fn is_feasible(&self, x: &[f32], tol: f32) -> bool {
+        if x.iter().any(|&v| v < -tol) {
+            return false;
+        }
+        for i in 0..self.resources() {
+            let usage: f32 = (0..self.dim())
+                .map(|j| self.a.get(i, j) * x[j])
+                .sum();
+            if usage > self.cap[i] + tol {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_ppf_known_values() {
+        assert!((norm_ppf(0.5)).abs() < 1e-9);
+        assert!((norm_ppf(0.975) - 1.959964).abs() < 1e-5);
+        assert!((norm_ppf(0.025) + 1.959964).abs() < 1e-5);
+        assert!((norm_ppf(0.841344746) - 1.0).abs() < 1e-6);
+        // tails
+        assert!((norm_ppf(1e-6) + 4.753424).abs() < 1e-4);
+    }
+
+    #[test]
+    fn generate_ranges_and_determinism() {
+        let t = StreamTree::new(5);
+        let inst = NewsvendorInstance::generate(&t, 100, 4, 0.6);
+        assert_eq!(inst.dim(), 100);
+        assert_eq!(inst.resources(), 4);
+        assert!(inst.mu.iter().all(|&m| (20.0..=50.0).contains(&m)));
+        assert!(inst.sigma.iter().all(|&s| (10.0..=20.0).contains(&s)));
+        assert!(inst.v.iter().zip(&inst.k).all(|(&vj, &kj)| vj > kj));
+        let inst2 = NewsvendorInstance::generate(&t, 100, 4, 0.6);
+        assert_eq!(inst.mu, inst2.mu);
+        assert_eq!(inst.cap, inst2.cap);
+    }
+
+    #[test]
+    fn fractile_is_stationary_point() {
+        // At x*, k - v + (h+v)Φ(x*) = 0 by construction.
+        let inst = NewsvendorInstance::generate(&StreamTree::new(7), 16, 2, 0.6);
+        let x = inst.unconstrained_optimum();
+        for j in 0..16 {
+            let zq = (x[j] - inst.mu[j]) / inst.sigma[j];
+            let phi = 0.5 * (1.0 + erf_approx(zq as f64 / std::f64::consts::SQRT_2));
+            let grad = inst.k[j] as f64 - inst.v[j] as f64
+                + (inst.h[j] as f64 + inst.v[j] as f64) * phi;
+            assert!(grad.abs() < 1e-3, "j={} grad={}", j, grad);
+        }
+    }
+
+    fn erf_approx(x: f64) -> f64 {
+        // Abramowitz-Stegun 7.1.26
+        let s = if x < 0.0 { -1.0 } else { 1.0 };
+        let x = x.abs();
+        let t = 1.0 / (1.0 + 0.3275911 * x);
+        let y = 1.0 - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741)
+            * t - 0.284496736) * t + 0.254829592) * t * (-x * x).exp();
+        s * y
+    }
+
+    #[test]
+    fn capacity_binds() {
+        let inst = NewsvendorInstance::generate(&StreamTree::new(3), 32, 3, 0.6);
+        // the unconstrained optimum must violate at least one constraint
+        assert!(!inst.is_feasible(&inst.unconstrained_optimum(), 1e-4));
+        // and the feasible start must satisfy all
+        assert!(inst.is_feasible(&inst.feasible_start(), 1e-4));
+    }
+
+    #[test]
+    fn panel_mean_matches_mu() {
+        let inst = NewsvendorInstance::generate(&StreamTree::new(11), 8, 2, 0.6);
+        let mut s = StreamTree::new(11).normal(&[2]);
+        let n = 4000;
+        let mut panel = vec![0.0f32; n * 8];
+        inst.sample_panel(&mut s, n, &mut panel);
+        for j in 0..8 {
+            let m: f64 = (0..n).map(|i| panel[i * 8 + j] as f64).sum::<f64>() / n as f64;
+            assert!((m - inst.mu[j] as f64).abs() < 1.0);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Workload simulators — the stochastic systems the paper optimizes over.
+//!
+//! Each generator reproduces the corresponding §4.1 experimental setup:
+//! * [`assets`] — asset-return universe, μᵢ ~ U(−1,1), σᵢ ~ U(0,0.025);
+//! * [`demand`] — multi-product demand + cost structure + technology matrix
+//!   (μ ~ U(20,50), σ ~ U(10,20), resource constraints per Niederhoff 2007);
+//! * [`classify`] — synthetic binary-feature dataset with 10% label noise
+//!   (Mukherjee et al. 2013 / Byrd et al. 2016 construction, N = 30n).
+
+pub mod assets;
+pub mod classify;
+pub mod demand;
+
+pub use assets::AssetUniverse;
+pub use classify::ClassifyData;
+pub use demand::NewsvendorInstance;

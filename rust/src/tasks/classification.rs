@@ -1,0 +1,356 @@
+//! Task 3 math (paper §3.3): logistic loss/gradient, sub-sampled
+//! Hessian-vector products, the SQN correction memory, and the explicit
+//! Algorithm-4 inverse-Hessian build.
+
+use crate::linalg::matrix::Mat;
+use crate::linalg::vector::dot;
+
+const EPS: f32 = 1e-10;
+
+#[inline]
+pub fn sigmoid(u: f32) -> f32 {
+    1.0 / (1.0 + (-u).exp())
+}
+
+/// Stable per-sample BCE: max(u,0) − u·z + log(1 + e^{−|u|}).
+#[inline]
+pub fn bce(u: f32, z: f32) -> f32 {
+    u.max(0.0) - u * z + (-u.abs()).exp().ln_1p()
+}
+
+/// Minibatch gradient (12) + mean loss, sequential sample loop.
+/// `xb` is row-major (b × n).
+pub fn grad(w: &[f32], xb: &[f32], zb: &[f32], g: &mut [f32]) -> f64 {
+    let n = w.len();
+    let b = zb.len();
+    debug_assert_eq!(xb.len(), b * n);
+    g.iter_mut().for_each(|v| *v = 0.0);
+    let mut loss = 0.0f64;
+    for i in 0..b {
+        let row = &xb[i * n..(i + 1) * n];
+        let u = dot(row, w);
+        let c = sigmoid(u);
+        let r = c - zb[i];
+        for j in 0..n {
+            g[j] += r * row[j];
+        }
+        loss += bce(u, zb[i]) as f64;
+    }
+    let inv = 1.0 / b as f32;
+    g.iter_mut().for_each(|v| *v *= inv);
+    loss / b as f64
+}
+
+/// Sub-sampled Hessian-vector product (13): Xᵀ diag(c(1−c)) X s / b_H.
+pub fn hvp(wbar: &[f32], s: &[f32], xh: &[f32], out: &mut [f32]) {
+    let n = wbar.len();
+    let bh = xh.len() / n;
+    debug_assert_eq!(xh.len(), bh * n);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..bh {
+        let row = &xh[i * n..(i + 1) * n];
+        let c = sigmoid(dot(row, wbar));
+        let a = c * (1.0 - c);
+        let xs = dot(row, s);
+        let coef = a * xs;
+        for j in 0..n {
+            out[j] += coef * row[j];
+        }
+    }
+    let inv = 1.0 / bh as f32;
+    out.iter_mut().for_each(|v| *v *= inv);
+}
+
+/// Ring of correction pairs (s_t, y_t), oldest first — the layout the
+/// `lr_hbuild` / `lr_dir_twoloop` artifacts expect (rows [0, count) valid).
+#[derive(Debug, Clone)]
+pub struct CorrectionMemory {
+    pub s_mem: Vec<f32>,
+    pub y_mem: Vec<f32>,
+    pub capacity: usize,
+    pub count: usize,
+    pub n: usize,
+}
+
+impl CorrectionMemory {
+    pub fn new(capacity: usize, n: usize) -> Self {
+        CorrectionMemory {
+            s_mem: vec![0.0; capacity * n],
+            y_mem: vec![0.0; capacity * n],
+            capacity,
+            count: 0,
+            n,
+        }
+    }
+
+    /// Append a pair; evicts the oldest once full.  Pairs with non-positive
+    /// curvature s·y are rejected (standard BFGS safeguard) — returns false.
+    pub fn push(&mut self, s: &[f32], y: &[f32]) -> bool {
+        assert_eq!(s.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        if dot(s, y) <= EPS {
+            return false;
+        }
+        if self.count == self.capacity {
+            // shift left one row (O(capacity·n), every L iterations — cheap
+            // relative to the O(b·n) gradient work between pushes)
+            self.s_mem.copy_within(self.n.., 0);
+            self.y_mem.copy_within(self.n.., 0);
+            self.count -= 1;
+        }
+        let at = self.count * self.n;
+        self.s_mem[at..at + self.n].copy_from_slice(s);
+        self.y_mem[at..at + self.n].copy_from_slice(y);
+        self.count += 1;
+        true
+    }
+
+    pub fn pair(&self, i: usize) -> (&[f32], &[f32]) {
+        assert!(i < self.count);
+        let at = i * self.n;
+        (&self.s_mem[at..at + self.n], &self.y_mem[at..at + self.n])
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Algorithm 4, explicit form (the paper's matrix-operation showcase):
+/// build the full inverse-Hessian approximation H_t.  O(count·n²)
+/// sequential.  Returns the identity when the memory is empty.
+pub fn hbuild_explicit(mem: &CorrectionMemory) -> Mat {
+    let n = mem.n;
+    if mem.is_empty() {
+        return Mat::eye(n);
+    }
+    let (s_l, y_l) = mem.pair(mem.count - 1);
+    let gamma = (dot(s_l, y_l) / dot(y_l, y_l).max(EPS)).max(EPS);
+    let mut h = Mat::zeros(n, n);
+    for i in 0..n {
+        h.set(i, i, gamma);
+    }
+    let mut hy = vec![0.0f32; n];
+    for idx in 0..mem.count {
+        let (s, y) = mem.pair(idx);
+        let denom = dot(y, s);
+        if denom <= EPS {
+            continue;
+        }
+        let rho = 1.0 / denom;
+        h.matvec(y, &mut hy); // H is symmetric ⇒ yᵀH = hyᵀ
+        let q = dot(y, &hy);
+        let c2 = rho * rho * q + rho;
+        for i in 0..n {
+            let si = s[i];
+            let hyi = hy[i];
+            let row = h.row_mut(i);
+            for j in 0..n {
+                row[j] += -rho * si * hy[j] - rho * hyi * s[j] + c2 * si * s[j];
+            }
+        }
+    }
+    h
+}
+
+/// Build H (Algorithm 4) and apply it to `g` in one shot.
+pub fn hdir_explicit(mem: &CorrectionMemory, g: &[f32]) -> Vec<f32> {
+    let h = hbuild_explicit(mem);
+    let mut d = vec![0.0f32; mem.n.max(g.len())];
+    d.truncate(g.len());
+    h.matvec(g, &mut d);
+    d
+}
+
+/// L-BFGS two-loop recursion over the same memory (ablation A2); O(count·n).
+pub fn hdir_twoloop(mem: &CorrectionMemory, g: &[f32]) -> Vec<f32> {
+    let n = mem.n;
+    assert_eq!(g.len(), n);
+    if mem.is_empty() {
+        return g.to_vec();
+    }
+    let mut q = g.to_vec();
+    let mut alpha = vec![0.0f32; mem.count];
+    let mut rho = vec![0.0f32; mem.count];
+    for i in (0..mem.count).rev() {
+        let (s, y) = mem.pair(i);
+        let denom = dot(y, s);
+        rho[i] = if denom > EPS { 1.0 / denom } else { 0.0 };
+        let a = rho[i] * dot(s, &q);
+        alpha[i] = a;
+        for j in 0..n {
+            q[j] -= a * y[j];
+        }
+    }
+    let (s_l, y_l) = mem.pair(mem.count - 1);
+    let gamma = (dot(s_l, y_l) / dot(y_l, y_l).max(EPS)).max(EPS);
+    let mut r: Vec<f32> = q.iter().map(|&v| gamma * v).collect();
+    for i in 0..mem.count {
+        let (s, y) = mem.pair(i);
+        let b = rho[i] * dot(y, &r);
+        let coef = alpha[i] - b;
+        for j in 0..n {
+            r[j] += coef * s[j];
+        }
+    }
+    r
+}
+
+/// Full-dataset (or subset) mean loss — the convergence metric the RSE trace
+/// tracks; sequential row loop.
+pub fn full_loss(w: &[f32], x: &[f32], z: &[f32]) -> f64 {
+    let n = w.len();
+    let rows = z.len();
+    let mut total = 0.0f64;
+    for i in 0..rows {
+        let u = dot(&x[i * n..(i + 1) * n], w);
+        total += bce(u, z[i]) as f64;
+    }
+    total / rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    fn batch(seed: u64, b: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut p = Philox::new(seed);
+        let xb: Vec<f32> = (0..b * n).map(|_| (p.next_u32() & 1) as f32).collect();
+        let zb: Vec<f32> = (0..b).map(|_| (p.next_u32() & 1) as f32).collect();
+        let w: Vec<f32> = (0..n).map(|_| p.uniform_f32(-0.3, 0.3)).collect();
+        (xb, zb, w)
+    }
+
+    #[test]
+    fn sigmoid_and_bce_stability() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(100.0) > 0.9999);
+        assert!(sigmoid(-100.0) < 1e-4);
+        assert!(bce(500.0, 1.0).is_finite());
+        assert!(bce(-500.0, 0.0).is_finite());
+        assert!(bce(500.0, 0.0) > 100.0);
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let (xb, zb, w) = batch(1, 16, 8);
+        let mut g = vec![0.0f32; 8];
+        grad(&w, &xb, &zb, &mut g);
+        let h = 1e-3f32;
+        for j in 0..8 {
+            let mut wp = w.clone();
+            wp[j] += h;
+            let mut wm = w.clone();
+            wm[j] -= h;
+            let mut scratch = vec![0.0f32; 8];
+            let fp = grad(&wp, &xb, &zb, &mut scratch);
+            let fm = grad(&wm, &xb, &zb, &mut scratch);
+            let fd = ((fp - fm) / (2.0 * h as f64)) as f32;
+            assert!((g[j] - fd).abs() < 5e-3, "j={} {} vs {}", j, g[j], fd);
+        }
+    }
+
+    #[test]
+    fn hvp_matches_finite_difference_of_grad() {
+        let (xb, zb, w) = batch(2, 32, 6);
+        let mut p = Philox::new(9);
+        let s: Vec<f32> = (0..6).map(|_| p.uniform_f32(-1.0, 1.0)).collect();
+        let mut out = vec![0.0f32; 6];
+        hvp(&w, &s, &xb, &mut out);
+        let h = 1e-3f32;
+        let wp: Vec<f32> = w.iter().zip(&s).map(|(a, b)| a + h * b).collect();
+        let wm: Vec<f32> = w.iter().zip(&s).map(|(a, b)| a - h * b).collect();
+        let mut gp = vec![0.0f32; 6];
+        let mut gm = vec![0.0f32; 6];
+        grad(&wp, &xb, &zb, &mut gp);
+        grad(&wm, &xb, &zb, &mut gm);
+        for j in 0..6 {
+            let fd = (gp[j] - gm[j]) / (2.0 * h);
+            assert!((out[j] - fd).abs() < 5e-3, "j={} {} vs {}", j, out[j], fd);
+        }
+    }
+
+    #[test]
+    fn memory_ring_semantics() {
+        let mut mem = CorrectionMemory::new(3, 2);
+        assert!(mem.is_empty());
+        for t in 0..5 {
+            let s = vec![1.0 + t as f32, 0.0];
+            let y = vec![1.0, 0.5];
+            assert!(mem.push(&s, &y));
+        }
+        assert_eq!(mem.count, 3);
+        // oldest evicted: remaining pairs are t = 2, 3, 4
+        assert_eq!(mem.pair(0).0[0], 3.0);
+        assert_eq!(mem.pair(2).0[0], 5.0);
+    }
+
+    #[test]
+    fn memory_rejects_nonpositive_curvature() {
+        let mut mem = CorrectionMemory::new(2, 2);
+        assert!(!mem.push(&[1.0, 0.0], &[-1.0, 0.0]));
+        assert!(!mem.push(&[1.0, 0.0], &[0.0, 1.0])); // s·y = 0
+        assert!(mem.is_empty());
+    }
+
+    #[test]
+    fn explicit_and_twoloop_agree() {
+        let mut p = Philox::new(5);
+        let n = 10;
+        let mut mem = CorrectionMemory::new(4, n);
+        for _ in 0..4 {
+            let s: Vec<f32> = (0..n).map(|_| p.uniform_f32(-0.5, 0.5)).collect();
+            // y = s + small SPD-ish perturbation keeps curvature positive
+            let y: Vec<f32> = s.iter().map(|&v| 1.5 * v + 0.01).collect();
+            if dot(&s, &y) > 0.0 {
+                mem.push(&s, &y);
+            }
+        }
+        assert!(mem.count >= 2);
+        let g: Vec<f32> = (0..n).map(|_| p.uniform_f32(-1.0, 1.0)).collect();
+        let d1 = hdir_explicit(&mem, &g);
+        let d2 = hdir_twoloop(&mem, &g);
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a - b).abs() < 2e-3, "{} vs {}", a, b);
+        }
+    }
+
+    #[test]
+    fn empty_memory_returns_gradient() {
+        let mem = CorrectionMemory::new(4, 3);
+        let g = vec![1.0f32, -2.0, 3.0];
+        assert_eq!(hdir_explicit(&mem, &g), g);
+        assert_eq!(hdir_twoloop(&mem, &g), g);
+    }
+
+    #[test]
+    fn direction_is_descent() {
+        let mut p = Philox::new(7);
+        let n = 8;
+        let mut mem = CorrectionMemory::new(3, n);
+        for _ in 0..3 {
+            let s: Vec<f32> = (0..n).map(|_| p.uniform_f32(-0.5, 0.5)).collect();
+            let y: Vec<f32> = s.iter().map(|&v| 2.0 * v).collect();
+            mem.push(&s, &y);
+        }
+        let g: Vec<f32> = (0..n).map(|_| p.uniform_f32(-1.0, 1.0)).collect();
+        let d = hdir_explicit(&mem, &g);
+        assert!(dot(&g, &d) > 0.0, "H must be positive definite on g");
+    }
+
+    #[test]
+    fn full_loss_decreases_under_gd() {
+        let (xb, zb, mut w) = batch(11, 64, 8);
+        let before = full_loss(&w, &xb, &zb);
+        let mut g = vec![0.0f32; 8];
+        for _ in 0..20 {
+            grad(&w, &xb, &zb, &mut g);
+            for j in 0..8 {
+                w[j] -= 0.5 * g[j];
+            }
+        }
+        let after = full_loss(&w, &xb, &zb);
+        assert!(after < before);
+    }
+}

@@ -1,0 +1,185 @@
+//! Task 1 math (paper §3.1): empirical mean-variance objective/gradient on a
+//! centered sample panel, and the analytic LMO over the capped simplex.
+//!
+//! The gradient never materializes the d×d covariance: with the centered
+//! panel C (n×d), ∇f̂(w) = Cᵀ(Cw)/(n−1) − R̄ — two matvecs, exactly the
+//! decomposition the L1 Pallas kernel uses, so the native and XLA arms run
+//! the same arithmetic.
+
+use crate::linalg::blocked;
+use crate::linalg::matrix::Mat;
+use crate::linalg::vector::{self, dot};
+
+/// Scratch buffers reused across iterations (no allocation in the hot loop).
+#[derive(Debug, Clone)]
+pub struct MvScratch {
+    /// u = C w, length n.
+    pub u: Vec<f32>,
+    /// gradient, length d.
+    pub g: Vec<f32>,
+}
+
+impl MvScratch {
+    pub fn new(n_samples: usize, d: usize) -> Self {
+        MvScratch { u: vec![0.0; n_samples], g: vec![0.0; d] }
+    }
+}
+
+/// ∇f̂(w) = Cᵀ(Cw)/(n−1) − R̄ into `scratch.g` (sequential kernels).
+pub fn grad(c: &Mat, rbar: &[f32], w: &[f32], scratch: &mut MvScratch) {
+    let n = c.rows;
+    c.matvec(w, &mut scratch.u);
+    c.matvec_t(&scratch.u, &mut scratch.g);
+    let inv = 1.0 / (n as f32 - 1.0);
+    for j in 0..scratch.g.len() {
+        scratch.g[j] = scratch.g[j] * inv - rbar[j];
+    }
+}
+
+/// Blocked-kernel variant for the optimized-native ablation.
+pub fn grad_blocked(c: &Mat, rbar: &[f32], w: &[f32], scratch: &mut MvScratch) {
+    let n = c.rows;
+    blocked::matvec_blocked(c, w, &mut scratch.u);
+    blocked::matvec_t_blocked(c, &scratch.u, &mut scratch.g);
+    let inv = 1.0 / (n as f32 - 1.0);
+    for j in 0..scratch.g.len() {
+        scratch.g[j] = scratch.g[j] * inv - rbar[j];
+    }
+}
+
+/// f̂(w) = ½ wᵀĈw − wᵀR̄ = ½|Cw|²/(n−1) − w·R̄ (paper eq. (4)).
+pub fn objective(c: &Mat, rbar: &[f32], w: &[f32], scratch: &mut MvScratch) -> f64 {
+    let n = c.rows;
+    c.matvec(w, &mut scratch.u);
+    let quad = dot(&scratch.u, &scratch.u) as f64 / (n as f64 - 1.0);
+    0.5 * quad - dot(w, rbar) as f64
+}
+
+/// Analytic LMO over W = {w ≥ 0, 1ᵀw ≤ 1} (Algorithm 1 line 8):
+/// `Some(j)` for the vertex e_j (j = argmin g, if g_j < 0), `None` for the
+/// origin.
+pub fn simplex_lmo(g: &[f32]) -> Option<usize> {
+    let j = vector::argmin(g)?;
+    if g[j] < 0.0 {
+        Some(j)
+    } else {
+        None
+    }
+}
+
+/// FW update w ← w + γ(s − w) against a simplex vertex (Algorithm 1 line 10).
+pub fn fw_vertex_update(w: &mut [f32], vertex: Option<usize>, gamma: f32) {
+    let scale = 1.0 - gamma;
+    for v in w.iter_mut() {
+        *v *= scale;
+    }
+    if let Some(j) = vertex {
+        w[j] += gamma;
+    }
+}
+
+/// Feasibility of the capped simplex within `tol`.
+pub fn in_simplex(w: &[f32], tol: f32) -> bool {
+    w.iter().all(|&v| v >= -tol) && vector::sum(w) <= 1.0 + tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    fn panel(seed: u64, n: usize, d: usize) -> (Mat, Vec<f32>) {
+        let mut p = Philox::new(seed);
+        let mut m = Mat::from_vec(
+            n,
+            d,
+            (0..n * d).map(|_| p.uniform_f32(-1.0, 1.0)).collect(),
+        );
+        let rbar = m.col_means();
+        m.center_rows(&rbar);
+        (m, rbar)
+    }
+
+    #[test]
+    fn grad_matches_explicit_covariance() {
+        let (c, rbar) = panel(1, 16, 8);
+        let w: Vec<f32> = (0..8).map(|i| 1.0 / (i + 2) as f32).collect();
+        let mut scratch = MvScratch::new(16, 8);
+        grad(&c, &rbar, &w, &mut scratch);
+        // explicit: Σ̂ = CᵀC/(n−1); g = Σ̂w − rbar
+        let ct = c.transpose();
+        let cov = ct.matmul(&c); // d×d scaled by (n-1)
+        let mut want = vec![0.0f32; 8];
+        cov.matvec(&w, &mut want);
+        for j in 0..8 {
+            want[j] = want[j] / 15.0 - rbar[j];
+            assert!((scratch.g[j] - want[j]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn blocked_grad_matches_sequential() {
+        let (c, rbar) = panel(2, 33, 17);
+        let w: Vec<f32> = (0..17).map(|i| (i as f32 * 0.3).sin().abs() / 17.0).collect();
+        let mut s1 = MvScratch::new(33, 17);
+        let mut s2 = MvScratch::new(33, 17);
+        grad(&c, &rbar, &w, &mut s1);
+        grad_blocked(&c, &rbar, &w, &mut s2);
+        for (a, b) in s1.g.iter().zip(&s2.g) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn objective_is_half_quadratic_minus_linear() {
+        let (c, rbar) = panel(3, 8, 4);
+        let w = vec![0.25f32; 4];
+        let mut scratch = MvScratch::new(8, 4);
+        let obj = objective(&c, &rbar, &w, &mut scratch);
+        // brute force
+        let mut quad = 0.0f64;
+        for i in 0..8 {
+            let u: f32 = c.row(i).iter().zip(&w).map(|(a, b)| a * b).sum();
+            quad += (u as f64) * (u as f64);
+        }
+        let want = 0.5 * quad / 7.0
+            - w.iter().zip(&rbar).map(|(a, b)| (a * b) as f64).sum::<f64>();
+        assert!((obj - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lmo_picks_most_negative() {
+        assert_eq!(simplex_lmo(&[0.5, -1.0, -2.0, 0.1]), Some(2));
+        assert_eq!(simplex_lmo(&[0.5, 1.0]), None);
+        assert_eq!(simplex_lmo(&[]), None);
+    }
+
+    #[test]
+    fn vertex_update_preserves_simplex() {
+        let mut w = vec![0.2f32, 0.3, 0.1];
+        fw_vertex_update(&mut w, Some(0), 0.5);
+        assert!(in_simplex(&w, 1e-6));
+        assert!((w[0] - 0.6).abs() < 1e-6);
+        fw_vertex_update(&mut w, None, 0.5);
+        assert!(in_simplex(&w, 1e-6));
+        // sum was 0.8 after the vertex step; origin step halves it
+        assert!((crate::linalg::vector::sum(&w) - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fw_on_fixed_panel_descends() {
+        let (c, rbar) = panel(4, 64, 12);
+        let mut w = vec![1.0f32 / 12.0; 12];
+        let mut scratch = MvScratch::new(64, 12);
+        let first = objective(&c, &rbar, &w, &mut scratch);
+        for m in 0..50 {
+            grad(&c, &rbar, &w, &mut scratch);
+            let s = simplex_lmo(&scratch.g);
+            let gamma = 2.0 / (m as f32 + 2.0);
+            fw_vertex_update(&mut w, s, gamma);
+            assert!(in_simplex(&w, 1e-5));
+        }
+        let last = objective(&c, &rbar, &w, &mut scratch);
+        assert!(last < first, "{} !< {}", last, first);
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's three problem definitions and their backend-shared math.
+//!
+//! Everything a backend needs that is *not* execution-model specific lives
+//! here: objective/gradient math on a sample panel, the analytic simplex
+//! LMO, the LP-backed newsvendor LMO, and the SQN correction memory.
+
+pub mod classification;
+pub mod mean_variance;
+pub mod newsvendor;
+
+pub use classification::CorrectionMemory;
+pub use newsvendor::NvLmo;

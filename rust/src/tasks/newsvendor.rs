@@ -1,0 +1,304 @@
+//! Task 2 math (paper §3.2): Monte-Carlo gradient/objective on a demand
+//! panel, and the LP-backed LMO over {Ax ≤ C, x ≥ 0} (Algorithm 2 line 8).
+
+use crate::lp::{self, LpProblem, LpResult};
+use crate::sim::NewsvendorInstance;
+
+/// MC gradient (paper eq. (9)) — sequential, one product at a time, one
+/// sample at a time (the paper's description of CPU execution):
+/// f̂ⱼ′ = kⱼ − vⱼ + (hⱼ+vⱼ)·(1/S)Σₛ 1{dₛⱼ ≤ xⱼ}.
+pub fn grad(inst: &NewsvendorInstance, panel: &[f32], s_samples: usize,
+            x: &[f32], g: &mut [f32]) {
+    let d = inst.dim();
+    debug_assert_eq!(panel.len(), s_samples * d);
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(g.len(), d);
+    for j in 0..d {
+        let mut count = 0u32;
+        for s in 0..s_samples {
+            if panel[s * d + j] <= x[j] {
+                count += 1;
+            }
+        }
+        let cdf = count as f32 / s_samples as f32;
+        g[j] = inst.k[j] - inst.v[j] + (inst.h[j] + inst.v[j]) * cdf;
+    }
+}
+
+/// Sample-average cost (paper eq. (6)):
+/// Σⱼ kⱼxⱼ + (1/S)Σₛ [hⱼ max(xⱼ−dₛⱼ,0) + vⱼ max(dₛⱼ−xⱼ,0)].
+pub fn objective(inst: &NewsvendorInstance, panel: &[f32], s_samples: usize,
+                 x: &[f32]) -> f64 {
+    let d = inst.dim();
+    let mut total = 0.0f64;
+    for j in 0..d {
+        let mut over = 0.0f64;
+        let mut under = 0.0f64;
+        for s in 0..s_samples {
+            let diff = (x[j] - panel[s * d + j]) as f64;
+            if diff > 0.0 {
+                over += diff;
+            } else {
+                under -= diff;
+            }
+        }
+        let inv = 1.0 / s_samples as f64;
+        total += inst.k[j] as f64 * x[j] as f64
+            + inst.h[j] as f64 * over * inv
+            + inst.v[j] as f64 * under * inv;
+    }
+    total
+}
+
+/// The Frank-Wolfe linear subproblem min_{s∈X} sᵀg over
+/// X = {x : Ax ≤ cap, x ≥ 0}, solved by the two-phase simplex with
+/// **delayed column generation** (§Perf L3-2).
+///
+/// The optimum is a vertex with at most m (= #resources ≪ n) nonzero
+/// coordinates, so a small restricted LP over the most promising columns
+/// almost always contains it.  Candidate columns are priced against the
+/// restricted optimum's duals — r_j = g_j + Σᵢ σᵢ aᵢⱼ with σ ≥ 0 — and
+/// only violating columns (r_j < 0) are pulled in.  Columns with g_j ≥ 0
+/// can never price negative (A > 0) and are pruned outright.
+pub struct NvLmo {
+    a: Vec<f64>,
+    cap: Vec<f64>,
+    m: usize,
+    n: usize,
+    /// Number of LMO calls (dispatch-cost reporting).
+    pub solves: usize,
+    /// Column-generation rounds across all calls (≈ solves ⇒ the restricted
+    /// pool almost always suffices on the first try).
+    pub rounds: usize,
+    /// Set true to bypass column generation (used by tests/benches to
+    /// compare against the full dense solve).
+    pub full_solve: bool,
+}
+
+impl NvLmo {
+    pub fn new(inst: &NewsvendorInstance) -> Self {
+        let m = inst.resources();
+        let n = inst.dim();
+        let a = inst.a.data.iter().map(|&v| v as f64).collect();
+        let cap = inst.cap.iter().map(|&v| v as f64).collect();
+        NvLmo { a, cap, m, n, solves: 0, rounds: 0, full_solve: false }
+    }
+
+    /// Solve the LMO for gradient `g`, returning the optimal vertex.
+    pub fn solve(&mut self, g: &[f32]) -> anyhow::Result<Vec<f32>> {
+        assert_eq!(g.len(), self.n);
+        self.solves += 1;
+        if self.full_solve {
+            return self.solve_full(g);
+        }
+
+        // candidate pool: negative-gradient columns, most negative first
+        let mut neg: Vec<usize> = (0..self.n).filter(|&j| g[j] < 0.0).collect();
+        if neg.is_empty() {
+            return Ok(vec![0.0; self.n]); // origin is optimal
+        }
+        let pool = (8 * self.m).max(64).min(neg.len());
+        if pool < neg.len() {
+            // partial selection: only the pool prefix needs ordering
+            neg.select_nth_unstable_by(pool - 1, |&i, &j| {
+                g[i].partial_cmp(&g[j]).unwrap()
+            });
+        }
+        let mut active: Vec<usize> = neg[..pool].to_vec();
+        let mut in_active = vec![false; self.n];
+        for &j in &active {
+            in_active[j] = true;
+        }
+
+        const MAX_ROUNDS: usize = 12;
+        for _ in 0..MAX_ROUNDS {
+            self.rounds += 1;
+            let (x_sub, duals) = self.solve_restricted(g, &active)?;
+            // price the remaining candidates against the duals
+            let mut violators: Vec<(usize, f64)> = Vec::new();
+            for &j in &neg {
+                if in_active[j] {
+                    continue;
+                }
+                let mut r = g[j] as f64;
+                for i in 0..self.m {
+                    r += duals[i] * self.a[i * self.n + j];
+                }
+                if r < -1e-7 {
+                    violators.push((j, r));
+                }
+            }
+            if violators.is_empty() {
+                // restricted optimum is globally optimal
+                let mut x = vec![0.0f32; self.n];
+                for (pos, &j) in active.iter().enumerate() {
+                    x[j] = x_sub[pos] as f32;
+                }
+                return Ok(x);
+            }
+            violators.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            for (j, _) in violators.into_iter().take((4 * self.m).max(16)) {
+                active.push(j);
+                in_active[j] = true;
+            }
+        }
+        // pathological instance: fall back to the dense solve
+        self.solve_full(g)
+    }
+
+    fn solve_restricted(&self, g: &[f32], cols: &[usize])
+        -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+        let k = cols.len();
+        let mut a_sub = vec![0.0f64; self.m * k];
+        for i in 0..self.m {
+            for (pos, &j) in cols.iter().enumerate() {
+                a_sub[i * k + pos] = self.a[i * self.n + j];
+            }
+        }
+        let c_sub: Vec<f64> = cols.iter().map(|&j| g[j] as f64).collect();
+        let p = LpProblem::new(c_sub, a_sub, self.cap.clone());
+        match lp::solve(&p) {
+            LpResult::Optimal { x, duals, .. } => Ok((x, duals)),
+            LpResult::Unbounded => anyhow::bail!(
+                "newsvendor LMO unbounded — technology matrix must be positive"
+            ),
+            LpResult::Infeasible => anyhow::bail!(
+                "newsvendor LMO infeasible — capacities must be nonnegative"
+            ),
+        }
+    }
+
+    /// Dense full-column solve (reference path / fallback).
+    pub fn solve_full(&mut self, g: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let c: Vec<f64> = g.iter().map(|&v| v as f64).collect();
+        let p = LpProblem::new(c, self.a.clone(), self.cap.clone());
+        match lp::solve(&p) {
+            LpResult::Optimal { x, .. } => {
+                Ok(x.into_iter().map(|v| v as f32).collect())
+            }
+            LpResult::Unbounded => anyhow::bail!(
+                "newsvendor LMO unbounded — technology matrix must be positive"
+            ),
+            LpResult::Infeasible => anyhow::bail!(
+                "newsvendor LMO infeasible — capacities must be nonnegative"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::StreamTree;
+
+    fn inst(d: usize) -> NewsvendorInstance {
+        NewsvendorInstance::generate(&StreamTree::new(42), d, 3, 0.6)
+    }
+
+    fn panel_for(inst: &NewsvendorInstance, s: usize, seed: u64) -> Vec<f32> {
+        let mut out = vec![0.0f32; s * inst.dim()];
+        let mut sampler = StreamTree::new(seed).normal(&[1]);
+        inst.sample_panel(&mut sampler, s, &mut out);
+        out
+    }
+
+    #[test]
+    fn grad_bracketed_by_cost_structure() {
+        let inst = inst(16);
+        let panel = panel_for(&inst, 32, 7);
+        let x = inst.unconstrained_optimum();
+        let mut g = vec![0.0f32; 16];
+        grad(&inst, &panel, 32, &x, &mut g);
+        for j in 0..16 {
+            assert!(g[j] >= inst.k[j] - inst.v[j] - 1e-5);
+            assert!(g[j] <= inst.k[j] + inst.h[j] + 1e-5);
+        }
+    }
+
+    #[test]
+    fn grad_monotone_in_stock_level() {
+        // The CDF estimate is nondecreasing in x, hence so is the gradient.
+        let inst = inst(8);
+        let panel = panel_for(&inst, 64, 3);
+        let lo = vec![0.0f32; 8];
+        let hi = vec![100.0f32; 8];
+        let mut g_lo = vec![0.0f32; 8];
+        let mut g_hi = vec![0.0f32; 8];
+        grad(&inst, &panel, 64, &lo, &mut g_lo);
+        grad(&inst, &panel, 64, &hi, &mut g_hi);
+        for j in 0..8 {
+            assert!(g_lo[j] <= g_hi[j] + 1e-6);
+        }
+    }
+
+    #[test]
+    fn objective_convex_along_segment() {
+        let inst = inst(8);
+        let panel = panel_for(&inst, 64, 9);
+        let a = vec![10.0f32; 8];
+        let b = vec![60.0f32; 8];
+        let mid: Vec<f32> = a.iter().zip(&b).map(|(x, y)| 0.5 * (x + y)).collect();
+        let fa = objective(&inst, &panel, 64, &a);
+        let fb = objective(&inst, &panel, 64, &b);
+        let fm = objective(&inst, &panel, 64, &mid);
+        assert!(fm <= 0.5 * (fa + fb) + 1e-6);
+    }
+
+    #[test]
+    fn lmo_vertex_feasible_and_optimal_vs_samples() {
+        let inst = inst(12);
+        let mut lmo = NvLmo::new(&inst);
+        let panel = panel_for(&inst, 16, 5);
+        let x = inst.feasible_start();
+        let mut g = vec![0.0f32; 12];
+        grad(&inst, &panel, 16, &x, &mut g);
+        let s = lmo.solve(&g).unwrap();
+        assert!(inst.is_feasible(&s, 1e-4));
+        // LMO value must beat the current point and the origin
+        let val_s: f64 = s.iter().zip(&g).map(|(a, b)| (a * b) as f64).sum();
+        let val_x: f64 = x.iter().zip(&g).map(|(a, b)| (a * b) as f64).sum();
+        assert!(val_s <= val_x + 1e-6);
+        assert!(val_s <= 1e-6); // origin is feasible with value 0
+        assert_eq!(lmo.solves, 1);
+    }
+
+    #[test]
+    fn column_generation_matches_full_solve() {
+        // The delayed-column-generation LMO must return an LP optimum:
+        // same objective value as the dense solve on random gradients.
+        let inst = NewsvendorInstance::generate(&StreamTree::new(9), 200, 5, 0.6);
+        let mut lmo = NvLmo::new(&inst);
+        let mut rng = crate::rng::Philox::new(77);
+        for case in 0..25 {
+            let g: Vec<f32> = (0..200)
+                .map(|_| rng.uniform_f32(-3.0, 2.0))
+                .collect();
+            let s_cg = lmo.solve(&g).unwrap();
+            let s_full = lmo.solve_full(&g).unwrap();
+            let val = |s: &[f32]| -> f64 {
+                s.iter().zip(&g).map(|(a, b)| (a * b) as f64).sum()
+            };
+            assert!(inst.is_feasible(&s_cg, 1e-3), "case {}", case);
+            assert!(
+                (val(&s_cg) - val(&s_full)).abs()
+                    < 1e-4 * (1.0 + val(&s_full).abs()),
+                "case {}: cg {} vs full {}",
+                case,
+                val(&s_cg),
+                val(&s_full)
+            );
+        }
+        // pool almost always suffices in one round
+        assert!(lmo.rounds <= lmo.solves * 3, "rounds {} solves {}",
+                lmo.rounds, lmo.solves);
+    }
+
+    #[test]
+    fn lmo_all_positive_gradient_returns_origin() {
+        let inst = inst(6);
+        let mut lmo = NvLmo::new(&inst);
+        let g = vec![1.0f32; 6];
+        let s = lmo.solve(&g).unwrap();
+        assert!(s.iter().all(|&v| v.abs() < 1e-8));
+    }
+}

@@ -1,0 +1,243 @@
+//! Declarative command-line parsing (the offline registry carries no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, repeated
+//! flags, positional arguments, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Kind {
+    Value,
+    Bool,
+}
+
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: &'static str,
+    kind: Kind,
+    default: Option<&'static str>,
+    help: &'static str,
+}
+
+/// A declarative flag set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    cmd: String,
+    about: &'static str,
+    specs: Vec<FlagSpec>,
+    values: BTreeMap<&'static str, Vec<String>>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    pub fn new(cmd: &str, about: &'static str) -> Self {
+        Args { cmd: cmd.to_string(), about, ..Default::default() }
+    }
+
+    /// Declare a value flag with an optional default.
+    pub fn flag(mut self, name: &'static str, default: Option<&'static str>,
+                help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, kind: Kind::Value, default, help });
+        self
+    }
+
+    /// Declare a boolean flag (present = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec { name, kind: Kind::Bool, default: None, help });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}\n\nUSAGE: simopt {} [FLAGS]", self.about, self.cmd);
+        for sp in &self.specs {
+            let d = sp.default.map(|d| format!(" [default: {}]", d)).unwrap_or_default();
+            let _ = writeln!(out, "  --{:<18} {}{}", sp.name, sp.help, d);
+        }
+        out
+    }
+
+    /// Parse a raw argument list (not including the program/subcommand name).
+    pub fn parse(mut self, raw: &[String]) -> Result<Self, CliError> {
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{}\n\n{}", name, self.usage())))?
+                    .clone();
+                let val = match (spec.kind, inline) {
+                    (Kind::Bool, None) => "true".to_string(),
+                    (Kind::Bool, Some(v)) => v,
+                    (Kind::Value, Some(v)) => v,
+                    (Kind::Value, None) => {
+                        i += 1;
+                        raw.get(i)
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{} needs a value", name)))?
+                    }
+                };
+                self.values.entry(spec.name).or_default().push(val);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    // -- typed getters -------------------------------------------------------
+
+    pub fn get(&self, name: &'static str) -> Option<String> {
+        if let Some(vs) = self.values.get(name) {
+            return vs.last().cloned();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.map(|d| d.to_string()))
+    }
+
+    pub fn get_usize(&self, name: &'static str) -> Result<usize, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError(format!("missing --{}", name)))?;
+        v.parse().map_err(|_| CliError(format!("--{} expects an integer, got '{}'", name, v)))
+    }
+
+    pub fn get_u64(&self, name: &'static str) -> Result<u64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError(format!("missing --{}", name)))?;
+        v.parse().map_err(|_| CliError(format!("--{} expects an integer, got '{}'", name, v)))
+    }
+
+    pub fn get_f64(&self, name: &'static str) -> Result<f64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError(format!("missing --{}", name)))?;
+        v.parse().map_err(|_| CliError(format!("--{} expects a number, got '{}'", name, v)))
+    }
+
+    pub fn get_bool(&self, name: &'static str) -> bool {
+        self.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Comma-separated list of integers, e.g. `--sizes 128,512`.
+    pub fn get_usize_list(&self, name: &'static str) -> Result<Vec<usize>, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError(format!("missing --{}", name)))?;
+        v.split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| CliError(format!("--{}: bad integer '{}'", name, t)))
+            })
+            .collect()
+    }
+
+    /// Comma-separated list of strings.
+    pub fn get_str_list(&self, name: &'static str) -> Vec<String> {
+        self.get(name)
+            .map(|v| v.split(',').filter(|t| !t.is_empty()).map(|t| t.trim().to_string()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn raw(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn spec() -> Args {
+        Args::new("run", "run one experiment")
+            .flag("size", Some("128"), "problem dimension")
+            .flag("sizes", None, "comma list")
+            .switch("verbose", "chatty output")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&raw(&[])).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), 128);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = spec().parse(&raw(&["--size", "512"])).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), 512);
+        let a = spec().parse(&raw(&["--size=2048"])).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), 2048);
+    }
+
+    #[test]
+    fn bool_switch() {
+        let a = spec().parse(&raw(&["--verbose"])).unwrap();
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = spec().parse(&raw(&["--size", "1", "--size", "2"])).unwrap();
+        assert_eq!(a.get_usize("size").unwrap(), 2);
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = spec().parse(&raw(&["--sizes", "128, 512,2048"])).unwrap();
+        assert_eq!(a.get_usize_list("sizes").unwrap(), vec![128, 512, 2048]);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(spec().parse(&raw(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(spec().parse(&raw(&["--size"])).is_err());
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = spec().parse(&raw(&["--size", "abc"])).unwrap();
+        assert!(a.get_usize("size").is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = spec().parse(&raw(&["pos1", "--size", "4", "pos2"])).unwrap();
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let e = spec().parse(&raw(&["--help"])).unwrap_err();
+        assert!(e.0.contains("USAGE"));
+        assert!(e.0.contains("--size"));
+    }
+}

@@ -1,0 +1,20 @@
+//! Standard-library-only substrates.
+//!
+//! The build environment resolves crates from an offline registry that only
+//! carries the `xla` crate and its build dependencies, so the conveniences a
+//! production service would usually pull in (serde, clap, rayon, criterion,
+//! proptest) are implemented here from scratch:
+//!
+//! * [`json`] — JSON parser/writer (artifact manifest, result files)
+//! * [`cli`] — declarative command-line parsing
+//! * [`pool`] — worker thread pool + scoped parallel map
+//! * [`stats`] — streaming moments, confidence intervals, RSE traces
+//! * [`prop`] — miniature property-based testing harness
+//! * [`timer`] — monotonic timing helpers used by the bench harness
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,231 @@
+//! Worker thread pool + scoped parallel map (no rayon/tokio offline).
+//!
+//! Two tools:
+//! * [`ThreadPool`] — long-lived workers consuming boxed jobs from a shared
+//!   queue; used by the coordinator for replication fan-out.
+//! * [`parallel_map_chunks`] — scoped data-parallel helper for the
+//!   `native_par` ablation backend: splits an index range over N threads and
+//!   merges results in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool with a `join`-style barrier.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ThreadPool {
+    /// `n == 0` is clamped to 1.
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut handles = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            handles.push(thread::spawn(move || loop {
+                let msg = { rx.lock().unwrap().recv() };
+                match msg {
+                    Ok(Msg::Run(job)) => {
+                        job();
+                        let (lock, cv) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        if *p == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { tx, handles, pending }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job; it may run on any worker.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool workers alive");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cv.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.join();
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Scoped parallel map over an index range: calls `f(i)` for `i in 0..n`
+/// across `threads` OS threads and returns the results in index order.
+///
+/// `f` only needs `Sync` borrows — perfect for read-only panels.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let slots = Mutex::new(&mut out);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // Safety-free: disjoint index writes guarded by the mutex.
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("all indices computed")).collect()
+}
+
+/// Split `0..n` into contiguous chunks, run `f(chunk_range)` per thread, and
+/// return per-chunk results in order — the shape reductions want.
+pub fn parallel_map_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<_> = (0..threads)
+        .map(|t| (t * chunk).min(n)..((t + 1) * chunk).min(n))
+        .filter(|r| !r.is_empty())
+        .collect();
+    let mut out: Vec<Option<T>> = (0..ranges.len()).map(|_| None).collect();
+    thread::scope(|s| {
+        for (slot, r) in out.iter_mut().zip(ranges) {
+            let f = &f;
+            s.spawn(move || {
+                *slot = Some(f(r));
+            });
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn join_then_more_work() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.join();
+            assert_eq!(counter.load(Ordering::SeqCst), (round + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn zero_workers_clamped() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let done = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&done);
+        pool.execute(move || {
+            d.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.join();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let got = parallel_map(100, 8, |i| i * i);
+        let want: Vec<_> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let got: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn parallel_map_chunks_covers_range() {
+        let chunks = parallel_map_chunks(103, 4, |r| r.len());
+        assert_eq!(chunks.iter().sum::<usize>(), 103);
+    }
+
+    #[test]
+    fn parallel_map_chunks_single_thread() {
+        let chunks = parallel_map_chunks(10, 1, |r| (r.start, r.end));
+        assert_eq!(chunks, vec![(0, 10)]);
+    }
+
+    #[test]
+    fn parallel_sum_matches_serial() {
+        let data: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let serial: f64 = data.iter().sum();
+        let par: f64 = parallel_map_chunks(data.len(), 7, |r| {
+            data[r].iter().sum::<f64>()
+        })
+        .iter()
+        .sum();
+        assert!((serial - par).abs() < 1e-9);
+    }
+}

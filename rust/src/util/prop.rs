@@ -1,0 +1,187 @@
+//! Miniature property-based testing harness (the offline registry has no
+//! proptest).  Deterministic SplitMix64 generator, configurable case count,
+//! and greedy size-shrinking for failures.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries skip the workspace rpath flags and cannot
+//! # // find libstdc++ (pulled in via the xla native deps) at load time.
+//! use simopt::util::prop::check;
+//! check("reverse twice is identity", 200,
+//!       |g| g.vec_f64(0..32, -1e3..1e3),
+//!       |v| {
+//!           let mut r = v.clone();
+//!           r.reverse();
+//!           r.reverse();
+//!           r == *v
+//!       });
+//! ```
+
+use std::fmt::Debug;
+use std::ops::Range;
+
+/// Deterministic generator handed to case builders.
+pub struct Gen {
+    state: u64,
+    /// Current size bound in [0,1]; shrinking retries lower it.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { state: seed.wrapping_add(0x9E3779B97F4A7C15), size: 1.0 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // SplitMix64
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn u64_in(&mut self, r: Range<u64>) -> u64 {
+        let span = r.end - r.start;
+        if span == 0 {
+            return r.start;
+        }
+        r.start + self.next_u64() % span
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        self.u64_in(r.start as u64..r.end as u64) as usize
+    }
+
+    /// Unit uniform in [0,1).
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f64_in(&mut self, r: Range<f64>) -> f64 {
+        r.start + self.unit() * (r.end - r.start)
+    }
+
+    pub fn f32_in(&mut self, r: Range<f32>) -> f32 {
+        self.f64_in(r.start as f64..r.end as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Length scaled by the current shrink size.
+    pub fn len_in(&mut self, r: Range<usize>) -> usize {
+        let hi = r.start + (((r.end - r.start) as f64) * self.size).ceil() as usize;
+        self.usize_in(r.start..hi.max(r.start + 1).min(r.end))
+    }
+
+    pub fn vec_f64(&mut self, len: Range<usize>, vals: Range<f64>) -> Vec<f64> {
+        let n = self.len_in(len);
+        (0..n).map(|_| self.f64_in(vals.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, vals: Range<f32>) -> Vec<f32> {
+        let n = self.len_in(len);
+        (0..n).map(|_| self.f32_in(vals.clone())).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.usize_in(0..items.len())]
+    }
+}
+
+/// Run `cases` random cases of `prop` over inputs from `make`.
+///
+/// On failure, retries the same seed at smaller `size` bounds to report a
+/// smaller counterexample, then panics with the case and seed.
+pub fn check<T: Debug>(
+    name: &str,
+    cases: u64,
+    make: impl Fn(&mut Gen) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    for seed in 0..cases {
+        let mut g = Gen::new(seed);
+        let input = make(&mut g);
+        if !prop(&input) {
+            // greedy shrink: same seed, smaller size budget
+            let mut smallest = input;
+            for step in 1..=4 {
+                let mut g = Gen::new(seed);
+                g.size = 1.0 / (1 << step) as f64;
+                let candidate = make(&mut g);
+                if !prop(&candidate) {
+                    smallest = candidate;
+                }
+            }
+            panic!(
+                "property '{}' failed (seed {}):\n  counterexample: {:?}",
+                name, seed, smallest
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64_in(0..1000), b.u64_in(0..1000));
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let x = g.f64_in(-2.0..3.0);
+            assert!((-2.0..3.0).contains(&x));
+            let n = g.usize_in(5..10);
+            assert!((5..10).contains(&n));
+        }
+    }
+
+    #[test]
+    fn unit_in_zero_one() {
+        let mut g = Gen::new(3);
+        for _ in 0..1000 {
+            let u = g.unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn vec_lengths_in_range() {
+        let mut g = Gen::new(2);
+        for _ in 0..100 {
+            let v = g.vec_f32(3..17, 0.0..1.0);
+            assert!((3..17).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is nonnegative", 100, |g| g.f64_in(-5.0..5.0), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_case() {
+        check("always fails", 10, |g| g.usize_in(0..5), |_| false);
+    }
+
+    #[test]
+    fn shrink_reports_smaller_case() {
+        // Property fails for vectors longer than 8; the shrink pass should
+        // find one not larger than the original.
+        let result = std::panic::catch_unwind(|| {
+            check("len<=8", 50, |g| g.vec_f64(0..64, 0.0..1.0), |v| v.len() <= 8)
+        });
+        assert!(result.is_err());
+    }
+}

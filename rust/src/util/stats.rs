@@ -1,0 +1,186 @@
+//! Statistics for the paper's reporting conventions: mean ± 2σ confidence
+//! bands (Figure 2), and the relative-squared-error trace of Table 2.
+
+/// Streaming mean/variance (Welford).  Numerically stable for long traces.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n−1 denominator); 0 for fewer than two points.
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// The paper's Figure-2 band: mean ± 2σ.
+    pub fn band2(&self) -> (f64, f64) {
+        (self.mean - 2.0 * self.std(), self.mean + 2.0 * self.std())
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Relative squared error exactly as the paper defines under Table 2:
+/// RSE = ((y_t − y*) / y_t)² × 100 [percent].
+pub fn rse_percent(y_t: f64, y_star: f64) -> f64 {
+    if y_t == 0.0 {
+        return f64::NAN;
+    }
+    let r = (y_t - y_star) / y_t;
+    r * r * 100.0
+}
+
+/// RSE trace for a whole objective trajectory against its final value.
+pub fn rse_trace(objs: &[f64]) -> Vec<f64> {
+    if objs.is_empty() {
+        return Vec::new();
+    }
+    let y_star = *objs.last().unwrap();
+    objs.iter().map(|&y| rse_percent(y, y_star)).collect()
+}
+
+/// Index into a trace at a checkpoint, clamping to the last entry (used when
+/// a run is shorter than the paper's 10 000-step convention).
+pub fn at_checkpoint(trace: &[f64], it: usize) -> f64 {
+    if trace.is_empty() {
+        return f64::NAN;
+    }
+    trace[it.min(trace.len() - 1)]
+}
+
+/// Format `mean (± 2σ)` the way Table 2 prints cells.
+pub fn fmt_pm(mean: f64, std: f64) -> String {
+    format!("{:.2}% (±{:.2}%)", mean, 2.0 * std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut o = OnlineStats::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((o.std() - std(&xs)).abs() < 1e-12);
+        assert_eq!(o.count(), 5);
+        assert_eq!(o.min(), 1.0);
+        assert_eq!(o.max(), 10.0);
+    }
+
+    #[test]
+    fn online_single_point() {
+        let mut o = OnlineStats::new();
+        o.push(42.0);
+        assert_eq!(o.mean(), 42.0);
+        assert_eq!(o.var(), 0.0);
+    }
+
+    #[test]
+    fn band_is_symmetric() {
+        let mut o = OnlineStats::new();
+        for x in [1.0, 3.0] {
+            o.push(x);
+        }
+        let (lo, hi) = o.band2();
+        assert!((hi + lo - 2.0 * o.mean()).abs() < 1e-12);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn rse_definition() {
+        // y_t = 2, y* = 1 → ((2-1)/2)^2 = 0.25 → 25%
+        assert!((rse_percent(2.0, 1.0) - 25.0).abs() < 1e-12);
+        // converged point has zero RSE
+        assert_eq!(rse_percent(5.0, 5.0), 0.0);
+        assert!(rse_percent(0.0, 1.0).is_nan());
+    }
+
+    #[test]
+    fn rse_trace_ends_at_zero() {
+        let objs = [10.0, 5.0, 2.0, 1.0];
+        let t = rse_trace(&objs);
+        assert_eq!(t.len(), 4);
+        assert_eq!(*t.last().unwrap(), 0.0);
+        assert!(t[0] > t[2]);
+    }
+
+    #[test]
+    fn checkpoint_clamps() {
+        let t = [4.0, 3.0, 2.0];
+        assert_eq!(at_checkpoint(&t, 1), 3.0);
+        assert_eq!(at_checkpoint(&t, 99), 2.0);
+        assert!(at_checkpoint(&[], 0).is_nan());
+    }
+
+    #[test]
+    fn empty_slices() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(std(&[1.0]), 0.0);
+        assert!(rse_trace(&[]).is_empty());
+    }
+
+    #[test]
+    fn fmt_table2_cell() {
+        assert_eq!(fmt_pm(85.07, 4.87), "85.07% (±9.74%)");
+    }
+}

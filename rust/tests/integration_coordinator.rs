@@ -1,0 +1,123 @@
+//! Coordinator-level integration: sweeps, report generation, artifact
+//! preflight, and failure injection (no artifacts needed for most).
+
+use simopt::config::{BackendKind, TaskKind};
+use simopt::coordinator::{report, Coordinator, ExperimentSpec, SweepSpec};
+
+fn tmpdir(name: &str) -> String {
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.to_string_lossy().into_owned()
+}
+
+#[test]
+fn native_sweep_produces_full_grid_and_report() {
+    let results_dir = tmpdir("simopt_coord_sweep");
+    let mut coord = Coordinator::new("artifacts", &results_dir).unwrap();
+    let sweep = SweepSpec {
+        task: TaskKind::MeanVariance,
+        sizes: vec![16, 32],
+        backends: vec![BackendKind::Native],
+        reps: 2,
+        epochs: 3,
+        seed: 9,
+    };
+    let results = coord.sweep(&sweep).unwrap();
+    assert_eq!(results.len(), 2);
+    report::write_report(&results_dir, "test", &results, &[0.5, 1.0]).unwrap();
+    let fig2 = std::fs::read_to_string(
+        std::path::Path::new(&results_dir).join("test_fig2.md")).unwrap();
+    assert!(fig2.contains("| 16 |"));
+    assert!(fig2.contains("| 32 |"));
+    let csv = std::fs::read_to_string(
+        std::path::Path::new(&results_dir).join("test_summary.csv")).unwrap();
+    assert_eq!(csv.lines().count(), 3); // header + 2 rows
+}
+
+#[test]
+fn timing_grows_with_size() {
+    let results_dir = tmpdir("simopt_coord_scaling");
+    let mut coord = Coordinator::new("artifacts", &results_dir).unwrap();
+    let small = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Native)
+        .size(32)
+        .epochs(4)
+        .replications(2)
+        .seed(3);
+    let large = small.clone().size(512);
+    let t_small = coord.run(&small).unwrap().time_stats().mean();
+    let t_large = coord.run(&large).unwrap().time_stats().mean();
+    assert!(
+        t_large > t_small,
+        "16× dimension must cost more: {} vs {}",
+        t_large,
+        t_small
+    );
+}
+
+#[test]
+fn xla_without_artifacts_dir_fails_actionably() {
+    let results_dir = tmpdir("simopt_coord_noart");
+    let mut coord =
+        Coordinator::new("/nonexistent/artifact/dir", &results_dir).unwrap();
+    let spec = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Xla)
+        .epochs(1)
+        .replications(1);
+    let err = coord.run(&spec).unwrap_err();
+    let msg = format!("{:#}", err);
+    assert!(msg.contains("make artifacts"), "unhelpful error: {}", msg);
+}
+
+#[test]
+fn native_par_backend_runs() {
+    let results_dir = tmpdir("simopt_coord_par");
+    let mut coord = Coordinator::new("artifacts", &results_dir).unwrap();
+    let spec = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::NativePar)
+        .size(64)
+        .epochs(3)
+        .replications(2)
+        .seed(5);
+    let res = coord.run(&spec).unwrap();
+    assert_eq!(res.reps.len(), 2);
+    assert!(res.reps.iter().all(|r| r.objs.iter().all(|o| o.is_finite())));
+}
+
+#[test]
+fn replications_are_independent_but_reproducible() {
+    let results_dir = tmpdir("simopt_coord_repro");
+    let mut coord = Coordinator::new("artifacts", &results_dir).unwrap();
+    let spec = ExperimentSpec::new(TaskKind::Newsvendor, BackendKind::Native)
+        .size(32)
+        .epochs(3)
+        .replications(3)
+        .seed(7);
+    let a = coord.run(&spec).unwrap();
+    let b = coord.run(&spec).unwrap();
+    for (ra, rb) in a.reps.iter().zip(&b.reps) {
+        assert_eq!(ra.objs, rb.objs);
+    }
+    // different reps differ (independent streams)
+    assert_ne!(a.reps[0].objs, a.reps[1].objs);
+    // different seed ⇒ different trajectories
+    let c = coord.run(&spec.clone().seed(8)).unwrap();
+    assert_ne!(a.reps[0].objs, c.reps[0].objs);
+}
+
+#[test]
+fn classification_track_every_controls_checkpoints() {
+    let results_dir = tmpdir("simopt_coord_track");
+    let mut coord = Coordinator::new("artifacts", &results_dir).unwrap();
+    let mut spec = ExperimentSpec::new(TaskKind::Classification,
+                                       BackendKind::Native)
+        .size(16)
+        .epochs(40)
+        .replications(1)
+        .seed(1);
+    spec.params.batch = 16;
+    spec.params.hbatch = 32;
+    spec.track_every = 10;
+    let res = coord.run(&spec).unwrap();
+    // checkpoints at k = 1, 10, 20, 30, 40
+    assert_eq!(res.reps[0].objs.len(), 5);
+    assert_eq!(res.reps[0].obj_iters, vec![1, 10, 20, 30, 40]);
+}

@@ -1,0 +1,133 @@
+//! End-to-end integration: full optimization runs through the coordinator on
+//! both backends, checking convergence quality and cross-backend agreement —
+//! the Table-2 "same accuracy" claim at test scale.
+
+use simopt::backend::HessianMode;
+use simopt::config::{BackendKind, TaskKind};
+use simopt::coordinator::{Coordinator, ExperimentSpec};
+
+fn artifacts_built() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn results_dir() -> String {
+    let dir = std::env::temp_dir().join("simopt_e2e_results");
+    dir.to_string_lossy().into_owned()
+}
+
+#[test]
+fn mv_both_backends_converge_to_matching_objectives() {
+    if !artifacts_built() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let mut coord = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut results = Vec::new();
+    for backend in [BackendKind::Native, BackendKind::Xla] {
+        let spec = ExperimentSpec::new(TaskKind::MeanVariance, backend)
+            .size(128)
+            .epochs(10)
+            .replications(3)
+            .seed(101);
+        results.push(coord.run(&spec).unwrap());
+    }
+    let native_obj = results[0].final_obj_stats();
+    let xla_obj = results[1].final_obj_stats();
+    // the paper's Table-2 claim: same algorithm, same accuracy — the ±2σ
+    // bands must overlap
+    let (nlo, nhi) = native_obj.band2();
+    let (xlo, xhi) = xla_obj.band2();
+    assert!(
+        nlo <= xhi && xlo <= nhi,
+        "objective bands disjoint: native [{}, {}] vs xla [{}, {}]",
+        nlo, nhi, xlo, xhi
+    );
+}
+
+#[test]
+fn nv_both_backends_converge_to_matching_cost() {
+    if !artifacts_built() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let mut coord = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut finals = Vec::new();
+    for backend in [BackendKind::Native, BackendKind::Xla] {
+        let spec = ExperimentSpec::new(TaskKind::Newsvendor, backend)
+            .size(256)
+            .epochs(8)
+            .replications(3)
+            .seed(102);
+        let res = coord.run(&spec).unwrap();
+        finals.push(res.final_obj_stats());
+    }
+    let rel = (finals[0].mean() - finals[1].mean()).abs() / finals[0].mean();
+    assert!(rel < 0.03, "final costs diverge by {:.1}%", rel * 100.0);
+}
+
+#[test]
+fn lr_both_backends_identical_under_crn() {
+    // Classification batches are gathered host-side, so with CRN both arms
+    // run numerically near-identical iterations.
+    if !artifacts_built() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let mut coord = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut traces = Vec::new();
+    for backend in [BackendKind::Native, BackendKind::Xla] {
+        let spec = ExperimentSpec::new(TaskKind::Classification, backend)
+            .size(64)
+            .epochs(60)
+            .replications(2)
+            .seed(103);
+        let res = coord.run(&spec).unwrap();
+        traces.push(res.reps[0].objs.clone());
+    }
+    assert_eq!(traces[0].len(), traces[1].len());
+    for (a, b) in traces[0].iter().zip(&traces[1]) {
+        assert!((a - b).abs() < 1e-3, "traces diverge: {} vs {}", a, b);
+    }
+}
+
+#[test]
+fn rse_trace_decreases_like_table2() {
+    if !artifacts_built() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let mut coord = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let spec = ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Xla)
+        .size(128)
+        .epochs(20)
+        .replications(3)
+        .seed(104);
+    let res = coord.run(&spec).unwrap();
+    let cps = res.rse_checkpoints(&[0.1, 0.5, 1.0]);
+    assert_eq!(cps.len(), 3);
+    // RSE decreases towards 0 at the final checkpoint (definitionally)
+    assert!(cps[2].2 < 1e-9);
+    assert!(cps[0].2 >= cps[1].2,
+            "RSE must decay: {:?}", cps);
+}
+
+#[test]
+fn sqn_explicit_vs_twoloop_same_trajectory_quality() {
+    if !artifacts_built() {
+        eprintln!("[skip] artifacts not built");
+        return;
+    }
+    let mut coord = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut finals = Vec::new();
+    for mode in [HessianMode::Explicit, HessianMode::TwoLoop] {
+        let spec = ExperimentSpec::new(TaskKind::Classification, BackendKind::Xla)
+            .size(64)
+            .epochs(80)
+            .replications(2)
+            .seed(105)
+            .hessian(mode);
+        finals.push(coord.run(&spec).unwrap().final_obj_stats().mean());
+    }
+    assert!((finals[0] - finals[1]).abs() < 0.05,
+            "explicit {} vs twoloop {}", finals[0], finals[1]);
+}

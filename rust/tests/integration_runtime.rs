@@ -1,0 +1,258 @@
+//! Runtime integration: load real AOT artifacts, execute them through PJRT,
+//! and check the numerics against the native implementations.
+//!
+//! These tests need `artifacts/` (run `make artifacts` first); they are
+//! skipped gracefully when it is missing so `cargo test` works in a fresh
+//! checkout.
+
+use simopt::backend::native::{NativeLr, NativeMode, NativeMv, NativeNv};
+use simopt::backend::xla::{XlaLr, XlaMv, XlaNv};
+use simopt::backend::{HessianMode, LrBackend, MvBackend, NvBackend};
+use simopt::rng::StreamTree;
+use simopt::runtime::{Arg, Engine};
+use simopt::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use simopt::tasks::CorrectionMemory;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("[skip] artifacts not built");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_lists_all_entries() {
+    let Some(engine) = engine() else { return };
+    for entry in ["mv_epoch", "mv_grad_step", "nv_grad", "lr_grad", "lr_hvp",
+                  "lr_hbuild", "lr_happly", "lr_dir_twoloop"] {
+        let key = if entry.starts_with("lr") { "n" } else { "d" };
+        assert!(
+            !engine.manifest.available_params(entry, key).is_empty(),
+            "no artifacts for entry {}",
+            entry
+        );
+    }
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(engine) = engine() else { return };
+    let d = engine.manifest.available_params("mv_epoch", "d")[0];
+    let a = engine.load_by_params("mv_epoch", &[("d", d)]).unwrap();
+    let before = engine.cached();
+    let b = engine.load_by_params("mv_epoch", &[("d", d)]).unwrap();
+    assert_eq!(engine.cached(), before);
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+}
+
+#[test]
+fn mv_epoch_artifact_outputs_valid_simplex_iterate() {
+    let Some(engine) = engine() else { return };
+    let d = engine.manifest.available_params("mv_epoch", "d")[0] as usize;
+    let tree = StreamTree::new(5);
+    let universe = AssetUniverse::generate(&tree, d);
+    let mut xla = XlaMv::new(&engine, &universe, 64, 25).unwrap();
+    let w0 = vec![1.0f32 / d as f32; d];
+    let (w1, obj) = xla.epoch(&w0, 0, [1, 2]).unwrap();
+    assert_eq!(w1.len(), d);
+    assert!(simopt::tasks::mean_variance::in_simplex(&w1, 1e-4));
+    assert!(obj.is_finite());
+    // deterministic per key
+    let (w2, obj2) = xla.epoch(&w0, 0, [1, 2]).unwrap();
+    assert_eq!(w1, w2);
+    assert_eq!(obj, obj2);
+    // a different key samples a different panel: the empirical objective
+    // estimate must differ (the iterate itself may converge to the same
+    // vertex — asset σ ≤ 0.025 is small next to the μ spread)
+    let (_, obj3) = xla.epoch(&w0, 0, [1, 3]).unwrap();
+    assert_ne!(obj, obj3);
+}
+
+#[test]
+fn mv_backends_agree_statistically() {
+    // Same algorithm, same schedule, different RNG realizations: after a few
+    // epochs both arms should reach similar exact objectives.
+    let Some(engine) = engine() else { return };
+    let d = engine.manifest.available_params("mv_epoch", "d")[0] as usize;
+    let tree = StreamTree::new(6);
+    let universe = AssetUniverse::generate(&tree, d);
+    let w0 = vec![1.0f32 / d as f32; d];
+    let mut xla = XlaMv::new(&engine, &universe, 64, 25).unwrap();
+    let mut native = NativeMv::new(universe.clone(), 64, 25,
+                                   NativeMode::Sequential);
+    let sub = tree.subtree(&[0]);
+    let (wx, _) = simopt::opt::run_mv(&mut xla, w0.clone(), 8, &sub).unwrap();
+    let (wn, _) = simopt::opt::run_mv(&mut native, w0, 8, &sub).unwrap();
+    let ox = universe.exact_objective(&wx);
+    let on = universe.exact_objective(&wn);
+    assert!(
+        (ox - on).abs() < 0.05 * on.abs().max(0.01),
+        "exact objectives diverge: xla {} vs native {}",
+        ox,
+        on
+    );
+}
+
+#[test]
+fn nv_grad_artifact_matches_native_bounds_and_stats() {
+    let Some(engine) = engine() else { return };
+    let d = engine.manifest.available_params("nv_grad", "d")[0] as usize;
+    let tree = StreamTree::new(7);
+    let inst = NewsvendorInstance::generate(&tree, d, 4, 0.6);
+    let mut xla = XlaNv::new(&engine, &inst, 32).unwrap();
+    let x = inst.feasible_start();
+    let (g, obj) = xla.grad_obj(&x, [3, 4]).unwrap();
+    assert_eq!(g.len(), d);
+    assert!(obj.is_finite() && obj > 0.0);
+    // gradient bracketed by the cost structure (CDF ∈ [0,1])
+    for j in 0..d {
+        assert!(g[j] >= inst.k[j] - inst.v[j] - 1e-4);
+        assert!(g[j] <= inst.k[j] + inst.h[j] + 1e-4);
+    }
+    // statistical agreement with the native estimate at the same point
+    let mut native = NativeNv::new(inst.clone(), 32, NativeMode::Sequential);
+    let (gn, objn) = native.grad_obj(&x, [3, 4]).unwrap();
+    let mean_diff: f64 = g
+        .iter()
+        .zip(&gn)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .sum::<f64>()
+        / d as f64;
+    // different RNG realizations of a 32-sample CDF estimate: the indicator
+    // mean has sd ≈ 0.5/√32 ≈ 0.09, scaled by (h+v) ≈ 5
+    assert!(mean_diff < 1.0, "mean |Δg| too large: {}", mean_diff);
+    assert!((obj - objn).abs() / objn.abs() < 0.05,
+            "objectives diverge: {} vs {}", obj, objn);
+}
+
+#[test]
+fn lr_grad_artifact_matches_native_exactly() {
+    // Identical batch (CRN) ⇒ the two arms compute the same mathematical
+    // function; agreement is up to float reassociation only.
+    let Some(engine) = engine() else { return };
+    let n = engine.manifest.available_params("lr_grad", "n")[0] as usize;
+    let tree = StreamTree::new(8);
+    let data = ClassifyData::generate(&tree, n);
+    let mut xla = XlaLr::new(&engine, &data, 64, 256, 25,
+                             HessianMode::Explicit).unwrap();
+    let mut native = NativeLr::new(&data, NativeMode::Sequential,
+                                   HessianMode::Explicit);
+    let w: Vec<f32> = (0..n).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.02).collect();
+    let idx: Vec<usize> = (0..64).map(|i| i * 3 % data.n_samples).collect();
+    let (gx, lx) = xla.grad(&w, &data, &idx).unwrap();
+    let (gn, ln) = native.grad(&w, &data, &idx).unwrap();
+    assert!((lx - ln).abs() < 1e-4, "loss {} vs {}", lx, ln);
+    for j in 0..n {
+        assert!((gx[j] - gn[j]).abs() < 1e-4, "g[{}]: {} vs {}", j, gx[j], gn[j]);
+    }
+}
+
+#[test]
+fn lr_hvp_and_directions_match_native() {
+    let Some(engine) = engine() else { return };
+    let n = engine.manifest.available_params("lr_hvp", "n")[0] as usize;
+    let tree = StreamTree::new(9);
+    let data = ClassifyData::generate(&tree, n);
+    let mut xla = XlaLr::new(&engine, &data, 64, 256, 25,
+                             HessianMode::Explicit).unwrap();
+    let mut native = NativeLr::new(&data, NativeMode::Sequential,
+                                   HessianMode::Explicit);
+    let w: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin() * 0.1).collect();
+    let s: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos() * 0.05).collect();
+    let idx: Vec<usize> = (0..256).map(|i| i * 5 % data.n_samples).collect();
+    let yx = xla.hvp(&w, &s, &data, &idx).unwrap();
+    let yn = native.hvp(&w, &s, &data, &idx).unwrap();
+    // host-gathered rows for the raw-kernel correction pairs below
+    let mut xh = Vec::new();
+    let mut zh = Vec::new();
+    data.gather(&idx, &mut xh, &mut zh);
+    let _ = &zh;
+    for j in 0..n {
+        assert!((yx[j] - yn[j]).abs() < 1e-4, "y[{}]: {} vs {}", j, yx[j], yn[j]);
+    }
+
+    // correction memory with positive curvature
+    let mut mem = CorrectionMemory::new(25, n);
+    for t in 0..4 {
+        let sv: Vec<f32> = (0..n)
+            .map(|i| ((i + t) as f32 * 0.17).sin() * 0.05)
+            .collect();
+        let yv = {
+            let mut out = vec![0.0f32; n];
+            simopt::tasks::classification::hvp(&w, &sv, &xh, &mut out);
+            // regularize so curvature is safely positive for the test
+            for (o, svj) in out.iter_mut().zip(&sv) {
+                *o += 0.01 * svj;
+            }
+            out
+        };
+        mem.push(&sv, &yv);
+    }
+    assert!(mem.count >= 2);
+    let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+    let dx = xla.direction(&mem, &g).unwrap();
+    let dn = native.direction(&mem, &g).unwrap();
+    for j in 0..n {
+        assert!((dx[j] - dn[j]).abs() < 2e-2 * (1.0 + dn[j].abs()),
+                "d[{}]: {} vs {}", j, dx[j], dn[j]);
+    }
+
+    // two-loop mode agrees with explicit mode
+    let mut xla2 = XlaLr::new(&engine, &data, 64, 256, 25,
+                              HessianMode::TwoLoop).unwrap();
+    let d2 = xla2.direction(&mem, &g).unwrap();
+    for j in 0..n {
+        assert!((d2[j] - dn[j]).abs() < 2e-2 * (1.0 + dn[j].abs()),
+                "twoloop d[{}]: {} vs {}", j, d2[j], dn[j]);
+    }
+}
+
+/// `unwrap_err` without requiring `Debug` on the success type (xla Literals
+/// are not `Debug`).
+fn expect_err<T>(r: anyhow::Result<T>) -> anyhow::Error {
+    match r {
+        Ok(_) => panic!("expected an error"),
+        Err(e) => e,
+    }
+}
+
+#[test]
+fn shape_mismatch_rejected_cleanly() {
+    let Some(engine) = engine() else { return };
+    let d = engine.manifest.available_params("mv_epoch", "d")[0];
+    let exec = engine.load_by_params("mv_epoch", &[("d", d)]).unwrap();
+    let wrong = vec![0.0f32; 3];
+    let key = [0u32, 0];
+    // wrong vector length
+    let err = expect_err(exec.call(&[
+        Arg::F32(&wrong),
+        Arg::F32(&wrong),
+        Arg::F32(&wrong),
+        Arg::U32(&key),
+        Arg::ScalarI32(0),
+    ]));
+    assert!(err.to_string().contains("elements"), "{}", err);
+    // wrong arity
+    let err = expect_err(exec.call(&[Arg::F32(&wrong)]));
+    assert!(err.to_string().contains("inputs"), "{}", err);
+    // wrong dtype (f32 where the key's u32 belongs)
+    let w = vec![0.0f32; d as usize];
+    let err = expect_err(exec.call(&[
+        Arg::F32(&w),
+        Arg::F32(&w),
+        Arg::F32(&w),
+        Arg::F32(&w[..2]),
+        Arg::ScalarI32(0),
+    ]));
+    assert!(err.to_string().contains("expects"), "{}", err);
+}
+
+#[test]
+fn missing_artifact_has_actionable_error() {
+    let Some(engine) = engine() else { return };
+    let err = expect_err(engine.load_by_params("mv_epoch", &[("d", 999_983)]));
+    let msg = format!("{:#}", err);
+    assert!(msg.contains("mv_epoch"), "{}", msg);
+    assert!(msg.contains("999983"), "{}", msg);
+}

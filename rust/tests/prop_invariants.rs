@@ -1,0 +1,225 @@
+//! Property-based invariants over the coordinator's substrates, via the
+//! in-tree mini harness (`simopt::util::prop`): LP optimality/feasibility,
+//! FW iterate feasibility, LMO agreement between the analytic rule and the
+//! LP solver, RNG stream hygiene, JSON round-trips, and stats identities.
+
+use simopt::lp::{self, LpProblem, LpResult};
+use simopt::rng::{Philox, StreamTree};
+use simopt::tasks::mean_variance as mv;
+use simopt::util::json::Value;
+use simopt::util::prop::{check, Gen};
+
+/// Random bounded LP: positive technology rows ⇒ bounded, origin-feasible.
+fn random_lp(g: &mut Gen) -> LpProblem {
+    let n = g.usize_in(1..6);
+    let m = g.usize_in(1..5);
+    let c: Vec<f64> = (0..n).map(|_| g.f64_in(-3.0..3.0)).collect();
+    let a: Vec<f64> = (0..m * n).map(|_| g.f64_in(0.05..2.0)).collect();
+    let b: Vec<f64> = (0..m).map(|_| g.f64_in(0.2..5.0)).collect();
+    LpProblem::new(c, a, b)
+}
+
+#[test]
+fn lp_optimum_feasible_and_beats_random_feasible_points() {
+    check("lp optimal dominates sampled points", 150, random_lp, |p| {
+        match lp::solve(p) {
+            LpResult::Optimal { x, obj, .. } => {
+                if !lp::is_feasible(p, &x, 1e-6) {
+                    return false;
+                }
+                // scaled random points must never beat the optimum
+                let mut g = Gen::new(p.n as u64 * 31 + p.m as u64);
+                for _ in 0..10 {
+                    let mut y: Vec<f64> =
+                        (0..p.n).map(|_| g.f64_in(0.0..3.0)).collect();
+                    let mut shrink: f64 = 1.0;
+                    for r in 0..p.m {
+                        let lhs: f64 =
+                            (0..p.n).map(|j| p.a[r * p.n + j] * y[j]).sum();
+                        if lhs > p.b[r] && lhs > 0.0 {
+                            shrink = shrink.min(p.b[r] / lhs);
+                        }
+                    }
+                    y.iter_mut().for_each(|v| *v *= shrink);
+                    let oy: f64 =
+                        p.c.iter().zip(&y).map(|(c, v)| c * v).sum();
+                    if obj > oy + 1e-6 {
+                        return false;
+                    }
+                }
+                true
+            }
+            _ => false, // positive A, positive b: always optimal
+        }
+    });
+}
+
+#[test]
+fn lp_scaling_invariance() {
+    // Scaling the objective scales the optimum value, not the vertex.
+    check("lp objective scaling", 100, random_lp, |p| {
+        let r1 = lp::solve(p);
+        let scaled = LpProblem::new(
+            p.c.iter().map(|c| c * 2.0).collect(),
+            p.a.clone(),
+            p.b.clone(),
+        );
+        let r2 = lp::solve(&scaled);
+        match (r1, r2) {
+            (LpResult::Optimal { obj: o1, .. }, LpResult::Optimal { obj: o2, .. }) => {
+                (2.0 * o1 - o2).abs() < 1e-6 * (1.0 + o1.abs())
+            }
+            _ => false,
+        }
+    });
+}
+
+#[test]
+fn analytic_simplex_lmo_equals_lp_solution() {
+    check("analytic LMO == LP over capped simplex", 120,
+        |g| g.vec_f32(1..24, -2.0..2.0),
+        |grad| {
+            // LP formulation: min g·s, s ≥ 0, Σ s ≤ 1
+            let n = grad.len();
+            let p = LpProblem::new(
+                grad.iter().map(|&v| v as f64).collect(),
+                vec![1.0; n],
+                vec![1.0],
+            );
+            let lp_obj = match lp::solve(&p) {
+                LpResult::Optimal { obj, .. } => obj,
+                _ => return false,
+            };
+            let analytic = match mv::simplex_lmo(grad) {
+                Some(j) => grad[j] as f64,
+                None => 0.0,
+            };
+            (lp_obj - analytic).abs() < 1e-6
+        });
+}
+
+#[test]
+fn fw_iterates_stay_in_simplex_under_any_vertex_sequence() {
+    check("FW feasibility closed under updates", 150,
+        |g| {
+            let d = g.usize_in(2..16);
+            let steps: Vec<(Option<usize>, f32)> = (0..g.usize_in(1..30))
+                .map(|_| {
+                    let v = if g.bool() { Some(g.usize_in(0..d)) } else { None };
+                    (v, g.f32_in(0.0..1.0))
+                })
+                .collect();
+            (d, steps)
+        },
+        |(d, steps)| {
+            let mut w = vec![1.0f32 / *d as f32; *d];
+            for &(v, gamma) in steps {
+                mv::fw_vertex_update(&mut w, v, gamma);
+                if !mv::in_simplex(&w, 1e-5) {
+                    return false;
+                }
+            }
+            true
+        });
+}
+
+#[test]
+fn stream_tree_paths_never_collide() {
+    check("derived stream keys distinct across paths", 100,
+        |g| {
+            let seed = g.u64_in(0..1_000_000);
+            let a = vec![g.u64_in(0..50), g.u64_in(0..50)];
+            let b = vec![g.u64_in(0..50), g.u64_in(0..50)];
+            (seed, a, b)
+        },
+        |(seed, a, b)| {
+            let t = StreamTree::new(*seed);
+            if a == b {
+                t.derive(a) == t.derive(b)
+            } else {
+                t.derive(a) != t.derive(b)
+            }
+        });
+}
+
+#[test]
+fn philox_jump_ahead_consistency() {
+    check("philox block addressing", 100,
+        |g| (g.u64_in(0..u64::MAX / 2), g.usize_in(0..64)),
+        |&(seed, blocks)| {
+            let mut seq = Philox::new(seed);
+            for _ in 0..blocks * 4 {
+                seq.next_u32();
+            }
+            let mut jumped = Philox::at_block(seed, blocks as u64);
+            seq.next_u32() == jumped.next_u32()
+        });
+}
+
+#[test]
+fn json_roundtrip_arbitrary_trees() {
+    check("json parse∘print == id", 150,
+        |g| random_json(g, 0),
+        |v| {
+            let text = v.to_string_pretty();
+            match Value::parse(&text) {
+                Ok(back) => back == *v,
+                Err(_) => false,
+            }
+        });
+}
+
+fn random_json(g: &mut Gen, depth: usize) -> Value {
+    let choice = if depth >= 3 { g.usize_in(0..4) } else { g.usize_in(0..6) };
+    match choice {
+        0 => Value::Null,
+        1 => Value::Bool(g.bool()),
+        2 => Value::Num((g.f64_in(-1e6..1e6) * 100.0).round() / 100.0),
+        3 => Value::Str(
+            (0..g.usize_in(0..12))
+                .map(|_| char::from(g.usize_in(32..127) as u8))
+                .collect(),
+        ),
+        4 => Value::Arr((0..g.usize_in(0..4))
+            .map(|_| random_json(g, depth + 1))
+            .collect()),
+        _ => Value::Obj((0..g.usize_in(0..4))
+            .map(|i| (format!("k{}", i), random_json(g, depth + 1)))
+            .collect()),
+    }
+}
+
+#[test]
+fn rse_is_scale_invariant() {
+    check("RSE(ay, ay*) == RSE(y, y*)", 200,
+        |g| (g.f64_in(0.1..100.0), g.f64_in(0.1..100.0), g.f64_in(0.1..10.0)),
+        |&(y, ystar, a)| {
+            let r1 = simopt::util::stats::rse_percent(y, ystar);
+            let r2 = simopt::util::stats::rse_percent(a * y, a * ystar);
+            (r1 - r2).abs() < 1e-9 * (1.0 + r1.abs())
+        });
+}
+
+#[test]
+fn correction_memory_count_bounded() {
+    check("memory never exceeds capacity", 100,
+        |g| {
+            let cap = g.usize_in(1..6);
+            let n = g.usize_in(1..8);
+            let pushes = g.usize_in(0..20);
+            (cap, n, pushes)
+        },
+        |&(cap, n, pushes)| {
+            let mut mem = simopt::tasks::CorrectionMemory::new(cap, n);
+            let mut g = Gen::new((cap * 31 + n) as u64);
+            for _ in 0..pushes {
+                let s: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0..1.0)).collect();
+                let y: Vec<f32> = s.iter().map(|&v| v * 1.3 + 0.01).collect();
+                mem.push(&s, &y);
+                if mem.count > cap {
+                    return false;
+                }
+            }
+            true
+        });
+}
