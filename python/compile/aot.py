@@ -8,6 +8,7 @@ reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
 
 Usage (from python/):  python -m compile.aot --out ../artifacts [--full]
                        [--entries mv_epoch,nv_grad] [--paper-batches]
+                       [--reps R]   # + replication-batched artifacts (§11)
 """
 
 import argparse
@@ -84,10 +85,13 @@ class Spec:
 
 
 def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
-                nv_samples=32, lr_batch=64, lr_hbatch=256, lr_mem=25):
+                nv_samples=32, lr_batch=64, lr_hbatch=256, lr_mem=25,
+                reps=0):
     """The full artifact table.  Dimension lists come from the CLI; batch
     and inner-loop parameters mirror the paper's §4.1 settings (modulo the
-    tile-friendly rounding documented in DESIGN.md §10)."""
+    tile-friendly rounding documented in DESIGN.md §10).  `reps > 0` adds
+    the replication-batched entries (DESIGN.md §11): vmap lowerings that
+    advance all `reps` replications in one dispatch."""
     specs = []
 
     for d in mv_dims:
@@ -100,6 +104,17 @@ def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
              ("key", (2,), U32), ("k_epoch", (), I32)],
             [("w_out", (d,), F32), ("obj", (), F32)],
             "mean_variance"))
+        if reps > 0:
+            specs.append(Spec(
+                "mv_epoch_batch",
+                functools.partial(model.mv_epoch_batch, n_samples=n,
+                                  m_inner=m),
+                {"d": d, "n": n, "m": m, "r": reps},
+                [("w", (reps, d), F32), ("mu", (d,), F32),
+                 ("sigma", (d,), F32), ("keys", (reps, 2), U32),
+                 ("k_epoch", (), I32)],
+                [("w_out", (reps, d), F32), ("obj", (reps,), F32)],
+                "mean_variance"))
 
     # per-iteration dispatch ablation (A1): one mid-size variant
     if mv_dims:
@@ -124,6 +139,24 @@ def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
              ("key", (2,), U32)],
             [("grad", (d,), F32), ("obj", (), F32)],
             "newsvendor"))
+        if reps > 0:
+            # device-resident batched epoch path: one panel dispatch per
+            # epoch, one resident-gradient dispatch per inner iteration
+            specs.append(Spec(
+                "nv_panel_batch",
+                functools.partial(model.nv_panel_batch, n_samples=s),
+                {"d": d, "s": s, "r": reps},
+                [("mu", (d,), F32), ("sigma", (d,), F32),
+                 ("keys", (reps, 2), U32)],
+                [("panel", (reps, s, d), F32)],
+                "newsvendor"))
+            specs.append(Spec(
+                "nv_grad_panel_batch", model.nv_grad_panel_batch,
+                {"d": d, "s": s, "r": reps},
+                [("x", (reps, d), F32), ("panel", (reps, s, d), F32),
+                 ("kc", (d,), F32), ("h", (d,), F32), ("v", (d,), F32)],
+                [("grad", (reps, d), F32), ("obj", (reps,), F32)],
+                "newsvendor"))
         # device-resident epoch path (§Perf): sample the panel once per
         # epoch, keep it on device, evaluate gradients against the buffer
         specs.append(Spec(
@@ -167,6 +200,21 @@ def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
              ("idx", (bh,), I32)],
             [("y", (n,), F32)],
             "classification"))
+        if reps > 0:
+            specs.append(Spec(
+                "lr_grad_batch", model.lr_grad_batch,
+                {"n": n, "b": b, "rows": rows, "r": reps},
+                [("w", (reps, n), F32), ("x_full", (rows, n), F32),
+                 ("z_full", (rows,), F32), ("idx", (reps, b), I32)],
+                [("grad", (reps, n), F32), ("loss", (reps,), F32)],
+                "classification"))
+            specs.append(Spec(
+                "lr_hvp_batch", model.lr_hvp_batch,
+                {"n": n, "bh": bh, "rows": rows, "r": reps},
+                [("wbar", (reps, n), F32), ("s", (reps, n), F32),
+                 ("x_full", (rows, n), F32), ("idx", (reps, bh), I32)],
+                [("y", (reps, n), F32)],
+                "classification"))
         specs.append(Spec(
             "lr_hbuild", model.lr_hbuild, {"n": n, "mem": mem},
             [("s_mem", (mem, n), F32), ("y_mem", (mem, n), F32),
@@ -209,6 +257,10 @@ def main():
     ap.add_argument("--mv-dims", default="", help="override, e.g. 128,512")
     ap.add_argument("--nv-dims", default="")
     ap.add_argument("--lr-dims", default="")
+    ap.add_argument("--reps", type=int, default=0,
+                    help="also emit replication-batched artifacts that "
+                         "advance this many replications per dispatch "
+                         "(DESIGN.md §11; 0 = skip)")
     args = ap.parse_args()
 
     def dims(flag, default, full):
@@ -216,7 +268,7 @@ def main():
             return [int(x) for x in flag.split(",") if x]
         return full if args.full else default
 
-    kw = {}
+    kw = {"reps": args.reps}
     if args.paper_batches:
         kw.update(lr_batch=50, lr_hbatch=300)
     specs = build_specs(dims(args.mv_dims, DEFAULT_MV, FULL_MV),

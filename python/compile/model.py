@@ -217,3 +217,68 @@ def lr_dir_twoloop(s_mem, y_mem, m_count, g):
         return r + s_mem[j] * (alpha[j] - b)
 
     return lax.fori_loop(0, mem, fwd, r)
+
+
+# ---------------------------------------------------------------------------
+# Replication-batched entry points (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# One dispatch advances ALL R replications of an experiment — the fusion
+# Zhou, Lange & Suchard apply to independent chains.  Each entry is a
+# jax.vmap of the per-replication graph over the replication axis, so row r
+# computes the unbatched math on its own threefry key; shared problem data
+# (mu/sigma/costs/dataset) is broadcast, not replicated.
+
+
+def mv_epoch_batch(w, mu, sigma, keys, k_epoch, *, n_samples, m_inner):
+    """Batched Algorithm-1 epoch: w is (R, d), keys is (R, 2) uint32.
+    Returns (w', f̂) stacked over the replication axis."""
+    return jax.vmap(
+        lambda wr, kr: mv_epoch(wr, mu, sigma, kr, k_epoch,
+                                n_samples=n_samples, m_inner=m_inner)
+    )(w, keys)
+
+
+def nv_grad_batch(x, mu, sigma, kc, h, v, keys, *, n_samples):
+    """Batched Algorithm-2 gradient with in-graph resampling — the naive
+    variant (resamples every call; costs shipped per dispatch).  The
+    runtime uses the device-resident pair below instead; this one is kept
+    as the batched analogue of the `nv_grad` per-call ablation."""
+    return jax.vmap(
+        lambda xr, kr: nv_grad(xr, mu, sigma, kc, h, v, kr,
+                               n_samples=n_samples)
+    )(x, keys)
+
+
+def nv_panel_batch(mu, sigma, keys, *, n_samples):
+    """Batched device-resident epoch path (§Perf): sample every
+    replication's demand panel once per epoch — output (R, S, d) stays a
+    PJRT buffer for all M inner iterations."""
+    return jax.vmap(
+        lambda kr: nv_panel(mu, sigma, kr, n_samples=n_samples)
+    )(keys)
+
+
+def nv_grad_panel_batch(x, panel, kc, h, v):
+    """Batched gradient (9) + cost (6) against resident panels: x is
+    (R, d), panel is (R, S, d); cost vectors are shared (uploaded once)."""
+    return jax.vmap(
+        lambda xr, pr: nv_grad_panel(xr, pr, kc, h, v)
+    )(x, panel)
+
+
+def lr_grad_batch(w, x_full, z_full, idx):
+    """Batched device-resident minibatch gradient: w is (R, n), idx is
+    (R, b) — every replication gathers its own minibatch in-graph against
+    the ONE resident dataset."""
+    return jax.vmap(
+        lambda wr, ir: lr_grad_ds(wr, x_full, z_full, ir)
+    )(w, idx)
+
+
+def lr_hvp_batch(wbar, s, x_full, idx):
+    """Batched device-resident Hessian-vector product: wbar/s are (R, n),
+    idx is (R, b_H)."""
+    return jax.vmap(
+        lambda wr, sr, ir: lr_hvp_ds(wr, sr, x_full, ir)
+    )(wbar, s, idx)

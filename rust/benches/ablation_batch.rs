@@ -17,17 +17,19 @@ use simopt::rng::StreamTree;
 use simopt::sim::AssetUniverse;
 
 fn main() {
-    let epochs = common::env_usize("SIMOPT_BENCH_EPOCHS", 8);
-    let reps = common::env_usize("SIMOPT_BENCH_REPS", 3);
-    let d = common::env_usize("SIMOPT_BENCH_D", 2048);
-    let batches = [16usize, 32, 64, 128, 256];
+    let smoke = common::smoke();
+    let epochs = if smoke { 2 } else { common::env_usize("SIMOPT_BENCH_EPOCHS", 8) };
+    let reps = if smoke { 1 } else { common::env_usize("SIMOPT_BENCH_REPS", 3) };
+    let d = if smoke { 128 } else { common::env_usize("SIMOPT_BENCH_D", 2048) };
+    let batches: &[usize] =
+        if smoke { &[16, 256] } else { &[16, 32, 64, 128, 256] };
 
     let tree = StreamTree::new(42);
     let universe = AssetUniverse::generate(&tree, d);
     let w0 = vec![1.0f32 / d as f32; d];
     let mut bench = Bench::new("ablation_batch").warmup(1).reps(reps);
 
-    for &n in &batches {
+    for &n in batches {
         let mut backend =
             NativeMv::new(universe.clone(), n, 25, NativeMode::Sequential);
         bench.case(&format!("native_d{}_N{}", d, n), || {

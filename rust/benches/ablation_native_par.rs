@@ -11,9 +11,14 @@ use simopt::config::{BackendKind, TaskKind};
 use simopt::coordinator::{Coordinator, ExperimentSpec};
 
 fn main() {
-    let epochs = common::env_usize("SIMOPT_BENCH_EPOCHS", 8);
-    let reps = common::env_usize("SIMOPT_BENCH_REPS", 3);
-    let sizes = common::env_sizes(vec![512, 2048]);
+    let smoke = common::smoke();
+    let epochs = if smoke { 2 } else { common::env_usize("SIMOPT_BENCH_EPOCHS", 8) };
+    let reps = if smoke { 1 } else { common::env_usize("SIMOPT_BENCH_REPS", 3) };
+    let sizes = if smoke {
+        vec![64]
+    } else {
+        common::env_sizes(vec![512, 2048])
+    };
     let mut coord = Coordinator::new("artifacts", "results").unwrap();
     let mut bench = Bench::new("ablation_native_par");
 

@@ -16,6 +16,15 @@ pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// True in the CI bench-smoke job (`cargo bench --bench X -- --test`, the
+/// flag criterion benches also accept, or SIMOPT_BENCH_SMOKE=1): benches
+/// shrink to tiny workloads that only verify the target still runs —
+/// bit-rot detection without timing claims.
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--test" || a == "--smoke")
+        || matches!(std::env::var("SIMOPT_BENCH_SMOKE").as_deref(), Ok("1"))
+}
+
 pub fn env_sizes(default: Vec<usize>) -> Vec<usize> {
     match std::env::var("SIMOPT_BENCH_SIZES") {
         Ok(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
@@ -38,6 +47,11 @@ pub fn run_figure2(task: TaskKind, default_epochs: usize) {
     sweep.reps = env_usize("SIMOPT_BENCH_REPS", 5);
     sweep.epochs = env_usize("SIMOPT_BENCH_EPOCHS", default_epochs);
     sweep.backends = vec![BackendKind::Native, BackendKind::Xla];
+    if smoke() {
+        sweep.sizes.truncate(1);
+        sweep.reps = 1;
+        sweep.epochs = sweep.epochs.min(2);
+    }
 
     let mut coord = Coordinator::new("artifacts", "results").unwrap();
     let results = coord.sweep(&sweep).expect("sweep");

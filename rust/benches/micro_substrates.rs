@@ -12,14 +12,17 @@ use simopt::sim::NewsvendorInstance;
 use simopt::tasks::newsvendor::NvLmo;
 
 fn main() {
-    let reps = common::env_usize("SIMOPT_BENCH_REPS", 20);
+    let smoke = common::smoke();
+    let reps =
+        if smoke { 2 } else { common::env_usize("SIMOPT_BENCH_REPS", 20) };
+    let draws = if smoke { 100_000 } else { 1_000_000 };
     let mut bench = Bench::new("micro_substrates").warmup(2).reps(reps);
 
-    // RNG throughput: 1M uniforms / 1M normals
+    // RNG throughput: 1M uniforms / 1M normals (scaled down under --test)
     let mut rng = Philox::new(1);
     bench.case("philox_1M_u32", || {
         let mut acc = 0u32;
-        for _ in 0..1_000_000 {
+        for _ in 0..draws {
             acc = acc.wrapping_add(rng.next_u32());
         }
         std::hint::black_box(acc);
@@ -27,7 +30,7 @@ fn main() {
     let mut norm = NormalSampler::from_seed(2);
     bench.case("boxmuller_1M_normals", || {
         let mut acc = 0.0f32;
-        for _ in 0..1_000_000 {
+        for _ in 0..draws {
             acc += norm.next();
         }
         std::hint::black_box(acc);

@@ -16,7 +16,8 @@ fn main() {
         eprintln!("[bench] artifacts/ missing — run `make artifacts` first");
         return;
     }
-    let reps = common::env_usize("SIMOPT_BENCH_REPS", 7);
+    let smoke = common::smoke();
+    let reps = if smoke { 1 } else { common::env_usize("SIMOPT_BENCH_REPS", 7) };
     let fracs = [0.005, 0.01, 0.05, 0.1, 1.0];
     let mut coord = Coordinator::new("artifacts", "results").unwrap();
 
@@ -27,6 +28,7 @@ fn main() {
         (TaskKind::Newsvendor, 2048, common::env_usize("SIMOPT_BENCH_EPOCHS", 40)),
         (TaskKind::Classification, 256, common::env_usize("SIMOPT_BENCH_EPOCHS", 400)),
     ] {
+        let epochs = if smoke { epochs.min(5) } else { epochs };
         let mut results = Vec::new();
         for backend in [BackendKind::Xla, BackendKind::Native] {
             let spec = ExperimentSpec::new(task, backend)
@@ -35,7 +37,16 @@ fn main() {
                 .replications(reps)
                 .seed(42);
             eprintln!("[table2] {} {} d={} reps={}", task, backend, size, reps);
-            results.push(coord.run(&spec).expect("run"));
+            match coord.run(&spec) {
+                Ok(res) => results.push(res),
+                Err(e) => eprintln!(
+                    "[table2] skipping {} {}: {:#}", task, backend, e),
+            }
+        }
+        if results.len() < 2 {
+            eprintln!("[table2] {}: not enough arms ran — skipping table",
+                      task);
+            continue;
         }
         println!("{}", report::table2_markdown(&results, &fracs));
         report::write_report("results", &format!("table2_{}", task), &results,

@@ -68,3 +68,85 @@ pub enum HessianMode {
     /// Two-loop recursion, O(Mn).
     TwoLoop,
 }
+
+// ---------------------------------------------------------------------------
+// Replication-batched backends (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+//
+// The per-replication traits above advance ONE replication per call; an
+// R-replication experiment therefore costs R dispatches per step — the
+// many-small-launches pattern that wastes both the thread pool and the
+// accelerator.  The batch traits below advance ALL replications of an
+// experiment in one call on row-major `[R × n]` panels (row r belongs to
+// replication r).  Contract shared by every implementation:
+//
+// * `keys[r]` / the index sets for row r are derived from the SAME
+//   `StreamTree` subtree the sequential path uses, and each row's
+//   arithmetic is the same operations in the same order as the
+//   per-replication backend.  On the native arm this makes batched and
+//   sequential runs bit-for-bit identical (enforced by
+//   tests/batch_determinism.rs).  The XLA arm's vmap-lowered artifacts
+//   were measured row-by-row against their per-replication originals in
+//   jax (panels, gradients, losses, HVPs, objectives: all bitwise) —
+//   but vmap can in principle reassociate reductions, so the batched
+//   artifact set sticks to lowerings where that was verified
+//   (DESIGN.md §11).
+// * Implementations may parallelize across the replication axis
+//   (replication-major data parallelism) or fuse it into one device
+//   dispatch; neither may change per-row arithmetic.
+
+/// Task 1, batched: one Algorithm-1 epoch for all R replications.
+pub trait MvBatchBackend {
+    fn name(&self) -> &'static str;
+
+    /// Number of replications the backend was built for.
+    fn batch_reps(&self) -> usize;
+
+    /// Advance the `[R × d]` iterate panel `w` in place by one fused epoch;
+    /// `keys[r]` addresses replication r's Monte-Carlo panel.  Returns the
+    /// per-replication end-of-epoch empirical objectives.
+    fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
+                   keys: &[[u32; 2]]) -> Result<Vec<f64>>;
+}
+
+/// Task 2, batched: the Monte-Carlo gradient + objective estimate for all R
+/// replications at their own iterates.  The LP LMO stays per-replication in
+/// the driver (it is host-side in both arms).
+pub trait NvBatchBackend {
+    fn name(&self) -> &'static str;
+
+    fn batch_reps(&self) -> usize;
+
+    /// `x` and `g` are `[R × d]` row-major panels; `keys[r]` addresses
+    /// replication r's epoch panel (same key ⇒ same panel, counter-based
+    /// RNG).  Returns the per-replication objective estimates.
+    fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
+                      g: &mut [f32]) -> Result<Vec<f64>>;
+}
+
+/// Task 3, batched: the SQN compute kernels for all R replications.  The
+/// driver owns per-replication minibatch indices, ω̄ averaging and
+/// correction memories, exactly as in the sequential path.
+pub trait LrBatchBackend {
+    fn name(&self) -> &'static str;
+
+    fn batch_reps(&self) -> usize;
+
+    /// Minibatch gradient (12) + mean loss per replication: `w`/`g` are
+    /// `[R × n]` panels, `idx[r]` is replication r's minibatch.
+    fn grad_batch(&mut self, w: &[f32], data: &crate::sim::ClassifyData,
+                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>>;
+
+    /// Sub-sampled Hessian-vector product (13) per replication on
+    /// `[R × n]` panels.
+    fn hvp_batch(&mut self, wbar: &[f32], s: &[f32],
+                 data: &crate::sim::ClassifyData, idx: &[Vec<usize>],
+                 y: &mut [f32]) -> Result<()>;
+
+    /// H_t·g (Algorithm 4) per replication.  Rows with `active[r] == false`
+    /// are skipped (the driver takes the plain gradient step for them, as
+    /// the sequential path does before the memory fills).
+    fn direction_batch(&mut self, mems: &[crate::tasks::CorrectionMemory],
+                       g: &[f32], active: &[bool], out: &mut [f32])
+        -> Result<()>;
+}

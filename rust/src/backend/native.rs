@@ -6,6 +6,8 @@
 //! idiomatic Rust (no artificial slowdowns): row-by-row matvecs, per-sample
 //! indicator counting, per-sample sigmoid accumulation.
 
+use std::sync::Mutex;
+
 use anyhow::Result;
 
 use crate::linalg::matrix::Mat;
@@ -16,7 +18,10 @@ use crate::tasks::newsvendor as nv;
 use crate::tasks::CorrectionMemory;
 use crate::util::pool::parallel_map_chunks;
 
-use super::{HessianMode, LrBackend, MvBackend, NvBackend};
+use super::{
+    HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
+    NvBackend, NvBatchBackend,
+};
 
 /// Degree of intra-gradient parallelism for the `native_par` ablation.
 #[derive(Debug, Clone, Copy)]
@@ -355,6 +360,247 @@ impl LrBackend for NativeLr {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Replication-batched arms (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+//
+// Each batch backend holds one per-replication backend per row so every
+// row runs the *bit-identical* arithmetic of the sequential path, and
+// spreads the replication axis over `parallel_map_chunks` (contiguous
+// row chunks per OS thread).  The `Mutex` per row exists only to hand the
+// shared closure `&mut` access to its own rows; chunks are disjoint, so
+// the locks are never contended.
+
+/// First-error helper for the chunked merge loops below.
+fn merge_rows(parts: Vec<(usize, Result<Vec<(Vec<f32>, f64)>>)>,
+              row_len: usize, out: &mut [f32]) -> Result<Vec<f64>> {
+    let mut scalars = vec![0.0f64; out.len() / row_len.max(1)];
+    for (start, part) in parts {
+        for (offset, (row, scalar)) in part?.into_iter().enumerate() {
+            let i = start + offset;
+            out[i * row_len..(i + 1) * row_len].copy_from_slice(&row);
+            scalars[i] = scalar;
+        }
+    }
+    Ok(scalars)
+}
+
+/// Task 1 batched: all R replications advance one fused epoch per call.
+pub struct NativeMvBatch {
+    reps: Vec<Mutex<NativeMv>>,
+    d: usize,
+    threads: usize,
+}
+
+impl NativeMvBatch {
+    pub fn new(universe: &AssetUniverse, n_samples: usize, m_inner: usize,
+               r_reps: usize, threads: usize) -> Self {
+        let d = universe.dim();
+        let reps = (0..r_reps)
+            .map(|_| {
+                Mutex::new(NativeMv::new(universe.clone(), n_samples,
+                                         m_inner, NativeMode::Sequential))
+            })
+            .collect();
+        NativeMvBatch { reps, d, threads }
+    }
+}
+
+impl MvBatchBackend for NativeMvBatch {
+    fn name(&self) -> &'static str {
+        "native_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.reps.len()
+    }
+
+    fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
+                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+        let (r, d) = (self.reps.len(), self.d);
+        anyhow::ensure!(w.len() == r * d, "iterate panel {} != {}×{}",
+                        w.len(), r, d);
+        anyhow::ensure!(keys.len() == r, "need one key per replication");
+        let reps = &self.reps;
+        let w_in: &[f32] = w;
+        let parts = parallel_map_chunks(r, self.threads, |range| {
+            let start = range.start;
+            let mut rows = Vec::with_capacity(range.len());
+            for i in range {
+                let mut rep = reps[i].lock().unwrap();
+                match rep.epoch(&w_in[i * d..(i + 1) * d], k_epoch, keys[i]) {
+                    Ok((w_next, obj)) => rows.push((w_next, obj)),
+                    Err(e) => return (start, Err(e)),
+                }
+            }
+            (start, Ok(rows))
+        });
+        merge_rows(parts, d, w)
+    }
+}
+
+/// Task 2 batched: one Monte-Carlo gradient panel per call.
+pub struct NativeNvBatch {
+    reps: Vec<Mutex<NativeNv>>,
+    d: usize,
+    threads: usize,
+}
+
+impl NativeNvBatch {
+    pub fn new(inst: &NewsvendorInstance, s_samples: usize, r_reps: usize,
+               threads: usize) -> Self {
+        let d = inst.dim();
+        let reps = (0..r_reps)
+            .map(|_| {
+                Mutex::new(NativeNv::new(inst.clone(), s_samples,
+                                         NativeMode::Sequential))
+            })
+            .collect();
+        NativeNvBatch { reps, d, threads }
+    }
+}
+
+impl NvBatchBackend for NativeNvBatch {
+    fn name(&self) -> &'static str {
+        "native_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.reps.len()
+    }
+
+    fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
+                      g: &mut [f32]) -> Result<Vec<f64>> {
+        let (r, d) = (self.reps.len(), self.d);
+        anyhow::ensure!(x.len() == r * d, "iterate panel {} != {}×{}",
+                        x.len(), r, d);
+        anyhow::ensure!(g.len() == r * d, "gradient panel shape mismatch");
+        anyhow::ensure!(keys.len() == r, "need one key per replication");
+        let reps = &self.reps;
+        let parts = parallel_map_chunks(r, self.threads, |range| {
+            let start = range.start;
+            let mut rows = Vec::with_capacity(range.len());
+            for i in range {
+                let mut rep = reps[i].lock().unwrap();
+                match rep.grad_obj(&x[i * d..(i + 1) * d], keys[i]) {
+                    Ok((g_row, obj)) => rows.push((g_row, obj)),
+                    Err(e) => return (start, Err(e)),
+                }
+            }
+            (start, Ok(rows))
+        });
+        merge_rows(parts, d, g)
+    }
+}
+
+/// Task 3 batched: SQN kernels for all R replications per call.
+pub struct NativeLrBatch {
+    reps: Vec<Mutex<NativeLr>>,
+    n: usize,
+    threads: usize,
+}
+
+impl NativeLrBatch {
+    pub fn new(data: &ClassifyData, r_reps: usize, threads: usize,
+               hessian_mode: HessianMode) -> Self {
+        let reps = (0..r_reps)
+            .map(|_| {
+                Mutex::new(NativeLr::new(data, NativeMode::Sequential,
+                                         hessian_mode))
+            })
+            .collect();
+        NativeLrBatch { reps, n: data.n_features, threads }
+    }
+}
+
+impl LrBatchBackend for NativeLrBatch {
+    fn name(&self) -> &'static str {
+        "native_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.reps.len()
+    }
+
+    fn grad_batch(&mut self, w: &[f32], data: &ClassifyData,
+                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>> {
+        let (r, n) = (self.reps.len(), self.n);
+        anyhow::ensure!(w.len() == r * n, "iterate panel {} != {}×{}",
+                        w.len(), r, n);
+        anyhow::ensure!(g.len() == r * n, "gradient panel shape mismatch");
+        anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        let reps = &self.reps;
+        let parts = parallel_map_chunks(r, self.threads, |range| {
+            let start = range.start;
+            let mut rows = Vec::with_capacity(range.len());
+            for i in range {
+                let mut rep = reps[i].lock().unwrap();
+                match rep.grad(&w[i * n..(i + 1) * n], data, &idx[i]) {
+                    Ok((g_row, loss)) => rows.push((g_row, loss)),
+                    Err(e) => return (start, Err(e)),
+                }
+            }
+            (start, Ok(rows))
+        });
+        merge_rows(parts, n, g)
+    }
+
+    fn hvp_batch(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
+                 idx: &[Vec<usize>], y: &mut [f32]) -> Result<()> {
+        let (r, n) = (self.reps.len(), self.n);
+        anyhow::ensure!(wbar.len() == r * n && s.len() == r * n,
+                        "ω̄/s panel shape mismatch");
+        anyhow::ensure!(y.len() == r * n, "output panel shape mismatch");
+        anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        let reps = &self.reps;
+        let parts = parallel_map_chunks(r, self.threads, |range| {
+            let start = range.start;
+            let mut rows = Vec::with_capacity(range.len());
+            for i in range {
+                let mut rep = reps[i].lock().unwrap();
+                match rep.hvp(&wbar[i * n..(i + 1) * n],
+                              &s[i * n..(i + 1) * n], data, &idx[i]) {
+                    Ok(y_row) => rows.push((y_row, 0.0)),
+                    Err(e) => return (start, Err(e)),
+                }
+            }
+            (start, Ok(rows))
+        });
+        merge_rows(parts, n, y)?;
+        Ok(())
+    }
+
+    fn direction_batch(&mut self, mems: &[CorrectionMemory], g: &[f32],
+                       active: &[bool], out: &mut [f32]) -> Result<()> {
+        let (r, n) = (self.reps.len(), self.n);
+        anyhow::ensure!(mems.len() == r && active.len() == r,
+                        "need one memory + activity flag per replication");
+        anyhow::ensure!(out.len() == r * n, "output panel shape mismatch");
+        let reps = &self.reps;
+        let parts = parallel_map_chunks(r, self.threads, |range| {
+            let mut rows: Vec<(usize, Vec<f32>)> =
+                Vec::with_capacity(range.len());
+            for i in range {
+                if !active[i] {
+                    continue;
+                }
+                let mut rep = reps[i].lock().unwrap();
+                match rep.direction(&mems[i], &g[i * n..(i + 1) * n]) {
+                    Ok(d_row) => rows.push((i, d_row)),
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(rows)
+        });
+        for part in parts {
+            for (i, row) in part? {
+                out[i * n..(i + 1) * n].copy_from_slice(&row);
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,5 +687,128 @@ mod tests {
         let w = vec![0.0f32; 16];
         assert!(b.grad(&w, &data, &[0, 1]).is_err());
         assert!(b.grad(&[0.0; 8], &data, &[0, 1]).is_err());
+    }
+
+    // -- batched arms: bit-identical to the per-replication path -----------
+
+    #[test]
+    fn mv_batch_epoch_bitwise_matches_per_rep() {
+        let (d, n, m, r) = (16usize, 8usize, 4usize, 5usize);
+        let u = AssetUniverse::generate(&StreamTree::new(31), d);
+        let w0 = vec![1.0f32 / d as f32; d];
+        let keys: Vec<[u32; 2]> =
+            (0..r).map(|i| [i as u32 + 1, 2 * i as u32 + 7]).collect();
+
+        let mut batch = NativeMvBatch::new(&u, n, m, r, 3);
+        let mut panel: Vec<f32> = Vec::new();
+        for _ in 0..r {
+            panel.extend_from_slice(&w0);
+        }
+        let objs = batch.epoch_batch(&mut panel, 2, &keys).unwrap();
+
+        for i in 0..r {
+            let mut single =
+                NativeMv::new(u.clone(), n, m, NativeMode::Sequential);
+            let (w1, o1) = single.epoch(&w0, 2, keys[i]).unwrap();
+            assert_eq!(&panel[i * d..(i + 1) * d], w1.as_slice(), "rep {}", i);
+            assert_eq!(objs[i], o1, "rep {}", i);
+        }
+        // distinct keys ⇒ distinct rows
+        assert_ne!(&panel[..d], &panel[d..2 * d]);
+    }
+
+    #[test]
+    fn mv_batch_shape_checked() {
+        let u = AssetUniverse::generate(&StreamTree::new(32), 8);
+        let mut batch = NativeMvBatch::new(&u, 4, 2, 3, 2);
+        let mut wrong = vec![0.0f32; 8]; // 1 row, 3 expected
+        assert!(batch.epoch_batch(&mut wrong, 0, &[[0, 0]; 3]).is_err());
+        let mut ok = vec![0.1f32; 3 * 8];
+        assert!(batch.epoch_batch(&mut ok, 0, &[[0, 0]; 2]).is_err());
+        assert_eq!(batch.batch_reps(), 3);
+    }
+
+    #[test]
+    fn nv_batch_grad_bitwise_matches_per_rep() {
+        let (d, s, r) = (12usize, 8usize, 4usize);
+        let inst =
+            NewsvendorInstance::generate(&StreamTree::new(33), d, 2, 0.6);
+        let x0 = inst.feasible_start();
+        let keys: Vec<[u32; 2]> =
+            (0..r).map(|i| [9, i as u32]).collect();
+        let mut x = Vec::new();
+        for _ in 0..r {
+            x.extend_from_slice(&x0);
+        }
+        let mut g = vec![0.0f32; r * d];
+        let mut batch = NativeNvBatch::new(&inst, s, r, 3);
+        let objs = batch.grad_obj_batch(&x, &keys, &mut g).unwrap();
+        for i in 0..r {
+            let mut single =
+                NativeNv::new(inst.clone(), s, NativeMode::Sequential);
+            let (g1, o1) = single.grad_obj(&x0, keys[i]).unwrap();
+            assert_eq!(&g[i * d..(i + 1) * d], g1.as_slice(), "rep {}", i);
+            assert_eq!(objs[i], o1, "rep {}", i);
+        }
+    }
+
+    #[test]
+    fn lr_batch_kernels_bitwise_match_per_rep() {
+        let (n, r) = (10usize, 3usize);
+        let data = ClassifyData::generate(&StreamTree::new(34), n);
+        let mut batch =
+            NativeLrBatch::new(&data, r, 2, HessianMode::Explicit);
+        let mut singles: Vec<NativeLr> = (0..r)
+            .map(|_| {
+                NativeLr::new(&data, NativeMode::Sequential,
+                              HessianMode::Explicit)
+            })
+            .collect();
+
+        // per-replication iterates + minibatches
+        let w: Vec<f32> = (0..r * n).map(|j| (j as f32 * 0.01).sin()).collect();
+        let idx: Vec<Vec<usize>> = (0..r)
+            .map(|i| (0..16).map(|j| (i * 7 + j * 3) % data.n_samples)
+                .collect())
+            .collect();
+
+        let mut g = vec![0.0f32; r * n];
+        let losses = batch.grad_batch(&w, &data, &idx, &mut g).unwrap();
+        for i in 0..r {
+            let (g1, l1) = singles[i]
+                .grad(&w[i * n..(i + 1) * n], &data, &idx[i])
+                .unwrap();
+            assert_eq!(&g[i * n..(i + 1) * n], g1.as_slice(), "rep {}", i);
+            assert_eq!(losses[i], l1, "rep {}", i);
+        }
+
+        // hvp + direction through a populated memory
+        let s_panel: Vec<f32> =
+            (0..r * n).map(|j| (j as f32 * 0.02).cos() * 0.1).collect();
+        let mut y = vec![0.0f32; r * n];
+        batch.hvp_batch(&w, &s_panel, &data, &idx, &mut y).unwrap();
+        let mut mems: Vec<CorrectionMemory> = Vec::new();
+        for i in 0..r {
+            let y1 = singles[i]
+                .hvp(&w[i * n..(i + 1) * n], &s_panel[i * n..(i + 1) * n],
+                     &data, &idx[i])
+                .unwrap();
+            assert_eq!(&y[i * n..(i + 1) * n], y1.as_slice(), "rep {}", i);
+            let mut mem = CorrectionMemory::new(4, n);
+            mem.push(&s_panel[i * n..(i + 1) * n], &y1);
+            mems.push(mem);
+        }
+        let active: Vec<bool> = mems.iter().map(|m| !m.is_empty()).collect();
+        let mut dirs = vec![0.0f32; r * n];
+        batch.direction_batch(&mems, &g, &active, &mut dirs).unwrap();
+        for i in 0..r {
+            if !active[i] {
+                continue;
+            }
+            let d1 = singles[i]
+                .direction(&mems[i], &g[i * n..(i + 1) * n])
+                .unwrap();
+            assert_eq!(&dirs[i * n..(i + 1) * n], d1.as_slice(), "rep {}", i);
+        }
     }
 }

@@ -16,7 +16,10 @@ use crate::runtime::{exec, Arg, BufArg, Engine, Exec};
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use crate::tasks::CorrectionMemory;
 
-use super::{HessianMode, LrBackend, MvBackend, NvBackend};
+use super::{
+    HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
+    NvBackend, NvBatchBackend,
+};
 
 // ---------------------------------------------------------------------------
 // Task 1
@@ -297,6 +300,20 @@ pub struct XlaLr {
     idx_i32: Vec<i32>,
 }
 
+/// Pad a correction memory into the fixed `(capacity × n)` layout the
+/// `lr_hbuild` / `lr_dir_twoloop` artifacts expect (rows `[0, count)`
+/// valid, zero-padded tail).
+fn padded_mem(mem: &CorrectionMemory, capacity: usize, n: usize)
+    -> (Vec<f32>, Vec<f32>, i32) {
+    let mut s = vec![0.0f32; capacity * n];
+    let mut y = vec![0.0f32; capacity * n];
+    let count = mem.count.min(capacity);
+    let take = count * n;
+    s[..take].copy_from_slice(&mem.s_mem[..take]);
+    y[..take].copy_from_slice(&mem.y_mem[..take]);
+    (s, y, count as i32)
+}
+
 impl XlaLr {
     pub fn new(engine: &Engine, data: &ClassifyData, batch: usize,
                hbatch: usize, memory: usize, hessian_mode: HessianMode)
@@ -344,13 +361,7 @@ impl XlaLr {
 
     /// Pad the correction memory into the fixed (mem × n) artifact layout.
     fn padded_mem(&self, mem: &CorrectionMemory) -> (Vec<f32>, Vec<f32>, i32) {
-        let mut s = vec![0.0f32; self.memory * self.n];
-        let mut y = vec![0.0f32; self.memory * self.n];
-        let count = mem.count.min(self.memory);
-        let take = count * self.n;
-        s[..take].copy_from_slice(&mem.s_mem[..take]);
-        y[..take].copy_from_slice(&mem.y_mem[..take]);
-        (s, y, count as i32)
+        padded_mem(mem, self.memory, self.n)
     }
 
     fn idx_arg(&mut self, idx: &[usize]) {
@@ -502,19 +513,417 @@ impl LrBackend for XlaLrPerCall {
 
     fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
         -> Result<Vec<f32>> {
-        let mut s = vec![0.0f32; self.memory * self.n];
-        let mut y = vec![0.0f32; self.memory * self.n];
-        let count = mem.count.min(self.memory);
-        let take = count * self.n;
-        s[..take].copy_from_slice(&mem.s_mem[..take]);
-        y[..take].copy_from_slice(&mem.y_mem[..take]);
+        let (s, y, count) = padded_mem(mem, self.memory, self.n);
         let outs = self.twoloop_exec.call(&[
             Arg::F32(&s),
             Arg::F32(&y),
-            Arg::ScalarI32(count as i32),
+            Arg::ScalarI32(count),
             Arg::F32(g),
         ])?;
         exec::f32_vec(&outs[0])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replication-batched arms (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+//
+// One batched artifact dispatch advances ALL R replications per epoch —
+// the fusion Zhou, Lange & Suchard apply to independent chains — instead
+// of R per-replication dispatches through `runtime::exec`.  The batched
+// artifacts are jax.vmap lowerings of the per-replication graphs
+// (python/compile/aot.py `--reps`), so each row computes the same math as
+// the unbatched artifact on its own threefry key.
+
+fn flatten_keys(keys: &[[u32; 2]], out: &mut Vec<u32>) {
+    out.clear();
+    for k in keys {
+        out.push(k[0]);
+        out.push(k[1]);
+    }
+}
+
+/// Task 1 batched: `mv_epoch_batch` runs panel resampling + all M FW steps
+/// for every replication in ONE device dispatch per epoch.
+pub struct XlaMvBatch {
+    exec: Rc<Exec>,
+    mu: Vec<f32>,
+    sigma: Vec<f32>,
+    r: usize,
+    d: usize,
+    keys_flat: Vec<u32>,
+}
+
+impl XlaMvBatch {
+    pub fn new(engine: &Engine, universe: &AssetUniverse, n_samples: usize,
+               m_inner: usize, r_reps: usize) -> Result<Self> {
+        let d = universe.dim();
+        let exec = engine
+            .load_by_params(
+                "mv_epoch_batch",
+                &[("d", d as i64), ("n", n_samples as i64),
+                  ("m", m_inner as i64), ("r", r_reps as i64)],
+            )
+            .context(
+                "loading mv_epoch_batch artifact (regenerate with \
+                 `python -m compile.aot --reps R`)",
+            )?;
+        Ok(XlaMvBatch {
+            exec,
+            mu: universe.mu.clone(),
+            sigma: universe.sigma.clone(),
+            r: r_reps,
+            d,
+            keys_flat: Vec::with_capacity(2 * r_reps),
+        })
+    }
+}
+
+impl MvBatchBackend for XlaMvBatch {
+    fn name(&self) -> &'static str {
+        "xla_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.r
+    }
+
+    fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
+                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+        anyhow::ensure!(w.len() == self.r * self.d,
+                        "iterate panel {} != {}×{}", w.len(), self.r, self.d);
+        anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        flatten_keys(keys, &mut self.keys_flat);
+        let outs = self.exec.call(&[
+            Arg::F32(w),
+            Arg::F32(&self.mu),
+            Arg::F32(&self.sigma),
+            Arg::U32(&self.keys_flat),
+            Arg::ScalarI32(k_epoch as i32),
+        ])?;
+        let w_out = exec::f32_vec(&outs[0])?;
+        anyhow::ensure!(w_out.len() == w.len(),
+                        "mv_epoch_batch returned wrong panel shape");
+        w.copy_from_slice(&w_out);
+        let objs = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(objs.len() == self.r,
+                        "mv_epoch_batch returned {} objectives for {} \
+                         replications", objs.len(), self.r);
+        Ok(objs.into_iter().map(|o| o as f64).collect())
+    }
+}
+
+/// Task 2 batched, device-resident (the batched analogue of [`XlaNv`]):
+/// `nv_panel_batch` samples every replication's demand panel ONCE per
+/// epoch into a PJRT buffer that stays on device; each of the M inner
+/// iterations runs `nv_grad_panel_batch` against it in ONE dispatch for
+/// all R replications.  Cost vectors are uploaded once at construction —
+/// per-call host traffic is one `[R × d]` iterate panel up, one
+/// `[R × d]` gradient panel + R objectives down.
+pub struct XlaNvBatch {
+    panel_exec: Rc<Exec>,
+    grad_exec: Rc<Exec>,
+    mu_buf: DeviceBuf,
+    sigma_buf: DeviceBuf,
+    kc_buf: DeviceBuf,
+    h_buf: DeviceBuf,
+    v_buf: DeviceBuf,
+    /// (keys it was sampled from, resident `[R × S × d]` panel).
+    panel: Option<(Vec<[u32; 2]>, DeviceBuf)>,
+    r: usize,
+    d: usize,
+    keys_flat: Vec<u32>,
+}
+
+impl XlaNvBatch {
+    pub fn new(engine: &Engine, inst: &NewsvendorInstance, s_samples: usize,
+               r_reps: usize) -> Result<Self> {
+        let req = [("d", inst.dim() as i64), ("s", s_samples as i64),
+                   ("r", r_reps as i64)];
+        let panel_exec = engine
+            .load_by_params("nv_panel_batch", &req)
+            .context(
+                "loading nv_panel_batch artifact (regenerate with \
+                 `python -m compile.aot --reps R`)",
+            )?;
+        let grad_exec = engine.load_by_params("nv_grad_panel_batch", &req)?;
+        // nv_panel_batch inputs: (mu, sigma, keys);
+        // nv_grad_panel_batch: (x, panel, kc, h, v)
+        let mu_buf = panel_exec.upload(0, Arg::F32(&inst.mu))?;
+        let sigma_buf = panel_exec.upload(1, Arg::F32(&inst.sigma))?;
+        let kc_buf = grad_exec.upload(2, Arg::F32(&inst.k))?;
+        let h_buf = grad_exec.upload(3, Arg::F32(&inst.h))?;
+        let v_buf = grad_exec.upload(4, Arg::F32(&inst.v))?;
+        Ok(XlaNvBatch {
+            panel_exec,
+            grad_exec,
+            mu_buf,
+            sigma_buf,
+            kc_buf,
+            h_buf,
+            v_buf,
+            panel: None,
+            r: r_reps,
+            d: inst.dim(),
+            keys_flat: Vec::with_capacity(2 * r_reps),
+        })
+    }
+
+    fn ensure_panel(&mut self, keys: &[[u32; 2]]) -> Result<()> {
+        if matches!(&self.panel, Some((k, _)) if k.as_slice() == keys) {
+            return Ok(()); // same epoch keys ⇒ same panels (counter-based)
+        }
+        // One sampling dispatch per epoch; like XlaNv the panel round-trips
+        // the host once and parks as a buffer for the M inner iterations.
+        flatten_keys(keys, &mut self.keys_flat);
+        let outs = self.panel_exec.call_b(&[
+            BufArg::Dev(&self.mu_buf),
+            BufArg::Dev(&self.sigma_buf),
+            BufArg::Host(Arg::U32(&self.keys_flat)),
+        ])?;
+        let panel_host = exec::f32_vec(&outs[0])?;
+        let buf = self.grad_exec.upload(1, Arg::F32(&panel_host))?;
+        self.panel = Some((keys.to_vec(), buf));
+        Ok(())
+    }
+}
+
+impl NvBatchBackend for XlaNvBatch {
+    fn name(&self) -> &'static str {
+        "xla_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.r
+    }
+
+    fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
+                      g: &mut [f32]) -> Result<Vec<f64>> {
+        anyhow::ensure!(x.len() == self.r * self.d,
+                        "iterate panel {} != {}×{}", x.len(), self.r, self.d);
+        anyhow::ensure!(g.len() == x.len(), "gradient panel shape mismatch");
+        anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        self.ensure_panel(keys)?;
+        let (_, panel) = self.panel.as_ref().unwrap();
+        let outs = self.grad_exec.call_b(&[
+            BufArg::Host(Arg::F32(x)),
+            BufArg::Dev(panel),
+            BufArg::Dev(&self.kc_buf),
+            BufArg::Dev(&self.h_buf),
+            BufArg::Dev(&self.v_buf),
+        ])?;
+        let g_out = exec::f32_vec(&outs[0])?;
+        anyhow::ensure!(g_out.len() == g.len(),
+                        "nv_grad_panel_batch returned wrong panel shape");
+        g.copy_from_slice(&g_out);
+        let objs = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(objs.len() == self.r,
+                        "nv_grad_panel_batch returned {} objectives for {} \
+                         replications", objs.len(), self.r);
+        Ok(objs.into_iter().map(|o| o as f64).collect())
+    }
+}
+
+/// Task 3 batched: `lr_grad_batch` / `lr_hvp_batch` gather every
+/// replication's minibatch in-graph against the ONE device-resident copy of
+/// the dataset — per iteration the host ships an `[R × n]` iterate panel
+/// and `[R × b]` indices instead of R separate dispatches.  Algorithm-4
+/// directions reuse the per-replication artifacts row by row (the
+/// correction memories are ragged across replications), each with its own
+/// resident-H cache rebuilt only when that replication's memory changes —
+/// the same once-per-L amortization the sequential arm has.
+pub struct XlaLrBatch {
+    grad_exec: Rc<Exec>,
+    hvp_exec: Rc<Exec>,
+    hbuild_exec: Option<Rc<Exec>>,
+    happly_exec: Option<Rc<Exec>>,
+    twoloop_exec: Option<Rc<Exec>>,
+    hessian_mode: HessianMode,
+    memory: usize,
+    r: usize,
+    n: usize,
+    x_buf: DeviceBuf,
+    z_buf: DeviceBuf,
+    /// Per-replication device-resident H, invalidated by [`Self::hvp_batch`]
+    /// (a new correction pair means that row's H_t changes).
+    h_bufs: Vec<Option<DeviceBuf>>,
+    h_dirty: Vec<bool>,
+    idx_i32: Vec<i32>,
+}
+
+impl XlaLrBatch {
+    pub fn new(engine: &Engine, data: &ClassifyData, batch: usize,
+               hbatch: usize, memory: usize, hessian_mode: HessianMode,
+               r_reps: usize) -> Result<Self> {
+        let n = data.n_features as i64;
+        let rows = data.n_samples as i64;
+        let r = r_reps as i64;
+        let grad_exec = engine
+            .load_by_params(
+                "lr_grad_batch",
+                &[("n", n), ("b", batch as i64), ("rows", rows), ("r", r)],
+            )
+            .context(
+                "loading lr_grad_batch artifact (regenerate with \
+                 `python -m compile.aot --reps R`)",
+            )?;
+        let hvp_exec = engine.load_by_params(
+            "lr_hvp_batch",
+            &[("n", n), ("bh", hbatch as i64), ("rows", rows), ("r", r)],
+        )?;
+        // per-replication direction artifacts (ragged memories)
+        let (hbuild_exec, happly_exec, twoloop_exec) = match hessian_mode {
+            HessianMode::Explicit => (
+                Some(engine.load_by_params(
+                    "lr_hbuild", &[("n", n), ("mem", memory as i64)])?),
+                Some(engine.load_by_params("lr_happly", &[("n", n)])?),
+                None,
+            ),
+            HessianMode::TwoLoop => (
+                None,
+                None,
+                Some(engine.load_by_params(
+                    "lr_dir_twoloop", &[("n", n), ("mem", memory as i64)])?),
+            ),
+        };
+        // lr_grad_batch inputs: (w, x_full, z_full, idx) — the dataset is
+        // uploaded ONCE and shared by the grad and hvp dispatches
+        let x_buf = grad_exec.upload(1, Arg::F32(&data.x))?;
+        let z_buf = grad_exec.upload(2, Arg::F32(&data.z))?;
+        Ok(XlaLrBatch {
+            grad_exec,
+            hvp_exec,
+            hbuild_exec,
+            happly_exec,
+            twoloop_exec,
+            hessian_mode,
+            memory,
+            r: r_reps,
+            n: data.n_features,
+            x_buf,
+            z_buf,
+            h_bufs: (0..r_reps).map(|_| None).collect(),
+            h_dirty: vec![true; r_reps],
+            idx_i32: Vec::new(),
+        })
+    }
+
+    fn flatten_idx(&mut self, idx: &[Vec<usize>]) {
+        self.idx_i32.clear();
+        for rep in idx {
+            self.idx_i32.extend(rep.iter().map(|&i| i as i32));
+        }
+    }
+}
+
+impl LrBatchBackend for XlaLrBatch {
+    fn name(&self) -> &'static str {
+        "xla_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.r
+    }
+
+    fn grad_batch(&mut self, w: &[f32], _data: &ClassifyData,
+                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>> {
+        anyhow::ensure!(w.len() == self.r * self.n,
+                        "iterate panel {} != {}×{}", w.len(), self.r, self.n);
+        anyhow::ensure!(g.len() == w.len(), "gradient panel shape mismatch");
+        anyhow::ensure!(idx.len() == self.r,
+                        "need one index set per replication");
+        self.flatten_idx(idx);
+        let outs = self.grad_exec.call_b(&[
+            BufArg::Host(Arg::F32(w)),
+            BufArg::Dev(&self.x_buf),
+            BufArg::Dev(&self.z_buf),
+            BufArg::Host(Arg::I32(&self.idx_i32)),
+        ])?;
+        let g_out = exec::f32_vec(&outs[0])?;
+        anyhow::ensure!(g_out.len() == g.len(),
+                        "lr_grad_batch returned wrong panel shape");
+        g.copy_from_slice(&g_out);
+        let losses = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(losses.len() == self.r,
+                        "lr_grad_batch returned {} losses for {} \
+                         replications", losses.len(), self.r);
+        Ok(losses.into_iter().map(|l| l as f64).collect())
+    }
+
+    fn hvp_batch(&mut self, wbar: &[f32], s: &[f32], _data: &ClassifyData,
+                 idx: &[Vec<usize>], y: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(wbar.len() == self.r * self.n
+                            && s.len() == self.r * self.n,
+                        "ω̄/s panel shape mismatch");
+        anyhow::ensure!(y.len() == self.r * self.n,
+                        "output panel shape mismatch");
+        anyhow::ensure!(idx.len() == self.r,
+                        "need one index set per replication");
+        // every replication is about to receive a correction pair ⇒ its
+        // resident H goes stale (mirrors XlaLr's generation bump)
+        self.h_dirty.iter_mut().for_each(|d| *d = true);
+        self.flatten_idx(idx);
+        let outs = self.hvp_exec.call_b(&[
+            BufArg::Host(Arg::F32(wbar)),
+            BufArg::Host(Arg::F32(s)),
+            BufArg::Dev(&self.x_buf),
+            BufArg::Host(Arg::I32(&self.idx_i32)),
+        ])?;
+        let y_out = exec::f32_vec(&outs[0])?;
+        anyhow::ensure!(y_out.len() == y.len(),
+                        "lr_hvp_batch returned wrong panel shape");
+        y.copy_from_slice(&y_out);
+        Ok(())
+    }
+
+    fn direction_batch(&mut self, mems: &[CorrectionMemory], g: &[f32],
+                       active: &[bool], out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(mems.len() == self.r && active.len() == self.r,
+                        "need one memory + activity flag per replication");
+        anyhow::ensure!(g.len() == self.r * self.n
+                            && out.len() == self.r * self.n,
+                        "gradient/output panel shape mismatch");
+        let n = self.n;
+        for i in 0..self.r {
+            if !active[i] {
+                continue;
+            }
+            let g_row = &g[i * n..(i + 1) * n];
+            let d_row = match self.hessian_mode {
+                HessianMode::Explicit => {
+                    // rebuild row i's device-resident H only when its
+                    // memory changed (once per L iterations), then apply
+                    // it as a resident matvec — the sequential cadence
+                    if self.h_dirty[i] || self.h_bufs[i].is_none() {
+                        let (s, y, count) =
+                            padded_mem(&mems[i], self.memory, n);
+                        let outs = self.hbuild_exec.as_ref().unwrap().call(
+                            &[Arg::F32(&s), Arg::F32(&y),
+                              Arg::ScalarI32(count)])?;
+                        let h_host = exec::f32_vec(&outs[0])?;
+                        let h = self.happly_exec
+                            .as_ref()
+                            .unwrap()
+                            .upload(0, Arg::F32(&h_host))?;
+                        self.h_bufs[i] = Some(h);
+                        self.h_dirty[i] = false;
+                    }
+                    let h = self.h_bufs[i].as_ref().unwrap();
+                    let outs = self.happly_exec.as_ref().unwrap().call_b(
+                        &[BufArg::Dev(h), BufArg::Host(Arg::F32(g_row))])?;
+                    exec::f32_vec(&outs[0])?
+                }
+                HessianMode::TwoLoop => {
+                    let (s, y, count) = padded_mem(&mems[i], self.memory, n);
+                    let outs = self.twoloop_exec.as_ref().unwrap().call(
+                        &[Arg::F32(&s), Arg::F32(&y), Arg::ScalarI32(count),
+                          Arg::F32(g_row)])?;
+                    exec::f32_vec(&outs[0])?
+                }
+            };
+            out[i * n..(i + 1) * n].copy_from_slice(&d_row);
+        }
+        Ok(())
     }
 }
 

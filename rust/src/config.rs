@@ -82,6 +82,48 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// How the replication axis of an experiment executes (DESIGN.md §11).
+///
+/// Batched and sequential execution are bit-for-bit identical per
+/// replication (same `StreamTree` subtrees, same per-row arithmetic); the
+/// mode only changes how the work is dispatched.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    /// Let the coordinator pick: batched for multi-replication native runs,
+    /// sequential otherwise (XLA batch artifacts are opt-in).
+    Auto,
+    /// One dispatch per replication per step (the original protocol).
+    Sequential,
+    /// All replications advance through a `*BatchBackend` in one call per
+    /// step.
+    Batched,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(ExecMode::Auto),
+            "seq" | "sequential" => Some(ExecMode::Sequential),
+            "batch" | "batched" => Some(ExecMode::Batched),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Auto => "auto",
+            ExecMode::Sequential => "sequential",
+            ExecMode::Batched => "batched",
+        }
+    }
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Paper §4.1 parameters with this repo's defaults (DESIGN.md §10 documents
 /// the scaling deviations).
 #[derive(Debug, Clone)]
@@ -194,6 +236,17 @@ mod tests {
         for b in [BackendKind::Native, BackendKind::NativePar, BackendKind::Xla] {
             assert_eq!(BackendKind::parse(b.as_str()), Some(b));
         }
+        for e in [ExecMode::Auto, ExecMode::Sequential, ExecMode::Batched] {
+            assert_eq!(ExecMode::parse(e.as_str()), Some(e));
+        }
+    }
+
+    #[test]
+    fn exec_mode_aliases() {
+        assert_eq!(ExecMode::parse("seq"), Some(ExecMode::Sequential));
+        assert_eq!(ExecMode::parse("batch"), Some(ExecMode::Batched));
+        assert_eq!(ExecMode::parse("Batched"), Some(ExecMode::Batched));
+        assert_eq!(ExecMode::parse("nope"), None);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use anyhow::{ensure, Result};
 
 use crate::backend::HessianMode;
-use crate::config::{BackendKind, TaskKind, TaskParams};
+use crate::config::{BackendKind, ExecMode, TaskKind, TaskParams};
 
 /// One experiment cell.
 #[derive(Debug, Clone)]
@@ -17,6 +17,8 @@ pub struct ExperimentSpec {
     pub hessian_mode: HessianMode,
     /// SQN loss-tracking cadence (iterations).
     pub track_every: usize,
+    /// How the replication axis executes (DESIGN.md §11).
+    pub exec: ExecMode,
     pub params: TaskParams,
 }
 
@@ -31,6 +33,7 @@ impl ExperimentSpec {
             seed: 42,
             hessian_mode: HessianMode::Explicit,
             track_every: 10,
+            exec: ExecMode::Auto,
             params: TaskParams::defaults(task, size),
         }
     }
@@ -64,6 +67,12 @@ impl ExperimentSpec {
 
     pub fn hessian(mut self, mode: HessianMode) -> Self {
         self.hessian_mode = mode;
+        self
+    }
+
+    /// Select sequential vs replication-batched execution.
+    pub fn execution(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
         self
     }
 
@@ -101,6 +110,8 @@ pub struct SweepSpec {
     pub reps: usize,
     pub epochs: usize,
     pub seed: u64,
+    /// Execution mode applied to every cell (DESIGN.md §11).
+    pub exec: ExecMode,
 }
 
 impl SweepSpec {
@@ -115,6 +126,13 @@ impl SweepSpec {
                 _ => 10,
             },
             seed: 42,
+            // The paper's protocol times each replication's own sequential
+            // run (mean ± 2σ across replications).  Batched execution
+            // reports batch_wall/R shares with zero cross-replication
+            // variance, which is a different methodology — so the Figure-2
+            // protocol pins sequential; batch timing has its own bench
+            // (batch_sweep) and CLI switch (--exec batch).
+            exec: ExecMode::Sequential,
         }
     }
 
@@ -124,6 +142,7 @@ impl SweepSpec {
             .epochs(self.epochs)
             .replications(self.reps)
             .seed(self.seed)
+            .execution(self.exec)
     }
 }
 
@@ -138,14 +157,28 @@ mod tests {
             .epochs(7)
             .replications(3)
             .seed(9)
-            .samples(16);
+            .samples(16)
+            .execution(ExecMode::Batched);
         assert_eq!(s.size, 512);
         assert_eq!(s.params.size, 512);
         assert_eq!(s.params.iters, 7);
         assert_eq!(s.reps, 3);
         assert_eq!(s.seed, 9);
         assert_eq!(s.params.samples, 16);
+        assert_eq!(s.exec, ExecMode::Batched);
         s.validate().unwrap();
+    }
+
+    #[test]
+    fn default_exec_modes() {
+        // single experiments default to Auto…
+        let s = ExperimentSpec::new(TaskKind::Newsvendor, BackendKind::Native);
+        assert_eq!(s.exec, ExecMode::Auto);
+        // …but the paper's Figure-2 protocol pins the sequential
+        // per-replication timing methodology (see figure2()).
+        let sw = SweepSpec::figure2(TaskKind::Newsvendor);
+        assert_eq!(sw.spec_for(64, BackendKind::Native).exec,
+                   ExecMode::Sequential);
     }
 
     #[test]

@@ -139,7 +139,7 @@ impl RunResult {
 mod tests {
     use super::*;
     use crate::backend::HessianMode;
-    use crate::config::{BackendKind, TaskKind, TaskParams};
+    use crate::config::{BackendKind, ExecMode, TaskKind, TaskParams};
 
     fn dummy_spec() -> ExperimentSpec {
         ExperimentSpec {
@@ -150,6 +150,7 @@ mod tests {
             seed: 1,
             hessian_mode: HessianMode::Explicit,
             track_every: 1,
+            exec: ExecMode::Auto,
             params: TaskParams::defaults(TaskKind::MeanVariance, 8),
         }
     }

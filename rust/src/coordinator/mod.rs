@@ -14,10 +14,14 @@ pub use metrics::{RepRecord, RunResult};
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::native::{NativeLr, NativeMode, NativeMv, NativeNv};
-use crate::backend::xla::{XlaLr, XlaMv, XlaNv};
+use crate::backend::native::{
+    NativeLr, NativeLrBatch, NativeMode, NativeMv, NativeMvBatch, NativeNv,
+    NativeNvBatch,
+};
+use crate::backend::xla::{XlaLr, XlaLrBatch, XlaMv, XlaMvBatch, XlaNv,
+                          XlaNvBatch};
 use crate::backend::{LrBackend, MvBackend, NvBackend};
-use crate::config::{BackendKind, TaskKind};
+use crate::config::{BackendKind, ExecMode, TaskKind};
 use crate::opt::{frank_wolfe, sqn};
 use crate::rng::StreamTree;
 use crate::runtime::Engine;
@@ -27,7 +31,18 @@ use crate::util::pool::parallel_map;
 
 /// Path offset for replication subtrees (keeps problem-generation streams
 /// and replication streams disjoint).
-const REP_PATH_BASE: u64 = 1_000;
+pub const REP_PATH_BASE: u64 = 1_000;
+
+/// Replication stream subtrees for one experiment — the ONE derivation both
+/// the sequential and batched paths use, so the two execution modes are
+/// bit-reproducible against each other.  Public so benches/examples derive
+/// the exact streams the coordinator runs instead of re-hardcoding the
+/// path constant.
+pub fn rep_subtrees(tree: &StreamTree, reps: usize) -> Vec<StreamTree> {
+    (0..reps)
+        .map(|r| tree.subtree(&[REP_PATH_BASE + r as u64]))
+        .collect()
+}
 
 pub struct Coordinator {
     artifact_dir: String,
@@ -65,10 +80,36 @@ impl Coordinator {
     /// Run one experiment (task × backend × size × reps).
     pub fn run(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
         spec.validate()?;
+        if self.use_batched(spec) && spec.backend == BackendKind::NativePar {
+            // The batch engine runs each row with the paper's sequential
+            // kernels; silently substituting them for native_par's blocked
+            // intra-gradient kernels (ablation A3) would mislabel results.
+            bail!(
+                "--exec batch does not support the native_par ablation arm \
+                 — use --backend native (same hardware, replication-major \
+                 parallelism) or --exec seq"
+            );
+        }
         match spec.task {
             TaskKind::MeanVariance => self.run_mv(spec),
             TaskKind::Newsvendor => self.run_nv(spec),
             TaskKind::Classification => self.run_lr(spec),
+        }
+    }
+
+    /// Resolve the spec's execution mode into a concrete plan
+    /// (DESIGN.md §11).  `Auto` batches multi-replication runs on the
+    /// plain native backend; `native_par` keeps the sequential protocol
+    /// (its intra-gradient threading is an ablation arm), and the XLA
+    /// batch artifacts are opt-in because the default AOT set does not
+    /// include them.
+    fn use_batched(&self, spec: &ExperimentSpec) -> bool {
+        match spec.exec {
+            ExecMode::Sequential => false,
+            ExecMode::Batched => true,
+            ExecMode::Auto => {
+                spec.backend == BackendKind::Native && spec.reps >= 2
+            }
         }
     }
 
@@ -96,6 +137,30 @@ impl Coordinator {
         let p = &spec.params;
         let w0 = vec![1.0f32 / spec.size as f32; spec.size];
         let reps = spec.reps;
+
+        if self.use_batched(spec) {
+            let trees = rep_subtrees(&tree, reps);
+            let traces = match spec.backend {
+                BackendKind::Xla => {
+                    let engine = self.engine()?;
+                    let mut backend = XlaMvBatch::new(
+                        engine, &universe, p.samples, p.m_inner, reps)?;
+                    frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
+                                              &trees)?
+                        .1
+                }
+                _ => {
+                    let mut backend = NativeMvBatch::new(
+                        &universe, p.samples, p.m_inner, reps,
+                        self.native_threads);
+                    frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
+                                              &trees)?
+                        .1
+                }
+            };
+            let records = traces.into_iter().map(RepRecord::from_fw).collect();
+            return Ok(RunResult::new(spec.clone(), records));
+        }
 
         let records: Vec<RepRecord> = match spec.backend {
             BackendKind::Xla => {
@@ -133,6 +198,31 @@ impl Coordinator {
         let p = &spec.params;
         let x0 = inst.feasible_start();
         let reps = spec.reps;
+
+        if self.use_batched(spec) {
+            let trees = rep_subtrees(&tree, reps);
+            let mut lmos: Vec<NvLmo> =
+                (0..reps).map(|_| NvLmo::new(&inst)).collect();
+            let traces = match spec.backend {
+                BackendKind::Xla => {
+                    let engine = self.engine()?;
+                    let mut backend =
+                        XlaNvBatch::new(engine, &inst, p.samples, reps)?;
+                    frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
+                                              p.iters, p.m_inner, &trees)?
+                        .1
+                }
+                _ => {
+                    let mut backend = NativeNvBatch::new(
+                        &inst, p.samples, reps, self.native_threads);
+                    frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
+                                              p.iters, p.m_inner, &trees)?
+                        .1
+                }
+            };
+            let records = traces.into_iter().map(RepRecord::from_fw).collect();
+            return Ok(RunResult::new(spec.clone(), records));
+        }
 
         let records: Vec<RepRecord> = match spec.backend {
             BackendKind::Xla => {
@@ -181,6 +271,27 @@ impl Coordinator {
             track_rows: 2048,
         };
         let reps = spec.reps;
+
+        if self.use_batched(spec) {
+            let trees = rep_subtrees(&tree, reps);
+            let traces = match spec.backend {
+                BackendKind::Xla => {
+                    let engine = self.engine()?;
+                    let mut backend = XlaLrBatch::new(
+                        engine, &data, p.batch, p.hbatch, p.memory,
+                        spec.hessian_mode, reps)?;
+                    sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
+                }
+                _ => {
+                    let mut backend = NativeLrBatch::new(
+                        &data, reps, self.native_threads, spec.hessian_mode);
+                    sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
+                }
+            };
+            let records =
+                traces.into_iter().map(RepRecord::from_sqn).collect();
+            return Ok(RunResult::new(spec.clone(), records));
+        }
 
         let records: Vec<RepRecord> = match spec.backend {
             BackendKind::Xla => {
@@ -353,6 +464,7 @@ mod tests {
             seed: 7,
             hessian_mode: HessianMode::Explicit,
             track_every: 5,
+            exec: ExecMode::Auto,
             params,
         }
     }
@@ -405,5 +517,56 @@ mod tests {
         let mut spec = tiny_spec(TaskKind::MeanVariance);
         spec.reps = 0;
         assert!(c.run(&spec).is_err());
+    }
+
+    #[test]
+    fn auto_mode_batches_native_multirep_only() {
+        let c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let mut spec = tiny_spec(TaskKind::MeanVariance);
+        assert!(c.use_batched(&spec), "native reps=2 should auto-batch");
+        spec.reps = 1;
+        assert!(!c.use_batched(&spec), "single replication stays sequential");
+        spec.reps = 2;
+        spec.backend = BackendKind::NativePar;
+        assert!(!c.use_batched(&spec), "native_par is an ablation arm");
+        spec.backend = BackendKind::Xla;
+        assert!(!c.use_batched(&spec), "xla batch artifacts are opt-in");
+        spec.exec = ExecMode::Batched;
+        assert!(c.use_batched(&spec));
+        spec.exec = ExecMode::Sequential;
+        spec.backend = BackendKind::Native;
+        assert!(!c.use_batched(&spec));
+    }
+
+    #[test]
+    fn batched_native_par_rejected() {
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        let mut spec = tiny_spec(TaskKind::MeanVariance);
+        spec.backend = BackendKind::NativePar;
+        spec.exec = ExecMode::Batched;
+        let err = c.run(&spec).unwrap_err();
+        assert!(format!("{:#}", err).contains("native_par"), "{:#}", err);
+    }
+
+    #[test]
+    fn sequential_and_batched_runs_agree_bitwise() {
+        // The coordinator-level contract behind ExecMode::Auto: flipping
+        // the execution mode never changes a single objective bit.
+        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
+            .unwrap();
+        for task in TaskKind::all() {
+            let mut spec = tiny_spec(task);
+            spec.exec = ExecMode::Sequential;
+            let seq = c.run(&spec).unwrap();
+            spec.exec = ExecMode::Batched;
+            let bat = c.run(&spec).unwrap();
+            assert_eq!(seq.reps.len(), bat.reps.len());
+            for (a, b) in seq.reps.iter().zip(&bat.reps) {
+                assert_eq!(a.objs, b.objs, "task {}", task);
+                assert_eq!(a.obj_iters, b.obj_iters, "task {}", task);
+            }
+        }
     }
 }

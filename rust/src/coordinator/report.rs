@@ -220,7 +220,7 @@ pub fn write_report(dir: impl AsRef<Path>, name: &str, results: &[RunResult],
 mod tests {
     use super::*;
     use crate::backend::HessianMode;
-    use crate::config::{TaskKind, TaskParams};
+    use crate::config::{ExecMode, TaskKind, TaskParams};
     use crate::coordinator::{ExperimentSpec, RepRecord};
 
     fn fake_result(backend: BackendKind, size: usize, step: f64) -> RunResult {
@@ -232,6 +232,7 @@ mod tests {
             seed: 1,
             hessian_mode: HessianMode::Explicit,
             track_every: 1,
+            exec: ExecMode::Auto,
             params: TaskParams::defaults(TaskKind::MeanVariance, size),
         };
         let rec = |sc: f64| RepRecord {

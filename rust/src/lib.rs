@@ -19,6 +19,13 @@
 //! [`backend::xla`] dispatches the same algorithm to the vectorized,
 //! XLA-fused artifacts through PJRT.
 //!
+//! On top of that axis sits the **batched replication engine**
+//! (DESIGN.md §11): every experiment's R replications can advance through
+//! one `*BatchBackend` call per step on `[R × n]` panels — replication-major
+//! thread parallelism on the native arm, one fused artifact dispatch on the
+//! XLA arm — bit-for-bit identical to the per-replication protocol under
+//! the same seed.  [`config::ExecMode`] selects the plan per experiment.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -50,8 +57,11 @@ pub mod util;
 
 /// Convenience re-exports for the examples and benches.
 pub mod prelude {
-    pub use crate::backend::{LrBackend, MvBackend, NvBackend};
-    pub use crate::config::{BackendKind, TaskKind};
+    pub use crate::backend::{
+        LrBackend, LrBatchBackend, MvBackend, MvBatchBackend, NvBackend,
+        NvBatchBackend,
+    };
+    pub use crate::config::{BackendKind, ExecMode, TaskKind};
     pub use crate::coordinator::{Coordinator, ExperimentSpec, RunResult};
     pub use crate::rng::{Philox, StreamTree};
 }

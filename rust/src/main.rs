@@ -10,7 +10,7 @@
 use anyhow::{bail, Result};
 
 use simopt::backend::HessianMode;
-use simopt::config::{default_sizes, BackendKind, TaskKind};
+use simopt::config::{default_sizes, BackendKind, ExecMode, TaskKind};
 use simopt::coordinator::{report, Coordinator, ExperimentSpec, SweepSpec};
 use simopt::util::cli::Args;
 
@@ -87,6 +87,14 @@ fn common_flags(args: Args) -> Args {
         .flag("hessian", Some("explicit"), "SQN Hessian: explicit | twoloop")
 }
 
+/// The `--exec` flag; the default differs per command (the Figure-2 /
+/// Table-2 protocols pin `seq` to keep the paper's per-replication timing
+/// methodology — see SweepSpec::figure2).
+fn exec_flag(args: Args, default: &'static str) -> Args {
+    args.flag("exec", Some(default),
+              "replication execution: auto | seq | batch (DESIGN.md §11)")
+}
+
 fn epochs_default(task: TaskKind, a: &Args) -> Result<usize> {
     match a.get("epochs") {
         Some(_) => Ok(a.get_usize("epochs")?),
@@ -105,8 +113,15 @@ fn hessian_mode(a: &Args) -> Result<HessianMode> {
     }
 }
 
+fn exec_mode(a: &Args) -> Result<ExecMode> {
+    let v = a.get("exec").unwrap_or_default();
+    ExecMode::parse(&v)
+        .ok_or_else(|| anyhow::anyhow!("--exec must be auto|seq|batch, got '{}'", v))
+}
+
 fn cmd_run(rest: &[String]) -> Result<()> {
-    let a = common_flags(Args::new("run", "run one experiment cell"))
+    let a = exec_flag(common_flags(Args::new("run", "run one experiment cell")),
+                      "auto")
         .flag("backend", Some("native"), "backend: native | native_par | xla")
         .flag("size", None, "problem dimension (default: task's smallest)")
         .parse(rest)
@@ -123,7 +138,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         .epochs(epochs_default(task, &a)?)
         .replications(a.get_usize("reps")?)
         .seed(a.get_u64("seed")?)
-        .hessian(hessian_mode(&a)?);
+        .hessian(hessian_mode(&a)?)
+        .execution(exec_mode(&a)?);
     let mut coord =
         Coordinator::new(&a.get("artifacts").unwrap(), &a.get("results").unwrap())?;
     let result = coord.run(&spec)?;
@@ -140,7 +156,8 @@ fn cmd_run(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_sweep(rest: &[String]) -> Result<()> {
-    let a = common_flags(Args::new("sweep", "Figure-2 timing sweep"))
+    let a = exec_flag(common_flags(Args::new("sweep", "Figure-2 timing sweep")),
+                      "seq")
         .flag("sizes", None, "comma list of sizes (default: task defaults)")
         .flag("backends", Some("native,xla"), "comma list of backends")
         .parse(rest)
@@ -154,6 +171,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     sweep.reps = a.get_usize("reps")?;
     sweep.epochs = epochs_default(task, &a)?;
     sweep.seed = a.get_u64("seed")?;
+    sweep.exec = exec_mode(&a)?;
 
     let results_dir = a.get("results").unwrap();
     let mut coord = Coordinator::new(&a.get("artifacts").unwrap(), &results_dir)?;
@@ -167,7 +185,9 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_accuracy(rest: &[String]) -> Result<()> {
-    let a = common_flags(Args::new("accuracy", "Table-2 RSE comparison"))
+    let a = exec_flag(common_flags(Args::new("accuracy", "Table-2 RSE \
+                                              comparison")),
+                      "seq")
         .flag("size", None, "problem dimension (default: task's middle size)")
         .flag("backends", Some("native,xla"), "comma list of backends")
         .flag("fracs", Some("0.05,0.1,0.25,0.5,1.0"),
@@ -196,7 +216,8 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
             .epochs(epochs_default(task, &a)?)
             .replications(a.get_usize("reps")?)
             .seed(a.get_u64("seed")?)
-            .hessian(hessian_mode(&a)?);
+            .hessian(hessian_mode(&a)?)
+            .execution(exec_mode(&a)?);
         eprintln!("[accuracy] {} backend={}", task, backend);
         results.push(coord.run(&spec)?);
     }

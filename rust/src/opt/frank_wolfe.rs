@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::backend::{MvBackend, NvBackend};
+use crate::backend::{MvBackend, MvBatchBackend, NvBackend, NvBatchBackend};
 use crate::rng::StreamTree;
 use crate::tasks::newsvendor::NvLmo;
 use crate::util::timer::Timer;
@@ -84,6 +84,96 @@ pub fn run_nv<B: NvBackend + ?Sized>(
     Ok((x, trace))
 }
 
+// ---------------------------------------------------------------------------
+// Replication-batched drivers (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// Distribute one batched-call wall-clock across the per-replication traces
+/// (total batched time == sum over replications stays comparable with the
+/// sequential protocol's per-replication totals).
+fn push_epoch(traces: &mut [FwTrace], objs: &[f64], batch_s: f64) {
+    let share = batch_s / traces.len().max(1) as f64;
+    for (trace, &obj) in traces.iter_mut().zip(objs) {
+        trace.epoch_s.push(share);
+        trace.objs.push(obj);
+    }
+}
+
+/// Algorithm 1 over all replications at once: one `epoch_batch` call per
+/// epoch.  `trees[r]` must be replication r's stream subtree — the SAME
+/// subtree [`run_mv`] receives — so batched and sequential runs draw
+/// identical panels and produce bit-identical iterates.
+pub fn run_mv_batch<B: MvBatchBackend + ?Sized>(
+    backend: &mut B,
+    w0: &[f32],
+    epochs: usize,
+    trees: &[StreamTree],
+) -> Result<(Vec<f32>, Vec<FwTrace>)> {
+    let r = trees.len();
+    anyhow::ensure!(backend.batch_reps() == r,
+                    "backend built for {} replications, got {} trees",
+                    backend.batch_reps(), r);
+    let mut w = Vec::with_capacity(r * w0.len());
+    for _ in 0..r {
+        w.extend_from_slice(w0);
+    }
+    let mut traces = vec![FwTrace::default(); r];
+    let mut keys = vec![[0u32; 2]; r];
+    for k in 0..epochs {
+        for (key, tree) in keys.iter_mut().zip(trees) {
+            *key = tree.jax_key(&[k as u64]);
+        }
+        let t = Timer::start();
+        let objs = backend.epoch_batch(&mut w, k, &keys)?;
+        push_epoch(&mut traces, &objs, t.elapsed_s());
+    }
+    Ok((w, traces))
+}
+
+/// Algorithm 2 over all replications at once: each inner iteration costs
+/// ONE batched gradient call plus R host-side LP LMO solves (the LMO is
+/// host-side in the sequential path too).
+pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
+    backend: &mut B,
+    lmos: &mut [NvLmo],
+    x0: &[f32],
+    epochs: usize,
+    m_inner: usize,
+    trees: &[StreamTree],
+) -> Result<(Vec<f32>, Vec<FwTrace>)> {
+    let r = trees.len();
+    let d = x0.len();
+    anyhow::ensure!(backend.batch_reps() == r,
+                    "backend built for {} replications, got {} trees",
+                    backend.batch_reps(), r);
+    anyhow::ensure!(lmos.len() == r, "need one LMO per replication");
+    let mut x = Vec::with_capacity(r * d);
+    for _ in 0..r {
+        x.extend_from_slice(x0);
+    }
+    let mut g = vec![0.0f32; r * d];
+    let mut traces = vec![FwTrace::default(); r];
+    let mut keys = vec![[0u32; 2]; r];
+    let mut objs = vec![f64::NAN; r];
+    for k in 0..epochs {
+        for (key, tree) in keys.iter_mut().zip(trees) {
+            *key = tree.jax_key(&[k as u64]);
+        }
+        let t = Timer::start();
+        for m in 0..m_inner {
+            objs = backend.grad_obj_batch(&x, &keys, &mut g)?;
+            let gamma = fw_gamma(k, m, m_inner);
+            for (i, lmo) in lmos.iter_mut().enumerate() {
+                let s = lmo.solve(&g[i * d..(i + 1) * d])?;
+                crate::linalg::vector::fw_update(
+                    &mut x[i * d..(i + 1) * d], &s, gamma);
+            }
+        }
+        push_epoch(&mut traces, &objs, t.elapsed_s());
+    }
+    Ok((x, traces))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,5 +234,59 @@ mod tests {
         let last = *trace.objs.last().unwrap();
         assert!(last <= first * 1.05, "cost should not blow up: {} vs {}",
                 last, first);
+    }
+
+    #[test]
+    fn mv_batch_driver_matches_sequential_driver_bitwise() {
+        use crate::backend::native::NativeMvBatch;
+        let (d, reps, epochs) = (12usize, 4usize, 5usize);
+        let root = StreamTree::new(91);
+        let u = AssetUniverse::generate(&root, d);
+        let w0 = vec![1.0f32 / d as f32; d];
+        let trees: Vec<StreamTree> =
+            (0..reps).map(|r| root.subtree(&[1000 + r as u64])).collect();
+
+        let mut batch = NativeMvBatch::new(&u, 8, 3, reps, 3);
+        let (w_panel, traces) =
+            run_mv_batch(&mut batch, &w0, epochs, &trees).unwrap();
+
+        for (r, tree) in trees.iter().enumerate() {
+            let mut single =
+                NativeMv::new(u.clone(), 8, 3, NativeMode::Sequential);
+            let (w_seq, t_seq) =
+                run_mv(&mut single, w0.clone(), epochs, tree).unwrap();
+            assert_eq!(&w_panel[r * d..(r + 1) * d], w_seq.as_slice(),
+                       "rep {}", r);
+            assert_eq!(traces[r].objs, t_seq.objs, "rep {}", r);
+        }
+    }
+
+    #[test]
+    fn nv_batch_driver_matches_sequential_driver_bitwise() {
+        use crate::backend::native::NativeNvBatch;
+        let (d, reps, epochs, m_inner) = (10usize, 3usize, 4usize, 3usize);
+        let root = StreamTree::new(92);
+        let inst = NewsvendorInstance::generate(&root, d, 2, 0.6);
+        let x0 = inst.feasible_start();
+        let trees: Vec<StreamTree> =
+            (0..reps).map(|r| root.subtree(&[1000 + r as u64])).collect();
+
+        let mut batch = NativeNvBatch::new(&inst, 8, reps, 2);
+        let mut lmos: Vec<NvLmo> =
+            (0..reps).map(|_| NvLmo::new(&inst)).collect();
+        let (x_panel, traces) =
+            run_nv_batch(&mut batch, &mut lmos, &x0, epochs, m_inner, &trees)
+                .unwrap();
+
+        for (r, tree) in trees.iter().enumerate() {
+            let mut single =
+                NativeNv::new(inst.clone(), 8, NativeMode::Sequential);
+            let mut lmo = NvLmo::new(&inst);
+            let (x_seq, t_seq) = run_nv(&mut single, &mut lmo, x0.clone(),
+                                        epochs, m_inner, tree).unwrap();
+            assert_eq!(&x_panel[r * d..(r + 1) * d], x_seq.as_slice(),
+                       "rep {}", r);
+            assert_eq!(traces[r].objs, t_seq.objs, "rep {}", r);
+        }
     }
 }

@@ -5,10 +5,15 @@
 //! * [`sqn`] — Algorithm 3 (stochastic quasi-Newton) with Algorithm 4
 //!   Hessian updating delegated to the backend;
 //! * [`schedule`] — the step-size rules.
+//!
+//! Every driver has a replication-batched variant (`run_*_batch`) that
+//! advances all R replications of an experiment through the corresponding
+//! `*BatchBackend` in one call per step — bit-identical per replication to
+//! the sequential driver under the same stream subtrees (DESIGN.md §11).
 
 pub mod frank_wolfe;
 pub mod schedule;
 pub mod sqn;
 
-pub use frank_wolfe::{run_mv, run_nv, FwTrace};
-pub use sqn::{run_sqn, SqnConfig, SqnTrace};
+pub use frank_wolfe::{run_mv, run_mv_batch, run_nv, run_nv_batch, FwTrace};
+pub use sqn::{run_sqn, run_sqn_batch, SqnConfig, SqnTrace};

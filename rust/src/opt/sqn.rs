@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::backend::LrBackend;
+use crate::backend::{LrBackend, LrBatchBackend};
 use crate::rng::StreamTree;
 use crate::sim::ClassifyData;
 use crate::tasks::CorrectionMemory;
@@ -169,6 +169,160 @@ pub fn run_sqn<B: LrBackend + ?Sized>(
     Ok((w, trace))
 }
 
+// ---------------------------------------------------------------------------
+// Replication-batched driver (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// Algorithm 3 over all replications at once.  Per iteration the backend
+/// sees ONE `grad_batch` call on an `[R × n]` iterate panel (and one
+/// `hvp_batch`/`direction_batch` on the Algorithm-4 schedule) instead of R
+/// separate calls.  Per-replication state — ω̄ accumulators, correction
+/// memories, minibatch streams, the tracked-loss evaluation subset — is
+/// kept exactly as [`run_sqn`] keeps it, row by row, so each replication's
+/// trajectory is bit-identical to its sequential run under the same
+/// subtree.
+pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
+    backend: &mut B,
+    data: &ClassifyData,
+    cfg: &SqnConfig,
+    trees: &[StreamTree],
+) -> Result<(Vec<f32>, Vec<SqnTrace>)> {
+    let r = trees.len();
+    let n = data.n_features;
+    anyhow::ensure!(backend.batch_reps() == r,
+                    "backend built for {} replications, got {} trees",
+                    backend.batch_reps(), r);
+
+    let mut w = vec![0.0f32; r * n];
+    let mut g = vec![0.0f32; r * n];
+    let mut dirs = vec![0.0f32; r * n];
+    let mut traces = vec![SqnTrace::default(); r];
+    let mut mems: Vec<CorrectionMemory> =
+        (0..r).map(|_| CorrectionMemory::new(cfg.memory, n)).collect();
+
+    // ω̄ accumulators (Algorithm 3 lines 3, 7, 15), one row per replication
+    let mut wbar_acc = vec![0.0f32; r * n];
+    let mut wbar_prev: Vec<Option<Vec<f32>>> = vec![None; r];
+    let mut t_count: i64 = -1;
+
+    // Fixed evaluation subsets for the tracked loss — the same per-subtree
+    // draw the sequential path makes.
+    let evals: Vec<(Vec<f32>, Vec<f32>)> = trees
+        .iter()
+        .map(|tree| {
+            let mut rng = tree.stream(&[0xE7A1]);
+            let rows = cfg.track_rows.min(data.n_samples);
+            let eval_rows = rng.sample_indices(data.n_samples, rows);
+            let mut xe = Vec::new();
+            let mut ze = Vec::new();
+            data.gather(&eval_rows, &mut xe, &mut ze);
+            (xe, ze)
+        })
+        .collect();
+
+    let mut idx: Vec<Vec<usize>> = vec![Vec::new(); r];
+    for k in 1..=cfg.iters {
+        let timer = Timer::start();
+        // -- line 5: per-replication minibatch indices ----------------------
+        for (row, tree) in idx.iter_mut().zip(trees) {
+            let mut rng = tree.stream(&[1, k as u64]);
+            *row = rng.sample_indices(data.n_samples,
+                                      cfg.batch.min(data.n_samples));
+        }
+
+        // -- line 6: ONE batched stochastic-gradient dispatch ---------------
+        let losses = backend.grad_batch(&w, data, &idx, &mut g)?;
+
+        // -- line 7: ω̄ accumulation + step size ----------------------------
+        for j in 0..r * n {
+            wbar_acc[j] += w[j];
+        }
+        let alpha = sqn_alpha(cfg.beta, k);
+
+        // -- lines 8-12: gradient or quasi-Newton step ----------------------
+        if k <= 2 * cfg.l_every {
+            for j in 0..r * n {
+                w[j] -= alpha * g[j];
+            }
+        } else {
+            let active: Vec<bool> =
+                mems.iter().map(|m| !m.is_empty()).collect();
+            if active.iter().any(|&a| a) {
+                backend.direction_batch(&mems, &g, &active, &mut dirs)?;
+            }
+            for i in 0..r {
+                let step = if active[i] { &dirs } else { &g };
+                for j in i * n..(i + 1) * n {
+                    w[j] -= alpha * step[j];
+                }
+            }
+        }
+
+        // -- lines 13-21: correction pairs every L iterations ---------------
+        if k % cfg.l_every == 0 {
+            t_count += 1;
+            let inv = 1.0 / cfg.l_every as f32;
+            let wbar_ts: Vec<Vec<f32>> = (0..r)
+                .map(|i| {
+                    wbar_acc[i * n..(i + 1) * n]
+                        .iter()
+                        .map(|&v| v * inv)
+                        .collect()
+                })
+                .collect();
+            if t_count > 0 {
+                // s_t and Hessian-batch indices per replication
+                let mut s_panel = vec![0.0f32; r * n];
+                let mut wbar_panel = vec![0.0f32; r * n];
+                let mut hidx: Vec<Vec<usize>> = Vec::with_capacity(r);
+                for i in 0..r {
+                    let prev =
+                        wbar_prev[i].as_ref().expect("t>0 ⇒ previous ω̄");
+                    for j in 0..n {
+                        wbar_panel[i * n + j] = wbar_ts[i][j];
+                        s_panel[i * n + j] = wbar_ts[i][j] - prev[j];
+                    }
+                    let mut hrng = trees[i].stream(&[2, t_count as u64]);
+                    hidx.push(hrng.sample_indices(
+                        data.n_samples, cfg.hbatch.min(data.n_samples)));
+                }
+                // line 18: ONE batched Hessian-vector dispatch
+                let mut y_panel = vec![0.0f32; r * n];
+                backend.hvp_batch(&wbar_panel, &s_panel, data, &hidx,
+                                  &mut y_panel)?;
+                for i in 0..r {
+                    if mems[i].push(&s_panel[i * n..(i + 1) * n],
+                                    &y_panel[i * n..(i + 1) * n]) {
+                        traces[i].pairs_accepted += 1;
+                    } else {
+                        traces[i].pairs_rejected += 1;
+                    }
+                }
+            }
+            for (prev, wbar_t) in wbar_prev.iter_mut().zip(wbar_ts) {
+                *prev = Some(wbar_t);
+            }
+            wbar_acc.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let share = timer.elapsed_s() / r as f64;
+        for (trace, &loss) in traces.iter_mut().zip(&losses) {
+            trace.iter_s.push(share);
+            trace.batch_loss.push(loss);
+        }
+
+        // -- convergence tracking (outside the timed region) ----------------
+        if cfg.track_every > 0 && (k % cfg.track_every == 0 || k == 1) {
+            for i in 0..r {
+                let (xe, ze) = &evals[i];
+                let l = crate::tasks::classification::full_loss(
+                    &w[i * n..(i + 1) * n], xe, ze);
+                traces[i].checkpoints.push((k, l));
+            }
+        }
+    }
+    Ok((w, traces))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,5 +400,35 @@ mod tests {
         let le = te.checkpoints.last().unwrap().1;
         let lt = tt.checkpoints.last().unwrap().1;
         assert!((le - lt).abs() < 0.05, "explicit {} vs twoloop {}", le, lt);
+    }
+
+    #[test]
+    fn sqn_batch_driver_matches_sequential_driver_bitwise() {
+        use crate::backend::native::NativeLrBatch;
+        let n = 12usize;
+        let reps = 3usize;
+        let root = StreamTree::new(25);
+        let data = ClassifyData::generate(&root, n);
+        let cfg = small_cfg(35);
+        let trees: Vec<StreamTree> =
+            (0..reps).map(|r| root.subtree(&[1000 + r as u64])).collect();
+
+        let mut batch =
+            NativeLrBatch::new(&data, reps, 2, HessianMode::Explicit);
+        let (w_panel, traces) =
+            run_sqn_batch(&mut batch, &data, &cfg, &trees).unwrap();
+
+        for (r, tree) in trees.iter().enumerate() {
+            let mut single = NativeLr::new(&data, NativeMode::Sequential,
+                                           HessianMode::Explicit);
+            let (w_seq, t_seq) =
+                run_sqn(&mut single, &data, &cfg, tree).unwrap();
+            assert_eq!(&w_panel[r * n..(r + 1) * n], w_seq.as_slice(),
+                       "rep {}", r);
+            assert_eq!(traces[r].batch_loss, t_seq.batch_loss, "rep {}", r);
+            assert_eq!(traces[r].checkpoints, t_seq.checkpoints, "rep {}", r);
+            assert_eq!(traces[r].pairs_accepted, t_seq.pairs_accepted);
+            assert_eq!(traces[r].pairs_rejected, t_seq.pairs_rejected);
+        }
     }
 }

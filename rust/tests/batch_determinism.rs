@@ -1,0 +1,122 @@
+//! Batched-vs-sequential equivalence (DESIGN.md §11): for every task, the
+//! replication-batched engine and the per-replication path must produce
+//! BIT-IDENTICAL iterates and objectives under the same seed, and distinct
+//! replication streams must stay disjoint.  Randomized over
+//! (seed, size, reps) via the in-tree property harness.
+
+use simopt::config::{BackendKind, ExecMode, TaskKind};
+use simopt::coordinator::{Coordinator, ExperimentSpec, RunResult};
+use simopt::util::prop::{check, Gen};
+
+fn results_dir() -> String {
+    std::env::temp_dir()
+        .join("simopt_batch_determinism")
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// A CI-sized spec for the given cell (classification needs its own batch
+/// parameters to finish quickly).
+fn tiny_spec(task: TaskKind, size: usize, reps: usize, seed: u64)
+    -> ExperimentSpec {
+    let mut spec = ExperimentSpec::new(task, BackendKind::Native)
+        .size(size)
+        .replications(reps)
+        .seed(seed);
+    match task {
+        TaskKind::Classification => {
+            spec.params.iters = 25;
+            spec.params.batch = 12;
+            spec.params.hbatch = 24;
+            spec.params.l_every = 4;
+            spec.params.memory = 3;
+            spec.track_every = 5;
+        }
+        _ => {
+            spec.params.iters = 3;
+            spec.params.m_inner = 3;
+            spec.params.samples = 8;
+        }
+    }
+    spec
+}
+
+fn run_mode(spec: &ExperimentSpec, exec: ExecMode) -> RunResult {
+    let mut coord = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut spec = spec.clone();
+    spec.exec = exec;
+    coord.run(&spec).unwrap()
+}
+
+fn identical(a: &RunResult, b: &RunResult) -> bool {
+    a.reps.len() == b.reps.len()
+        && a.reps.iter().zip(&b.reps).all(|(ra, rb)| {
+            ra.objs == rb.objs && ra.obj_iters == rb.obj_iters
+        })
+}
+
+/// Draw a random (seed, size, reps) cell.
+fn random_cell(g: &mut Gen) -> (u64, usize, usize) {
+    (g.u64_in(0..10_000), 8 + 4 * g.usize_in(0..4), g.usize_in(2..5))
+}
+
+#[test]
+fn mv_batched_equals_sequential_bitwise() {
+    check("mv batched == sequential", 6, random_cell,
+        |&(seed, size, reps)| {
+            let spec = tiny_spec(TaskKind::MeanVariance, size, reps, seed);
+            identical(&run_mode(&spec, ExecMode::Sequential),
+                      &run_mode(&spec, ExecMode::Batched))
+        });
+}
+
+#[test]
+fn nv_batched_equals_sequential_bitwise() {
+    check("nv batched == sequential", 4, random_cell,
+        |&(seed, size, reps)| {
+            let spec = tiny_spec(TaskKind::Newsvendor, size, reps, seed);
+            identical(&run_mode(&spec, ExecMode::Sequential),
+                      &run_mode(&spec, ExecMode::Batched))
+        });
+}
+
+#[test]
+fn lr_batched_equals_sequential_bitwise() {
+    check("lr batched == sequential", 3, random_cell,
+        |&(seed, size, reps)| {
+            let spec = tiny_spec(TaskKind::Classification, size, reps, seed);
+            identical(&run_mode(&spec, ExecMode::Sequential),
+                      &run_mode(&spec, ExecMode::Batched))
+        });
+}
+
+#[test]
+fn batched_replication_streams_stay_disjoint() {
+    // Within one batched run, every replication must follow its own
+    // trajectory (pairwise-distinct objective traces), and the run must be
+    // reproducible call-to-call.
+    for task in TaskKind::all() {
+        let spec = tiny_spec(task, 12, 4, 77);
+        let a = run_mode(&spec, ExecMode::Batched);
+        for i in 0..a.reps.len() {
+            for j in i + 1..a.reps.len() {
+                assert_ne!(a.reps[i].objs, a.reps[j].objs,
+                           "task {}: replications {} and {} collided",
+                           task, i, j);
+            }
+        }
+        let b = run_mode(&spec, ExecMode::Batched);
+        assert!(identical(&a, &b), "task {}: batched run not reproducible",
+                task);
+    }
+}
+
+#[test]
+fn auto_mode_matches_both_explicit_modes() {
+    // Auto picks batched here (native, reps ≥ 2) — whatever it picks must
+    // agree with both explicit modes.
+    let spec = tiny_spec(TaskKind::MeanVariance, 16, 3, 5);
+    let auto = run_mode(&spec, ExecMode::Auto);
+    assert!(identical(&auto, &run_mode(&spec, ExecMode::Sequential)));
+    assert!(identical(&auto, &run_mode(&spec, ExecMode::Batched)));
+}

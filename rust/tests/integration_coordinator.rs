@@ -1,7 +1,7 @@
 //! Coordinator-level integration: sweeps, report generation, artifact
 //! preflight, and failure injection (no artifacts needed for most).
 
-use simopt::config::{BackendKind, TaskKind};
+use simopt::config::{BackendKind, ExecMode, TaskKind};
 use simopt::coordinator::{report, Coordinator, ExperimentSpec, SweepSpec};
 
 fn tmpdir(name: &str) -> String {
@@ -22,6 +22,7 @@ fn native_sweep_produces_full_grid_and_report() {
         reps: 2,
         epochs: 3,
         seed: 9,
+        exec: ExecMode::Auto,
     };
     let results = coord.sweep(&sweep).unwrap();
     assert_eq!(results.len(), 2);

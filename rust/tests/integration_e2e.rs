@@ -7,7 +7,17 @@ use simopt::config::{BackendKind, TaskKind};
 use simopt::coordinator::{Coordinator, ExperimentSpec};
 
 fn artifacts_built() -> bool {
-    std::path::Path::new("artifacts/manifest.json").exists()
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        return false;
+    }
+    // also requires a real PJRT runtime (not the in-tree `xla` stub)
+    match simopt::runtime::Engine::new("artifacts") {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("[skip] PJRT engine unavailable: {:#}", e);
+            false
+        }
+    }
 }
 
 fn results_dir() -> String {

@@ -1,0 +1,262 @@
+//! Vendored `anyhow` subset (see Cargo.toml for why).
+//!
+//! Semantics mirror the real crate for the API simopt uses:
+//!
+//! * `Error` is an opaque chain of context frames, outermost first.
+//! * `{}` prints the outermost message, `{:#}` the full chain joined by
+//!   `": "`, `{:?}` the anyhow-style "Caused by:" listing.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` (the
+//!   source chain is captured eagerly as strings).
+//! * `.context(..)` / `.with_context(..)` work on both `Result` and
+//!   `Option`.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a chain of human-readable frames, outermost first.
+pub struct Error {
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { frames: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context frame (what `.context(..)` uses).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// The frames, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost frame.
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain on one line, anyhow convention
+            f.write_str(&self.frames.join(": "))
+        } else {
+            f.write_str(self.frames.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.frames.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                write!(f, "{}", head)?;
+                if !rest.is_empty() {
+                    write!(f, "\n\nCaused by:")?;
+                    for (i, frame) in rest.iter().enumerate() {
+                        if rest.len() > 1 {
+                            write!(f, "\n    {}: {}", i, frame)?;
+                        } else {
+                            write!(f, "\n    {}", frame)?;
+                        }
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error` — that
+// is what makes the blanket impls below coherent (the same trick the real
+// anyhow uses).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Anything `.context(..)` can upgrade into an [`Error`].
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` on `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into_error().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F)
+        -> Result<T> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_modes() {
+        let e = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{}", e), "reading manifest");
+        assert_eq!(format!("{:#}", e), "reading manifest: gone");
+        assert!(format!("{:?}", e).contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{:#}", e), "outer: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {}", x);
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        assert_eq!(f(101).unwrap_err().to_string(), "too big");
+        assert_eq!(anyhow!("literal").to_string(), "literal");
+        assert_eq!(anyhow!("x={}", 2).to_string(), "x=2");
+    }
+
+    #[test]
+    fn chain_order_outermost_first() {
+        let e = Error::msg("root").context("mid").context("top");
+        let frames: Vec<&str> = e.chain().collect();
+        assert_eq!(frames, vec!["top", "mid", "root"]);
+        assert_eq!(e.root_cause(), "root");
+    }
+}
