@@ -9,6 +9,7 @@ reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
 Usage (from python/):  python -m compile.aot --out ../artifacts [--full]
                        [--entries mv_epoch,nv_grad] [--paper-batches]
                        [--reps R]   # + replication-batched artifacts (§11)
+                       [--list]     # dry-run: print the spec table only
 """
 
 import argparse
@@ -65,6 +66,25 @@ class Spec:
     def lower(self):
         args = [_arg(s, t) for _, s, t in self.inputs]
         return jax.jit(self.fn).lower(*args)
+
+    def validate(self):
+        """Trace-validate BOTH sides of the signature: the inputs (an
+        arity/shape mismatch with the model entry point fails the trace)
+        and the outputs (the traced avals must match the declared
+        `outputs` table the manifest — and therefore the Rust runtime's
+        shape checks — are built from)."""
+        args = [_arg(s, t) for _, s, t in self.inputs]
+        traced = jax.tree_util.tree_leaves(jax.eval_shape(self.fn, *args))
+        if len(traced) != len(self.outputs):
+            raise ValueError(
+                f"{self.name}: model returns {len(traced)} outputs, "
+                f"spec declares {len(self.outputs)}")
+        for got, (name, shape, dt) in zip(traced, self.outputs):
+            if tuple(got.shape) != tuple(shape) or got.dtype != _DTYPES[dt]:
+                raise ValueError(
+                    f"{self.name} output '{name}': traced "
+                    f"{got.dtype}{list(got.shape)} != declared "
+                    f"{dt}{list(shape)}")
 
     def hlo_text(self):
         return to_hlo_text(self.lower(), return_tuple=self.tuple_output)
@@ -215,6 +235,26 @@ def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
                  ("x_full", (rows, n), F32), ("idx", (reps, bh), I32)],
                 [("y", (reps, n), F32)],
                 "classification"))
+            # padded batched Algorithm-4 directions (DESIGN.md §11): the
+            # driver's dense [R × mem × n] correction panels + per-row
+            # valid counts in, all R directions out — ONE dispatch closes
+            # the last per-replication call of the batched SQN spine
+            specs.append(Spec(
+                "lr_dir_batch", model.lr_dir_batch,
+                {"n": n, "mem": mem, "r": reps},
+                [("s_mem", (reps, mem, n), F32),
+                 ("y_mem", (reps, mem, n), F32),
+                 ("m_count", (reps,), I32), ("g", (reps, n), F32)],
+                [("d", (reps, n), F32)],
+                "classification"))
+            specs.append(Spec(
+                "lr_dir_twoloop_batch", model.lr_dir_twoloop_batch,
+                {"n": n, "mem": mem, "r": reps},
+                [("s_mem", (reps, mem, n), F32),
+                 ("y_mem", (reps, mem, n), F32),
+                 ("m_count", (reps,), I32), ("g", (reps, n), F32)],
+                [("d", (reps, n), F32)],
+                "classification"))
         specs.append(Spec(
             "lr_hbuild", model.lr_hbuild, {"n": n, "mem": mem},
             [("s_mem", (mem, n), F32), ("y_mem", (mem, n), F32),
@@ -261,6 +301,12 @@ def main():
                     help="also emit replication-batched artifacts that "
                          "advance this many replications per dispatch "
                          "(DESIGN.md §11; 0 = skip)")
+    ap.add_argument("--list", action="store_true",
+                    help="dry-run: trace-validate every spec against its "
+                         "model entry point (jax tracing only — no XLA "
+                         "build, nothing written), print the signatures, "
+                         "and exit.  The CI python job uses this to catch "
+                         "AOT-layer breakage cheaply")
     args = ap.parse_args()
 
     def dims(flag, default, full):
@@ -277,6 +323,20 @@ def main():
     if args.entries:
         keep = set(args.entries.split(","))
         specs = [s for s in specs if s.entry in keep]
+
+    if args.list:
+        for spec in specs:
+            # trace-validate inputs AND outputs: drift between the spec
+            # table and the model entry point fails HERE, not at
+            # artifact-build time on somebody else's machine
+            spec.validate()
+            sig = ", ".join(f"{name}:{dt}{list(shape)}"
+                            for name, shape, dt in spec.inputs)
+            outs = ", ".join(f"{name}:{dt}{list(shape)}"
+                             for name, shape, dt in spec.outputs)
+            print(f"  {spec.name}: ({sig}) -> ({outs})")
+        print(f"{len(specs)} artifacts validated (dry run, nothing written)")
+        return
 
     os.makedirs(args.out, exist_ok=True)
     manifest = {"version": 1, "artifacts": []}

@@ -282,3 +282,36 @@ def lr_hvp_batch(wbar, s, x_full, idx):
     return jax.vmap(
         lambda wr, sr, ir: lr_hvp_ds(wr, sr, x_full, ir)
     )(wbar, s, idx)
+
+
+def lr_dir_batch(s_mem, y_mem, m_count, g):
+    """Batched Algorithm-4 direction (DESIGN.md §11): build every
+    replication's explicit H_t from its padded correction panel and apply
+    it to its gradient row in ONE program — s_mem/y_mem are (R, mem, n)
+    dense zero-padded panels, m_count is (R,) int32 valid counts, g is
+    (R, n).  Invalid slots are masked in-graph by zeroing ρ (see
+    lr_hbuild), so rows with empty or partially filled memories are
+    handled without host-side raggedness; an m_count of 0 reduces row r
+    to the identity, d = g — the driver's plain-gradient fallback.
+
+    Lowered with lax.map, NOT jax.vmap: vmapping this graph reassociates
+    the rank-update contractions and drifts ~1 ulp from the
+    per-replication artifact (measured row-by-row, counts ≥ 2 — the same
+    drift that retired nv_grad_batch, §11).  lax.map keeps the unbatched
+    per-row graph intact inside one dispatch; the replication axis
+    becomes a short in-graph loop while the heavy (mem, n, n) panel math
+    of each row still vectorizes, so the dispatch-amortization win is
+    preserved and rows stay bitwise equal to the ragged path."""
+    return lax.map(
+        lambda args: lr_happly(lr_hbuild(args[0], args[1], args[2]),
+                               args[3]),
+        (s_mem, y_mem, m_count, g))
+
+
+def lr_dir_twoloop_batch(s_mem, y_mem, m_count, g):
+    """Batched two-loop recursion over the same padded panels (ablation
+    A2's batched analogue): same signature, masking, and bitwise-safe
+    lax.map lowering as lr_dir_batch, O(R·mem·n) instead of
+    O(R·mem·n²)."""
+    return lax.map(lambda args: lr_dir_twoloop(*args),
+                   (s_mem, y_mem, m_count, g))

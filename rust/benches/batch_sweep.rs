@@ -1,25 +1,31 @@
 //! Batched replication engine throughput (DESIGN.md §11): the paper's
 //! scaling thesis applied to the replication axis.
 //!
-//! For each problem size, R replications of the mean-variance and
-//! newsvendor tasks run (a) strictly sequentially — R per-replication
-//! driver runs one after another, the many-small-dispatches pattern — and
-//! (b) through the batched engine, which advances all R replications per
-//! call with replication-major thread parallelism.  Both paths produce
+//! For each problem size, R replications of the mean-variance, newsvendor,
+//! and classification (SQN) tasks run (a) strictly sequentially — R
+//! per-replication driver runs one after another, the
+//! many-small-dispatches pattern — and (b) through the batched engine,
+//! which advances all R replications per call with replication-major
+//! thread parallelism; the SQN cells exercise the padded batched
+//! direction engine (one `direction_batch` over the `[R × mem × n]`
+//! correction panels per step, DESIGN.md §11).  Both paths produce
 //! bit-identical iterates (asserted below), so the ratio is pure
 //! dispatch/parallelism win.
 //!
-//! Knobs: SIMOPT_BENCH_SIZES, SIMOPT_BENCH_REPS (= R), SIMOPT_BENCH_EPOCHS.
+//! Knobs: SIMOPT_BENCH_SIZES, SIMOPT_BENCH_REPS (= R), SIMOPT_BENCH_EPOCHS,
+//! SIMOPT_BENCH_LR_SIZES, SIMOPT_BENCH_SQN_ITERS.
 
 mod common;
 
-use simopt::backend::native::{NativeMode, NativeMv, NativeMvBatch,
-                              NativeNv, NativeNvBatch};
+use simopt::backend::native::{NativeLr, NativeLrBatch, NativeMode, NativeMv,
+                              NativeMvBatch, NativeNv, NativeNvBatch};
+use simopt::backend::HessianMode;
 use simopt::bench::{speedup, Bench};
 use simopt::coordinator::rep_subtrees;
-use simopt::opt::{run_mv, run_mv_batch, run_nv, run_nv_batch};
+use simopt::opt::{run_mv, run_mv_batch, run_nv, run_nv_batch, run_sqn,
+                  run_sqn_batch, SqnConfig};
 use simopt::rng::StreamTree;
-use simopt::sim::{AssetUniverse, NewsvendorInstance};
+use simopt::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use simopt::tasks::NvLmo;
 
 fn main() {
@@ -116,6 +122,76 @@ fn main() {
             .clone();
         println!("nv d={}: batched throughput {:.2}× sequential\n", d,
                  speedup(&nv_seq, &nv_batch));
+    }
+
+    // ---- Task 3: classification SQN + padded direction engine -----------
+    // Feature dims get their own (smaller) axis: the dataset is 30n × n,
+    // so the mv/nv size list would blow the design matrix up to hundreds
+    // of MB.
+    let lr_sizes: Vec<usize> = if smoke {
+        vec![24]
+    } else {
+        match std::env::var("SIMOPT_BENCH_LR_SIZES") {
+            Ok(v) => v.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+            Err(_) => vec![64, 256],
+        }
+    };
+    let sqn_cfg = SqnConfig {
+        iters: if smoke {
+            12
+        } else {
+            common::env_usize("SIMOPT_BENCH_SQN_ITERS", 60)
+        },
+        batch: 32,
+        hbatch: 64,
+        l_every: 5,
+        memory: 8,
+        beta: 2.0,
+        track_every: 0, // timing cells: no tracked-loss evaluations
+        track_rows: 0,
+    };
+    for &n in &lr_sizes {
+        let tree = StreamTree::new(43);
+        let trees: Vec<StreamTree> = rep_subtrees(&tree, r_reps);
+        let data = ClassifyData::generate(&tree, n);
+
+        let mut seq_final: Vec<Vec<f32>> = Vec::new();
+        let lr_seq = bench
+            .case(&format!("sqn_sequential_n{}_R{}", n, r_reps), || {
+                seq_final.clear();
+                for sub in &trees {
+                    let mut backend = NativeLr::new(
+                        &data, NativeMode::Sequential, HessianMode::Explicit);
+                    let (w, _) =
+                        run_sqn(&mut backend, &data, &sqn_cfg, sub).unwrap();
+                    seq_final.push(w);
+                }
+            })
+            .clone();
+
+        let mut batch_final: Vec<f32> = Vec::new();
+        let lr_batch = bench
+            .case(&format!("sqn_batched_n{}_R{}", n, r_reps), || {
+                let mut backend = NativeLrBatch::new(
+                    &data, r_reps, threads, HessianMode::Explicit);
+                let (w, _) =
+                    run_sqn_batch(&mut backend, &data, &sqn_cfg, &trees)
+                        .unwrap();
+                batch_final = w;
+            })
+            .clone();
+
+        // the padded direction engine must be a different schedule, not a
+        // different answer
+        for (r, w_seq) in seq_final.iter().enumerate() {
+            assert_eq!(&batch_final[r * n..(r + 1) * n], w_seq.as_slice(),
+                       "sqn n={} rep {}: batched != sequential", n, r);
+        }
+        println!("sqn n={}: batched throughput {:.2}× sequential (incl. \
+                  padded Algorithm-4 directions)\n", n,
+                 speedup(&lr_seq, &lr_batch));
     }
 
     bench.finish();

@@ -19,10 +19,11 @@ pub fn env_usize(key: &str, default: usize) -> usize {
 /// True in the CI bench-smoke job (`cargo bench --bench X -- --test`, the
 /// flag criterion benches also accept, or SIMOPT_BENCH_SMOKE=1): benches
 /// shrink to tiny workloads that only verify the target still runs —
-/// bit-rot detection without timing claims.
+/// bit-rot detection without timing claims.  Delegates to
+/// `bench::smoke_mode` so the workload shrink and the `smoke` marker in
+/// `BENCH_*.json` can never disagree.
 pub fn smoke() -> bool {
-    std::env::args().any(|a| a == "--test" || a == "--smoke")
-        || matches!(std::env::var("SIMOPT_BENCH_SMOKE").as_deref(), Ok("1"))
+    simopt::bench::smoke_mode()
 }
 
 pub fn env_sizes(default: Vec<usize>) -> Vec<usize> {

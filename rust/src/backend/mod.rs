@@ -89,8 +89,10 @@ pub enum HessianMode {
 //   were measured row-by-row against their per-replication originals in
 //   jax (panels, gradients, losses, HVPs, objectives: all bitwise) —
 //   but vmap can in principle reassociate reductions, so the batched
-//   artifact set sticks to lowerings where that was verified
-//   (DESIGN.md §11).
+//   artifact set sticks to lowerings where that was verified; the padded
+//   direction artifacts (`lr_dir_batch` / `lr_dir_twoloop_batch`) lower
+//   through lax.map rather than vmap for exactly this reason (vmap
+//   showed ~1-ulp drift on the Algorithm-4 recursion; DESIGN.md §11).
 // * Implementations may parallelize across the replication axis
 //   (replication-major data parallelism) or fuse it into one device
 //   dispatch; neither may change per-row arithmetic.
@@ -143,10 +145,17 @@ pub trait LrBatchBackend {
                  data: &crate::sim::ClassifyData, idx: &[Vec<usize>],
                  y: &mut [f32]) -> Result<()>;
 
-    /// H_t·g (Algorithm 4) per replication.  Rows with `active[r] == false`
-    /// are skipped (the driver takes the plain gradient step for them, as
-    /// the sequential path does before the memory fills).
-    fn direction_batch(&mut self, mems: &[crate::tasks::CorrectionMemory],
-                       g: &[f32], active: &[bool], out: &mut [f32])
-        -> Result<()>;
+    /// H_t·g (Algorithm 4) for ALL replications in one call, over the
+    /// dense padded `[R × mem × n]` correction panels of a
+    /// [`BatchCorrectionMemory`](crate::tasks::BatchCorrectionMemory) —
+    /// the last per-replication dispatch of the batched SQN spine, closed
+    /// (DESIGN.md §11).  Row r of `out` must be bit-identical to the
+    /// ragged path's `direction(&mems[r], &g[r·n..])`; rows with
+    /// `mem.count(r) == 0` need not be written (the driver takes the plain
+    /// gradient step for them, as the sequential path does before the
+    /// memory fills) but MAY be — an empty memory's H is the identity, so
+    /// d = g bitwise either way.
+    fn direction_batch(&mut self,
+                       mem: &crate::tasks::BatchCorrectionMemory,
+                       g: &[f32], out: &mut [f32]) -> Result<()>;
 }

@@ -15,7 +15,7 @@ use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use crate::tasks::classification as lr;
 use crate::tasks::mean_variance as mv;
 use crate::tasks::newsvendor as nv;
-use crate::tasks::CorrectionMemory;
+use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
 use crate::util::pool::parallel_map_chunks;
 
 use super::{
@@ -493,9 +493,23 @@ impl NvBatchBackend for NativeNvBatch {
     }
 }
 
-/// Task 3 batched: SQN kernels for all R replications per call.
+/// Task 3 batched: SQN kernels for all R replications per call.  Gradients
+/// and HVPs run through per-row sequential backends (bit-identical
+/// arithmetic); Algorithm-4 directions run directly on the driver's padded
+/// `[R × mem × n]` correction panels through the same [`MemView`] recursion
+/// cores the ragged path uses — one `direction_batch` call covers every
+/// row, with per-row explicit-H caches rebuilt on the sequential cadence
+/// (only when that row's memory generation moves, i.e. every L iterations).
 pub struct NativeLrBatch {
     reps: Vec<Mutex<NativeLr>>,
+    hessian_mode: HessianMode,
+    /// Per-row Algorithm-4 cache: (generation it was built at, H).  The
+    /// `Mutex` exists only to hand the chunked closure `&mut` access to
+    /// its own rows; chunks are disjoint, so locks are never contended.
+    h_caches: Vec<Mutex<Option<(u64, Mat)>>>,
+    /// Bumped by [`Self::hvp_batch`] — a correction pair is about to land,
+    /// so every row's H_t goes stale (mirrors `NativeLr::hvp`).
+    mem_generation: u64,
     n: usize,
     threads: usize,
 }
@@ -509,7 +523,14 @@ impl NativeLrBatch {
                                          hessian_mode))
             })
             .collect();
-        NativeLrBatch { reps, n: data.n_features, threads }
+        NativeLrBatch {
+            reps,
+            hessian_mode,
+            h_caches: (0..r_reps).map(|_| Mutex::new(None)).collect(),
+            mem_generation: 0,
+            n: data.n_features,
+            threads,
+        }
     }
 }
 
@@ -547,6 +568,8 @@ impl LrBatchBackend for NativeLrBatch {
 
     fn hvp_batch(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
                  idx: &[Vec<usize>], y: &mut [f32]) -> Result<()> {
+        // a new correction pair is about to land ⇒ every row's H_t changes
+        self.mem_generation += 1;
         let (r, n) = (self.reps.len(), self.n);
         anyhow::ensure!(wbar.len() == r * n && s.len() == r * n,
                         "ω̄/s panel shape mismatch");
@@ -570,30 +593,56 @@ impl LrBatchBackend for NativeLrBatch {
         Ok(())
     }
 
-    fn direction_batch(&mut self, mems: &[CorrectionMemory], g: &[f32],
-                       active: &[bool], out: &mut [f32]) -> Result<()> {
+    fn direction_batch(&mut self, mem: &BatchCorrectionMemory, g: &[f32],
+                       out: &mut [f32]) -> Result<()> {
         let (r, n) = (self.reps.len(), self.n);
-        anyhow::ensure!(mems.len() == r && active.len() == r,
-                        "need one memory + activity flag per replication");
-        anyhow::ensure!(out.len() == r * n, "output panel shape mismatch");
-        let reps = &self.reps;
+        anyhow::ensure!(mem.reps() == r && mem.dim() == n,
+                        "correction panels are {}×{}, backend is {}×{}",
+                        mem.reps(), mem.dim(), r, n);
+        anyhow::ensure!(g.len() == r * n && out.len() == r * n,
+                        "gradient/output panel shape mismatch");
+        let hessian_mode = self.hessian_mode;
+        let generation = self.mem_generation;
+        let caches = &self.h_caches;
         let parts = parallel_map_chunks(r, self.threads, |range| {
             let mut rows: Vec<(usize, Vec<f32>)> =
                 Vec::with_capacity(range.len());
             for i in range {
-                if !active[i] {
+                if !mem.is_active(i) {
+                    // the driver steps with the plain gradient here, as the
+                    // sequential path does before the memory fills
                     continue;
                 }
-                let mut rep = reps[i].lock().unwrap();
-                match rep.direction(&mems[i], &g[i * n..(i + 1) * n]) {
-                    Ok(d_row) => rows.push((i, d_row)),
-                    Err(e) => return Err(e),
-                }
+                let g_row = &g[i * n..(i + 1) * n];
+                let d_row = match hessian_mode {
+                    HessianMode::Explicit => {
+                        // rebuild row i's H only when its generation moved
+                        // (every L iterations) — the sequential cadence
+                        let mut cache = caches[i].lock().unwrap();
+                        let rebuild = match &*cache {
+                            Some((built, _)) => *built != generation,
+                            None => true,
+                        };
+                        if rebuild {
+                            *cache = Some((generation,
+                                           lr::hbuild_explicit_view(
+                                               mem.row(i))));
+                        }
+                        let (_, h) = cache.as_ref().unwrap();
+                        let mut d = vec![0.0f32; n];
+                        h.matvec(g_row, &mut d);
+                        d
+                    }
+                    HessianMode::TwoLoop => {
+                        lr::hdir_twoloop_view(mem.row(i), g_row)
+                    }
+                };
+                rows.push((i, d_row));
             }
-            Ok(rows)
+            rows
         });
         for part in parts {
-            for (i, row) in part? {
+            for (i, row) in part {
                 out[i * n..(i + 1) * n].copy_from_slice(&row);
             }
         }
@@ -782,12 +831,13 @@ mod tests {
             assert_eq!(losses[i], l1, "rep {}", i);
         }
 
-        // hvp + direction through a populated memory
+        // hvp + direction through populated (padded + ragged) memories
         let s_panel: Vec<f32> =
             (0..r * n).map(|j| (j as f32 * 0.02).cos() * 0.1).collect();
         let mut y = vec![0.0f32; r * n];
         batch.hvp_batch(&w, &s_panel, &data, &idx, &mut y).unwrap();
         let mut mems: Vec<CorrectionMemory> = Vec::new();
+        let mut batch_mem = BatchCorrectionMemory::new(r, 4, n);
         for i in 0..r {
             let y1 = singles[i]
                 .hvp(&w[i * n..(i + 1) * n], &s_panel[i * n..(i + 1) * n],
@@ -796,13 +846,13 @@ mod tests {
             assert_eq!(&y[i * n..(i + 1) * n], y1.as_slice(), "rep {}", i);
             let mut mem = CorrectionMemory::new(4, n);
             mem.push(&s_panel[i * n..(i + 1) * n], &y1);
+            batch_mem.push_row(i, &s_panel[i * n..(i + 1) * n], &y1);
             mems.push(mem);
         }
-        let active: Vec<bool> = mems.iter().map(|m| !m.is_empty()).collect();
         let mut dirs = vec![0.0f32; r * n];
-        batch.direction_batch(&mems, &g, &active, &mut dirs).unwrap();
+        batch.direction_batch(&batch_mem, &g, &mut dirs).unwrap();
         for i in 0..r {
-            if !active[i] {
+            if !batch_mem.is_active(i) {
                 continue;
             }
             let d1 = singles[i]

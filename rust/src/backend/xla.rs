@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 use crate::runtime::exec::DeviceBuf;
 use crate::runtime::{exec, Arg, BufArg, Engine, Exec};
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
-use crate::tasks::CorrectionMemory;
+use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
 
 use super::{
     HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
@@ -728,27 +728,26 @@ impl NvBatchBackend for XlaNvBatch {
 /// replication's minibatch in-graph against the ONE device-resident copy of
 /// the dataset — per iteration the host ships an `[R × n]` iterate panel
 /// and `[R × b]` indices instead of R separate dispatches.  Algorithm-4
-/// directions reuse the per-replication artifacts row by row (the
-/// correction memories are ragged across replications), each with its own
-/// resident-H cache rebuilt only when that replication's memory changes —
-/// the same once-per-L amortization the sequential arm has.
+/// directions run through `lr_dir_batch` (or `lr_dir_twoloop_batch`): the
+/// driver's dense padded `[R × mem × n]` correction panels go up with the
+/// per-row valid counts, and ONE fused hbuild+happly dispatch returns all
+/// R directions — the last per-replication dispatch of the batched spine,
+/// closed (DESIGN.md §11).  Rebuilding H in-dispatch trades the
+/// sequential arm's once-per-L resident-H amortization for a single
+/// launch per step; per the paper's dispatch-dominance premise that is
+/// the right trade on the batched path, and the n×n matrices now never
+/// exist on the host at all.
 pub struct XlaLrBatch {
     grad_exec: Rc<Exec>,
     hvp_exec: Rc<Exec>,
-    hbuild_exec: Option<Rc<Exec>>,
-    happly_exec: Option<Rc<Exec>>,
-    twoloop_exec: Option<Rc<Exec>>,
-    hessian_mode: HessianMode,
+    dir_exec: Rc<Exec>,
     memory: usize,
     r: usize,
     n: usize,
     x_buf: DeviceBuf,
     z_buf: DeviceBuf,
-    /// Per-replication device-resident H, invalidated by [`Self::hvp_batch`]
-    /// (a new correction pair means that row's H_t changes).
-    h_bufs: Vec<Option<DeviceBuf>>,
-    h_dirty: Vec<bool>,
     idx_i32: Vec<i32>,
+    counts_i32: Vec<i32>,
 }
 
 impl XlaLrBatch {
@@ -771,21 +770,18 @@ impl XlaLrBatch {
             "lr_hvp_batch",
             &[("n", n), ("bh", hbatch as i64), ("rows", rows), ("r", r)],
         )?;
-        // per-replication direction artifacts (ragged memories)
-        let (hbuild_exec, happly_exec, twoloop_exec) = match hessian_mode {
-            HessianMode::Explicit => (
-                Some(engine.load_by_params(
-                    "lr_hbuild", &[("n", n), ("mem", memory as i64)])?),
-                Some(engine.load_by_params("lr_happly", &[("n", n)])?),
-                None,
-            ),
-            HessianMode::TwoLoop => (
-                None,
-                None,
-                Some(engine.load_by_params(
-                    "lr_dir_twoloop", &[("n", n), ("mem", memory as i64)])?),
-            ),
+        // ONE padded direction artifact per Hessian mode (batched
+        // hbuild+happly, or the batched two-loop recursion)
+        let dir_entry = match hessian_mode {
+            HessianMode::Explicit => "lr_dir_batch",
+            HessianMode::TwoLoop => "lr_dir_twoloop_batch",
         };
+        let dir_exec = engine
+            .load_by_params(
+                dir_entry, &[("n", n), ("mem", memory as i64), ("r", r)])
+            .with_context(|| format!(
+                "loading {} artifact (regenerate with \
+                 `python -m compile.aot --reps R`)", dir_entry))?;
         // lr_grad_batch inputs: (w, x_full, z_full, idx) — the dataset is
         // uploaded ONCE and shared by the grad and hvp dispatches
         let x_buf = grad_exec.upload(1, Arg::F32(&data.x))?;
@@ -793,18 +789,14 @@ impl XlaLrBatch {
         Ok(XlaLrBatch {
             grad_exec,
             hvp_exec,
-            hbuild_exec,
-            happly_exec,
-            twoloop_exec,
-            hessian_mode,
+            dir_exec,
             memory,
             r: r_reps,
             n: data.n_features,
             x_buf,
             z_buf,
-            h_bufs: (0..r_reps).map(|_| None).collect(),
-            h_dirty: vec![true; r_reps],
             idx_i32: Vec::new(),
+            counts_i32: Vec::with_capacity(r_reps),
         })
     }
 
@@ -859,9 +851,6 @@ impl LrBatchBackend for XlaLrBatch {
                         "output panel shape mismatch");
         anyhow::ensure!(idx.len() == self.r,
                         "need one index set per replication");
-        // every replication is about to receive a correction pair ⇒ its
-        // resident H goes stale (mirrors XlaLr's generation bump)
-        self.h_dirty.iter_mut().for_each(|d| *d = true);
         self.flatten_idx(idx);
         let outs = self.hvp_exec.call_b(&[
             BufArg::Host(Arg::F32(wbar)),
@@ -876,53 +865,34 @@ impl LrBatchBackend for XlaLrBatch {
         Ok(())
     }
 
-    fn direction_batch(&mut self, mems: &[CorrectionMemory], g: &[f32],
-                       active: &[bool], out: &mut [f32]) -> Result<()> {
-        anyhow::ensure!(mems.len() == self.r && active.len() == self.r,
-                        "need one memory + activity flag per replication");
+    fn direction_batch(&mut self, mem: &BatchCorrectionMemory, g: &[f32],
+                       out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(mem.reps() == self.r && mem.dim() == self.n,
+                        "correction panels are {}×{}, backend is {}×{}",
+                        mem.reps(), mem.dim(), self.r, self.n);
+        anyhow::ensure!(mem.capacity() == self.memory,
+                        "correction capacity {} != artifact mem {}",
+                        mem.capacity(), self.memory);
         anyhow::ensure!(g.len() == self.r * self.n
                             && out.len() == self.r * self.n,
                         "gradient/output panel shape mismatch");
-        let n = self.n;
-        for i in 0..self.r {
-            if !active[i] {
-                continue;
-            }
-            let g_row = &g[i * n..(i + 1) * n];
-            let d_row = match self.hessian_mode {
-                HessianMode::Explicit => {
-                    // rebuild row i's device-resident H only when its
-                    // memory changed (once per L iterations), then apply
-                    // it as a resident matvec — the sequential cadence
-                    if self.h_dirty[i] || self.h_bufs[i].is_none() {
-                        let (s, y, count) =
-                            padded_mem(&mems[i], self.memory, n);
-                        let outs = self.hbuild_exec.as_ref().unwrap().call(
-                            &[Arg::F32(&s), Arg::F32(&y),
-                              Arg::ScalarI32(count)])?;
-                        let h_host = exec::f32_vec(&outs[0])?;
-                        let h = self.happly_exec
-                            .as_ref()
-                            .unwrap()
-                            .upload(0, Arg::F32(&h_host))?;
-                        self.h_bufs[i] = Some(h);
-                        self.h_dirty[i] = false;
-                    }
-                    let h = self.h_bufs[i].as_ref().unwrap();
-                    let outs = self.happly_exec.as_ref().unwrap().call_b(
-                        &[BufArg::Dev(h), BufArg::Host(Arg::F32(g_row))])?;
-                    exec::f32_vec(&outs[0])?
-                }
-                HessianMode::TwoLoop => {
-                    let (s, y, count) = padded_mem(&mems[i], self.memory, n);
-                    let outs = self.twoloop_exec.as_ref().unwrap().call(
-                        &[Arg::F32(&s), Arg::F32(&y), Arg::ScalarI32(count),
-                          Arg::F32(g_row)])?;
-                    exec::f32_vec(&outs[0])?
-                }
-            };
-            out[i * n..(i + 1) * n].copy_from_slice(&d_row);
-        }
+        // ONE fused dispatch: the dense zero-padded panels go up as-is
+        // (the artifact masks invalid slots by zeroing ρ, so rows with
+        // empty or partial memories are handled in-graph — an empty row
+        // reduces to the identity, d = g).
+        self.counts_i32.clear();
+        self.counts_i32
+            .extend(mem.counts().iter().map(|&c| c as i32));
+        let outs = self.dir_exec.call(&[
+            Arg::F32(mem.s_panel()),
+            Arg::F32(mem.y_panel()),
+            Arg::I32(&self.counts_i32),
+            Arg::F32(g),
+        ])?;
+        let d = exec::f32_vec(&outs[0])?;
+        anyhow::ensure!(d.len() == out.len(),
+                        "direction artifact returned wrong panel shape");
+        out.copy_from_slice(&d);
         Ok(())
     }
 }

@@ -14,6 +14,17 @@ use std::path::Path;
 use crate::util::stats::OnlineStats;
 use crate::util::timer::{fmt_duration, Timer};
 
+/// True when the current process runs as a CI smoke check: the
+/// criterion-compatible `--test` / `--smoke` flags or
+/// `SIMOPT_BENCH_SMOKE=1`.  The single source of truth — the bench
+/// binaries (via `benches/common`) shrink their workloads on it, and
+/// [`Bench::to_json`] stamps it into the telemetry record so trajectory
+/// tooling can separate smoke runs from real timings.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--test" || a == "--smoke")
+        || matches!(std::env::var("SIMOPT_BENCH_SMOKE").as_deref(), Ok("1"))
+}
+
 /// One measured case (a row in a bench table).
 #[derive(Debug, Clone)]
 pub struct Measurement {
@@ -143,7 +154,41 @@ impl Bench {
         out
     }
 
-    /// Print markdown to stdout and persist CSV under `results/bench/`.
+    /// Machine-readable run record (`BENCH_<name>.json`) — the per-commit
+    /// telemetry the CI bench-smoke matrix uploads as an artifact, so a
+    /// perf trajectory can be assembled across commits.  Commit / run
+    /// identifiers are taken from the standard CI environment when
+    /// present.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{arr, num, obj, s};
+        let cases = self
+            .rows
+            .iter()
+            .map(|m| {
+                obj(vec![
+                    ("label", s(&m.label)),
+                    ("reps", num(m.reps as f64)),
+                    ("mean_s", num(m.mean_s)),
+                    ("std_s", num(m.std_s)),
+                    ("min_s", num(m.min_s)),
+                    ("median_s", num(m.median_s)),
+                ])
+            })
+            .collect();
+        let mut top = vec![("bench", s(&self.name))];
+        if let Ok(sha) = std::env::var("GITHUB_SHA") {
+            top.push(("commit", s(&sha)));
+        }
+        if let Ok(run) = std::env::var("GITHUB_RUN_ID") {
+            top.push(("ci_run", s(&run)));
+        }
+        top.push(("smoke", crate::util::json::Value::Bool(smoke_mode())));
+        top.push(("cases", arr(cases)));
+        obj(top).to_string_pretty()
+    }
+
+    /// Print markdown to stdout and persist CSV + JSON under
+    /// `results/bench/`.
     pub fn finish(&self) {
         println!("{}", self.to_markdown());
         let dir = Path::new("results").join("bench");
@@ -152,6 +197,11 @@ impl Bench {
             if let Ok(mut f) = fs::File::create(&path) {
                 let _ = f.write_all(self.to_csv().as_bytes());
                 println!("[bench] wrote {}", path.display());
+            }
+            let jpath = dir.join(format!("BENCH_{}.json", self.name));
+            if let Ok(mut f) = fs::File::create(&jpath) {
+                let _ = f.write_all(self.to_json().as_bytes());
+                println!("[bench] wrote {}", jpath.display());
             }
         }
     }
@@ -199,6 +249,19 @@ mod tests {
         let csv = b.to_csv();
         assert!(csv.lines().count() == 2);
         assert!(csv.starts_with("label,"));
+    }
+
+    #[test]
+    fn json_record_shape() {
+        let mut b = Bench::new("jshape");
+        b.record("case_a", &[1.0, 3.0]);
+        let v = crate::util::json::Value::parse(&b.to_json()).unwrap();
+        assert_eq!(v.get("bench").and_then(|x| x.as_str()), Some("jshape"));
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 1);
+        assert_eq!(cases[0].get("label").and_then(|x| x.as_str()),
+                   Some("case_a"));
+        assert_eq!(cases[0].get("mean_s").and_then(|x| x.as_f64()), Some(2.0));
     }
 
     #[test]

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::backend::{LrBackend, LrBatchBackend};
 use crate::rng::StreamTree;
 use crate::sim::ClassifyData;
-use crate::tasks::CorrectionMemory;
+use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
 use crate::util::timer::Timer;
 
 use super::schedule::sqn_alpha;
@@ -174,13 +174,15 @@ pub fn run_sqn<B: LrBackend + ?Sized>(
 // ---------------------------------------------------------------------------
 
 /// Algorithm 3 over all replications at once.  Per iteration the backend
-/// sees ONE `grad_batch` call on an `[R × n]` iterate panel (and one
-/// `hvp_batch`/`direction_batch` on the Algorithm-4 schedule) instead of R
-/// separate calls.  Per-replication state — ω̄ accumulators, correction
-/// memories, minibatch streams, the tracked-loss evaluation subset — is
-/// kept exactly as [`run_sqn`] keeps it, row by row, so each replication's
-/// trajectory is bit-identical to its sequential run under the same
-/// subtree.
+/// sees ONE `grad_batch` call on an `[R × n]` iterate panel, ONE
+/// `direction_batch` call over the padded `[R × mem × n]` correction
+/// panels, and (on the Algorithm-4 schedule) ONE `hvp_batch` call —
+/// zero per-replication dispatches anywhere in the loop.  Per-replication
+/// state — ω̄ accumulators, correction memories (as rows of a
+/// [`BatchCorrectionMemory`]), minibatch streams, the tracked-loss
+/// evaluation subset — is kept exactly as [`run_sqn`] keeps it, row by
+/// row, so each replication's trajectory is bit-identical to its
+/// sequential run under the same subtree.
 pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
     backend: &mut B,
     data: &ClassifyData,
@@ -197,8 +199,7 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
     let mut g = vec![0.0f32; r * n];
     let mut dirs = vec![0.0f32; r * n];
     let mut traces = vec![SqnTrace::default(); r];
-    let mut mems: Vec<CorrectionMemory> =
-        (0..r).map(|_| CorrectionMemory::new(cfg.memory, n)).collect();
+    let mut mem = BatchCorrectionMemory::new(r, cfg.memory, n);
 
     // ω̄ accumulators (Algorithm 3 lines 3, 7, 15), one row per replication
     let mut wbar_acc = vec![0.0f32; r * n];
@@ -245,13 +246,15 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
                 w[j] -= alpha * g[j];
             }
         } else {
-            let active: Vec<bool> =
-                mems.iter().map(|m| !m.is_empty()).collect();
-            if active.iter().any(|&a| a) {
-                backend.direction_batch(&mems, &g, &active, &mut dirs)?;
+            if mem.any_active() {
+                // ONE padded dispatch produces every replication's
+                // Algorithm-4 direction (DESIGN.md §11)
+                backend.direction_batch(&mem, &g, &mut dirs)?;
             }
             for i in 0..r {
-                let step = if active[i] { &dirs } else { &g };
+                // rows whose memory hasn't accepted a pair yet take the
+                // plain gradient step, exactly as the sequential path does
+                let step = if mem.is_active(i) { &dirs } else { &g };
                 for j in i * n..(i + 1) * n {
                     w[j] -= alpha * step[j];
                 }
@@ -291,7 +294,7 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
                 backend.hvp_batch(&wbar_panel, &s_panel, data, &hidx,
                                   &mut y_panel)?;
                 for i in 0..r {
-                    if mems[i].push(&s_panel[i * n..(i + 1) * n],
+                    if mem.push_row(i, &s_panel[i * n..(i + 1) * n],
                                     &y_panel[i * n..(i + 1) * n]) {
                         traces[i].pairs_accepted += 1;
                     } else {

@@ -86,23 +86,8 @@ impl CorrectionMemory {
     /// Append a pair; evicts the oldest once full.  Pairs with non-positive
     /// curvature s·y are rejected (standard BFGS safeguard) — returns false.
     pub fn push(&mut self, s: &[f32], y: &[f32]) -> bool {
-        assert_eq!(s.len(), self.n);
-        assert_eq!(y.len(), self.n);
-        if dot(s, y) <= EPS {
-            return false;
-        }
-        if self.count == self.capacity {
-            // shift left one row (O(capacity·n), every L iterations — cheap
-            // relative to the O(b·n) gradient work between pushes)
-            self.s_mem.copy_within(self.n.., 0);
-            self.y_mem.copy_within(self.n.., 0);
-            self.count -= 1;
-        }
-        let at = self.count * self.n;
-        self.s_mem[at..at + self.n].copy_from_slice(s);
-        self.y_mem[at..at + self.n].copy_from_slice(y);
-        self.count += 1;
-        true
+        push_into(&mut self.s_mem, &mut self.y_mem, &mut self.count,
+                  self.capacity, self.n, s, y)
     }
 
     pub fn pair(&self, i: usize) -> (&[f32], &[f32]) {
@@ -114,12 +99,183 @@ impl CorrectionMemory {
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
+
+    /// Borrowed padded view of this memory (rows `[0, count)` valid).
+    pub fn view(&self) -> MemView<'_> {
+        MemView {
+            s_mem: &self.s_mem,
+            y_mem: &self.y_mem,
+            count: self.count,
+            n: self.n,
+        }
+    }
+}
+
+/// The one push algorithm both memory layouts run: append (s, y) into a
+/// padded `[capacity × n]` block whose first `count` slots are valid,
+/// rejecting non-positive curvature s·y (standard BFGS safeguard) and
+/// ring-evicting the oldest pair once full.  [`CorrectionMemory::push`]
+/// hands its whole buffer here; [`BatchCorrectionMemory::push_row`] hands
+/// one row's block — identical semantics by construction, which the
+/// batched == sequential bit-identity guarantee rests on.
+fn push_into(s_mem: &mut [f32], y_mem: &mut [f32], count: &mut usize,
+             capacity: usize, n: usize, s: &[f32], y: &[f32]) -> bool {
+    assert_eq!(s.len(), n);
+    assert_eq!(y.len(), n);
+    if dot(s, y) <= EPS {
+        return false;
+    }
+    if *count == capacity {
+        // shift left one row (O(capacity·n), every L iterations — cheap
+        // relative to the O(b·n) gradient work between pushes)
+        s_mem.copy_within(n.., 0);
+        y_mem.copy_within(n.., 0);
+        *count -= 1;
+    }
+    let at = *count * n;
+    s_mem[at..at + n].copy_from_slice(s);
+    y_mem[at..at + n].copy_from_slice(y);
+    *count += 1;
+    true
+}
+
+/// Borrowed view of ONE replication's padded correction memory: `s_mem` /
+/// `y_mem` are `[capacity × n]` row-major with rows `[0, count)` valid,
+/// oldest first, zero-padded tail — the layout [`CorrectionMemory`] itself
+/// stores and the per-row layout of [`BatchCorrectionMemory`]'s dense
+/// `[R × capacity × n]` panels.  The Algorithm-4 recursions below run on
+/// this view, so the ragged (per-replication) and padded (batched) paths
+/// share one implementation and are bit-identical by construction.
+#[derive(Debug, Clone, Copy)]
+pub struct MemView<'a> {
+    pub s_mem: &'a [f32],
+    pub y_mem: &'a [f32],
+    pub count: usize,
+    pub n: usize,
+}
+
+impl MemView<'_> {
+    pub fn pair(&self, i: usize) -> (&[f32], &[f32]) {
+        assert!(i < self.count);
+        let at = i * self.n;
+        (&self.s_mem[at..at + self.n], &self.y_mem[at..at + self.n])
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// All R replications' correction memories in dense padded panels
+/// (DESIGN.md §11): `s_mem` / `y_mem` are row-major `[R × capacity × n]`,
+/// row r's pairs sit in `[r·capacity·n, r·capacity·n + counts[r]·n)`
+/// oldest first, and the tail of every row block stays zero.  Rows evolve
+/// independently under exactly [`CorrectionMemory::push`]'s semantics
+/// (curvature rejection, ring eviction), so per-row fill levels are
+/// heterogeneous — the padding is what lets ONE batched dispatch apply
+/// Algorithm 4 to every replication at once.
+#[derive(Debug, Clone)]
+pub struct BatchCorrectionMemory {
+    s_mem: Vec<f32>,
+    y_mem: Vec<f32>,
+    counts: Vec<usize>,
+    reps: usize,
+    capacity: usize,
+    n: usize,
+}
+
+impl BatchCorrectionMemory {
+    pub fn new(reps: usize, capacity: usize, n: usize) -> Self {
+        BatchCorrectionMemory {
+            s_mem: vec![0.0; reps * capacity * n],
+            y_mem: vec![0.0; reps * capacity * n],
+            counts: vec![0; reps],
+            reps,
+            capacity,
+            n,
+        }
+    }
+
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn count(&self, r: usize) -> usize {
+        self.counts[r]
+    }
+
+    pub fn counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    /// Whether row r has accepted at least one pair (the driver falls back
+    /// to the plain-gradient step for inactive rows, exactly as the
+    /// sequential path does before its memory fills).
+    pub fn is_active(&self, r: usize) -> bool {
+        self.counts[r] > 0
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.counts.iter().any(|&c| c > 0)
+    }
+
+    /// Append a pair to row r — the SAME [`push_into`] core
+    /// [`CorrectionMemory::push`] runs (curvature rejection, ring
+    /// eviction), confined to row r's block.
+    pub fn push_row(&mut self, r: usize, s: &[f32], y: &[f32]) -> bool {
+        assert!(r < self.reps);
+        let block = r * self.capacity * self.n
+            ..(r + 1) * self.capacity * self.n;
+        push_into(&mut self.s_mem[block.clone()],
+                  &mut self.y_mem[block], &mut self.counts[r],
+                  self.capacity, self.n, s, y)
+    }
+
+    /// Row r as a padded per-replication view — the exact input the shared
+    /// Algorithm-4 recursions consume.
+    pub fn row(&self, r: usize) -> MemView<'_> {
+        assert!(r < self.reps);
+        let base = r * self.capacity * self.n;
+        let block = base..base + self.capacity * self.n;
+        MemView {
+            s_mem: &self.s_mem[block.clone()],
+            y_mem: &self.y_mem[block],
+            count: self.counts[r],
+            n: self.n,
+        }
+    }
+
+    /// The dense `[R × capacity × n]` s-panel (zero-padded) — uploaded
+    /// as-is to the batched `lr_dir_batch` artifact.
+    pub fn s_panel(&self) -> &[f32] {
+        &self.s_mem
+    }
+
+    /// The dense `[R × capacity × n]` y-panel (zero-padded).
+    pub fn y_panel(&self) -> &[f32] {
+        &self.y_mem
+    }
 }
 
 /// Algorithm 4, explicit form (the paper's matrix-operation showcase):
 /// build the full inverse-Hessian approximation H_t.  O(count·n²)
 /// sequential.  Returns the identity when the memory is empty.
 pub fn hbuild_explicit(mem: &CorrectionMemory) -> Mat {
+    hbuild_explicit_view(mem.view())
+}
+
+/// [`hbuild_explicit`] on a padded view — the shared core both the ragged
+/// per-replication path and the batched engine's padded rows run, so the
+/// two are bit-identical by construction.
+pub fn hbuild_explicit_view(mem: MemView<'_>) -> Mat {
     let n = mem.n;
     if mem.is_empty() {
         return Mat::eye(n);
@@ -164,6 +320,11 @@ pub fn hdir_explicit(mem: &CorrectionMemory, g: &[f32]) -> Vec<f32> {
 
 /// L-BFGS two-loop recursion over the same memory (ablation A2); O(count·n).
 pub fn hdir_twoloop(mem: &CorrectionMemory, g: &[f32]) -> Vec<f32> {
+    hdir_twoloop_view(mem.view(), g)
+}
+
+/// [`hdir_twoloop`] on a padded view (see [`hbuild_explicit_view`]).
+pub fn hdir_twoloop_view(mem: MemView<'_>, g: &[f32]) -> Vec<f32> {
     let n = mem.n;
     assert_eq!(g.len(), n);
     if mem.is_empty() {
@@ -292,6 +453,68 @@ mod tests {
         assert!(!mem.push(&[1.0, 0.0], &[-1.0, 0.0]));
         assert!(!mem.push(&[1.0, 0.0], &[0.0, 1.0])); // s·y = 0
         assert!(mem.is_empty());
+    }
+
+    #[test]
+    fn batch_memory_rows_match_ragged_memories() {
+        // Heterogeneous pushes per row must leave every row bit-identical
+        // to an independently maintained CorrectionMemory.
+        let (reps, cap, n) = (4usize, 3usize, 2usize);
+        let mut batch = BatchCorrectionMemory::new(reps, cap, n);
+        let mut ragged: Vec<CorrectionMemory> =
+            (0..reps).map(|_| CorrectionMemory::new(cap, n)).collect();
+        // row r receives r + 2 pushes: row 0 partial … row 3 wraps the ring
+        for r in 0..reps {
+            for t in 0..r + 2 {
+                let s = vec![1.0 + (r * 7 + t) as f32, 0.5];
+                let y = vec![1.0, 0.25 + t as f32 * 0.5];
+                assert_eq!(batch.push_row(r, &s, &y), ragged[r].push(&s, &y));
+            }
+        }
+        for r in 0..reps {
+            let row = batch.row(r);
+            assert_eq!(row.count, ragged[r].count, "row {}", r);
+            let take = row.count * n;
+            assert_eq!(&row.s_mem[..take], &ragged[r].s_mem[..take]);
+            assert_eq!(&row.y_mem[..take], &ragged[r].y_mem[..take]);
+        }
+        assert!(batch.any_active());
+    }
+
+    #[test]
+    fn batch_memory_rejects_and_pads_like_ragged() {
+        let mut batch = BatchCorrectionMemory::new(2, 3, 2);
+        // non-positive curvature rejected, row stays inactive
+        assert!(!batch.push_row(0, &[1.0, 0.0], &[-1.0, 0.0]));
+        assert!(!batch.is_active(0));
+        assert!(!batch.any_active());
+        // a partial row keeps its padded tail at exactly zero (the batched
+        // artifact contract: invalid slots are masked, padding stays 0)
+        assert!(batch.push_row(1, &[1.0, 0.0], &[2.0, 0.0]));
+        let row = batch.row(1);
+        assert_eq!(row.count, 1);
+        assert!(row.s_mem[2..].iter().all(|&v| v == 0.0));
+        assert!(row.y_mem[2..].iter().all(|&v| v == 0.0));
+        // panels expose the dense [R × cap × n] layout
+        assert_eq!(batch.s_panel().len(), 2 * 3 * 2);
+        assert_eq!(batch.s_panel()[3 * 2], 1.0); // row 1, slot 0, j 0
+    }
+
+    #[test]
+    fn view_recursions_match_ragged_entrypoints() {
+        let mut p = Philox::new(13);
+        let n = 6;
+        let mut mem = CorrectionMemory::new(4, n);
+        for _ in 0..3 {
+            let s: Vec<f32> = (0..n).map(|_| p.uniform_f32(-0.5, 0.5)).collect();
+            let y: Vec<f32> = s.iter().map(|&v| 1.5 * v + 0.01).collect();
+            mem.push(&s, &y);
+        }
+        let g: Vec<f32> = (0..n).map(|_| p.uniform_f32(-1.0, 1.0)).collect();
+        let h_a = hbuild_explicit(&mem);
+        let h_b = hbuild_explicit_view(mem.view());
+        assert_eq!(h_a.data, h_b.data);
+        assert_eq!(hdir_twoloop(&mem, &g), hdir_twoloop_view(mem.view(), &g));
     }
 
     #[test]

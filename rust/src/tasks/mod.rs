@@ -8,5 +8,5 @@ pub mod classification;
 pub mod mean_variance;
 pub mod newsvendor;
 
-pub use classification::CorrectionMemory;
+pub use classification::{BatchCorrectionMemory, CorrectionMemory, MemView};
 pub use newsvendor::NvLmo;

@@ -4,8 +4,13 @@
 //! replication streams must stay disjoint.  Randomized over
 //! (seed, size, reps) via the in-tree property harness.
 
+use simopt::backend::native::{NativeLr, NativeLrBatch, NativeMode};
+use simopt::backend::{HessianMode, LrBackend, LrBatchBackend};
 use simopt::config::{BackendKind, ExecMode, TaskKind};
 use simopt::coordinator::{Coordinator, ExperimentSpec, RunResult};
+use simopt::rng::{Philox, StreamTree};
+use simopt::sim::ClassifyData;
+use simopt::tasks::{BatchCorrectionMemory, CorrectionMemory};
 use simopt::util::prop::{check, Gen};
 
 fn results_dir() -> String {
@@ -109,6 +114,136 @@ fn batched_replication_streams_stay_disjoint() {
         assert!(identical(&a, &b), "task {}: batched run not reproducible",
                 task);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Padded-vs-ragged direction engine (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// One padded-engine cell: seed, feature dim, replication count, correction
+/// capacity, and a heterogeneous per-row push schedule.  Row 0 is pinned
+/// empty and the last row pinned past capacity so every draw covers the
+/// empty / partial / full / ring-wrapped spectrum at once.
+#[derive(Debug)]
+struct FillCell {
+    seed: u64,
+    n: usize,
+    reps: usize,
+    capacity: usize,
+    fills: Vec<usize>,
+}
+
+fn random_fill_cell(g: &mut Gen) -> FillCell {
+    let reps = g.usize_in(3..6);
+    let capacity = g.usize_in(2..5);
+    let mut fills: Vec<usize> =
+        (0..reps).map(|_| g.usize_in(0..capacity + 3)).collect();
+    fills[0] = 0; // always one empty row (plain-gradient fallback)
+    fills[reps - 1] = capacity + 2; // always one ring-wrapped row
+    FillCell {
+        seed: g.u64_in(0..10_000),
+        n: 6 + 2 * g.usize_in(0..4),
+        reps,
+        capacity,
+        fills,
+    }
+}
+
+/// Push the cell's schedule into both a `BatchCorrectionMemory` and
+/// independent ragged `CorrectionMemory`s, asserting identical
+/// accept/reject decisions.  Every third pair has negated curvature so
+/// the rejection path is exercised on both sides.
+fn fill_both(cell: &FillCell)
+    -> Option<(BatchCorrectionMemory, Vec<CorrectionMemory>)> {
+    let (n, reps) = (cell.n, cell.reps);
+    let mut batch = BatchCorrectionMemory::new(reps, cell.capacity, n);
+    let mut ragged: Vec<CorrectionMemory> =
+        (0..reps).map(|_| CorrectionMemory::new(cell.capacity, n)).collect();
+    let mut p = Philox::new(cell.seed ^ 0xD1CE);
+    for r in 0..reps {
+        for t in 0..cell.fills[r] {
+            let s: Vec<f32> =
+                (0..n).map(|_| p.uniform_f32(-0.5, 0.5)).collect();
+            let y: Vec<f32> = if t % 3 == 2 {
+                s.iter().map(|&v| -v).collect() // non-positive curvature
+            } else {
+                s.iter().map(|&v| 1.5 * v + 0.01).collect()
+            };
+            if batch.push_row(r, &s, &y) != ragged[r].push(&s, &y) {
+                return None;
+            }
+        }
+        if batch.count(r) != ragged[r].count {
+            return None;
+        }
+    }
+    Some((batch, ragged))
+}
+
+#[test]
+fn padded_memory_matches_ragged_push_semantics_and_padding() {
+    check("padded push == ragged push", 12, random_fill_cell, |cell| {
+        let Some((batch, ragged)) = fill_both(cell) else { return false };
+        let n = cell.n;
+        for r in 0..cell.reps {
+            let row = batch.row(r);
+            let take = row.count * n;
+            // identical valid pairs, oldest first…
+            if row.s_mem[..take] != ragged[r].s_mem[..take]
+                || row.y_mem[..take] != ragged[r].y_mem[..take] {
+                return false;
+            }
+            // …and a partial row's padded tail stays exactly zero (the
+            // batched artifact masks on the count, never on the values)
+            if row.count < cell.capacity
+                && !(row.s_mem[take..].iter().all(|&v| v == 0.0)
+                     && row.y_mem[take..].iter().all(|&v| v == 0.0)) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn padded_direction_bitwise_matches_ragged_per_row() {
+    // The tentpole property: ONE direction_batch call over the padded
+    // panels must reproduce, bit for bit, what each replication's ragged
+    // memory produces through the sequential backend — across empty,
+    // partially filled, full, and ring-wrapped rows, in both Hessian
+    // modes.  Inactive rows must be left untouched.
+    check("padded direction == ragged direction", 8, random_fill_cell,
+        |cell| {
+            let Some((batch_mem, ragged)) = fill_both(cell) else {
+                return false;
+            };
+            let (n, reps) = (cell.n, cell.reps);
+            let data = ClassifyData::generate(&StreamTree::new(cell.seed), n);
+            let mut p = Philox::new(cell.seed ^ 0x9A);
+            let g: Vec<f32> =
+                (0..reps * n).map(|_| p.uniform_f32(-1.0, 1.0)).collect();
+            for mode in [HessianMode::Explicit, HessianMode::TwoLoop] {
+                let mut batch = NativeLrBatch::new(&data, reps, 3, mode);
+                let mut dirs = vec![f32::NAN; reps * n];
+                batch.direction_batch(&batch_mem, &g, &mut dirs).unwrap();
+                for r in 0..reps {
+                    let got = &dirs[r * n..(r + 1) * n];
+                    if batch_mem.is_active(r) {
+                        let mut single = NativeLr::new(
+                            &data, NativeMode::Sequential, mode);
+                        let want = single
+                            .direction(&ragged[r], &g[r * n..(r + 1) * n])
+                            .unwrap();
+                        if got != want.as_slice() {
+                            return false;
+                        }
+                    } else if !got.iter().all(|v| v.is_nan()) {
+                        return false; // empty row written unexpectedly
+                    }
+                }
+            }
+            true
+        });
 }
 
 #[test]
