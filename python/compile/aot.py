@@ -104,14 +104,16 @@ class Spec:
         }
 
 
-def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
-                nv_samples=32, lr_batch=64, lr_hbatch=256, lr_mem=25,
-                reps=0):
+def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
+                mv_inner=25, nv_samples=32, lr_batch=64, lr_hbatch=256,
+                lr_mem=25, reps=0):
     """The full artifact table.  Dimension lists come from the CLI; batch
     and inner-loop parameters mirror the paper's §4.1 settings (modulo the
     tile-friendly rounding documented in DESIGN.md §10).  `reps > 0` adds
     the replication-batched entries (DESIGN.md §11): vmap lowerings that
-    advance all `reps` replications in one dispatch."""
+    advance all `reps` replications in one dispatch.  `cv_dims` adds the
+    mean-CVaR task registered through the task-registry plane (DESIGN.md
+    §12); it shares the mv panel shape knobs (same asset universe)."""
     specs = []
 
     for d in mv_dims:
@@ -147,6 +149,30 @@ def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
              ("k_epoch", (), I32), ("m_iter", (), I32)],
             [("w_out", (d,), F32), ("obj", (), F32)],
             "mean_variance"))
+
+    for d in cv_dims:
+        # Task 4 (mean-CVaR): the joint iterate is [w, t] of length d+1;
+        # the panel shape mirrors mv (same asset universe).
+        n, m = mv_samples, mv_inner
+        specs.append(Spec(
+            "cv_epoch",
+            functools.partial(model.cv_epoch, n_samples=n, m_inner=m),
+            {"d": d, "n": n, "m": m},
+            [("x", (d + 1,), F32), ("mu", (d,), F32), ("sigma", (d,), F32),
+             ("key", (2,), U32), ("k_epoch", (), I32)],
+            [("x_out", (d + 1,), F32), ("obj", (), F32)],
+            "mean_cvar"))
+        if reps > 0:
+            specs.append(Spec(
+                "cv_epoch_batch",
+                functools.partial(model.cv_epoch_batch, n_samples=n,
+                                  m_inner=m),
+                {"d": d, "n": n, "m": m, "r": reps},
+                [("x", (reps, d + 1), F32), ("mu", (d,), F32),
+                 ("sigma", (d,), F32), ("keys", (reps, 2), U32),
+                 ("k_epoch", (), I32)],
+                [("x_out", (reps, d + 1), F32), ("obj", (reps,), F32)],
+                "mean_cvar"))
 
     for d in nv_dims:
         s = nv_samples
@@ -279,9 +305,11 @@ def build_specs(mv_dims, nv_dims, lr_dims, *, mv_samples=64, mv_inner=25,
 DEFAULT_MV = [128, 512, 2048]
 DEFAULT_NV = [256, 2048, 16384]
 DEFAULT_LR = [64, 256, 1024]
+DEFAULT_CV = [128, 512, 2048]
 FULL_MV = DEFAULT_MV + [8192]
 FULL_NV = DEFAULT_NV + [65536]
 FULL_LR = DEFAULT_LR + [2048]
+FULL_CV = DEFAULT_CV + [8192]
 
 
 def main():
@@ -297,6 +325,8 @@ def main():
     ap.add_argument("--mv-dims", default="", help="override, e.g. 128,512")
     ap.add_argument("--nv-dims", default="")
     ap.add_argument("--lr-dims", default="")
+    ap.add_argument("--cv-dims", default="",
+                    help="mean-CVaR sizes (task 4, DESIGN.md §12)")
     ap.add_argument("--reps", type=int, default=0,
                     help="also emit replication-batched artifacts that "
                          "advance this many replications per dispatch "
@@ -319,7 +349,8 @@ def main():
         kw.update(lr_batch=50, lr_hbatch=300)
     specs = build_specs(dims(args.mv_dims, DEFAULT_MV, FULL_MV),
                         dims(args.nv_dims, DEFAULT_NV, FULL_NV),
-                        dims(args.lr_dims, DEFAULT_LR, FULL_LR), **kw)
+                        dims(args.lr_dims, DEFAULT_LR, FULL_LR),
+                        dims(args.cv_dims, DEFAULT_CV, FULL_CV), **kw)
     if args.entries:
         keep = set(args.entries.split(","))
         specs = [s for s in specs if s.entry in keep]

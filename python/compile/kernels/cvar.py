@@ -1,0 +1,106 @@
+"""L1 Pallas kernel for Task 4 (mean-CVaR portfolio): fused per-sample
+smoothed-CVaR statistics over the RAW return panel in a single pass.
+
+One pass over the (n, d) return panel R produces, for the joint iterate
+x = [w, t] (Rockafellar-Uryasev 2000 with width-η softplus smoothing):
+
+  gacc_j  = Σ_s σ_η(ℓ_s − t) · R_sj      (the tail-gradient matvec Rᵀσ)
+  sp_sum  = Σ_s softplus_η(ℓ_s − t)      (the smoothed tail sum)
+  sig_sum = Σ_s σ_η(ℓ_s − t)             (∂/∂t of the tail sum, negated)
+
+with per-sample losses ℓ_s = −R_s·w.  TPU mapping (see
+/opt/skills/guides/pallas_guide.md): the grid streams row tiles of R
+through VMEM; each step does the MXU matvec R_tile @ w, the VPU
+sigmoid/softplus on the (tile_n,) loss slice, and accumulates into the
+d-length gradient vector and the two scalar sums that stay resident in
+VMEM across the whole grid — the same accumulate-across-grid-steps shape
+as mv_grad's covariance matvec.
+
+The smoothing constants are mirrored by rust/src/tasks/cvar.rs — keep the
+two in sync or the native and XLA arms optimize different objectives.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Mirrored by rust/src/tasks/cvar.rs (ALPHA/ETA/LAMBDA/T_BOX).
+ALPHA = 0.9
+ETA = 0.05
+LAMBDA = 1.0
+T_BOX = 2.0
+
+
+def _cv_stats_kernel(r_ref, w_ref, t_ref, gacc_ref, sp_ref, sig_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        gacc_ref[...] = jnp.zeros_like(gacc_ref)
+        sp_ref[...] = jnp.zeros_like(sp_ref)
+        sig_ref[...] = jnp.zeros_like(sig_ref)
+
+    r = r_ref[...]                      # (tile_n, d) panel tile
+    losses = -(r @ w_ref[...])          # (tile_n,)  MXU matvec
+    z = (losses - t_ref[...]) / ETA     # (1,) t broadcasts over the tile
+    sig = jax.nn.sigmoid(z)
+    # stable softplus: η·(max(z,0) + log1p(e^{−|z|}))
+    sp = ETA * (jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    gacc_ref[...] += sig @ r            # (d,) accumulate Rᵀσ
+    sp_ref[...] += jnp.sum(sp)
+    sig_ref[...] += jnp.sum(sig)
+
+
+def pick_tile_n(n, d, budget_bytes=1 << 20):
+    """Largest power-of-two row tile that divides n and keeps the panel tile
+    within the VMEM budget (same rule as mv_grad.pick_tile_n)."""
+    tile = 1
+    while tile * 2 <= n and n % (tile * 2) == 0 \
+            and tile * 2 * d * 4 <= budget_bytes:
+        tile *= 2
+    return tile
+
+
+def cv_stats(panel, w, t, tile_n=None):
+    """Fused (Rᵀσ, Σ softplus, Σ σ) for panel (n, d), w (d,), t (1,)."""
+    n, d = panel.shape
+    tn = tile_n or pick_tile_n(n, d)
+    if n % tn != 0:
+        raise ValueError(f"tile_n={tn} must divide n={n}")
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _cv_stats_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((tn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            scalar,
+        ],
+        out_specs=(pl.BlockSpec((d,), lambda i: (0,)), scalar, scalar),
+        out_shape=(
+            jax.ShapeDtypeStruct((d,), panel.dtype),
+            jax.ShapeDtypeStruct((1,), panel.dtype),
+            jax.ShapeDtypeStruct((1,), panel.dtype),
+        ),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(panel, w, t)
+
+
+def cv_grad(panel, rbar, x):
+    """∇f(w, t) over the joint iterate (length d+1; last entry ∂f/∂t)."""
+    n, d = panel.shape
+    w, t = x[:d], x[d]
+    gacc, _, sig_sum = cv_stats(panel, w, jnp.reshape(t, (1,)))
+    c = 1.0 / ((1.0 - ALPHA) * n)
+    g_w = -rbar - LAMBDA * c * gacc
+    g_t = LAMBDA * (1.0 - c * sig_sum[0])
+    return jnp.concatenate([g_w, jnp.reshape(g_t, (1,))])
+
+
+def cv_obj(panel, rbar, x):
+    """f(w, t) = −wᵀR̄ + λ·[t + c·Σ_s softplus_η(ℓ_s − t)]."""
+    n, d = panel.shape
+    w, t = x[:d], x[d]
+    _, sp_sum, _ = cv_stats(panel, w, jnp.reshape(t, (1,)))
+    c = 1.0 / ((1.0 - ALPHA) * n)
+    return -jnp.dot(w, rbar) + LAMBDA * (t + c * sp_sum[0])

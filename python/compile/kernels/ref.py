@@ -62,6 +62,38 @@ def mv_epoch_ref(w, mu, sigma, key, k_epoch, n_samples, m_inner):
 
 
 # ---------------------------------------------------------------------------
+# Task 4 — smoothed mean-CVaR portfolio (registry extension, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def cv_stats_ref(panel, w, t, eta):
+    """Direct-form (Rᵀσ, Σ softplus_η, Σ σ_η) over losses ℓ = −R·w."""
+    losses = -(panel @ w)
+    z = (losses - t) / eta
+    sig = jax.nn.sigmoid(z)
+    sp = eta * (jnp.maximum(z, 0.0) + jnp.log1p(jnp.exp(-jnp.abs(z))))
+    return sig @ panel, jnp.sum(sp), jnp.sum(sig)
+
+
+def cv_grad_ref(panel, rbar, x, alpha, eta, lam):
+    """∇f of the Rockafellar-Uryasev smoothed mean-CVaR objective over the
+    joint iterate x = [w, t]."""
+    n, d = panel.shape
+    gacc, _, sig_sum = cv_stats_ref(panel, x[:d], x[d], eta)
+    c = 1.0 / ((1.0 - alpha) * n)
+    g_w = -rbar - lam * c * gacc
+    g_t = lam * (1.0 - c * sig_sum)
+    return jnp.concatenate([g_w, jnp.reshape(g_t, (1,))])
+
+
+def cv_obj_ref(panel, rbar, x, alpha, eta, lam):
+    """f(w, t) = −wᵀR̄ + λ·[t + c·Σ softplus_η(ℓ − t)]."""
+    n, d = panel.shape
+    _, sp_sum, _ = cv_stats_ref(panel, x[:d], x[d], eta)
+    c = 1.0 / ((1.0 - alpha) * n)
+    return -jnp.dot(x[:d], rbar) + lam * (x[d] + c * sp_sum)
+
+
+# ---------------------------------------------------------------------------
 # Task 2 — multi-product newsvendor (paper §3.2)
 # ---------------------------------------------------------------------------
 

@@ -13,6 +13,7 @@ Entry points (all f32; key is uint32[2]; counters are int32 scalars):
   lr_hbuild      (s_mem, y_mem, m_count)      -> H              Alg. 4
   lr_happly      (h, g)                       -> H·g
   lr_dir_twoloop (s_mem, y_mem, m_count, g)   -> H·g            (ablation A2)
+  cv_epoch       (x, mu, sigma, key, k_epoch) -> (x', f̂)       Task-4 epoch
 
 All are shape-monomorphic: python/compile/aot.py lowers one artifact per
 (entry × size) listed in its spec table.
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from .kernels import bfgs as bfgs_k
+from .kernels import cvar as cv_k
 from .kernels import logreg as logreg_k
 from .kernels import mv_grad as mv_k
 from .kernels import nv_grad as nv_k
@@ -75,6 +77,43 @@ def mv_grad_step(c, rbar, w, k_epoch, m, *, m_inner):
     every step, like a naive per-op GPU offload)."""
     w = _fw_simplex_step(c, rbar, w, k_epoch, m, m_inner)
     return w, mv_k.mv_obj(c, rbar, w)
+
+
+# ---------------------------------------------------------------------------
+# Task 4 — mean-CVaR portfolio epoch (registry extension, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def cv_product_lmo(g, d):
+    """LMO over the product set Δ_capped × [−T_BOX, T_BOX]: the w block
+    reuses the Task-1 analytic simplex LMO, the t coordinate picks the
+    interval endpoint minimizing g_t·t (mirrors tasks::cvar::product_lmo)."""
+    s_w = simplex_lmo(g[:d])
+    s_t = jnp.where(g[d] < 0,
+                    jnp.asarray(cv_k.T_BOX, g.dtype),
+                    jnp.asarray(-cv_k.T_BOX, g.dtype))
+    return jnp.concatenate([s_w, jnp.reshape(s_t, (1,))])
+
+
+def cv_epoch(x, mu, sigma, key, k_epoch, *, n_samples, m_inner):
+    """One fused epoch of smoothed mean-CVaR Frank-Wolfe on the joint
+    iterate x = [w, t] (length d+1): resample the RAW return panel once
+    (no centering — the tail term works on the losses themselves), run
+    m_inner FW steps over the product set, report the final empirical
+    objective.  Same fused-epoch dispatch discipline as mv_epoch."""
+    d = mu.shape[0]
+    r = mu[None, :] + sigma[None, :] * jax.random.normal(
+        key, (n_samples, d), dtype=x.dtype)
+    rbar = jnp.mean(r, axis=0)
+
+    def body(m, x):
+        g = cv_k.cv_grad(r, rbar, x)
+        s = cv_product_lmo(g, d)
+        gamma = 2.0 / (k_epoch.astype(x.dtype) * m_inner
+                       + m.astype(x.dtype) + 2.0)
+        return x + gamma * (s - x)
+
+    x = lax.fori_loop(0, m_inner, body, x)
+    return x, cv_k.cv_obj(r, rbar, x)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +276,16 @@ def mv_epoch_batch(w, mu, sigma, keys, k_epoch, *, n_samples, m_inner):
         lambda wr, kr: mv_epoch(wr, mu, sigma, kr, k_epoch,
                                 n_samples=n_samples, m_inner=m_inner)
     )(w, keys)
+
+
+def cv_epoch_batch(x, mu, sigma, keys, k_epoch, *, n_samples, m_inner):
+    """Batched Task-4 epoch: x is (R, d+1) joint iterates, keys is (R, 2)
+    uint32 — one dispatch advances every replication, same vmap lowering
+    discipline as mv_epoch_batch."""
+    return jax.vmap(
+        lambda xr, kr: cv_epoch(xr, mu, sigma, kr, k_epoch,
+                                n_samples=n_samples, m_inner=m_inner)
+    )(x, keys)
 
 
 def nv_grad_batch(x, mu, sigma, kc, h, v, keys, *, n_samples):

@@ -15,7 +15,7 @@ from .conftest import assert_close
 
 
 def _specs_small():
-    return aot.build_specs([32], [64], [16], mv_samples=8, mv_inner=3,
+    return aot.build_specs([32], [64], [16], [32], mv_samples=8, mv_inner=3,
                            nv_samples=8, lr_batch=8, lr_hbatch=16, lr_mem=4)
 
 
@@ -24,11 +24,32 @@ def test_build_specs_covers_all_entries():
     assert entries == {"mv_epoch", "mv_grad_step",
                        "nv_grad", "nv_panel", "nv_grad_panel",
                        "lr_grad", "lr_hvp", "lr_grad_ds", "lr_hvp_ds",
-                       "lr_hbuild", "lr_happly", "lr_dir_twoloop"}
+                       "lr_hbuild", "lr_happly", "lr_dir_twoloop",
+                       "cv_epoch"}
+
+
+def test_reps_adds_batched_entries():
+    specs = aot.build_specs([32], [64], [16], [32], mv_samples=8,
+                            mv_inner=3, nv_samples=8, lr_batch=8,
+                            lr_hbatch=16, lr_mem=4, reps=3)
+    entries = {s.entry for s in specs}
+    for batched in ("mv_epoch_batch", "cv_epoch_batch", "nv_panel_batch",
+                    "nv_grad_panel_batch", "lr_grad_batch", "lr_hvp_batch",
+                    "lr_dir_batch", "lr_dir_twoloop_batch"):
+        assert batched in entries, batched
+
+
+def test_cv_epoch_spec_has_joint_iterate():
+    spec = next(s for s in _specs_small() if s.entry == "cv_epoch")
+    # iterate and output are [w, t] of length d+1
+    assert spec.inputs[0][1] == (33,)
+    assert spec.outputs[0][1] == (33,)
+    assert spec.task == "mean_cvar"
 
 
 def test_spec_names_are_unique():
-    specs = aot.build_specs(aot.DEFAULT_MV, aot.DEFAULT_NV, aot.DEFAULT_LR)
+    specs = aot.build_specs(aot.DEFAULT_MV, aot.DEFAULT_NV, aot.DEFAULT_LR,
+                            aot.DEFAULT_CV)
     names = [s.name for s in specs]
     assert len(names) == len(set(names))
 
@@ -44,7 +65,8 @@ def test_manifest_entry_schema():
 
 
 @pytest.mark.parametrize("entry", ["mv_epoch", "nv_grad", "lr_grad",
-                                   "lr_hbuild", "lr_dir_twoloop"])
+                                   "lr_hbuild", "lr_dir_twoloop",
+                                   "cv_epoch"])
 def test_lowering_produces_hlo_text(entry):
     spec = next(s for s in _specs_small() if s.entry == entry)
     text = aot.to_hlo_text(spec.lower())
@@ -92,3 +114,5 @@ def test_default_dims_are_tile_friendly():
         assert d % 16 == 0
     for n in aot.DEFAULT_LR + aot.FULL_LR:
         assert n % 8 == 0
+    for d in aot.DEFAULT_CV + aot.FULL_CV:
+        assert d % 8 == 0

@@ -1,0 +1,162 @@
+"""Task 4 kernels/model vs the pure-jnp oracle (smoothed mean-CVaR,
+registry extension — DESIGN.md §12)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels import cvar as cvk
+from compile.kernels import ref
+
+from .conftest import assert_close, rngkey
+
+
+def _panel(seed, n, d):
+    r = jax.random.normal(rngkey(seed), (n, d)) * 0.5
+    return r, r.mean(axis=0)
+
+
+def _iterate(seed, d, t=0.1):
+    w = jax.nn.softmax(jax.random.normal(rngkey(seed), (d,)))
+    return jnp.concatenate([w, jnp.array([t], w.dtype)])
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from([8, 16, 64]),
+       st.sampled_from([4, 32, 96]))
+def test_cv_stats_matches_ref(seed, n, d):
+    panel, _ = _panel(seed, n, d)
+    w = jax.nn.softmax(jax.random.normal(rngkey(seed + 1), (d,)))
+    t = jnp.array([0.2], jnp.float32)
+    gacc, sp, sig = cvk.cv_stats(panel, w, t)
+    gacc_r, sp_r, sig_r = ref.cv_stats_ref(panel, w, t[0], cvk.ETA)
+    assert_close(gacc, gacc_r, rtol=1e-4, atol=1e-4)
+    assert_close(sp[0], sp_r, rtol=1e-4, atol=1e-4)
+    assert_close(sig[0], sig_r, rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4, 8]))
+def test_cv_stats_tile_invariance(seed, tile):
+    """The grid decomposition must not change the result."""
+    panel, _ = _panel(seed, 16, 24)
+    w = jax.nn.softmax(jax.random.normal(rngkey(seed + 1), (24,)))
+    t = jnp.array([0.0], jnp.float32)
+    gacc, sp, sig = cvk.cv_stats(panel, w, t, tile_n=tile)
+    gacc_r, sp_r, sig_r = ref.cv_stats_ref(panel, w, t[0], cvk.ETA)
+    assert_close(gacc, gacc_r, rtol=1e-4, atol=1e-4)
+    assert_close(sp[0], sp_r, rtol=1e-4, atol=1e-4)
+
+
+def test_cv_stats_rejects_non_dividing_tile():
+    panel, _ = _panel(0, 10, 8)
+    with pytest.raises(ValueError):
+        cvk.cv_stats(panel, jnp.ones(8) / 8, jnp.zeros(1), tile_n=4)
+
+
+@given(st.integers(0, 10_000))
+def test_cv_grad_and_obj_match_ref(seed):
+    panel, rbar = _panel(seed, 16, 12)
+    x = _iterate(seed + 1, 12)
+    assert_close(cvk.cv_grad(panel, rbar, x),
+                 ref.cv_grad_ref(panel, rbar, x, cvk.ALPHA, cvk.ETA,
+                                 cvk.LAMBDA),
+                 rtol=1e-4, atol=1e-5)
+    assert_close(cvk.cv_obj(panel, rbar, x),
+                 ref.cv_obj_ref(panel, rbar, x, cvk.ALPHA, cvk.ETA,
+                                cvk.LAMBDA),
+                 rtol=1e-4, atol=1e-5)
+
+
+def test_cv_grad_matches_autodiff():
+    """The hand-derived gradient must agree with jax.grad of the objective
+    oracle — the strongest correctness anchor available in-process."""
+    panel, rbar = _panel(3, 32, 8)
+    x = _iterate(4, 8, t=0.05)
+    want = jax.grad(
+        lambda xx: ref.cv_obj_ref(panel, rbar, xx, cvk.ALPHA, cvk.ETA,
+                                  cvk.LAMBDA))(x)
+    assert_close(cvk.cv_grad(panel, rbar, x), want, rtol=1e-3, atol=1e-4)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([4, 16]))
+def test_product_lmo_is_optimal_vertex(seed, d):
+    """The LMO must attain min over Δ_capped × [−T_BOX, T_BOX], which
+    separates: min(0, min_j g_j) − T_BOX·|g_t|."""
+    g = jax.random.normal(rngkey(seed), (d + 1,))
+    s = model.cv_product_lmo(g, d)
+    s_np = np.asarray(s)
+    assert (s_np[:d] >= 0).all() and s_np[:d].sum() <= 1 + 1e-6
+    assert abs(s_np[d]) <= cvk.T_BOX + 1e-6
+    value = float(jnp.dot(s, g))
+    expected = min(0.0, float(g[:d].min())) - cvk.T_BOX * abs(float(g[d]))
+    assert abs(value - expected) < 1e-5
+
+
+@given(st.integers(0, 5_000))
+def test_cv_epoch_keeps_iterate_feasible(seed):
+    d = 12
+    x = jnp.concatenate([jnp.ones(d) / d, jnp.zeros(1)])
+    mu = jax.random.uniform(rngkey(seed), (d,), minval=-1, maxval=1)
+    sigma = jnp.full((d,), 0.02)
+    key = jnp.array([1, seed], dtype=jnp.uint32)
+    x1, obj = model.cv_epoch(x, mu, sigma, key, jnp.int32(0), n_samples=8,
+                             m_inner=6)
+    x1 = np.asarray(x1)
+    assert (x1[:d] >= -1e-6).all()
+    assert x1[:d].sum() <= 1 + 1e-5
+    assert abs(x1[d]) <= cvk.T_BOX + 1e-5
+    assert np.isfinite(float(obj))
+
+
+def test_cv_epoch_is_deterministic_in_key():
+    d = 8
+    x = jnp.concatenate([jnp.ones(d) / d, jnp.zeros(1)])
+    mu = jnp.zeros(d)
+    sigma = jnp.full((d,), 0.02)
+    key = jnp.array([3, 4], dtype=jnp.uint32)
+    a = model.cv_epoch(x, mu, sigma, key, jnp.int32(1), n_samples=8,
+                       m_inner=3)
+    b = model.cv_epoch(x, mu, sigma, key, jnp.int32(1), n_samples=8,
+                       m_inner=3)
+    assert_close(a[0], b[0], rtol=0, atol=0)
+    assert_close(a[1], b[1], rtol=0, atol=0)
+
+
+def test_cv_fw_converges_on_fixed_panel():
+    """Repeated epochs on the same key (frozen panel) must descend."""
+    d, n = 8, 256
+    mu = jax.random.uniform(rngkey(5), (d,), minval=-0.5, maxval=1.0)
+    sigma = jnp.full((d,), 0.02)
+    key = jnp.array([0, 321], dtype=jnp.uint32)
+    x = jnp.concatenate([jnp.ones(d) / d, jnp.zeros(1)])
+    r = mu[None, :] + sigma[None, :] * jax.random.normal(key, (n, d))
+    rbar = r.mean(axis=0)
+    obj0 = float(ref.cv_obj_ref(r, rbar, x, cvk.ALPHA, cvk.ETA, cvk.LAMBDA))
+    objs = []
+    for k in range(6):
+        x, obj = model.cv_epoch(x, mu, sigma, key, jnp.int32(k),
+                                n_samples=n, m_inner=10)
+        objs.append(float(obj))
+    assert objs[-1] < obj0
+
+
+def test_constants_mirror_rust():
+    """The smoothing constants are duplicated in rust/src/tasks/cvar.rs —
+    parse them out of the Rust source so drift fails HERE."""
+    import pathlib
+    import re
+    src = (pathlib.Path(__file__).resolve().parents[2]
+           / "rust" / "src" / "tasks" / "cvar.rs").read_text()
+
+    def rust_const(name):
+        m = re.search(rf"pub const {name}: f32 = ([0-9.]+);", src)
+        assert m, f"const {name} not found in rust/src/tasks/cvar.rs"
+        return float(m.group(1))
+
+    assert rust_const("ALPHA") == cvk.ALPHA
+    assert rust_const("ETA") == cvk.ETA
+    assert rust_const("LAMBDA") == cvk.LAMBDA
+    assert rust_const("T_BOX") == cvk.T_BOX

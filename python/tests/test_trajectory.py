@@ -1,0 +1,113 @@
+"""Trajectory tool: telemetry ingestion, trend series, regression gate."""
+
+import json
+
+from tools import trajectory as tj
+
+
+def _write(tmp_path, name, bench, commit, ci_run, cases, smoke=True):
+    rec = {
+        "bench": bench,
+        "commit": commit,
+        "ci_run": str(ci_run),
+        "smoke": smoke,
+        "cases": [{"label": l, "reps": 1, "mean_s": m, "std_s": 0.0,
+                   "min_s": m, "median_s": m} for l, m in cases.items()],
+    }
+    p = tmp_path / name
+    p.write_text(json.dumps(rec))
+    return p
+
+
+def test_runs_ordered_by_ci_run_and_series_built(tmp_path):
+    _write(tmp_path, "BENCH_b2.json", "bs", "bbb", 2, {"case": 2.0})
+    _write(tmp_path, "BENCH_b1.json", "bs", "aaa", 1, {"case": 1.0})
+    runs = tj.load_runs(tj.find_files([tmp_path]))
+    assert [r["commit"] for r in runs] == ["aaa", "bbb"]
+    series = tj.series_by_case(runs)
+    assert series[("bs", "case", True)] == [("aaa", 1.0), ("bbb", 2.0)]
+
+
+def test_smoke_and_real_runs_are_separate_series(tmp_path):
+    _write(tmp_path, "BENCH_s.json", "bs", "aaa", 1, {"case": 1.0},
+           smoke=True)
+    _write(tmp_path, "BENCH_r.json", "bs", "aaa", 2, {"case": 50.0},
+           smoke=False)
+    series = tj.series_by_case(tj.load_runs(tj.find_files([tmp_path])))
+    assert ("bs", "case", True) in series
+    assert ("bs", "case", False) in series
+
+
+def test_regression_fires_above_two_sigma(tmp_path):
+    series = {("bs", "case", True): [("a", 1.0), ("b", 1.02), ("c", 0.98),
+                                     ("d", 2.0)]}
+    regs = tj.detect_regressions(series, sigma=2.0)
+    assert len(regs) == 1
+    assert regs[0]["label"] == "case"
+    assert regs[0]["commit"] == "d"
+
+
+def test_no_regression_within_band_or_short_history():
+    flat = {("bs", "case", True): [("a", 1.0), ("b", 1.01), ("c", 1.0)]}
+    assert tj.detect_regressions(flat) == []
+    short = {("bs", "case", True): [("a", 1.0), ("b", 99.0)]}
+    assert tj.detect_regressions(short) == []
+
+
+def test_zero_variance_history_needs_relative_margin():
+    # identical history ⇒ σ = 0; the +5% relative guard must still hold
+    tiny = {("bs", "case", True): [("a", 1.0), ("b", 1.0), ("c", 1.0),
+                                   ("d", 1.01)]}
+    assert tj.detect_regressions(tiny) == []
+    real = {("bs", "case", True): [("a", 1.0), ("b", 1.0), ("c", 1.0),
+                                   ("d", 1.2)]}
+    assert len(tj.detect_regressions(real)) == 1
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    assert tj.main([str(tmp_path / "empty")]) == 2
+    _write(tmp_path, "BENCH_1.json", "bs", "a", 1, {"case": 1.0})
+    _write(tmp_path, "BENCH_2.json", "bs", "b", 2, {"case": 1.0})
+    _write(tmp_path, "BENCH_3.json", "bs", "c", 3, {"case": 5.0})
+    assert tj.main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "regression" in out
+    assert tj.main([str(tmp_path), "--sigma", "1e9",
+                    "--rel-margin", "1e9"]) == 0
+
+
+def test_null_mean_s_case_skipped_not_fatal(tmp_path):
+    # Bench::to_json emits null for non-finite stats; one bad case must
+    # not take the whole gate down
+    rec = {"bench": "bs", "commit": "x", "ci_run": "1", "smoke": True,
+           "cases": [{"label": "bad", "mean_s": None},
+                     {"label": "ok", "mean_s": 1.0}]}
+    p = tmp_path / "BENCH_bad.json"
+    p.write_text(json.dumps(rec))
+    runs = tj.load_runs([p])
+    assert runs[0]["cases"] == {"ok": 1.0}
+
+
+def test_mixed_local_and_ci_records_order_by_mtime(tmp_path):
+    import os
+    import time
+    now = time.time()
+    a = _write(tmp_path, "BENCH_ci.json", "bs", "old", 16_000_000_001,
+               {"case": 1.0})
+    os.utime(a, (now - 1000, now - 1000))
+    rec = {"bench": "bs", "commit": "new", "smoke": True,
+           "cases": [{"label": "case", "mean_s": 2.0}]}
+    b = tmp_path / "BENCH_local.json"
+    b.write_text(json.dumps(rec))
+    os.utime(b, (now, now))
+    runs = tj.load_runs(tj.find_files([tmp_path]))
+    # a local record (no ci_run) must not sort before a newer-by-wallclock
+    # CI record just because run ids dwarf mtimes
+    assert [r["commit"] for r in runs] == ["old", "new"]
+
+
+def test_rerun_of_same_commit_supersedes(tmp_path):
+    _write(tmp_path, "BENCH_1.json", "bs", "aaa", 1, {"case": 9.0})
+    _write(tmp_path, "BENCH_2.json", "bs", "aaa", 2, {"case": 1.0})
+    series = tj.series_by_case(tj.load_runs(tj.find_files([tmp_path])))
+    assert series[("bs", "case", True)] == [("aaa", 1.0)]

@@ -1,0 +1,1 @@
+"""Offline bench-telemetry tooling (no third-party dependencies)."""

@@ -1,0 +1,208 @@
+"""Bench-telemetry trajectory tool (ROADMAP item): ingest the per-commit
+``BENCH_*.json`` artifacts the CI bench-smoke matrix uploads (see
+``Bench::to_json`` in rust/src/bench/mod.rs for the schema), print a
+mean_s-per-case trend table across commits, and exit nonzero on a
+regression.
+
+A case regresses when its newest mean_s exceeds the mean of its history
+by more than ``--sigma``× the history's standard deviation AND by a
+``--rel-margin`` relative factor (so zero-variance micro-cases cannot
+false-positive on scheduler noise).  Smoke runs (``"smoke": true``) and
+real timing runs are tracked as separate series — CI smoke workloads are
+bit-rot probes, not timings, and must never gate against real numbers.
+
+Runs are ordered by ``ci_run`` id when present (GitHub run ids are
+monotonic), else by file modification time, so both a directory of
+per-run downloads and a local accumulation directory work.
+
+Usage:
+  python python/tools/trajectory.py DIR [DIR...]        # dirs are rglobbed
+  python python/tools/trajectory.py DIR --sigma 2 --min-history 3
+
+Exit codes: 0 = no regression (or not enough history), 1 = regression,
+2 = no telemetry found.  The CI job wiring this is advisory
+(continue-on-error) until enough cross-run history accumulates.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def find_files(roots):
+    """Every BENCH_*.json under the given roots (dirs rglobbed, files
+    taken as-is), deduplicated, in deterministic order."""
+    out = []
+    for root in roots:
+        p = Path(root)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("BENCH_*.json")))
+        elif p.is_file():
+            out.append(p)
+    seen, uniq = set(), []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    return uniq
+
+
+def load_runs(files):
+    """Parse telemetry records; skip unreadable files (and cases with
+    non-numeric mean_s — `Bench::to_json` emits `null` for non-finite
+    stats) with a warning.  Returns a list of dicts with keys: bench,
+    commit, smoke, cases ({label: mean_s}), ordered oldest-first.
+
+    Ordering: GitHub run ids (monotonic) when EVERY record carries one;
+    otherwise file mtime for all records.  The two axes are never mixed —
+    run ids (~1e10) would dwarf epoch mtimes (~1e9) and pin local records
+    to the front regardless of recency."""
+    runs = []
+    for f in files:
+        try:
+            rec = json.loads(Path(f).read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[trajectory] skipping {f}: {e}", file=sys.stderr)
+            continue
+        cases = {}
+        for c in rec.get("cases", []):
+            label, mean_s = c.get("label"), c.get("mean_s")
+            if not isinstance(label, str) \
+                    or not isinstance(mean_s, (int, float)):
+                print(f"[trajectory] {f}: skipping case with non-numeric "
+                      f"mean_s: {c.get('label', '<unlabelled>')}",
+                      file=sys.stderr)
+                continue
+            cases[label] = float(mean_s)
+        if not cases:
+            continue
+        try:
+            ci_order = int(rec.get("ci_run", ""))
+        except (TypeError, ValueError):
+            ci_order = None
+        runs.append({
+            "bench": rec.get("bench", Path(f).stem),
+            "commit": str(rec.get("commit", ""))[:12] or "<local>",
+            "smoke": bool(rec.get("smoke", False)),
+            "ci_order": ci_order,
+            "mtime": int(Path(f).stat().st_mtime),
+            "cases": cases,
+        })
+    if runs and all(r["ci_order"] is not None for r in runs):
+        runs.sort(key=lambda r: r["ci_order"])
+    else:
+        if any(r["ci_order"] is not None for r in runs):
+            print("[trajectory] mixed local/CI telemetry — ordering every "
+                  "record by file mtime", file=sys.stderr)
+        runs.sort(key=lambda r: r["mtime"])
+    return runs
+
+
+def series_by_case(runs):
+    """{(bench, label, smoke): [(commit, mean_s), ...]} in run order.
+    Consecutive duplicates of the same commit keep the LAST record (a
+    re-run supersedes)."""
+    series = {}
+    for run in runs:
+        for label, mean_s in run["cases"].items():
+            key = (run["bench"], label, run["smoke"])
+            hist = series.setdefault(key, [])
+            if hist and hist[-1][0] == run["commit"]:
+                hist[-1] = (run["commit"], mean_s)
+            else:
+                hist.append((run["commit"], mean_s))
+    return series
+
+
+def detect_regressions(series, sigma=2.0, rel_margin=1.05, min_history=3):
+    """Cases whose newest mean_s sits more than `sigma`σ above its history
+    mean (and beyond the relative margin).  Needs `min_history` total
+    points so one noisy pair can't fail a build."""
+    out = []
+    for key, hist in sorted(series.items()):
+        if len(hist) < min_history:
+            continue
+        prev = [m for _, m in hist[:-1]]
+        last_commit, last = hist[-1]
+        mu = sum(prev) / len(prev)
+        var = sum((m - mu) ** 2 for m in prev) / len(prev)
+        sd = math.sqrt(var)
+        if last > mu + sigma * sd and last > mu * rel_margin:
+            out.append({
+                "bench": key[0],
+                "label": key[1],
+                "smoke": key[2],
+                "commit": last_commit,
+                "last": last,
+                "baseline_mean": mu,
+                "baseline_std": sd,
+            })
+    return out
+
+
+def fmt_s(v):
+    if v < 1e-3:
+        return f"{v * 1e6:.1f}µs"
+    if v < 1.0:
+        return f"{v * 1e3:.2f}ms"
+    return f"{v:.3f}s"
+
+
+def render_table(series):
+    """Per-case trend rows: first → last mean_s with the commit count."""
+    lines = ["| bench | case | runs | first | last | Δ |",
+             "|---|---|---|---|---|---|"]
+    for (bench, label, smoke), hist in sorted(series.items()):
+        first, last = hist[0][1], hist[-1][1]
+        delta = "–" if first == 0 else f"{(last / first - 1) * 100:+.1f}%"
+        tag = " [smoke]" if smoke else ""
+        lines.append(f"| {bench} | {label}{tag} | {len(hist)} | "
+                     f"{fmt_s(first)} | {fmt_s(last)} | {delta} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("roots", nargs="+",
+                    help="directories (rglobbed) or BENCH_*.json files")
+    ap.add_argument("--sigma", type=float, default=2.0,
+                    help="regression threshold in history σ (default 2)")
+    ap.add_argument("--rel-margin", type=float, default=1.05,
+                    help="additional relative guard (default 1.05 = +5%%)")
+    ap.add_argument("--min-history", type=int, default=3,
+                    help="points needed before a case can regress")
+    args = ap.parse_args(argv)
+
+    files = find_files(args.roots)
+    if not files:
+        print("[trajectory] no BENCH_*.json telemetry found under "
+              + ", ".join(args.roots))
+        return 2
+    runs = load_runs(files)
+    series = series_by_case(runs)
+    print(f"[trajectory] {len(files)} telemetry files, {len(runs)} runs, "
+          f"{len(series)} case series\n")
+    print(render_table(series))
+
+    regressions = detect_regressions(series, sigma=args.sigma,
+                                     rel_margin=args.rel_margin,
+                                     min_history=args.min_history)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) > {args.sigma}σ:")
+        for r in regressions:
+            tag = " [smoke]" if r["smoke"] else ""
+            print(f"  {r['bench']} / {r['label']}{tag} @ {r['commit']}: "
+                  f"{fmt_s(r['last'])} vs baseline "
+                  f"{fmt_s(r['baseline_mean'])} ±{fmt_s(r['baseline_std'])}")
+        return 1
+    print("\nno regressions beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

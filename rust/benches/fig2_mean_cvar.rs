@@ -1,0 +1,14 @@
+//! Figure-2-shaped panel for the registry's fourth scenario: mean-CVaR
+//! portfolio computation time vs problem size, native (sequential CPU) vs
+//! xla (vectorized), mean ± 2σ.
+//!
+//! The task registered through the task-registry plane (DESIGN.md §12), so
+//! this bench is the same three lines as every other fig2 panel — the
+//! sweep, reporting, and telemetry come from the shared scaffolding.
+//! Knobs: SIMOPT_BENCH_EPOCHS / SIMOPT_BENCH_SIZES / SIMOPT_BENCH_REPS.
+
+mod common;
+
+fn main() {
+    common::run_figure2(simopt::config::TaskKind::MeanCvar, 10);
+}

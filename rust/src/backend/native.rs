@@ -13,6 +13,7 @@ use anyhow::Result;
 use crate::linalg::matrix::Mat;
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use crate::tasks::classification as lr;
+use crate::tasks::cvar as cv;
 use crate::tasks::mean_variance as mv;
 use crate::tasks::newsvendor as nv;
 use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
@@ -151,6 +152,136 @@ impl MvBackend for NativeMv {
         }
         let obj = mv::objective(&self.panel, &rbar, &w, &mut self.scratch);
         Ok((w, obj))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 4 — mean-CVaR portfolio (registry extension, DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// Smoothed mean-CVaR Frank-Wolfe epochs over a sampled return panel.  The
+/// iterate is the joint `[w, t]` vector (length d+1, see `tasks::cvar`),
+/// which lets the task implement the Task-1 epoch contract ([`MvBackend`])
+/// and ride the same drivers and batch arms.
+pub struct NativeCvar {
+    universe: AssetUniverse,
+    n_samples: usize,
+    m_inner: usize,
+    mode: NativeMode,
+    // scratch (reused across epochs)
+    panel: Mat,
+    rbar: Vec<f32>,
+    scratch: cv::CvScratch,
+}
+
+impl NativeCvar {
+    pub fn new(universe: AssetUniverse, n_samples: usize, m_inner: usize,
+               mode: NativeMode) -> Self {
+        let d = universe.dim();
+        NativeCvar {
+            universe,
+            n_samples,
+            m_inner,
+            mode,
+            panel: Mat::zeros(n_samples, d),
+            rbar: vec![0.0; d],
+            scratch: cv::CvScratch::new(n_samples, d),
+        }
+    }
+
+    /// Resample the raw return panel (NOT centered — the CVaR tail term
+    /// works on the losses themselves) and cache its column means.
+    fn resample(&mut self, key: [u32; 2]) {
+        let seed = (key[0] as u64) << 32 | key[1] as u64;
+        let mut sampler = crate::rng::NormalSampler::from_seed(seed);
+        self.universe.sample_panel(&mut sampler, self.n_samples,
+                                   &mut self.panel.data);
+        self.rbar = self.panel.col_means();
+    }
+
+    /// ∇f(w, t) into `scratch.g`.
+    fn grad_dispatch(&mut self, x: &[f32]) {
+        match self.mode {
+            NativeMode::Sequential => {
+                cv::grad(&self.panel, &self.rbar, x, &mut self.scratch);
+            }
+            NativeMode::Parallel { threads } => {
+                // split the sample axis for the loss matvec, then the
+                // product axis for the Rᵀσ reduction (mirrors NativeMv's
+                // A3 decomposition)
+                let d = self.universe.dim();
+                let n = self.n_samples;
+                let panel = &self.panel;
+                let w = &x[..d];
+                let t = x[d];
+                let losses: Vec<f32> = parallel_map_chunks(n, threads, |r| {
+                    let mut part = Vec::with_capacity(r.len());
+                    for i in r {
+                        part.push(-crate::linalg::blocked::dot4(
+                            panel.row(i), w));
+                    }
+                    part
+                })
+                .into_iter()
+                .flatten()
+                .collect();
+                let mut sig_sum = 0.0f32;
+                for (s, &l) in losses.iter().enumerate() {
+                    let sg = cv::sigmoid_eta(l - t);
+                    self.scratch.sig[s] = sg;
+                    sig_sum += sg;
+                }
+                let sig = &self.scratch.sig;
+                let g_parts = parallel_map_chunks(d, threads, |cols| {
+                    let mut part = vec![0.0f32; cols.len()];
+                    for i in 0..n {
+                        let si = sig[i];
+                        let row = panel.row(i);
+                        for (o, j) in cols.clone().enumerate() {
+                            part[o] += si * row[j];
+                        }
+                    }
+                    (cols.start, part)
+                });
+                let c = cv::tail_scale(n);
+                for (start, part) in g_parts {
+                    for (o, v) in part.into_iter().enumerate() {
+                        let j = start + o;
+                        self.scratch.g[j] =
+                            -self.rbar[j] - cv::LAMBDA * c * v;
+                    }
+                }
+                self.scratch.g[d] = cv::LAMBDA * (1.0 - c * sig_sum);
+                self.scratch.losses.copy_from_slice(&losses);
+            }
+        }
+    }
+}
+
+impl MvBackend for NativeCvar {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            NativeMode::Sequential => "native",
+            NativeMode::Parallel { .. } => "native_par",
+        }
+    }
+
+    fn epoch(&mut self, x: &[f32], k_epoch: usize, key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        anyhow::ensure!(x.len() == self.universe.dim() + 1,
+                        "iterate must be [w, t] of length d+1");
+        self.resample(key);
+        let mut x = x.to_vec();
+        let m_inner = self.m_inner;
+        for m in 0..m_inner {
+            self.grad_dispatch(&x);
+            let (vertex, t_vertex) = cv::product_lmo(&self.scratch.g);
+            let gamma = crate::opt::schedule::fw_gamma(k_epoch, m, m_inner);
+            cv::fw_product_update(&mut x, vertex, t_vertex, gamma);
+        }
+        let obj = cv::objective(&self.panel, &self.rbar, &x,
+                                &mut self.scratch);
+        Ok((x, obj))
     }
 }
 
@@ -385,28 +516,71 @@ fn merge_rows(parts: Vec<(usize, Result<Vec<(Vec<f32>, f64)>>)>,
     Ok(scalars)
 }
 
-/// Task 1 batched: all R replications advance one fused epoch per call.
-pub struct NativeMvBatch {
-    reps: Vec<Mutex<NativeMv>>,
+/// Generic epoch-task batch arm (Tasks 1 and 4): one sequential-mode
+/// per-replication backend per row — ANY [`MvBackend`] — with contiguous
+/// row chunks spread over the thread pool.  Registering a new
+/// epoch-structured scenario costs one `from_rows` constructor, not a new
+/// batch backend (DESIGN.md §12).
+pub struct NativeEpochBatch<B> {
+    reps: Vec<Mutex<B>>,
+    /// Per-row iterate length (d for Task 1, d+1 for Task 4's `[w, t]`).
     d: usize,
     threads: usize,
 }
 
-impl NativeMvBatch {
-    pub fn new(universe: &AssetUniverse, n_samples: usize, m_inner: usize,
-               r_reps: usize, threads: usize) -> Self {
-        let d = universe.dim();
-        let reps = (0..r_reps)
-            .map(|_| {
-                Mutex::new(NativeMv::new(universe.clone(), n_samples,
-                                         m_inner, NativeMode::Sequential))
-            })
-            .collect();
-        NativeMvBatch { reps, d, threads }
+impl<B: MvBackend + Send> NativeEpochBatch<B> {
+    /// Build from one per-replication row backend per replication;
+    /// `row_dim` is the iterate length of one row.
+    pub fn from_rows(rows: Vec<B>, row_dim: usize, threads: usize) -> Self {
+        NativeEpochBatch {
+            reps: rows.into_iter().map(Mutex::new).collect(),
+            d: row_dim,
+            threads,
+        }
     }
 }
 
-impl MvBatchBackend for NativeMvBatch {
+/// Task 1 batched: all R replications advance one fused epoch per call.
+pub type NativeMvBatch = NativeEpochBatch<NativeMv>;
+
+impl NativeEpochBatch<NativeMv> {
+    pub fn new(universe: &AssetUniverse, n_samples: usize, m_inner: usize,
+               r_reps: usize, threads: usize) -> Self {
+        let d = universe.dim();
+        Self::from_rows(
+            (0..r_reps)
+                .map(|_| {
+                    NativeMv::new(universe.clone(), n_samples, m_inner,
+                                  NativeMode::Sequential)
+                })
+                .collect(),
+            d,
+            threads,
+        )
+    }
+}
+
+/// Task 4 batched: identical machinery over the joint `[w, t]` rows.
+pub type NativeCvarBatch = NativeEpochBatch<NativeCvar>;
+
+impl NativeEpochBatch<NativeCvar> {
+    pub fn new(universe: &AssetUniverse, n_samples: usize, m_inner: usize,
+               r_reps: usize, threads: usize) -> Self {
+        let d = universe.dim();
+        Self::from_rows(
+            (0..r_reps)
+                .map(|_| {
+                    NativeCvar::new(universe.clone(), n_samples, m_inner,
+                                    NativeMode::Sequential)
+                })
+                .collect(),
+            d + 1,
+            threads,
+        )
+    }
+}
+
+impl<B: MvBackend + Send> MvBatchBackend for NativeEpochBatch<B> {
     fn name(&self) -> &'static str {
         "native_batch"
     }
@@ -503,10 +677,19 @@ impl NvBatchBackend for NativeNvBatch {
 pub struct NativeLrBatch {
     reps: Vec<Mutex<NativeLr>>,
     hessian_mode: HessianMode,
-    /// Per-row Algorithm-4 cache: (generation it was built at, H).  The
-    /// `Mutex` exists only to hand the chunked closure `&mut` access to
-    /// its own rows; chunks are disjoint, so locks are never contended.
-    h_caches: Vec<Mutex<Option<(u64, Mat)>>>,
+    /// Per-row Algorithm-4 cache: ((generation, row count) it was built
+    /// at, H).  The `Mutex` exists only to hand the chunked closure
+    /// `&mut` access to its own rows; chunks are disjoint, so locks are
+    /// never contended.
+    ///
+    /// Cache validity leans on the SQN driver protocol: correction pairs
+    /// only land via `hvp_batch` (which bumps the generation) followed by
+    /// `push_row` — so `(generation, count)` moves whenever a row's
+    /// memory content can have changed.  Handing `direction_batch` two
+    /// unrelated `BatchCorrectionMemory` values at the same generation
+    /// AND per-row counts (impossible through `run_sqn_batch`) would
+    /// reuse a stale H.
+    h_caches: Vec<Mutex<Option<((u64, usize), Mat)>>>,
     /// Bumped by [`Self::hvp_batch`] — a correction pair is about to land,
     /// so every row's H_t goes stale (mirrors `NativeLr::hvp`).
     mem_generation: u64,
@@ -616,15 +799,17 @@ impl LrBatchBackend for NativeLrBatch {
                 let g_row = &g[i * n..(i + 1) * n];
                 let d_row = match hessian_mode {
                     HessianMode::Explicit => {
-                        // rebuild row i's H only when its generation moved
-                        // (every L iterations) — the sequential cadence
+                        // rebuild row i's H only when its generation or
+                        // fill level moved (every L iterations) — the
+                        // sequential cadence
+                        let stamp = (generation, mem.count(i));
                         let mut cache = caches[i].lock().unwrap();
                         let rebuild = match &*cache {
-                            Some((built, _)) => *built != generation,
+                            Some((built, _)) => *built != stamp,
                             None => true,
                         };
                         if rebuild {
-                            *cache = Some((generation,
+                            *cache = Some((stamp,
                                            lr::hbuild_explicit_view(
                                                mem.row(i))));
                         }
@@ -764,6 +949,64 @@ mod tests {
         }
         // distinct keys ⇒ distinct rows
         assert_ne!(&panel[..d], &panel[d..2 * d]);
+    }
+
+    #[test]
+    fn cvar_epoch_feasible_and_deterministic() {
+        let u = AssetUniverse::generate(&StreamTree::new(41), 16);
+        let x0 = cv::start_iterate(16);
+        let mut b = NativeCvar::new(u.clone(), 12, 4, NativeMode::Sequential);
+        let (x1, o1) = b.epoch(&x0, 0, [5, 6]).unwrap();
+        assert_eq!(x1.len(), 17);
+        assert!(cv::in_product(&x1, 1e-5));
+        assert!(o1.is_finite());
+        let mut b2 = NativeCvar::new(u, 12, 4, NativeMode::Sequential);
+        let (x2, o2) = b2.epoch(&x0, 0, [5, 6]).unwrap();
+        assert_eq!(x1, x2);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn cvar_parallel_matches_sequential() {
+        let u = AssetUniverse::generate(&StreamTree::new(42), 12);
+        let x0 = cv::start_iterate(12);
+        let mut seq = NativeCvar::new(u.clone(), 16, 4,
+                                      NativeMode::Sequential);
+        let mut par =
+            NativeCvar::new(u, 16, 4, NativeMode::Parallel { threads: 3 });
+        let (x1, o1) = seq.epoch(&x0, 1, [3, 4]).unwrap();
+        let (x2, o2) = par.epoch(&x0, 1, [3, 4]).unwrap();
+        for (a, b) in x1.iter().zip(&x2) {
+            assert!((a - b).abs() < 1e-4, "{} vs {}", a, b);
+        }
+        assert!((o1 - o2).abs() < 1e-4);
+    }
+
+    #[test]
+    fn cvar_batch_epoch_bitwise_matches_per_rep() {
+        let (d, n, m, r) = (10usize, 8usize, 3usize, 4usize);
+        let u = AssetUniverse::generate(&StreamTree::new(43), d);
+        let x0 = cv::start_iterate(d);
+        let keys: Vec<[u32; 2]> =
+            (0..r).map(|i| [i as u32 + 9, 3 * i as u32 + 1]).collect();
+
+        let mut batch = NativeCvarBatch::new(&u, n, m, r, 3);
+        let mut panel: Vec<f32> = Vec::new();
+        for _ in 0..r {
+            panel.extend_from_slice(&x0);
+        }
+        let objs = batch.epoch_batch(&mut panel, 1, &keys).unwrap();
+
+        let row = d + 1;
+        for i in 0..r {
+            let mut single =
+                NativeCvar::new(u.clone(), n, m, NativeMode::Sequential);
+            let (x1, o1) = single.epoch(&x0, 1, keys[i]).unwrap();
+            assert_eq!(&panel[i * row..(i + 1) * row], x1.as_slice(),
+                       "rep {}", i);
+            assert_eq!(objs[i], o1, "rep {}", i);
+        }
+        assert_ne!(&panel[..row], &panel[row..2 * row]);
     }
 
     #[test]

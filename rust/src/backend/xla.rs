@@ -144,6 +144,60 @@ impl MvBackend for XlaMvStepwise {
 }
 
 // ---------------------------------------------------------------------------
+// Task 4 — mean-CVaR portfolio (registry extension, DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+/// One `cv_epoch` dispatch covers the raw-panel resampling and all M
+/// smoothed-CVaR Frank-Wolfe steps on the joint `[w, t]` iterate — the
+/// same fused-epoch discipline as [`XlaMv`], over the `MvBackend`
+/// contract, so the CVaR task rides the Task-1 drivers unchanged.
+pub struct XlaCvar {
+    exec: Rc<Exec>,
+    mu: Vec<f32>,
+    sigma: Vec<f32>,
+}
+
+impl XlaCvar {
+    pub fn new(engine: &Engine, universe: &AssetUniverse, n_samples: usize,
+               m_inner: usize) -> Result<Self> {
+        let d = universe.dim() as i64;
+        let exec = engine
+            .load_by_params(
+                "cv_epoch",
+                &[("d", d), ("n", n_samples as i64), ("m", m_inner as i64)],
+            )
+            .context("loading cv_epoch artifact")?;
+        Ok(XlaCvar {
+            exec,
+            mu: universe.mu.clone(),
+            sigma: universe.sigma.clone(),
+        })
+    }
+}
+
+impl MvBackend for XlaCvar {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn epoch(&mut self, x: &[f32], k_epoch: usize, key: [u32; 2])
+        -> Result<(Vec<f32>, f64)> {
+        anyhow::ensure!(x.len() == self.mu.len() + 1,
+                        "iterate must be [w, t] of length d+1");
+        let outs = self.exec.call(&[
+            Arg::F32(x),
+            Arg::F32(&self.mu),
+            Arg::F32(&self.sigma),
+            Arg::U32(&key),
+            Arg::ScalarI32(k_epoch as i32),
+        ])?;
+        let x_out = exec::f32_vec(&outs[0])?;
+        let obj = exec::f32_scalar(&outs[1])? as f64;
+        Ok((x_out, obj))
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Task 2
 // ---------------------------------------------------------------------------
 
@@ -608,6 +662,79 @@ impl MvBatchBackend for XlaMvBatch {
         let objs = exec::f32_vec(&outs[1])?;
         anyhow::ensure!(objs.len() == self.r,
                         "mv_epoch_batch returned {} objectives for {} \
+                         replications", objs.len(), self.r);
+        Ok(objs.into_iter().map(|o| o as f64).collect())
+    }
+}
+
+/// Task 4 batched: `cv_epoch_batch` advances every replication's joint
+/// `[w, t]` row by one fused smoothed-CVaR epoch in ONE device dispatch —
+/// the Task-1 batched discipline over the registry's fourth scenario.
+pub struct XlaCvarBatch {
+    exec: Rc<Exec>,
+    mu: Vec<f32>,
+    sigma: Vec<f32>,
+    r: usize,
+    /// Per-row iterate length d+1.
+    row: usize,
+    keys_flat: Vec<u32>,
+}
+
+impl XlaCvarBatch {
+    pub fn new(engine: &Engine, universe: &AssetUniverse, n_samples: usize,
+               m_inner: usize, r_reps: usize) -> Result<Self> {
+        let d = universe.dim();
+        let exec = engine
+            .load_by_params(
+                "cv_epoch_batch",
+                &[("d", d as i64), ("n", n_samples as i64),
+                  ("m", m_inner as i64), ("r", r_reps as i64)],
+            )
+            .context(
+                "loading cv_epoch_batch artifact (regenerate with \
+                 `python -m compile.aot --reps R`)",
+            )?;
+        Ok(XlaCvarBatch {
+            exec,
+            mu: universe.mu.clone(),
+            sigma: universe.sigma.clone(),
+            r: r_reps,
+            row: d + 1,
+            keys_flat: Vec::with_capacity(2 * r_reps),
+        })
+    }
+}
+
+impl MvBatchBackend for XlaCvarBatch {
+    fn name(&self) -> &'static str {
+        "xla_batch"
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.r
+    }
+
+    fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
+                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+        anyhow::ensure!(w.len() == self.r * self.row,
+                        "iterate panel {} != {}×{}", w.len(), self.r,
+                        self.row);
+        anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        flatten_keys(keys, &mut self.keys_flat);
+        let outs = self.exec.call(&[
+            Arg::F32(w),
+            Arg::F32(&self.mu),
+            Arg::F32(&self.sigma),
+            Arg::U32(&self.keys_flat),
+            Arg::ScalarI32(k_epoch as i32),
+        ])?;
+        let w_out = exec::f32_vec(&outs[0])?;
+        anyhow::ensure!(w_out.len() == w.len(),
+                        "cv_epoch_batch returned wrong panel shape");
+        w.copy_from_slice(&w_out);
+        let objs = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(objs.len() == self.r,
+                        "cv_epoch_batch returned {} objectives for {} \
                          replications", objs.len(), self.r);
         Ok(objs.into_iter().map(|o| o as f64).collect())
     }

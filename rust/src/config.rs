@@ -2,7 +2,11 @@
 
 use std::fmt;
 
-/// Which of the paper's three tasks.
+/// The registered scenarios.  The enum is the cheap `Copy` handle threaded
+/// through specs and reports; everything task-specific behind it — names,
+/// defaults, validation, backends, drivers, artifact requirements — lives
+/// in [`crate::tasks::registry`], so `parse`/`as_str`/`all` are registry
+/// lookups and a new scenario is one variant plus one registration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TaskKind {
     /// §3.1 mean-variance portfolio (Frank-Wolfe, Algorithm 1)
@@ -11,30 +15,23 @@ pub enum TaskKind {
     Newsvendor,
     /// §3.3 binary classification (SQN, Algorithms 3-4)
     Classification,
+    /// Mean-CVaR portfolio (Rockafellar–Uryasev smoothed CVaR, Frank-Wolfe
+    /// over the capped simplex × VaR box; DESIGN.md §12)
+    MeanCvar,
 }
 
 impl TaskKind {
     pub fn parse(s: &str) -> Option<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "mv" | "mean_variance" | "mean-variance" | "portfolio" => {
-                Some(TaskKind::MeanVariance)
-            }
-            "nv" | "newsvendor" | "news_vendor" | "inventory" => Some(TaskKind::Newsvendor),
-            "lr" | "classification" | "logistic" => Some(TaskKind::Classification),
-            _ => None,
-        }
+        crate::tasks::registry::parse(s)
     }
 
     pub fn as_str(&self) -> &'static str {
-        match self {
-            TaskKind::MeanVariance => "mean_variance",
-            TaskKind::Newsvendor => "newsvendor",
-            TaskKind::Classification => "classification",
-        }
+        crate::tasks::registry::get(*self).name()
     }
 
-    pub fn all() -> [TaskKind; 3] {
-        [TaskKind::MeanVariance, TaskKind::Newsvendor, TaskKind::Classification]
+    /// Every registered task, in registration order.
+    pub fn all() -> Vec<TaskKind> {
+        crate::tasks::registry::kinds()
     }
 }
 
@@ -153,58 +150,16 @@ pub struct TaskParams {
 }
 
 impl TaskParams {
+    /// The registered task's §4.1-shaped defaults (a registry lookup).
     pub fn defaults(task: TaskKind, size: usize) -> Self {
-        match task {
-            TaskKind::MeanVariance => TaskParams {
-                size,
-                samples: 64,
-                m_inner: 25,
-                iters: 40,
-                batch: 0,
-                hbatch: 0,
-                memory: 0,
-                l_every: 0,
-                beta: 0.0,
-                resources: 0,
-                tightness: 1.0,
-            },
-            TaskKind::Newsvendor => TaskParams {
-                size,
-                samples: 32,
-                m_inner: 25,
-                iters: 40,
-                batch: 0,
-                hbatch: 0,
-                memory: 0,
-                l_every: 0,
-                beta: 0.0,
-                resources: 8,
-                tightness: 0.6,
-            },
-            TaskKind::Classification => TaskParams {
-                size,
-                samples: 0,
-                m_inner: 0,
-                iters: 400,
-                batch: 64,
-                hbatch: 256,
-                memory: 25,
-                l_every: 10,
-                beta: 2.0,
-                resources: 0,
-                tightness: 1.0,
-            },
-        }
+        crate::tasks::registry::get(task).default_params(size)
     }
 }
 
-/// Default size sweeps per task (the Figure-2 x-axes, scaled per DESIGN §2).
+/// Default size sweeps per task (the Figure-2 x-axes, scaled per DESIGN §2
+/// — a registry lookup).
 pub fn default_sizes(task: TaskKind) -> Vec<usize> {
-    match task {
-        TaskKind::MeanVariance => vec![128, 512, 2048],
-        TaskKind::Newsvendor => vec![256, 2048, 16384],
-        TaskKind::Classification => vec![64, 256, 1024],
-    }
+    crate::tasks::registry::get(task).default_sizes()
 }
 
 #[cfg(test)]
@@ -217,6 +172,8 @@ mod tests {
         assert_eq!(TaskKind::parse("Portfolio"), Some(TaskKind::MeanVariance));
         assert_eq!(TaskKind::parse("NV"), Some(TaskKind::Newsvendor));
         assert_eq!(TaskKind::parse("logistic"), Some(TaskKind::Classification));
+        assert_eq!(TaskKind::parse("cvar"), Some(TaskKind::MeanCvar));
+        assert_eq!(TaskKind::parse("CV"), Some(TaskKind::MeanCvar));
         assert_eq!(TaskKind::parse("wat"), None);
     }
 
@@ -258,6 +215,8 @@ mod tests {
         let p = TaskParams::defaults(TaskKind::Newsvendor, 64);
         assert!(p.resources > 0);
         assert!(p.tightness < 1.0);
+        let p = TaskParams::defaults(TaskKind::MeanCvar, 128);
+        assert!(p.samples > 0 && p.m_inner > 0);
     }
 
     #[test]

@@ -80,19 +80,8 @@ impl ExperimentSpec {
         ensure!(self.size > 0, "size must be positive");
         ensure!(self.reps > 0, "reps must be positive");
         ensure!(self.params.iters > 0, "iters must be positive");
-        match self.task {
-            TaskKind::Classification => {
-                ensure!(self.params.batch > 0, "batch must be positive");
-                ensure!(self.params.hbatch > 0, "hbatch must be positive");
-                ensure!(self.params.l_every > 0, "l_every must be positive");
-                ensure!(self.params.memory > 0, "memory must be positive");
-            }
-            _ => {
-                ensure!(self.params.samples > 0, "samples must be positive");
-                ensure!(self.params.m_inner > 0, "m_inner must be positive");
-            }
-        }
-        Ok(())
+        // task-specific parameter checks live on the registry entry
+        crate::tasks::registry::get(self.task).validate(self)
     }
 
     /// Label used in reports and CSV files.
@@ -121,10 +110,7 @@ impl SweepSpec {
             sizes: crate::config::default_sizes(task),
             backends: vec![BackendKind::Native, BackendKind::Xla],
             reps: 5,
-            epochs: match task {
-                TaskKind::Classification => 200,
-                _ => 10,
-            },
+            epochs: crate::tasks::registry::get(task).default_epochs(),
             seed: 42,
             // The paper's protocol times each replication's own sequential
             // run (mean ± 2σ across replications).  Batched execution

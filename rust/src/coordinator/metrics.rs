@@ -50,11 +50,24 @@ impl RepRecord {
 pub struct RunResult {
     pub spec: ExperimentSpec,
     pub reps: Vec<RepRecord>,
+    /// True when the replication axis executed through the batched engine
+    /// (DESIGN.md §11).  Batched wall-clock is attributed to replications
+    /// as `batch_time / R`, so the cross-replication ±2σ TIMING band is
+    /// methodologically n/a — the report renderers mark it so instead of
+    /// printing a fake ±0.00.
+    pub batched: bool,
 }
 
 impl RunResult {
     pub fn new(spec: ExperimentSpec, reps: Vec<RepRecord>) -> Self {
-        RunResult { spec, reps }
+        RunResult { spec, reps, batched: false }
+    }
+
+    /// Record which execution plan actually ran (set by the coordinator
+    /// after resolving `ExecMode::Auto`).
+    pub fn executed_batched(mut self, batched: bool) -> Self {
+        self.batched = batched;
+        self
     }
 
     /// Mean/σ of total runtime across replications.
@@ -211,5 +224,12 @@ mod tests {
     fn summary_contains_label() {
         let rr = RunResult::new(dummy_spec(), vec![rec(vec![1.0], 0.1)]);
         assert!(rr.summary().contains("mean_variance_native_d8"));
+    }
+
+    #[test]
+    fn executed_batched_marks_result() {
+        let rr = RunResult::new(dummy_spec(), vec![]);
+        assert!(!rr.batched, "sequential is the default attribution");
+        assert!(rr.executed_batched(true).batched);
     }
 }

@@ -4,6 +4,12 @@
 //! The coordinator owns the PJRT engine (XLA jobs run on its thread — the
 //! PJRT handles are not `Send`; the CPU runtime parallelizes compute
 //! internally) and fans native replications out over a thread pool.
+//!
+//! Since the task-registry refactor (DESIGN.md §12) the coordinator is
+//! task-generic: [`Coordinator::run`] resolves the execution plan
+//! (sequential vs batched, DESIGN.md §11), looks the task up in
+//! [`crate::tasks::registry`], and delegates — adding a scenario never
+//! touches this module.
 
 pub mod experiment;
 pub mod metrics;
@@ -14,20 +20,10 @@ pub use metrics::{RepRecord, RunResult};
 
 use anyhow::{bail, Context, Result};
 
-use crate::backend::native::{
-    NativeLr, NativeLrBatch, NativeMode, NativeMv, NativeMvBatch, NativeNv,
-    NativeNvBatch,
-};
-use crate::backend::xla::{XlaLr, XlaLrBatch, XlaMv, XlaMvBatch, XlaNv,
-                          XlaNvBatch};
-use crate::backend::{LrBackend, MvBackend, NvBackend};
-use crate::config::{BackendKind, ExecMode, TaskKind};
-use crate::opt::{frank_wolfe, sqn};
+use crate::config::{BackendKind, ExecMode};
 use crate::rng::StreamTree;
 use crate::runtime::Engine;
-use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
-use crate::tasks::NvLmo;
-use crate::util::pool::parallel_map;
+use crate::tasks::registry::{self, TaskBackend};
 
 /// Path offset for replication subtrees (keeps problem-generation streams
 /// and replication streams disjoint).
@@ -77,10 +73,13 @@ impl Coordinator {
         Ok(self.engine.as_ref().unwrap())
     }
 
-    /// Run one experiment (task × backend × size × reps).
+    /// Run one experiment (task × backend × size × reps) — the ONE
+    /// task-generic plan-select-and-execute path: validate, resolve the
+    /// execution plan, and delegate to the task's registry entry.
     pub fn run(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
         spec.validate()?;
-        if self.use_batched(spec) && spec.backend == BackendKind::NativePar {
+        let batched = self.use_batched(spec);
+        if batched && spec.backend == BackendKind::NativePar {
             // The batch engine runs each row with the paper's sequential
             // kernels; silently substituting them for native_par's blocked
             // intra-gradient kernels (ablation A3) would mislabel results.
@@ -90,11 +89,13 @@ impl Coordinator {
                  parallelism) or --exec seq"
             );
         }
-        match spec.task {
-            TaskKind::MeanVariance => self.run_mv(spec),
-            TaskKind::Newsvendor => self.run_nv(spec),
-            TaskKind::Classification => self.run_lr(spec),
-        }
+        let task = registry::get(spec.task);
+        let records = if batched {
+            task.run_batch(self, spec)?
+        } else {
+            task.run_seq(self, spec)?
+        };
+        Ok(RunResult::new(spec.clone(), records).executed_batched(batched))
     }
 
     /// Resolve the spec's execution mode into a concrete plan
@@ -129,300 +130,31 @@ impl Coordinator {
         Ok(out)
     }
 
-    // -- task runners --------------------------------------------------------
-
-    fn run_mv(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
-        let tree = StreamTree::new(spec.seed);
-        let universe = AssetUniverse::generate(&tree, spec.size);
-        let p = &spec.params;
-        let w0 = vec![1.0f32 / spec.size as f32; spec.size];
-        let reps = spec.reps;
-
-        if self.use_batched(spec) {
-            let trees = rep_subtrees(&tree, reps);
-            let traces = match spec.backend {
-                BackendKind::Xla => {
-                    let engine = self.engine()?;
-                    let mut backend = XlaMvBatch::new(
-                        engine, &universe, p.samples, p.m_inner, reps)?;
-                    frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
-                                              &trees)?
-                        .1
-                }
-                _ => {
-                    let mut backend = NativeMvBatch::new(
-                        &universe, p.samples, p.m_inner, reps,
-                        self.native_threads);
-                    frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
-                                              &trees)?
-                        .1
-                }
-            };
-            let records = traces.into_iter().map(RepRecord::from_fw).collect();
-            return Ok(RunResult::new(spec.clone(), records));
-        }
-
-        let records: Vec<RepRecord> = match spec.backend {
-            BackendKind::Xla => {
-                let engine = self.engine()?;
-                let mut backend =
-                    XlaMv::new(engine, &universe, p.samples, p.m_inner)?;
-                (0..reps)
-                    .map(|r| {
-                        let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
-                        let (_, trace) = frank_wolfe::run_mv(
-                            &mut backend, w0.clone(), p.iters, &sub)?;
-                        Ok(RepRecord::from_fw(trace))
-                    })
-                    .collect::<Result<_>>()?
-            }
-            BackendKind::Native | BackendKind::NativePar => {
-                let mode = native_mode(spec.backend, self.native_threads);
-                let results = parallel_map(reps, self.native_threads, |r| {
-                    let mut backend = NativeMv::new(
-                        universe.clone(), p.samples, p.m_inner, mode);
-                    let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
-                    frank_wolfe::run_mv(&mut backend, w0.clone(), p.iters, &sub)
-                        .map(|(_, t)| RepRecord::from_fw(t))
-                });
-                results.into_iter().collect::<Result<_>>()?
-            }
-        };
-        Ok(RunResult::new(spec.clone(), records))
-    }
-
-    fn run_nv(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
-        let tree = StreamTree::new(spec.seed);
-        let inst = NewsvendorInstance::generate(
-            &tree, spec.size, spec.params.resources, spec.params.tightness);
-        let p = &spec.params;
-        let x0 = inst.feasible_start();
-        let reps = spec.reps;
-
-        if self.use_batched(spec) {
-            let trees = rep_subtrees(&tree, reps);
-            let mut lmos: Vec<NvLmo> =
-                (0..reps).map(|_| NvLmo::new(&inst)).collect();
-            let traces = match spec.backend {
-                BackendKind::Xla => {
-                    let engine = self.engine()?;
-                    let mut backend =
-                        XlaNvBatch::new(engine, &inst, p.samples, reps)?;
-                    frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
-                                              p.iters, p.m_inner, &trees)?
-                        .1
-                }
-                _ => {
-                    let mut backend = NativeNvBatch::new(
-                        &inst, p.samples, reps, self.native_threads);
-                    frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
-                                              p.iters, p.m_inner, &trees)?
-                        .1
-                }
-            };
-            let records = traces.into_iter().map(RepRecord::from_fw).collect();
-            return Ok(RunResult::new(spec.clone(), records));
-        }
-
-        let records: Vec<RepRecord> = match spec.backend {
-            BackendKind::Xla => {
-                let engine = self.engine()?;
-                let mut backend = XlaNv::new(engine, &inst, p.samples)?;
-                (0..reps)
-                    .map(|r| {
-                        let mut lmo = NvLmo::new(&inst);
-                        let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
-                        let (_, trace) = frank_wolfe::run_nv(
-                            &mut backend, &mut lmo, x0.clone(), p.iters,
-                            p.m_inner, &sub)?;
-                        Ok(RepRecord::from_fw(trace))
-                    })
-                    .collect::<Result<_>>()?
-            }
-            BackendKind::Native | BackendKind::NativePar => {
-                let mode = native_mode(spec.backend, self.native_threads);
-                let results = parallel_map(reps, self.native_threads, |r| {
-                    let mut backend =
-                        NativeNv::new(inst.clone(), p.samples, mode);
-                    let mut lmo = NvLmo::new(&inst);
-                    let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
-                    frank_wolfe::run_nv(&mut backend, &mut lmo, x0.clone(),
-                                        p.iters, p.m_inner, &sub)
-                        .map(|(_, t)| RepRecord::from_fw(t))
-                });
-                results.into_iter().collect::<Result<_>>()?
-            }
-        };
-        Ok(RunResult::new(spec.clone(), records))
-    }
-
-    fn run_lr(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
-        let tree = StreamTree::new(spec.seed);
-        let data = ClassifyData::generate(&tree, spec.size);
-        let p = &spec.params;
-        let cfg = sqn::SqnConfig {
-            iters: p.iters,
-            batch: p.batch,
-            hbatch: p.hbatch,
-            l_every: p.l_every,
-            memory: p.memory,
-            beta: p.beta,
-            track_every: spec.track_every,
-            track_rows: 2048,
-        };
-        let reps = spec.reps;
-
-        if self.use_batched(spec) {
-            let trees = rep_subtrees(&tree, reps);
-            let traces = match spec.backend {
-                BackendKind::Xla => {
-                    let engine = self.engine()?;
-                    let mut backend = XlaLrBatch::new(
-                        engine, &data, p.batch, p.hbatch, p.memory,
-                        spec.hessian_mode, reps)?;
-                    sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
-                }
-                _ => {
-                    let mut backend = NativeLrBatch::new(
-                        &data, reps, self.native_threads, spec.hessian_mode);
-                    sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
-                }
-            };
-            let records =
-                traces.into_iter().map(RepRecord::from_sqn).collect();
-            return Ok(RunResult::new(spec.clone(), records));
-        }
-
-        let records: Vec<RepRecord> = match spec.backend {
-            BackendKind::Xla => {
-                let engine = self.engine()?;
-                let mut backend = XlaLr::new(engine, &data, p.batch, p.hbatch,
-                                             p.memory, spec.hessian_mode)?;
-                (0..reps)
-                    .map(|r| {
-                        let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
-                        let (_, trace) =
-                            sqn::run_sqn(&mut backend, &data, &cfg, &sub)?;
-                        Ok(RepRecord::from_sqn(trace))
-                    })
-                    .collect::<Result<_>>()?
-            }
-            BackendKind::Native | BackendKind::NativePar => {
-                let mode = native_mode(spec.backend, self.native_threads);
-                let results = parallel_map(reps, self.native_threads, |r| {
-                    let mut backend =
-                        NativeLr::new(&data, mode, spec.hessian_mode);
-                    let sub = tree.subtree(&[REP_PATH_BASE + r as u64]);
-                    sqn::run_sqn(&mut backend, &data, &cfg, &sub)
-                        .map(|(_, t)| RepRecord::from_sqn(t))
-                });
-                results.into_iter().collect::<Result<_>>()?
-            }
-        };
-        Ok(RunResult::new(spec.clone(), records))
-    }
-
-    /// Instantiate a boxed backend for one-off use (examples, benches).
-    pub fn make_mv_backend(&mut self, spec: &ExperimentSpec,
-                           universe: &AssetUniverse)
-        -> Result<Box<dyn MvBackend>> {
-        let p = &spec.params;
-        Ok(match spec.backend {
-            BackendKind::Xla => Box::new(XlaMv::new(
-                self.engine()?, universe, p.samples, p.m_inner)?),
-            b => Box::new(NativeMv::new(
-                universe.clone(), p.samples, p.m_inner,
-                native_mode(b, self.native_threads))),
-        })
-    }
-
-    pub fn make_nv_backend(&mut self, spec: &ExperimentSpec,
-                           inst: &NewsvendorInstance)
-        -> Result<Box<dyn NvBackend>> {
-        let p = &spec.params;
-        Ok(match spec.backend {
-            BackendKind::Xla => {
-                Box::new(XlaNv::new(self.engine()?, inst, p.samples)?)
-            }
-            b => Box::new(NativeNv::new(
-                inst.clone(), p.samples, native_mode(b, self.native_threads))),
-        })
-    }
-
-    pub fn make_lr_backend(&mut self, spec: &ExperimentSpec,
-                           data: &ClassifyData) -> Result<Box<dyn LrBackend>> {
-        let p = &spec.params;
-        Ok(match spec.backend {
-            BackendKind::Xla => Box::new(XlaLr::new(
-                self.engine()?, data, p.batch, p.hbatch, p.memory,
-                spec.hessian_mode)?),
-            b => Box::new(NativeLr::with_dim(
-                data.n_features, native_mode(b, self.native_threads),
-                spec.hessian_mode)),
-        })
-    }
-}
-
-fn native_mode(kind: BackendKind, threads: usize) -> NativeMode {
-    match kind {
-        BackendKind::Native => NativeMode::Sequential,
-        BackendKind::NativePar => NativeMode::Parallel { threads },
-        BackendKind::Xla => {
-            // callers dispatch Xla before reaching here
-            unreachable!("native_mode called with Xla")
-        }
+    /// Instantiate a boxed per-replication backend for one-off use
+    /// (examples, benches) — a registry lookup; the task generates its own
+    /// problem instance from the spec seed.
+    pub fn make_backend(&mut self, spec: &ExperimentSpec)
+        -> Result<TaskBackend> {
+        registry::get(spec.task).make_backend(self, spec)
     }
 }
 
 /// Validate that every artifact a spec needs exists before running (fail
-/// fast with an actionable message).
+/// fast with an actionable message) — a registry lookup over the task's
+/// declared artifact requirements.
 pub fn check_artifacts(engine: &Engine, spec: &ExperimentSpec) -> Result<()> {
     if spec.backend != BackendKind::Xla {
         return Ok(());
     }
-    let p = &spec.params;
-    let missing: Vec<String> = match spec.task {
-        TaskKind::MeanVariance => {
-            let req = [("d", spec.size as i64), ("n", p.samples as i64),
-                       ("m", p.m_inner as i64)];
-            if engine.manifest.find("mv_epoch", &req).is_none() {
-                vec![format!("mv_epoch d={} n={} m={}", spec.size, p.samples,
-                             p.m_inner)]
-            } else {
-                vec![]
-            }
-        }
-        TaskKind::Newsvendor => {
-            let req = [("d", spec.size as i64), ("s", p.samples as i64)];
-            if engine.manifest.find("nv_grad", &req).is_none() {
-                vec![format!("nv_grad d={} s={}", spec.size, p.samples)]
-            } else {
-                vec![]
-            }
-        }
-        TaskKind::Classification => {
-            let n = spec.size as i64;
-            let mut m = Vec::new();
-            if engine.manifest.find("lr_grad", &[("n", n)]).is_none() {
-                m.push(format!("lr_grad n={}", n));
-            }
-            if engine.manifest.find("lr_hvp", &[("n", n)]).is_none() {
-                m.push(format!("lr_hvp n={}", n));
-            }
-            m
-        }
-    };
+    let task = registry::get(spec.task);
+    let missing = task.missing_artifacts(engine, spec);
     if !missing.is_empty() {
         bail!(
             "missing artifacts: {} — regenerate with \
              `cd python && python -m compile.aot --out ../artifacts \
              --{}-dims {}`",
             missing.join(", "),
-            match spec.task {
-                TaskKind::MeanVariance => "mv",
-                TaskKind::Newsvendor => "nv",
-                TaskKind::Classification => "lr",
-            },
+            task.dims_flag(),
             spec.size
         );
     }
@@ -432,98 +164,90 @@ pub fn check_artifacts(engine: &Engine, spec: &ExperimentSpec) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::HessianMode;
-    use crate::config::TaskParams;
+    use crate::config::TaskKind;
 
-    fn tiny_spec(task: TaskKind) -> ExperimentSpec {
-        let size = match task {
-            TaskKind::MeanVariance => 16,
-            TaskKind::Newsvendor => 16,
-            TaskKind::Classification => 16,
-        };
-        let mut params = TaskParams::defaults(task, size);
-        match task {
-            TaskKind::Classification => {
-                params.iters = 30;
-                params.batch = 16;
-                params.hbatch = 32;
-                params.l_every = 5;
-                params.memory = 3;
+    fn coord() -> Coordinator {
+        Coordinator::new("artifacts", "/tmp/simopt-test-results").unwrap()
+    }
+
+    // -- registry-conformance suite (DESIGN.md §12) -------------------------
+    //
+    // ONE suite iterates every registered task; registering a new scenario
+    // (e.g. mean_cvar) must pass it with zero suite changes.
+
+    #[test]
+    fn conformance_every_task_produces_records() {
+        let mut c = coord();
+        for task in registry::all() {
+            let spec = task.smoke_spec();
+            let res = c.run(&spec).unwrap_or_else(|e| {
+                panic!("{} run failed: {:#}", task.name(), e)
+            });
+            assert_eq!(res.reps.len(), spec.reps, "task {}", task.name());
+            for rep in &res.reps {
+                assert!(rep.total_s > 0.0, "task {}", task.name());
+                assert!(!rep.objs.is_empty(), "task {}", task.name());
+                assert!(rep.objs.iter().all(|o| o.is_finite()),
+                        "task {}: non-finite objective", task.name());
+                assert_eq!(rep.objs.len(), rep.obj_iters.len(),
+                           "task {}", task.name());
             }
-            _ => {
-                params.iters = 4;
-                params.m_inner = 3;
-                params.samples = 8;
-            }
-        }
-        ExperimentSpec {
-            task,
-            backend: BackendKind::Native,
-            size,
-            reps: 2,
-            seed: 7,
-            hessian_mode: HessianMode::Explicit,
-            track_every: 5,
-            exec: ExecMode::Auto,
-            params,
+            // replications with different streams differ
+            assert_ne!(res.reps[0].objs, res.reps[1].objs,
+                       "task {}: replication streams collided", task.name());
         }
     }
 
     #[test]
-    fn native_mv_run_produces_records() {
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let res = c.run(&tiny_spec(TaskKind::MeanVariance)).unwrap();
-        assert_eq!(res.reps.len(), 2);
-        assert!(res.reps[0].total_s > 0.0);
-        assert_eq!(res.reps[0].objs.len(), 4);
-        // replications with different streams differ
-        assert_ne!(res.reps[0].objs, res.reps[1].objs);
+    fn conformance_every_task_is_reproducible() {
+        let mut c = coord();
+        for task in registry::all() {
+            let spec = task.smoke_spec();
+            let a = c.run(&spec).unwrap();
+            let b = c.run(&spec).unwrap();
+            for (ra, rb) in a.reps.iter().zip(&b.reps) {
+                assert_eq!(ra.objs, rb.objs, "task {}", task.name());
+            }
+        }
     }
 
     #[test]
-    fn native_nv_run_produces_records() {
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let res = c.run(&tiny_spec(TaskKind::Newsvendor)).unwrap();
-        assert_eq!(res.reps.len(), 2);
-        assert!(res.reps[0].objs.iter().all(|o| o.is_finite()));
+    fn conformance_sequential_and_batched_agree_bitwise() {
+        // The coordinator-level contract behind ExecMode::Auto: flipping
+        // the execution mode never changes a single objective bit, for
+        // EVERY registered task.
+        let mut c = coord();
+        for task in registry::all() {
+            let mut spec = task.smoke_spec();
+            spec.exec = ExecMode::Sequential;
+            let seq = c.run(&spec).unwrap();
+            assert!(!seq.batched);
+            spec.exec = ExecMode::Batched;
+            let bat = c.run(&spec).unwrap();
+            assert!(bat.batched);
+            assert_eq!(seq.reps.len(), bat.reps.len());
+            for (a, b) in seq.reps.iter().zip(&bat.reps) {
+                assert_eq!(a.objs, b.objs, "task {}", task.name());
+                assert_eq!(a.obj_iters, b.obj_iters, "task {}",
+                           task.name());
+            }
+        }
     }
 
-    #[test]
-    fn native_lr_run_produces_records() {
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let res = c.run(&tiny_spec(TaskKind::Classification)).unwrap();
-        assert_eq!(res.reps.len(), 2);
-        assert!(!res.reps[0].objs.is_empty());
-    }
-
-    #[test]
-    fn run_is_reproducible() {
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let spec = tiny_spec(TaskKind::MeanVariance);
-        let a = c.run(&spec).unwrap();
-        let b = c.run(&spec).unwrap();
-        assert_eq!(a.reps[0].objs, b.reps[0].objs);
-        assert_eq!(a.reps[1].objs, b.reps[1].objs);
-    }
+    // -- plan selection and guard rails -------------------------------------
 
     #[test]
     fn invalid_spec_rejected() {
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let mut spec = tiny_spec(TaskKind::MeanVariance);
+        let mut c = coord();
+        let mut spec = registry::get(TaskKind::MeanVariance).smoke_spec();
         spec.reps = 0;
         assert!(c.run(&spec).is_err());
     }
 
     #[test]
     fn auto_mode_batches_native_multirep_only() {
-        let c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let mut spec = tiny_spec(TaskKind::MeanVariance);
+        let c = coord();
+        let mut spec = registry::get(TaskKind::MeanVariance).smoke_spec();
         assert!(c.use_batched(&spec), "native reps=2 should auto-batch");
         spec.reps = 1;
         assert!(!c.use_batched(&spec), "single replication stays sequential");
@@ -541,32 +265,11 @@ mod tests {
 
     #[test]
     fn batched_native_par_rejected() {
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        let mut spec = tiny_spec(TaskKind::MeanVariance);
+        let mut c = coord();
+        let mut spec = registry::get(TaskKind::MeanVariance).smoke_spec();
         spec.backend = BackendKind::NativePar;
         spec.exec = ExecMode::Batched;
         let err = c.run(&spec).unwrap_err();
         assert!(format!("{:#}", err).contains("native_par"), "{:#}", err);
-    }
-
-    #[test]
-    fn sequential_and_batched_runs_agree_bitwise() {
-        // The coordinator-level contract behind ExecMode::Auto: flipping
-        // the execution mode never changes a single objective bit.
-        let mut c = Coordinator::new("artifacts", "/tmp/simopt-test-results")
-            .unwrap();
-        for task in TaskKind::all() {
-            let mut spec = tiny_spec(task);
-            spec.exec = ExecMode::Sequential;
-            let seq = c.run(&spec).unwrap();
-            spec.exec = ExecMode::Batched;
-            let bat = c.run(&spec).unwrap();
-            assert_eq!(seq.reps.len(), bat.reps.len());
-            for (a, b) in seq.reps.iter().zip(&bat.reps) {
-                assert_eq!(a.objs, b.objs, "task {}", task);
-                assert_eq!(a.obj_iters, b.obj_iters, "task {}", task);
-            }
-        }
     }
 }

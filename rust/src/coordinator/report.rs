@@ -58,11 +58,21 @@ pub fn figure2_markdown(results: &[RunResult]) -> String {
             match row.get(b) {
                 Some(r) => {
                     let t = r.time_stats();
-                    out.push_str(&format!(
-                        " {} ±{} |",
-                        fmt_duration(t.mean()),
-                        fmt_duration(2.0 * t.std())
-                    ));
+                    if r.batched {
+                        // batched execution attributes batch_wall/R shares
+                        // — a cross-replication timing band would be a
+                        // fake ±0.00, not a measurement (DESIGN.md §11)
+                        out.push_str(&format!(
+                            " {} ±n/a (batched) |",
+                            fmt_duration(t.mean())
+                        ));
+                    } else {
+                        out.push_str(&format!(
+                            " {} ±{} |",
+                            fmt_duration(t.mean()),
+                            fmt_duration(2.0 * t.std())
+                        ));
+                    }
                 }
                 None => out.push_str(" – |"),
             }
@@ -145,14 +155,21 @@ pub fn results_csv(results: &[RunResult]) -> String {
         let t = r.time_stats();
         let st = r.step_stats();
         let fo = r.final_obj_stats();
+        // batched rows carry batch_wall/R time shares: the cross-
+        // replication timing spread is n/a, not 0 (DESIGN.md §11)
+        let total_std = if r.batched {
+            "n/a".to_string()
+        } else {
+            format!("{:.9}", t.std())
+        };
         out.push_str(&format!(
-            "{},{},{},{},{:.9},{:.9},{:.9},{:.9},{:.9}\n",
+            "{},{},{},{},{:.9},{},{:.9},{:.9},{:.9}\n",
             r.spec.task,
             r.spec.backend,
             r.spec.size,
             r.reps.len(),
             t.mean(),
-            t.std(),
+            total_std,
             st.mean(),
             fo.mean(),
             fo.std()
@@ -185,13 +202,21 @@ pub fn results_json(results: &[RunResult]) -> Value {
         .iter()
         .map(|r| {
             let t = r.time_stats();
+            // null, not 0.0: batched timing has no cross-replication
+            // spread to report (DESIGN.md §11)
+            let total_std = if r.batched {
+                Value::Null
+            } else {
+                num(t.std())
+            };
             obj(vec![
                 ("task", s(&r.spec.task.to_string())),
                 ("backend", s(&r.spec.backend.to_string())),
                 ("size", num(r.spec.size as f64)),
                 ("reps", num(r.reps.len() as f64)),
                 ("total_mean_s", num(t.mean())),
-                ("total_std_s", num(t.std())),
+                ("total_std_s", total_std),
+                ("batched", Value::Bool(r.batched)),
                 ("final_obj", num(r.final_obj_stats().mean())),
             ])
         })
@@ -260,6 +285,38 @@ mod tests {
         assert!(md.contains("| 512 |"));
         assert!(md.contains("4.00×")); // 0.4/0.1
         assert!(md.contains("8.00×")); // 4.0/0.5
+    }
+
+    #[test]
+    fn batched_rows_mark_timing_band_na() {
+        // Batched execution attributes batch_wall/R to every replication —
+        // the ±2σ band would be a misleading ±0.00, so every renderer must
+        // mark it n/a instead (DESIGN.md §11).
+        let batched = fake_result(BackendKind::Native, 128, 0.4)
+            .executed_batched(true);
+        let seq = fake_result(BackendKind::Xla, 128, 0.1);
+        let results = vec![batched, seq];
+
+        let md = figure2_markdown(&results);
+        assert!(md.contains("±n/a (batched)"), "{}", md);
+        assert!(md.contains("±"), "sequential rows keep their band");
+
+        let csv = results_csv(&results);
+        let batched_row = csv.lines().nth(1).unwrap();
+        assert!(batched_row.split(',').nth(5).unwrap() == "n/a",
+                "{}", batched_row);
+        let seq_row = csv.lines().nth(2).unwrap();
+        assert!(seq_row.split(',').nth(5).unwrap().parse::<f64>().is_ok(),
+                "{}", seq_row);
+
+        let json = results_json(&results).to_string_pretty();
+        let back = crate::util::json::Value::parse(&json).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr[0].get("total_std_s"),
+                   Some(&crate::util::json::Value::Null));
+        assert_eq!(arr[0].get("batched"),
+                   Some(&crate::util::json::Value::Bool(true)));
+        assert!(arr[1].get("total_std_s").unwrap().as_f64().is_some());
     }
 
     #[test]

@@ -64,4 +64,5 @@ pub mod prelude {
     pub use crate::config::{BackendKind, ExecMode, TaskKind};
     pub use crate::coordinator::{Coordinator, ExperimentSpec, RunResult};
     pub use crate::rng::{Philox, StreamTree};
+    pub use crate::tasks::registry::{SimTask, TaskBackend};
 }

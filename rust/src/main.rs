@@ -12,6 +12,7 @@ use anyhow::{bail, Result};
 use simopt::backend::HessianMode;
 use simopt::config::{default_sizes, BackendKind, ExecMode, TaskKind};
 use simopt::coordinator::{report, Coordinator, ExperimentSpec, SweepSpec};
+use simopt::tasks::registry;
 use simopt::util::cli::Args;
 
 fn main() {
@@ -57,14 +58,37 @@ fn print_usage() {
          \x20 accuracy   Table-2 RSE comparison (--task --size)\n\
          \x20 artifacts  list compiled artifacts\n\
          \x20 hardware   backend spec table\n\n\
-         Run any command with --help for its flags."
+         TASKS (from the registry — every row works with every command):"
     );
+    for task in registry::all() {
+        println!(
+            "  {:<14} {}  [aliases: {}]",
+            task.name(),
+            task.about(),
+            task.aliases().join(", ")
+        );
+    }
+    println!("\nRun any command with --help for its flags.");
+}
+
+/// Alias summary for `--task` errors/help, derived from the registry so an
+/// unregistered task can never hide behind stale CLI text.
+fn task_choices() -> &'static str {
+    use std::sync::OnceLock;
+    static CHOICES: OnceLock<String> = OnceLock::new();
+    CHOICES.get_or_init(|| {
+        registry::all()
+            .map(|t| t.aliases().first().copied().unwrap_or_else(|| t.name()))
+            .collect::<Vec<_>>()
+            .join("|")
+    })
 }
 
 fn parse_task(a: &Args) -> Result<TaskKind> {
     let t = a.get("task").unwrap_or_default();
-    TaskKind::parse(&t)
-        .ok_or_else(|| anyhow::anyhow!("--task must be mv|nv|lr, got '{}'", t))
+    TaskKind::parse(&t).ok_or_else(|| {
+        anyhow::anyhow!("--task must be {}, got '{}'", task_choices(), t)
+    })
 }
 
 fn parse_backends(a: &Args) -> Result<Vec<BackendKind>> {
@@ -78,7 +102,12 @@ fn parse_backends(a: &Args) -> Result<Vec<BackendKind>> {
 }
 
 fn common_flags(args: Args) -> Args {
-    args.flag("task", Some("mv"), "task: mv | nv | lr")
+    use std::sync::OnceLock;
+    static TASK_HELP: OnceLock<String> = OnceLock::new();
+    let help: &'static str = TASK_HELP
+        .get_or_init(|| format!("task: {}", task_choices()))
+        .as_str();
+    args.flag("task", Some("mv"), help)
         .flag("artifacts", Some("artifacts"), "artifact directory")
         .flag("results", Some("results"), "results directory")
         .flag("seed", Some("42"), "experiment seed")
@@ -98,10 +127,7 @@ fn exec_flag(args: Args, default: &'static str) -> Args {
 fn epochs_default(task: TaskKind, a: &Args) -> Result<usize> {
     match a.get("epochs") {
         Some(_) => Ok(a.get_usize("epochs")?),
-        None => Ok(match task {
-            TaskKind::Classification => 200,
-            _ => 10,
-        }),
+        None => Ok(registry::get(task).default_epochs()),
     }
 }
 
@@ -145,13 +171,24 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let result = coord.run(&spec)?;
     println!("{}", result.summary());
     let t = result.time_stats();
-    println!(
-        "per-{} time: {:.6}s mean, band2 = [{:.6}, {:.6}]",
-        if task == TaskKind::Classification { "iter" } else { "epoch" },
-        result.step_stats().mean(),
-        t.band2().0,
-        t.band2().1
-    );
+    let unit = if task == TaskKind::Classification { "iter" } else { "epoch" };
+    if result.batched {
+        // batch_wall/R shares carry no cross-replication spread
+        println!(
+            "per-{} time: {:.6}s mean, band2 = n/a (batched execution, \
+             DESIGN.md §11)",
+            unit,
+            result.step_stats().mean()
+        );
+    } else {
+        println!(
+            "per-{} time: {:.6}s mean, band2 = [{:.6}, {:.6}]",
+            unit,
+            result.step_stats().mean(),
+            t.band2().0,
+            t.band2().1
+        );
+    }
     Ok(())
 }
 

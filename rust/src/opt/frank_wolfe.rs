@@ -13,6 +13,7 @@ use crate::rng::StreamTree;
 use crate::tasks::newsvendor::NvLmo;
 use crate::util::timer::Timer;
 
+use super::panel::{run_panel, PanelHook};
 use super::schedule::fw_gamma;
 
 /// Objective + timing trace of one optimization run.
@@ -85,17 +86,28 @@ pub fn run_nv<B: NvBackend + ?Sized>(
 }
 
 // ---------------------------------------------------------------------------
-// Replication-batched drivers (DESIGN.md §11)
+// Replication-batched drivers: PanelHooks over the generic loop
+// (DESIGN.md §11/§12)
 // ---------------------------------------------------------------------------
 
-/// Distribute one batched-call wall-clock across the per-replication traces
-/// (total batched time == sum over replications stays comparable with the
-/// sequential protocol's per-replication totals).
-fn push_epoch(traces: &mut [FwTrace], objs: &[f64], batch_s: f64) {
-    let share = batch_s / traces.len().max(1) as f64;
-    for (trace, &obj) in traces.iter_mut().zip(objs) {
-        trace.epoch_s.push(share);
-        trace.objs.push(obj);
+/// Epoch-task hook (Algorithm 1, and the mean-CVaR task riding the same
+/// contract): one `epoch_batch` call per outer step.
+struct EpochHook<'a, B: ?Sized> {
+    backend: &'a mut B,
+    keys: Vec<[u32; 2]>,
+}
+
+impl<B: MvBatchBackend + ?Sized> PanelHook for EpochHook<'_, B> {
+    fn prepare(&mut self, k: usize, trees: &[StreamTree]) -> Result<()> {
+        // key derivation stays outside the timed region, as in run_mv
+        self.keys.clear();
+        self.keys.extend(trees.iter().map(|t| t.jax_key(&[k as u64])));
+        Ok(())
+    }
+
+    fn advance(&mut self, k: usize, panel: &mut [f32],
+               _trees: &[StreamTree]) -> Result<Vec<f64>> {
+        self.backend.epoch_batch(panel, k, &self.keys)
     }
 }
 
@@ -113,26 +125,49 @@ pub fn run_mv_batch<B: MvBatchBackend + ?Sized>(
     anyhow::ensure!(backend.batch_reps() == r,
                     "backend built for {} replications, got {} trees",
                     backend.batch_reps(), r);
-    let mut w = Vec::with_capacity(r * w0.len());
-    for _ in 0..r {
-        w.extend_from_slice(w0);
-    }
-    let mut traces = vec![FwTrace::default(); r];
-    let mut keys = vec![[0u32; 2]; r];
-    for k in 0..epochs {
-        for (key, tree) in keys.iter_mut().zip(trees) {
-            *key = tree.jax_key(&[k as u64]);
-        }
-        let t = Timer::start();
-        let objs = backend.epoch_batch(&mut w, k, &keys)?;
-        push_epoch(&mut traces, &objs, t.elapsed_s());
-    }
-    Ok((w, traces))
+    let mut hook = EpochHook { backend, keys: Vec::with_capacity(r) };
+    run_panel(&mut hook, w0, epochs, trees)
 }
 
-/// Algorithm 2 over all replications at once: each inner iteration costs
-/// ONE batched gradient call plus R host-side LP LMO solves (the LMO is
-/// host-side in the sequential path too).
+/// Algorithm-2 hook: one outer step = M inner iterations, each ONE batched
+/// gradient call plus R host-side LP LMO solves (the LMO is host-side in
+/// the sequential path too).
+struct NvStepHook<'a, B: ?Sized> {
+    backend: &'a mut B,
+    lmos: &'a mut [NvLmo],
+    m_inner: usize,
+    d: usize,
+    g: Vec<f32>,
+    keys: Vec<[u32; 2]>,
+}
+
+impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
+    fn prepare(&mut self, k: usize, trees: &[StreamTree]) -> Result<()> {
+        // key derivation stays outside the timed region, as in run_nv
+        self.keys.clear();
+        self.keys.extend(trees.iter().map(|t| t.jax_key(&[k as u64])));
+        Ok(())
+    }
+
+    fn advance(&mut self, k: usize, panel: &mut [f32],
+               trees: &[StreamTree]) -> Result<Vec<f64>> {
+        let d = self.d;
+        let mut objs = vec![f64::NAN; trees.len()];
+        for m in 0..self.m_inner {
+            objs = self.backend.grad_obj_batch(panel, &self.keys,
+                                               &mut self.g)?;
+            let gamma = fw_gamma(k, m, self.m_inner);
+            for (i, lmo) in self.lmos.iter_mut().enumerate() {
+                let s = lmo.solve(&self.g[i * d..(i + 1) * d])?;
+                crate::linalg::vector::fw_update(
+                    &mut panel[i * d..(i + 1) * d], &s, gamma);
+            }
+        }
+        Ok(objs)
+    }
+}
+
+/// Algorithm 2 over all replications at once.
 pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
     backend: &mut B,
     lmos: &mut [NvLmo],
@@ -147,31 +182,15 @@ pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
                     "backend built for {} replications, got {} trees",
                     backend.batch_reps(), r);
     anyhow::ensure!(lmos.len() == r, "need one LMO per replication");
-    let mut x = Vec::with_capacity(r * d);
-    for _ in 0..r {
-        x.extend_from_slice(x0);
-    }
-    let mut g = vec![0.0f32; r * d];
-    let mut traces = vec![FwTrace::default(); r];
-    let mut keys = vec![[0u32; 2]; r];
-    let mut objs = vec![f64::NAN; r];
-    for k in 0..epochs {
-        for (key, tree) in keys.iter_mut().zip(trees) {
-            *key = tree.jax_key(&[k as u64]);
-        }
-        let t = Timer::start();
-        for m in 0..m_inner {
-            objs = backend.grad_obj_batch(&x, &keys, &mut g)?;
-            let gamma = fw_gamma(k, m, m_inner);
-            for (i, lmo) in lmos.iter_mut().enumerate() {
-                let s = lmo.solve(&g[i * d..(i + 1) * d])?;
-                crate::linalg::vector::fw_update(
-                    &mut x[i * d..(i + 1) * d], &s, gamma);
-            }
-        }
-        push_epoch(&mut traces, &objs, t.elapsed_s());
-    }
-    Ok((x, traces))
+    let mut hook = NvStepHook {
+        backend,
+        lmos,
+        m_inner,
+        d,
+        g: vec![0.0f32; r * d],
+        keys: Vec::with_capacity(r),
+    };
+    run_panel(&mut hook, x0, epochs, trees)
 }
 
 #[cfg(test)]
@@ -258,6 +277,37 @@ mod tests {
             assert_eq!(&w_panel[r * d..(r + 1) * d], w_seq.as_slice(),
                        "rep {}", r);
             assert_eq!(traces[r].objs, t_seq.objs, "rep {}", r);
+        }
+    }
+
+    #[test]
+    fn cvar_batch_driver_matches_sequential_driver_bitwise() {
+        // The mean-CVaR task rides run_mv/run_mv_batch through the epoch
+        // contract — same bitwise guarantee, joint [w, t] rows.
+        use crate::backend::native::{NativeCvar, NativeCvarBatch};
+        use crate::tasks::cvar;
+        let (d, reps, epochs) = (9usize, 3usize, 4usize);
+        let root = StreamTree::new(93);
+        let u = AssetUniverse::generate(&root, d);
+        let x0 = cvar::start_iterate(d);
+        let row = d + 1;
+        let trees: Vec<StreamTree> =
+            (0..reps).map(|r| root.subtree(&[1000 + r as u64])).collect();
+
+        let mut batch = NativeCvarBatch::new(&u, 8, 3, reps, 2);
+        let (x_panel, traces) =
+            run_mv_batch(&mut batch, &x0, epochs, &trees).unwrap();
+
+        for (r, tree) in trees.iter().enumerate() {
+            let mut single =
+                NativeCvar::new(u.clone(), 8, 3, NativeMode::Sequential);
+            let (x_seq, t_seq) =
+                run_mv(&mut single, x0.clone(), epochs, tree).unwrap();
+            assert_eq!(&x_panel[r * row..(r + 1) * row], x_seq.as_slice(),
+                       "rep {}", r);
+            assert_eq!(traces[r].objs, t_seq.objs, "rep {}", r);
+            assert!(cvar::in_product(&x_panel[r * row..(r + 1) * row],
+                                     1e-5));
         }
     }
 

@@ -10,10 +10,14 @@
 //! advances all R replications of an experiment through the corresponding
 //! `*BatchBackend` in one call per step — bit-identical per replication to
 //! the sequential driver under the same stream subtrees (DESIGN.md §11).
+//! All batched variants are task-specific [`panel::PanelHook`]s driven by
+//! the ONE generic replication-panel loop in [`panel`] (DESIGN.md §12).
 
 pub mod frank_wolfe;
+pub mod panel;
 pub mod schedule;
 pub mod sqn;
 
 pub use frank_wolfe::{run_mv, run_mv_batch, run_nv, run_nv_batch, FwTrace};
+pub use panel::{run_panel, PanelHook};
 pub use sqn::{run_sqn, run_sqn_batch, SqnConfig, SqnTrace};

@@ -1,0 +1,185 @@
+//! The ONE generic replication-panel loop behind every batched driver
+//! (DESIGN.md §11/§12).
+//!
+//! All batched execution in this repo has the same skeleton: tile the
+//! start iterate into an `[R × n]` row-major panel (row r = replication
+//! r), advance every row one outer step per iteration through a
+//! task-specific hook, and attribute each step's wall-clock to the
+//! per-replication traces as `batch_time / R`.  What differs per task —
+//! key derivation, inner Frank-Wolfe iterations, LP LMO solves, the SQN
+//! correction-memory machinery — lives entirely behind [`PanelHook`], so
+//! `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}` are thin wrappers
+//! and a new scenario's batched driver is one hook, not a new loop.
+
+use anyhow::Result;
+
+use crate::rng::StreamTree;
+use crate::util::timer::Timer;
+
+use super::frank_wolfe::FwTrace;
+
+/// Task-specific hook driven once per outer step by [`run_panel`].
+pub trait PanelHook {
+    /// Untimed per-step preparation (e.g. deriving per-replication stream
+    /// keys) — runs BEFORE the step's wall-clock measurement starts,
+    /// mirroring the sequential drivers' key-outside-the-timer discipline
+    /// so batched and sequential totals stay comparable (DESIGN.md §11).
+    fn prepare(&mut self, _k: usize, _trees: &[StreamTree]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Advance every replication row by one outer step (the TIMED region).
+    /// `panel` is the `[R × n]` iterate panel; `trees[r]` is replication
+    /// r's stream subtree — the SAME subtree the sequential driver
+    /// receives, so batched and sequential runs stay bit-identical.
+    /// Returns the per-row value recorded for this step (the epoch
+    /// objective for FW tasks, the minibatch loss for SQN).
+    fn advance(&mut self, k: usize, panel: &mut [f32],
+               trees: &[StreamTree]) -> Result<Vec<f64>>;
+
+    /// Untimed per-step observation (e.g. SQN tracked-loss checkpoints);
+    /// runs after `advance`'s wall-clock has been recorded, mirroring the
+    /// sequential drivers' tracking-outside-the-timed-region discipline.
+    fn observe(&mut self, _k: usize, _panel: &[f32]) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Distribute one batched-call wall-clock across the per-replication
+/// traces (total batched time == sum over replications stays comparable
+/// with the sequential protocol's per-replication totals; the
+/// cross-replication timing band is methodologically n/a — see
+/// `coordinator::report`).
+pub(crate) fn push_step(traces: &mut [FwTrace], vals: &[f64], batch_s: f64) {
+    let share = batch_s / traces.len().max(1) as f64;
+    for (trace, &v) in traces.iter_mut().zip(vals) {
+        trace.epoch_s.push(share);
+        trace.objs.push(v);
+    }
+}
+
+/// Run `steps` outer steps of `hook` over the replication panel tiled
+/// from `x0`, one row per subtree in `trees`.  Returns the final panel
+/// and one per-replication trace of (recorded value, wall-clock share)
+/// per step.
+pub fn run_panel<H: PanelHook + ?Sized>(
+    hook: &mut H,
+    x0: &[f32],
+    steps: usize,
+    trees: &[StreamTree],
+) -> Result<(Vec<f32>, Vec<FwTrace>)> {
+    let r = trees.len();
+    let mut panel = Vec::with_capacity(r * x0.len());
+    for _ in 0..r {
+        panel.extend_from_slice(x0);
+    }
+    let mut traces = vec![FwTrace::default(); r];
+    for k in 0..steps {
+        hook.prepare(k, trees)?;
+        let t = Timer::start();
+        let vals = hook.advance(k, &mut panel, trees)?;
+        anyhow::ensure!(vals.len() == r,
+                        "hook returned {} values for {} replications",
+                        vals.len(), r);
+        push_step(&mut traces, &vals, t.elapsed_s());
+        hook.observe(k, &panel)?;
+    }
+    Ok((panel, traces))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hook that decrements every row by its replication index per step.
+    struct CountingHook {
+        prepared: usize,
+        advanced: Vec<usize>,
+        observed: usize,
+    }
+
+    impl PanelHook for CountingHook {
+        fn prepare(&mut self, _k: usize, _trees: &[StreamTree])
+            -> Result<()> {
+            // must run before the matching advance
+            assert_eq!(self.prepared, self.advanced.len());
+            self.prepared += 1;
+            Ok(())
+        }
+
+        fn advance(&mut self, k: usize, panel: &mut [f32],
+                   trees: &[StreamTree]) -> Result<Vec<f64>> {
+            self.advanced.push(k);
+            let n = panel.len() / trees.len();
+            for (r, row) in panel.chunks_mut(n).enumerate() {
+                for v in row.iter_mut() {
+                    *v -= r as f32;
+                }
+            }
+            Ok((0..trees.len()).map(|r| (k * 10 + r) as f64).collect())
+        }
+
+        fn observe(&mut self, _k: usize, _panel: &[f32]) -> Result<()> {
+            self.observed += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn panel_loop_tiles_advances_and_records() {
+        let trees: Vec<StreamTree> =
+            (0..3).map(|i| StreamTree::new(i)).collect();
+        let mut hook =
+            CountingHook { prepared: 0, advanced: Vec::new(), observed: 0 };
+        let (panel, traces) =
+            run_panel(&mut hook, &[1.0, 2.0], 4, &trees).unwrap();
+        assert_eq!(hook.prepared, 4);
+        assert_eq!(hook.advanced, vec![0, 1, 2, 3]);
+        assert_eq!(hook.observed, 4);
+        assert_eq!(panel.len(), 6);
+        // row r = x0 − 4·r
+        assert_eq!(&panel[..2], &[1.0, 2.0]);
+        assert_eq!(&panel[2..4], &[-3.0, -2.0]);
+        assert_eq!(&panel[4..6], &[-7.0, -6.0]);
+        assert_eq!(traces.len(), 3);
+        for (r, t) in traces.iter().enumerate() {
+            assert_eq!(t.objs,
+                       vec![r as f64, (10 + r) as f64, (20 + r) as f64,
+                            (30 + r) as f64]);
+            assert_eq!(t.epoch_s.len(), 4);
+        }
+    }
+
+    /// A failing hook surfaces its error instead of panicking.
+    struct FailingHook;
+
+    impl PanelHook for FailingHook {
+        fn advance(&mut self, _k: usize, _panel: &mut [f32],
+                   _trees: &[StreamTree]) -> Result<Vec<f64>> {
+            anyhow::bail!("boom")
+        }
+    }
+
+    #[test]
+    fn hook_errors_propagate() {
+        let trees = vec![StreamTree::new(1)];
+        let err = run_panel(&mut FailingHook, &[0.0], 1, &trees).unwrap_err();
+        assert!(format!("{:#}", err).contains("boom"));
+    }
+
+    /// Wrong hook arity is caught by the loop, not silently zipped away.
+    struct ShortHook;
+
+    impl PanelHook for ShortHook {
+        fn advance(&mut self, _k: usize, _panel: &mut [f32],
+                   _trees: &[StreamTree]) -> Result<Vec<f64>> {
+            Ok(vec![0.0]) // one value for two replications
+        }
+    }
+
+    #[test]
+    fn wrong_value_count_rejected() {
+        let trees = vec![StreamTree::new(1), StreamTree::new(2)];
+        assert!(run_panel(&mut ShortHook, &[0.0], 1, &trees).is_err());
+    }
+}

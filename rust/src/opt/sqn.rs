@@ -14,6 +14,7 @@ use crate::sim::ClassifyData;
 use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
 use crate::util::timer::Timer;
 
+use super::panel::{run_panel, PanelHook};
 use super::schedule::sqn_alpha;
 
 #[derive(Debug, Clone)]
@@ -170,8 +171,152 @@ pub fn run_sqn<B: LrBackend + ?Sized>(
 }
 
 // ---------------------------------------------------------------------------
-// Replication-batched driver (DESIGN.md §11)
+// Replication-batched driver: a PanelHook over the generic loop
+// (DESIGN.md §11/§12)
 // ---------------------------------------------------------------------------
+
+/// Algorithm-3 hook: the whole SQN iteration — minibatch index sampling,
+/// the three batched dispatches, ω̄ averaging, and the correction-memory
+/// machinery — stays task-local here; the outer loop, panel tiling, and
+/// wall-clock attribution come from [`run_panel`].
+struct SqnHook<'a, B: ?Sized> {
+    backend: &'a mut B,
+    data: &'a ClassifyData,
+    cfg: &'a SqnConfig,
+    r: usize,
+    n: usize,
+    mem: BatchCorrectionMemory,
+    g: Vec<f32>,
+    dirs: Vec<f32>,
+    // ω̄ accumulators (Algorithm 3 lines 3, 7, 15), one row per replication
+    wbar_acc: Vec<f32>,
+    wbar_prev: Vec<Option<Vec<f32>>>,
+    t_count: i64,
+    /// Fixed tracked-loss evaluation subsets — the same per-subtree draw
+    /// the sequential path makes.
+    evals: Vec<(Vec<f32>, Vec<f32>)>,
+    idx: Vec<Vec<usize>>,
+    checkpoints: Vec<Vec<(usize, f64)>>,
+    pairs_accepted: Vec<usize>,
+    pairs_rejected: Vec<usize>,
+}
+
+impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
+    fn advance(&mut self, k0: usize, panel: &mut [f32],
+               trees: &[StreamTree]) -> Result<Vec<f64>> {
+        let (r, n, cfg, data) = (self.r, self.n, self.cfg, self.data);
+        let k = k0 + 1; // Algorithm 3 counts iterations from 1
+        let w = panel;
+
+        // -- line 5: per-replication minibatch indices ----------------------
+        for (row, tree) in self.idx.iter_mut().zip(trees) {
+            let mut rng = tree.stream(&[1, k as u64]);
+            *row = rng.sample_indices(data.n_samples,
+                                      cfg.batch.min(data.n_samples));
+        }
+
+        // -- line 6: ONE batched stochastic-gradient dispatch ---------------
+        let losses =
+            self.backend.grad_batch(w, data, &self.idx, &mut self.g)?;
+
+        // -- line 7: ω̄ accumulation + step size ----------------------------
+        for j in 0..r * n {
+            self.wbar_acc[j] += w[j];
+        }
+        let alpha = sqn_alpha(cfg.beta, k);
+
+        // -- lines 8-12: gradient or quasi-Newton step ----------------------
+        if k <= 2 * cfg.l_every {
+            for j in 0..r * n {
+                w[j] -= alpha * self.g[j];
+            }
+        } else {
+            if self.mem.any_active() {
+                // ONE padded dispatch produces every replication's
+                // Algorithm-4 direction (DESIGN.md §11)
+                self.backend.direction_batch(&self.mem, &self.g,
+                                             &mut self.dirs)?;
+            }
+            for i in 0..r {
+                // rows whose memory hasn't accepted a pair yet take the
+                // plain gradient step, exactly as the sequential path does
+                let step = if self.mem.is_active(i) {
+                    &self.dirs
+                } else {
+                    &self.g
+                };
+                for j in i * n..(i + 1) * n {
+                    w[j] -= alpha * step[j];
+                }
+            }
+        }
+
+        // -- lines 13-21: correction pairs every L iterations ---------------
+        if k % cfg.l_every == 0 {
+            self.t_count += 1;
+            let inv = 1.0 / cfg.l_every as f32;
+            let wbar_ts: Vec<Vec<f32>> = (0..r)
+                .map(|i| {
+                    self.wbar_acc[i * n..(i + 1) * n]
+                        .iter()
+                        .map(|&v| v * inv)
+                        .collect()
+                })
+                .collect();
+            if self.t_count > 0 {
+                // s_t and Hessian-batch indices per replication
+                let mut s_panel = vec![0.0f32; r * n];
+                let mut wbar_panel = vec![0.0f32; r * n];
+                let mut hidx: Vec<Vec<usize>> = Vec::with_capacity(r);
+                for i in 0..r {
+                    let prev = self.wbar_prev[i]
+                        .as_ref()
+                        .expect("t>0 ⇒ previous ω̄");
+                    for j in 0..n {
+                        wbar_panel[i * n + j] = wbar_ts[i][j];
+                        s_panel[i * n + j] = wbar_ts[i][j] - prev[j];
+                    }
+                    let mut hrng =
+                        trees[i].stream(&[2, self.t_count as u64]);
+                    hidx.push(hrng.sample_indices(
+                        data.n_samples, cfg.hbatch.min(data.n_samples)));
+                }
+                // line 18: ONE batched Hessian-vector dispatch
+                let mut y_panel = vec![0.0f32; r * n];
+                self.backend.hvp_batch(&wbar_panel, &s_panel, data, &hidx,
+                                       &mut y_panel)?;
+                for i in 0..r {
+                    if self.mem.push_row(i, &s_panel[i * n..(i + 1) * n],
+                                         &y_panel[i * n..(i + 1) * n]) {
+                        self.pairs_accepted[i] += 1;
+                    } else {
+                        self.pairs_rejected[i] += 1;
+                    }
+                }
+            }
+            for (prev, wbar_t) in self.wbar_prev.iter_mut().zip(wbar_ts) {
+                *prev = Some(wbar_t);
+            }
+            self.wbar_acc.iter_mut().for_each(|v| *v = 0.0);
+        }
+        Ok(losses)
+    }
+
+    fn observe(&mut self, k0: usize, panel: &[f32]) -> Result<()> {
+        // convergence tracking, outside the timed region (as in run_sqn)
+        let (cfg, n) = (self.cfg, self.n);
+        let k = k0 + 1;
+        if cfg.track_every > 0 && (k % cfg.track_every == 0 || k == 1) {
+            for i in 0..self.r {
+                let (xe, ze) = &self.evals[i];
+                let l = crate::tasks::classification::full_loss(
+                    &panel[i * n..(i + 1) * n], xe, ze);
+                self.checkpoints[i].push((k, l));
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Algorithm 3 over all replications at once.  Per iteration the backend
 /// sees ONE `grad_batch` call on an `[R × n]` iterate panel, ONE
@@ -195,19 +340,6 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
                     "backend built for {} replications, got {} trees",
                     backend.batch_reps(), r);
 
-    let mut w = vec![0.0f32; r * n];
-    let mut g = vec![0.0f32; r * n];
-    let mut dirs = vec![0.0f32; r * n];
-    let mut traces = vec![SqnTrace::default(); r];
-    let mut mem = BatchCorrectionMemory::new(r, cfg.memory, n);
-
-    // ω̄ accumulators (Algorithm 3 lines 3, 7, 15), one row per replication
-    let mut wbar_acc = vec![0.0f32; r * n];
-    let mut wbar_prev: Vec<Option<Vec<f32>>> = vec![None; r];
-    let mut t_count: i64 = -1;
-
-    // Fixed evaluation subsets for the tracked loss — the same per-subtree
-    // draw the sequential path makes.
     let evals: Vec<(Vec<f32>, Vec<f32>)> = trees
         .iter()
         .map(|tree| {
@@ -221,107 +353,38 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
         })
         .collect();
 
-    let mut idx: Vec<Vec<usize>> = vec![Vec::new(); r];
-    for k in 1..=cfg.iters {
-        let timer = Timer::start();
-        // -- line 5: per-replication minibatch indices ----------------------
-        for (row, tree) in idx.iter_mut().zip(trees) {
-            let mut rng = tree.stream(&[1, k as u64]);
-            *row = rng.sample_indices(data.n_samples,
-                                      cfg.batch.min(data.n_samples));
-        }
+    let mut hook = SqnHook {
+        backend,
+        data,
+        cfg,
+        r,
+        n,
+        mem: BatchCorrectionMemory::new(r, cfg.memory, n),
+        g: vec![0.0f32; r * n],
+        dirs: vec![0.0f32; r * n],
+        wbar_acc: vec![0.0f32; r * n],
+        wbar_prev: vec![None; r],
+        t_count: -1,
+        evals,
+        idx: vec![Vec::new(); r],
+        checkpoints: vec![Vec::new(); r],
+        pairs_accepted: vec![0; r],
+        pairs_rejected: vec![0; r],
+    };
+    let x0 = vec![0.0f32; n];
+    let (w, panel_traces) = run_panel(&mut hook, &x0, cfg.iters, trees)?;
 
-        // -- line 6: ONE batched stochastic-gradient dispatch ---------------
-        let losses = backend.grad_batch(&w, data, &idx, &mut g)?;
-
-        // -- line 7: ω̄ accumulation + step size ----------------------------
-        for j in 0..r * n {
-            wbar_acc[j] += w[j];
-        }
-        let alpha = sqn_alpha(cfg.beta, k);
-
-        // -- lines 8-12: gradient or quasi-Newton step ----------------------
-        if k <= 2 * cfg.l_every {
-            for j in 0..r * n {
-                w[j] -= alpha * g[j];
-            }
-        } else {
-            if mem.any_active() {
-                // ONE padded dispatch produces every replication's
-                // Algorithm-4 direction (DESIGN.md §11)
-                backend.direction_batch(&mem, &g, &mut dirs)?;
-            }
-            for i in 0..r {
-                // rows whose memory hasn't accepted a pair yet take the
-                // plain gradient step, exactly as the sequential path does
-                let step = if mem.is_active(i) { &dirs } else { &g };
-                for j in i * n..(i + 1) * n {
-                    w[j] -= alpha * step[j];
-                }
-            }
-        }
-
-        // -- lines 13-21: correction pairs every L iterations ---------------
-        if k % cfg.l_every == 0 {
-            t_count += 1;
-            let inv = 1.0 / cfg.l_every as f32;
-            let wbar_ts: Vec<Vec<f32>> = (0..r)
-                .map(|i| {
-                    wbar_acc[i * n..(i + 1) * n]
-                        .iter()
-                        .map(|&v| v * inv)
-                        .collect()
-                })
-                .collect();
-            if t_count > 0 {
-                // s_t and Hessian-batch indices per replication
-                let mut s_panel = vec![0.0f32; r * n];
-                let mut wbar_panel = vec![0.0f32; r * n];
-                let mut hidx: Vec<Vec<usize>> = Vec::with_capacity(r);
-                for i in 0..r {
-                    let prev =
-                        wbar_prev[i].as_ref().expect("t>0 ⇒ previous ω̄");
-                    for j in 0..n {
-                        wbar_panel[i * n + j] = wbar_ts[i][j];
-                        s_panel[i * n + j] = wbar_ts[i][j] - prev[j];
-                    }
-                    let mut hrng = trees[i].stream(&[2, t_count as u64]);
-                    hidx.push(hrng.sample_indices(
-                        data.n_samples, cfg.hbatch.min(data.n_samples)));
-                }
-                // line 18: ONE batched Hessian-vector dispatch
-                let mut y_panel = vec![0.0f32; r * n];
-                backend.hvp_batch(&wbar_panel, &s_panel, data, &hidx,
-                                  &mut y_panel)?;
-                for i in 0..r {
-                    if mem.push_row(i, &s_panel[i * n..(i + 1) * n],
-                                    &y_panel[i * n..(i + 1) * n]) {
-                        traces[i].pairs_accepted += 1;
-                    } else {
-                        traces[i].pairs_rejected += 1;
-                    }
-                }
-            }
-            for (prev, wbar_t) in wbar_prev.iter_mut().zip(wbar_ts) {
-                *prev = Some(wbar_t);
-            }
-            wbar_acc.iter_mut().for_each(|v| *v = 0.0);
-        }
-        let share = timer.elapsed_s() / r as f64;
-        for (trace, &loss) in traces.iter_mut().zip(&losses) {
-            trace.iter_s.push(share);
-            trace.batch_loss.push(loss);
-        }
-
-        // -- convergence tracking (outside the timed region) ----------------
-        if cfg.track_every > 0 && (k % cfg.track_every == 0 || k == 1) {
-            for i in 0..r {
-                let (xe, ze) = &evals[i];
-                let l = crate::tasks::classification::full_loss(
-                    &w[i * n..(i + 1) * n], xe, ze);
-                traces[i].checkpoints.push((k, l));
-            }
-        }
+    // Reassemble SqnTraces: the generic loop recorded minibatch losses and
+    // wall-clock shares; checkpoints and pair counts are hook state.
+    let mut traces = Vec::with_capacity(r);
+    for (i, ft) in panel_traces.into_iter().enumerate() {
+        traces.push(SqnTrace {
+            checkpoints: std::mem::take(&mut hook.checkpoints[i]),
+            batch_loss: ft.objs,
+            iter_s: ft.epoch_s,
+            pairs_accepted: hook.pairs_accepted[i],
+            pairs_rejected: hook.pairs_rejected[i],
+        });
     }
     Ok((w, traces))
 }

@@ -1,0 +1,298 @@
+//! Task 4 math (registry extension, DESIGN.md §12): smoothed mean-CVaR
+//! portfolio selection over the same asset universe as Task 1.
+//!
+//! Rockafellar–Uryasev (2000) turn CVaR minimization into a joint convex
+//! program over (w, t) — t is the VaR estimate — and the hinge (·)₊ is
+//! smoothed with a width-η softplus so the objective is differentiable
+//! (the standard smoothing used for gradient-based CVaR optimization):
+//!
+//!   f(w, t) = −wᵀR̄ + λ·[ t + 1/((1−α)·n) Σₛ softplus_η(ℓₛ − t) ],
+//!   ℓₛ = −Rₛ·w   (portfolio loss of sample s).
+//!
+//! The feasible set is the product Δ_capped × [−T_BOX, T_BOX]; Frank-Wolfe
+//! separates over products, so the LMO is the Task-1 analytic simplex LMO
+//! on the w block plus an interval-endpoint pick on the t coordinate.  The
+//! iterate is the length-(d+1) vector `x = [w, t]`, which lets the CVaR
+//! task ride the Task-1 epoch machinery (`MvBackend`, `run_mv`,
+//! `NativeEpochBatch`) unchanged.
+//!
+//! The constants below are mirrored by `python/compile/kernels/cvar.py` —
+//! keep the two in sync or the native and XLA arms optimize different
+//! objectives.
+
+use crate::linalg::matrix::Mat;
+use crate::linalg::vector::dot;
+
+use super::mean_variance;
+
+/// CVaR confidence level α (the tail has mass 1−α).
+pub const ALPHA: f32 = 0.9;
+/// Softplus smoothing width η.
+pub const ETA: f32 = 0.05;
+/// Risk-aversion weight λ on the CVaR term.
+pub const LAMBDA: f32 = 1.0;
+/// Box bound for the VaR coordinate: t ∈ [−T_BOX, T_BOX].
+pub const T_BOX: f32 = 2.0;
+
+/// softplus_η(x) = η·ln(1 + e^{x/η}), branch-stable in f32.
+pub fn softplus_eta(x: f32) -> f32 {
+    let z = x / ETA;
+    if z > 0.0 {
+        x + ETA * (-z).exp().ln_1p()
+    } else {
+        ETA * z.exp().ln_1p()
+    }
+}
+
+/// σ(x/η) — the derivative of [`softplus_eta`] — branch-stable in f32.
+pub fn sigmoid_eta(x: f32) -> f32 {
+    let z = x / ETA;
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// 1/((1−α)·n) — the tail-average scale of the RU functional.
+pub fn tail_scale(n_samples: usize) -> f32 {
+    1.0 / ((1.0 - ALPHA) * n_samples as f32)
+}
+
+/// Scratch buffers reused across iterations (no allocation in the hot loop).
+#[derive(Debug, Clone)]
+pub struct CvScratch {
+    /// Per-sample portfolio losses ℓₛ = −Rₛ·w, length n.
+    pub losses: Vec<f32>,
+    /// σ_η(ℓₛ − t), length n.
+    pub sig: Vec<f32>,
+    /// Gradient over the joint iterate, length d+1.
+    pub g: Vec<f32>,
+}
+
+impl CvScratch {
+    pub fn new(n_samples: usize, d: usize) -> Self {
+        CvScratch {
+            losses: vec![0.0; n_samples],
+            sig: vec![0.0; n_samples],
+            g: vec![0.0; d + 1],
+        }
+    }
+}
+
+/// ℓ = −R·w into `losses` (sequential row-by-row matvec, the paper's CPU
+/// idiom).
+pub fn losses(panel: &Mat, w: &[f32], losses: &mut [f32]) {
+    panel.matvec(w, losses);
+    for v in losses.iter_mut() {
+        *v = -*v;
+    }
+}
+
+/// ∇f(w, t) into `scratch.g` (length d+1; last entry is ∂f/∂t).
+pub fn grad(panel: &Mat, rbar: &[f32], x: &[f32], scratch: &mut CvScratch) {
+    let n = panel.rows;
+    let d = panel.cols;
+    debug_assert_eq!(x.len(), d + 1);
+    let t = x[d];
+    losses(panel, &x[..d], &mut scratch.losses);
+    let mut sig_sum = 0.0f32;
+    for s in 0..n {
+        let sg = sigmoid_eta(scratch.losses[s] - t);
+        scratch.sig[s] = sg;
+        sig_sum += sg;
+    }
+    let c = tail_scale(n);
+    // (Rᵀσ)_j, then  g_w = −R̄ − λ·c·(Rᵀσ)  (∂ℓₛ/∂w_j = −R_sj)
+    panel.matvec_t(&scratch.sig, &mut scratch.g[..d]);
+    for j in 0..d {
+        scratch.g[j] = -rbar[j] - LAMBDA * c * scratch.g[j];
+    }
+    scratch.g[d] = LAMBDA * (1.0 - c * sig_sum);
+}
+
+/// f(w, t) = −wᵀR̄ + λ·[t + c·Σₛ softplus_η(ℓₛ − t)].
+pub fn objective(panel: &Mat, rbar: &[f32], x: &[f32],
+                 scratch: &mut CvScratch) -> f64 {
+    let n = panel.rows;
+    let d = panel.cols;
+    debug_assert_eq!(x.len(), d + 1);
+    let t = x[d];
+    losses(panel, &x[..d], &mut scratch.losses);
+    let mut tail = 0.0f64;
+    for s in 0..n {
+        tail += softplus_eta(scratch.losses[s] - t) as f64;
+    }
+    let c = 1.0 / ((1.0 - ALPHA) as f64 * n as f64);
+    -(dot(&x[..d], rbar) as f64)
+        + LAMBDA as f64 * (t as f64 + c * tail)
+}
+
+/// Joint LMO over Δ_capped × [−T_BOX, T_BOX]: the product set separates,
+/// so the w block reuses the Task-1 analytic simplex LMO and the t
+/// coordinate picks the interval endpoint minimizing g_t·t.
+pub fn product_lmo(g: &[f32]) -> (Option<usize>, f32) {
+    let d = g.len() - 1;
+    let vertex = mean_variance::simplex_lmo(&g[..d]);
+    let t_vertex = if g[d] < 0.0 { T_BOX } else { -T_BOX };
+    (vertex, t_vertex)
+}
+
+/// FW update x ← x + γ(s − x) against the product vertex.
+pub fn fw_product_update(x: &mut [f32], vertex: Option<usize>,
+                         t_vertex: f32, gamma: f32) {
+    let d = x.len() - 1;
+    mean_variance::fw_vertex_update(&mut x[..d], vertex, gamma);
+    x[d] += gamma * (t_vertex - x[d]);
+}
+
+/// Feasibility of the product set within `tol`.
+pub fn in_product(x: &[f32], tol: f32) -> bool {
+    let d = x.len() - 1;
+    mean_variance::in_simplex(&x[..d], tol) && x[d].abs() <= T_BOX + tol
+}
+
+/// The coordinator's start iterate: uniform portfolio, t₀ = 0.
+pub fn start_iterate(d: usize) -> Vec<f32> {
+    let mut x = vec![1.0f32 / d as f32; d + 1];
+    x[d] = 0.0;
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Philox;
+
+    fn panel(seed: u64, n: usize, d: usize) -> (Mat, Vec<f32>) {
+        let mut p = Philox::new(seed);
+        let m = Mat::from_vec(
+            n,
+            d,
+            (0..n * d).map(|_| p.uniform_f32(-1.0, 1.0)).collect(),
+        );
+        let rbar = m.col_means();
+        (m, rbar)
+    }
+
+    #[test]
+    fn softplus_and_sigmoid_are_consistent() {
+        // softplus_η ≥ max(x, 0), tends to the hinge, and its derivative is
+        // sigmoid_eta (finite-difference check at a few scales).
+        for &x in &[-1.0f32, -0.1, -0.01, 0.0, 0.01, 0.1, 1.0] {
+            let sp = softplus_eta(x);
+            assert!(sp >= x.max(0.0) - 1e-6, "sp({}) = {}", x, sp);
+            let h = 1e-3f32;
+            let fd = (softplus_eta(x + h) - softplus_eta(x - h)) / (2.0 * h);
+            assert!((fd - sigmoid_eta(x)).abs() < 5e-3,
+                    "sp'({}) = {} vs σ = {}", x, fd, sigmoid_eta(x));
+        }
+        // far tails: hinge behaviour, no overflow
+        assert!((softplus_eta(5.0) - 5.0).abs() < 1e-5);
+        assert!(softplus_eta(-5.0).abs() < 1e-5);
+        assert!((sigmoid_eta(5.0) - 1.0).abs() < 1e-6);
+        assert!(sigmoid_eta(-5.0) < 1e-6);
+    }
+
+    #[test]
+    fn grad_matches_finite_differences() {
+        let (c, rbar) = panel(1, 32, 4);
+        let mut x = vec![0.3f32, 0.2, 0.1, 0.15, 0.05];
+        let mut scratch = CvScratch::new(32, 4);
+        grad(&c, &rbar, &x, &mut scratch);
+        let g = scratch.g.clone();
+        let h = 1e-3f32;
+        for j in 0..x.len() {
+            let orig = x[j];
+            x[j] = orig + h;
+            let fp = objective(&c, &rbar, &x, &mut scratch);
+            x[j] = orig - h;
+            let fm = objective(&c, &rbar, &x, &mut scratch);
+            x[j] = orig;
+            let fd = ((fp - fm) / (2.0 * h as f64)) as f32;
+            assert!((fd - g[j]).abs() < 3e-2,
+                    "coord {}: fd {} vs grad {}", j, fd, g[j]);
+        }
+    }
+
+    #[test]
+    fn lmo_minimizes_over_product_set() {
+        let g = [0.5f32, -1.0, 0.2, 0.7]; // d = 3 plus the t coordinate
+        let (v, tv) = product_lmo(&g);
+        assert_eq!(v, Some(1));
+        assert_eq!(tv, -T_BOX); // g_t > 0 ⇒ lower endpoint
+        let g2 = [0.5f32, 1.0, 0.2, -0.7];
+        let (v2, tv2) = product_lmo(&g2);
+        assert_eq!(v2, None); // all-positive w block ⇒ origin
+        assert_eq!(tv2, T_BOX);
+    }
+
+    #[test]
+    fn update_preserves_feasibility() {
+        let mut x = start_iterate(6);
+        assert!(in_product(&x, 1e-6));
+        for m in 0..40 {
+            let gamma = 2.0 / (m as f32 + 2.0);
+            let vertex = if m % 3 == 0 { None } else { Some(m % 6) };
+            let tv = if m % 2 == 0 { T_BOX } else { -T_BOX };
+            fw_product_update(&mut x, vertex, tv, gamma);
+            assert!(in_product(&x, 1e-5), "infeasible after step {}", m);
+        }
+    }
+
+    #[test]
+    fn fw_on_fixed_panel_descends() {
+        let (c, rbar) = panel(4, 64, 8);
+        let mut x = start_iterate(8);
+        let mut scratch = CvScratch::new(64, 8);
+        let first = objective(&c, &rbar, &x, &mut scratch);
+        for m in 0..60 {
+            grad(&c, &rbar, &x, &mut scratch);
+            let (v, tv) = product_lmo(&scratch.g);
+            let gamma = 2.0 / (m as f32 + 2.0);
+            fw_product_update(&mut x, v, tv, gamma);
+            assert!(in_product(&x, 1e-5));
+        }
+        let last = objective(&c, &rbar, &x, &mut scratch);
+        assert!(last < first, "{} !< {}", last, first);
+    }
+
+    #[test]
+    fn objective_penalizes_tail_losses() {
+        // A portfolio concentrated on a high-mean asset must beat one on a
+        // low-mean asset under the mean-CVaR objective.
+        let n = 128;
+        let d = 2;
+        let mut p = Philox::new(9);
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            data.push(0.5 + 0.01 * p.uniform_f32(-1.0, 1.0)); // good asset
+            data.push(-0.5 + 0.01 * p.uniform_f32(-1.0, 1.0)); // bad asset
+        }
+        let m = Mat::from_vec(n, d, data);
+        let rbar = m.col_means();
+        let mut scratch = CvScratch::new(n, d);
+        let good = objective(&m, &rbar, &[1.0, 0.0, -0.5], &mut scratch);
+        let bad = objective(&m, &rbar, &[0.0, 1.0, 0.5], &mut scratch);
+        assert!(good < bad, "{} !< {}", good, bad);
+    }
+
+    #[test]
+    fn t_gradient_brackets_var() {
+        // ∂f/∂t = λ(1 − c·Σσ) is negative when t sits far below the losses
+        // (tail mass ≫ 1−α) and positive far above — the RU optimality
+        // condition pins t* at the smoothed VaR.
+        let (c, rbar) = panel(7, 64, 4);
+        let w = [0.25f32; 4];
+        let mut scratch = CvScratch::new(64, 4);
+        let mut x_lo = w.to_vec();
+        x_lo.push(-1.5);
+        grad(&c, &rbar, &x_lo, &mut scratch);
+        assert!(scratch.g[4] < 0.0, "g_t at t=-1.5 is {}", scratch.g[4]);
+        let mut x_hi = w.to_vec();
+        x_hi.push(1.5);
+        grad(&c, &rbar, &x_hi, &mut scratch);
+        assert!(scratch.g[4] > 0.0, "g_t at t=+1.5 is {}", scratch.g[4]);
+    }
+}

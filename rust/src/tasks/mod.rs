@@ -1,12 +1,21 @@
-//! The paper's three problem definitions and their backend-shared math.
+//! Problem definitions and their backend-shared math, plus the task
+//! registry that turns the scenario count from a constant into a lookup
+//! (DESIGN.md §12).
 //!
 //! Everything a backend needs that is *not* execution-model specific lives
 //! here: objective/gradient math on a sample panel, the analytic simplex
-//! LMO, the LP-backed newsvendor LMO, and the SQN correction memory.
+//! LMO, the LP-backed newsvendor LMO, the SQN correction memory, and the
+//! smoothed mean-CVaR functional.  [`registry`] binds each task's
+//! spec-validation, backend factories, drivers, and artifact requirements
+//! behind one [`registry::SimTask`] trait so the coordinator stays
+//! task-generic.
 
 pub mod classification;
+pub mod cvar;
 pub mod mean_variance;
 pub mod newsvendor;
+pub mod registry;
 
 pub use classification::{BatchCorrectionMemory, CorrectionMemory, MemView};
 pub use newsvendor::NvLmo;
+pub use registry::SimTask;

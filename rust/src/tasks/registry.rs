@@ -1,0 +1,886 @@
+//! The task-registry execution plane (DESIGN.md §12).
+//!
+//! Each scenario registers ONE [`SimTask`] implementation binding
+//! everything that used to be scattered per-task across the stack: CLI
+//! names, default sizes/parameters, spec validation, backend construction
+//! for native-seq / native-par / XLA on both execution plans, the
+//! sequential and batched replication drivers, and the XLA artifact
+//! requirements.  The coordinator, CLI, and artifact preflight are
+//! registry lookups — adding a scenario is a leaf-level registration in
+//! [`TASKS`], not six-layer surgery.
+//!
+//! The paper's CPU-vs-GPU comparison is an *axis*, not a property of its
+//! three example tasks (Zhou, Lange & Suchard 2010 make the same point
+//! for problem families once the problem-specific kernel is separated
+//! from the generic iteration harness); the fourth registered scenario —
+//! the smoothed mean-CVaR portfolio — exists to keep that separation
+//! honest: it passes the same registry-conformance suite as the original
+//! three without any suite changes.
+
+use anyhow::Result;
+
+use crate::backend::native::{
+    NativeCvar, NativeCvarBatch, NativeLr, NativeLrBatch, NativeMode,
+    NativeMv, NativeMvBatch, NativeNv, NativeNvBatch,
+};
+use crate::backend::xla::{
+    XlaCvar, XlaCvarBatch, XlaLr, XlaLrBatch, XlaMv, XlaMvBatch, XlaNv,
+    XlaNvBatch,
+};
+use crate::backend::{LrBackend, MvBackend, NvBackend};
+use crate::config::{BackendKind, TaskKind, TaskParams};
+use crate::coordinator::{rep_subtrees, Coordinator, ExperimentSpec,
+                         RepRecord};
+use crate::opt::{frank_wolfe, sqn};
+use crate::rng::StreamTree;
+use crate::runtime::Engine;
+use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use crate::tasks::{cvar, NvLmo};
+use crate::util::pool::parallel_map;
+
+/// A per-replication backend boxed by task family — what
+/// [`Coordinator::make_backend`] hands to examples and benches.
+pub enum TaskBackend {
+    /// Epoch-structured tasks (mean-variance, mean-CVaR): one fused epoch
+    /// per call over the [`MvBackend`] contract.
+    Epoch(Box<dyn MvBackend>),
+    /// Per-iteration gradient tasks (newsvendor): [`NvBackend`].
+    Gradient(Box<dyn NvBackend>),
+    /// SQN tasks (classification): [`LrBackend`].
+    Sqn(Box<dyn LrBackend>),
+}
+
+/// One registered scenario: everything the execution plane needs to run
+/// it, behind one object-safe trait.
+pub trait SimTask: Sync {
+    /// The [`TaskKind`] this registration backs.
+    fn kind(&self) -> TaskKind;
+
+    /// Canonical CLI/report name (the `Display` form of the kind).
+    fn name(&self) -> &'static str;
+
+    /// Additional names `TaskKind::parse` accepts.
+    fn aliases(&self) -> &'static [&'static str];
+
+    /// One-line description for `simopt --help`.
+    fn about(&self) -> &'static str;
+
+    /// The Figure-2 size axis.
+    fn default_sizes(&self) -> Vec<usize>;
+
+    /// Paper-§4.1-shaped defaults for one problem size.
+    fn default_params(&self, size: usize) -> TaskParams;
+
+    /// Figure-2 default epoch count (FW epochs / SQN iterations).
+    fn default_epochs(&self) -> usize;
+
+    /// The `--<flag>-dims` family flag of `python -m compile.aot` that
+    /// regenerates this task's artifacts.
+    fn dims_flag(&self) -> &'static str;
+
+    /// Task-specific parameter validation (generic size/reps/iters checks
+    /// live on [`ExperimentSpec::validate`]).
+    fn validate(&self, spec: &ExperimentSpec) -> Result<()>;
+
+    /// Artifacts `spec` needs on the XLA arm that `engine` does not have,
+    /// as human-readable `entry param=value` strings (empty = ready).
+    fn missing_artifacts(&self, engine: &Engine, spec: &ExperimentSpec)
+        -> Vec<String>;
+
+    /// Instantiate a boxed per-replication backend for one-off use; the
+    /// task generates its own problem instance from `spec.seed`.
+    fn make_backend(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<TaskBackend>;
+
+    /// Run `spec.reps` replications on the sequential plan (one backend
+    /// dispatch per replication per step).
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>>;
+
+    /// Advance all replications together through the task's
+    /// `*BatchBackend` (DESIGN.md §11).
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>>;
+
+    /// A CI-sized native spec every registered task must complete —
+    /// the registry-conformance suite (coordinator tests) runs / repeats /
+    /// seq-vs-batch-compares exactly this spec for every registration.
+    fn smoke_spec(&self) -> ExperimentSpec {
+        let mut spec = ExperimentSpec::new(self.kind(), BackendKind::Native)
+            .size(16)
+            .replications(2)
+            .seed(7);
+        spec.track_every = 5;
+        spec.params.iters = 4;
+        spec.params.m_inner = 3;
+        spec.params.samples = 8;
+        spec
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------------
+
+/// Registration order defines `TaskKind::all()` / CLI listing order.
+pub static TASKS: [&dyn SimTask; 4] =
+    [&MeanVarianceTask, &NewsvendorTask, &ClassificationTask, &MeanCvarTask];
+
+/// Every registered task, in registration order.
+pub fn all() -> impl Iterator<Item = &'static dyn SimTask> {
+    TASKS.iter().copied()
+}
+
+/// The registration backing `kind` — total by the conformance tests.
+pub fn get(kind: TaskKind) -> &'static dyn SimTask {
+    all().find(|t| t.kind() == kind)
+        .expect("every TaskKind variant is registered in tasks::registry")
+}
+
+/// Registered kinds, in registration order (backs `TaskKind::all`).
+pub fn kinds() -> Vec<TaskKind> {
+    all().map(|t| t.kind()).collect()
+}
+
+/// Canonical names, in registration order (CLI listings derive from this).
+pub fn names() -> Vec<&'static str> {
+    all().map(|t| t.name()).collect()
+}
+
+/// Name/alias lookup (backs `TaskKind::parse`).
+pub fn parse(s: &str) -> Option<TaskKind> {
+    let s = s.to_ascii_lowercase();
+    all().find(|t| t.name() == s || t.aliases().iter().any(|a| *a == s))
+        .map(|t| t.kind())
+}
+
+fn native_mode(kind: BackendKind, threads: usize) -> NativeMode {
+    match kind {
+        BackendKind::Native => NativeMode::Sequential,
+        BackendKind::NativePar => NativeMode::Parallel { threads },
+        BackendKind::Xla => {
+            // callers dispatch Xla before reaching here
+            unreachable!("native_mode called with Xla")
+        }
+    }
+}
+
+fn ensure_fw_params(spec: &ExperimentSpec) -> Result<()> {
+    anyhow::ensure!(spec.params.samples > 0, "samples must be positive");
+    anyhow::ensure!(spec.params.m_inner > 0, "m_inner must be positive");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Task 1 — mean-variance portfolio (paper §3.1, Algorithm 1)
+// ---------------------------------------------------------------------------
+
+pub struct MeanVarianceTask;
+
+impl SimTask for MeanVarianceTask {
+    fn kind(&self) -> TaskKind {
+        TaskKind::MeanVariance
+    }
+
+    fn name(&self) -> &'static str {
+        "mean_variance"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["mv", "mean-variance", "portfolio"]
+    }
+
+    fn about(&self) -> &'static str {
+        "§3.1 mean-variance portfolio (Frank-Wolfe, Algorithm 1)"
+    }
+
+    fn default_sizes(&self) -> Vec<usize> {
+        vec![128, 512, 2048]
+    }
+
+    fn default_params(&self, size: usize) -> TaskParams {
+        TaskParams {
+            size,
+            samples: 64,
+            m_inner: 25,
+            iters: 40,
+            batch: 0,
+            hbatch: 0,
+            memory: 0,
+            l_every: 0,
+            beta: 0.0,
+            resources: 0,
+            tightness: 1.0,
+        }
+    }
+
+    fn default_epochs(&self) -> usize {
+        10
+    }
+
+    fn dims_flag(&self) -> &'static str {
+        "mv"
+    }
+
+    fn validate(&self, spec: &ExperimentSpec) -> Result<()> {
+        ensure_fw_params(spec)
+    }
+
+    fn missing_artifacts(&self, engine: &Engine, spec: &ExperimentSpec)
+        -> Vec<String> {
+        let p = &spec.params;
+        let req = [("d", spec.size as i64), ("n", p.samples as i64),
+                   ("m", p.m_inner as i64)];
+        if engine.manifest.find("mv_epoch", &req).is_none() {
+            vec![format!("mv_epoch d={} n={} m={}", spec.size, p.samples,
+                         p.m_inner)]
+        } else {
+            vec![]
+        }
+    }
+
+    fn make_backend(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<TaskBackend> {
+        let universe =
+            AssetUniverse::generate(&StreamTree::new(spec.seed), spec.size);
+        let p = &spec.params;
+        Ok(TaskBackend::Epoch(match spec.backend {
+            BackendKind::Xla => Box::new(XlaMv::new(
+                cx.engine()?, &universe, p.samples, p.m_inner)?),
+            b => Box::new(NativeMv::new(
+                universe, p.samples, p.m_inner,
+                native_mode(b, cx.native_threads))),
+        }))
+    }
+
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let universe = AssetUniverse::generate(&tree, spec.size);
+        let p = &spec.params;
+        let w0 = vec![1.0f32 / spec.size as f32; spec.size];
+        let trees = rep_subtrees(&tree, spec.reps);
+        match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let mut backend =
+                    XlaMv::new(engine, &universe, p.samples, p.m_inner)?;
+                trees
+                    .iter()
+                    .map(|sub| {
+                        let (_, trace) = frank_wolfe::run_mv(
+                            &mut backend, w0.clone(), p.iters, sub)?;
+                        Ok(RepRecord::from_fw(trace))
+                    })
+                    .collect()
+            }
+            b => {
+                let mode = native_mode(b, cx.native_threads);
+                parallel_map(spec.reps, cx.native_threads, |r| {
+                    let mut backend = NativeMv::new(
+                        universe.clone(), p.samples, p.m_inner, mode);
+                    frank_wolfe::run_mv(&mut backend, w0.clone(), p.iters,
+                                        &trees[r])
+                        .map(|(_, t)| RepRecord::from_fw(t))
+                })
+                .into_iter()
+                .collect()
+            }
+        }
+    }
+
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let universe = AssetUniverse::generate(&tree, spec.size);
+        let p = &spec.params;
+        let w0 = vec![1.0f32 / spec.size as f32; spec.size];
+        let trees = rep_subtrees(&tree, spec.reps);
+        let traces = match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let mut backend = XlaMvBatch::new(
+                    engine, &universe, p.samples, p.m_inner, spec.reps)?;
+                frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
+                                          &trees)?
+                    .1
+            }
+            _ => {
+                let mut backend = NativeMvBatch::new(
+                    &universe, p.samples, p.m_inner, spec.reps,
+                    cx.native_threads);
+                frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
+                                          &trees)?
+                    .1
+            }
+        };
+        Ok(traces.into_iter().map(RepRecord::from_fw).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 2 — multi-product newsvendor (paper §3.2, Algorithm 2)
+// ---------------------------------------------------------------------------
+
+pub struct NewsvendorTask;
+
+impl SimTask for NewsvendorTask {
+    fn kind(&self) -> TaskKind {
+        TaskKind::Newsvendor
+    }
+
+    fn name(&self) -> &'static str {
+        "newsvendor"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["nv", "news_vendor", "inventory"]
+    }
+
+    fn about(&self) -> &'static str {
+        "§3.2 multi-product newsvendor (Frank-Wolfe + LP LMO, Algorithm 2)"
+    }
+
+    fn default_sizes(&self) -> Vec<usize> {
+        vec![256, 2048, 16384]
+    }
+
+    fn default_params(&self, size: usize) -> TaskParams {
+        TaskParams {
+            size,
+            samples: 32,
+            m_inner: 25,
+            iters: 40,
+            batch: 0,
+            hbatch: 0,
+            memory: 0,
+            l_every: 0,
+            beta: 0.0,
+            resources: 8,
+            tightness: 0.6,
+        }
+    }
+
+    fn default_epochs(&self) -> usize {
+        10
+    }
+
+    fn dims_flag(&self) -> &'static str {
+        "nv"
+    }
+
+    fn validate(&self, spec: &ExperimentSpec) -> Result<()> {
+        ensure_fw_params(spec)
+    }
+
+    fn missing_artifacts(&self, engine: &Engine, spec: &ExperimentSpec)
+        -> Vec<String> {
+        let p = &spec.params;
+        let req = [("d", spec.size as i64), ("s", p.samples as i64)];
+        if engine.manifest.find("nv_grad", &req).is_none() {
+            vec![format!("nv_grad d={} s={}", spec.size, p.samples)]
+        } else {
+            vec![]
+        }
+    }
+
+    fn make_backend(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<TaskBackend> {
+        let tree = StreamTree::new(spec.seed);
+        let inst = NewsvendorInstance::generate(
+            &tree, spec.size, spec.params.resources,
+            spec.params.tightness);
+        let p = &spec.params;
+        Ok(TaskBackend::Gradient(match spec.backend {
+            BackendKind::Xla => {
+                Box::new(XlaNv::new(cx.engine()?, &inst, p.samples)?)
+            }
+            b => Box::new(NativeNv::new(
+                inst, p.samples, native_mode(b, cx.native_threads))),
+        }))
+    }
+
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let inst = NewsvendorInstance::generate(
+            &tree, spec.size, spec.params.resources,
+            spec.params.tightness);
+        let p = &spec.params;
+        let x0 = inst.feasible_start();
+        let trees = rep_subtrees(&tree, spec.reps);
+        match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let mut backend = XlaNv::new(engine, &inst, p.samples)?;
+                trees
+                    .iter()
+                    .map(|sub| {
+                        let mut lmo = NvLmo::new(&inst);
+                        let (_, trace) = frank_wolfe::run_nv(
+                            &mut backend, &mut lmo, x0.clone(), p.iters,
+                            p.m_inner, sub)?;
+                        Ok(RepRecord::from_fw(trace))
+                    })
+                    .collect()
+            }
+            b => {
+                let mode = native_mode(b, cx.native_threads);
+                parallel_map(spec.reps, cx.native_threads, |r| {
+                    let mut backend =
+                        NativeNv::new(inst.clone(), p.samples, mode);
+                    let mut lmo = NvLmo::new(&inst);
+                    frank_wolfe::run_nv(&mut backend, &mut lmo, x0.clone(),
+                                        p.iters, p.m_inner, &trees[r])
+                        .map(|(_, t)| RepRecord::from_fw(t))
+                })
+                .into_iter()
+                .collect()
+            }
+        }
+    }
+
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let inst = NewsvendorInstance::generate(
+            &tree, spec.size, spec.params.resources,
+            spec.params.tightness);
+        let p = &spec.params;
+        let x0 = inst.feasible_start();
+        let trees = rep_subtrees(&tree, spec.reps);
+        let mut lmos: Vec<NvLmo> =
+            (0..spec.reps).map(|_| NvLmo::new(&inst)).collect();
+        let traces = match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let mut backend =
+                    XlaNvBatch::new(engine, &inst, p.samples, spec.reps)?;
+                frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
+                                          p.iters, p.m_inner, &trees)?
+                    .1
+            }
+            _ => {
+                let mut backend = NativeNvBatch::new(
+                    &inst, p.samples, spec.reps, cx.native_threads);
+                frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
+                                          p.iters, p.m_inner, &trees)?
+                    .1
+            }
+        };
+        Ok(traces.into_iter().map(RepRecord::from_fw).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 3 — binary classification via SQN (paper §3.3, Algorithms 3-4)
+// ---------------------------------------------------------------------------
+
+pub struct ClassificationTask;
+
+impl ClassificationTask {
+    fn sqn_config(spec: &ExperimentSpec) -> sqn::SqnConfig {
+        let p = &spec.params;
+        sqn::SqnConfig {
+            iters: p.iters,
+            batch: p.batch,
+            hbatch: p.hbatch,
+            l_every: p.l_every,
+            memory: p.memory,
+            beta: p.beta,
+            track_every: spec.track_every,
+            track_rows: 2048,
+        }
+    }
+}
+
+impl SimTask for ClassificationTask {
+    fn kind(&self) -> TaskKind {
+        TaskKind::Classification
+    }
+
+    fn name(&self) -> &'static str {
+        "classification"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["lr", "logistic"]
+    }
+
+    fn about(&self) -> &'static str {
+        "§3.3 binary classification (SQN, Algorithms 3-4)"
+    }
+
+    fn default_sizes(&self) -> Vec<usize> {
+        vec![64, 256, 1024]
+    }
+
+    fn default_params(&self, size: usize) -> TaskParams {
+        TaskParams {
+            size,
+            samples: 0,
+            m_inner: 0,
+            iters: 400,
+            batch: 64,
+            hbatch: 256,
+            memory: 25,
+            l_every: 10,
+            beta: 2.0,
+            resources: 0,
+            tightness: 1.0,
+        }
+    }
+
+    fn default_epochs(&self) -> usize {
+        200
+    }
+
+    fn dims_flag(&self) -> &'static str {
+        "lr"
+    }
+
+    fn validate(&self, spec: &ExperimentSpec) -> Result<()> {
+        anyhow::ensure!(spec.params.batch > 0, "batch must be positive");
+        anyhow::ensure!(spec.params.hbatch > 0, "hbatch must be positive");
+        anyhow::ensure!(spec.params.l_every > 0, "l_every must be positive");
+        anyhow::ensure!(spec.params.memory > 0, "memory must be positive");
+        Ok(())
+    }
+
+    fn missing_artifacts(&self, engine: &Engine, spec: &ExperimentSpec)
+        -> Vec<String> {
+        let n = spec.size as i64;
+        let mut m = Vec::new();
+        if engine.manifest.find("lr_grad", &[("n", n)]).is_none() {
+            m.push(format!("lr_grad n={}", n));
+        }
+        if engine.manifest.find("lr_hvp", &[("n", n)]).is_none() {
+            m.push(format!("lr_hvp n={}", n));
+        }
+        m
+    }
+
+    fn make_backend(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<TaskBackend> {
+        let p = &spec.params;
+        Ok(TaskBackend::Sqn(match spec.backend {
+            BackendKind::Xla => {
+                let data = ClassifyData::generate(
+                    &StreamTree::new(spec.seed), spec.size);
+                Box::new(XlaLr::new(cx.engine()?, &data, p.batch, p.hbatch,
+                                    p.memory, spec.hessian_mode)?)
+            }
+            b => Box::new(NativeLr::with_dim(
+                spec.size, native_mode(b, cx.native_threads),
+                spec.hessian_mode)),
+        }))
+    }
+
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let data = ClassifyData::generate(&tree, spec.size);
+        let cfg = Self::sqn_config(spec);
+        let trees = rep_subtrees(&tree, spec.reps);
+        match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let p = &spec.params;
+                let mut backend = XlaLr::new(engine, &data, p.batch,
+                                             p.hbatch, p.memory,
+                                             spec.hessian_mode)?;
+                trees
+                    .iter()
+                    .map(|sub| {
+                        let (_, trace) =
+                            sqn::run_sqn(&mut backend, &data, &cfg, sub)?;
+                        Ok(RepRecord::from_sqn(trace))
+                    })
+                    .collect()
+            }
+            b => {
+                let mode = native_mode(b, cx.native_threads);
+                parallel_map(spec.reps, cx.native_threads, |r| {
+                    let mut backend =
+                        NativeLr::new(&data, mode, spec.hessian_mode);
+                    sqn::run_sqn(&mut backend, &data, &cfg, &trees[r])
+                        .map(|(_, t)| RepRecord::from_sqn(t))
+                })
+                .into_iter()
+                .collect()
+            }
+        }
+    }
+
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let data = ClassifyData::generate(&tree, spec.size);
+        let cfg = Self::sqn_config(spec);
+        let trees = rep_subtrees(&tree, spec.reps);
+        let traces = match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let p = &spec.params;
+                let mut backend = XlaLrBatch::new(
+                    engine, &data, p.batch, p.hbatch, p.memory,
+                    spec.hessian_mode, spec.reps)?;
+                sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
+            }
+            _ => {
+                let mut backend = NativeLrBatch::new(
+                    &data, spec.reps, cx.native_threads,
+                    spec.hessian_mode);
+                sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
+            }
+        };
+        Ok(traces.into_iter().map(RepRecord::from_sqn).collect())
+    }
+
+    fn smoke_spec(&self) -> ExperimentSpec {
+        let mut spec = ExperimentSpec::new(self.kind(), BackendKind::Native)
+            .size(16)
+            .replications(2)
+            .seed(7);
+        spec.track_every = 5;
+        spec.params.iters = 30;
+        spec.params.batch = 16;
+        spec.params.hbatch = 32;
+        spec.params.l_every = 5;
+        spec.params.memory = 3;
+        spec
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task 4 — smoothed mean-CVaR portfolio (registry extension, DESIGN.md §12)
+// ---------------------------------------------------------------------------
+
+pub struct MeanCvarTask;
+
+impl SimTask for MeanCvarTask {
+    fn kind(&self) -> TaskKind {
+        TaskKind::MeanCvar
+    }
+
+    fn name(&self) -> &'static str {
+        "mean_cvar"
+    }
+
+    fn aliases(&self) -> &'static [&'static str] {
+        &["cv", "cvar", "mean-cvar"]
+    }
+
+    fn about(&self) -> &'static str {
+        "mean-CVaR portfolio (Rockafellar-Uryasev smoothed CVaR, \
+         Frank-Wolfe; DESIGN.md §12)"
+    }
+
+    fn default_sizes(&self) -> Vec<usize> {
+        vec![128, 512, 2048]
+    }
+
+    fn default_params(&self, size: usize) -> TaskParams {
+        TaskParams {
+            size,
+            samples: 64,
+            m_inner: 25,
+            iters: 40,
+            batch: 0,
+            hbatch: 0,
+            memory: 0,
+            l_every: 0,
+            beta: 0.0,
+            resources: 0,
+            tightness: 1.0,
+        }
+    }
+
+    fn default_epochs(&self) -> usize {
+        10
+    }
+
+    fn dims_flag(&self) -> &'static str {
+        "cv"
+    }
+
+    fn validate(&self, spec: &ExperimentSpec) -> Result<()> {
+        ensure_fw_params(spec)
+    }
+
+    fn missing_artifacts(&self, engine: &Engine, spec: &ExperimentSpec)
+        -> Vec<String> {
+        let p = &spec.params;
+        let req = [("d", spec.size as i64), ("n", p.samples as i64),
+                   ("m", p.m_inner as i64)];
+        if engine.manifest.find("cv_epoch", &req).is_none() {
+            vec![format!("cv_epoch d={} n={} m={}", spec.size, p.samples,
+                         p.m_inner)]
+        } else {
+            vec![]
+        }
+    }
+
+    fn make_backend(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<TaskBackend> {
+        let universe =
+            AssetUniverse::generate(&StreamTree::new(spec.seed), spec.size);
+        let p = &spec.params;
+        Ok(TaskBackend::Epoch(match spec.backend {
+            BackendKind::Xla => Box::new(XlaCvar::new(
+                cx.engine()?, &universe, p.samples, p.m_inner)?),
+            b => Box::new(NativeCvar::new(
+                universe, p.samples, p.m_inner,
+                native_mode(b, cx.native_threads))),
+        }))
+    }
+
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let universe = AssetUniverse::generate(&tree, spec.size);
+        let p = &spec.params;
+        let x0 = cvar::start_iterate(spec.size);
+        let trees = rep_subtrees(&tree, spec.reps);
+        match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let mut backend =
+                    XlaCvar::new(engine, &universe, p.samples, p.m_inner)?;
+                trees
+                    .iter()
+                    .map(|sub| {
+                        let (_, trace) = frank_wolfe::run_mv(
+                            &mut backend, x0.clone(), p.iters, sub)?;
+                        Ok(RepRecord::from_fw(trace))
+                    })
+                    .collect()
+            }
+            b => {
+                let mode = native_mode(b, cx.native_threads);
+                parallel_map(spec.reps, cx.native_threads, |r| {
+                    let mut backend = NativeCvar::new(
+                        universe.clone(), p.samples, p.m_inner, mode);
+                    frank_wolfe::run_mv(&mut backend, x0.clone(), p.iters,
+                                        &trees[r])
+                        .map(|(_, t)| RepRecord::from_fw(t))
+                })
+                .into_iter()
+                .collect()
+            }
+        }
+    }
+
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
+        -> Result<Vec<RepRecord>> {
+        let tree = StreamTree::new(spec.seed);
+        let universe = AssetUniverse::generate(&tree, spec.size);
+        let p = &spec.params;
+        let x0 = cvar::start_iterate(spec.size);
+        let trees = rep_subtrees(&tree, spec.reps);
+        let traces = match spec.backend {
+            BackendKind::Xla => {
+                let engine = cx.engine()?;
+                let mut backend = XlaCvarBatch::new(
+                    engine, &universe, p.samples, p.m_inner, spec.reps)?;
+                frank_wolfe::run_mv_batch(&mut backend, &x0, p.iters,
+                                          &trees)?
+                    .1
+            }
+            _ => {
+                let mut backend = NativeCvarBatch::new(
+                    &universe, p.samples, p.m_inner, spec.reps,
+                    cx.native_threads);
+                frank_wolfe::run_mv_batch(&mut backend, &x0, p.iters,
+                                          &trees)?
+                    .1
+            }
+        };
+        Ok(traces.into_iter().map(RepRecord::from_fw).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn registry_covers_every_task_kind_bijectively() {
+        let kinds = kinds();
+        assert_eq!(kinds.len(), TASKS.len());
+        let unique: HashSet<_> = kinds.iter().collect();
+        assert_eq!(unique.len(), kinds.len(), "duplicate registration");
+        for kind in TaskKind::all() {
+            assert_eq!(get(kind).kind(), kind);
+        }
+    }
+
+    #[test]
+    fn names_and_aliases_are_unique_and_parse_back() {
+        let mut seen = HashSet::new();
+        for task in all() {
+            assert!(seen.insert(task.name()), "name collision: {}",
+                    task.name());
+            assert_eq!(parse(task.name()), Some(task.kind()));
+            for alias in task.aliases() {
+                assert!(seen.insert(alias), "alias collision: {}", alias);
+                assert_eq!(parse(alias), Some(task.kind()),
+                           "alias {} does not parse", alias);
+            }
+            assert!(!task.about().is_empty());
+        }
+        assert_eq!(parse("not-a-task"), None);
+    }
+
+    #[test]
+    fn smoke_specs_validate_and_stay_tiny() {
+        for task in all() {
+            let spec = task.smoke_spec();
+            assert_eq!(spec.task, task.kind());
+            spec.validate().unwrap_or_else(|e| {
+                panic!("{} smoke spec invalid: {:#}", task.name(), e)
+            });
+            assert!(spec.reps >= 2,
+                    "conformance needs ≥2 reps to check stream disjointness");
+            assert!(spec.size <= 64, "{} smoke spec too big", task.name());
+        }
+    }
+
+    #[test]
+    fn default_params_match_default_sizes() {
+        for task in all() {
+            let sizes = task.default_sizes();
+            assert!(!sizes.is_empty());
+            assert!(sizes.windows(2).all(|w| w[0] < w[1]));
+            let p = task.default_params(sizes[0]);
+            assert_eq!(p.size, sizes[0]);
+            assert!(p.iters > 0);
+            assert!(task.default_epochs() > 0);
+            assert!(!task.dims_flag().is_empty());
+        }
+    }
+
+    #[test]
+    fn make_backend_is_a_registry_lookup() {
+        let mut c =
+            Coordinator::new("artifacts", "/tmp/simopt-registry-test")
+                .unwrap();
+        for task in all() {
+            let spec = task.smoke_spec();
+            let backend = task.make_backend(&mut c, &spec).unwrap();
+            match (task.kind(), backend) {
+                (TaskKind::MeanVariance | TaskKind::MeanCvar,
+                 TaskBackend::Epoch(b)) => assert_eq!(b.name(), "native"),
+                (TaskKind::Newsvendor, TaskBackend::Gradient(b)) => {
+                    assert_eq!(b.name(), "native")
+                }
+                (TaskKind::Classification, TaskBackend::Sqn(b)) => {
+                    assert_eq!(b.name(), "native")
+                }
+                (kind, _) => panic!("{} returned wrong backend family",
+                                    kind),
+            }
+        }
+    }
+}

@@ -96,6 +96,19 @@ fn lr_batched_equals_sequential_bitwise() {
 }
 
 #[test]
+fn cvar_batched_equals_sequential_bitwise() {
+    // The fourth scenario registered through the task-registry plane
+    // (DESIGN.md §12) inherits the same bitwise contract with zero changes
+    // to this property.
+    check("cvar batched == sequential", 6, random_cell,
+        |&(seed, size, reps)| {
+            let spec = tiny_spec(TaskKind::MeanCvar, size, reps, seed);
+            identical(&run_mode(&spec, ExecMode::Sequential),
+                      &run_mode(&spec, ExecMode::Batched))
+        });
+}
+
+#[test]
 fn batched_replication_streams_stay_disjoint() {
     // Within one batched run, every replication must follow its own
     // trajectory (pairwise-distinct objective traces), and the run must be
