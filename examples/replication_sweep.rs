@@ -37,8 +37,13 @@ fn main() -> anyhow::Result<()> {
          worker threads\n",
         reps, epochs, coord.native_threads
     );
-    println!("{:>6} {:>14} {:>14} {:>9}  bit-identical?",
-             "size", "sequential", "batched", "speedup");
+    let shards = (reps / 2).max(1);
+    // both ratios are vs the sequential protocol: sharding is a dispatch-
+    // granularity knob, so its ratio shows the scheduling cost/benefit of
+    // S shard workers rather than one monolithic panel
+    println!("{:>6} {:>14} {:>14} {:>14} {:>9} {:>9}  bit-identical?",
+             "size", "sequential", "batched",
+             format!("sharded(S={})", shards), "seq/bat", "seq/shd");
 
     for &size in &sizes {
         let base = ExperimentSpec::new(TaskKind::Newsvendor,
@@ -53,23 +58,27 @@ fn main() -> anyhow::Result<()> {
         let seq = coord.run(&base.clone().execution(ExecMode::Sequential))?;
         let t_seq = t0.elapsed().as_secs_f64();
         let t0 = std::time::Instant::now();
-        let bat = coord.run(&base.clone().execution(ExecMode::Batched))?;
+        let bat = coord
+            .run(&base.clone().execution(ExecMode::Batched { shards: 1 }))?;
         let t_bat = t0.elapsed().as_secs_f64();
+        let t0 = std::time::Instant::now();
+        let shd = coord.run(&base.clone().sharded(shards))?;
+        let t_shd = t0.elapsed().as_secs_f64();
 
-        let identical = seq
-            .reps
-            .iter()
-            .zip(&bat.reps)
-            .all(|(a, b)| a.objs == b.objs);
+        let identical = seq.reps.iter().zip(&bat.reps).zip(&shd.reps).all(
+            |((a, b), c)| a.objs == b.objs && a.objs == c.objs);
         println!(
-            "{:>6} {:>13.4}s {:>13.4}s {:>8.2}×  {}",
+            "{:>6} {:>13.4}s {:>13.4}s {:>13.4}s {:>8.2}× {:>8.2}×  {}",
             size,
             t_seq,
             t_bat,
+            t_shd,
             t_seq / t_bat.max(1e-12),
+            t_seq / t_shd.max(1e-12),
             if identical { "yes" } else { "NO (bug!)" }
         );
-        assert!(identical, "batched and sequential runs must agree bitwise");
+        assert!(identical,
+                "batched, sharded, and sequential runs must agree bitwise");
     }
 
     println!(

@@ -9,6 +9,10 @@ reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
 Usage (from python/):  python -m compile.aot --out ../artifacts [--full]
                        [--entries mv_epoch,nv_grad] [--paper-batches]
                        [--reps R]   # + replication-batched artifacts (§11)
+                       [--shards S] # + shard-sized [R/S × …] batch
+                                    #   artifacts for `--exec batch
+                                    #   --shards S` runs (DESIGN.md §13;
+                                    #   S must divide R)
                        [--list]     # dry-run: print the spec table only
 """
 
@@ -109,11 +113,17 @@ def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
                 lr_mem=25, reps=0):
     """The full artifact table.  Dimension lists come from the CLI; batch
     and inner-loop parameters mirror the paper's §4.1 settings (modulo the
-    tile-friendly rounding documented in DESIGN.md §10).  `reps > 0` adds
-    the replication-batched entries (DESIGN.md §11): vmap lowerings that
-    advance all `reps` replications in one dispatch.  `cv_dims` adds the
-    mean-CVaR task registered through the task-registry plane (DESIGN.md
-    §12); it shares the mv panel shape knobs (same asset universe)."""
+    tile-friendly rounding documented in DESIGN.md §10).  `reps` adds the
+    replication-batched entries (DESIGN.md §11): vmap lowerings that
+    advance that many replications in one dispatch — an int for one batch
+    size, or a sequence of ints for several (the shard plane, DESIGN.md
+    §13, wants both the full-R panel and the `R/S` shard size; 0 = skip).
+    `cv_dims` adds the mean-CVaR task registered through the task-registry
+    plane (DESIGN.md §12); it shares the mv panel shape knobs (same asset
+    universe)."""
+    if isinstance(reps, int):
+        reps = [reps]
+    rep_counts = sorted({int(r) for r in reps if int(r) > 0})
     specs = []
 
     for d in mv_dims:
@@ -126,16 +136,16 @@ def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
              ("key", (2,), U32), ("k_epoch", (), I32)],
             [("w_out", (d,), F32), ("obj", (), F32)],
             "mean_variance"))
-        if reps > 0:
+        for rr in rep_counts:
             specs.append(Spec(
                 "mv_epoch_batch",
                 functools.partial(model.mv_epoch_batch, n_samples=n,
                                   m_inner=m),
-                {"d": d, "n": n, "m": m, "r": reps},
-                [("w", (reps, d), F32), ("mu", (d,), F32),
-                 ("sigma", (d,), F32), ("keys", (reps, 2), U32),
+                {"d": d, "n": n, "m": m, "r": rr},
+                [("w", (rr, d), F32), ("mu", (d,), F32),
+                 ("sigma", (d,), F32), ("keys", (rr, 2), U32),
                  ("k_epoch", (), I32)],
-                [("w_out", (reps, d), F32), ("obj", (reps,), F32)],
+                [("w_out", (rr, d), F32), ("obj", (rr,), F32)],
                 "mean_variance"))
 
     # per-iteration dispatch ablation (A1): one mid-size variant
@@ -162,16 +172,16 @@ def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
              ("key", (2,), U32), ("k_epoch", (), I32)],
             [("x_out", (d + 1,), F32), ("obj", (), F32)],
             "mean_cvar"))
-        if reps > 0:
+        for rr in rep_counts:
             specs.append(Spec(
                 "cv_epoch_batch",
                 functools.partial(model.cv_epoch_batch, n_samples=n,
                                   m_inner=m),
-                {"d": d, "n": n, "m": m, "r": reps},
-                [("x", (reps, d + 1), F32), ("mu", (d,), F32),
-                 ("sigma", (d,), F32), ("keys", (reps, 2), U32),
+                {"d": d, "n": n, "m": m, "r": rr},
+                [("x", (rr, d + 1), F32), ("mu", (d,), F32),
+                 ("sigma", (d,), F32), ("keys", (rr, 2), U32),
                  ("k_epoch", (), I32)],
-                [("x_out", (reps, d + 1), F32), ("obj", (reps,), F32)],
+                [("x_out", (rr, d + 1), F32), ("obj", (rr,), F32)],
                 "mean_cvar"))
 
     for d in nv_dims:
@@ -185,23 +195,23 @@ def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
              ("key", (2,), U32)],
             [("grad", (d,), F32), ("obj", (), F32)],
             "newsvendor"))
-        if reps > 0:
+        for rr in rep_counts:
             # device-resident batched epoch path: one panel dispatch per
             # epoch, one resident-gradient dispatch per inner iteration
             specs.append(Spec(
                 "nv_panel_batch",
                 functools.partial(model.nv_panel_batch, n_samples=s),
-                {"d": d, "s": s, "r": reps},
+                {"d": d, "s": s, "r": rr},
                 [("mu", (d,), F32), ("sigma", (d,), F32),
-                 ("keys", (reps, 2), U32)],
-                [("panel", (reps, s, d), F32)],
+                 ("keys", (rr, 2), U32)],
+                [("panel", (rr, s, d), F32)],
                 "newsvendor"))
             specs.append(Spec(
                 "nv_grad_panel_batch", model.nv_grad_panel_batch,
-                {"d": d, "s": s, "r": reps},
-                [("x", (reps, d), F32), ("panel", (reps, s, d), F32),
+                {"d": d, "s": s, "r": rr},
+                [("x", (rr, d), F32), ("panel", (rr, s, d), F32),
                  ("kc", (d,), F32), ("h", (d,), F32), ("v", (d,), F32)],
-                [("grad", (reps, d), F32), ("obj", (reps,), F32)],
+                [("grad", (rr, d), F32), ("obj", (rr,), F32)],
                 "newsvendor"))
         # device-resident epoch path (§Perf): sample the panel once per
         # epoch, keep it on device, evaluate gradients against the buffer
@@ -246,20 +256,20 @@ def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
              ("idx", (bh,), I32)],
             [("y", (n,), F32)],
             "classification"))
-        if reps > 0:
+        for rr in rep_counts:
             specs.append(Spec(
                 "lr_grad_batch", model.lr_grad_batch,
-                {"n": n, "b": b, "rows": rows, "r": reps},
-                [("w", (reps, n), F32), ("x_full", (rows, n), F32),
-                 ("z_full", (rows,), F32), ("idx", (reps, b), I32)],
-                [("grad", (reps, n), F32), ("loss", (reps,), F32)],
+                {"n": n, "b": b, "rows": rows, "r": rr},
+                [("w", (rr, n), F32), ("x_full", (rows, n), F32),
+                 ("z_full", (rows,), F32), ("idx", (rr, b), I32)],
+                [("grad", (rr, n), F32), ("loss", (rr,), F32)],
                 "classification"))
             specs.append(Spec(
                 "lr_hvp_batch", model.lr_hvp_batch,
-                {"n": n, "bh": bh, "rows": rows, "r": reps},
-                [("wbar", (reps, n), F32), ("s", (reps, n), F32),
-                 ("x_full", (rows, n), F32), ("idx", (reps, bh), I32)],
-                [("y", (reps, n), F32)],
+                {"n": n, "bh": bh, "rows": rows, "r": rr},
+                [("wbar", (rr, n), F32), ("s", (rr, n), F32),
+                 ("x_full", (rows, n), F32), ("idx", (rr, bh), I32)],
+                [("y", (rr, n), F32)],
                 "classification"))
             # padded batched Algorithm-4 directions (DESIGN.md §11): the
             # driver's dense [R × mem × n] correction panels + per-row
@@ -267,19 +277,19 @@ def build_specs(mv_dims, nv_dims, lr_dims, cv_dims=(), *, mv_samples=64,
             # the last per-replication call of the batched SQN spine
             specs.append(Spec(
                 "lr_dir_batch", model.lr_dir_batch,
-                {"n": n, "mem": mem, "r": reps},
-                [("s_mem", (reps, mem, n), F32),
-                 ("y_mem", (reps, mem, n), F32),
-                 ("m_count", (reps,), I32), ("g", (reps, n), F32)],
-                [("d", (reps, n), F32)],
+                {"n": n, "mem": mem, "r": rr},
+                [("s_mem", (rr, mem, n), F32),
+                 ("y_mem", (rr, mem, n), F32),
+                 ("m_count", (rr,), I32), ("g", (rr, n), F32)],
+                [("d", (rr, n), F32)],
                 "classification"))
             specs.append(Spec(
                 "lr_dir_twoloop_batch", model.lr_dir_twoloop_batch,
-                {"n": n, "mem": mem, "r": reps},
-                [("s_mem", (reps, mem, n), F32),
-                 ("y_mem", (reps, mem, n), F32),
-                 ("m_count", (reps,), I32), ("g", (reps, n), F32)],
-                [("d", (reps, n), F32)],
+                {"n": n, "mem": mem, "r": rr},
+                [("s_mem", (rr, mem, n), F32),
+                 ("y_mem", (rr, mem, n), F32),
+                 ("m_count", (rr,), I32), ("g", (rr, n), F32)],
+                [("d", (rr, n), F32)],
                 "classification"))
         specs.append(Spec(
             "lr_hbuild", model.lr_hbuild, {"n": n, "mem": mem},
@@ -331,6 +341,12 @@ def main():
                     help="also emit replication-batched artifacts that "
                          "advance this many replications per dispatch "
                          "(DESIGN.md §11; 0 = skip)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="also emit shard-sized batch artifacts with "
+                         "reps/shards rows per dispatch, for `--exec "
+                         "batch --shards S` runs on the XLA arm "
+                         "(DESIGN.md §13; requires --reps and must "
+                         "divide it)")
     ap.add_argument("--list", action="store_true",
                     help="dry-run: trace-validate every spec against its "
                          "model entry point (jax tracing only — no XLA "
@@ -344,7 +360,20 @@ def main():
             return [int(x) for x in flag.split(",") if x]
         return full if args.full else default
 
-    kw = {"reps": args.reps}
+    rep_counts = [args.reps] if args.reps > 0 else []
+    if args.shards < 1:
+        ap.error(f"--shards must be >= 1 (got {args.shards})")
+    if args.shards > 1:
+        if args.reps <= 0:
+            ap.error("--shards requires --reps")
+        if args.reps % args.shards:
+            ap.error(f"--shards ({args.shards}) must divide --reps "
+                     f"({args.reps}) — the shard plane splits R into "
+                     f"equal [R/S × …] dispatches")
+        per_shard = args.reps // args.shards
+        if per_shard not in rep_counts:
+            rep_counts.append(per_shard)
+    kw = {"reps": rep_counts}
     if args.paper_batches:
         kw.update(lr_batch=50, lr_hbatch=300)
     specs = build_specs(dims(args.mv_dims, DEFAULT_MV, FULL_MV),

@@ -39,6 +39,30 @@ def test_reps_adds_batched_entries():
         assert batched in entries, batched
 
 
+def test_reps_list_adds_shard_sized_entries():
+    # The shard plane (DESIGN.md §13): `--reps R --shards S` emits every
+    # batched entry at BOTH the full-R panel size and the R/S shard size,
+    # deduplicated and with unique names.
+    specs = aot.build_specs([32], [64], [16], [32], mv_samples=8,
+                            mv_inner=3, nv_samples=8, lr_batch=8,
+                            lr_hbatch=16, lr_mem=4, reps=[6, 2, 6])
+    for batched in ("mv_epoch_batch", "cv_epoch_batch", "nv_panel_batch",
+                    "nv_grad_panel_batch", "lr_grad_batch", "lr_hvp_batch",
+                    "lr_dir_batch", "lr_dir_twoloop_batch"):
+        sizes = [s.params["r"] for s in specs if s.entry == batched]
+        assert sizes == [2, 6], (batched, sizes)
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+    # the shard-sized mv panel advances 2 rows per dispatch
+    shard = next(s for s in specs
+                 if s.entry == "mv_epoch_batch" and s.params["r"] == 2)
+    assert shard.inputs[0][1] == (2, 32)
+    shard.validate()
+    # an empty list (or 0) skips the batched entries entirely
+    none = aot.build_specs([32], [], [], mv_samples=8, mv_inner=3, reps=[])
+    assert all(s.entry != "mv_epoch_batch" for s in none)
+
+
 def test_cv_epoch_spec_has_joint_iterate():
     spec = next(s for s in _specs_small() if s.entry == "cv_epoch")
     # iterate and output are [w, t] of length d+1

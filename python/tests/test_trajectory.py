@@ -111,3 +111,35 @@ def test_rerun_of_same_commit_supersedes(tmp_path):
     _write(tmp_path, "BENCH_2.json", "bs", "aaa", 2, {"case": 1.0})
     series = tj.series_by_case(tj.load_runs(tj.find_files([tmp_path])))
     assert series[("bs", "case", True)] == [("aaa", 1.0)]
+
+
+def test_merged_history_dirs_order_by_ci_run(tmp_path):
+    # The CI bench-trajectory job folds each run's artifacts into a
+    # per-run-id subdirectory of one cached history tree.  Run-id dir
+    # names sort lexically ("10" < "9"), so the rglob file order is NOT
+    # the run order — the series must still come out ordered by ci_run.
+    (tmp_path / "9").mkdir()
+    (tmp_path / "10").mkdir()
+    _write(tmp_path / "9", "BENCH_bs.json", "bs", "old", 9, {"case": 1.0})
+    _write(tmp_path / "10", "BENCH_bs.json", "bs", "new", 10, {"case": 2.0})
+    files = tj.find_files([tmp_path])
+    # lexical path order really is inverted — the precondition this test
+    # exists to pin
+    assert [f.parent.name for f in files] == ["10", "9"]
+    runs = tj.load_runs(files)
+    assert [r["commit"] for r in runs] == ["old", "new"]
+    series = tj.series_by_case(runs)
+    assert series[("bs", "case", True)] == [("old", 1.0), ("new", 2.0)]
+
+
+def test_merged_history_gates_on_the_newest_run(tmp_path):
+    # End-to-end over a merged history tree: three healthy runs then a
+    # regressed newest run in a lexically-early directory must exit 1.
+    for run, mean in ((3, 1.0), (4, 1.02), (5, 0.98)):
+        d = tmp_path / str(run)
+        d.mkdir()
+        _write(d, "BENCH_bs.json", "bs", f"c{run}", run, {"case": mean})
+    d = tmp_path / "12"  # sorts before "3" lexically, newest by run id
+    d.mkdir()
+    _write(d, "BENCH_bs.json", "bs", "c12", 12, {"case": 5.0})
+    assert tj.main([str(tmp_path)]) == 1

@@ -1,0 +1,143 @@
+//! Shard-aware panel plane throughput (DESIGN.md §13): the batched
+//! replication engine's `[R × n]` spine split into S contiguous shards.
+//!
+//! For each shard count S ∈ {1, 2, R} (S = 2 is an uneven split whenever
+//! R is odd), R replications of the mean-variance task and of the
+//! classification (SQN) task advance through `ShardedBatch` — the same
+//! drivers, the same per-row arithmetic, only dispatch granularity moves.
+//! Every cell's final panel is asserted bit-identical to the unsharded
+//! S = 1 run, so the numbers are pure scheduling: shard-level pool
+//! workers vs one monolithic panel.
+//!
+//! Knobs: SIMOPT_BENCH_SIZES, SIMOPT_BENCH_REPS (= R),
+//! SIMOPT_BENCH_EPOCHS, SIMOPT_BENCH_LR_SIZE, SIMOPT_BENCH_SQN_ITERS.
+
+mod common;
+
+use simopt::backend::native::{NativeLrBatch, NativeMvBatch};
+use simopt::backend::plane::{self, ShardedBatch};
+use simopt::bench::Bench;
+use simopt::coordinator::rep_subtrees;
+use simopt::opt::{run_mv_batch, run_sqn_batch, SqnConfig};
+use simopt::rng::StreamTree;
+use simopt::sim::{AssetUniverse, ClassifyData};
+
+fn main() {
+    let smoke = common::smoke();
+    let sizes = if smoke {
+        vec![48]
+    } else {
+        common::env_sizes(vec![256, 1024])
+    };
+    let r_reps =
+        if smoke { 5 } else { common::env_usize("SIMOPT_BENCH_REPS", 8) };
+    let epochs =
+        if smoke { 2 } else { common::env_usize("SIMOPT_BENCH_EPOCHS", 6) };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let shard_counts: Vec<usize> = {
+        let mut s = vec![1usize];
+        if r_reps >= 2 {
+            s.push(2);
+        }
+        if r_reps > 2 {
+            s.push(r_reps);
+        }
+        s
+    };
+    let (n_samples, m_inner) = (64usize, 10usize);
+
+    println!(
+        "shard_sweep: R={} replications, S ∈ {:?}, {} epochs, {} threads\n",
+        r_reps, shard_counts, epochs, threads
+    );
+    let mut bench = Bench::new("shard_sweep")
+        .warmup(if smoke { 0 } else { 1 })
+        .reps(if smoke { 1 } else { 3 });
+
+    // ---- mean-variance through the sharded plane ------------------------
+    for &d in &sizes {
+        let tree = StreamTree::new(42);
+        let trees: Vec<StreamTree> = rep_subtrees(&tree, r_reps);
+        let universe = AssetUniverse::generate(&tree, d);
+        let w0 = vec![1.0f32 / d as f32; d];
+
+        let mut baseline: Option<Vec<f32>> = None;
+        for &shards in &shard_counts {
+            let mut panel: Vec<f32> = Vec::new();
+            bench.case(&format!("mv_d{}_R{}_S{}", d, r_reps, shards), || {
+                let mut backend = ShardedBatch::pooled(
+                    r_reps, shards, d, threads, |rows| {
+                        Ok(NativeMvBatch::new(
+                            &universe, n_samples, m_inner, rows.len(),
+                            plane::inner_threads(threads, shards)))
+                    })
+                    .unwrap();
+                let (w, _) =
+                    run_mv_batch(&mut backend, &w0, epochs, &trees).unwrap();
+                panel = w;
+            });
+            if let Some(b) = &baseline {
+                assert_eq!(&panel, b,
+                           "mv d={} S={}: sharded != unsharded", d, shards);
+            } else {
+                baseline = Some(panel);
+            }
+        }
+        println!("mv d={}: all shard counts bit-identical", d);
+    }
+
+    // ---- classification SQN through the sharded plane -------------------
+    let n = if smoke { 24 } else { common::env_usize("SIMOPT_BENCH_LR_SIZE", 64) };
+    let sqn_cfg = SqnConfig {
+        iters: if smoke {
+            12
+        } else {
+            common::env_usize("SIMOPT_BENCH_SQN_ITERS", 60)
+        },
+        batch: 32,
+        hbatch: 64,
+        l_every: 5,
+        memory: 8,
+        beta: 2.0,
+        track_every: 0, // timing cells: no tracked-loss evaluations
+        track_rows: 0,
+    };
+    let tree = StreamTree::new(43);
+    let trees: Vec<StreamTree> = rep_subtrees(&tree, r_reps);
+    let data = ClassifyData::generate(&tree, n);
+    let mut baseline: Option<Vec<f32>> = None;
+    for &shards in &shard_counts {
+        let mut panel: Vec<f32> = Vec::new();
+        bench.case(&format!("sqn_n{}_R{}_S{}", n, r_reps, shards), || {
+            let mut backend = ShardedBatch::pooled(
+                r_reps, shards, n, threads, |rows| {
+                    Ok(NativeLrBatch::new(
+                        &data, rows.len(),
+                        plane::inner_threads(threads, shards),
+                        simopt::backend::HessianMode::Explicit))
+                })
+                .unwrap();
+            let (w, _) =
+                run_sqn_batch(&mut backend, &data, &sqn_cfg, &trees).unwrap();
+            panel = w;
+        });
+        if let Some(b) = &baseline {
+            assert_eq!(&panel, b,
+                       "sqn n={} S={}: sharded != unsharded", n, shards);
+        } else {
+            baseline = Some(panel);
+        }
+    }
+    println!("sqn n={}: all shard counts bit-identical\n", n);
+
+    bench.finish();
+    println!(
+        "\n(Sharding moves dispatch granularity only: S shard workers × \
+         {} inner rows each replace one monolithic panel.  On the XLA arm \
+         the same seam becomes one [R/S × …] artifact dispatch per shard — \
+         the multi-device mapping point, DESIGN.md §13.)",
+        r_reps.div_ceil(shard_counts.last().copied().unwrap_or(1))
+    );
+}

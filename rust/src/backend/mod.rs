@@ -12,11 +12,12 @@
 //!   "GPU-style" arm).
 
 pub mod native;
+pub mod plane;
 pub mod xla;
 
 use anyhow::Result;
 
-use crate::tasks::CorrectionMemory;
+use crate::tasks::{BatchMemView, CorrectionMemory};
 
 /// Task 1: one full Algorithm-1 epoch (resample + `m_inner` FW steps).
 ///
@@ -145,17 +146,19 @@ pub trait LrBatchBackend {
                  data: &crate::sim::ClassifyData, idx: &[Vec<usize>],
                  y: &mut [f32]) -> Result<()>;
 
-    /// H_t·g (Algorithm 4) for ALL replications in one call, over the
-    /// dense padded `[R × mem × n]` correction panels of a
-    /// [`BatchCorrectionMemory`](crate::tasks::BatchCorrectionMemory) —
-    /// the last per-replication dispatch of the batched SQN spine, closed
-    /// (DESIGN.md §11).  Row r of `out` must be bit-identical to the
-    /// ragged path's `direction(&mems[r], &g[r·n..])`; rows with
-    /// `mem.count(r) == 0` need not be written (the driver takes the plain
-    /// gradient step for them, as the sequential path does before the
-    /// memory fills) but MAY be — an empty memory's H is the identity, so
-    /// d = g bitwise either way.
-    fn direction_batch(&mut self,
-                       mem: &crate::tasks::BatchCorrectionMemory,
-                       g: &[f32], out: &mut [f32]) -> Result<()>;
+    /// H_t·g (Algorithm 4) for ALL replications in one call, over a
+    /// borrowed [`BatchMemView`] of the driver's dense padded
+    /// `[R × mem × n]` correction panels — the last per-replication
+    /// dispatch of the batched SQN spine, closed (DESIGN.md §11).  Taking
+    /// a *view* rather than the owning
+    /// [`BatchCorrectionMemory`](crate::tasks::BatchCorrectionMemory) is
+    /// what lets the shard plane hand each shard its contiguous row
+    /// window with zero copies (DESIGN.md §13).  Row r of `out` must be
+    /// bit-identical to the ragged path's `direction(&mems[r], &g[r·n..])`;
+    /// rows with `mem.count(r) == 0` need not be written (the driver takes
+    /// the plain gradient step for them, as the sequential path does
+    /// before the memory fills) but MAY be — an empty memory's H is the
+    /// identity, so d = g bitwise either way.
+    fn direction_batch(&mut self, mem: BatchMemView<'_>, g: &[f32],
+                       out: &mut [f32]) -> Result<()>;
 }

@@ -16,7 +16,7 @@ use crate::tasks::classification as lr;
 use crate::tasks::cvar as cv;
 use crate::tasks::mean_variance as mv;
 use crate::tasks::newsvendor as nv;
-use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
+use crate::tasks::{BatchMemView, CorrectionMemory};
 use crate::util::pool::parallel_map_chunks;
 
 use super::{
@@ -776,7 +776,7 @@ impl LrBatchBackend for NativeLrBatch {
         Ok(())
     }
 
-    fn direction_batch(&mut self, mem: &BatchCorrectionMemory, g: &[f32],
+    fn direction_batch(&mut self, mem: BatchMemView<'_>, g: &[f32],
                        out: &mut [f32]) -> Result<()> {
         let (r, n) = (self.reps.len(), self.n);
         anyhow::ensure!(mem.reps() == r && mem.dim() == n,
@@ -839,6 +839,7 @@ impl LrBatchBackend for NativeLrBatch {
 mod tests {
     use super::*;
     use crate::rng::StreamTree;
+    use crate::tasks::BatchCorrectionMemory;
 
     #[test]
     fn mv_epoch_feasible_and_deterministic() {
@@ -1093,7 +1094,7 @@ mod tests {
             mems.push(mem);
         }
         let mut dirs = vec![0.0f32; r * n];
-        batch.direction_batch(&batch_mem, &g, &mut dirs).unwrap();
+        batch.direction_batch(batch_mem.view(), &g, &mut dirs).unwrap();
         for i in 0..r {
             if !batch_mem.is_active(i) {
                 continue;

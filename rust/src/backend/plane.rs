@@ -1,0 +1,726 @@
+//! The shard-aware panel execution plane (DESIGN.md §13).
+//!
+//! PR 1–3 fused the replication axis into ONE monolithic `[R × n]` panel
+//! driven through one batch backend — which caps R at what a single
+//! dispatch or thread pool can hold, and leaves no seam for multi-device
+//! or multi-client execution.  This module splits that spine without
+//! touching the math: a [`ShardMap`] partitions the R replication rows
+//! into S *contiguous* shards, [`Panel`]/[`PanelMut`] views slice every
+//! `[R × n]` buffer along that partition with zero copies, and
+//! [`ShardedBatch`] wraps one inner batch backend per shard behind the
+//! SAME `*BatchBackend` traits the drivers already consume — so
+//! `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}` are shard-agnostic
+//! and no task owns sharding code.
+//!
+//! The refactor invariant: shard boundaries must not change per-row
+//! arithmetic.  Every row keeps its own `StreamTree` subtree and runs the
+//! same operations in the same order whatever S is, so `S = s` is
+//! bit-identical to `S = 1` is bit-identical to sequential on the native
+//! arm (`tests/batch_determinism.rs` enforces this for every registered
+//! task, including `R % S ≠ 0` and `S = R`).  Only buffer ownership and
+//! dispatch granularity move.
+//!
+//! Two [`ShardPolicy`] arms mirror the backend axis:
+//! * [`Pooled`] (native) — shards advance concurrently on
+//!   `util::pool` scoped workers, one worker per shard chunk;
+//! * [`Serial`] (XLA) — shards advance in order on the caller's thread,
+//!   one artifact dispatch per shard sized `[R/S × …]`, so a future
+//!   multi-device PJRT build maps shard → device with no driver change.
+
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::tasks::BatchMemView;
+use crate::util::pool::parallel_map_chunks;
+
+use super::{LrBatchBackend, MvBatchBackend, NvBatchBackend};
+
+// ---------------------------------------------------------------------------
+// ShardMap: the one partition everything slices by
+// ---------------------------------------------------------------------------
+
+/// Balanced contiguous partition of `reps` replication rows into `shards`
+/// ranges: the first `reps % shards` shards carry one extra row, so sizes
+/// differ by at most one and concatenating the ranges in order recovers
+/// `0..reps` exactly.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    reps: usize,
+    ranges: Vec<Range<usize>>,
+}
+
+impl ShardMap {
+    pub fn new(reps: usize, shards: usize) -> Result<Self> {
+        anyhow::ensure!(reps > 0, "reps must be positive");
+        anyhow::ensure!(shards > 0, "shards must be positive");
+        anyhow::ensure!(shards <= reps,
+                        "shards ({}) must not exceed replications ({})",
+                        shards, reps);
+        let base = reps / shards;
+        let extra = reps % shards;
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0;
+        for i in 0..shards {
+            let len = base + usize::from(i < extra);
+            ranges.push(start..start + len);
+            start += len;
+        }
+        debug_assert_eq!(start, reps);
+        Ok(ShardMap { reps, ranges })
+    }
+
+    pub fn reps(&self) -> usize {
+        self.reps
+    }
+
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn ranges(&self) -> &[Range<usize>] {
+        &self.ranges
+    }
+}
+
+/// Worker budget for one shard's inner backend.  The unsharded plan
+/// (S = 1) keeps the whole budget — exactly the pre-shard engine; sharded
+/// plans split it across shards so outer shard workers and inner row
+/// chunks don't oversubscribe the machine.  Thread count never affects
+/// per-row arithmetic (chunking only changes scheduling), so this is a
+/// pure scheduling knob.
+pub fn inner_threads(total: usize, shards: usize) -> usize {
+    (total / shards.max(1)).max(1)
+}
+
+// ---------------------------------------------------------------------------
+// Panel views: [rows × width] with shard slicing
+// ---------------------------------------------------------------------------
+
+/// Shared row-major `[rows × width]` view over a flat buffer — the shape
+/// every batched iterate/gradient/key buffer in this repo has (row r =
+/// replication r).
+#[derive(Debug, Clone, Copy)]
+pub struct Panel<'a, T> {
+    data: &'a [T],
+    rows: usize,
+    width: usize,
+}
+
+impl<'a, T> Panel<'a, T> {
+    pub fn new(data: &'a [T], rows: usize, width: usize) -> Self {
+        assert_eq!(data.len(), rows * width, "panel is not [rows × width]");
+        Panel { data, rows, width }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn row(&self, r: usize) -> &'a [T] {
+        assert!(r < self.rows);
+        &self.data[r * self.width..(r + 1) * self.width]
+    }
+
+    pub fn as_slice(&self) -> &'a [T] {
+        self.data
+    }
+
+    /// One sub-panel per shard, in shard order (zero-copy: contiguous row
+    /// ranges are contiguous slices of a row-major buffer).
+    pub fn split_shards(self, map: &ShardMap) -> Vec<Panel<'a, T>> {
+        assert_eq!(self.rows, map.reps(), "panel rows != shard map reps");
+        map.ranges()
+            .iter()
+            .map(|range| Panel {
+                data: &self.data[range.start * self.width
+                    ..range.end * self.width],
+                rows: range.len(),
+                width: self.width,
+            })
+            .collect()
+    }
+}
+
+/// Mutable row-major `[rows × width]` view with the same shard slicing;
+/// [`Self::split_shards`] hands every shard its own disjoint `&mut`
+/// sub-panel, which is what lets the [`Pooled`] policy advance shards
+/// concurrently without aliasing.
+#[derive(Debug)]
+pub struct PanelMut<'a, T> {
+    data: &'a mut [T],
+    rows: usize,
+    width: usize,
+}
+
+impl<'a, T> PanelMut<'a, T> {
+    pub fn new(data: &'a mut [T], rows: usize, width: usize) -> Self {
+        assert_eq!(data.len(), rows * width, "panel is not [rows × width]");
+        PanelMut { data, rows, width }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [T] {
+        assert!(r < self.rows);
+        &mut self.data[r * self.width..(r + 1) * self.width]
+    }
+
+    pub fn into_inner(self) -> &'a mut [T] {
+        self.data
+    }
+
+    /// Disjoint mutable sub-panels, one per shard, in shard order.
+    pub fn split_shards(self, map: &ShardMap) -> Vec<PanelMut<'a, T>> {
+        assert_eq!(self.rows, map.reps(), "panel rows != shard map reps");
+        let width = self.width;
+        let mut rest = self.data;
+        let mut out = Vec::with_capacity(map.shards());
+        for range in map.ranges() {
+            let (head, tail) = rest.split_at_mut(range.len() * width);
+            out.push(PanelMut { data: head, rows: range.len(), width });
+            rest = tail;
+        }
+        debug_assert!(rest.is_empty());
+        out
+    }
+}
+
+/// Tile one start iterate into a fresh `[rows × width]` panel buffer (the
+/// generic panel loop's tiling step, `opt::panel::run_panel`).
+pub fn tile_rows(x0: &[f32], rows: usize) -> Vec<f32> {
+    let mut panel = Vec::with_capacity(rows * x0.len());
+    for _ in 0..rows {
+        panel.extend_from_slice(x0);
+    }
+    panel
+}
+
+// ---------------------------------------------------------------------------
+// Shards and dispatch policies
+// ---------------------------------------------------------------------------
+
+/// One shard: an inner batch backend owning a contiguous replication-row
+/// range of the experiment panel.
+pub struct Shard<B> {
+    pub backend: B,
+    pub rows: Range<usize>,
+}
+
+/// How [`ShardedBatch`] advances its shards each step.  The policy is a
+/// zero-sized type parameter so the `Send` requirement of concurrent
+/// dispatch exists only where concurrency does: [`Pooled`] demands
+/// `B: Send`, [`Serial`] works for single-thread-affine backends (the
+/// PJRT handles inside the XLA arms are deliberately not `Send`).
+pub trait ShardPolicy<B> {
+    /// Apply `f` to every (shard, per-shard context) pair.  Contexts are
+    /// produced by pre-splitting panels along the shard map, so shards
+    /// never alias; the first error wins.
+    fn for_each<C, F>(shards: &mut [Shard<B>], threads: usize, ctxs: Vec<C>,
+                      f: F) -> Result<()>
+    where
+        C: Send,
+        F: Fn(&mut Shard<B>, C) -> Result<()> + Sync;
+}
+
+/// Native arm: shards advance concurrently on `util::pool` scoped workers
+/// (contiguous shard chunks per worker, mirroring the row-chunk discipline
+/// of the inner batch backends).  Concurrency never touches per-row
+/// arithmetic — each shard's rows are advanced by its own inner backend
+/// exactly as in the unsharded plan.
+pub struct Pooled;
+
+impl<B: Send> ShardPolicy<B> for Pooled {
+    fn for_each<C, F>(shards: &mut [Shard<B>], threads: usize, ctxs: Vec<C>,
+                      f: F) -> Result<()>
+    where
+        C: Send,
+        F: Fn(&mut Shard<B>, C) -> Result<()> + Sync,
+    {
+        assert_eq!(shards.len(), ctxs.len());
+        // The Mutex exists only to hand the shared closure `&mut` access
+        // to its own shard; chunks are disjoint, so locks are never
+        // contended (same pattern as the native batch backends).
+        let jobs: Vec<Mutex<Option<(&mut Shard<B>, C)>>> = shards
+            .iter_mut()
+            .zip(ctxs)
+            .map(|pair| Mutex::new(Some(pair)))
+            .collect();
+        let parts = parallel_map_chunks(jobs.len(), threads, |range| {
+            for i in range {
+                let (shard, ctx) = jobs[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("each shard job is taken exactly once");
+                f(shard, ctx)?;
+            }
+            Ok(())
+        });
+        for part in parts {
+            part?;
+        }
+        Ok(())
+    }
+}
+
+/// XLA arm: shards advance in shard order on the caller's thread — one
+/// artifact dispatch per shard through the coordinator-owned PJRT engine
+/// (its handles are thread-affine).  A multi-device PJRT build maps
+/// shard → device here with no driver change.
+pub struct Serial;
+
+impl<B> ShardPolicy<B> for Serial {
+    fn for_each<C, F>(shards: &mut [Shard<B>], _threads: usize,
+                      ctxs: Vec<C>, f: F) -> Result<()>
+    where
+        C: Send,
+        F: Fn(&mut Shard<B>, C) -> Result<()> + Sync,
+    {
+        assert_eq!(shards.len(), ctxs.len());
+        for (shard, ctx) in shards.iter_mut().zip(ctxs) {
+            f(shard, ctx)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ShardedBatch: the generic combinator
+// ---------------------------------------------------------------------------
+
+/// S contiguous shards of an R-replication panel, each advanced by its own
+/// inner batch backend, behind the SAME batch-backend traits the drivers
+/// consume.  Built from a factory closure (one inner backend per shard
+/// range — the registry's `run_batch` implementations supply it), so the
+/// drivers in `opt/` never see sharding at all.
+pub struct ShardedBatch<B, P> {
+    shards: Vec<Shard<B>>,
+    map: ShardMap,
+    /// Per-row iterate length (d for the FW tasks, d+1 for mean-CVaR's
+    /// joint `[w, t]` rows, n features for SQN).
+    width: usize,
+    threads: usize,
+    _policy: PhantomData<P>,
+}
+
+impl<B, P> ShardedBatch<B, P> {
+    fn build<F>(map: ShardMap, width: usize, threads: usize, mut make: F)
+        -> Result<Self>
+    where
+        F: FnMut(Range<usize>) -> Result<B>,
+    {
+        anyhow::ensure!(width > 0, "row width must be positive");
+        let mut shards = Vec::with_capacity(map.shards());
+        for range in map.ranges() {
+            shards.push(Shard {
+                backend: make(range.clone())?,
+                rows: range.clone(),
+            });
+        }
+        Ok(ShardedBatch { shards, map, width, threads, _policy: PhantomData })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.map.shards()
+    }
+
+    pub fn shard_map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Shared `[R × width]` shape check for the trait forwarding below.
+    fn ensure_panel(&self, len: usize, what: &str) -> Result<()> {
+        anyhow::ensure!(len == self.map.reps() * self.width,
+                        "{} panel {} != {}×{}", what, len,
+                        self.map.reps(), self.width);
+        Ok(())
+    }
+}
+
+impl<B> ShardedBatch<B, Pooled> {
+    /// Native-arm plane: shards advance concurrently over `threads` scoped
+    /// workers.  `make` receives each shard's row range and must build an
+    /// inner backend for exactly `range.len()` replications.
+    pub fn pooled<F>(reps: usize, shards: usize, width: usize,
+                     threads: usize, make: F) -> Result<Self>
+    where
+        F: FnMut(Range<usize>) -> Result<B>,
+    {
+        Self::build(ShardMap::new(reps, shards)?, width, threads, make)
+    }
+}
+
+impl<B> ShardedBatch<B, Serial> {
+    /// XLA-arm plane: shards advance in order on the caller's thread, one
+    /// dispatch per shard (shard-sized `[R/S × …]` artifacts).
+    pub fn serial<F>(reps: usize, shards: usize, width: usize, make: F)
+        -> Result<Self>
+    where
+        F: FnMut(Range<usize>) -> Result<B>,
+    {
+        Self::build(ShardMap::new(reps, shards)?, width, 1, make)
+    }
+}
+
+impl<B: MvBatchBackend, P: ShardPolicy<B>> MvBatchBackend
+    for ShardedBatch<B, P>
+{
+    fn name(&self) -> &'static str {
+        self.shards
+            .first()
+            .map(|s| s.backend.name())
+            .unwrap_or("sharded_batch")
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.map.reps()
+    }
+
+    fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
+                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+        let r = self.map.reps();
+        self.ensure_panel(w.len(), "iterate")?;
+        anyhow::ensure!(keys.len() == r, "need one key per replication");
+        let mut objs = vec![0.0f64; r];
+        let ctxs: Vec<_> = {
+            let w_parts =
+                PanelMut::new(w, r, self.width).split_shards(&self.map);
+            let key_parts = Panel::new(keys, r, 1).split_shards(&self.map);
+            let obj_parts =
+                PanelMut::new(&mut objs, r, 1).split_shards(&self.map);
+            w_parts
+                .into_iter()
+                .zip(key_parts)
+                .zip(obj_parts)
+                .map(|((w_s, k_s), o_s)| (w_s, k_s, o_s))
+                .collect()
+        };
+        P::for_each(&mut self.shards, self.threads, ctxs,
+                    |shard, (w_s, k_s, o_s)| {
+            let vals = shard.backend.epoch_batch(
+                w_s.into_inner(), k_epoch, k_s.as_slice())?;
+            let o_s = o_s.into_inner();
+            anyhow::ensure!(vals.len() == o_s.len(),
+                            "shard returned {} objectives for {} rows",
+                            vals.len(), o_s.len());
+            o_s.copy_from_slice(&vals);
+            Ok(())
+        })?;
+        Ok(objs)
+    }
+}
+
+impl<B: NvBatchBackend, P: ShardPolicy<B>> NvBatchBackend
+    for ShardedBatch<B, P>
+{
+    fn name(&self) -> &'static str {
+        self.shards
+            .first()
+            .map(|s| s.backend.name())
+            .unwrap_or("sharded_batch")
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.map.reps()
+    }
+
+    fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
+                      g: &mut [f32]) -> Result<Vec<f64>> {
+        let r = self.map.reps();
+        self.ensure_panel(x.len(), "iterate")?;
+        self.ensure_panel(g.len(), "gradient")?;
+        anyhow::ensure!(keys.len() == r, "need one key per replication");
+        let mut objs = vec![0.0f64; r];
+        let ctxs: Vec<_> = {
+            let x_parts = Panel::new(x, r, self.width).split_shards(&self.map);
+            let key_parts = Panel::new(keys, r, 1).split_shards(&self.map);
+            let g_parts =
+                PanelMut::new(g, r, self.width).split_shards(&self.map);
+            let obj_parts =
+                PanelMut::new(&mut objs, r, 1).split_shards(&self.map);
+            x_parts
+                .into_iter()
+                .zip(key_parts)
+                .zip(g_parts)
+                .zip(obj_parts)
+                .map(|(((x_s, k_s), g_s), o_s)| (x_s, k_s, g_s, o_s))
+                .collect()
+        };
+        P::for_each(&mut self.shards, self.threads, ctxs,
+                    |shard, (x_s, k_s, g_s, o_s)| {
+            let vals = shard.backend.grad_obj_batch(
+                x_s.as_slice(), k_s.as_slice(), g_s.into_inner())?;
+            let o_s = o_s.into_inner();
+            anyhow::ensure!(vals.len() == o_s.len(),
+                            "shard returned {} objectives for {} rows",
+                            vals.len(), o_s.len());
+            o_s.copy_from_slice(&vals);
+            Ok(())
+        })?;
+        Ok(objs)
+    }
+}
+
+impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
+    for ShardedBatch<B, P>
+{
+    fn name(&self) -> &'static str {
+        self.shards
+            .first()
+            .map(|s| s.backend.name())
+            .unwrap_or("sharded_batch")
+    }
+
+    fn batch_reps(&self) -> usize {
+        self.map.reps()
+    }
+
+    fn grad_batch(&mut self, w: &[f32], data: &crate::sim::ClassifyData,
+                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>> {
+        let r = self.map.reps();
+        self.ensure_panel(w.len(), "iterate")?;
+        self.ensure_panel(g.len(), "gradient")?;
+        anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        let mut losses = vec![0.0f64; r];
+        let ctxs: Vec<_> = {
+            let w_parts = Panel::new(w, r, self.width).split_shards(&self.map);
+            let idx_parts = Panel::new(idx, r, 1).split_shards(&self.map);
+            let g_parts =
+                PanelMut::new(g, r, self.width).split_shards(&self.map);
+            let loss_parts =
+                PanelMut::new(&mut losses, r, 1).split_shards(&self.map);
+            w_parts
+                .into_iter()
+                .zip(idx_parts)
+                .zip(g_parts)
+                .zip(loss_parts)
+                .map(|(((w_s, i_s), g_s), l_s)| (w_s, i_s, g_s, l_s))
+                .collect()
+        };
+        P::for_each(&mut self.shards, self.threads, ctxs,
+                    |shard, (w_s, i_s, g_s, l_s)| {
+            let vals = shard.backend.grad_batch(
+                w_s.as_slice(), data, i_s.as_slice(), g_s.into_inner())?;
+            let l_s = l_s.into_inner();
+            anyhow::ensure!(vals.len() == l_s.len(),
+                            "shard returned {} losses for {} rows",
+                            vals.len(), l_s.len());
+            l_s.copy_from_slice(&vals);
+            Ok(())
+        })?;
+        Ok(losses)
+    }
+
+    fn hvp_batch(&mut self, wbar: &[f32], s: &[f32],
+                 data: &crate::sim::ClassifyData, idx: &[Vec<usize>],
+                 y: &mut [f32]) -> Result<()> {
+        let r = self.map.reps();
+        self.ensure_panel(wbar.len(), "ω̄")?;
+        self.ensure_panel(s.len(), "s")?;
+        self.ensure_panel(y.len(), "output")?;
+        anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        let ctxs: Vec<_> = {
+            let wb_parts =
+                Panel::new(wbar, r, self.width).split_shards(&self.map);
+            let s_parts = Panel::new(s, r, self.width).split_shards(&self.map);
+            let idx_parts = Panel::new(idx, r, 1).split_shards(&self.map);
+            let y_parts =
+                PanelMut::new(y, r, self.width).split_shards(&self.map);
+            wb_parts
+                .into_iter()
+                .zip(s_parts)
+                .zip(idx_parts)
+                .zip(y_parts)
+                .map(|(((wb_s, s_s), i_s), y_s)| (wb_s, s_s, i_s, y_s))
+                .collect()
+        };
+        P::for_each(&mut self.shards, self.threads, ctxs,
+                    |shard, (wb_s, s_s, i_s, y_s)| {
+            shard.backend.hvp_batch(wb_s.as_slice(), s_s.as_slice(), data,
+                                    i_s.as_slice(), y_s.into_inner())
+        })
+    }
+
+    fn direction_batch(&mut self, mem: BatchMemView<'_>, g: &[f32],
+                       out: &mut [f32]) -> Result<()> {
+        let r = self.map.reps();
+        anyhow::ensure!(mem.reps() == r && mem.dim() == self.width,
+                        "correction panels are {}×{}, plane is {}×{}",
+                        mem.reps(), mem.dim(), r, self.width);
+        self.ensure_panel(g.len(), "gradient")?;
+        self.ensure_panel(out.len(), "output")?;
+        let ctxs: Vec<_> = {
+            let g_parts = Panel::new(g, r, self.width).split_shards(&self.map);
+            let out_parts =
+                PanelMut::new(out, r, self.width).split_shards(&self.map);
+            self.map
+                .ranges()
+                .iter()
+                .zip(g_parts)
+                .zip(out_parts)
+                .map(|((range, g_s), o_s)| {
+                    (mem.shard(range.clone()), g_s, o_s)
+                })
+                .collect()
+        };
+        P::for_each(&mut self.shards, self.threads, ctxs,
+                    |shard, (m_s, g_s, o_s)| {
+            shard.backend.direction_batch(m_s, g_s.as_slice(),
+                                          o_s.into_inner())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_map_balanced_contiguous() {
+        let map = ShardMap::new(7, 3).unwrap();
+        assert_eq!(map.reps(), 7);
+        assert_eq!(map.shards(), 3);
+        // sizes differ by at most one, larger shards first
+        assert_eq!(map.ranges(), &[0..3, 3..5, 5..7]);
+        // degenerate-but-legal extremes
+        assert_eq!(ShardMap::new(4, 1).unwrap().ranges(), &[0..4]);
+        assert_eq!(ShardMap::new(3, 3).unwrap().ranges(),
+                   &[0..1, 1..2, 2..3]);
+    }
+
+    #[test]
+    fn shard_map_rejects_degenerate_cells() {
+        assert!(ShardMap::new(0, 1).is_err());
+        assert!(ShardMap::new(4, 0).is_err());
+        assert!(ShardMap::new(2, 3).is_err(), "shards > reps");
+    }
+
+    #[test]
+    fn inner_threads_splits_the_budget() {
+        assert_eq!(inner_threads(8, 1), 8, "unsharded keeps the budget");
+        assert_eq!(inner_threads(8, 2), 4);
+        assert_eq!(inner_threads(2, 5), 1, "never drops to zero");
+        assert_eq!(inner_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn panel_views_slice_along_the_map() {
+        let map = ShardMap::new(5, 2).unwrap();
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let parts = Panel::new(&data, 5, 2).split_shards(&map);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].rows(), 3);
+        assert_eq!(parts[0].as_slice(), &data[..6]);
+        assert_eq!(parts[1].row(0), &data[6..8]);
+
+        let mut buf = data.clone();
+        let mut mut_parts = PanelMut::new(&mut buf, 5, 2).split_shards(&map);
+        mut_parts[1].row_mut(1)[0] = -1.0;
+        assert_eq!(buf[8], -1.0);
+    }
+
+    #[test]
+    fn tile_rows_repeats_the_iterate() {
+        assert_eq!(tile_rows(&[1.0, 2.0], 3),
+                   vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        assert!(tile_rows(&[1.0], 0).is_empty());
+    }
+
+    // -- ShardedBatch routing: a marker backend records which rows each
+    // shard advanced, so we can assert the partition end to end ----------
+
+    struct MarkerBackend {
+        rows: Range<usize>,
+        calls: usize,
+    }
+
+    impl MvBatchBackend for MarkerBackend {
+        fn name(&self) -> &'static str {
+            "marker"
+        }
+
+        fn batch_reps(&self) -> usize {
+            self.rows.len()
+        }
+
+        fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
+                       keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+            self.calls += 1;
+            let d = w.len() / keys.len();
+            for (i, row) in w.chunks_mut(d).enumerate() {
+                // stamp each row with its global index (shard start + i)
+                // and the key it was handed, proving slices line up
+                let global = self.rows.start + i;
+                anyhow::ensure!(keys[i][0] as usize == global,
+                                "key routed to wrong shard row");
+                for v in row.iter_mut() {
+                    *v += (global * 100 + k_epoch) as f32;
+                }
+            }
+            Ok(keys.iter().map(|k| k[0] as f64).collect())
+        }
+    }
+
+    fn routed_panel<P: ShardPolicy<MarkerBackend>>(
+        plane: &mut ShardedBatch<MarkerBackend, P>, reps: usize, d: usize)
+        -> (Vec<f32>, Vec<f64>) {
+        let keys: Vec<[u32; 2]> = (0..reps as u32).map(|i| [i, 0]).collect();
+        let mut w = vec![0.0f32; reps * d];
+        let objs = plane.epoch_batch(&mut w, 7, &keys).unwrap();
+        (w, objs)
+    }
+
+    #[test]
+    fn sharded_batch_routes_rows_identically_under_any_policy() {
+        let (reps, d) = (5usize, 2usize);
+        let make =
+            |rows: Range<usize>| Ok(MarkerBackend { rows, calls: 0 });
+        let mut pooled =
+            ShardedBatch::pooled(reps, 2, d, 3, make).unwrap();
+        let mut serial = ShardedBatch::serial(reps, 2, d, make).unwrap();
+        assert_eq!(MvBatchBackend::batch_reps(&pooled), reps);
+        assert_eq!(pooled.shards(), 2);
+
+        let (w_p, o_p) = routed_panel(&mut pooled, reps, d);
+        let (w_s, o_s) = routed_panel(&mut serial, reps, d);
+        assert_eq!(w_p, w_s, "policy must not change results");
+        assert_eq!(o_p, o_s);
+        for r in 0..reps {
+            assert_eq!(w_p[r * d], (r * 100 + 7) as f32, "row {}", r);
+            assert_eq!(o_p[r], r as f64);
+        }
+        // every shard advanced exactly once per step
+        for shard in &pooled.shards {
+            assert_eq!(shard.backend.calls, 1);
+        }
+    }
+
+    #[test]
+    fn sharded_batch_shape_checked_and_errors_propagate() {
+        let make =
+            |rows: Range<usize>| Ok(MarkerBackend { rows, calls: 0 });
+        let mut plane = ShardedBatch::pooled(3, 3, 2, 2, make).unwrap();
+        let mut wrong = vec![0.0f32; 2]; // 1 row, 3 expected
+        assert!(plane.epoch_batch(&mut wrong, 0, &[[0, 0]; 3]).is_err());
+        let mut ok = vec![0.0f32; 6];
+        assert!(plane.epoch_batch(&mut ok, 0, &[[0, 0]; 2]).is_err());
+        // a mis-routed key surfaces the shard's error, first error wins
+        let err = plane
+            .epoch_batch(&mut ok, 0, &[[9, 0], [9, 0], [9, 0]])
+            .unwrap_err();
+        assert!(format!("{:#}", err).contains("wrong shard row"));
+    }
+}

@@ -14,7 +14,7 @@ use anyhow::{Context, Result};
 use crate::runtime::exec::DeviceBuf;
 use crate::runtime::{exec, Arg, BufArg, Engine, Exec};
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
-use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
+use crate::tasks::{BatchMemView, CorrectionMemory};
 
 use super::{
     HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
@@ -992,7 +992,7 @@ impl LrBatchBackend for XlaLrBatch {
         Ok(())
     }
 
-    fn direction_batch(&mut self, mem: &BatchCorrectionMemory, g: &[f32],
+    fn direction_batch(&mut self, mem: BatchMemView<'_>, g: &[f32],
                        out: &mut [f32]) -> Result<()> {
         anyhow::ensure!(mem.reps() == self.r && mem.dim() == self.n,
                         "correction panels are {}×{}, backend is {}×{}",

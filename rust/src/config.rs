@@ -79,21 +79,26 @@ impl fmt::Display for BackendKind {
     }
 }
 
-/// How the replication axis of an experiment executes (DESIGN.md §11).
+/// How the replication axis of an experiment executes (DESIGN.md §11/§13).
 ///
 /// Batched and sequential execution are bit-for-bit identical per
 /// replication (same `StreamTree` subtrees, same per-row arithmetic); the
-/// mode only changes how the work is dispatched.
+/// mode only changes how the work is dispatched.  Shard count is part of
+/// the batched plan: `Batched { shards: 1 }` is the single-panel engine,
+/// `shards: S` partitions the R replication rows into S contiguous shards
+/// through `backend::plane` — still bit-identical, only buffer ownership
+/// and dispatch granularity move.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecMode {
-    /// Let the coordinator pick: batched for multi-replication native runs,
-    /// sequential otherwise (XLA batch artifacts are opt-in).
+    /// Let the coordinator pick: batched (unsharded) for multi-replication
+    /// native runs, sequential otherwise (XLA batch artifacts are opt-in).
     Auto,
     /// One dispatch per replication per step (the original protocol).
     Sequential,
-    /// All replications advance through a `*BatchBackend` in one call per
-    /// step.
-    Batched,
+    /// All replications advance through the shard-aware panel plane in one
+    /// call per step: S inner batch backends over contiguous row shards
+    /// (`--shards`, DESIGN.md §13).
+    Batched { shards: usize },
 }
 
 impl ExecMode {
@@ -101,7 +106,7 @@ impl ExecMode {
         match s.to_ascii_lowercase().as_str() {
             "auto" => Some(ExecMode::Auto),
             "seq" | "sequential" => Some(ExecMode::Sequential),
-            "batch" | "batched" => Some(ExecMode::Batched),
+            "batch" | "batched" => Some(ExecMode::Batched { shards: 1 }),
             _ => None,
         }
     }
@@ -110,7 +115,15 @@ impl ExecMode {
         match self {
             ExecMode::Auto => "auto",
             ExecMode::Sequential => "sequential",
-            ExecMode::Batched => "batched",
+            ExecMode::Batched { .. } => "batched",
+        }
+    }
+
+    /// Shard count of the plan (1 for every non-sharded mode).
+    pub fn shards(&self) -> usize {
+        match self {
+            ExecMode::Batched { shards } => *shards,
+            _ => 1,
         }
     }
 }
@@ -193,17 +206,31 @@ mod tests {
         for b in [BackendKind::Native, BackendKind::NativePar, BackendKind::Xla] {
             assert_eq!(BackendKind::parse(b.as_str()), Some(b));
         }
-        for e in [ExecMode::Auto, ExecMode::Sequential, ExecMode::Batched] {
+        for e in [ExecMode::Auto, ExecMode::Sequential,
+                  ExecMode::Batched { shards: 1 }] {
             assert_eq!(ExecMode::parse(e.as_str()), Some(e));
         }
+        // a sharded plan renders as its mode; the shard count is carried
+        // separately (reports/CLI print it)
+        assert_eq!(ExecMode::Batched { shards: 4 }.as_str(), "batched");
     }
 
     #[test]
     fn exec_mode_aliases() {
         assert_eq!(ExecMode::parse("seq"), Some(ExecMode::Sequential));
-        assert_eq!(ExecMode::parse("batch"), Some(ExecMode::Batched));
-        assert_eq!(ExecMode::parse("Batched"), Some(ExecMode::Batched));
+        assert_eq!(ExecMode::parse("batch"),
+                   Some(ExecMode::Batched { shards: 1 }));
+        assert_eq!(ExecMode::parse("Batched"),
+                   Some(ExecMode::Batched { shards: 1 }));
         assert_eq!(ExecMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn exec_mode_shard_counts() {
+        assert_eq!(ExecMode::Auto.shards(), 1);
+        assert_eq!(ExecMode::Sequential.shards(), 1);
+        assert_eq!(ExecMode::Batched { shards: 1 }.shards(), 1);
+        assert_eq!(ExecMode::Batched { shards: 3 }.shards(), 3);
     }
 
     #[test]

@@ -76,10 +76,40 @@ impl ExperimentSpec {
         self
     }
 
+    /// Batched execution through the shard plane with `shards` shards
+    /// (DESIGN.md §13).
+    pub fn sharded(mut self, shards: usize) -> Self {
+        self.exec = ExecMode::Batched { shards };
+        self
+    }
+
     pub fn validate(&self) -> Result<()> {
         ensure!(self.size > 0, "size must be positive");
         ensure!(self.reps > 0, "reps must be positive");
         ensure!(self.params.iters > 0, "iters must be positive");
+        // degenerate shard plans fail HERE with an actionable message, not
+        // downstream in the panel loop (DESIGN.md §13)
+        if let ExecMode::Batched { shards } = self.exec {
+            ensure!(shards > 0, "shards must be positive (got 0)");
+            ensure!(shards <= self.reps,
+                    "shards ({}) must not exceed replications ({}) — every \
+                     shard needs at least one replication row",
+                    shards, self.reps);
+            // the XLA arm dispatches one fixed-shape [R/S × …] artifact
+            // per shard, so an uneven split would need artifacts at TWO
+            // shard sizes — which `python -m compile.aot --shards` refuses
+            // to emit; fail here instead of at artifact-load time with an
+            // unsatisfiable regenerate hint (the native arm keeps uneven
+            // splits: its rows are plain host buffers)
+            if self.backend == BackendKind::Xla && shards > 1 {
+                ensure!(self.reps % shards == 0,
+                        "--backend xla needs --shards ({}) to divide reps \
+                         ({}): each shard dispatches one fixed-shape \
+                         [R/S × …] artifact (emit them with `python -m \
+                         compile.aot --reps {} --shards {}`)",
+                        shards, self.reps, self.reps, shards);
+            }
+        }
         // task-specific parameter checks live on the registry entry
         crate::tasks::registry::get(self.task).validate(self)
     }
@@ -144,14 +174,17 @@ mod tests {
             .replications(3)
             .seed(9)
             .samples(16)
-            .execution(ExecMode::Batched);
+            .execution(ExecMode::Batched { shards: 1 });
         assert_eq!(s.size, 512);
         assert_eq!(s.params.size, 512);
         assert_eq!(s.params.iters, 7);
         assert_eq!(s.reps, 3);
         assert_eq!(s.seed, 9);
         assert_eq!(s.params.samples, 16);
-        assert_eq!(s.exec, ExecMode::Batched);
+        assert_eq!(s.exec, ExecMode::Batched { shards: 1 });
+        s.validate().unwrap();
+        let s = s.sharded(3);
+        assert_eq!(s.exec, ExecMode::Batched { shards: 3 });
         s.validate().unwrap();
     }
 
@@ -175,6 +208,49 @@ mod tests {
         let mut s = ExperimentSpec::new(TaskKind::Classification, BackendKind::Native);
         s.params.batch = 0;
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_degenerate_shard_plans() {
+        let base = ExperimentSpec::new(TaskKind::MeanVariance,
+                                       BackendKind::Native)
+            .replications(4);
+        assert!(base.clone().sharded(0).validate().is_err(),
+                "shards == 0 must be rejected at validate time");
+        let err = base.clone().sharded(5).validate().unwrap_err();
+        assert!(format!("{:#}", err).contains("must not exceed"),
+                "{:#}", err);
+        // every legal shard count passes, including S = R and uneven
+        for s in 1..=4 {
+            base.clone().sharded(s).validate().unwrap();
+        }
+        // shard counts are a batched-plan property: seq/auto never carry
+        // one, so reps alone bounds nothing there
+        base.clone()
+            .execution(ExecMode::Sequential)
+            .replications(1)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn xla_shard_plans_must_divide_reps() {
+        // The XLA arm dispatches fixed-shape [R/S × …] artifacts, and
+        // aot.py only emits equal shard sizes — an uneven split must die
+        // in validate with the regenerate recipe, not at artifact load.
+        let base = ExperimentSpec::new(TaskKind::MeanVariance,
+                                       BackendKind::Xla)
+            .replications(5);
+        let err = base.clone().sharded(2).validate().unwrap_err();
+        assert!(format!("{:#}", err).contains("--shards"), "{:#}", err);
+        base.clone().sharded(5).validate().unwrap();
+        base.clone().sharded(1).validate().unwrap();
+        // the native arm keeps uneven splits
+        ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Native)
+            .replications(5)
+            .sharded(2)
+            .validate()
+            .unwrap();
     }
 
     #[test]

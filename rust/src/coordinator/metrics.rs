@@ -56,17 +56,23 @@ pub struct RunResult {
     /// methodologically n/a — the report renderers mark it so instead of
     /// printing a fake ±0.00.
     pub batched: bool,
+    /// Shard count of the resolved plan (DESIGN.md §13): 1 for sequential
+    /// runs and the unsharded batched engine, S for `--shards S`.  Timing
+    /// attribution stays `batch_time / R` whatever S is.
+    pub shards: usize,
 }
 
 impl RunResult {
     pub fn new(spec: ExperimentSpec, reps: Vec<RepRecord>) -> Self {
-        RunResult { spec, reps, batched: false }
+        RunResult { spec, reps, batched: false, shards: 1 }
     }
 
-    /// Record which execution plan actually ran (set by the coordinator
-    /// after resolving `ExecMode::Auto`).
-    pub fn executed_batched(mut self, batched: bool) -> Self {
-        self.batched = batched;
+    /// Record the execution plan that actually ran (set by the coordinator
+    /// after resolving `ExecMode::Auto`): `None` = sequential,
+    /// `Some(shards)` = the shard-aware batched plane.
+    pub fn executed(mut self, plan: Option<usize>) -> Self {
+        self.batched = plan.is_some();
+        self.shards = plan.unwrap_or(1);
         self
     }
 
@@ -227,9 +233,15 @@ mod tests {
     }
 
     #[test]
-    fn executed_batched_marks_result() {
+    fn executed_plan_marks_result() {
         let rr = RunResult::new(dummy_spec(), vec![]);
         assert!(!rr.batched, "sequential is the default attribution");
-        assert!(rr.executed_batched(true).batched);
+        assert_eq!(rr.shards, 1);
+        let seq = RunResult::new(dummy_spec(), vec![]).executed(None);
+        assert!(!seq.batched);
+        assert_eq!(seq.shards, 1);
+        let sharded = RunResult::new(dummy_spec(), vec![]).executed(Some(3));
+        assert!(sharded.batched);
+        assert_eq!(sharded.shards, 3);
     }
 }

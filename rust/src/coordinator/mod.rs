@@ -78,8 +78,8 @@ impl Coordinator {
     /// execution plan, and delegate to the task's registry entry.
     pub fn run(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
         spec.validate()?;
-        let batched = self.use_batched(spec);
-        if batched && spec.backend == BackendKind::NativePar {
+        let plan = self.exec_plan(spec);
+        if plan.is_some() && spec.backend == BackendKind::NativePar {
             // The batch engine runs each row with the paper's sequential
             // kernels; silently substituting them for native_par's blocked
             // intra-gradient kernels (ablation A3) would mislabel results.
@@ -90,27 +90,27 @@ impl Coordinator {
             );
         }
         let task = registry::get(spec.task);
-        let records = if batched {
-            task.run_batch(self, spec)?
-        } else {
-            task.run_seq(self, spec)?
+        let records = match plan {
+            Some(shards) => task.run_batch(self, spec, shards)?,
+            None => task.run_seq(self, spec)?,
         };
-        Ok(RunResult::new(spec.clone(), records).executed_batched(batched))
+        Ok(RunResult::new(spec.clone(), records).executed(plan))
     }
 
     /// Resolve the spec's execution mode into a concrete plan
-    /// (DESIGN.md §11).  `Auto` batches multi-replication runs on the
-    /// plain native backend; `native_par` keeps the sequential protocol
-    /// (its intra-gradient threading is an ablation arm), and the XLA
-    /// batch artifacts are opt-in because the default AOT set does not
-    /// include them.
-    fn use_batched(&self, spec: &ExperimentSpec) -> bool {
+    /// (DESIGN.md §11/§13): `None` = sequential, `Some(shards)` = the
+    /// shard-aware batched plane.  `Auto` batches multi-replication runs
+    /// on the plain native backend as one unsharded panel; `native_par`
+    /// keeps the sequential protocol (its intra-gradient threading is an
+    /// ablation arm), and the XLA batch artifacts are opt-in because the
+    /// default AOT set does not include them.
+    fn exec_plan(&self, spec: &ExperimentSpec) -> Option<usize> {
         match spec.exec {
-            ExecMode::Sequential => false,
-            ExecMode::Batched => true,
-            ExecMode::Auto => {
-                spec.backend == BackendKind::Native && spec.reps >= 2
-            }
+            ExecMode::Sequential => None,
+            ExecMode::Batched { shards } => Some(shards),
+            ExecMode::Auto => (spec.backend == BackendKind::Native
+                               && spec.reps >= 2)
+                .then_some(1),
         }
     }
 
@@ -222,7 +222,7 @@ mod tests {
             spec.exec = ExecMode::Sequential;
             let seq = c.run(&spec).unwrap();
             assert!(!seq.batched);
-            spec.exec = ExecMode::Batched;
+            spec.exec = ExecMode::Batched { shards: 1 };
             let bat = c.run(&spec).unwrap();
             assert!(bat.batched);
             assert_eq!(seq.reps.len(), bat.reps.len());
@@ -230,6 +230,36 @@ mod tests {
                 assert_eq!(a.objs, b.objs, "task {}", task.name());
                 assert_eq!(a.obj_iters, b.obj_iters, "task {}",
                            task.name());
+            }
+        }
+    }
+
+    #[test]
+    fn conformance_every_task_runs_the_sharded_plan_bitwise() {
+        // The shard plane's refactor invariant (DESIGN.md §13), at the
+        // coordinator level for EVERY registered task: S ∈ {1, 2, R} with
+        // R = 3 (so S = 2 is an uneven 2+1 split) is bit-identical to the
+        // sequential protocol, and the resolved plan is recorded.
+        let mut c = coord();
+        for task in registry::all() {
+            let mut spec = task.smoke_spec();
+            spec.reps = 3;
+            spec.exec = ExecMode::Sequential;
+            let seq = c.run(&spec).unwrap();
+            for shards in [1usize, 2, 3] {
+                spec.exec = ExecMode::Batched { shards };
+                let sharded = c.run(&spec).unwrap_or_else(|e| {
+                    panic!("{} S={} failed: {:#}", task.name(), shards, e)
+                });
+                assert!(sharded.batched, "task {}", task.name());
+                assert_eq!(sharded.shards, shards, "task {}", task.name());
+                assert_eq!(seq.reps.len(), sharded.reps.len());
+                for (a, b) in seq.reps.iter().zip(&sharded.reps) {
+                    assert_eq!(a.objs, b.objs, "task {} S={}",
+                               task.name(), shards);
+                    assert_eq!(a.obj_iters, b.obj_iters, "task {} S={}",
+                               task.name(), shards);
+                }
             }
         }
     }
@@ -242,25 +272,36 @@ mod tests {
         let mut spec = registry::get(TaskKind::MeanVariance).smoke_spec();
         spec.reps = 0;
         assert!(c.run(&spec).is_err());
+        // degenerate shard plans die in validate, before any backend is
+        // built (DESIGN.md §13)
+        spec.reps = 2;
+        spec.exec = ExecMode::Batched { shards: 0 };
+        assert!(c.run(&spec).is_err());
+        spec.exec = ExecMode::Batched { shards: 3 };
+        assert!(c.run(&spec).is_err(), "shards > reps must be rejected");
     }
 
     #[test]
     fn auto_mode_batches_native_multirep_only() {
         let c = coord();
         let mut spec = registry::get(TaskKind::MeanVariance).smoke_spec();
-        assert!(c.use_batched(&spec), "native reps=2 should auto-batch");
+        assert_eq!(c.exec_plan(&spec), Some(1),
+                   "native reps=2 should auto-batch, unsharded");
         spec.reps = 1;
-        assert!(!c.use_batched(&spec), "single replication stays sequential");
+        assert_eq!(c.exec_plan(&spec), None,
+                   "single replication stays sequential");
         spec.reps = 2;
         spec.backend = BackendKind::NativePar;
-        assert!(!c.use_batched(&spec), "native_par is an ablation arm");
+        assert_eq!(c.exec_plan(&spec), None, "native_par is an ablation arm");
         spec.backend = BackendKind::Xla;
-        assert!(!c.use_batched(&spec), "xla batch artifacts are opt-in");
-        spec.exec = ExecMode::Batched;
-        assert!(c.use_batched(&spec));
+        assert_eq!(c.exec_plan(&spec), None,
+                   "xla batch artifacts are opt-in");
+        spec.exec = ExecMode::Batched { shards: 2 };
+        assert_eq!(c.exec_plan(&spec), Some(2),
+                   "an explicit plan carries its shard count");
         spec.exec = ExecMode::Sequential;
         spec.backend = BackendKind::Native;
-        assert!(!c.use_batched(&spec));
+        assert_eq!(c.exec_plan(&spec), None);
     }
 
     #[test]
@@ -268,7 +309,7 @@ mod tests {
         let mut c = coord();
         let mut spec = registry::get(TaskKind::MeanVariance).smoke_spec();
         spec.backend = BackendKind::NativePar;
-        spec.exec = ExecMode::Batched;
+        spec.exec = ExecMode::Batched { shards: 1 };
         let err = c.run(&spec).unwrap_err();
         assert!(format!("{:#}", err).contains("native_par"), "{:#}", err);
     }

@@ -61,10 +61,18 @@ pub fn figure2_markdown(results: &[RunResult]) -> String {
                     if r.batched {
                         // batched execution attributes batch_wall/R shares
                         // — a cross-replication timing band would be a
-                        // fake ±0.00, not a measurement (DESIGN.md §11)
+                        // fake ±0.00, not a measurement (DESIGN.md §11);
+                        // sharded plans record their shard count too
+                        // (DESIGN.md §13)
+                        let plan = if r.shards > 1 {
+                            format!("batched, {} shards", r.shards)
+                        } else {
+                            "batched".to_string()
+                        };
                         out.push_str(&format!(
-                            " {} ±n/a (batched) |",
-                            fmt_duration(t.mean())
+                            " {} ±n/a ({}) |",
+                            fmt_duration(t.mean()),
+                            plan
                         ));
                     } else {
                         out.push_str(&format!(
@@ -146,10 +154,12 @@ pub fn table2_markdown(results: &[RunResult], fracs: &[f64]) -> String {
 }
 
 /// CSV with one row per (size, backend): timing + final objective stats.
+/// `shards` records the resolved execution plan (1 = sequential or the
+/// unsharded batched engine, DESIGN.md §13).
 pub fn results_csv(results: &[RunResult]) -> String {
     let mut out = String::from(
-        "task,backend,size,reps,total_mean_s,total_std_s,step_mean_s,\
-         final_obj_mean,final_obj_std\n",
+        "task,backend,size,reps,shards,total_mean_s,total_std_s,\
+         step_mean_s,final_obj_mean,final_obj_std\n",
     );
     for r in results {
         let t = r.time_stats();
@@ -163,11 +173,12 @@ pub fn results_csv(results: &[RunResult]) -> String {
             format!("{:.9}", t.std())
         };
         out.push_str(&format!(
-            "{},{},{},{},{:.9},{},{:.9},{:.9},{:.9}\n",
+            "{},{},{},{},{},{:.9},{},{:.9},{:.9},{:.9}\n",
             r.spec.task,
             r.spec.backend,
             r.spec.size,
             r.reps.len(),
+            r.shards,
             t.mean(),
             total_std,
             st.mean(),
@@ -217,6 +228,7 @@ pub fn results_json(results: &[RunResult]) -> Value {
                 ("total_mean_s", num(t.mean())),
                 ("total_std_s", total_std),
                 ("batched", Value::Bool(r.batched)),
+                ("shards", num(r.shards as f64)),
                 ("final_obj", num(r.final_obj_stats().mean())),
             ])
         })
@@ -293,7 +305,7 @@ mod tests {
         // the ±2σ band would be a misleading ±0.00, so every renderer must
         // mark it n/a instead (DESIGN.md §11).
         let batched = fake_result(BackendKind::Native, 128, 0.4)
-            .executed_batched(true);
+            .executed(Some(1));
         let seq = fake_result(BackendKind::Xla, 128, 0.1);
         let results = vec![batched, seq];
 
@@ -303,10 +315,10 @@ mod tests {
 
         let csv = results_csv(&results);
         let batched_row = csv.lines().nth(1).unwrap();
-        assert!(batched_row.split(',').nth(5).unwrap() == "n/a",
+        assert!(batched_row.split(',').nth(6).unwrap() == "n/a",
                 "{}", batched_row);
         let seq_row = csv.lines().nth(2).unwrap();
-        assert!(seq_row.split(',').nth(5).unwrap().parse::<f64>().is_ok(),
+        assert!(seq_row.split(',').nth(6).unwrap().parse::<f64>().is_ok(),
                 "{}", seq_row);
 
         let json = results_json(&results).to_string_pretty();
@@ -317,6 +329,37 @@ mod tests {
         assert_eq!(arr[0].get("batched"),
                    Some(&crate::util::json::Value::Bool(true)));
         assert!(arr[1].get("total_std_s").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn sharded_rows_record_shard_count_with_band_still_na() {
+        // A sharded plan (DESIGN.md §13) must surface its shard count in
+        // every machine-readable renderer while the timing band stays n/a
+        // — sharding changes dispatch granularity, not the attribution
+        // methodology.
+        let sharded = fake_result(BackendKind::Native, 128, 0.4)
+            .executed(Some(3));
+        let seq = fake_result(BackendKind::Xla, 128, 0.1);
+        let results = vec![sharded, seq];
+
+        let md = figure2_markdown(&results);
+        assert!(md.contains("±n/a (batched, 3 shards)"), "{}", md);
+
+        let csv = results_csv(&results);
+        assert!(csv.lines().next().unwrap().contains(",shards,"));
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row.split(',').nth(4).unwrap(), "3", "{}", row);
+        assert_eq!(row.split(',').nth(6).unwrap(), "n/a", "{}", row);
+        let seq_row = csv.lines().nth(2).unwrap();
+        assert_eq!(seq_row.split(',').nth(4).unwrap(), "1", "{}", seq_row);
+
+        let json = results_json(&results).to_string_pretty();
+        let back = crate::util::json::Value::parse(&json).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr[0].get("shards").unwrap().as_f64(), Some(3.0));
+        assert_eq!(arr[0].get("total_std_s"),
+                   Some(&crate::util::json::Value::Null));
+        assert_eq!(arr[1].get("shards").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

@@ -24,7 +24,13 @@
 //! one `*BatchBackend` call per step on `[R × n]` panels — replication-major
 //! thread parallelism on the native arm, one fused artifact dispatch on the
 //! XLA arm — bit-for-bit identical to the per-replication protocol under
-//! the same seed.  [`config::ExecMode`] selects the plan per experiment.
+//! the same seed.  The **shard-aware panel plane** ([`backend::plane`],
+//! DESIGN.md §13) splits that spine further: `--shards S` partitions the
+//! R rows into S contiguous shards, one inner batch backend each (scoped
+//! pool workers on the native arm; one `[R/S × …]` artifact dispatch per
+//! shard on the XLA arm, the seam a multi-device PJRT build maps onto) —
+//! still bit-identical for every S.  [`config::ExecMode`] selects the
+//! plan per experiment.
 //!
 //! ## Quickstart
 //!
@@ -57,6 +63,7 @@ pub mod util;
 
 /// Convenience re-exports for the examples and benches.
 pub mod prelude {
+    pub use crate::backend::plane::{Panel, PanelMut, ShardMap, ShardedBatch};
     pub use crate::backend::{
         LrBackend, LrBatchBackend, MvBackend, MvBatchBackend, NvBackend,
         NvBatchBackend,

@@ -116,12 +116,16 @@ fn common_flags(args: Args) -> Args {
         .flag("hessian", Some("explicit"), "SQN Hessian: explicit | twoloop")
 }
 
-/// The `--exec` flag; the default differs per command (the Figure-2 /
-/// Table-2 protocols pin `seq` to keep the paper's per-replication timing
-/// methodology — see SweepSpec::figure2).
+/// The `--exec` / `--shards` flags; the `--exec` default differs per
+/// command (the Figure-2 / Table-2 protocols pin `seq` to keep the
+/// paper's per-replication timing methodology — see SweepSpec::figure2).
 fn exec_flag(args: Args, default: &'static str) -> Args {
     args.flag("exec", Some(default),
               "replication execution: auto | seq | batch (DESIGN.md §11)")
+        .flag("shards", Some("1"),
+              "shard count for --exec batch: split the R replication rows \
+               into S contiguous shards, one inner batch backend each \
+               (DESIGN.md §13)")
 }
 
 fn epochs_default(task: TaskKind, a: &Args) -> Result<usize> {
@@ -141,8 +145,17 @@ fn hessian_mode(a: &Args) -> Result<HessianMode> {
 
 fn exec_mode(a: &Args) -> Result<ExecMode> {
     let v = a.get("exec").unwrap_or_default();
-    ExecMode::parse(&v)
-        .ok_or_else(|| anyhow::anyhow!("--exec must be auto|seq|batch, got '{}'", v))
+    let mode = ExecMode::parse(&v)
+        .ok_or_else(|| anyhow::anyhow!("--exec must be auto|seq|batch, got '{}'", v))?;
+    let shards = a.get_usize("shards")?;
+    match mode {
+        // shards == 0 / shards > reps are rejected by spec validation
+        ExecMode::Batched { .. } => Ok(ExecMode::Batched { shards }),
+        _ if shards != 1 => bail!(
+            "--shards selects the sharded batched plane — it requires \
+             --exec batch (got --exec {})", v),
+        _ => Ok(mode),
+    }
 }
 
 fn cmd_run(rest: &[String]) -> Result<()> {
@@ -173,12 +186,15 @@ fn cmd_run(rest: &[String]) -> Result<()> {
     let t = result.time_stats();
     let unit = if task == TaskKind::Classification { "iter" } else { "epoch" };
     if result.batched {
-        // batch_wall/R shares carry no cross-replication spread
+        // batch_wall/R shares carry no cross-replication spread; sharded
+        // plans surface their shard count (DESIGN.md §13)
         println!(
             "per-{} time: {:.6}s mean, band2 = n/a (batched execution, \
-             DESIGN.md §11)",
+             {} shard{}, DESIGN.md §11/§13)",
             unit,
-            result.step_stats().mean()
+            result.step_stats().mean(),
+            result.shards,
+            if result.shards == 1 { "" } else { "s" }
         );
     } else {
         println!(

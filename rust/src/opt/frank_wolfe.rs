@@ -87,7 +87,9 @@ pub fn run_nv<B: NvBackend + ?Sized>(
 
 // ---------------------------------------------------------------------------
 // Replication-batched drivers: PanelHooks over the generic loop
-// (DESIGN.md §11/§12)
+// (DESIGN.md §11/§12).  Shard-agnostic by construction: a sharded plane
+// (`backend::plane::ShardedBatch`, DESIGN.md §13) implements the same
+// `*BatchBackend` traits, so these drivers never see shard boundaries.
 // ---------------------------------------------------------------------------
 
 /// Epoch-task hook (Algorithm 1, and the mean-CVaR task riding the same

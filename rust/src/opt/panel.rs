@@ -10,6 +10,11 @@
 //! correction-memory machinery — lives entirely behind [`PanelHook`], so
 //! `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}` are thin wrappers
 //! and a new scenario's batched driver is one hook, not a new loop.
+//!
+//! The loop is also shard-agnostic: sharded execution (DESIGN.md §13)
+//! happens entirely inside the backend — `backend::plane::ShardedBatch`
+//! implements the same `*BatchBackend` traits the hooks drive, so NO
+//! sharding code exists in any driver or hook.
 
 use anyhow::Result;
 
@@ -69,10 +74,7 @@ pub fn run_panel<H: PanelHook + ?Sized>(
     trees: &[StreamTree],
 ) -> Result<(Vec<f32>, Vec<FwTrace>)> {
     let r = trees.len();
-    let mut panel = Vec::with_capacity(r * x0.len());
-    for _ in 0..r {
-        panel.extend_from_slice(x0);
-    }
+    let mut panel = crate::backend::plane::tile_rows(x0, r);
     let mut traces = vec![FwTrace::default(); r];
     for k in 0..steps {
         hook.prepare(k, trees)?;

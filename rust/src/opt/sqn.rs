@@ -233,8 +233,10 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
         } else {
             if self.mem.any_active() {
                 // ONE padded dispatch produces every replication's
-                // Algorithm-4 direction (DESIGN.md §11)
-                self.backend.direction_batch(&self.mem, &self.g,
+                // Algorithm-4 direction (DESIGN.md §11); the backend sees
+                // a borrowed view so a sharded plane can slice it per
+                // shard with zero copies (DESIGN.md §13)
+                self.backend.direction_batch(self.mem.view(), &self.g,
                                              &mut self.dirs)?;
             }
             for i in 0..r {

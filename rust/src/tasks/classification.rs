@@ -263,6 +263,105 @@ impl BatchCorrectionMemory {
     pub fn y_panel(&self) -> &[f32] {
         &self.y_mem
     }
+
+    /// Borrowed whole-panel view — what [`crate::backend::LrBatchBackend`]
+    /// consumes, and what the shard plane slices per shard
+    /// (DESIGN.md §13).
+    pub fn view(&self) -> BatchMemView<'_> {
+        BatchMemView {
+            s_mem: &self.s_mem,
+            y_mem: &self.y_mem,
+            counts: &self.counts,
+            capacity: self.capacity,
+            n: self.n,
+        }
+    }
+}
+
+/// Borrowed view of a [`BatchCorrectionMemory`] — or of a contiguous
+/// shard of its replication rows (`backend::plane`, DESIGN.md §13).  The
+/// panels stay dense `[reps × capacity × n]` slices, so a shard's rows
+/// are one contiguous sub-slice and a shard view is the exact zero-copy
+/// input that shard's inner `direction_batch` dispatch consumes.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchMemView<'a> {
+    s_mem: &'a [f32],
+    y_mem: &'a [f32],
+    counts: &'a [usize],
+    capacity: usize,
+    n: usize,
+}
+
+impl<'a> BatchMemView<'a> {
+    pub fn reps(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn dim(&self) -> usize {
+        self.n
+    }
+
+    pub fn count(&self, r: usize) -> usize {
+        self.counts[r]
+    }
+
+    pub fn counts(&self) -> &'a [usize] {
+        self.counts
+    }
+
+    /// Whether row r has accepted at least one pair (rows that have not
+    /// take the plain-gradient step in the driver, exactly as the
+    /// sequential path does before its memory fills).
+    pub fn is_active(&self, r: usize) -> bool {
+        self.counts[r] > 0
+    }
+
+    pub fn any_active(&self) -> bool {
+        self.counts.iter().any(|&c| c > 0)
+    }
+
+    /// Row r as a padded per-replication view — the exact input the
+    /// shared Algorithm-4 recursions consume.
+    pub fn row(&self, r: usize) -> MemView<'a> {
+        assert!(r < self.reps());
+        let base = r * self.capacity * self.n;
+        let block = base..base + self.capacity * self.n;
+        MemView {
+            s_mem: &self.s_mem[block.clone()],
+            y_mem: &self.y_mem[block],
+            count: self.counts[r],
+            n: self.n,
+        }
+    }
+
+    /// The dense `[reps × capacity × n]` s-panel (zero-padded).
+    pub fn s_panel(&self) -> &'a [f32] {
+        self.s_mem
+    }
+
+    /// The dense `[reps × capacity × n]` y-panel (zero-padded).
+    pub fn y_panel(&self) -> &'a [f32] {
+        self.y_mem
+    }
+
+    /// Rows `rows` as their own dense view — contiguous slicing only,
+    /// matching the shard plane's partition (`backend::plane::ShardMap`).
+    pub fn shard(&self, rows: std::ops::Range<usize>) -> BatchMemView<'a> {
+        assert!(rows.start <= rows.end && rows.end <= self.reps(),
+                "shard rows out of range");
+        let block = self.capacity * self.n;
+        BatchMemView {
+            s_mem: &self.s_mem[rows.start * block..rows.end * block],
+            y_mem: &self.y_mem[rows.start * block..rows.end * block],
+            counts: &self.counts[rows],
+            capacity: self.capacity,
+            n: self.n,
+        }
+    }
 }
 
 /// Algorithm 4, explicit form (the paper's matrix-operation showcase):
@@ -498,6 +597,45 @@ mod tests {
         // panels expose the dense [R × cap × n] layout
         assert_eq!(batch.s_panel().len(), 2 * 3 * 2);
         assert_eq!(batch.s_panel()[3 * 2], 1.0); // row 1, slot 0, j 0
+    }
+
+    #[test]
+    fn batch_memory_shard_views_are_zero_copy_row_windows() {
+        // The shard plane's contract (DESIGN.md §13): a contiguous shard
+        // of a BatchMemView is itself a dense view whose rows, counts,
+        // and panels match the whole-panel view's corresponding rows.
+        let (reps, cap, n) = (5usize, 2usize, 3usize);
+        let mut batch = BatchCorrectionMemory::new(reps, cap, n);
+        for r in 1..reps {
+            for t in 0..r {
+                let s = vec![1.0 + (r + t) as f32; n];
+                let y = vec![0.5 + t as f32; n];
+                batch.push_row(r, &s, &y);
+            }
+        }
+        let whole = batch.view();
+        assert_eq!(whole.reps(), reps);
+        assert_eq!(whole.counts(), batch.counts());
+        let shard = whole.shard(2..5);
+        assert_eq!(shard.reps(), 3);
+        assert_eq!(shard.capacity(), cap);
+        assert_eq!(shard.dim(), n);
+        assert_eq!(shard.counts(), &whole.counts()[2..5]);
+        assert!(shard.is_active(0) && shard.any_active());
+        for (local, global) in (2..5).enumerate() {
+            let a = shard.row(local);
+            let b = whole.row(global);
+            assert_eq!(a.count, b.count, "row {}", global);
+            assert_eq!(a.s_mem, b.s_mem);
+            assert_eq!(a.y_mem, b.y_mem);
+        }
+        // the shard's panels are the contiguous sub-slices of the dense
+        // layout (what a shard's XLA dispatch uploads verbatim)
+        let block = cap * n;
+        assert_eq!(shard.s_panel(), &whole.s_panel()[2 * block..5 * block]);
+        assert_eq!(shard.y_panel(), &whole.y_panel()[2 * block..5 * block]);
+        // a row-0 shard of untouched rows is inactive
+        assert!(!whole.shard(0..1).any_active());
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod mean_variance;
 pub mod newsvendor;
 pub mod registry;
 
-pub use classification::{BatchCorrectionMemory, CorrectionMemory, MemView};
+pub use classification::{BatchCorrectionMemory, BatchMemView,
+                         CorrectionMemory, MemView};
 pub use newsvendor::NvLmo;
 pub use registry::SimTask;

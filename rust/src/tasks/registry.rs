@@ -23,6 +23,7 @@ use crate::backend::native::{
     NativeCvar, NativeCvarBatch, NativeLr, NativeLrBatch, NativeMode,
     NativeMv, NativeMvBatch, NativeNv, NativeNvBatch,
 };
+use crate::backend::plane::{self, ShardedBatch};
 use crate::backend::xla::{
     XlaCvar, XlaCvarBatch, XlaLr, XlaLrBatch, XlaMv, XlaMvBatch, XlaNv,
     XlaNvBatch,
@@ -97,10 +98,15 @@ pub trait SimTask: Sync {
     fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
         -> Result<Vec<RepRecord>>;
 
-    /// Advance all replications together through the task's
-    /// `*BatchBackend` (DESIGN.md §11).
-    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>>;
+    /// Advance all replications together through the shard-aware panel
+    /// plane (DESIGN.md §11/§13): `shards` contiguous row shards, one
+    /// inner `*BatchBackend` per shard built through this registration's
+    /// factories.  `shards == 1` is the single-panel batched engine;
+    /// every shard count is bit-identical to it and to `run_seq` on the
+    /// native arm (the coordinator resolves the count from the spec's
+    /// `ExecMode` and has already validated `1 ≤ shards ≤ reps`).
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+                 shards: usize) -> Result<Vec<RepRecord>>;
 
     /// A CI-sized native spec every registered task must complete —
     /// the registry-conformance suite (coordinator tests) runs / repeats /
@@ -289,8 +295,8 @@ impl SimTask for MeanVarianceTask {
         }
     }
 
-    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+                 shards: usize) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
@@ -298,17 +304,25 @@ impl SimTask for MeanVarianceTask {
         let trees = rep_subtrees(&tree, spec.reps);
         let traces = match spec.backend {
             BackendKind::Xla => {
+                // one shard-sized [R/S × …] artifact dispatch per shard
                 let engine = cx.engine()?;
-                let mut backend = XlaMvBatch::new(
-                    engine, &universe, p.samples, p.m_inner, spec.reps)?;
+                let mut backend = ShardedBatch::serial(
+                    spec.reps, shards, spec.size, |rows| {
+                        XlaMvBatch::new(engine, &universe, p.samples,
+                                        p.m_inner, rows.len())
+                    })?;
                 frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
                                           &trees)?
                     .1
             }
             _ => {
-                let mut backend = NativeMvBatch::new(
-                    &universe, p.samples, p.m_inner, spec.reps,
-                    cx.native_threads);
+                let threads = cx.native_threads;
+                let inner = plane::inner_threads(threads, shards);
+                let mut backend = ShardedBatch::pooled(
+                    spec.reps, shards, spec.size, threads, |rows| {
+                        Ok(NativeMvBatch::new(&universe, p.samples,
+                                              p.m_inner, rows.len(), inner))
+                    })?;
                 frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
                                           &trees)?
                     .1
@@ -440,8 +454,8 @@ impl SimTask for NewsvendorTask {
         }
     }
 
-    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+                 shards: usize) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let inst = NewsvendorInstance::generate(
             &tree, spec.size, spec.params.resources,
@@ -454,15 +468,23 @@ impl SimTask for NewsvendorTask {
         let traces = match spec.backend {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
-                let mut backend =
-                    XlaNvBatch::new(engine, &inst, p.samples, spec.reps)?;
+                let mut backend = ShardedBatch::serial(
+                    spec.reps, shards, spec.size, |rows| {
+                        XlaNvBatch::new(engine, &inst, p.samples,
+                                        rows.len())
+                    })?;
                 frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
                                           p.iters, p.m_inner, &trees)?
                     .1
             }
             _ => {
-                let mut backend = NativeNvBatch::new(
-                    &inst, p.samples, spec.reps, cx.native_threads);
+                let threads = cx.native_threads;
+                let inner = plane::inner_threads(threads, shards);
+                let mut backend = ShardedBatch::pooled(
+                    spec.reps, shards, spec.size, threads, |rows| {
+                        Ok(NativeNvBatch::new(&inst, p.samples, rows.len(),
+                                              inner))
+                    })?;
                 frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
                                           p.iters, p.m_inner, &trees)?
                     .1
@@ -612,8 +634,8 @@ impl SimTask for ClassificationTask {
         }
     }
 
-    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+                 shards: usize) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let data = ClassifyData::generate(&tree, spec.size);
         let cfg = Self::sqn_config(spec);
@@ -622,15 +644,22 @@ impl SimTask for ClassificationTask {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
                 let p = &spec.params;
-                let mut backend = XlaLrBatch::new(
-                    engine, &data, p.batch, p.hbatch, p.memory,
-                    spec.hessian_mode, spec.reps)?;
+                let mut backend = ShardedBatch::serial(
+                    spec.reps, shards, spec.size, |rows| {
+                        XlaLrBatch::new(engine, &data, p.batch, p.hbatch,
+                                        p.memory, spec.hessian_mode,
+                                        rows.len())
+                    })?;
                 sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
             }
             _ => {
-                let mut backend = NativeLrBatch::new(
-                    &data, spec.reps, cx.native_threads,
-                    spec.hessian_mode);
+                let threads = cx.native_threads;
+                let inner = plane::inner_threads(threads, shards);
+                let mut backend = ShardedBatch::pooled(
+                    spec.reps, shards, spec.size, threads, |rows| {
+                        Ok(NativeLrBatch::new(&data, rows.len(), inner,
+                                              spec.hessian_mode))
+                    })?;
                 sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
             }
         };
@@ -771,26 +800,36 @@ impl SimTask for MeanCvarTask {
         }
     }
 
-    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+                 shards: usize) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
         let x0 = cvar::start_iterate(spec.size);
+        // the joint [w, t] iterate makes the row width d+1 (tasks::cvar)
+        let row = spec.size + 1;
         let trees = rep_subtrees(&tree, spec.reps);
         let traces = match spec.backend {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
-                let mut backend = XlaCvarBatch::new(
-                    engine, &universe, p.samples, p.m_inner, spec.reps)?;
+                let mut backend = ShardedBatch::serial(
+                    spec.reps, shards, row, |rows| {
+                        XlaCvarBatch::new(engine, &universe, p.samples,
+                                          p.m_inner, rows.len())
+                    })?;
                 frank_wolfe::run_mv_batch(&mut backend, &x0, p.iters,
                                           &trees)?
                     .1
             }
             _ => {
-                let mut backend = NativeCvarBatch::new(
-                    &universe, p.samples, p.m_inner, spec.reps,
-                    cx.native_threads);
+                let threads = cx.native_threads;
+                let inner = plane::inner_threads(threads, shards);
+                let mut backend = ShardedBatch::pooled(
+                    spec.reps, shards, row, threads, |rows| {
+                        Ok(NativeCvarBatch::new(&universe, p.samples,
+                                                p.m_inner, rows.len(),
+                                                inner))
+                    })?;
                 frank_wolfe::run_mv_batch(&mut backend, &x0, p.iters,
                                           &trees)?
                     .1

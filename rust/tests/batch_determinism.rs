@@ -71,7 +71,7 @@ fn mv_batched_equals_sequential_bitwise() {
         |&(seed, size, reps)| {
             let spec = tiny_spec(TaskKind::MeanVariance, size, reps, seed);
             identical(&run_mode(&spec, ExecMode::Sequential),
-                      &run_mode(&spec, ExecMode::Batched))
+                      &run_mode(&spec, ExecMode::Batched { shards: 1 }))
         });
 }
 
@@ -81,7 +81,7 @@ fn nv_batched_equals_sequential_bitwise() {
         |&(seed, size, reps)| {
             let spec = tiny_spec(TaskKind::Newsvendor, size, reps, seed);
             identical(&run_mode(&spec, ExecMode::Sequential),
-                      &run_mode(&spec, ExecMode::Batched))
+                      &run_mode(&spec, ExecMode::Batched { shards: 1 }))
         });
 }
 
@@ -91,7 +91,7 @@ fn lr_batched_equals_sequential_bitwise() {
         |&(seed, size, reps)| {
             let spec = tiny_spec(TaskKind::Classification, size, reps, seed);
             identical(&run_mode(&spec, ExecMode::Sequential),
-                      &run_mode(&spec, ExecMode::Batched))
+                      &run_mode(&spec, ExecMode::Batched { shards: 1 }))
         });
 }
 
@@ -104,7 +104,7 @@ fn cvar_batched_equals_sequential_bitwise() {
         |&(seed, size, reps)| {
             let spec = tiny_spec(TaskKind::MeanCvar, size, reps, seed);
             identical(&run_mode(&spec, ExecMode::Sequential),
-                      &run_mode(&spec, ExecMode::Batched))
+                      &run_mode(&spec, ExecMode::Batched { shards: 1 }))
         });
 }
 
@@ -115,7 +115,7 @@ fn batched_replication_streams_stay_disjoint() {
     // reproducible call-to-call.
     for task in TaskKind::all() {
         let spec = tiny_spec(task, 12, 4, 77);
-        let a = run_mode(&spec, ExecMode::Batched);
+        let a = run_mode(&spec, ExecMode::Batched { shards: 1 });
         for i in 0..a.reps.len() {
             for j in i + 1..a.reps.len() {
                 assert_ne!(a.reps[i].objs, a.reps[j].objs,
@@ -123,7 +123,7 @@ fn batched_replication_streams_stay_disjoint() {
                            task, i, j);
             }
         }
-        let b = run_mode(&spec, ExecMode::Batched);
+        let b = run_mode(&spec, ExecMode::Batched { shards: 1 });
         assert!(identical(&a, &b), "task {}: batched run not reproducible",
                 task);
     }
@@ -238,7 +238,8 @@ fn padded_direction_bitwise_matches_ragged_per_row() {
             for mode in [HessianMode::Explicit, HessianMode::TwoLoop] {
                 let mut batch = NativeLrBatch::new(&data, reps, 3, mode);
                 let mut dirs = vec![f32::NAN; reps * n];
-                batch.direction_batch(&batch_mem, &g, &mut dirs).unwrap();
+                batch.direction_batch(batch_mem.view(), &g, &mut dirs)
+                    .unwrap();
                 for r in 0..reps {
                     let got = &dirs[r * n..(r + 1) * n];
                     if batch_mem.is_active(r) {
@@ -266,5 +267,48 @@ fn auto_mode_matches_both_explicit_modes() {
     let spec = tiny_spec(TaskKind::MeanVariance, 16, 3, 5);
     let auto = run_mode(&spec, ExecMode::Auto);
     assert!(identical(&auto, &run_mode(&spec, ExecMode::Sequential)));
-    assert!(identical(&auto, &run_mode(&spec, ExecMode::Batched)));
+    assert!(identical(&auto, &run_mode(&spec, ExecMode::Batched { shards: 1 })));
+}
+
+// ---------------------------------------------------------------------------
+// The shard-aware panel plane (DESIGN.md §13)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sharded_batched_equals_unsharded_bitwise() {
+    // The shard plane's refactor invariant, as a property over random
+    // (seed, size, reps) cells for EVERY registered task: every legal
+    // shard count 2..=R (which includes uneven R % S ≠ 0 splits for
+    // R ≥ 3 and the one-row-per-shard extreme S = R) produces the exact
+    // bits of the unsharded S = 1 panel.
+    check("sharded == unsharded", 3, random_cell, |&(seed, size, reps)| {
+        TaskKind::all().into_iter().all(|task| {
+            let spec = tiny_spec(task, size, reps, seed);
+            let unsharded =
+                run_mode(&spec, ExecMode::Batched { shards: 1 });
+            (2..=reps).all(|shards| {
+                identical(&unsharded,
+                          &run_mode(&spec, ExecMode::Batched { shards }))
+            })
+        })
+    });
+}
+
+#[test]
+fn sharded_equals_sequential_for_every_task() {
+    // The acceptance triangle, pinned (not randomized): R = 5 with
+    // S ∈ {1, 2, 5} covers the unsharded panel, an uneven 3+2 split, and
+    // one row per shard — each bit-identical to `--exec seq`.
+    let (reps, shard_counts) = (5usize, [1usize, 2, 5]);
+    for task in TaskKind::all() {
+        let spec = tiny_spec(task, 12, reps, 31);
+        let seq = run_mode(&spec, ExecMode::Sequential);
+        for shards in shard_counts {
+            let sharded = run_mode(&spec, ExecMode::Batched { shards });
+            assert!(sharded.batched);
+            assert_eq!(sharded.shards, shards, "task {}", task);
+            assert!(identical(&seq, &sharded),
+                    "task {}: S={} diverged from sequential", task, shards);
+        }
+    }
 }
