@@ -70,6 +70,24 @@ pub enum HessianMode {
     TwoLoop,
 }
 
+impl HessianMode {
+    /// CLI / wire-protocol name (the spec's canonical `hessian` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HessianMode::Explicit => "explicit",
+            HessianMode::TwoLoop => "twoloop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "explicit" => Some(HessianMode::Explicit),
+            "twoloop" | "two-loop" => Some(HessianMode::TwoLoop),
+            _ => None,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Replication-batched backends (DESIGN.md §11)
 // ---------------------------------------------------------------------------

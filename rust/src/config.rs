@@ -126,6 +126,20 @@ impl ExecMode {
             _ => 1,
         }
     }
+
+    /// Reassemble a mode from its wire encoding: the `as_str` mode name
+    /// plus an explicit shard count (`ExperimentSpec::to_json` splits the
+    /// two so the spec grammar stays flat).  Non-batched modes carry no
+    /// shard plan, so anything but `shards == 1` is rejected rather than
+    /// silently dropped — a spec that *meant* `--shards 3` must not hash
+    /// or run as an unsharded plan.
+    pub fn from_parts(mode: &str, shards: usize) -> Option<ExecMode> {
+        match ExecMode::parse(mode)? {
+            ExecMode::Batched { .. } => Some(ExecMode::Batched { shards }),
+            m if shards == 1 => Some(m),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for ExecMode {
@@ -223,6 +237,28 @@ mod tests {
         assert_eq!(ExecMode::parse("Batched"),
                    Some(ExecMode::Batched { shards: 1 }));
         assert_eq!(ExecMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn exec_mode_from_parts() {
+        assert_eq!(ExecMode::from_parts("auto", 1), Some(ExecMode::Auto));
+        assert_eq!(ExecMode::from_parts("sequential", 1),
+                   Some(ExecMode::Sequential));
+        assert_eq!(ExecMode::from_parts("batched", 3),
+                   Some(ExecMode::Batched { shards: 3 }));
+        assert_eq!(ExecMode::from_parts("batch", 1),
+                   Some(ExecMode::Batched { shards: 1 }));
+        // a shard count on a non-batched mode is a contradiction, not a
+        // default — reject instead of dropping the plan
+        assert_eq!(ExecMode::from_parts("auto", 2), None);
+        assert_eq!(ExecMode::from_parts("seq", 0), None);
+        assert_eq!(ExecMode::from_parts("wat", 1), None);
+        // round-trip through (as_str, shards) is identity
+        for e in [ExecMode::Auto, ExecMode::Sequential,
+                  ExecMode::Batched { shards: 1 },
+                  ExecMode::Batched { shards: 4 }] {
+            assert_eq!(ExecMode::from_parts(e.as_str(), e.shards()), Some(e));
+        }
     }
 
     #[test]

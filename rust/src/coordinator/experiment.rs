@@ -1,10 +1,19 @@
 //! Experiment specifications: one run (task × backend × size × reps) and
 //! full sweeps (the Figure-2 protocol).
+//!
+//! Since the experiment service (DESIGN.md §14) specs are also a *wire
+//! type*: [`ExperimentSpec::to_json`] / [`ExperimentSpec::from_json`] are
+//! the canonical encoding `simopt submit` ships over the socket, and
+//! [`ExperimentSpec::spec_hash`] over that canonical form is the service
+//! cache key.  parse∘render is identity (enforced by a property test in
+//! `tests/prop_invariants.rs` across every registered task, exec mode,
+//! and shard count), so equal specs hash equal however they were built.
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::backend::HessianMode;
 use crate::config::{BackendKind, ExecMode, TaskKind, TaskParams};
+use crate::util::json::{num, obj, s, Value};
 
 /// One experiment cell.
 #[derive(Debug, Clone)]
@@ -20,6 +29,12 @@ pub struct ExperimentSpec {
     /// How the replication axis executes (DESIGN.md §11).
     pub exec: ExecMode,
     pub params: TaskParams,
+    /// Where this run's report bundle persists (`None` = don't persist).
+    /// Threaded through the spec so concurrent served requests and CI runs
+    /// isolate their outputs instead of colliding in one `results/`
+    /// directory — a *delivery* detail, deliberately excluded from
+    /// [`ExperimentSpec::spec_hash`] (DESIGN.md §14).
+    pub results_dir: Option<String>,
 }
 
 impl ExperimentSpec {
@@ -35,6 +50,7 @@ impl ExperimentSpec {
             track_every: 10,
             exec: ExecMode::Auto,
             params: TaskParams::defaults(task, size),
+            results_dir: None,
         }
     }
 
@@ -83,6 +99,167 @@ impl ExperimentSpec {
         self
     }
 
+    /// Persist this run's report bundle under `dir` (DESIGN.md §14).
+    pub fn results_dir(mut self, dir: &str) -> Self {
+        self.results_dir = Some(dir.to_string());
+        self
+    }
+
+    // -- canonical wire encoding (DESIGN.md §14) ----------------------------
+
+    /// The canonical JSON encoding `simopt submit` ships over the wire.
+    /// Key set and order are fixed; `seed` is a decimal *string* because
+    /// the JSON layer holds numbers as `f64` and u64 seeds above 2^53
+    /// would silently lose bits.
+    pub fn to_json(&self) -> Value {
+        let p = &self.params;
+        obj(vec![
+            ("task", s(self.task.as_str())),
+            ("backend", s(self.backend.as_str())),
+            ("size", num(self.size as f64)),
+            ("reps", num(self.reps as f64)),
+            ("seed", s(&self.seed.to_string())),
+            ("hessian", s(self.hessian_mode.as_str())),
+            ("track_every", num(self.track_every as f64)),
+            ("exec", s(self.exec.as_str())),
+            ("shards", num(self.exec.shards() as f64)),
+            ("params", obj(vec![
+                ("size", num(p.size as f64)),
+                ("samples", num(p.samples as f64)),
+                ("m_inner", num(p.m_inner as f64)),
+                ("iters", num(p.iters as f64)),
+                ("batch", num(p.batch as f64)),
+                ("hbatch", num(p.hbatch as f64)),
+                ("memory", num(p.memory as f64)),
+                ("l_every", num(p.l_every as f64)),
+                ("beta", num(p.beta as f64)),
+                ("resources", num(p.resources as f64)),
+                ("tightness", num(p.tightness as f64)),
+            ])),
+            ("results_dir", match &self.results_dir {
+                Some(d) => s(d),
+                None => Value::Null,
+            }),
+        ])
+    }
+
+    /// Parse the wire encoding back.  Strict: every computation key is
+    /// required (`results_dir` — a delivery detail — may be absent or
+    /// `null`, so canonical encodings parse too), unknown keys are
+    /// rejected so a client typo becomes a typed error frame instead of a
+    /// silently defaulted field, and a `shards` count on a non-batched
+    /// mode is a contradiction (`ExecMode::from_parts`).  Shape/type
+    /// errors only — semantic validation stays in
+    /// [`ExperimentSpec::validate`] so the service can answer it with its
+    /// own error frame.
+    pub fn from_json(v: &Value) -> Result<ExperimentSpec> {
+        const KEYS: [&str; 10] =
+            ["task", "backend", "size", "reps", "seed", "hessian",
+             "track_every", "exec", "shards", "params"];
+        const PARAM_KEYS: [&str; 11] =
+            ["size", "samples", "m_inner", "iters", "batch", "hbatch",
+             "memory", "l_every", "beta", "resources", "tightness"];
+        let top = v.as_obj().context("spec must be a JSON object")?;
+        for (k, _) in top {
+            ensure!(KEYS.contains(&k.as_str()) || k == "results_dir",
+                    "unknown spec key '{}'", k);
+        }
+        for key in KEYS {
+            ensure!(v.get(key).is_some(), "spec is missing key '{}'", key);
+        }
+        let pv = v.get("params").unwrap();
+        let pobj = pv.as_obj().context("spec 'params' must be an object")?;
+        for (k, _) in pobj {
+            ensure!(PARAM_KEYS.contains(&k.as_str()),
+                    "unknown params key '{}'", k);
+        }
+        for key in PARAM_KEYS {
+            ensure!(pv.get(key).is_some(), "params is missing key '{}'", key);
+        }
+
+        let task_s = wire_str(v, "task")?;
+        let task = TaskKind::parse(task_s)
+            .ok_or_else(|| anyhow!("unknown task '{}'", task_s))?;
+        let backend_s = wire_str(v, "backend")?;
+        let backend = BackendKind::parse(backend_s)
+            .ok_or_else(|| anyhow!("unknown backend '{}'", backend_s))?;
+        let hessian_s = wire_str(v, "hessian")?;
+        let hessian_mode = HessianMode::parse(hessian_s)
+            .ok_or_else(|| anyhow!("unknown hessian mode '{}'", hessian_s))?;
+        let exec_s = wire_str(v, "exec")?;
+        let shards = wire_usize(v, "shards")?;
+        let exec = ExecMode::from_parts(exec_s, shards).ok_or_else(|| {
+            anyhow!("invalid execution plan '{}' with shards={}", exec_s,
+                    shards)
+        })?;
+        let seed_s = wire_str(v, "seed")?;
+        let seed: u64 = seed_s.parse().map_err(|_| {
+            anyhow!("spec 'seed' must be a decimal u64 string, got '{}'",
+                    seed_s)
+        })?;
+        let size = wire_usize(v, "size")?;
+        let params = TaskParams {
+            size: wire_usize(pv, "size")?,
+            samples: wire_usize(pv, "samples")?,
+            m_inner: wire_usize(pv, "m_inner")?,
+            iters: wire_usize(pv, "iters")?,
+            batch: wire_usize(pv, "batch")?,
+            hbatch: wire_usize(pv, "hbatch")?,
+            memory: wire_usize(pv, "memory")?,
+            l_every: wire_usize(pv, "l_every")?,
+            beta: wire_f64(pv, "beta")? as f32,
+            resources: wire_usize(pv, "resources")?,
+            tightness: wire_f64(pv, "tightness")? as f32,
+        };
+        ensure!(params.size == size,
+                "spec 'size' ({}) and 'params.size' ({}) disagree", size,
+                params.size);
+        let results_dir = match v.get("results_dir") {
+            None | Some(Value::Null) => None,
+            Some(Value::Str(d)) => Some(d.clone()),
+            Some(_) => bail!("spec 'results_dir' must be a string or null"),
+        };
+        Ok(ExperimentSpec {
+            task,
+            backend,
+            size,
+            reps: wire_usize(v, "reps")?,
+            seed,
+            hessian_mode,
+            track_every: wire_usize(v, "track_every")?,
+            exec,
+            params,
+            results_dir,
+        })
+    }
+
+    /// The content the service cache addresses (DESIGN.md §14): the wire
+    /// encoding minus `results_dir` — where a result is *delivered* never
+    /// changes what is *computed*, so two submissions differing only in
+    /// their results directory share one cache entry.
+    pub fn canonical_json(&self) -> Value {
+        match self.to_json() {
+            Value::Obj(kv) => Value::Obj(
+                kv.into_iter().filter(|(k, _)| k != "results_dir").collect()),
+            _ => unreachable!("to_json always renders an object"),
+        }
+    }
+
+    /// Stable content hash of [`ExperimentSpec::canonical_json`] (64-bit
+    /// FNV-1a over the compact rendering) — the service cache key.  The
+    /// cache stores the canonical string next to each entry and verifies
+    /// it on lookup, so a hash collision degrades to a cache miss, never
+    /// to a wrong result.
+    pub fn spec_hash(&self) -> u64 {
+        let text = self.canonical_json().to_string_compact();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     pub fn validate(&self) -> Result<()> {
         ensure!(self.size > 0, "size must be positive");
         ensure!(self.reps > 0, "reps must be positive");
@@ -118,6 +295,29 @@ impl ExperimentSpec {
     pub fn label(&self) -> String {
         format!("{}_{}_d{}", self.task, self.backend, self.size)
     }
+}
+
+// -- typed wire-field accessors (shape errors with the offending key) -------
+
+fn wire_str<'a>(v: &'a Value, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| anyhow!("spec '{}' must be a string", key))
+}
+
+fn wire_f64(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("spec '{}' must be a number", key))
+}
+
+fn wire_usize(v: &Value, key: &str) -> Result<usize> {
+    let n = v.get(key)
+        .and_then(Value::as_uint)
+        .ok_or_else(|| anyhow!("spec '{}' must be a non-negative integer",
+                               key))?;
+    ensure!(n <= u32::MAX as u64, "spec '{}' is out of range ({})", key, n);
+    Ok(n as usize)
 }
 
 /// The Figure-2 protocol: one task, a size axis, a set of backends.
@@ -251,6 +451,99 @@ mod tests {
             .sharded(2)
             .validate()
             .unwrap();
+    }
+
+    #[test]
+    fn wire_roundtrip_is_identity_for_every_task() {
+        // the deterministic arm of the round-trip property (the random arm
+        // lives in tests/prop_invariants.rs): every registered task, every
+        // exec mode, every legal shard count
+        for task in TaskKind::all() {
+            for backend in [BackendKind::Native, BackendKind::Xla] {
+                let reps = 4;
+                let mut modes = vec![ExecMode::Auto, ExecMode::Sequential];
+                for shards in 1..=reps {
+                    modes.push(ExecMode::Batched { shards });
+                }
+                for exec in modes {
+                    let spec = ExperimentSpec::new(task, backend)
+                        .replications(reps)
+                        .seed(u64::MAX - 7)
+                        .execution(exec)
+                        .results_dir("/tmp/rt");
+                    let text = spec.to_json().to_string_compact();
+                    let back = ExperimentSpec::from_json(
+                        &Value::parse(&text).unwrap()).unwrap();
+                    assert_eq!(back.to_json().to_string_compact(), text,
+                               "task {} exec {:?}", task, exec);
+                    assert_eq!(back.spec_hash(), spec.spec_hash());
+                    assert_eq!(back.seed, spec.seed, "u64 seed must survive");
+                    assert_eq!(back.exec, spec.exec);
+                    // the canonical (delivery-stripped) form parses too —
+                    // result payloads embed exactly this encoding
+                    let canon = spec.canonical_json().to_string_compact();
+                    let back = ExperimentSpec::from_json(
+                        &Value::parse(&canon).unwrap()).unwrap();
+                    assert_eq!(back.results_dir, None);
+                    assert_eq!(back.spec_hash(), spec.spec_hash());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn results_dir_is_excluded_from_the_cache_key() {
+        let a = ExperimentSpec::new(TaskKind::MeanVariance,
+                                    BackendKind::Native);
+        let b = a.clone().results_dir("/tmp/somewhere-else");
+        assert_eq!(a.spec_hash(), b.spec_hash(),
+                   "delivery location must not change the cache key");
+        assert_ne!(a.to_json().to_string_compact(),
+                   b.to_json().to_string_compact(),
+                   "…but the wire form still carries it");
+        let c = a.clone().seed(43);
+        assert_ne!(a.spec_hash(), c.spec_hash(),
+                   "computation-relevant fields must change the key");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_specs() {
+        let good = ExperimentSpec::new(TaskKind::Newsvendor,
+                                       BackendKind::Native);
+        let v = good.to_json();
+        // unknown key
+        let mut kv = match v.clone() {
+            Value::Obj(kv) => kv,
+            _ => unreachable!(),
+        };
+        kv.push(("surprise".to_string(), Value::Bool(true)));
+        assert!(ExperimentSpec::from_json(&Value::Obj(kv)).is_err());
+        // missing key
+        let kv: Vec<_> = match v.clone() {
+            Value::Obj(kv) => kv.into_iter()
+                .filter(|(k, _)| k != "reps")
+                .collect(),
+            _ => unreachable!(),
+        };
+        assert!(ExperimentSpec::from_json(&Value::Obj(kv)).is_err());
+        // shard count on a non-batched mode
+        let text = v.to_string_compact().replace("\"shards\":1",
+                                                 "\"shards\":3");
+        assert!(ExperimentSpec::from_json(&Value::parse(&text).unwrap())
+                    .is_err());
+        // numeric seed (the wire form is a decimal string)
+        let text = v.to_string_compact().replace("\"seed\":\"42\"",
+                                                 "\"seed\":42");
+        assert!(ExperimentSpec::from_json(&Value::parse(&text).unwrap())
+                    .is_err());
+        // disagreeing size / params.size
+        let text = v.to_string_compact().replace("\"size\":256,\"samples\"",
+                                                 "\"size\":255,\"samples\"");
+        assert!(ExperimentSpec::from_json(&Value::parse(&text).unwrap())
+                    .is_err());
+        // not an object at all
+        assert!(ExperimentSpec::from_json(&Value::parse("[1]").unwrap())
+                    .is_err());
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //! statistics behind Figure 2 (time mean ± 2σ) and Table 2 (RSE ± 2σ at
 //! checkpoints).
 
+use anyhow::{Context, Result};
+
 use crate::opt::{FwTrace, SqnTrace};
+use crate::util::json::{arr, num, obj, Value};
 use crate::util::stats::{self, OnlineStats};
 
 use super::experiment::ExperimentSpec;
@@ -42,6 +45,44 @@ impl RepRecord {
     /// Table-2 definition).
     pub fn rse_trace(&self) -> Vec<f64> {
         stats::rse_trace(&self.objs)
+    }
+
+    /// Wire encoding (DESIGN.md §14).  Finite f64s survive the JSON layer
+    /// exactly: the writer emits the shortest string that parses back to
+    /// the same value, so objective traces round-trip bitwise.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("total_s", num(self.total_s)),
+            ("objs", arr(self.objs.iter().map(|&o| num(o)).collect())),
+            ("obj_iters",
+             arr(self.obj_iters.iter().map(|&i| num(i as f64)).collect())),
+            ("step_s", arr(self.step_s.iter().map(|&t| num(t)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RepRecord> {
+        let f64s = |key: &str| -> Result<Vec<f64>> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .with_context(|| format!("record '{}' must be an array", key))?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .with_context(|| format!("record '{}' holds a \
+                                                  non-number", key))
+                })
+                .collect()
+        };
+        Ok(RepRecord {
+            total_s: v.get("total_s").and_then(Value::as_f64)
+                .context("record 'total_s' must be a number")?,
+            objs: f64s("objs")?,
+            obj_iters: f64s("obj_iters")?
+                .into_iter()
+                .map(|i| i as usize)
+                .collect(),
+            step_s: f64s("step_s")?,
+        })
     }
 }
 
@@ -140,6 +181,70 @@ impl RunResult {
         s
     }
 
+    /// Full wire encoding (DESIGN.md §14): spec + resolved plan + every
+    /// replication record, timings included.  This is what a `result`
+    /// frame carries.  The embedded spec is its *canonical* form
+    /// (`results_dir` omitted): a result describes a computation, and
+    /// where one submitter asked for delivery must not leak into the
+    /// payload another submitter receives from the cache.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("spec", self.spec.canonical_json()),
+            ("batched", Value::Bool(self.batched)),
+            ("shards", num(self.shards as f64)),
+            ("records",
+             arr(self.reps.iter().map(RepRecord::to_json).collect())),
+        ])
+    }
+
+    /// The *deterministic* payload — [`RunResult::to_json`] with the
+    /// timing measurements (`total_s`, `step_s`) dropped from every
+    /// record.  Two runs of the same spec produce byte-identical canonical
+    /// payloads however they executed (direct or served, any exec plan on
+    /// the native arm), which is exactly what the service conformance
+    /// suite and the CI serve-vs-run diff compare; wall-clock is a
+    /// measurement *about* a run, not part of its result.
+    pub fn canonical_json(&self) -> Value {
+        obj(vec![
+            ("spec", self.spec.canonical_json()),
+            ("batched", Value::Bool(self.batched)),
+            ("shards", num(self.shards as f64)),
+            ("records",
+             arr(self.reps
+                 .iter()
+                 .map(|r| obj(vec![
+                     ("objs",
+                      arr(r.objs.iter().map(|&o| num(o)).collect())),
+                     ("obj_iters",
+                      arr(r.obj_iters
+                          .iter()
+                          .map(|&i| num(i as f64))
+                          .collect())),
+                 ]))
+                 .collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<RunResult> {
+        let spec = ExperimentSpec::from_json(
+            v.get("spec").context("result is missing 'spec'")?)?;
+        let reps = v
+            .get("records")
+            .and_then(Value::as_arr)
+            .context("result 'records' must be an array")?
+            .iter()
+            .map(RepRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RunResult {
+            spec,
+            reps,
+            batched: v.get("batched").and_then(Value::as_bool)
+                .context("result 'batched' must be a bool")?,
+            shards: v.get("shards").and_then(Value::as_usize)
+                .context("result 'shards' must be an integer")?,
+        })
+    }
+
     pub fn summary(&self) -> String {
         let t = self.time_stats();
         format!(
@@ -171,6 +276,7 @@ mod tests {
             track_every: 1,
             exec: ExecMode::Auto,
             params: TaskParams::defaults(TaskKind::MeanVariance, 8),
+            results_dir: None,
         }
     }
 
@@ -230,6 +336,51 @@ mod tests {
     fn summary_contains_label() {
         let rr = RunResult::new(dummy_spec(), vec![rec(vec![1.0], 0.1)]);
         assert!(rr.summary().contains("mean_variance_native_d8"));
+    }
+
+    #[test]
+    fn wire_roundtrip_preserves_records_bitwise() {
+        // awkward values on purpose: non-representable decimals, subnormal
+        // scale, an exact integer (exercises the writer's integer path)
+        let rr = RunResult::new(dummy_spec(), vec![
+            rec(vec![0.1 + 0.2, 3.0, -1.0e-300, 0.123456789012345678], 0.37),
+            rec(vec![1.0 / 3.0, f64::MIN_POSITIVE, 2.0f64.powi(-40)], 0.01),
+        ]).executed(Some(2));
+        let text = rr.to_json().to_string_compact();
+        let back = RunResult::from_json(
+            &crate::util::json::Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.reps.len(), rr.reps.len());
+        for (a, b) in rr.reps.iter().zip(&back.reps) {
+            // bit-level, not just ==: the wire layer must not perturb a ulp
+            let bits = |v: &[f64]| -> Vec<u64> {
+                v.iter().map(|x| x.to_bits()).collect()
+            };
+            assert_eq!(bits(&a.objs), bits(&b.objs));
+            assert_eq!(bits(&a.step_s), bits(&b.step_s));
+            assert_eq!(a.total_s.to_bits(), b.total_s.to_bits());
+            assert_eq!(a.obj_iters, b.obj_iters);
+        }
+        assert!(back.batched);
+        assert_eq!(back.shards, 2);
+        assert_eq!(back.to_json().to_string_compact(), text);
+    }
+
+    #[test]
+    fn canonical_payload_drops_timings_only() {
+        let a = RunResult::new(dummy_spec(), vec![rec(vec![2.0, 1.0], 0.5)]);
+        let mut b = RunResult::new(dummy_spec(),
+                                   vec![rec(vec![2.0, 1.0], 0.9)]);
+        b.reps[0].total_s = 123.0;
+        // same objectives, different wall-clock: canonical payloads agree…
+        assert_eq!(a.canonical_json().to_string_pretty(),
+                   b.canonical_json().to_string_pretty());
+        // …full wire payloads don't
+        assert_ne!(a.to_json().to_string_compact(),
+                   b.to_json().to_string_compact());
+        // and a different objective shows up in the canonical form
+        let c = RunResult::new(dummy_spec(), vec![rec(vec![2.0, 1.1], 0.5)]);
+        assert_ne!(a.canonical_json().to_string_pretty(),
+                   c.canonical_json().to_string_pretty());
     }
 
     #[test]

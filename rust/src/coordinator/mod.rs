@@ -94,7 +94,17 @@ impl Coordinator {
             Some(shards) => task.run_batch(self, spec, shards)?,
             None => task.run_seq(self, spec)?,
         };
-        Ok(RunResult::new(spec.clone(), records).executed(plan))
+        let result = RunResult::new(spec.clone(), records).executed(plan);
+        // Per-run report isolation (DESIGN.md §14): a spec that names its
+        // own results directory gets its report bundle there — concurrent
+        // served requests and CI runs never collide in one shared
+        // `results/` tree.  `None` (the default) keeps the historical
+        // behavior: single runs persist nothing.
+        if let Some(dir) = &spec.results_dir {
+            report::persist_run_report(dir, &result)
+                .with_context(|| format!("persisting report under {}", dir))?;
+        }
+        Ok(result)
     }
 
     /// Resolve the spec's execution mode into a concrete plan
@@ -265,6 +275,31 @@ mod tests {
     }
 
     // -- plan selection and guard rails -------------------------------------
+
+    #[test]
+    fn results_dir_isolates_per_run_reports() {
+        let mut c = coord();
+        let dir = std::env::temp_dir().join("simopt-results-dir-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let task = registry::get(TaskKind::MeanVariance);
+        // default: no per-run persistence
+        let res = c.run(&task.smoke_spec()).unwrap();
+        assert!(!dir.exists());
+        // a spec naming its own directory writes the full bundle there
+        let spec = task.smoke_spec()
+            .results_dir(&dir.to_string_lossy());
+        let isolated = c.run(&spec).unwrap();
+        let name = report::run_report_name(&isolated);
+        for suffix in ["fig2.md", "summary.csv", "summary.json"] {
+            let p = dir.join(format!("{}_{}", name, suffix));
+            assert!(p.exists(), "{} missing", p.display());
+        }
+        // delivery location does not perturb the computation
+        for (a, b) in res.reps.iter().zip(&isolated.reps) {
+            assert_eq!(a.objs, b.objs);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 
     #[test]
     fn invalid_spec_rejected() {

@@ -1,6 +1,11 @@
 //! Paper-shaped report rendering: Figure-2 timing tables (size × backend,
-//! mean ± 2σ, speedup column) and Table-2 RSE tables, as markdown + CSV,
-//! persisted under `results/`.
+//! mean ± 2σ, speedup column) and Table-2 RSE tables, as markdown + CSV.
+//!
+//! Nothing here pins a directory: [`write_report`] takes the destination
+//! from the caller — the CLI's `--results`, a spec's `--results-dir`
+//! (per-run isolation, DESIGN.md §14), or a test's temp dir — so
+//! concurrent served requests and CI runs never collide in one shared
+//! `results/` tree.
 
 use std::collections::BTreeMap;
 use std::fs;
@@ -235,6 +240,28 @@ pub fn results_json(results: &[RunResult]) -> Value {
         .collect())
 }
 
+/// Checkpoint fractions every default report bundle uses.
+pub const DEFAULT_FRACS: [f64; 4] = [0.1, 0.25, 0.5, 1.0];
+
+/// The bundle name one run's report persists under: the human-readable
+/// label plus the spec's content hash — `label()` alone is only
+/// task_backend_dsize, so two specs differing in seed/reps/exec sharing
+/// one `--results-dir` would silently overwrite each other without the
+/// hash.
+pub fn run_report_name(result: &RunResult) -> String {
+    format!("run_{}_{:016x}", result.spec.label(), result.spec.spec_hash())
+}
+
+/// Persist ONE run's report bundle under `dir` with the canonical
+/// [`run_report_name`] naming — the single recipe shared by
+/// `Coordinator::run` (executed runs with a `results_dir`) and the
+/// experiment service's cache-hit delivery (DESIGN.md §14), so the two
+/// paths can never diverge in naming or checkpoint fractions.
+pub fn persist_run_report(dir: &str, result: &RunResult) -> Result<()> {
+    write_report(dir, &run_report_name(result),
+                 std::slice::from_ref(result), &DEFAULT_FRACS)
+}
+
 /// Persist the full report bundle under `dir`.
 pub fn write_report(dir: impl AsRef<Path>, name: &str, results: &[RunResult],
                     fracs: &[f64]) -> Result<()> {
@@ -271,6 +298,7 @@ mod tests {
             track_every: 1,
             exec: ExecMode::Auto,
             params: TaskParams::defaults(TaskKind::MeanVariance, size),
+            results_dir: None,
         };
         let rec = |sc: f64| RepRecord {
             total_s: step * sc * 4.0,

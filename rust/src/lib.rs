@@ -32,6 +32,12 @@
 //! still bit-identical for every S.  [`config::ExecMode`] selects the
 //! plan per experiment.
 //!
+//! The whole stack can also stay *resident*: the [`service`] layer
+//! (`simopt serve` / `simopt submit`, DESIGN.md §14) keeps warm
+//! coordinators behind a Unix-socket JSON-lines protocol with a bounded
+//! admission queue and a content-addressed result cache, serving results
+//! bit-identical to direct runs without re-paying startup per experiment.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
@@ -57,6 +63,7 @@ pub mod lp;
 pub mod opt;
 pub mod rng;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod tasks;
 pub mod util;
@@ -71,5 +78,6 @@ pub mod prelude {
     pub use crate::config::{BackendKind, ExecMode, TaskKind};
     pub use crate::coordinator::{Coordinator, ExperimentSpec, RunResult};
     pub use crate::rng::{Philox, StreamTree};
+    pub use crate::service::{Client, Response, Server, ServerConfig};
     pub use crate::tasks::registry::{SimTask, TaskBackend};
 }

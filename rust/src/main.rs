@@ -4,6 +4,8 @@
 //!   run        one experiment cell (task × backend × size)
 //!   sweep      Figure-2 protocol: size axis × backends, timing table
 //!   accuracy   Table-2 protocol: RSE at checkpoints across backends
+//!   serve      persistent experiment service on a unix socket (§14)
+//!   submit     send a spec (or status/shutdown) to a running server
 //!   artifacts  list AOT artifacts from the manifest
 //!   hardware   print the execution-backend spec table (Table-1 analogue)
 
@@ -11,7 +13,9 @@ use anyhow::{bail, Result};
 
 use simopt::backend::HessianMode;
 use simopt::config::{default_sizes, BackendKind, ExecMode, TaskKind};
-use simopt::coordinator::{report, Coordinator, ExperimentSpec, SweepSpec};
+use simopt::coordinator::{report, Coordinator, ExperimentSpec, RunResult,
+                          SweepSpec};
+use simopt::service::{Client, Response, Server, ServerConfig};
 use simopt::tasks::registry;
 use simopt::util::cli::Args;
 
@@ -37,6 +41,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "run" => cmd_run(rest),
         "sweep" => cmd_sweep(rest),
         "accuracy" => cmd_accuracy(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "artifacts" => cmd_artifacts(rest),
         "hardware" => cmd_hardware(rest),
         "help" | "--help" | "-h" => {
@@ -56,6 +62,8 @@ fn print_usage() {
          \x20 run        one experiment (--task --backend --size ...)\n\
          \x20 sweep      Figure-2 timing sweep (--task --sizes --backends)\n\
          \x20 accuracy   Table-2 RSE comparison (--task --size)\n\
+         \x20 serve      persistent experiment service on a unix socket\n\
+         \x20 submit     send a spec / status / shutdown to a server\n\
          \x20 artifacts  list compiled artifacts\n\
          \x20 hardware   backend spec table\n\n\
          TASKS (from the registry — every row works with every command):"
@@ -101,13 +109,17 @@ fn parse_backends(a: &Args) -> Result<Vec<BackendKind>> {
         .collect()
 }
 
-fn common_flags(args: Args) -> Args {
+/// `--task` help line, leaked once so flag declarations stay `'static`.
+fn task_help() -> &'static str {
     use std::sync::OnceLock;
     static TASK_HELP: OnceLock<String> = OnceLock::new();
-    let help: &'static str = TASK_HELP
+    TASK_HELP
         .get_or_init(|| format!("task: {}", task_choices()))
-        .as_str();
-    args.flag("task", Some("mv"), help)
+        .as_str()
+}
+
+fn common_flags(args: Args) -> Args {
+    args.flag("task", Some("mv"), task_help())
         .flag("artifacts", Some("artifacts"), "artifact directory")
         .flag("results", Some("results"), "results directory")
         .flag("seed", Some("42"), "experiment seed")
@@ -136,11 +148,10 @@ fn epochs_default(task: TaskKind, a: &Args) -> Result<usize> {
 }
 
 fn hessian_mode(a: &Args) -> Result<HessianMode> {
-    match a.get("hessian").unwrap_or_default().as_str() {
-        "explicit" => Ok(HessianMode::Explicit),
-        "twoloop" | "two-loop" => Ok(HessianMode::TwoLoop),
-        other => bail!("--hessian must be explicit|twoloop, got '{}'", other),
-    }
+    let v = a.get("hessian").unwrap_or_default();
+    HessianMode::parse(&v)
+        .ok_or_else(|| anyhow::anyhow!("--hessian must be explicit|twoloop, \
+                                        got '{}'", v))
 }
 
 fn exec_mode(a: &Args) -> Result<ExecMode> {
@@ -158,31 +169,60 @@ fn exec_mode(a: &Args) -> Result<ExecMode> {
     }
 }
 
-fn cmd_run(rest: &[String]) -> Result<()> {
-    let a = exec_flag(common_flags(Args::new("run", "run one experiment cell")),
-                      "auto")
-        .flag("backend", Some("native"), "backend: native | native_par | xla")
-        .flag("size", None, "problem dimension (default: task's smallest)")
-        .parse(rest)
-        .map_err(|e| anyhow::anyhow!("{}", e))?;
-    let task = parse_task(&a)?;
+/// Build one experiment spec from the shared `run`/`submit` flag set.
+fn spec_from_flags(a: &Args) -> Result<ExperimentSpec> {
+    let task = parse_task(a)?;
     let backend = BackendKind::parse(&a.get("backend").unwrap())
         .ok_or_else(|| anyhow::anyhow!("bad --backend"))?;
     let size = match a.get("size") {
         Some(_) => a.get_usize("size")?,
         None => default_sizes(task)[0],
     };
-    let spec = ExperimentSpec::new(task, backend)
+    let mut spec = ExperimentSpec::new(task, backend)
         .size(size)
-        .epochs(epochs_default(task, &a)?)
+        .epochs(epochs_default(task, a)?)
         .replications(a.get_usize("reps")?)
         .seed(a.get_u64("seed")?)
-        .hessian(hessian_mode(&a)?)
-        .execution(exec_mode(&a)?);
+        .hessian(hessian_mode(a)?)
+        .execution(exec_mode(a)?);
+    if let Some(dir) = a.get("results-dir") {
+        spec = spec.results_dir(&dir);
+    }
+    Ok(spec)
+}
+
+/// Persist the deterministic result payload (`RunResult::canonical_json`
+/// — spec + objective traces, timings excluded) when `--out` was given;
+/// byte-identical between `run` and `submit` for the same spec, which is
+/// what the CI service smoke diffs.
+fn write_out(a: &Args, result: &RunResult) -> Result<()> {
+    if let Some(path) = a.get("out") {
+        std::fs::write(&path,
+                       result.canonical_json().to_string_pretty())?;
+        eprintln!("[out] wrote {}", path);
+    }
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let a = exec_flag(common_flags(Args::new("run", "run one experiment cell")),
+                      "auto")
+        .flag("backend", Some("native"), "backend: native | native_par | xla")
+        .flag("size", None, "problem dimension (default: task's smallest)")
+        .flag("results-dir", None,
+              "per-run report bundle directory (threaded through the spec \
+               so concurrent runs don't collide; DESIGN.md §14)")
+        .flag("out", None,
+              "write the deterministic result payload (JSON) here")
+        .parse(rest)
+        .map_err(|e| anyhow::anyhow!("{}", e))?;
+    let task = parse_task(&a)?;
+    let spec = spec_from_flags(&a)?;
     let mut coord =
         Coordinator::new(&a.get("artifacts").unwrap(), &a.get("results").unwrap())?;
     let result = coord.run(&spec)?;
     println!("{}", result.summary());
+    write_out(&a, &result)?;
     let t = result.time_stats();
     let unit = if task == TaskKind::Classification { "iter" } else { "epoch" };
     if result.batched {
@@ -232,7 +272,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
     let md = report::figure2_markdown(&results);
     println!("{}", md);
     report::write_report(&results_dir, &format!("sweep_{}", task), &results,
-                         &[0.1, 0.25, 0.5, 1.0])?;
+                         &report::DEFAULT_FRACS)?;
     println!("[report] written to {}/sweep_{}_*", results_dir, task);
     Ok(())
 }
@@ -278,6 +318,107 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
     report::write_report(&results_dir, &format!("accuracy_{}", task), &results,
                          &fracs)?;
     Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let a = Args::new("serve", "persistent experiment service (DESIGN.md §14)")
+        .flag("socket", Some("simopt.sock"), "unix socket path to listen on")
+        .flag("artifacts", Some("artifacts"), "artifact directory")
+        .flag("results", Some("results"),
+              "default results directory (a spec's --results-dir overrides \
+               per request)")
+        .flag("workers", Some("1"),
+              "executor threads, one warm coordinator each")
+        .flag("queue", Some("16"),
+              "admission queue capacity (a full queue answers `busy`)")
+        .flag("cache", Some("256"),
+              "result-cache bound in entries (FIFO eviction; 0 disables \
+               caching)")
+        .parse(rest)
+        .map_err(|e| anyhow::anyhow!("{}", e))?;
+    let cfg = ServerConfig {
+        socket: a.get("socket").unwrap().into(),
+        artifact_dir: a.get("artifacts").unwrap(),
+        results_dir: a.get("results").unwrap(),
+        workers: a.get_usize("workers")?,
+        queue_capacity: a.get_usize("queue")?,
+        cache_capacity: a.get_usize("cache")?,
+    };
+    let server = Server::bind(cfg)?;
+    let cfg = server.config();
+    eprintln!(
+        "[serve] listening on {} (workers={}, queue={}, artifacts={})",
+        cfg.socket.display(), cfg.workers, cfg.queue_capacity,
+        cfg.artifact_dir
+    );
+    let stats = server.run()?;
+    eprintln!(
+        "[serve] graceful shutdown: {} executed, {} cache hits, {} cached \
+         entries",
+        stats.executed, stats.cache_hits, stats.cache_entries
+    );
+    Ok(())
+}
+
+fn cmd_submit(rest: &[String]) -> Result<()> {
+    let a = exec_flag(
+        Args::new("submit",
+                  "submit a spec to a running `simopt serve` (DESIGN.md §14)")
+            .flag("socket", Some("simopt.sock"), "server socket path")
+            .flag("task", Some("mv"), task_help())
+            .flag("backend", Some("native"),
+                  "backend: native | native_par | xla")
+            .flag("size", None, "problem dimension (default: task's smallest)")
+            .flag("seed", Some("42"), "experiment seed")
+            .flag("reps", Some("5"), "replications")
+            .flag("epochs", None, "epochs (FW) / iterations (SQN)")
+            .flag("hessian", Some("explicit"),
+                  "SQN Hessian: explicit | twoloop")
+            .flag("results-dir", None,
+                  "server-side report bundle directory for this request")
+            .flag("out", None,
+                  "write the deterministic result payload (JSON) here")
+            .switch("status", "query server counters instead of submitting")
+            .switch("shutdown", "request graceful server shutdown"),
+        "auto")
+        .parse(rest)
+        .map_err(|e| anyhow::anyhow!("{}", e))?;
+    let mut client = Client::connect(a.get("socket").unwrap())?;
+    if a.get_bool("status") {
+        let st = client.status()?;
+        println!(
+            "[status] queue_depth={} capacity={} workers={} executed={} \
+             cache_entries={} cache_hits={}",
+            st.queue_depth, st.capacity, st.workers, st.executed,
+            st.cache_entries, st.cache_hits
+        );
+        return Ok(());
+    }
+    if a.get_bool("shutdown") {
+        client.shutdown()?;
+        println!("[submit] server acknowledged shutdown");
+        return Ok(());
+    }
+    let spec = spec_from_flags(&a)?;
+    let resp = client.submit_with(&spec, |id, position| {
+        eprintln!("[submit] queued id={} position={}", id, position);
+    })?;
+    match resp {
+        Response::Completed { id, cache_hit, result } => {
+            println!("{}", result.summary());
+            println!("[submit] result id={} cache_hit={} exec={} shards={}",
+                     id, cache_hit,
+                     if result.batched { "batched" } else { "sequential" },
+                     result.shards);
+            write_out(&a, &result)?;
+            Ok(())
+        }
+        Response::Busy { capacity } => bail!(
+            "server busy: admission queue full (capacity {}) — retry later \
+             or raise `simopt serve --queue`", capacity),
+        Response::Error { message } => bail!("server error: {}", message),
+        other => bail!("unexpected server answer: {:?}", other),
+    }
 }
 
 fn cmd_artifacts(rest: &[String]) -> Result<()> {

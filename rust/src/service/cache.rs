@@ -1,0 +1,180 @@
+//! Content-addressed result cache (DESIGN.md §14).
+//!
+//! Entries are keyed by [`ExperimentSpec::spec_hash`] — the FNV-1a hash
+//! of the spec's canonical JSON (delivery fields like `results_dir`
+//! excluded), computed over the *validated* spec.  The canonical string
+//! itself is stored next to each entry and compared on lookup, so a hash
+//! collision degrades to a cache miss (the later spec recomputes and
+//! takes the slot), never to returning another experiment's result.
+//!
+//! Every run in this repo is deterministic given its spec (that is the
+//! whole §11/§13 invariant), which is what makes result caching *sound*:
+//! a repeat submission's recomputation would be bit-identical to the
+//! stored payload, so the service skips it and answers from the cache
+//! with a `cache_hit` marker.
+//!
+//! The cache is bounded (`simopt serve --cache N` entries): payloads
+//! carry full per-replication traces, and a long-lived server under
+//! heavy traffic must not grow without limit.  Eviction is
+//! insertion-order FIFO — the oldest entry leaves when the bound is hit;
+//! an evicted spec simply recomputes on its next submission, so eviction
+//! can never change an answer.  Capacity 0 disables caching entirely.
+//!
+//! [`ExperimentSpec::spec_hash`]: crate::coordinator::ExperimentSpec::spec_hash
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Value;
+
+struct Entry {
+    /// The canonical spec string the key was hashed from.
+    canonical: String,
+    /// The stored `RunResult::to_json` payload.  Behind an `Arc` so a hit
+    /// hands out a reference-count bump, not a deep clone of a full
+    /// trace payload, while the cache mutex is held.
+    result: Arc<Value>,
+}
+
+struct State {
+    map: HashMap<u64, Entry>,
+    /// Keys in insertion order (FIFO eviction victims from the front).
+    order: VecDeque<u64>,
+    hits: u64,
+}
+
+/// Shared across the server's handler and worker threads.
+pub struct ResultCache {
+    state: Mutex<State>,
+    capacity: usize,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> Self {
+        ResultCache {
+            state: Mutex::new(State {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                hits: 0,
+            }),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Stored payload for `(key, canonical)`, counting a hit.  A key match
+    /// with a different canonical string is a collision → miss.
+    pub fn get(&self, key: u64, canonical: &str) -> Option<Arc<Value>> {
+        let mut st = self.state.lock().unwrap();
+        match st.map.get(&key) {
+            Some(e) if e.canonical == canonical => {
+                let v = Arc::clone(&e.result);
+                st.hits += 1;
+                Some(v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Store (or replace) the payload for `key`, evicting the oldest
+    /// entries past the capacity bound.
+    pub fn insert(&self, key: u64, canonical: &str, result: Arc<Value>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        let entry = Entry { canonical: canonical.to_string(), result };
+        if st.map.insert(key, entry).is_none() {
+            st.order.push_back(key);
+        }
+        while st.map.len() > self.capacity {
+            match st.order.pop_front() {
+                Some(old) => {
+                    st.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.state.lock().unwrap().hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{num, obj};
+
+    #[test]
+    fn miss_then_hit() {
+        let c = ResultCache::new(8);
+        assert!(c.get(7, "spec-a").is_none());
+        assert_eq!(c.hits(), 0);
+        c.insert(7, "spec-a", Arc::new(obj(vec![("x", num(1.0))])));
+        assert_eq!(c.entries(), 1);
+        let v = c.get(7, "spec-a").unwrap();
+        assert_eq!(v.get("x").unwrap().as_f64(), Some(1.0));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.entries(), 1);
+    }
+
+    #[test]
+    fn collision_degrades_to_miss_not_wrong_result() {
+        let c = ResultCache::new(8);
+        c.insert(7, "spec-a", Arc::new(obj(vec![("x", num(1.0))])));
+        // same key, different canonical content: NOT served
+        assert!(c.get(7, "spec-b").is_none());
+        assert_eq!(c.hits(), 0);
+        // the later spec takes the slot
+        c.insert(7, "spec-b", Arc::new(obj(vec![("x", num(2.0))])));
+        assert_eq!(c.entries(), 1);
+        assert_eq!(c.get(7, "spec-b").unwrap().get("x").unwrap().as_f64(),
+                   Some(2.0));
+        assert!(c.get(7, "spec-a").is_none());
+    }
+
+    #[test]
+    fn distinct_keys_coexist() {
+        let c = ResultCache::new(8);
+        c.insert(1, "a", Arc::new(num(1.0)));
+        c.insert(2, "b", Arc::new(num(2.0)));
+        assert_eq!(c.entries(), 2);
+        assert_eq!(c.get(1, "a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(c.get(2, "b").unwrap().as_f64(), Some(2.0));
+        assert_eq!(c.hits(), 2);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest_first() {
+        let c = ResultCache::new(2);
+        c.insert(1, "a", Arc::new(num(1.0)));
+        c.insert(2, "b", Arc::new(num(2.0)));
+        c.insert(3, "c", Arc::new(num(3.0)));
+        assert_eq!(c.entries(), 2, "bound holds");
+        assert!(c.get(1, "a").is_none(), "oldest entry evicted");
+        assert!(c.get(2, "b").is_some());
+        assert!(c.get(3, "c").is_some());
+        // replacing an existing key does not grow the cache or re-evict
+        c.insert(2, "b2", Arc::new(num(4.0)));
+        assert_eq!(c.entries(), 2);
+        assert!(c.get(3, "c").is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let c = ResultCache::new(0);
+        c.insert(1, "a", Arc::new(num(1.0)));
+        assert_eq!(c.entries(), 0);
+        assert!(c.get(1, "a").is_none());
+        assert_eq!(c.hits(), 0);
+    }
+}

@@ -1,0 +1,41 @@
+//! The persistent experiment service (`simopt serve` / `simopt submit`,
+//! DESIGN.md §14).
+//!
+//! PRs 1–4 built the execution stack — batched replication spine, task
+//! registry, shard-aware panel plane — but its only entry point was a
+//! one-shot CLI process that pays full startup (artifact load, engine
+//! init, thread budget discovery) per experiment.  Lee et al. and
+//! Zhou–Lange–Suchard both locate the accelerator speedup in amortizing
+//! dispatch/setup across many concurrent requests; this module is that
+//! amortization layer: a server that keeps [`Coordinator`] state warm
+//! across requests, behind a small, versioned JSON-lines protocol over a
+//! Unix-domain socket.
+//!
+//! * [`protocol`] — frame grammar + [`Client`]; specs travel in their
+//!   canonical [`ExperimentSpec::to_json`] encoding.
+//! * [`queue`] — bounded FIFO admission with typed `busy` backpressure.
+//! * [`cache`] — content-addressed results keyed by
+//!   [`ExperimentSpec::spec_hash`]; repeat submissions re-execute nothing.
+//! * [`server`] — accept loop, warm per-worker coordinators, graceful
+//!   drain on `shutdown`.
+//!
+//! The serving path inherits the repo's core invariant unchanged: a
+//! served result is bit-identical to a direct `simopt run` of the same
+//! spec on every exec plan and legal shard count, enforced by
+//! `tests/service_conformance.rs` and the CI service smoke.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+//! [`ExperimentSpec::to_json`]: crate::coordinator::ExperimentSpec::to_json
+//! [`ExperimentSpec::spec_hash`]:
+//!     crate::coordinator::ExperimentSpec::spec_hash
+
+pub mod cache;
+pub mod protocol;
+pub mod queue;
+pub mod server;
+
+pub use cache::ResultCache;
+pub use protocol::{Client, Request, Response, StatusInfo,
+                   PROTOCOL_VERSION};
+pub use queue::{Bounded, PushError};
+pub use server::{Server, ServerConfig, ServerStats};

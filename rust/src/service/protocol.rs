@@ -1,0 +1,426 @@
+//! Versioned JSON-lines wire protocol for `simopt serve` / `simopt submit`
+//! (DESIGN.md §14 gives the full grammar).
+//!
+//! Framing: every frame is ONE line of compact JSON
+//! (`Value::to_string_compact` never emits a newline) terminated by `\n`,
+//! over a Unix-domain stream socket.  Every frame carries `"v": 1`; a
+//! server answers an unknown version or a malformed line with a typed
+//! `error` frame rather than dropping the connection, so clients always
+//! have something to report.
+//!
+//! Conversation shape: one *request* per connection.  `submit` is answered
+//! by an immediate `queued` ack (or `busy` / `error`), then — on the same
+//! connection, once a worker finishes — the final `result` frame; `status`
+//! and `shutdown` are answered by a single frame.  Specs travel in the
+//! canonical [`ExperimentSpec::to_json`] encoding, results as
+//! [`RunResult::to_json`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{ExperimentSpec, RunResult};
+use crate::util::json::{num, obj, s, Value};
+
+/// Bump on any frame-grammar change; the server rejects other versions.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Client → server frames.
+#[derive(Debug)]
+pub enum Request {
+    /// Run (or answer from cache) one experiment spec.
+    Submit(Box<ExperimentSpec>),
+    /// Report queue/cache/worker counters.
+    Status,
+    /// Stop accepting, drain admitted work, exit.
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Value {
+        let head = |t: &str| vec![("v", num(PROTOCOL_VERSION as f64)),
+                                  ("type", s(t))];
+        match self {
+            Request::Submit(spec) => {
+                let mut kv = head("submit");
+                kv.push(("spec", spec.to_json()));
+                obj(kv)
+            }
+            Request::Status => obj(head("status")),
+            Request::Shutdown => obj(head("shutdown")),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Request> {
+        check_version(v)?;
+        match frame_type(v)? {
+            "submit" => {
+                let spec = v.get("spec")
+                    .context("submit frame is missing 'spec'")?;
+                Ok(Request::Submit(Box::new(ExperimentSpec::from_json(spec)?)))
+            }
+            "status" => Ok(Request::Status),
+            "shutdown" => Ok(Request::Shutdown),
+            other => bail!("unknown request type '{}'", other),
+        }
+    }
+}
+
+/// Server status counters (the `status` response payload).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatusInfo {
+    pub queue_depth: usize,
+    pub capacity: usize,
+    pub workers: usize,
+    /// Experiments actually executed (cache hits excluded).
+    pub executed: u64,
+    pub cache_entries: usize,
+    pub cache_hits: u64,
+}
+
+/// Server → client frames.
+#[derive(Debug)]
+pub enum Response {
+    /// Submit ack: admitted at 1-based queue `position`.
+    Queued { id: u64, position: usize },
+    /// Terminal submit answer: the run's payload, `cache_hit` marking a
+    /// result served from the content-addressed cache with no execution.
+    Completed { id: u64, cache_hit: bool, result: Box<RunResult> },
+    /// Typed backpressure: the admission queue holds `capacity` requests.
+    Busy { capacity: usize },
+    /// Parse/validation/execution failure, with the reason.
+    Error { message: String },
+    Status(StatusInfo),
+    /// Shutdown ack; the server drains admitted work, then exits.
+    ShuttingDown,
+}
+
+impl Response {
+    pub fn to_json(&self) -> Value {
+        let head = |t: &str| vec![("v", num(PROTOCOL_VERSION as f64)),
+                                  ("type", s(t))];
+        match self {
+            Response::Queued { id, position } => {
+                let mut kv = head("queued");
+                kv.push(("id", num(*id as f64)));
+                kv.push(("position", num(*position as f64)));
+                obj(kv)
+            }
+            Response::Completed { id, cache_hit, result } => {
+                let mut kv = head("result");
+                kv.push(("id", num(*id as f64)));
+                kv.push(("cache_hit", Value::Bool(*cache_hit)));
+                kv.push(("result", result.to_json()));
+                obj(kv)
+            }
+            Response::Busy { capacity } => {
+                let mut kv = head("busy");
+                kv.push(("capacity", num(*capacity as f64)));
+                obj(kv)
+            }
+            Response::Error { message } => {
+                let mut kv = head("error");
+                kv.push(("error", s(message)));
+                obj(kv)
+            }
+            Response::Status(st) => {
+                let mut kv = head("status");
+                kv.push(("queue_depth", num(st.queue_depth as f64)));
+                kv.push(("capacity", num(st.capacity as f64)));
+                kv.push(("workers", num(st.workers as f64)));
+                kv.push(("executed", num(st.executed as f64)));
+                kv.push(("cache_entries", num(st.cache_entries as f64)));
+                kv.push(("cache_hits", num(st.cache_hits as f64)));
+                obj(kv)
+            }
+            Response::ShuttingDown => obj(head("shutting_down")),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> Result<Response> {
+        check_version(v)?;
+        let get_u64 = |key: &str| -> Result<u64> { frame_u64(v, key) };
+        match frame_type(v)? {
+            "queued" => Ok(Response::Queued {
+                id: get_u64("id")?,
+                position: get_u64("position")? as usize,
+            }),
+            "result" => Ok(Response::Completed {
+                id: get_u64("id")?,
+                cache_hit: v.get("cache_hit")
+                    .and_then(Value::as_bool)
+                    .context("result frame is missing 'cache_hit'")?,
+                result: Box::new(RunResult::from_json(
+                    v.get("result")
+                        .context("result frame is missing 'result'")?)?),
+            }),
+            "busy" => Ok(Response::Busy {
+                capacity: get_u64("capacity")? as usize,
+            }),
+            "error" => Ok(Response::Error {
+                message: v.get("error")
+                    .and_then(Value::as_str)
+                    .context("error frame is missing 'error'")?
+                    .to_string(),
+            }),
+            "status" => Ok(Response::Status(StatusInfo {
+                queue_depth: get_u64("queue_depth")? as usize,
+                capacity: get_u64("capacity")? as usize,
+                workers: get_u64("workers")? as usize,
+                executed: get_u64("executed")?,
+                cache_entries: get_u64("cache_entries")? as usize,
+                cache_hits: get_u64("cache_hits")?,
+            })),
+            "shutting_down" => Ok(Response::ShuttingDown),
+            other => bail!("unknown response type '{}'", other),
+        }
+    }
+}
+
+fn frame_type(v: &Value) -> Result<&str> {
+    v.get("type")
+        .and_then(Value::as_str)
+        .context("frame is missing 'type'")
+}
+
+/// Strict frame-field integer (`Value::as_uint`: present, non-negative,
+/// no fraction) — a corrupt frame becomes a typed error, never a
+/// silently truncated value.
+fn frame_u64(v: &Value, key: &str) -> Result<u64> {
+    v.get(key)
+        .and_then(Value::as_uint)
+        .with_context(|| format!("frame '{}' must be a non-negative \
+                                  integer", key))
+}
+
+fn check_version(v: &Value) -> Result<()> {
+    let got = frame_u64(v, "v")
+        .context("frame carries no valid protocol version 'v'")?;
+    anyhow::ensure!(got == PROTOCOL_VERSION,
+                    "unsupported protocol version {} (this build speaks {})",
+                    got, PROTOCOL_VERSION);
+    Ok(())
+}
+
+/// Write one frame as a single JSON line.
+pub fn write_frame(w: &mut impl Write, frame: &Value) -> Result<()> {
+    let mut line = frame.to_string_compact();
+    line.push('\n');
+    w.write_all(line.as_bytes()).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read one frame line; `None` at clean EOF.
+pub fn read_frame(r: &mut impl BufRead) -> Result<Option<Value>> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).context("reading frame")?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        bail!("empty frame line");
+    }
+    Ok(Some(Value::parse(trimmed)
+        .map_err(|e| anyhow!("malformed frame: {}", e))?))
+}
+
+/// One-request-per-connection client for the service socket — what
+/// `simopt submit` and the served conformance arm drive.
+pub struct Client {
+    reader: BufReader<UnixStream>,
+    writer: UnixStream,
+}
+
+impl Client {
+    pub fn connect(socket: impl AsRef<Path>) -> Result<Client> {
+        let socket = socket.as_ref();
+        let stream = UnixStream::connect(socket).with_context(|| {
+            format!("connecting to service socket {} (is `simopt serve` \
+                     running?)", socket.display())
+        })?;
+        let writer = stream.try_clone().context("cloning socket stream")?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    pub fn send(&mut self, req: &Request) -> Result<()> {
+        write_frame(&mut self.writer, &req.to_json())
+    }
+
+    /// Read the next frame; EOF before a frame is a protocol error here
+    /// (callers only recv when an answer is owed).
+    pub fn recv(&mut self) -> Result<Response> {
+        let v = read_frame(&mut self.reader)?
+            .context("server closed the connection mid-conversation")?;
+        Response::from_json(&v)
+    }
+
+    /// Submit a spec and return the terminal answer (`Completed`, `Busy`,
+    /// or `Error`), reporting interim `queued` acks through `on_queued`.
+    pub fn submit_with(&mut self, spec: &ExperimentSpec,
+                       mut on_queued: impl FnMut(u64, usize))
+        -> Result<Response> {
+        self.send(&Request::Submit(Box::new(spec.clone())))?;
+        loop {
+            match self.recv()? {
+                Response::Queued { id, position } => on_queued(id, position),
+                terminal => return Ok(terminal),
+            }
+        }
+    }
+
+    /// [`Client::submit_with`] without an ack observer.
+    pub fn submit(&mut self, spec: &ExperimentSpec) -> Result<Response> {
+        self.submit_with(spec, |_, _| {})
+    }
+
+    pub fn status(&mut self) -> Result<StatusInfo> {
+        self.send(&Request::Status)?;
+        match self.recv()? {
+            Response::Status(info) => Ok(info),
+            Response::Error { message } => bail!("server error: {}", message),
+            other => bail!("expected a status frame, got {:?}", other),
+        }
+    }
+
+    /// Request graceful shutdown; returns once the server acked it.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.send(&Request::Shutdown)?;
+        match self.recv()? {
+            Response::ShuttingDown => Ok(()),
+            Response::Error { message } => bail!("server error: {}", message),
+            other => bail!("expected a shutting_down frame, got {:?}", other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, TaskKind};
+
+    fn spec() -> ExperimentSpec {
+        ExperimentSpec::new(TaskKind::MeanVariance, BackendKind::Native)
+    }
+
+    fn roundtrip_req(r: &Request) -> Request {
+        let line = r.to_json().to_string_compact();
+        assert!(!line.contains('\n'));
+        Request::from_json(&Value::parse(&line).unwrap()).unwrap()
+    }
+
+    fn roundtrip_resp(r: &Response) -> Response {
+        let line = r.to_json().to_string_compact();
+        assert!(!line.contains('\n'));
+        Response::from_json(&Value::parse(&line).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn request_frames_roundtrip() {
+        match roundtrip_req(&Request::Submit(Box::new(spec()))) {
+            Request::Submit(back) => {
+                assert_eq!(back.to_json().to_string_compact(),
+                           spec().to_json().to_string_compact());
+            }
+            other => panic!("{:?}", other),
+        }
+        assert!(matches!(roundtrip_req(&Request::Status), Request::Status));
+        assert!(matches!(roundtrip_req(&Request::Shutdown),
+                         Request::Shutdown));
+    }
+
+    #[test]
+    fn response_frames_roundtrip() {
+        match roundtrip_resp(&Response::Queued { id: 9, position: 2 }) {
+            Response::Queued { id: 9, position: 2 } => {}
+            other => panic!("{:?}", other),
+        }
+        match roundtrip_resp(&Response::Busy { capacity: 16 }) {
+            Response::Busy { capacity: 16 } => {}
+            other => panic!("{:?}", other),
+        }
+        match roundtrip_resp(&Response::Error {
+            message: "no such task 'wat'".into(),
+        }) {
+            Response::Error { message } => {
+                assert_eq!(message, "no such task 'wat'")
+            }
+            other => panic!("{:?}", other),
+        }
+        let info = StatusInfo {
+            queue_depth: 1,
+            capacity: 8,
+            workers: 2,
+            executed: 40,
+            cache_entries: 3,
+            cache_hits: 7,
+        };
+        match roundtrip_resp(&Response::Status(info.clone())) {
+            Response::Status(back) => assert_eq!(back, info),
+            other => panic!("{:?}", other),
+        }
+        assert!(matches!(roundtrip_resp(&Response::ShuttingDown),
+                         Response::ShuttingDown));
+    }
+
+    #[test]
+    fn result_frame_carries_the_payload() {
+        let result = RunResult::new(spec(), vec![]);
+        let frame = Response::Completed {
+            id: 3,
+            cache_hit: true,
+            result: Box::new(result),
+        };
+        match roundtrip_resp(&frame) {
+            Response::Completed { id: 3, cache_hit: true, result } => {
+                assert_eq!(result.spec.task, TaskKind::MeanVariance);
+                assert!(result.reps.is_empty());
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn version_and_type_are_enforced() {
+        let bad = Value::parse(r#"{"v":2,"type":"status"}"#).unwrap();
+        assert!(Request::from_json(&bad).is_err());
+        assert!(Response::from_json(&bad).is_err());
+        let none = Value::parse(r#"{"type":"status"}"#).unwrap();
+        assert!(Request::from_json(&none).is_err());
+        let unk = Value::parse(r#"{"v":1,"type":"dance"}"#).unwrap();
+        assert!(Request::from_json(&unk).is_err());
+        assert!(Response::from_json(&unk).is_err());
+    }
+
+    #[test]
+    fn frame_numerics_are_strict() {
+        // fractional protocol versions are not "close enough"
+        let v19 = Value::parse(r#"{"v":1.9,"type":"status"}"#).unwrap();
+        assert!(Request::from_json(&v19).is_err());
+        // negative / fractional counters are corrupt frames, not data
+        let neg = Value::parse(
+            r#"{"v":1,"type":"busy","capacity":-3}"#).unwrap();
+        assert!(Response::from_json(&neg).is_err());
+        let frac = Value::parse(
+            r#"{"v":1,"type":"queued","id":2.5,"position":1}"#).unwrap();
+        assert!(Response::from_json(&frac).is_err());
+    }
+
+    #[test]
+    fn frame_io_over_a_buffer() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_frame(&mut buf, &Request::Status.to_json()).unwrap();
+        write_frame(&mut buf, &Request::Shutdown.to_json()).unwrap();
+        assert_eq!(buf.iter().filter(|&&b| b == b'\n').count(), 2);
+        let mut r = std::io::BufReader::new(&buf[..]);
+        let a = read_frame(&mut r).unwrap().unwrap();
+        assert!(matches!(Request::from_json(&a).unwrap(), Request::Status));
+        let b = read_frame(&mut r).unwrap().unwrap();
+        assert!(matches!(Request::from_json(&b).unwrap(),
+                         Request::Shutdown));
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+}

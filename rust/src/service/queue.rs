@@ -1,0 +1,199 @@
+//! Bounded FIFO admission queue with typed backpressure (DESIGN.md §14).
+//!
+//! The serving plane must never buffer unboundedly: a full queue answers
+//! `try_push` with [`PushError::Full`] *immediately*, which the server
+//! turns into a typed `busy` frame instead of a hung client.  Workers
+//! drain with blocking [`Bounded::pop`]; [`Bounded::close`] flips the
+//! queue into drain mode — pops keep returning queued items until the
+//! queue is empty, then return `None` so workers exit, which is exactly
+//! the graceful-shutdown order the server needs (admitted work always
+//! gets an answer).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why an item was not admitted.  Both variants hand the item back so the
+/// caller can still answer the client that carried it.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue holds `capacity` items — typed backpressure, not a wait.
+    Full(T),
+    /// [`Bounded::close`] ran; the service is draining toward shutdown.
+    Closed(T),
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// A mutex/condvar bounded FIFO.  `capacity == 0` is legal and admits
+/// nothing — every push answers `Full`, which the conformance suite uses
+/// to exercise the busy path deterministically.
+pub struct Bounded<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(capacity: usize) -> Self {
+        Bounded {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Queued (not yet popped) item count.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit `item` if there is room; returns its 1-based queue position
+    /// (how many pops until a worker holds it).
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.q.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        st.q.push_back(item);
+        let pos = st.q.len();
+        drop(st);
+        self.cv.notify_one();
+        Ok(pos)
+    }
+
+    /// Block until an item is available and return it; `None` once the
+    /// queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Stop admitting; wake every waiting worker so the drain starts.
+    /// Idempotent.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_positions() {
+        let q = Bounded::new(3);
+        assert_eq!(q.try_push(10).unwrap(), 1);
+        assert_eq!(q.try_push(11).unwrap(), 2);
+        assert_eq!(q.try_push(12).unwrap(), 3);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), Some(11));
+        assert_eq!(q.try_push(13).unwrap(), 2);
+        assert_eq!(q.pop(), Some(12));
+        assert_eq!(q.pop(), Some(13));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn full_queue_is_typed_backpressure() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {:?}", other),
+        }
+        // popping frees a slot
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push(3).unwrap(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_admits_nothing() {
+        let q: Bounded<u32> = Bounded::new(0);
+        assert!(matches!(q.try_push(1), Err(PushError::Full(1))));
+        assert_eq!(q.capacity(), 0);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        q.close();
+        // admitted work survives the close…
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        // …new work does not
+        assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
+        assert_eq!(q.pop(), None);
+        // close is idempotent
+        q.close();
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let q: Arc<Bounded<u32>> = Arc::new(Bounded::new(1));
+        let worker = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || q.pop())
+        };
+        // the worker blocks on the empty queue until close() wakes it
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(worker.join().unwrap(), None);
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q: Arc<Bounded<usize>> = Arc::new(Bounded::new(64));
+        let consumer = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            })
+        };
+        for i in 0..50 {
+            // back off if the consumer falls behind the bound
+            loop {
+                match q.try_push(i) {
+                    Ok(_) => break,
+                    Err(PushError::Full(_)) => std::thread::yield_now(),
+                    Err(PushError::Closed(_)) => unreachable!(),
+                }
+            }
+        }
+        q.close();
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,423 @@
+//! The persistent experiment server behind `simopt serve` (DESIGN.md §14).
+//!
+//! Architecture: an accept loop hands each connection to a short-lived
+//! handler thread that parses ONE request; `submit` requests are admitted
+//! into the bounded [`Bounded`] queue (or answered `busy`) and executed by
+//! long-lived *worker* threads, each owning one warm [`Coordinator`] —
+//! constructed once at startup, so artifact manifests, the lazily-built
+//! PJRT engine, and the native thread budget are reused across every
+//! request instead of being paid per experiment (the whole point of
+//! serving: the paper's speedup lives in amortizing setup across many
+//! requests).  The PJRT handles are thread-affine, which is exactly why
+//! warm state is per-worker rather than shared: a worker's engine never
+//! crosses threads.
+//!
+//! All frames of one conversation are written by its handler thread (the
+//! worker passes the terminal frame back over a per-job channel), so two
+//! threads never interleave bytes on one socket.
+//!
+//! Shutdown: the `shutdown` frame flips a flag and self-connects to wake
+//! the accept loop; the queue closes, workers drain every admitted job
+//! (each still gets its `result` frame), the socket file is removed, and
+//! [`Server::run`] returns its counters.
+
+use std::fs;
+use std::io::{self, BufReader};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::{report, Coordinator, ExperimentSpec, RunResult};
+use crate::util::json::{num, obj, s, Value};
+
+use super::cache::ResultCache;
+use super::protocol::{read_frame, write_frame, Request, Response,
+                      StatusInfo, PROTOCOL_VERSION};
+use super::queue::{Bounded, PushError};
+
+/// How `simopt serve` configures the plane.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub socket: PathBuf,
+    pub artifact_dir: String,
+    /// Default results directory for the workers' coordinators; a spec's
+    /// own `results_dir` overrides per request.
+    pub results_dir: String,
+    /// Executor threads, one warm [`Coordinator`] each (≥ 1).
+    pub workers: usize,
+    /// Admission queue bound; `0` admits nothing (every submit answers
+    /// `busy` — the deterministic backpressure arm of the test suite).
+    pub queue_capacity: usize,
+    /// Result-cache bound in entries (FIFO eviction; `0` disables
+    /// caching) — payloads carry full traces, so a long-lived server
+    /// must not grow without limit.
+    pub cache_capacity: usize,
+}
+
+/// Counters [`Server::run`] reports after a graceful shutdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Experiments executed (cache hits excluded).
+    pub executed: u64,
+    pub cache_hits: u64,
+    pub cache_entries: usize,
+}
+
+struct Job {
+    id: u64,
+    spec: Box<ExperimentSpec>,
+    /// Cache key + canonical spec string, computed once at admission —
+    /// the worker reuses them, so admission and execution dedup are
+    /// byte-identical by construction (and the hot path renders the
+    /// canonical JSON once, not three times).
+    key: u64,
+    canonical: String,
+    /// The terminal frame travels back to the handler that owns the
+    /// connection — workers never write to sockets.
+    reply: mpsc::Sender<Value>,
+}
+
+struct Shared {
+    queue: Bounded<Job>,
+    cache: ResultCache,
+    executed: AtomicU64,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+    workers: usize,
+    socket: PathBuf,
+}
+
+/// A bound-but-not-yet-running server.  Splitting bind from run lets the
+/// in-process tests (and the CLI) know the socket exists before any
+/// client connects.
+pub struct Server {
+    cfg: ServerConfig,
+    listener: UnixListener,
+}
+
+impl Server {
+    pub fn bind(cfg: ServerConfig) -> Result<Server> {
+        ensure!(cfg.workers >= 1, "the service needs at least one worker");
+        match UnixListener::bind(&cfg.socket) {
+            Ok(listener) => Ok(Server { cfg, listener }),
+            Err(e) if e.kind() == io::ErrorKind::AddrInUse => {
+                // a live server answers a connect; a stale socket from a
+                // crashed one does not and is safe to replace
+                if UnixStream::connect(&cfg.socket).is_ok() {
+                    bail!("{} already has a live server — pick another \
+                           --socket or shut that one down",
+                          cfg.socket.display());
+                }
+                // only ever delete an actual dead *socket*: a regular
+                // file at this path is someone's data, not our leftover
+                use std::os::unix::fs::FileTypeExt;
+                let is_socket = fs::metadata(&cfg.socket)
+                    .map(|m| m.file_type().is_socket())
+                    .unwrap_or(false);
+                ensure!(is_socket,
+                        "{} exists and is not a socket — refusing to \
+                         replace it", cfg.socket.display());
+                fs::remove_file(&cfg.socket).with_context(|| {
+                    format!("removing stale socket {}", cfg.socket.display())
+                })?;
+                let listener = UnixListener::bind(&cfg.socket)
+                    .with_context(|| {
+                        format!("binding {}", cfg.socket.display())
+                    })?;
+                Ok(Server { cfg, listener })
+            }
+            Err(e) => Err(e).with_context(|| {
+                format!("binding {}", cfg.socket.display())
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Serve until a `shutdown` frame arrives; drain, then report.
+    pub fn run(self) -> Result<ServerStats> {
+        let shared = Arc::new(Shared {
+            queue: Bounded::new(self.cfg.queue_capacity),
+            cache: ResultCache::new(self.cfg.cache_capacity),
+            executed: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            workers: self.cfg.workers,
+            socket: self.cfg.socket.clone(),
+        });
+        let mut workers = Vec::with_capacity(self.cfg.workers);
+        for _ in 0..self.cfg.workers {
+            let shared = Arc::clone(&shared);
+            let artifacts = self.cfg.artifact_dir.clone();
+            let results = self.cfg.results_dir.clone();
+            workers.push(thread::spawn(move || {
+                worker_loop(&shared, &artifacts, &results)
+            }));
+        }
+        let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+        for conn in self.listener.incoming() {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                // the connection that woke us (the shutdown self-connect,
+                // or a client racing the shutdown) gets EOF
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    // persistent accept errors (EMFILE under load) must
+                    // not become a silent busy-spin: say why, back off,
+                    // give the handler/worker threads room to free fds
+                    eprintln!("[serve] accept failed: {} — backing off", e);
+                    thread::sleep(Duration::from_millis(100));
+                    continue;
+                }
+            };
+            // bound the request-line read so an idle connection can't
+            // stall the handler join at shutdown (replies are unaffected:
+            // submit handlers wait on a channel, not a socket read)
+            let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+            handlers.retain(|h| !h.is_finished());
+            let shared = Arc::clone(&shared);
+            handlers.push(
+                thread::spawn(move || handle_connection(stream, &shared)));
+        }
+        // drain: admitted jobs still answer, new pushes see Closed
+        shared.queue.close();
+        for w in workers {
+            let _ = w.join();
+        }
+        // workers have sent every admitted job's terminal frame; keep the
+        // process alive until the handlers have flushed them to their
+        // sockets — otherwise a drained client would see EOF instead of
+        // its promised result
+        for h in handlers {
+            let _ = h.join();
+        }
+        let _ = fs::remove_file(&self.cfg.socket);
+        Ok(ServerStats {
+            executed: shared.executed.load(Ordering::SeqCst),
+            cache_hits: shared.cache.hits(),
+            cache_entries: shared.cache.entries(),
+        })
+    }
+}
+
+/// Build a `result` frame around an already-encoded payload (cache hits
+/// reuse the stored `RunResult::to_json` Value without re-parsing it).
+fn completed_frame(id: u64, cache_hit: bool, payload: Value) -> Value {
+    obj(vec![
+        ("v", num(PROTOCOL_VERSION as f64)),
+        ("type", s("result")),
+        ("id", num(id as f64)),
+        ("cache_hit", Value::Bool(cache_hit)),
+        ("result", payload),
+    ])
+}
+
+fn error_frame(message: &str) -> Value {
+    Response::Error { message: message.to_string() }.to_json()
+}
+
+/// Honor a cache-answered request's `results_dir` delivery: reconstruct
+/// the stored payload and persist the report bundle with zero
+/// re-execution (an *executed* run persists through `Coordinator::run`
+/// instead, which sees the spec's own `results_dir`).  An `Err` becomes
+/// a typed error frame — the same outcome an executed run gets when its
+/// persist fails, so the two paths agree on whether delivery failure is
+/// fatal.
+fn deliver_report(spec: &ExperimentSpec, payload: &Value) -> Result<()> {
+    let Some(dir) = &spec.results_dir else { return Ok(()) };
+    let result = RunResult::from_json(payload)
+        .context("cached payload unreadable")?;
+    // same recipe as an executed run's persist — bundle naming and
+    // checkpoint fractions can't diverge between the paths
+    report::persist_run_report(dir, &result)
+        .with_context(|| format!("persisting report under {}", dir))
+}
+
+/// Answer a cache hit: deliver the requested report bundle (if any),
+/// then frame the stored payload — or a typed error if delivery failed.
+fn cache_hit_frame(id: u64, spec: &ExperimentSpec, hit: &Value) -> Value {
+    match deliver_report(spec, hit) {
+        // deep-copy outside the cache lock (get returned an Arc bump)
+        Ok(()) => completed_frame(id, true, hit.clone()),
+        Err(e) => error_frame(&format!("{:#}", e)),
+    }
+}
+
+/// One warm executor: a Coordinator built once, reused for every job this
+/// worker pops — the engine/artifact state survives across requests.
+fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
+    let mut coord = match Coordinator::new(artifacts, results) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            // stay up and answer every job with a typed error — but make
+            // sure the operator can see WHY from the server log
+            eprintln!("[serve] worker coordinator init failed: {:#}", e);
+            None
+        }
+    };
+    while let Some(job) = shared.queue.pop() {
+        // second look at the cache (admission-time key/canonical reused):
+        // identical specs admitted back-to-back both missed at admission,
+        // but only the first needs to execute.  This dedup is best-effort
+        // — two workers popping identical specs concurrently can both
+        // execute (determinism makes the duplicate harmless: both produce
+        // the identical payload) — and exact on a single-worker plane.
+        let (key, canonical) = (job.key, &job.canonical);
+        let frame = if let Some(hit) = shared.cache.get(key, canonical) {
+            cache_hit_frame(job.id, &job.spec, &hit)
+        } else if coord.is_some() {
+            // contain panics per job: one poisoned spec must not take the
+            // worker down and leave every queued client hanging
+            let ran = {
+                let c = coord.as_mut().unwrap();
+                std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| c.run(&job.spec)))
+            };
+            match ran {
+                Ok(Ok(result)) => {
+                    let payload = Arc::new(result.to_json());
+                    shared.cache.insert(key, canonical,
+                                        Arc::clone(&payload));
+                    shared.executed.fetch_add(1, Ordering::SeqCst);
+                    completed_frame(job.id, false, (*payload).clone())
+                }
+                Ok(Err(e)) => error_frame(&format!("{:#}", e)),
+                Err(_) => {
+                    // the coordinator may be mid-mutation; rebuild it so
+                    // the next job starts from a clean slate
+                    eprintln!("[serve] worker panicked running {} — \
+                               rebuilding its coordinator",
+                              job.spec.label());
+                    coord = Coordinator::new(artifacts, results).ok();
+                    error_frame(&format!(
+                        "execution panicked running {} (see server log)",
+                        job.spec.label()))
+                }
+            }
+        } else {
+            error_frame("worker failed to initialize its coordinator \
+                         (see server log)")
+        };
+        // a vanished handler (client hung up) just drops the frame
+        let _ = job.reply.send(frame);
+    }
+}
+
+/// Parse and answer one request; submits wait here for their terminal
+/// frame so every byte on the socket comes from this thread.
+fn handle_connection(stream: UnixStream, shared: &Shared) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let frame = match read_frame(&mut reader) {
+        Ok(Some(v)) => v,
+        Ok(None) => return, // client connected and hung up
+        Err(e) => {
+            let _ = write_frame(&mut writer, &error_frame(&format!("{:#}", e)));
+            return;
+        }
+    };
+    let req = match Request::from_json(&frame) {
+        Ok(r) => r,
+        Err(e) => {
+            let _ = write_frame(&mut writer, &error_frame(&format!("{:#}", e)));
+            return;
+        }
+    };
+    match req {
+        Request::Status => {
+            let info = StatusInfo {
+                queue_depth: shared.queue.len(),
+                capacity: shared.queue.capacity(),
+                workers: shared.workers,
+                executed: shared.executed.load(Ordering::SeqCst),
+                cache_entries: shared.cache.entries(),
+                cache_hits: shared.cache.hits(),
+            };
+            let _ = write_frame(&mut writer,
+                                &Response::Status(info).to_json());
+        }
+        Request::Shutdown => {
+            let _ = write_frame(&mut writer,
+                                &Response::ShuttingDown.to_json());
+            shared.shutdown.store(true, Ordering::SeqCst);
+            // wake the blocking accept loop so it observes the flag.
+            // This nudge is load-bearing (without it the loop waits for
+            // the next client), so retry through transient failures
+            // (e.g. fd exhaustion) instead of shrugging one off.
+            let mut woke = false;
+            for _ in 0..20 {
+                if UnixStream::connect(&shared.socket).is_ok() {
+                    woke = true;
+                    break;
+                }
+                thread::sleep(Duration::from_millis(25));
+            }
+            if !woke {
+                eprintln!("[serve] shutdown waker could not connect; the \
+                           accept loop will notice at the next connection");
+            }
+        }
+        Request::Submit(spec) => {
+            if let Err(e) = spec.validate() {
+                let _ = write_frame(
+                    &mut writer,
+                    &error_frame(&format!("invalid spec: {:#}", e)));
+                return;
+            }
+            // fast path: cached specs answer instantly, without taking a
+            // queue slot — repeat submissions cannot be crowded out by a
+            // full queue
+            let key = spec.spec_hash();
+            let canonical = spec.canonical_json().to_string_compact();
+            let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+            if let Some(hit) = shared.cache.get(key, &canonical) {
+                let _ = write_frame(&mut writer,
+                                    &cache_hit_frame(id, &spec, &hit));
+                return;
+            }
+            let (reply, result_rx) = mpsc::channel();
+            match shared.queue.try_push(Job { id, spec, key, canonical,
+                                              reply }) {
+                Ok(position) => {
+                    let _ = write_frame(
+                        &mut writer,
+                        &Response::Queued { id, position }.to_json());
+                    match result_rx.recv() {
+                        Ok(frame) => {
+                            let _ = write_frame(&mut writer, &frame);
+                        }
+                        Err(_) => {
+                            let _ = write_frame(
+                                &mut writer,
+                                &error_frame("worker exited before \
+                                              answering"));
+                        }
+                    }
+                }
+                Err(PushError::Full(_)) => {
+                    let _ = write_frame(
+                        &mut writer,
+                        &Response::Busy {
+                            capacity: shared.queue.capacity(),
+                        }
+                        .to_json());
+                }
+                Err(PushError::Closed(_)) => {
+                    let _ = write_frame(
+                        &mut writer,
+                        &error_frame("service is shutting down"));
+                }
+            }
+        }
+    }
+}

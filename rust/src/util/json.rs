@@ -84,6 +84,20 @@ impl Value {
         self.as_f64().and_then(|n| if n >= 0.0 { Some(n as usize) } else { None })
     }
 
+    /// Strict non-negative integer view: `None` for non-numbers,
+    /// negatives, fractions, and magnitudes past 2^53 (where f64 stops
+    /// representing integers exactly, so "integer" would be ambiguous).
+    /// The one definition of "wire integer" shared by the spec and
+    /// service-frame decoders (DESIGN.md §14).
+    pub fn as_uint(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(n) if n >= 0.0
+                && n.fract() == 0.0
+                && n <= (1u64 << 53) as f64 => Some(n as u64),
+            _ => None,
+        }
+    }
+
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -119,6 +133,48 @@ impl Value {
         let mut out = String::new();
         self.write(&mut out, 0);
         out
+    }
+
+    /// Single-line compact encoding — the JSON-lines wire framing of the
+    /// experiment service (`service::protocol`): one frame per line, so the
+    /// writer must never emit a newline.  Canonical spec hashing also runs
+    /// over this form (stable: key order is insertion order, and the number
+    /// writer is deterministic).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Value::Num(n) => write_num(out, *n),
+            Value::Str(sv) => write_str(out, sv),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_compact(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(out, k);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+        }
     }
 
     fn write(&self, out: &mut String, depth: usize) {
@@ -442,6 +498,23 @@ mod tests {
     }
 
     #[test]
+    fn compact_is_one_line_and_roundtrips() {
+        let src = r#"{"name":"mv_epoch","params":{"d":128,"n":64},"inputs":[{"shape":[2],"dtype":"u32"}],"ok":true,"x":null}"#;
+        let v = Value::parse(src).unwrap();
+        let compact = v.to_string_compact();
+        assert!(!compact.contains('\n'), "{}", compact);
+        assert!(!compact.contains(' '), "{}", compact);
+        assert_eq!(Value::parse(&compact).unwrap(), v);
+        // escaped newlines stay escaped, so frames stay one line
+        let s = Value::Str("a\nb".to_string()).to_string_compact();
+        assert!(!s.contains('\n'));
+        assert_eq!(Value::parse(&s).unwrap().as_str(), Some("a\nb"));
+        // empty containers
+        assert_eq!(Value::Arr(vec![]).to_string_compact(), "[]");
+        assert_eq!(Value::Obj(vec![]).to_string_compact(), "{}");
+    }
+
+    #[test]
     fn roundtrip() {
         let src = r#"{"name":"mv_epoch","params":{"d":128,"n":64},"inputs":[{"shape":[2],"dtype":"u32"}],"ok":true,"x":null}"#;
         let v = Value::parse(src).unwrap();
@@ -455,6 +528,20 @@ mod tests {
         let v = Value::parse(r#"{"z":1,"a":2,"m":3}"#).unwrap();
         let keys: Vec<_> = v.as_obj().unwrap().iter().map(|(k, _)| k.as_str()).collect();
         assert_eq!(keys, vec!["z", "a", "m"]);
+    }
+
+    #[test]
+    fn as_uint_is_strict() {
+        assert_eq!(Value::Num(0.0).as_uint(), Some(0));
+        assert_eq!(Value::Num(42.0).as_uint(), Some(42));
+        assert_eq!(Value::Num((1u64 << 53) as f64).as_uint(),
+                   Some(1u64 << 53));
+        assert_eq!(Value::Num(-1.0).as_uint(), None);
+        assert_eq!(Value::Num(2.5).as_uint(), None);
+        assert_eq!(Value::Num(1e300).as_uint(), None, "past exact-integer \
+                    range");
+        assert_eq!(Value::Str("3".into()).as_uint(), None);
+        assert_eq!(Value::Null.as_uint(), None);
     }
 
     #[test]

@@ -223,3 +223,73 @@ fn correction_memory_count_bounded() {
             true
         });
 }
+
+#[test]
+fn experiment_spec_wire_roundtrip_is_identity() {
+    // The protocol's and the service cache's foundation (DESIGN.md §14):
+    // parse∘render over the canonical wire encoding is identity — same
+    // compact rendering, same spec_hash — for random specs drawn across
+    // every registered task, backend, exec mode, and legal shard count.
+    use simopt::backend::HessianMode;
+    use simopt::config::{BackendKind, ExecMode, TaskKind};
+    use simopt::coordinator::ExperimentSpec;
+
+    let kinds = TaskKind::all();
+    let backends =
+        [BackendKind::Native, BackendKind::NativePar, BackendKind::Xla];
+    check("spec parse∘render identity", 300,
+        move |g| {
+            let task = *g.pick(&kinds);
+            let reps = g.usize_in(1..9);
+            let mut spec =
+                ExperimentSpec::new(task, *g.pick(&backends))
+                    .size(g.usize_in(1..4096))
+                    .epochs(g.usize_in(1..500))
+                    .replications(reps)
+                    // exercise the full u64 range: seeds ride the wire as
+                    // decimal strings precisely because f64 JSON numbers
+                    // would truncate past 2^53
+                    .seed(g.u64_in(0..u64::MAX));
+            spec.exec = match g.usize_in(0..4) {
+                0 => ExecMode::Auto,
+                1 => ExecMode::Sequential,
+                _ => ExecMode::Batched { shards: g.usize_in(1..reps + 1) },
+            };
+            if g.bool() {
+                spec.hessian_mode = HessianMode::TwoLoop;
+            }
+            if g.bool() {
+                spec = spec.results_dir(
+                    &format!("/tmp/rd-{}", g.usize_in(0..1000)));
+            }
+            spec.track_every = g.usize_in(1..50);
+            spec.params.samples = g.usize_in(1..256);
+            spec.params.m_inner = g.usize_in(1..64);
+            spec.params.batch = g.usize_in(0..128);
+            spec.params.hbatch = g.usize_in(0..512);
+            spec.params.memory = g.usize_in(0..32);
+            spec.params.l_every = g.usize_in(0..16);
+            spec.params.beta = g.f32_in(0.0..8.0);
+            spec.params.resources = g.usize_in(0..32);
+            spec.params.tightness = g.f32_in(0.0..1.0);
+            spec
+        },
+        |spec| {
+            let text = spec.to_json().to_string_compact();
+            let back = match ExperimentSpec::from_json(
+                &Value::parse(&text).unwrap()) {
+                Ok(b) => b,
+                Err(_) => return false,
+            };
+            // identity: byte-identical re-rendering, equal cache keys, and
+            // the lossy-prone fields survive exactly
+            back.to_json().to_string_compact() == text
+                && back.spec_hash() == spec.spec_hash()
+                && back.seed == spec.seed
+                && back.exec == spec.exec
+                && back.params.beta.to_bits() == spec.params.beta.to_bits()
+                && back.params.tightness.to_bits()
+                    == spec.params.tightness.to_bits()
+                && back.results_dir == spec.results_dir
+        });
+}

@@ -1,0 +1,245 @@
+//! The served arm of the registry-conformance suite (DESIGN.md §14).
+//!
+//! For EVERY registered task, results obtained through an in-process
+//! `simopt serve` instance over a temp socket must be bit-identical to
+//! the direct `Coordinator::run` of the same spec — on the sequential
+//! plan, the batched plan, and a sharded plan — and the service contracts
+//! hold: a repeat submission answers from the content-addressed cache
+//! with no re-execution, a full admission queue answers a typed `busy`
+//! frame, and invalid specs answer typed `error` frames.  Registering a
+//! new scenario must pass this suite with zero suite changes.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread::JoinHandle;
+
+use simopt::config::ExecMode;
+use simopt::coordinator::Coordinator;
+use simopt::service::{Client, Response, Server, ServerConfig, ServerStats};
+use simopt::tasks::registry;
+
+fn temp_socket(tag: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "simopt-{}-{}-{}.sock",
+        tag,
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+fn results_dir() -> String {
+    std::env::temp_dir()
+        .join("simopt_service_conformance")
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Bind + run an in-process server; the socket exists when this returns.
+fn spawn_server(tag: &str, workers: usize, queue: usize)
+    -> (PathBuf, JoinHandle<ServerStats>) {
+    let socket = temp_socket(tag);
+    let server = Server::bind(ServerConfig {
+        socket: socket.clone(),
+        artifact_dir: "artifacts".into(),
+        results_dir: results_dir(),
+        workers,
+        queue_capacity: queue,
+        cache_capacity: 64,
+    })
+    .unwrap();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (socket, handle)
+}
+
+fn shut_down(socket: &PathBuf, handle: JoinHandle<ServerStats>)
+    -> ServerStats {
+    Client::connect(socket).unwrap().shutdown().unwrap();
+    handle.join().unwrap()
+}
+
+#[test]
+fn served_results_are_bitwise_identical_to_direct_runs_for_every_task() {
+    let (socket, handle) = spawn_server("conf", 1, 8);
+    let mut direct = Coordinator::new("artifacts", &results_dir()).unwrap();
+    for task in registry::all() {
+        // seq, the single-panel batched engine, and an uneven sharded plan
+        for exec in [ExecMode::Sequential, ExecMode::Batched { shards: 1 },
+                     ExecMode::Batched { shards: 2 }] {
+            let mut spec = task.smoke_spec();
+            spec.reps = 3; // makes shards=2 an uneven 2+1 split
+            spec.exec = exec;
+            let want = direct.run(&spec).unwrap();
+            let mut client = Client::connect(&socket).unwrap();
+            match client.submit(&spec).unwrap() {
+                Response::Completed { cache_hit, result, .. } => {
+                    assert!(!cache_hit, "task {} exec {:?}: first \
+                             submission cannot hit the cache",
+                            task.name(), exec);
+                    // the deterministic payloads are byte-identical…
+                    assert_eq!(
+                        result.canonical_json().to_string_pretty(),
+                        want.canonical_json().to_string_pretty(),
+                        "task {} exec {:?}", task.name(), exec
+                    );
+                    // …which includes bitwise-equal objective traces and
+                    // the resolved plan
+                    assert_eq!(result.shards, want.shards);
+                    assert_eq!(result.batched, want.batched);
+                    for (a, b) in want.reps.iter().zip(&result.reps) {
+                        assert_eq!(a.objs, b.objs,
+                                   "task {} exec {:?}", task.name(), exec);
+                        assert_eq!(a.obj_iters, b.obj_iters);
+                    }
+                }
+                other => panic!("task {} exec {:?}: expected a result, \
+                                 got {:?}", task.name(), exec, other),
+            }
+        }
+    }
+    let stats = shut_down(&socket, handle);
+    // 4 tasks × 3 exec plans, every one executed (no accidental hits)
+    assert_eq!(stats.executed, (registry::all().count() * 3) as u64);
+    assert_eq!(stats.cache_hits, 0);
+}
+
+#[test]
+fn repeat_submission_answers_from_the_cache_without_reexecution() {
+    let (socket, handle) = spawn_server("cache", 1, 4);
+    for task in registry::all() {
+        let spec = task.smoke_spec();
+        let first = match Client::connect(&socket).unwrap()
+            .submit(&spec).unwrap() {
+            Response::Completed { cache_hit, result, .. } => {
+                assert!(!cache_hit, "task {}", task.name());
+                result
+            }
+            other => panic!("{:?}", other),
+        };
+        // identical spec → served from the cache, payload identical
+        match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+            Response::Completed { cache_hit, result, .. } => {
+                assert!(cache_hit, "task {}: resubmission must hit",
+                        task.name());
+                assert_eq!(result.to_json().to_string_compact(),
+                           first.to_json().to_string_compact(),
+                           "task {}: cached payload must be the stored \
+                            one, byte for byte", task.name());
+            }
+            other => panic!("{:?}", other),
+        }
+        // a spec differing only in its results directory is the same
+        // computation — still a hit (delivery is not content)…
+        let reloc_dir = std::path::PathBuf::from(results_dir())
+            .join(format!("relocated-{}", task.name()));
+        let _ = std::fs::remove_dir_all(&reloc_dir);
+        let relocated =
+            spec.clone().results_dir(&reloc_dir.to_string_lossy());
+        match Client::connect(&socket).unwrap()
+            .submit(&relocated).unwrap() {
+            Response::Completed { cache_hit, result, .. } => {
+                assert!(cache_hit, "task {}: results_dir must not change \
+                         the cache key", task.name());
+                // …and the cached payload never leaks anyone's delivery
+                // directory (it embeds the canonical spec)
+                assert_eq!(result.spec.results_dir, None);
+            }
+            other => panic!("{:?}", other),
+        }
+        // …but the requested delivery still happens, report bundle and
+        // all, with zero re-execution (bundle named by label + spec hash
+        // so sibling runs in one directory never overwrite each other)
+        let bundle = reloc_dir.join(format!(
+            "run_{}_{:016x}_summary.json", spec.label(), spec.spec_hash()));
+        assert!(bundle.exists(), "task {}: cache-hit delivery missing \
+                 {}", task.name(), bundle.display());
+        // a different seed is different content — miss
+        let reseeded = spec.clone().seed(spec.seed + 1);
+        match Client::connect(&socket).unwrap()
+            .submit(&reseeded).unwrap() {
+            Response::Completed { cache_hit, .. } => {
+                assert!(!cache_hit, "task {}", task.name());
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+    let stats = shut_down(&socket, handle);
+    let tasks = registry::all().count() as u64;
+    assert_eq!(stats.executed, 2 * tasks, "base + reseeded per task");
+    assert_eq!(stats.cache_hits, 2 * tasks, "resubmit + relocated per task");
+    assert_eq!(stats.cache_entries as u64, 2 * tasks);
+}
+
+#[test]
+fn full_queue_answers_typed_busy_instead_of_hanging() {
+    // capacity 0 admits nothing: the deterministic backpressure arm
+    let (socket, handle) = spawn_server("busy", 1, 0);
+    let spec = registry::all().next().unwrap().smoke_spec();
+    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        Response::Busy { capacity } => assert_eq!(capacity, 0),
+        other => panic!("expected busy, got {:?}", other),
+    }
+    // backpressure is per-submission, not a wedged server: status still
+    // answers, and shutdown still drains cleanly
+    let st = Client::connect(&socket).unwrap().status().unwrap();
+    assert_eq!(st.queue_depth, 0);
+    assert_eq!(st.capacity, 0);
+    assert_eq!(st.executed, 0);
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 0);
+}
+
+#[test]
+fn invalid_and_malformed_submissions_answer_typed_errors() {
+    let (socket, handle) = spawn_server("err", 1, 4);
+    // semantically invalid: reps == 0 fails spec validation server-side
+    let mut spec = registry::all().next().unwrap().smoke_spec();
+    spec.reps = 0;
+    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        Response::Error { message } => {
+            assert!(message.contains("reps"), "{}", message)
+        }
+        other => panic!("expected an error frame, got {:?}", other),
+    }
+    // shards > reps dies at validation too, as a frame, not a hang
+    let mut spec = registry::all().next().unwrap().smoke_spec();
+    spec.exec = ExecMode::Batched { shards: 9 };
+    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        Response::Error { message } => {
+            assert!(message.contains("shards"), "{}", message)
+        }
+        other => panic!("{:?}", other),
+    }
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 0, "invalid specs never execute");
+    handle_is_gone(&socket);
+}
+
+/// After shutdown the socket file is gone and connects fail.
+fn handle_is_gone(socket: &PathBuf) {
+    assert!(!socket.exists(), "socket file must be removed on shutdown");
+    assert!(Client::connect(socket).is_err());
+}
+
+#[test]
+fn status_counters_track_the_conversation() {
+    let (socket, handle) = spawn_server("status", 1, 4);
+    let st = Client::connect(&socket).unwrap().status().unwrap();
+    assert_eq!((st.executed, st.cache_hits, st.cache_entries), (0, 0, 0));
+    assert_eq!(st.workers, 1);
+    assert_eq!(st.capacity, 4);
+    let spec = registry::all().next().unwrap().smoke_spec();
+    for _ in 0..2 {
+        match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+            Response::Completed { .. } => {}
+            other => panic!("{:?}", other),
+        }
+    }
+    let st = Client::connect(&socket).unwrap().status().unwrap();
+    assert_eq!(st.executed, 1, "one execution, one cache hit");
+    assert_eq!(st.cache_hits, 1);
+    assert_eq!(st.cache_entries, 1);
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 1);
+    assert_eq!(stats.cache_hits, 1);
+}
