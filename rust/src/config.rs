@@ -148,6 +148,35 @@ impl fmt::Display for ExecMode {
     }
 }
 
+/// Opt-in adaptive replication budget (DESIGN.md §14): at every
+/// `check_every`-th epoch the batched plan compares the live rows of the
+/// shared `[R × n]` objective panel and freezes replications whose current
+/// objective trails the best live row by more than `gap` (relative to the
+/// best row's magnitude) — the trace-gap rule.  Once every surviving row's
+/// objective has moved by at most `tol` (relative) since the previous
+/// checkpoint, the run stops early.  Frozen rows stay in the panel (masked,
+/// not resliced — shard shapes never change); their traces simply stop.
+/// Off by default: a spec without a budget runs all R replications for all
+/// epochs and keeps the bitwise seq==batch invariant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BudgetPolicy {
+    /// Epoch-checkpoint cadence (must be > 0).
+    pub check_every: usize,
+    /// Relative trace gap beyond which a replication freezes.
+    pub gap: f64,
+    /// Relative per-checkpoint improvement below which a survivor counts
+    /// as converged (early stop once ALL survivors converge).
+    pub tol: f64,
+}
+
+impl BudgetPolicy {
+    /// A policy checking every `check_every` epochs with the default
+    /// gap/tolerance.
+    pub fn every(check_every: usize) -> Self {
+        BudgetPolicy { check_every, gap: 0.25, tol: 1e-6 }
+    }
+}
+
 /// Paper §4.1 parameters with this repo's defaults (DESIGN.md §10 documents
 /// the scaling deviations).
 #[derive(Debug, Clone)]

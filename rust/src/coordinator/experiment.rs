@@ -12,7 +12,8 @@
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use crate::backend::HessianMode;
-use crate::config::{BackendKind, ExecMode, TaskKind, TaskParams};
+use crate::config::{BackendKind, BudgetPolicy, ExecMode, TaskKind,
+                    TaskParams};
 use crate::util::json::{num, obj, s, Value};
 
 /// One experiment cell.
@@ -29,6 +30,14 @@ pub struct ExperimentSpec {
     /// How the replication axis executes (DESIGN.md §11).
     pub exec: ExecMode,
     pub params: TaskParams,
+    /// Opt-in adaptive replication budget (DESIGN.md §14).  `None` — the
+    /// default — runs every replication for every epoch and keeps the
+    /// bitwise seq==batch contract.  Unlike `results_dir`, a budget
+    /// changes what is *computed*, so it participates in the canonical
+    /// encoding and the cache key whenever present (and is simply absent
+    /// from the wire form when off, keeping legacy encodings and hashes
+    /// byte-identical).
+    pub budget: Option<BudgetPolicy>,
     /// Where this run's report bundle persists (`None` = don't persist).
     /// Threaded through the spec so concurrent served requests and CI runs
     /// isolate their outputs instead of colliding in one `results/`
@@ -50,6 +59,7 @@ impl ExperimentSpec {
             track_every: 10,
             exec: ExecMode::Auto,
             params: TaskParams::defaults(task, size),
+            budget: None,
             results_dir: None,
         }
     }
@@ -105,15 +115,24 @@ impl ExperimentSpec {
         self
     }
 
+    /// Attach an adaptive replication budget (requires a batched plan —
+    /// the trace-gap rule reads the shared replication panel).
+    pub fn budget(mut self, budget: BudgetPolicy) -> Self {
+        self.budget = Some(budget);
+        self
+    }
+
     // -- canonical wire encoding (DESIGN.md §14) ----------------------------
 
     /// The canonical JSON encoding `simopt submit` ships over the wire.
     /// Key set and order are fixed; `seed` is a decimal *string* because
     /// the JSON layer holds numbers as `f64` and u64 seeds above 2^53
-    /// would silently lose bits.
+    /// would silently lose bits.  The `budget` key is emitted only when a
+    /// policy is attached, so default-off specs encode (and hash) exactly
+    /// as they did before budgets existed.
     pub fn to_json(&self) -> Value {
         let p = &self.params;
-        obj(vec![
+        let mut kv = vec![
             ("task", s(self.task.as_str())),
             ("backend", s(self.backend.as_str())),
             ("size", num(self.size as f64)),
@@ -136,11 +155,19 @@ impl ExperimentSpec {
                 ("resources", num(p.resources as f64)),
                 ("tightness", num(p.tightness as f64)),
             ])),
-            ("results_dir", match &self.results_dir {
-                Some(d) => s(d),
-                None => Value::Null,
-            }),
-        ])
+        ];
+        if let Some(b) = &self.budget {
+            kv.push(("budget", obj(vec![
+                ("check_every", num(b.check_every as f64)),
+                ("gap", num(b.gap)),
+                ("tol", num(b.tol)),
+            ])));
+        }
+        kv.push(("results_dir", match &self.results_dir {
+            Some(d) => s(d),
+            None => Value::Null,
+        }));
+        obj(kv)
     }
 
     /// Parse the wire encoding back.  Strict: every computation key is
@@ -161,7 +188,8 @@ impl ExperimentSpec {
              "memory", "l_every", "beta", "resources", "tightness"];
         let top = v.as_obj().context("spec must be a JSON object")?;
         for (k, _) in top {
-            ensure!(KEYS.contains(&k.as_str()) || k == "results_dir",
+            ensure!(KEYS.contains(&k.as_str()) || k == "results_dir"
+                        || k == "budget",
                     "unknown spec key '{}'", k);
         }
         for key in KEYS {
@@ -219,6 +247,25 @@ impl ExperimentSpec {
             Some(Value::Str(d)) => Some(d.clone()),
             Some(_) => bail!("spec 'results_dir' must be a string or null"),
         };
+        // budget is wire-optional: absent (or null) means off, matching
+        // pre-budget encodings byte for byte
+        let budget = match v.get("budget") {
+            None | Some(Value::Null) => None,
+            Some(bv) => {
+                let bobj =
+                    bv.as_obj().context("spec 'budget' must be an object")?;
+                for (k, _) in bobj {
+                    ensure!(matches!(k.as_str(),
+                                     "check_every" | "gap" | "tol"),
+                            "unknown budget key '{}'", k);
+                }
+                Some(BudgetPolicy {
+                    check_every: wire_usize(bv, "check_every")?,
+                    gap: wire_f64(bv, "gap")?,
+                    tol: wire_f64(bv, "tol")?,
+                })
+            }
+        };
         Ok(ExperimentSpec {
             task,
             backend,
@@ -229,6 +276,7 @@ impl ExperimentSpec {
             track_every: wire_usize(v, "track_every")?,
             exec,
             params,
+            budget,
             results_dir,
         })
     }
@@ -286,6 +334,20 @@ impl ExperimentSpec {
                          compile.aot --reps {} --shards {}`)",
                         shards, self.reps, self.reps, shards);
             }
+        }
+        // the budget's trace-gap rule reads the shared replication panel,
+        // so it only exists on the batched plan
+        if let Some(b) = &self.budget {
+            ensure!(b.check_every > 0,
+                    "budget check_every must be positive");
+            ensure!(b.gap.is_finite() && b.gap >= 0.0,
+                    "budget gap must be finite and non-negative");
+            ensure!(b.tol.is_finite() && b.tol >= 0.0,
+                    "budget tol must be finite and non-negative");
+            ensure!(matches!(self.exec, ExecMode::Batched { .. }),
+                    "an adaptive replication budget needs the batched \
+                     plan (--exec batch): the trace-gap rule reads the \
+                     shared replication panel");
         }
         // task-specific parameter checks live on the registry entry
         crate::tasks::registry::get(self.task).validate(self)
@@ -489,6 +551,71 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn budget_is_wire_optional_and_hash_relevant() {
+        let plain = ExperimentSpec::new(TaskKind::MeanVariance,
+                                        BackendKind::Native)
+            .execution(ExecMode::Batched { shards: 1 });
+        // no budget ⇒ the key is absent from the wire form entirely
+        // (legacy encodings and hashes stay byte-identical)
+        let text = plain.to_json().to_string_compact();
+        assert!(!text.contains("budget"), "{}", text);
+
+        let budgeted =
+            plain.clone().budget(BudgetPolicy { check_every: 5, gap: 0.25,
+                                                tol: 1e-6 });
+        budgeted.validate().unwrap();
+        // a budget changes what is computed ⇒ it changes the cache key
+        assert_ne!(plain.spec_hash(), budgeted.spec_hash());
+        // and round-trips bit-exactly through the wire form
+        let text = budgeted.to_json().to_string_compact();
+        assert!(text.contains("\"budget\":{\"check_every\":5"), "{}", text);
+        let back =
+            ExperimentSpec::from_json(&Value::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.budget, budgeted.budget);
+        assert_eq!(back.to_json().to_string_compact(), text);
+        assert_eq!(back.spec_hash(), budgeted.spec_hash());
+        // an explicit null parses as off, like results_dir
+        let text = plain.to_json().to_string_compact().replace(
+            "\"results_dir\":null",
+            "\"budget\":null,\"results_dir\":null");
+        let back =
+            ExperimentSpec::from_json(&Value::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.budget, None);
+        assert_eq!(back.spec_hash(), plain.spec_hash());
+    }
+
+    #[test]
+    fn budget_validation_requires_a_batched_plan_and_sane_fields() {
+        let base = ExperimentSpec::new(TaskKind::MeanVariance,
+                                       BackendKind::Native);
+        let policy = BudgetPolicy { check_every: 2, gap: 0.25, tol: 1e-6 };
+        // seq and auto plans have no shared panel to budget over
+        for exec in [ExecMode::Sequential, ExecMode::Auto] {
+            let err = base.clone().execution(exec).budget(policy)
+                .validate().unwrap_err();
+            assert!(format!("{:#}", err).contains("batched"), "{:#}", err);
+        }
+        let batched = base.clone().execution(ExecMode::Batched { shards: 1 });
+        batched.clone().budget(policy).validate().unwrap();
+        // degenerate policies die at validate time with the field named
+        for bad in [BudgetPolicy { check_every: 0, ..policy },
+                    BudgetPolicy { gap: f64::NAN, ..policy },
+                    BudgetPolicy { gap: -0.5, ..policy },
+                    BudgetPolicy { tol: f64::INFINITY, ..policy }] {
+            assert!(batched.clone().budget(bad).validate().is_err(),
+                    "{:?}", bad);
+        }
+        // malformed budget objects are shape errors at parse time
+        let text = batched.clone().budget(policy).to_json()
+            .to_string_compact()
+            .replace("\"gap\":0.25,", "\"gap\":0.25,\"wat\":1,");
+        assert!(ExperimentSpec::from_json(&Value::parse(&text).unwrap())
+                    .is_err());
     }
 
     #[test]

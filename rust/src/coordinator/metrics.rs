@@ -5,7 +5,7 @@
 use anyhow::{Context, Result};
 
 use crate::opt::{FwTrace, SqnTrace};
-use crate::util::json::{arr, num, obj, Value};
+use crate::util::json::{arr, num, obj, s, Value};
 use crate::util::stats::{self, OnlineStats};
 
 use super::experiment::ExperimentSpec;
@@ -101,11 +101,20 @@ pub struct RunResult {
     /// runs and the unsharded batched engine, S for `--shards S`.  Timing
     /// attribution stays `batch_time / R` whatever S is.
     pub shards: usize,
+    /// `(replication, 1-based epoch)` freeze decisions an adaptive
+    /// replication budget made (DESIGN.md §14), in decision order; empty
+    /// when no budget ran or nothing froze.  Part of the payload so a
+    /// budgeted run is reproducible from its result alone.
+    pub frozen: Vec<(usize, usize)>,
+    /// 1-based epoch after which a budget stopped the run early, if one
+    /// did.
+    pub early_stop: Option<usize>,
 }
 
 impl RunResult {
     pub fn new(spec: ExperimentSpec, reps: Vec<RepRecord>) -> Self {
-        RunResult { spec, reps, batched: false, shards: 1 }
+        RunResult { spec, reps, batched: false, shards: 1,
+                    frozen: Vec::new(), early_stop: None }
     }
 
     /// Record the execution plan that actually ran (set by the coordinator
@@ -114,6 +123,14 @@ impl RunResult {
     pub fn executed(mut self, plan: Option<usize>) -> Self {
         self.batched = plan.is_some();
         self.shards = plan.unwrap_or(1);
+        self
+    }
+
+    /// Record what an adaptive replication budget did (DESIGN.md §14).
+    pub fn with_budget_outcome(mut self, frozen: Vec<(usize, usize)>,
+                               early_stop: Option<usize>) -> Self {
+        self.frozen = frozen;
+        self.early_stop = early_stop;
         self
     }
 
@@ -181,17 +198,39 @@ impl RunResult {
         s
     }
 
+    /// The structured `"plan"` object both payload forms embed: the
+    /// resolved execution plan plus (only when a budget acted) the freeze
+    /// decisions and the early-stop epoch.  Budget-off payloads carry
+    /// exactly `{"exec", "shards"}`.
+    fn plan_json(&self) -> Value {
+        let mut kv = vec![
+            ("exec", s(if self.batched { "batched" } else { "sequential" })),
+            ("shards", num(self.shards as f64)),
+        ];
+        if !self.frozen.is_empty() {
+            kv.push(("frozen", arr(self.frozen.iter()
+                .map(|&(r, e)| arr(vec![num(r as f64), num(e as f64)]))
+                .collect())));
+        }
+        if let Some(e) = self.early_stop {
+            kv.push(("early_stop", num(e as f64)));
+        }
+        obj(kv)
+    }
+
     /// Full wire encoding (DESIGN.md §14): spec + resolved plan + every
     /// replication record, timings included.  This is what a `result`
     /// frame carries.  The embedded spec is its *canonical* form
     /// (`results_dir` omitted): a result describes a computation, and
     /// where one submitter asked for delivery must not leak into the
-    /// payload another submitter receives from the cache.
+    /// payload another submitter receives from the cache.  The plan is
+    /// the structured `"plan"` object; [`RunResult::from_json`] still
+    /// accepts the pre-v2 flat `batched`/`shards` keys so old `--out`
+    /// files and cached entries round-trip.
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("spec", self.spec.canonical_json()),
-            ("batched", Value::Bool(self.batched)),
-            ("shards", num(self.shards as f64)),
+            ("plan", self.plan_json()),
             ("records",
              arr(self.reps.iter().map(RepRecord::to_json).collect())),
         ])
@@ -207,8 +246,7 @@ impl RunResult {
     pub fn canonical_json(&self) -> Value {
         obj(vec![
             ("spec", self.spec.canonical_json()),
-            ("batched", Value::Bool(self.batched)),
-            ("shards", num(self.shards as f64)),
+            ("plan", self.plan_json()),
             ("records",
              arr(self.reps
                  .iter()
@@ -235,14 +273,53 @@ impl RunResult {
             .iter()
             .map(RepRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
-        Ok(RunResult {
-            spec,
-            reps,
-            batched: v.get("batched").and_then(Value::as_bool)
-                .context("result 'batched' must be a bool")?,
-            shards: v.get("shards").and_then(Value::as_usize)
-                .context("result 'shards' must be an integer")?,
-        })
+        let (batched, shards, frozen, early_stop) =
+            if let Some(plan) = v.get("plan") {
+                let exec = plan.get("exec").and_then(Value::as_str)
+                    .context("plan 'exec' must be a string")?;
+                let batched = match exec {
+                    "batched" => true,
+                    "sequential" => false,
+                    other => anyhow::bail!("unknown plan exec '{}'", other),
+                };
+                let shards = plan.get("shards").and_then(Value::as_usize)
+                    .context("plan 'shards' must be an integer")?;
+                let frozen = match plan.get("frozen") {
+                    None | Some(Value::Null) => Vec::new(),
+                    Some(fv) => fv.as_arr()
+                        .context("plan 'frozen' must be an array")?
+                        .iter()
+                        .map(|pair| {
+                            let p = pair.as_arr()
+                                .filter(|p| p.len() == 2)
+                                .context("plan 'frozen' entries must be \
+                                          [rep, epoch] pairs")?;
+                            Ok((p[0].as_usize()
+                                    .context("frozen rep must be an \
+                                              integer")?,
+                                p[1].as_usize()
+                                    .context("frozen epoch must be an \
+                                              integer")?))
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                let early_stop = match plan.get("early_stop") {
+                    None | Some(Value::Null) => None,
+                    Some(e) => Some(e.as_usize()
+                        .context("plan 'early_stop' must be an integer")?),
+                };
+                (batched, shards, frozen, early_stop)
+            } else {
+                // pre-v2 payloads carried the plan as flat top-level keys;
+                // old `--out` files and cached entries still parse
+                (v.get("batched").and_then(Value::as_bool)
+                     .context("result 'batched' must be a bool")?,
+                 v.get("shards").and_then(Value::as_usize)
+                     .context("result 'shards' must be an integer")?,
+                 Vec::new(),
+                 None)
+            };
+        Ok(RunResult { spec, reps, batched, shards, frozen, early_stop })
     }
 
     pub fn summary(&self) -> String {
@@ -276,6 +353,7 @@ mod tests {
             track_every: 1,
             exec: ExecMode::Auto,
             params: TaskParams::defaults(TaskKind::MeanVariance, 8),
+            budget: None,
             results_dir: None,
         }
     }
@@ -381,6 +459,58 @@ mod tests {
         let c = RunResult::new(dummy_spec(), vec![rec(vec![2.0, 1.1], 0.5)]);
         assert_ne!(a.canonical_json().to_string_pretty(),
                    c.canonical_json().to_string_pretty());
+    }
+
+    #[test]
+    fn plan_object_replaces_flat_keys_and_carries_budget_outcome() {
+        // budget-off payloads carry exactly {"exec", "shards"}
+        let plain = RunResult::new(dummy_spec(), vec![rec(vec![1.0], 0.1)])
+            .executed(Some(2));
+        let text = plain.to_json().to_string_compact();
+        assert!(text.contains("\"plan\":{\"exec\":\"batched\",\"shards\":2}"),
+                "{}", text);
+        assert!(!text.contains("\"frozen\""), "{}", text);
+        // budget outcomes ride inside the plan, in both payload forms,
+        // and round-trip exactly
+        let budgeted = RunResult::new(dummy_spec(),
+                                      vec![rec(vec![1.0], 0.1)])
+            .executed(Some(1))
+            .with_budget_outcome(vec![(2, 4), (0, 8)], Some(12));
+        for payload in [budgeted.to_json(), budgeted.canonical_json()] {
+            let text = payload.to_string_compact();
+            assert!(text.contains("\"frozen\":[[2,4],[0,8]]"), "{}", text);
+            assert!(text.contains("\"early_stop\":12"), "{}", text);
+        }
+        let back = RunResult::from_json(
+            &Value::parse(&budgeted.to_json().to_string_compact())
+                .unwrap()).unwrap();
+        assert_eq!(back.frozen, vec![(2, 4), (0, 8)]);
+        assert_eq!(back.early_stop, Some(12));
+        assert_eq!(back.to_json().to_string_compact(),
+                   budgeted.to_json().to_string_compact());
+    }
+
+    #[test]
+    fn parser_accepts_legacy_flat_plan_keys() {
+        // a pre-v2 payload: plan as flat top-level batched/shards keys
+        // (old `--out` files and cached entries must keep parsing)
+        let modern = RunResult::new(dummy_spec(),
+                                    vec![rec(vec![2.0, 1.0], 0.25)])
+            .executed(Some(3));
+        let text = modern.to_json().to_string_compact().replace(
+            "\"plan\":{\"exec\":\"batched\",\"shards\":3}",
+            "\"batched\":true,\"shards\":3");
+        assert!(!text.contains("\"plan\""), "substitution failed: {}", text);
+        let back =
+            RunResult::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert!(back.batched);
+        assert_eq!(back.shards, 3);
+        assert!(back.frozen.is_empty());
+        assert_eq!(back.early_stop, None);
+        // the records survived the legacy detour bitwise
+        assert_eq!(back.reps[0].objs, modern.reps[0].objs);
+        // …and re-rendering emits the modern plan object
+        assert!(back.to_json().to_string_compact().contains("\"plan\""));
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub use metrics::{RepRecord, RunResult};
 use anyhow::{bail, Context, Result};
 
 use crate::config::{BackendKind, ExecMode};
+use crate::opt::{NullSink, ProgressSink};
 use crate::rng::StreamTree;
 use crate::runtime::Engine;
 use crate::tasks::registry::{self, TaskBackend};
@@ -77,6 +78,17 @@ impl Coordinator {
     /// task-generic plan-select-and-execute path: validate, resolve the
     /// execution plan, and delegate to the task's registry entry.
     pub fn run(&mut self, spec: &ExperimentSpec) -> Result<RunResult> {
+        self.run_with(spec, &mut NullSink)
+    }
+
+    /// [`Coordinator::run`] with the execution plane's observer hook
+    /// (DESIGN.md §14): every outer optimization step is reported to
+    /// `sink` as a [`crate::opt::StepEvent`] from outside the timed
+    /// kernel regions, so observing a run never perturbs its measured
+    /// timings — and with the default policy knobs the result payload is
+    /// byte-identical to an unobserved run.
+    pub fn run_with(&mut self, spec: &ExperimentSpec,
+                    sink: &mut dyn ProgressSink) -> Result<RunResult> {
         spec.validate()?;
         let plan = self.exec_plan(spec);
         if plan.is_some() && spec.backend == BackendKind::NativePar {
@@ -90,11 +102,18 @@ impl Coordinator {
             );
         }
         let task = registry::get(spec.task);
-        let records = match plan {
-            Some(shards) => task.run_batch(self, spec, shards)?,
-            None => task.run_seq(self, spec)?,
+        let result = match plan {
+            Some(shards) => {
+                let run = task.run_batch(self, spec, shards, sink)?;
+                RunResult::new(spec.clone(), run.records)
+                    .executed(plan)
+                    .with_budget_outcome(run.frozen, run.early_stop)
+            }
+            None => {
+                let records = task.run_seq(self, spec, sink)?;
+                RunResult::new(spec.clone(), records).executed(plan)
+            }
         };
-        let result = RunResult::new(spec.clone(), records).executed(plan);
         // Per-run report isolation (DESIGN.md §14): a spec that names its
         // own results directory gets its report bundle there — concurrent
         // served requests and CI runs never collide in one shared
@@ -174,10 +193,25 @@ pub fn check_artifacts(engine: &Engine, spec: &ExperimentSpec) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::TaskKind;
+    use crate::config::{BudgetPolicy, TaskKind};
+    use crate::opt::StepEvent;
 
     fn coord() -> Coordinator {
         Coordinator::new("artifacts", "/tmp/simopt-test-results").unwrap()
+    }
+
+    /// Records `(epoch, live)` per event — enough to check coverage.
+    struct RecordingSink {
+        events: Vec<(usize, usize)>,
+    }
+
+    impl ProgressSink for RecordingSink {
+        fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+            assert_eq!(ev.reps.len(), ev.objs.len());
+            assert!(ev.epoch >= 1 && ev.epoch <= ev.epochs);
+            self.events.push((ev.epoch, ev.live));
+            Ok(())
+        }
     }
 
     // -- registry-conformance suite (DESIGN.md §12) -------------------------
@@ -271,6 +305,64 @@ mod tests {
                                task.name(), shards);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn conformance_observed_runs_match_unobserved_runs_bitwise() {
+        // The observer hook (DESIGN.md §14) is measurement-neutral: for
+        // EVERY registered task, on both plans, attaching a sink reports
+        // at least one event per plan epoch and changes no objective bit.
+        let mut c = coord();
+        for task in registry::all() {
+            for exec in [ExecMode::Sequential, ExecMode::Batched { shards: 1 }] {
+                let mut spec = task.smoke_spec();
+                spec.exec = exec;
+                let plain = c.run(&spec).unwrap();
+                let mut sink = RecordingSink { events: Vec::new() };
+                let observed = c.run_with(&spec, &mut sink).unwrap();
+                assert!(!sink.events.is_empty(), "task {} {:?} silent",
+                        task.name(), exec);
+                assert_eq!(plain.reps.len(), observed.reps.len());
+                for (a, b) in plain.reps.iter().zip(&observed.reps) {
+                    assert_eq!(a.objs, b.objs, "task {} {:?}",
+                               task.name(), exec);
+                    assert_eq!(a.obj_iters, b.obj_iters, "task {} {:?}",
+                               task.name(), exec);
+                }
+                assert!(observed.frozen.is_empty());
+                assert_eq!(observed.early_stop, None);
+            }
+        }
+    }
+
+    #[test]
+    fn budget_freezes_dominated_replications_and_rides_on_the_result() {
+        // gap = 0 freezes every replication strictly worse than the
+        // incumbent at the first checkpoint; frozen traces are bitwise
+        // prefixes of the unbudgeted run (masked, not resliced), and the
+        // surviving replication is untouched.
+        let mut c = coord();
+        let task = registry::get(TaskKind::MeanVariance);
+        let mut spec = task.smoke_spec();
+        spec.reps = 3;
+        spec.exec = ExecMode::Batched { shards: 1 };
+        let full = c.run(&spec).unwrap();
+        spec.budget = Some(BudgetPolicy { check_every: 1, gap: 0.0,
+                                          tol: 0.0 });
+        let res = c.run(&spec).unwrap();
+        assert!(!res.frozen.is_empty(), "gap=0 must freeze someone");
+        let frozen: Vec<usize> = res.frozen.iter().map(|f| f.0).collect();
+        assert!(frozen.len() < spec.reps, "the incumbent must survive");
+        for (r, (a, b)) in full.reps.iter().zip(&res.reps).enumerate() {
+            if frozen.contains(&r) {
+                assert!(b.objs.len() < a.objs.len(),
+                        "frozen rep {} kept its full trace", r);
+            } else {
+                assert_eq!(a.objs.len(), b.objs.len());
+            }
+            assert_eq!(&a.objs[..b.objs.len()], &b.objs[..],
+                       "rep {} diverged before its freeze", r);
         }
     }
 

@@ -298,6 +298,7 @@ mod tests {
             track_every: 1,
             exec: ExecMode::Auto,
             params: TaskParams::defaults(TaskKind::MeanVariance, size),
+            budget: None,
             results_dir: None,
         };
         let rec = |sc: f64| RepRecord {

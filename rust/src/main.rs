@@ -12,10 +12,12 @@
 use anyhow::{bail, Result};
 
 use simopt::backend::HessianMode;
-use simopt::config::{default_sizes, BackendKind, ExecMode, TaskKind};
+use simopt::config::{default_sizes, BackendKind, BudgetPolicy, ExecMode,
+                     TaskKind};
 use simopt::coordinator::{report, Coordinator, ExperimentSpec, RunResult,
                           SweepSpec};
-use simopt::service::{Client, Response, Server, ServerConfig};
+use simopt::service::{Client, Response, Server, ServerConfig,
+                      PROTOCOL_VERSION};
 use simopt::tasks::registry;
 use simopt::util::cli::Args;
 
@@ -140,6 +142,31 @@ fn exec_flag(args: Args, default: &'static str) -> Args {
                (DESIGN.md §13)")
 }
 
+/// The adaptive-replication-budget flags (`run` and `submit`); the
+/// policy is off unless `--budget` names a checkpoint interval.
+fn budget_flags(args: Args) -> Args {
+    args.flag("budget", None,
+              "adaptive replication budget: freeze dominated replications \
+               every N epochs (batched plans only; off by default)")
+        .flag("budget-gap", Some("0.25"),
+              "relative trace-gap above the incumbent that freezes a \
+               replication at a checkpoint")
+        .flag("budget-tol", Some("1e-6"),
+              "relative per-checkpoint change below which survivors count \
+               as converged (early stop when all do)")
+}
+
+fn budget_from_flags(a: &Args) -> Result<Option<BudgetPolicy>> {
+    if a.get("budget").is_none() {
+        return Ok(None);
+    }
+    Ok(Some(BudgetPolicy {
+        check_every: a.get_usize("budget")?,
+        gap: a.get_f64("budget-gap")?,
+        tol: a.get_f64("budget-tol")?,
+    }))
+}
+
 fn epochs_default(task: TaskKind, a: &Args) -> Result<usize> {
     match a.get("epochs") {
         Some(_) => Ok(a.get_usize("epochs")?),
@@ -188,6 +215,9 @@ fn spec_from_flags(a: &Args) -> Result<ExperimentSpec> {
     if let Some(dir) = a.get("results-dir") {
         spec = spec.results_dir(&dir);
     }
+    if let Some(budget) = budget_from_flags(a)? {
+        spec = spec.budget(budget);
+    }
     Ok(spec)
 }
 
@@ -205,8 +235,8 @@ fn write_out(a: &Args, result: &RunResult) -> Result<()> {
 }
 
 fn cmd_run(rest: &[String]) -> Result<()> {
-    let a = exec_flag(common_flags(Args::new("run", "run one experiment cell")),
-                      "auto")
+    let a = budget_flags(exec_flag(
+        common_flags(Args::new("run", "run one experiment cell")), "auto"))
         .flag("backend", Some("native"), "backend: native | native_par | xla")
         .flag("size", None, "problem dimension (default: task's smallest)")
         .flag("results-dir", None,
@@ -361,7 +391,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_submit(rest: &[String]) -> Result<()> {
-    let a = exec_flag(
+    let a = budget_flags(exec_flag(
         Args::new("submit",
                   "submit a spec to a running `simopt serve` (DESIGN.md §14)")
             .flag("socket", Some("simopt.sock"), "server socket path")
@@ -378,9 +408,12 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
                   "server-side report bundle directory for this request")
             .flag("out", None,
                   "write the deterministic result payload (JSON) here")
+            .switch("stream",
+                    "stream per-epoch progress frames ahead of the result \
+                     (protocol v2)")
             .switch("status", "query server counters instead of submitting")
             .switch("shutdown", "request graceful server shutdown"),
-        "auto")
+        "auto"))
         .parse(rest)
         .map_err(|e| anyhow::anyhow!("{}", e))?;
     let mut client = Client::connect(a.get("socket").unwrap())?;
@@ -400,9 +433,22 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
         return Ok(());
     }
     let spec = spec_from_flags(&a)?;
-    let resp = client.submit_with(&spec, |id, position| {
-        eprintln!("[submit] queued id={} position={}", id, position);
-    })?;
+    // the session surface (protocol v2): queued → progress* → terminal
+    let mut session = client.session(&spec, a.get_bool("stream"))?;
+    let resp = loop {
+        match session.next_event()? {
+            Some(Response::Queued { id, position }) => {
+                eprintln!("[submit] queued id={} position={}", id, position)
+            }
+            Some(Response::Progress(p)) => {
+                eprintln!("[submit] progress id={} epoch={}/{} live={} \
+                           step_s={:.6}",
+                          p.id, p.epoch, p.epochs, p.live, p.step_s)
+            }
+            Some(terminal) => break terminal,
+            None => bail!("session ended without a terminal frame"),
+        }
+    };
     match resp {
         Response::Completed { id, cache_hit, result } => {
             println!("{}", result.summary());
@@ -410,6 +456,15 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
                      id, cache_hit,
                      if result.batched { "batched" } else { "sequential" },
                      result.shards);
+            if !result.frozen.is_empty() {
+                println!("[submit] budget froze {} replication(s){}",
+                         result.frozen.len(),
+                         match result.early_stop {
+                             Some(e) => format!(", early stop at epoch {}",
+                                                e),
+                             None => String::new(),
+                         });
+            }
             write_out(&a, &result)?;
             Ok(())
         }
@@ -417,6 +472,9 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
             "server busy: admission queue full (capacity {}) — retry later \
              or raise `simopt serve --queue`", capacity),
         Response::Error { message } => bail!("server error: {}", message),
+        Response::UnsupportedVersion { max } => bail!(
+            "server speaks protocol ≤ {}, this client sent v{} — upgrade \
+             the server or downgrade the client", max, PROTOCOL_VERSION),
         other => bail!("unexpected server answer: {:?}", other),
     }
 }

@@ -13,7 +13,8 @@ use crate::rng::StreamTree;
 use crate::tasks::newsvendor::NvLmo;
 use crate::util::timer::Timer;
 
-use super::panel::{run_panel, PanelHook};
+use super::panel::{run_panel_ctl, PanelCtl, PanelHook, PanelOutcome};
+use super::progress::{NullSink, ProgressSink, StepEvent};
 use super::schedule::fw_gamma;
 
 /// Objective + timing trace of one optimization run.
@@ -34,12 +35,26 @@ impl FwTrace {
 /// Algorithm 1: `epochs` fused epochs on any [`MvBackend`].
 ///
 /// `tree` must be the *replication-level* stream tree; epoch panels use
-/// paths `[epoch]`.
+/// paths `[epoch]`.  Equivalent to [`run_mv_ctl`] with a null sink.
 pub fn run_mv<B: MvBackend + ?Sized>(
     backend: &mut B,
     w0: Vec<f32>,
     epochs: usize,
     tree: &StreamTree,
+) -> Result<(Vec<f32>, FwTrace)> {
+    run_mv_ctl(backend, w0, epochs, tree, 0, &mut NullSink)
+}
+
+/// [`run_mv`] with an observer: `sink` receives one [`StepEvent`] per
+/// epoch (after the timed region, so observation never perturbs the
+/// recorded timings), tagged as replication `rep`.
+pub fn run_mv_ctl<B: MvBackend + ?Sized>(
+    backend: &mut B,
+    w0: Vec<f32>,
+    epochs: usize,
+    tree: &StreamTree,
+    rep: usize,
+    sink: &mut dyn ProgressSink,
 ) -> Result<(Vec<f32>, FwTrace)> {
     let mut w = w0;
     let mut trace = FwTrace::default();
@@ -47,15 +62,25 @@ pub fn run_mv<B: MvBackend + ?Sized>(
         let key = tree.jax_key(&[k as u64]);
         let t = Timer::start();
         let (w_next, obj) = backend.epoch(&w, k, key)?;
-        trace.epoch_s.push(t.elapsed_s());
+        let step_s = t.elapsed_s();
+        trace.epoch_s.push(step_s);
         trace.objs.push(obj);
         w = w_next;
+        sink.on_step(&StepEvent {
+            reps: &[rep],
+            epoch: k + 1,
+            epochs,
+            objs: &[obj],
+            live: 1,
+            step_s,
+        })?;
     }
     Ok((w, trace))
 }
 
 /// Algorithm 2: per-iteration gradient (backend) + LP LMO (host) + update,
-/// resampling every `m_inner` iterations via the epoch key.
+/// resampling every `m_inner` iterations via the epoch key.  Equivalent
+/// to [`run_nv_ctl`] with a null sink.
 pub fn run_nv<B: NvBackend + ?Sized>(
     backend: &mut B,
     lmo: &mut NvLmo,
@@ -63,6 +88,22 @@ pub fn run_nv<B: NvBackend + ?Sized>(
     epochs: usize,
     m_inner: usize,
     tree: &StreamTree,
+) -> Result<(Vec<f32>, FwTrace)> {
+    run_nv_ctl(backend, lmo, x0, epochs, m_inner, tree, 0, &mut NullSink)
+}
+
+/// [`run_nv`] with an observer: `sink` receives one [`StepEvent`] per
+/// epoch (outside the timed region), tagged as replication `rep`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_nv_ctl<B: NvBackend + ?Sized>(
+    backend: &mut B,
+    lmo: &mut NvLmo,
+    x0: Vec<f32>,
+    epochs: usize,
+    m_inner: usize,
+    tree: &StreamTree,
+    rep: usize,
+    sink: &mut dyn ProgressSink,
 ) -> Result<(Vec<f32>, FwTrace)> {
     let mut x = x0;
     let mut trace = FwTrace::default();
@@ -79,8 +120,17 @@ pub fn run_nv<B: NvBackend + ?Sized>(
             let gamma = fw_gamma(k, m, m_inner);
             crate::linalg::vector::fw_update(&mut x, &s, gamma);
         }
-        trace.epoch_s.push(t.elapsed_s());
+        let step_s = t.elapsed_s();
+        trace.epoch_s.push(step_s);
         trace.objs.push(obj);
+        sink.on_step(&StepEvent {
+            reps: &[rep],
+            epoch: k + 1,
+            epochs,
+            objs: &[obj],
+            live: 1,
+            step_s,
+        })?;
     }
     Ok((x, trace))
 }
@@ -116,19 +166,35 @@ impl<B: MvBatchBackend + ?Sized> PanelHook for EpochHook<'_, B> {
 /// Algorithm 1 over all replications at once: one `epoch_batch` call per
 /// epoch.  `trees[r]` must be replication r's stream subtree — the SAME
 /// subtree [`run_mv`] receives — so batched and sequential runs draw
-/// identical panels and produce bit-identical iterates.
+/// identical panels and produce bit-identical iterates.  Equivalent to
+/// [`run_mv_batch_ctl`] with a null sink and no budget.
 pub fn run_mv_batch<B: MvBatchBackend + ?Sized>(
     backend: &mut B,
     w0: &[f32],
     epochs: usize,
     trees: &[StreamTree],
 ) -> Result<(Vec<f32>, Vec<FwTrace>)> {
+    let mut sink = NullSink;
+    let mut ctl = PanelCtl { sink: &mut sink, budget: None };
+    let out = run_mv_batch_ctl(backend, w0, epochs, trees, &mut ctl)?;
+    Ok((out.panel, out.traces))
+}
+
+/// [`run_mv_batch`] under a [`PanelCtl`]: per-step progress events plus
+/// the opt-in adaptive replication budget (DESIGN.md §14).
+pub fn run_mv_batch_ctl<B: MvBatchBackend + ?Sized>(
+    backend: &mut B,
+    w0: &[f32],
+    epochs: usize,
+    trees: &[StreamTree],
+    ctl: &mut PanelCtl<'_>,
+) -> Result<PanelOutcome> {
     let r = trees.len();
     anyhow::ensure!(backend.batch_reps() == r,
                     "backend built for {} replications, got {} trees",
                     backend.batch_reps(), r);
     let mut hook = EpochHook { backend, keys: Vec::with_capacity(r) };
-    run_panel(&mut hook, w0, epochs, trees)
+    run_panel_ctl(&mut hook, w0, epochs, trees, ctl)
 }
 
 /// Algorithm-2 hook: one outer step = M inner iterations, each ONE batched
@@ -169,7 +235,8 @@ impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
     }
 }
 
-/// Algorithm 2 over all replications at once.
+/// Algorithm 2 over all replications at once.  Equivalent to
+/// [`run_nv_batch_ctl`] with a null sink and no budget.
 pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
     backend: &mut B,
     lmos: &mut [NvLmo],
@@ -178,6 +245,25 @@ pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
     m_inner: usize,
     trees: &[StreamTree],
 ) -> Result<(Vec<f32>, Vec<FwTrace>)> {
+    let mut sink = NullSink;
+    let mut ctl = PanelCtl { sink: &mut sink, budget: None };
+    let out =
+        run_nv_batch_ctl(backend, lmos, x0, epochs, m_inner, trees,
+                         &mut ctl)?;
+    Ok((out.panel, out.traces))
+}
+
+/// [`run_nv_batch`] under a [`PanelCtl`]: per-step progress events plus
+/// the opt-in adaptive replication budget (DESIGN.md §14).
+pub fn run_nv_batch_ctl<B: NvBatchBackend + ?Sized>(
+    backend: &mut B,
+    lmos: &mut [NvLmo],
+    x0: &[f32],
+    epochs: usize,
+    m_inner: usize,
+    trees: &[StreamTree],
+    ctl: &mut PanelCtl<'_>,
+) -> Result<PanelOutcome> {
     let r = trees.len();
     let d = x0.len();
     anyhow::ensure!(backend.batch_reps() == r,
@@ -192,7 +278,7 @@ pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
         g: vec![0.0f32; r * d],
         keys: Vec::with_capacity(r),
     };
-    run_panel(&mut hook, x0, epochs, trees)
+    run_panel_ctl(&mut hook, x0, epochs, trees, ctl)
 }
 
 #[cfg(test)]

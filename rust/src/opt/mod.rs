@@ -12,12 +12,25 @@
 //! the sequential driver under the same stream subtrees (DESIGN.md §11).
 //! All batched variants are task-specific [`panel::PanelHook`]s driven by
 //! the ONE generic replication-panel loop in [`panel`] (DESIGN.md §12).
+//!
+//! Every driver also has a controlled variant (`run_*_ctl`) that reports
+//! each outer step to a [`progress::ProgressSink`] — the execution
+//! plane's observer hook (DESIGN.md §14) — and, for the batched drivers,
+//! applies the opt-in [`crate::config::BudgetPolicy`] through
+//! [`panel::run_panel_ctl`].  The plain names are thin wrappers over the
+//! controlled ones with a null sink and no budget.
 
 pub mod frank_wolfe;
 pub mod panel;
+pub mod progress;
 pub mod schedule;
 pub mod sqn;
 
-pub use frank_wolfe::{run_mv, run_mv_batch, run_nv, run_nv_batch, FwTrace};
-pub use panel::{run_panel, PanelHook};
-pub use sqn::{run_sqn, run_sqn_batch, SqnConfig, SqnTrace};
+pub use frank_wolfe::{run_mv, run_mv_batch, run_mv_batch_ctl, run_mv_ctl,
+                      run_nv, run_nv_batch, run_nv_batch_ctl, run_nv_ctl,
+                      FwTrace};
+pub use panel::{run_panel, run_panel_ctl, PanelCtl, PanelHook,
+                PanelOutcome};
+pub use progress::{NullSink, ProgressSink, SharedSink, StepEvent};
+pub use sqn::{run_sqn, run_sqn_batch, run_sqn_batch_ctl, run_sqn_ctl,
+              SqnBatchOutcome, SqnConfig, SqnTrace};

@@ -5,23 +5,36 @@
 //! start iterate into an `[R × n]` row-major panel (row r = replication
 //! r), advance every row one outer step per iteration through a
 //! task-specific hook, and attribute each step's wall-clock to the
-//! per-replication traces as `batch_time / R`.  What differs per task —
-//! key derivation, inner Frank-Wolfe iterations, LP LMO solves, the SQN
-//! correction-memory machinery — lives entirely behind [`PanelHook`], so
-//! `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}` are thin wrappers
-//! and a new scenario's batched driver is one hook, not a new loop.
+//! per-replication traces as `batch_time / live_rows`.  What differs per
+//! task — key derivation, inner Frank-Wolfe iterations, LP LMO solves,
+//! the SQN correction-memory machinery — lives entirely behind
+//! [`PanelHook`], so `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}`
+//! are thin wrappers and a new scenario's batched driver is one hook,
+//! not a new loop.
 //!
 //! The loop is also shard-agnostic: sharded execution (DESIGN.md §13)
 //! happens entirely inside the backend — `backend::plane::ShardedBatch`
 //! implements the same `*BatchBackend` traits the hooks drive, so NO
 //! sharding code exists in any driver or hook.
+//!
+//! [`run_panel_ctl`] is the controlled variant (DESIGN.md §14): it
+//! reports every step to a [`ProgressSink`] and optionally applies a
+//! [`BudgetPolicy`] — at epoch checkpoints, replications whose objective
+//! clearly trails the best live row freeze (their panel rows are pinned,
+//! masked not resliced, so backends keep dispatching full `[R × n]`
+//! panels and shard shapes never change), and the run stops early once
+//! every survivor's objective has stopped moving.  [`run_panel`] is the
+//! uncontrolled wrapper (null sink, no budget) with the original
+//! signature.
 
 use anyhow::Result;
 
+use crate::config::BudgetPolicy;
 use crate::rng::StreamTree;
 use crate::util::timer::Timer;
 
 use super::frank_wolfe::FwTrace;
+use super::progress::{NullSink, ProgressSink, StepEvent};
 
 /// Task-specific hook driven once per outer step by [`run_panel`].
 pub trait PanelHook {
@@ -45,48 +58,201 @@ pub trait PanelHook {
     /// Untimed per-step observation (e.g. SQN tracked-loss checkpoints);
     /// runs after `advance`'s wall-clock has been recorded, mirroring the
     /// sequential drivers' tracking-outside-the-timed-region discipline.
-    fn observe(&mut self, _k: usize, _panel: &[f32]) -> Result<()> {
+    /// `live[r]` is false once a budget policy froze replication r — a
+    /// hook must not extend frozen rows' observations.
+    fn observe(&mut self, _k: usize, _panel: &[f32], _live: &[bool])
+        -> Result<()> {
         Ok(())
     }
 }
 
-/// Distribute one batched-call wall-clock across the per-replication
-/// traces (total batched time == sum over replications stays comparable
-/// with the sequential protocol's per-replication totals; the
+/// Observer + budget for one [`run_panel_ctl`] run.
+pub struct PanelCtl<'a> {
+    /// Per-step observer (use [`NullSink`] for none).
+    pub sink: &'a mut dyn ProgressSink,
+    /// Opt-in adaptive replication budget; `None` runs every row for
+    /// every step (the bitwise seq==batch contract).
+    pub budget: Option<BudgetPolicy>,
+}
+
+/// What a controlled panel run produced.
+#[derive(Debug, Clone)]
+pub struct PanelOutcome {
+    /// Final `[R × n]` iterate panel (frozen rows hold their pinned
+    /// iterate).
+    pub panel: Vec<f32>,
+    /// One trace per replication; frozen rows' traces end at their
+    /// freeze epoch.
+    pub traces: Vec<FwTrace>,
+    /// `(replication, 1-based epoch)` freeze decisions, in decision
+    /// order — recorded in `RunResult` so a budgeted run is reproducible
+    /// from its payload.
+    pub frozen: Vec<(usize, usize)>,
+    /// 1-based epoch after which the run stopped early (all survivors
+    /// converged), if it did.
+    pub early_stop: Option<usize>,
+}
+
+/// Distribute one batched-call wall-clock across the live per-replication
+/// traces (total batched time == sum over live replications stays
+/// comparable with the sequential protocol's per-replication totals; the
 /// cross-replication timing band is methodologically n/a — see
 /// `coordinator::report`).
-pub(crate) fn push_step(traces: &mut [FwTrace], vals: &[f64], batch_s: f64) {
-    let share = batch_s / traces.len().max(1) as f64;
-    for (trace, &v) in traces.iter_mut().zip(vals) {
-        trace.epoch_s.push(share);
-        trace.objs.push(v);
+pub(crate) fn push_step(traces: &mut [FwTrace], vals: &[f64], batch_s: f64,
+                        live: &[bool]) {
+    let n_live = live.iter().filter(|&&l| l).count().max(1);
+    let share = batch_s / n_live as f64;
+    for ((trace, &v), &l) in traces.iter_mut().zip(vals).zip(live) {
+        if l {
+            trace.epoch_s.push(share);
+            trace.objs.push(v);
+        }
     }
 }
 
 /// Run `steps` outer steps of `hook` over the replication panel tiled
 /// from `x0`, one row per subtree in `trees`.  Returns the final panel
 /// and one per-replication trace of (recorded value, wall-clock share)
-/// per step.
+/// per step.  Equivalent to [`run_panel_ctl`] with a null sink and no
+/// budget.
 pub fn run_panel<H: PanelHook + ?Sized>(
     hook: &mut H,
     x0: &[f32],
     steps: usize,
     trees: &[StreamTree],
 ) -> Result<(Vec<f32>, Vec<FwTrace>)> {
+    let mut sink = NullSink;
+    let mut ctl = PanelCtl { sink: &mut sink, budget: None };
+    let out = run_panel_ctl(hook, x0, steps, trees, &mut ctl)?;
+    Ok((out.panel, out.traces))
+}
+
+/// The controlled panel loop: [`run_panel`] plus per-step progress events
+/// and the opt-in adaptive replication budget (DESIGN.md §14).
+///
+/// With `ctl.budget == None` the loop is bit-identical to [`run_panel`]
+/// (the sink observes AFTER each step's timed region and never touches
+/// the panel).  With a budget, at every `check_every`-th epoch the live
+/// rows' recorded values are compared: rows trailing the best live row
+/// by more than `gap` (relative) freeze — their panel row is pinned and
+/// restored after every subsequent `advance`, so backends keep seeing
+/// full-shape panels (masked, not resliced) while the frozen trajectory
+/// stops moving and its trace stops growing.  Once all survivors'
+/// values have moved at most `tol` (relative) since the previous
+/// checkpoint, the loop stops early.
+pub fn run_panel_ctl<H: PanelHook + ?Sized>(
+    hook: &mut H,
+    x0: &[f32],
+    steps: usize,
+    trees: &[StreamTree],
+    ctl: &mut PanelCtl<'_>,
+) -> Result<PanelOutcome> {
     let r = trees.len();
+    let n = x0.len();
+    if let Some(b) = &ctl.budget {
+        anyhow::ensure!(b.check_every > 0,
+                        "budget check_every must be positive");
+        anyhow::ensure!(b.gap.is_finite() && b.gap >= 0.0,
+                        "budget gap must be finite and non-negative");
+        anyhow::ensure!(b.tol.is_finite() && b.tol >= 0.0,
+                        "budget tol must be finite and non-negative");
+    }
     let mut panel = crate::backend::plane::tile_rows(x0, r);
     let mut traces = vec![FwTrace::default(); r];
+    let mut live = vec![true; r];
+    let mut frozen: Vec<(usize, usize)> = Vec::new();
+    let mut early_stop = None;
+    // pinned iterates of frozen rows, restored after every advance
+    let mut pinned: Option<Vec<f32>> = None;
+    // per-row value at the previous budget checkpoint
+    let mut last_ck = vec![f64::NAN; r];
+    let mut have_ck = false;
+    // scratch for the per-step progress event
+    let mut ev_reps: Vec<usize> = Vec::with_capacity(r);
+    let mut ev_objs: Vec<f64> = Vec::with_capacity(r);
+
     for k in 0..steps {
         hook.prepare(k, trees)?;
         let t = Timer::start();
         let vals = hook.advance(k, &mut panel, trees)?;
+        let step_s = t.elapsed_s();
         anyhow::ensure!(vals.len() == r,
                         "hook returned {} values for {} replications",
                         vals.len(), r);
-        push_step(&mut traces, &vals, t.elapsed_s());
-        hook.observe(k, &panel)?;
+        // mask frozen rows: the backend advanced the whole panel (shard
+        // shapes are sacred), the loop pins the frozen iterates back
+        if let Some(pin) = &pinned {
+            for (i, l) in live.iter().enumerate() {
+                if !l {
+                    panel[i * n..(i + 1) * n]
+                        .copy_from_slice(&pin[i * n..(i + 1) * n]);
+                }
+            }
+        }
+        push_step(&mut traces, &vals, step_s, &live);
+        hook.observe(k, &panel, &live)?;
+
+        // the snapshot covers the rows that were live during this step
+        ev_reps.clear();
+        ev_objs.clear();
+        for (i, &l) in live.iter().enumerate() {
+            if l {
+                ev_reps.push(i);
+                ev_objs.push(vals[i]);
+            }
+        }
+
+        // budget checkpoint (never at the final epoch — nothing left to
+        // save)
+        let epoch = k + 1;
+        if let Some(b) = &ctl.budget {
+            if epoch % b.check_every == 0 && epoch < steps {
+                let best = ev_objs.iter().cloned().fold(f64::INFINITY,
+                                                        f64::min);
+                let scale = b.gap * best.abs().max(1e-12);
+                for (&i, &v) in ev_reps.iter().zip(&ev_objs) {
+                    if v - best > scale {
+                        live[i] = false;
+                        frozen.push((i, epoch));
+                        let pin = pinned.get_or_insert_with(
+                            || vec![0.0f32; r * n]);
+                        pin[i * n..(i + 1) * n]
+                            .copy_from_slice(&panel[i * n..(i + 1) * n]);
+                    }
+                }
+                if have_ck {
+                    let converged = ev_reps.iter().zip(&ev_objs).all(
+                        |(&i, &v)| {
+                            !live[i]
+                                || (v - last_ck[i]).abs()
+                                    <= b.tol * v.abs().max(1.0)
+                        });
+                    let any_live = live.iter().any(|&l| l);
+                    if converged && any_live {
+                        early_stop = Some(epoch);
+                    }
+                }
+                for (&i, &v) in ev_reps.iter().zip(&ev_objs) {
+                    last_ck[i] = v;
+                }
+                have_ck = true;
+            }
+        }
+
+        let n_live = live.iter().filter(|&&l| l).count();
+        ctl.sink.on_step(&StepEvent {
+            reps: &ev_reps,
+            epoch,
+            epochs: steps,
+            objs: &ev_objs,
+            live: n_live,
+            step_s,
+        })?;
+        if early_stop.is_some() {
+            break;
+        }
     }
-    Ok((panel, traces))
+    Ok(PanelOutcome { panel, traces, frozen, early_stop })
 }
 
 #[cfg(test)]
@@ -121,7 +287,8 @@ mod tests {
             Ok((0..trees.len()).map(|r| (k * 10 + r) as f64).collect())
         }
 
-        fn observe(&mut self, _k: usize, _panel: &[f32]) -> Result<()> {
+        fn observe(&mut self, _k: usize, _panel: &[f32], _live: &[bool])
+            -> Result<()> {
             self.observed += 1;
             Ok(())
         }
@@ -183,5 +350,127 @@ mod tests {
     fn wrong_value_count_rejected() {
         let trees = vec![StreamTree::new(1), StreamTree::new(2)];
         assert!(run_panel(&mut ShortHook, &[0.0], 1, &trees).is_err());
+    }
+
+    /// Hook with a fixed per-row objective schedule: row r's value at
+    /// step k is `base[r] + slope[r] * k`; every advance also decrements
+    /// every row by 1 so frozen-row masking is visible in the panel.
+    struct ScheduleHook {
+        base: Vec<f64>,
+        slope: Vec<f64>,
+    }
+
+    impl PanelHook for ScheduleHook {
+        fn advance(&mut self, k: usize, panel: &mut [f32],
+                   _trees: &[StreamTree]) -> Result<Vec<f64>> {
+            for v in panel.iter_mut() {
+                *v -= 1.0;
+            }
+            Ok(self.base.iter().zip(&self.slope)
+                .map(|(b, s)| b + s * k as f64).collect())
+        }
+    }
+
+    struct RecordingSink(Vec<(usize, usize)>); // (epoch, live)
+
+    impl ProgressSink for RecordingSink {
+        fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+            self.0.push((ev.epoch, ev.live));
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn ctl_without_budget_matches_run_panel_and_streams_every_step() {
+        let trees: Vec<StreamTree> =
+            (0..2).map(|i| StreamTree::new(i)).collect();
+        let mut hook =
+            ScheduleHook { base: vec![1.0, 2.0], slope: vec![0.0, 0.0] };
+        let (panel, traces) =
+            run_panel(&mut hook, &[0.0], 3, &trees).unwrap();
+        let mut hook =
+            ScheduleHook { base: vec![1.0, 2.0], slope: vec![0.0, 0.0] };
+        let mut sink = RecordingSink(Vec::new());
+        let mut ctl = PanelCtl { sink: &mut sink, budget: None };
+        let out = run_panel_ctl(&mut hook, &[0.0], 3, &trees, &mut ctl)
+            .unwrap();
+        assert_eq!(out.panel, panel);
+        assert_eq!(out.traces.len(), traces.len());
+        for (a, b) in out.traces.iter().zip(&traces) {
+            assert_eq!(a.objs, b.objs);
+        }
+        assert!(out.frozen.is_empty());
+        assert_eq!(out.early_stop, None);
+        assert_eq!(sink.0, vec![(1, 2), (2, 2), (3, 2)]);
+    }
+
+    #[test]
+    fn budget_freezes_dominated_rows_and_pins_their_panel() {
+        let trees: Vec<StreamTree> =
+            (0..3).map(|i| StreamTree::new(i)).collect();
+        // row 2 trails rows 0/1 by far more than the gap from step one
+        let mut hook = ScheduleHook {
+            base: vec![1.0, 1.01, 50.0],
+            slope: vec![-0.001, -0.001, 0.0],
+        };
+        let mut sink = RecordingSink(Vec::new());
+        let mut ctl = PanelCtl {
+            sink: &mut sink,
+            budget: Some(BudgetPolicy { check_every: 2, gap: 0.5,
+                                        tol: 0.0 }),
+        };
+        let out = run_panel_ctl(&mut hook, &[0.0], 6, &trees, &mut ctl)
+            .unwrap();
+        assert_eq!(out.frozen, vec![(2, 2)]);
+        // frozen at epoch 2 ⇒ its trace has exactly 2 entries, survivors
+        // keep recording
+        assert_eq!(out.traces[2].objs.len(), 2);
+        assert!(out.traces[0].objs.len() > 2);
+        // panel row 2 pinned at −2 (two decrements), survivors kept moving
+        assert_eq!(out.panel[0], -(out.traces[0].objs.len() as f32));
+        assert_eq!(out.panel[2], -2.0);
+        // the sink saw the live count drop after the checkpoint
+        assert_eq!(sink.0[0], (1, 3));
+        assert_eq!(sink.0[1], (2, 2));
+    }
+
+    #[test]
+    fn budget_stops_early_when_survivors_converge() {
+        let trees: Vec<StreamTree> =
+            (0..2).map(|i| StreamTree::new(i)).collect();
+        // both rows constant ⇒ converged at the second checkpoint
+        let mut hook =
+            ScheduleHook { base: vec![1.0, 1.0], slope: vec![0.0, 0.0] };
+        let mut sink = RecordingSink(Vec::new());
+        let mut ctl = PanelCtl {
+            sink: &mut sink,
+            budget: Some(BudgetPolicy { check_every: 2, gap: 10.0,
+                                        tol: 1e-9 }),
+        };
+        let out = run_panel_ctl(&mut hook, &[0.0], 20, &trees, &mut ctl)
+            .unwrap();
+        assert_eq!(out.early_stop, Some(4));
+        assert!(out.frozen.is_empty());
+        assert_eq!(out.traces[0].objs.len(), 4);
+        assert_eq!(sink.0.len(), 4);
+    }
+
+    #[test]
+    fn budget_never_freezes_every_row() {
+        let trees: Vec<StreamTree> =
+            (0..2).map(|i| StreamTree::new(i)).collect();
+        let mut hook =
+            ScheduleHook { base: vec![1.0, 9.0], slope: vec![-0.01, 0.0] };
+        let mut sink = RecordingSink(Vec::new());
+        let mut ctl = PanelCtl {
+            sink: &mut sink,
+            budget: Some(BudgetPolicy { check_every: 1, gap: 0.1,
+                                        tol: 0.0 }),
+        };
+        let out = run_panel_ctl(&mut hook, &[0.0], 4, &trees, &mut ctl)
+            .unwrap();
+        // the best live row never trails itself: it survives to the end
+        assert_eq!(out.frozen, vec![(1, 1)]);
+        assert_eq!(out.traces[0].objs.len(), 4);
     }
 }

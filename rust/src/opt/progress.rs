@@ -1,0 +1,118 @@
+//! The execution plane's observer hook (DESIGN.md §14).
+//!
+//! Streaming sessions need per-epoch objective snapshots out of the
+//! drivers without the drivers learning anything about serving.  The
+//! contract is one trait: a [`ProgressSink`] receives a [`StepEvent`]
+//! after every outer step — from the generic replication-panel loop
+//! (one event covering all live rows) and from the sequential drivers
+//! (one event per replication per epoch).  The coordinator threads a
+//! sink through `run_with`; the service's worker adapts it onto the
+//! per-job reply channel; everything below the coordinator stays
+//! serving-agnostic.
+//!
+//! Sink calls happen OUTSIDE the timed regions (after the step's
+//! wall-clock has been recorded), so an attached observer never
+//! perturbs the reported timings, and a [`NullSink`] observer leaves
+//! results byte-identical to an unobserved run.
+
+use anyhow::Result;
+
+/// One outer optimization step, as seen by an observer.
+#[derive(Debug, Clone, Copy)]
+pub struct StepEvent<'a> {
+    /// Replication indices the snapshot covers (the live rows for a
+    /// panel step; a single replication for a sequential driver).
+    pub reps: &'a [usize],
+    /// 1-based epoch / iteration just completed.
+    pub epoch: usize,
+    /// Total epochs / iterations the run was asked for.
+    pub epochs: usize,
+    /// Recorded value per covered replication (epoch objective for FW
+    /// tasks, minibatch loss for SQN), aligned with `reps`.
+    pub objs: &'a [f64],
+    /// Replications still advancing after this step (always
+    /// `reps.len()` unless a budget policy froze rows).
+    pub live: usize,
+    /// Wall-clock seconds of the step's timed region.
+    pub step_s: f64,
+}
+
+/// Per-step observer threaded through the drivers.  `Send` so the
+/// native-parallel sequential arm can share one sink across its
+/// replication threads (behind a mutex).
+pub trait ProgressSink: Send {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()>;
+}
+
+/// The no-op observer: drivers run exactly as they do unobserved.
+#[derive(Debug, Default)]
+pub struct NullSink;
+
+impl ProgressSink for NullSink {
+    fn on_step(&mut self, _ev: &StepEvent<'_>) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adapter sharing ONE sink across the replication threads of the
+/// native-parallel sequential arm: each thread locks per event, so
+/// events from different replications interleave but never tear.
+pub struct SharedSink<'a, 'b>(
+    pub &'a std::sync::Mutex<&'b mut dyn ProgressSink>,
+);
+
+impl ProgressSink for SharedSink<'_, '_> {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+        self.0.lock().expect("progress sink poisoned").on_step(ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Sink that records (rep, epoch, obj) triples.
+    #[derive(Default)]
+    pub(crate) struct RecordingSink(pub Vec<(usize, usize, f64)>);
+
+    impl ProgressSink for RecordingSink {
+        fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+            for (&r, &o) in ev.reps.iter().zip(ev.objs) {
+                self.0.push((r, ev.epoch, o));
+            }
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        let ev = StepEvent {
+            reps: &[0, 1],
+            epoch: 1,
+            epochs: 4,
+            objs: &[0.5, 0.25],
+            live: 2,
+            step_s: 0.0,
+        };
+        assert!(NullSink.on_step(&ev).is_ok());
+    }
+
+    #[test]
+    fn shared_sink_serializes_onto_the_inner_sink() {
+        let mut inner = RecordingSink::default();
+        {
+            let boxed: &mut dyn ProgressSink = &mut inner;
+            let shared = std::sync::Mutex::new(boxed);
+            let ev = StepEvent {
+                reps: &[2],
+                epoch: 3,
+                epochs: 8,
+                objs: &[1.5],
+                live: 1,
+                step_s: 0.0,
+            };
+            SharedSink(&shared).on_step(&ev).unwrap();
+        }
+        assert_eq!(inner.0, vec![(2, 3, 1.5)]);
+    }
+}

@@ -14,7 +14,8 @@ use crate::sim::ClassifyData;
 use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
 use crate::util::timer::Timer;
 
-use super::panel::{run_panel, PanelHook};
+use super::panel::{run_panel_ctl, PanelCtl, PanelHook};
+use super::progress::{NullSink, ProgressSink, StepEvent};
 use super::schedule::sqn_alpha;
 
 #[derive(Debug, Clone)]
@@ -78,12 +79,27 @@ impl SqnTrace {
 }
 
 /// Run Algorithm 3.  `tree` is the replication-level stream; minibatch
-/// draws use paths `[1, k]`, Hessian batches `[2, t]`.
+/// draws use paths `[1, k]`, Hessian batches `[2, t]`.  Equivalent to
+/// [`run_sqn_ctl`] with a null sink.
 pub fn run_sqn<B: LrBackend + ?Sized>(
     backend: &mut B,
     data: &ClassifyData,
     cfg: &SqnConfig,
     tree: &StreamTree,
+) -> Result<(Vec<f32>, SqnTrace)> {
+    run_sqn_ctl(backend, data, cfg, tree, 0, &mut NullSink)
+}
+
+/// [`run_sqn`] with an observer: `sink` receives one [`StepEvent`] per
+/// iteration (minibatch loss, outside the timed region), tagged as
+/// replication `rep`.
+pub fn run_sqn_ctl<B: LrBackend + ?Sized>(
+    backend: &mut B,
+    data: &ClassifyData,
+    cfg: &SqnConfig,
+    tree: &StreamTree,
+    rep: usize,
+    sink: &mut dyn ProgressSink,
 ) -> Result<(Vec<f32>, SqnTrace)> {
     let n = data.n_features;
     let mut w = vec![0.0f32; n];
@@ -158,7 +174,8 @@ pub fn run_sqn<B: LrBackend + ?Sized>(
             wbar_prev = Some(wbar_t);
             wbar_acc.iter_mut().for_each(|v| *v = 0.0);
         }
-        trace.iter_s.push(timer.elapsed_s());
+        let step_s = timer.elapsed_s();
+        trace.iter_s.push(step_s);
         trace.batch_loss.push(loss);
 
         // -- convergence tracking (outside the timed region) ---------------
@@ -166,6 +183,14 @@ pub fn run_sqn<B: LrBackend + ?Sized>(
             let l = crate::tasks::classification::full_loss(&w, &xe, &ze);
             trace.checkpoints.push((k, l));
         }
+        sink.on_step(&StepEvent {
+            reps: &[rep],
+            epoch: k,
+            epochs: cfg.iters,
+            objs: &[loss],
+            live: 1,
+            step_s,
+        })?;
     }
     Ok((w, trace))
 }
@@ -304,12 +329,17 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
         Ok(losses)
     }
 
-    fn observe(&mut self, k0: usize, panel: &[f32]) -> Result<()> {
-        // convergence tracking, outside the timed region (as in run_sqn)
+    fn observe(&mut self, k0: usize, panel: &[f32], live: &[bool])
+        -> Result<()> {
+        // convergence tracking, outside the timed region (as in run_sqn);
+        // frozen rows' checkpoint series stop with their trace
         let (cfg, n) = (self.cfg, self.n);
         let k = k0 + 1;
         if cfg.track_every > 0 && (k % cfg.track_every == 0 || k == 1) {
             for i in 0..self.r {
+                if !live[i] {
+                    continue;
+                }
                 let (xe, ze) = &self.evals[i];
                 let l = crate::tasks::classification::full_loss(
                     &panel[i * n..(i + 1) * n], xe, ze);
@@ -336,6 +366,33 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
     cfg: &SqnConfig,
     trees: &[StreamTree],
 ) -> Result<(Vec<f32>, Vec<SqnTrace>)> {
+    let mut sink = NullSink;
+    let mut ctl = PanelCtl { sink: &mut sink, budget: None };
+    let out = run_sqn_batch_ctl(backend, data, cfg, trees, &mut ctl)?;
+    Ok((out.panel, out.traces))
+}
+
+/// What [`run_sqn_batch_ctl`] produced — [`super::panel::PanelOutcome`]
+/// with the reassembled per-replication [`SqnTrace`]s.
+#[derive(Debug, Clone)]
+pub struct SqnBatchOutcome {
+    pub panel: Vec<f32>,
+    pub traces: Vec<SqnTrace>,
+    /// `(replication, 1-based iteration)` freeze decisions.
+    pub frozen: Vec<(usize, usize)>,
+    /// 1-based iteration after which the run stopped early, if it did.
+    pub early_stop: Option<usize>,
+}
+
+/// [`run_sqn_batch`] under a [`PanelCtl`]: per-iteration progress events
+/// plus the opt-in adaptive replication budget (DESIGN.md §14).
+pub fn run_sqn_batch_ctl<B: LrBatchBackend + ?Sized>(
+    backend: &mut B,
+    data: &ClassifyData,
+    cfg: &SqnConfig,
+    trees: &[StreamTree],
+    ctl: &mut PanelCtl<'_>,
+) -> Result<SqnBatchOutcome> {
     let r = trees.len();
     let n = data.n_features;
     anyhow::ensure!(backend.batch_reps() == r,
@@ -374,12 +431,12 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
         pairs_rejected: vec![0; r],
     };
     let x0 = vec![0.0f32; n];
-    let (w, panel_traces) = run_panel(&mut hook, &x0, cfg.iters, trees)?;
+    let out = run_panel_ctl(&mut hook, &x0, cfg.iters, trees, ctl)?;
 
     // Reassemble SqnTraces: the generic loop recorded minibatch losses and
     // wall-clock shares; checkpoints and pair counts are hook state.
     let mut traces = Vec::with_capacity(r);
-    for (i, ft) in panel_traces.into_iter().enumerate() {
+    for (i, ft) in out.traces.into_iter().enumerate() {
         traces.push(SqnTrace {
             checkpoints: std::mem::take(&mut hook.checkpoints[i]),
             batch_loss: ft.objs,
@@ -388,7 +445,12 @@ pub fn run_sqn_batch<B: LrBatchBackend + ?Sized>(
             pairs_rejected: hook.pairs_rejected[i],
         });
     }
-    Ok((w, traces))
+    Ok(SqnBatchOutcome {
+        panel: out.panel,
+        traces,
+        frozen: out.frozen,
+        early_stop: out.early_stop,
+    })
 }
 
 #[cfg(test)]

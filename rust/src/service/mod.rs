@@ -11,8 +11,12 @@
 //! across requests, behind a small, versioned JSON-lines protocol over a
 //! Unix-domain socket.
 //!
-//! * [`protocol`] — frame grammar + [`Client`]; specs travel in their
-//!   canonical [`ExperimentSpec::to_json`] encoding.
+//! * [`protocol`] — frame grammar + [`Client`] and its per-conversation
+//!   [`Session`] handle; specs travel in their canonical
+//!   [`ExperimentSpec::to_json`] encoding.  Protocol v2 adds streaming
+//!   submits (`stream` → per-epoch `progress` frames) and typed
+//!   `unsupported_version` answers; v1 conversations are still served
+//!   verbatim, at their own version.
 //! * [`queue`] — bounded FIFO admission with typed `busy` backpressure.
 //! * [`cache`] — content-addressed results keyed by
 //!   [`ExperimentSpec::spec_hash`]; repeat submissions re-execute nothing.
@@ -35,7 +39,7 @@ pub mod queue;
 pub mod server;
 
 pub use cache::ResultCache;
-pub use protocol::{Client, Request, Response, StatusInfo,
-                   PROTOCOL_VERSION};
+pub use protocol::{Client, ProgressInfo, Request, Response, Session,
+                   StatusInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 pub use queue::{Bounded, PushError};
 pub use server::{Server, ServerConfig, ServerStats};

@@ -3,17 +3,23 @@
 //!
 //! Framing: every frame is ONE line of compact JSON
 //! (`Value::to_string_compact` never emits a newline) terminated by `\n`,
-//! over a Unix-domain stream socket.  Every frame carries `"v": 1`; a
-//! server answers an unknown version or a malformed line with a typed
-//! `error` frame rather than dropping the connection, so clients always
-//! have something to report.
+//! over a Unix-domain stream socket.  Every frame carries `"v"`; this
+//! build speaks versions [`MIN_PROTOCOL_VERSION`]..=[`PROTOCOL_VERSION`]
+//! and a server answers every conversation *at the request's version* —
+//! a v1 client keeps receiving exactly the v1 frames it always did.  A
+//! version outside that range is answered with a typed
+//! `unsupported_version` frame naming the server's maximum; a malformed
+//! line gets a typed `error` frame rather than a dropped connection, so
+//! clients always have something to report.
 //!
 //! Conversation shape: one *request* per connection.  `submit` is answered
 //! by an immediate `queued` ack (or `busy` / `error`), then — on the same
-//! connection, once a worker finishes — the final `result` frame; `status`
-//! and `shutdown` are answered by a single frame.  Specs travel in the
-//! canonical [`ExperimentSpec::to_json`] encoding, results as
-//! [`RunResult::to_json`].
+//! connection — zero or more `progress` frames (v2 streaming submits
+//! only) and finally the terminal `result` frame; `status` and `shutdown`
+//! are answered by a single frame.  Specs travel in the canonical
+//! [`ExperimentSpec::to_json`] encoding, results as
+//! [`RunResult::to_json`].  Unknown top-level keys on any frame are
+//! ignored, so v2+ additions never break a v1 parser.
 
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::UnixStream;
@@ -22,16 +28,24 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{ExperimentSpec, RunResult};
-use crate::util::json::{num, obj, s, Value};
+use crate::util::json::{arr, num, obj, s, Value};
 
-/// Bump on any frame-grammar change; the server rejects other versions.
-pub const PROTOCOL_VERSION: u64 = 1;
+/// Highest protocol version this build speaks; bump on any frame-grammar
+/// change.  v2 added streaming submits (`stream` on `submit`, `progress`
+/// frames) and the `unsupported_version` answer.
+pub const PROTOCOL_VERSION: u64 = 2;
+
+/// Lowest version this build still answers — v1 conversations are served
+/// verbatim (no `progress` frames can occur on them).
+pub const MIN_PROTOCOL_VERSION: u64 = 1;
 
 /// Client → server frames.
 #[derive(Debug)]
 pub enum Request {
-    /// Run (or answer from cache) one experiment spec.
-    Submit(Box<ExperimentSpec>),
+    /// Run (or answer from cache) one experiment spec.  `stream` (v2+)
+    /// asks for per-epoch `progress` frames before the terminal `result`;
+    /// on a v1 conversation the key is never emitted and never honored.
+    Submit { spec: Box<ExperimentSpec>, stream: bool },
     /// Report queue/cache/worker counters.
     Status,
     /// Stop accepting, drain admitted work, exit.
@@ -43,9 +57,12 @@ impl Request {
         let head = |t: &str| vec![("v", num(PROTOCOL_VERSION as f64)),
                                   ("type", s(t))];
         match self {
-            Request::Submit(spec) => {
+            Request::Submit { spec, stream } => {
                 let mut kv = head("submit");
                 kv.push(("spec", spec.to_json()));
+                if *stream {
+                    kv.push(("stream", Value::Bool(true)));
+                }
                 obj(kv)
             }
             Request::Status => obj(head("status")),
@@ -54,12 +71,20 @@ impl Request {
     }
 
     pub fn from_json(v: &Value) -> Result<Request> {
-        check_version(v)?;
+        let ver = check_version(v)?;
         match frame_type(v)? {
             "submit" => {
                 let spec = v.get("spec")
                     .context("submit frame is missing 'spec'")?;
-                Ok(Request::Submit(Box::new(ExperimentSpec::from_json(spec)?)))
+                // `stream` is v2 grammar: a v1 frame carrying it is a
+                // foreign key and is ignored like any other unknown key
+                let stream = ver >= 2
+                    && v.get("stream").and_then(Value::as_bool)
+                        .unwrap_or(false);
+                Ok(Request::Submit {
+                    spec: Box::new(ExperimentSpec::from_json(spec)?),
+                    stream,
+                })
             }
             "status" => Ok(Request::Status),
             "shutdown" => Ok(Request::Shutdown),
@@ -80,11 +105,32 @@ pub struct StatusInfo {
     pub cache_hits: u64,
 }
 
+/// One per-epoch snapshot of a streamed run (the v2 `progress` frame):
+/// which replications stepped, their objective values after the step,
+/// the live replication count, and the step's timed seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgressInfo {
+    pub id: u64,
+    /// 1-based epoch within `epochs`.
+    pub epoch: usize,
+    pub epochs: usize,
+    /// Replication indices this event covers (one per entry of `objs`).
+    pub reps: Vec<usize>,
+    pub objs: Vec<f64>,
+    /// Replications still live after this epoch (budget freezes shrink
+    /// it; without a budget it equals the plan's replication count).
+    pub live: usize,
+    /// Timed seconds of this step's kernel region.
+    pub step_s: f64,
+}
+
 /// Server → client frames.
 #[derive(Debug)]
 pub enum Response {
     /// Submit ack: admitted at 1-based queue `position`.
     Queued { id: u64, position: usize },
+    /// One per-epoch snapshot of a streaming submit (v2; non-terminal).
+    Progress(ProgressInfo),
     /// Terminal submit answer: the run's payload, `cache_hit` marking a
     /// result served from the content-addressed cache with no execution.
     Completed { id: u64, cache_hit: bool, result: Box<RunResult> },
@@ -95,17 +141,40 @@ pub enum Response {
     Status(StatusInfo),
     /// Shutdown ack; the server drains admitted work, then exits.
     ShuttingDown,
+    /// The request's `v` is outside this build's range; `max` names the
+    /// highest version the server speaks.  Terminal.
+    UnsupportedVersion { max: u64 },
 }
 
 impl Response {
+    /// Render at this build's own version.
     pub fn to_json(&self) -> Value {
-        let head = |t: &str| vec![("v", num(PROTOCOL_VERSION as f64)),
-                                  ("type", s(t))];
+        self.to_json_for(PROTOCOL_VERSION)
+    }
+
+    /// Render stamped with protocol version `ver` — the server answers
+    /// every conversation at the version the request spoke, so v1
+    /// clients see bit-identical v1 frames from a v2 server.
+    pub fn to_json_for(&self, ver: u64) -> Value {
+        let head = |t: &str| vec![("v", num(ver as f64)), ("type", s(t))];
         match self {
             Response::Queued { id, position } => {
                 let mut kv = head("queued");
                 kv.push(("id", num(*id as f64)));
                 kv.push(("position", num(*position as f64)));
+                obj(kv)
+            }
+            Response::Progress(p) => {
+                let mut kv = head("progress");
+                kv.push(("id", num(p.id as f64)));
+                kv.push(("epoch", num(p.epoch as f64)));
+                kv.push(("epochs", num(p.epochs as f64)));
+                kv.push(("reps", arr(p.reps.iter()
+                    .map(|&r| num(r as f64)).collect())));
+                kv.push(("objs", arr(p.objs.iter()
+                    .map(|&o| num(o)).collect())));
+                kv.push(("live", num(p.live as f64)));
+                kv.push(("step_s", num(p.step_s)));
                 obj(kv)
             }
             Response::Completed { id, cache_hit, result } => {
@@ -136,6 +205,11 @@ impl Response {
                 obj(kv)
             }
             Response::ShuttingDown => obj(head("shutting_down")),
+            Response::UnsupportedVersion { max } => {
+                let mut kv = head("unsupported_version");
+                kv.push(("max", num(*max as f64)));
+                obj(kv)
+            }
         }
     }
 
@@ -147,6 +221,36 @@ impl Response {
                 id: get_u64("id")?,
                 position: get_u64("position")? as usize,
             }),
+            "progress" => {
+                let uints = |key: &str| -> Result<Vec<usize>> {
+                    v.get(key).and_then(Value::as_arr)
+                        .with_context(|| format!(
+                            "progress frame is missing '{}'", key))?
+                        .iter()
+                        .map(|x| x.as_uint().map(|u| u as usize)
+                            .with_context(|| format!(
+                                "'{}' entries must be non-negative \
+                                 integers", key)))
+                        .collect()
+                };
+                let objs: Vec<f64> = v.get("objs")
+                    .and_then(Value::as_arr)
+                    .context("progress frame is missing 'objs'")?
+                    .iter()
+                    .map(|x| x.as_f64()
+                        .context("'objs' entries must be numbers"))
+                    .collect::<Result<_>>()?;
+                Ok(Response::Progress(ProgressInfo {
+                    id: get_u64("id")?,
+                    epoch: get_u64("epoch")? as usize,
+                    epochs: get_u64("epochs")? as usize,
+                    reps: uints("reps")?,
+                    objs,
+                    live: get_u64("live")? as usize,
+                    step_s: v.get("step_s").and_then(Value::as_f64)
+                        .context("progress frame is missing 'step_s'")?,
+                }))
+            }
             "result" => Ok(Response::Completed {
                 id: get_u64("id")?,
                 cache_hit: v.get("cache_hit")
@@ -174,6 +278,9 @@ impl Response {
                 cache_hits: get_u64("cache_hits")?,
             })),
             "shutting_down" => Ok(Response::ShuttingDown),
+            "unsupported_version" => Ok(Response::UnsupportedVersion {
+                max: get_u64("max")?,
+            }),
             other => bail!("unknown response type '{}'", other),
         }
     }
@@ -195,13 +302,21 @@ fn frame_u64(v: &Value, key: &str) -> Result<u64> {
                                   integer", key))
 }
 
-fn check_version(v: &Value) -> Result<()> {
-    let got = frame_u64(v, "v")
-        .context("frame carries no valid protocol version 'v'")?;
-    anyhow::ensure!(got == PROTOCOL_VERSION,
-                    "unsupported protocol version {} (this build speaks {})",
-                    got, PROTOCOL_VERSION);
-    Ok(())
+/// The frame's raw `v` field, without range-checking it — what the
+/// server reads first so an out-of-range version can be answered with
+/// the typed `unsupported_version` frame instead of a generic error.
+pub fn frame_version(v: &Value) -> Result<u64> {
+    frame_u64(v, "v")
+        .context("frame carries no valid protocol version 'v'")
+}
+
+fn check_version(v: &Value) -> Result<u64> {
+    let got = frame_version(v)?;
+    anyhow::ensure!(
+        (MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&got),
+        "unsupported protocol version {} (this build speaks {}..={})",
+        got, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION);
+    Ok(got)
 }
 
 /// Write one frame as a single JSON line.
@@ -258,21 +373,45 @@ impl Client {
         Response::from_json(&v)
     }
 
+    /// Open a submit conversation and return its [`Session`] handle —
+    /// the v2 client surface.  `stream` asks the server for per-epoch
+    /// `progress` events between the `queued` ack and the terminal
+    /// `result`.
+    pub fn session(&mut self, spec: &ExperimentSpec, stream: bool)
+        -> Result<Session<'_>> {
+        self.send(&Request::Submit {
+            spec: Box::new(spec.clone()),
+            stream,
+        })?;
+        Ok(Session { client: self, done: false })
+    }
+
     /// Submit a spec and return the terminal answer (`Completed`, `Busy`,
     /// or `Error`), reporting interim `queued` acks through `on_queued`.
+    ///
+    /// Deprecated in favor of [`Client::session`], which exposes the
+    /// whole event stream; kept as a thin non-streaming wrapper for the
+    /// v1-era call sites.
     pub fn submit_with(&mut self, spec: &ExperimentSpec,
                        mut on_queued: impl FnMut(u64, usize))
         -> Result<Response> {
-        self.send(&Request::Submit(Box::new(spec.clone())))?;
+        let mut session = self.session(spec, false)?;
         loop {
-            match self.recv()? {
-                Response::Queued { id, position } => on_queued(id, position),
-                terminal => return Ok(terminal),
+            match session.next_event()? {
+                Some(Response::Queued { id, position }) => {
+                    on_queued(id, position)
+                }
+                Some(Response::Progress(_)) => {} // not requested; skip
+                Some(terminal) => return Ok(terminal),
+                None => bail!("session ended without a terminal frame"),
             }
         }
     }
 
     /// [`Client::submit_with`] without an ack observer.
+    ///
+    /// Deprecated in favor of [`Client::session`]; kept as a thin
+    /// wrapper.
     pub fn submit(&mut self, spec: &ExperimentSpec) -> Result<Response> {
         self.submit_with(spec, |_, _| {})
     }
@@ -294,6 +433,53 @@ impl Client {
             Response::Error { message } => bail!("server error: {}", message),
             other => bail!("expected a shutting_down frame, got {:?}", other),
         }
+    }
+}
+
+/// One submit conversation on a [`Client`], event by event:
+/// `queued` → `progress`* → terminal (`result`, `busy`, `error`, or
+/// `unsupported_version`).  Anything that is not `queued` or `progress`
+/// is terminal and ends the iteration; the borrow on the client ends
+/// with the session, so the same connection's client can be reused for
+/// a follow-up conversation where the transport allows it.
+pub struct Session<'a> {
+    client: &'a mut Client,
+    done: bool,
+}
+
+impl Session<'_> {
+    /// The next event of the conversation, or `None` once the terminal
+    /// frame has been consumed.
+    pub fn next_event(&mut self) -> Result<Option<Response>> {
+        if self.done {
+            return Ok(None);
+        }
+        let event = self.client.recv()?;
+        if !matches!(event,
+                     Response::Queued { .. } | Response::Progress(_)) {
+            self.done = true;
+        }
+        Ok(Some(event))
+    }
+
+    /// Drain the remaining events and return the terminal answer,
+    /// reporting each interim `progress` frame through `on_progress`.
+    pub fn finish_with(mut self,
+                       mut on_progress: impl FnMut(&ProgressInfo))
+        -> Result<Response> {
+        loop {
+            match self.next_event()? {
+                Some(Response::Queued { .. }) => {}
+                Some(Response::Progress(p)) => on_progress(&p),
+                Some(terminal) => return Ok(terminal),
+                None => bail!("session ended without a terminal frame"),
+            }
+        }
+    }
+
+    /// [`Session::finish_with`] without a progress observer.
+    pub fn finish(self) -> Result<Response> {
+        self.finish_with(|_| {})
     }
 }
 
@@ -320,12 +506,24 @@ mod tests {
 
     #[test]
     fn request_frames_roundtrip() {
-        match roundtrip_req(&Request::Submit(Box::new(spec()))) {
-            Request::Submit(back) => {
-                assert_eq!(back.to_json().to_string_compact(),
-                           spec().to_json().to_string_compact());
+        for streaming in [false, true] {
+            let req = Request::Submit {
+                spec: Box::new(spec()),
+                stream: streaming,
+            };
+            // `stream` is only on the wire when asked for — a default
+            // submit is byte-identical to the v1 one apart from `v`
+            assert_eq!(req.to_json().to_string_compact()
+                           .contains("\"stream\""),
+                       streaming);
+            match roundtrip_req(&req) {
+                Request::Submit { spec: back, stream } => {
+                    assert_eq!(stream, streaming);
+                    assert_eq!(back.to_json().to_string_compact(),
+                               spec().to_json().to_string_compact());
+                }
+                other => panic!("{:?}", other),
             }
-            other => panic!("{:?}", other),
         }
         assert!(matches!(roundtrip_req(&Request::Status), Request::Status));
         assert!(matches!(roundtrip_req(&Request::Shutdown),
@@ -385,7 +583,15 @@ mod tests {
 
     #[test]
     fn version_and_type_are_enforced() {
-        let bad = Value::parse(r#"{"v":2,"type":"status"}"#).unwrap();
+        // both in-range versions parse — the v1 grammar is a subset
+        for ver in [1, 2] {
+            let ok = Value::parse(
+                &format!(r#"{{"v":{},"type":"status"}}"#, ver)).unwrap();
+            assert!(Request::from_json(&ok).is_ok(), "v{} rejected", ver);
+        }
+        // beyond the range is rejected by the parser (the server answers
+        // it with a typed unsupported_version frame before parsing)
+        let bad = Value::parse(r#"{"v":3,"type":"status"}"#).unwrap();
         assert!(Request::from_json(&bad).is_err());
         assert!(Response::from_json(&bad).is_err());
         let none = Value::parse(r#"{"type":"status"}"#).unwrap();
@@ -393,6 +599,52 @@ mod tests {
         let unk = Value::parse(r#"{"v":1,"type":"dance"}"#).unwrap();
         assert!(Request::from_json(&unk).is_err());
         assert!(Response::from_json(&unk).is_err());
+    }
+
+    #[test]
+    fn progress_and_unsupported_version_frames_roundtrip() {
+        let info = ProgressInfo {
+            id: 12,
+            epoch: 3,
+            epochs: 40,
+            reps: vec![0, 2],
+            objs: vec![1.25, -0.5],
+            live: 2,
+            step_s: 0.0625,
+        };
+        match roundtrip_resp(&Response::Progress(info.clone())) {
+            Response::Progress(back) => assert_eq!(back, info),
+            other => panic!("{:?}", other),
+        }
+        match roundtrip_resp(&Response::UnsupportedVersion { max: 2 }) {
+            Response::UnsupportedVersion { max: 2 } => {}
+            other => panic!("{:?}", other),
+        }
+        // corrupt snapshots are typed errors, not truncated data
+        let bad = Value::parse(
+            r#"{"v":2,"type":"progress","id":1,"epoch":1,"epochs":4,
+                "reps":[0.5],"objs":[1.0],"live":1,"step_s":0.1}"#
+                .replace(['\n', ' '], "").as_str()).unwrap();
+        assert!(Response::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn v1_conversations_see_the_v1_grammar() {
+        // answers render at the request's version…
+        let queued = Response::Queued { id: 4, position: 1 };
+        assert_eq!(queued.to_json_for(1).to_string_compact(),
+                   r#"{"v":1,"type":"queued","id":4,"position":1}"#);
+        // …and a v1 submit carrying the v2 'stream' key treats it as an
+        // unknown key: ignored, never honored
+        let line = format!(r#"{{"v":1,"type":"submit","stream":true,
+                               "spec":{}}}"#, spec().to_json()
+                               .to_string_compact())
+            .replace(['\n', ' '], "");
+        let v = Value::parse(&line).unwrap();
+        match Request::from_json(&v).unwrap() {
+            Request::Submit { stream, .. } => assert!(!stream),
+            other => panic!("{:?}", other),
+        }
     }
 
     #[test]

@@ -13,8 +13,11 @@
 //! crosses threads.
 //!
 //! All frames of one conversation are written by its handler thread (the
-//! worker passes the terminal frame back over a per-job channel), so two
-//! threads never interleave bytes on one socket.
+//! worker passes frames back over a per-job channel — for a v2 streaming
+//! submit that is every `progress` frame followed by the terminal one),
+//! so two threads never interleave bytes on one socket.  Every answer is
+//! stamped at the *request's* protocol version; a version outside this
+//! build's range gets the typed `unsupported_version` frame.
 //!
 //! Shutdown: the `shutdown` frame flips a flag and self-connects to wake
 //! the accept loop; the queue closes, workers drain every admitted job
@@ -33,11 +36,13 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::{report, Coordinator, ExperimentSpec, RunResult};
+use crate::opt::{ProgressSink, StepEvent};
 use crate::util::json::{num, obj, s, Value};
 
 use super::cache::ResultCache;
-use super::protocol::{read_frame, write_frame, Request, Response,
-                      StatusInfo, PROTOCOL_VERSION};
+use super::protocol::{frame_version, read_frame, write_frame,
+                      ProgressInfo, Request, Response, StatusInfo,
+                      MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use super::queue::{Bounded, PushError};
 
 /// How `simopt serve` configures the plane.
@@ -77,8 +82,14 @@ struct Job {
     /// canonical JSON once, not three times).
     key: u64,
     canonical: String,
-    /// The terminal frame travels back to the handler that owns the
-    /// connection — workers never write to sockets.
+    /// Protocol version of the submitting conversation — every frame
+    /// the worker renders for it is stamped with this.
+    v: u64,
+    /// v2 streaming submit: render per-epoch `progress` frames onto
+    /// `reply` ahead of the terminal frame.
+    stream: bool,
+    /// Frames travel back to the handler that owns the connection —
+    /// workers never write to sockets.
     reply: mpsc::Sender<Value>,
 }
 
@@ -210,10 +221,12 @@ impl Server {
 }
 
 /// Build a `result` frame around an already-encoded payload (cache hits
-/// reuse the stored `RunResult::to_json` Value without re-parsing it).
-fn completed_frame(id: u64, cache_hit: bool, payload: Value) -> Value {
+/// reuse the stored `RunResult::to_json` Value without re-parsing it),
+/// stamped at the conversation's protocol version.
+fn completed_frame(ver: u64, id: u64, cache_hit: bool, payload: Value)
+    -> Value {
     obj(vec![
-        ("v", num(PROTOCOL_VERSION as f64)),
+        ("v", num(ver as f64)),
         ("type", s("result")),
         ("id", num(id as f64)),
         ("cache_hit", Value::Bool(cache_hit)),
@@ -221,8 +234,35 @@ fn completed_frame(id: u64, cache_hit: bool, payload: Value) -> Value {
     ])
 }
 
-fn error_frame(message: &str) -> Value {
-    Response::Error { message: message.to_string() }.to_json()
+fn error_frame(ver: u64, message: &str) -> Value {
+    Response::Error { message: message.to_string() }.to_json_for(ver)
+}
+
+/// The observer a worker attaches to a streaming submit: renders each
+/// [`StepEvent`] as a `progress` frame onto the job's reply channel.
+/// A hung-up client (dead channel) is not an execution error — the run
+/// completes and its result still lands in the cache.
+struct ChannelSink {
+    v: u64,
+    id: u64,
+    tx: mpsc::Sender<Value>,
+}
+
+impl ProgressSink for ChannelSink {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> anyhow::Result<()> {
+        let frame = Response::Progress(ProgressInfo {
+            id: self.id,
+            epoch: ev.epoch,
+            epochs: ev.epochs,
+            reps: ev.reps.to_vec(),
+            objs: ev.objs.to_vec(),
+            live: ev.live,
+            step_s: ev.step_s,
+        })
+        .to_json_for(self.v);
+        let _ = self.tx.send(frame);
+        Ok(())
+    }
 }
 
 /// Honor a cache-answered request's `results_dir` delivery: reconstruct
@@ -244,11 +284,13 @@ fn deliver_report(spec: &ExperimentSpec, payload: &Value) -> Result<()> {
 
 /// Answer a cache hit: deliver the requested report bundle (if any),
 /// then frame the stored payload — or a typed error if delivery failed.
-fn cache_hit_frame(id: u64, spec: &ExperimentSpec, hit: &Value) -> Value {
+/// Cache hits never stream: there are no epochs to report.
+fn cache_hit_frame(ver: u64, id: u64, spec: &ExperimentSpec, hit: &Value)
+    -> Value {
     match deliver_report(spec, hit) {
         // deep-copy outside the cache lock (get returned an Arc bump)
-        Ok(()) => completed_frame(id, true, hit.clone()),
-        Err(e) => error_frame(&format!("{:#}", e)),
+        Ok(()) => completed_frame(ver, id, true, hit.clone()),
+        Err(e) => error_frame(ver, &format!("{:#}", e)),
     }
 }
 
@@ -273,14 +315,26 @@ fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
         // the identical payload) — and exact on a single-worker plane.
         let (key, canonical) = (job.key, &job.canonical);
         let frame = if let Some(hit) = shared.cache.get(key, canonical) {
-            cache_hit_frame(job.id, &job.spec, &hit)
+            // cache hits never stream — the terminal frame is the answer
+            cache_hit_frame(job.v, job.id, &job.spec, &hit)
         } else if coord.is_some() {
             // contain panics per job: one poisoned spec must not take the
             // worker down and leave every queued client hanging
             let ran = {
                 let c = coord.as_mut().unwrap();
                 std::panic::catch_unwind(
-                    std::panic::AssertUnwindSafe(|| c.run(&job.spec)))
+                    std::panic::AssertUnwindSafe(|| {
+                        if job.stream {
+                            let mut sink = ChannelSink {
+                                v: job.v,
+                                id: job.id,
+                                tx: job.reply.clone(),
+                            };
+                            c.run_with(&job.spec, &mut sink)
+                        } else {
+                            c.run(&job.spec)
+                        }
+                    }))
             };
             match ran {
                 Ok(Ok(result)) => {
@@ -288,9 +342,10 @@ fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
                     shared.cache.insert(key, canonical,
                                         Arc::clone(&payload));
                     shared.executed.fetch_add(1, Ordering::SeqCst);
-                    completed_frame(job.id, false, (*payload).clone())
+                    completed_frame(job.v, job.id, false,
+                                    (*payload).clone())
                 }
-                Ok(Err(e)) => error_frame(&format!("{:#}", e)),
+                Ok(Err(e)) => error_frame(job.v, &format!("{:#}", e)),
                 Err(_) => {
                     // the coordinator may be mid-mutation; rebuild it so
                     // the next job starts from a clean slate
@@ -298,13 +353,14 @@ fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
                                rebuilding its coordinator",
                               job.spec.label());
                     coord = Coordinator::new(artifacts, results).ok();
-                    error_frame(&format!(
+                    error_frame(job.v, &format!(
                         "execution panicked running {} (see server log)",
                         job.spec.label()))
                 }
             }
         } else {
-            error_frame("worker failed to initialize its coordinator \
+            error_frame(job.v,
+                        "worker failed to initialize its coordinator \
                          (see server log)")
         };
         // a vanished handler (client hung up) just drops the frame
@@ -312,8 +368,9 @@ fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
     }
 }
 
-/// Parse and answer one request; submits wait here for their terminal
-/// frame so every byte on the socket comes from this thread.
+/// Parse and answer one request; submits wait here for the worker's
+/// frames (every `progress` frame, then the terminal one) so every byte
+/// on the socket comes from this thread.
 fn handle_connection(stream: UnixStream, shared: &Shared) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
@@ -322,14 +379,35 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
         Ok(Some(v)) => v,
         Ok(None) => return, // client connected and hung up
         Err(e) => {
-            let _ = write_frame(&mut writer, &error_frame(&format!("{:#}", e)));
+            let _ = write_frame(
+                &mut writer,
+                &error_frame(PROTOCOL_VERSION, &format!("{:#}", e)));
             return;
         }
     };
+    // the version gate comes before request parsing: a client from the
+    // future gets told the ceiling in a typed frame, not a parse error
+    let ver = match frame_version(&frame) {
+        Ok(v) => v,
+        Err(e) => {
+            let _ = write_frame(
+                &mut writer,
+                &error_frame(PROTOCOL_VERSION, &format!("{:#}", e)));
+            return;
+        }
+    };
+    if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&ver) {
+        let _ = write_frame(
+            &mut writer,
+            &Response::UnsupportedVersion { max: PROTOCOL_VERSION }
+                .to_json());
+        return;
+    }
     let req = match Request::from_json(&frame) {
         Ok(r) => r,
         Err(e) => {
-            let _ = write_frame(&mut writer, &error_frame(&format!("{:#}", e)));
+            let _ = write_frame(&mut writer,
+                                &error_frame(ver, &format!("{:#}", e)));
             return;
         }
     };
@@ -344,11 +422,11 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
                 cache_hits: shared.cache.hits(),
             };
             let _ = write_frame(&mut writer,
-                                &Response::Status(info).to_json());
+                                &Response::Status(info).to_json_for(ver));
         }
         Request::Shutdown => {
             let _ = write_frame(&mut writer,
-                                &Response::ShuttingDown.to_json());
+                                &Response::ShuttingDown.to_json_for(ver));
             shared.shutdown.store(true, Ordering::SeqCst);
             // wake the blocking accept loop so it observes the flag.
             // This nudge is load-bearing (without it the loop waits for
@@ -367,40 +445,53 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
                            accept loop will notice at the next connection");
             }
         }
-        Request::Submit(spec) => {
+        Request::Submit { spec, stream } => {
             if let Err(e) = spec.validate() {
                 let _ = write_frame(
                     &mut writer,
-                    &error_frame(&format!("invalid spec: {:#}", e)));
+                    &error_frame(ver, &format!("invalid spec: {:#}", e)));
                 return;
             }
             // fast path: cached specs answer instantly, without taking a
             // queue slot — repeat submissions cannot be crowded out by a
-            // full queue
+            // full queue.  A cache hit never streams: no epochs run.
             let key = spec.spec_hash();
             let canonical = spec.canonical_json().to_string_compact();
             let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
             if let Some(hit) = shared.cache.get(key, &canonical) {
                 let _ = write_frame(&mut writer,
-                                    &cache_hit_frame(id, &spec, &hit));
+                                    &cache_hit_frame(ver, id, &spec, &hit));
                 return;
             }
             let (reply, result_rx) = mpsc::channel();
             match shared.queue.try_push(Job { id, spec, key, canonical,
-                                              reply }) {
+                                              v: ver, stream, reply }) {
                 Ok(position) => {
                     let _ = write_frame(
                         &mut writer,
-                        &Response::Queued { id, position }.to_json());
-                    match result_rx.recv() {
-                        Ok(frame) => {
-                            let _ = write_frame(&mut writer, &frame);
-                        }
-                        Err(_) => {
-                            let _ = write_frame(
-                                &mut writer,
-                                &error_frame("worker exited before \
-                                              answering"));
+                        &Response::Queued { id, position }
+                            .to_json_for(ver));
+                    // relay worker frames until the terminal one: every
+                    // frame that is not `progress` ends the conversation
+                    loop {
+                        match result_rx.recv() {
+                            Ok(frame) => {
+                                let terminal = frame.get("type")
+                                    .and_then(Value::as_str)
+                                    != Some("progress");
+                                let _ = write_frame(&mut writer, &frame);
+                                if terminal {
+                                    break;
+                                }
+                            }
+                            Err(_) => {
+                                let _ = write_frame(
+                                    &mut writer,
+                                    &error_frame(ver,
+                                                 "worker exited before \
+                                                  answering"));
+                                break;
+                            }
                         }
                     }
                 }
@@ -410,12 +501,12 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
                         &Response::Busy {
                             capacity: shared.queue.capacity(),
                         }
-                        .to_json());
+                        .to_json_for(ver));
                 }
                 Err(PushError::Closed(_)) => {
                     let _ = write_frame(
                         &mut writer,
-                        &error_frame("service is shutting down"));
+                        &error_frame(ver, "service is shutting down"));
                 }
             }
         }

@@ -17,6 +17,8 @@
 //! honest: it passes the same registry-conformance suite as the original
 //! three without any suite changes.
 
+use std::sync::Mutex;
+
 use anyhow::Result;
 
 use crate::backend::native::{
@@ -32,7 +34,7 @@ use crate::backend::{LrBackend, MvBackend, NvBackend};
 use crate::config::{BackendKind, TaskKind, TaskParams};
 use crate::coordinator::{rep_subtrees, Coordinator, ExperimentSpec,
                          RepRecord};
-use crate::opt::{frank_wolfe, sqn};
+use crate::opt::{frank_wolfe, sqn, PanelCtl, ProgressSink, SharedSink};
 use crate::rng::StreamTree;
 use crate::runtime::Engine;
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
@@ -49,6 +51,17 @@ pub enum TaskBackend {
     Gradient(Box<dyn NvBackend>),
     /// SQN tasks (classification): [`LrBackend`].
     Sqn(Box<dyn LrBackend>),
+}
+
+/// What a batched run hands back to the coordinator: the per-replication
+/// records plus the [`crate::config::BudgetPolicy`] outcome (empty /
+/// `None` when no budget was attached — the default).
+pub struct BatchRun {
+    pub records: Vec<RepRecord>,
+    /// `(rep, epoch)` freeze decisions, in decision order (1-based epochs).
+    pub frozen: Vec<(usize, usize)>,
+    /// Checkpoint epoch at which every surviving replication converged.
+    pub early_stop: Option<usize>,
 }
 
 /// One registered scenario: everything the execution plane needs to run
@@ -94,9 +107,13 @@ pub trait SimTask: Sync {
         -> Result<TaskBackend>;
 
     /// Run `spec.reps` replications on the sequential plan (one backend
-    /// dispatch per replication per step).
-    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>>;
+    /// dispatch per replication per step).  Every outer step of every
+    /// replication is reported to `sink` (the execution plane's observer
+    /// hook, DESIGN.md §14); pass [`crate::opt::NullSink`] for the
+    /// historical silent behavior.  On the native arm replications run on
+    /// pool threads, so events from different replications may interleave.
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>>;
 
     /// Advance all replications together through the shard-aware panel
     /// plane (DESIGN.md §11/§13): `shards` contiguous row shards, one
@@ -105,8 +122,13 @@ pub trait SimTask: Sync {
     /// every shard count is bit-identical to it and to `run_seq` on the
     /// native arm (the coordinator resolves the count from the spec's
     /// `ExecMode` and has already validated `1 ≤ shards ≤ reps`).
+    ///
+    /// Each panel epoch is reported to `sink`, and `spec.budget` (when
+    /// set) drives the adaptive replication budget inside the panel loop;
+    /// the freeze / early-stop outcome rides back on [`BatchRun`].
     fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-                 shards: usize) -> Result<Vec<RepRecord>>;
+                 shards: usize, sink: &mut dyn ProgressSink)
+        -> Result<BatchRun>;
 
     /// A CI-sized native spec every registered task must complete —
     /// the registry-conformance suite (coordinator tests) runs / repeats /
@@ -259,8 +281,8 @@ impl SimTask for MeanVarianceTask {
         }))
     }
 
-    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
@@ -273,20 +295,25 @@ impl SimTask for MeanVarianceTask {
                     XlaMv::new(engine, &universe, p.samples, p.m_inner)?;
                 trees
                     .iter()
-                    .map(|sub| {
-                        let (_, trace) = frank_wolfe::run_mv(
-                            &mut backend, w0.clone(), p.iters, sub)?;
+                    .enumerate()
+                    .map(|(r, sub)| {
+                        let (_, trace) = frank_wolfe::run_mv_ctl(
+                            &mut backend, w0.clone(), p.iters, sub, r,
+                            sink)?;
                         Ok(RepRecord::from_fw(trace))
                     })
                     .collect()
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
+                let shared = Mutex::new(sink);
                 parallel_map(spec.reps, cx.native_threads, |r| {
                     let mut backend = NativeMv::new(
                         universe.clone(), p.samples, p.m_inner, mode);
-                    frank_wolfe::run_mv(&mut backend, w0.clone(), p.iters,
-                                        &trees[r])
+                    let mut sink = SharedSink(&shared);
+                    frank_wolfe::run_mv_ctl(&mut backend, w0.clone(),
+                                            p.iters, &trees[r], r,
+                                            &mut sink)
                         .map(|(_, t)| RepRecord::from_fw(t))
                 })
                 .into_iter()
@@ -296,13 +323,15 @@ impl SimTask for MeanVarianceTask {
     }
 
     fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-                 shards: usize) -> Result<Vec<RepRecord>> {
+                 shards: usize, sink: &mut dyn ProgressSink)
+        -> Result<BatchRun> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
         let w0 = vec![1.0f32 / spec.size as f32; spec.size];
         let trees = rep_subtrees(&tree, spec.reps);
-        let traces = match spec.backend {
+        let mut ctl = PanelCtl { sink, budget: spec.budget };
+        let out = match spec.backend {
             BackendKind::Xla => {
                 // one shard-sized [R/S × …] artifact dispatch per shard
                 let engine = cx.engine()?;
@@ -311,9 +340,8 @@ impl SimTask for MeanVarianceTask {
                         XlaMvBatch::new(engine, &universe, p.samples,
                                         p.m_inner, rows.len())
                     })?;
-                frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
-                                          &trees)?
-                    .1
+                frank_wolfe::run_mv_batch_ctl(&mut backend, &w0, p.iters,
+                                              &trees, &mut ctl)?
             }
             _ => {
                 let threads = cx.native_threads;
@@ -323,12 +351,16 @@ impl SimTask for MeanVarianceTask {
                         Ok(NativeMvBatch::new(&universe, p.samples,
                                               p.m_inner, rows.len(), inner))
                     })?;
-                frank_wolfe::run_mv_batch(&mut backend, &w0, p.iters,
-                                          &trees)?
-                    .1
+                frank_wolfe::run_mv_batch_ctl(&mut backend, &w0, p.iters,
+                                              &trees, &mut ctl)?
             }
         };
-        Ok(traces.into_iter().map(RepRecord::from_fw).collect())
+        Ok(BatchRun {
+            records: out.traces.into_iter().map(RepRecord::from_fw)
+                .collect(),
+            frozen: out.frozen,
+            early_stop: out.early_stop,
+        })
     }
 }
 
@@ -414,8 +446,8 @@ impl SimTask for NewsvendorTask {
         }))
     }
 
-    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let inst = NewsvendorInstance::generate(
             &tree, spec.size, spec.params.resources,
@@ -429,23 +461,27 @@ impl SimTask for NewsvendorTask {
                 let mut backend = XlaNv::new(engine, &inst, p.samples)?;
                 trees
                     .iter()
-                    .map(|sub| {
+                    .enumerate()
+                    .map(|(r, sub)| {
                         let mut lmo = NvLmo::new(&inst);
-                        let (_, trace) = frank_wolfe::run_nv(
+                        let (_, trace) = frank_wolfe::run_nv_ctl(
                             &mut backend, &mut lmo, x0.clone(), p.iters,
-                            p.m_inner, sub)?;
+                            p.m_inner, sub, r, sink)?;
                         Ok(RepRecord::from_fw(trace))
                     })
                     .collect()
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
+                let shared = Mutex::new(sink);
                 parallel_map(spec.reps, cx.native_threads, |r| {
                     let mut backend =
                         NativeNv::new(inst.clone(), p.samples, mode);
                     let mut lmo = NvLmo::new(&inst);
-                    frank_wolfe::run_nv(&mut backend, &mut lmo, x0.clone(),
-                                        p.iters, p.m_inner, &trees[r])
+                    let mut sink = SharedSink(&shared);
+                    frank_wolfe::run_nv_ctl(&mut backend, &mut lmo,
+                                            x0.clone(), p.iters, p.m_inner,
+                                            &trees[r], r, &mut sink)
                         .map(|(_, t)| RepRecord::from_fw(t))
                 })
                 .into_iter()
@@ -455,7 +491,8 @@ impl SimTask for NewsvendorTask {
     }
 
     fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-                 shards: usize) -> Result<Vec<RepRecord>> {
+                 shards: usize, sink: &mut dyn ProgressSink)
+        -> Result<BatchRun> {
         let tree = StreamTree::new(spec.seed);
         let inst = NewsvendorInstance::generate(
             &tree, spec.size, spec.params.resources,
@@ -465,7 +502,8 @@ impl SimTask for NewsvendorTask {
         let trees = rep_subtrees(&tree, spec.reps);
         let mut lmos: Vec<NvLmo> =
             (0..spec.reps).map(|_| NvLmo::new(&inst)).collect();
-        let traces = match spec.backend {
+        let mut ctl = PanelCtl { sink, budget: spec.budget };
+        let out = match spec.backend {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
                 let mut backend = ShardedBatch::serial(
@@ -473,9 +511,9 @@ impl SimTask for NewsvendorTask {
                         XlaNvBatch::new(engine, &inst, p.samples,
                                         rows.len())
                     })?;
-                frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
-                                          p.iters, p.m_inner, &trees)?
-                    .1
+                frank_wolfe::run_nv_batch_ctl(&mut backend, &mut lmos, &x0,
+                                              p.iters, p.m_inner, &trees,
+                                              &mut ctl)?
             }
             _ => {
                 let threads = cx.native_threads;
@@ -485,12 +523,17 @@ impl SimTask for NewsvendorTask {
                         Ok(NativeNvBatch::new(&inst, p.samples, rows.len(),
                                               inner))
                     })?;
-                frank_wolfe::run_nv_batch(&mut backend, &mut lmos, &x0,
-                                          p.iters, p.m_inner, &trees)?
-                    .1
+                frank_wolfe::run_nv_batch_ctl(&mut backend, &mut lmos, &x0,
+                                              p.iters, p.m_inner, &trees,
+                                              &mut ctl)?
             }
         };
-        Ok(traces.into_iter().map(RepRecord::from_fw).collect())
+        Ok(BatchRun {
+            records: out.traces.into_iter().map(RepRecord::from_fw)
+                .collect(),
+            frozen: out.frozen,
+            early_stop: out.early_stop,
+        })
     }
 }
 
@@ -598,8 +641,8 @@ impl SimTask for ClassificationTask {
         }))
     }
 
-    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let data = ClassifyData::generate(&tree, spec.size);
         let cfg = Self::sqn_config(spec);
@@ -613,19 +656,23 @@ impl SimTask for ClassificationTask {
                                              spec.hessian_mode)?;
                 trees
                     .iter()
-                    .map(|sub| {
-                        let (_, trace) =
-                            sqn::run_sqn(&mut backend, &data, &cfg, sub)?;
+                    .enumerate()
+                    .map(|(r, sub)| {
+                        let (_, trace) = sqn::run_sqn_ctl(
+                            &mut backend, &data, &cfg, sub, r, sink)?;
                         Ok(RepRecord::from_sqn(trace))
                     })
                     .collect()
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
+                let shared = Mutex::new(sink);
                 parallel_map(spec.reps, cx.native_threads, |r| {
                     let mut backend =
                         NativeLr::new(&data, mode, spec.hessian_mode);
-                    sqn::run_sqn(&mut backend, &data, &cfg, &trees[r])
+                    let mut sink = SharedSink(&shared);
+                    sqn::run_sqn_ctl(&mut backend, &data, &cfg, &trees[r],
+                                     r, &mut sink)
                         .map(|(_, t)| RepRecord::from_sqn(t))
                 })
                 .into_iter()
@@ -635,12 +682,14 @@ impl SimTask for ClassificationTask {
     }
 
     fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-                 shards: usize) -> Result<Vec<RepRecord>> {
+                 shards: usize, sink: &mut dyn ProgressSink)
+        -> Result<BatchRun> {
         let tree = StreamTree::new(spec.seed);
         let data = ClassifyData::generate(&tree, spec.size);
         let cfg = Self::sqn_config(spec);
         let trees = rep_subtrees(&tree, spec.reps);
-        let traces = match spec.backend {
+        let mut ctl = PanelCtl { sink, budget: spec.budget };
+        let out = match spec.backend {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
                 let p = &spec.params;
@@ -650,7 +699,8 @@ impl SimTask for ClassificationTask {
                                         p.memory, spec.hessian_mode,
                                         rows.len())
                     })?;
-                sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
+                sqn::run_sqn_batch_ctl(&mut backend, &data, &cfg, &trees,
+                                       &mut ctl)?
             }
             _ => {
                 let threads = cx.native_threads;
@@ -660,10 +710,16 @@ impl SimTask for ClassificationTask {
                         Ok(NativeLrBatch::new(&data, rows.len(), inner,
                                               spec.hessian_mode))
                     })?;
-                sqn::run_sqn_batch(&mut backend, &data, &cfg, &trees)?.1
+                sqn::run_sqn_batch_ctl(&mut backend, &data, &cfg, &trees,
+                                       &mut ctl)?
             }
         };
-        Ok(traces.into_iter().map(RepRecord::from_sqn).collect())
+        Ok(BatchRun {
+            records: out.traces.into_iter().map(RepRecord::from_sqn)
+                .collect(),
+            frozen: out.frozen,
+            early_stop: out.early_stop,
+        })
     }
 
     fn smoke_spec(&self) -> ExperimentSpec {
@@ -764,8 +820,8 @@ impl SimTask for MeanCvarTask {
         }))
     }
 
-    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec)
-        -> Result<Vec<RepRecord>> {
+    fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
+               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
@@ -778,20 +834,25 @@ impl SimTask for MeanCvarTask {
                     XlaCvar::new(engine, &universe, p.samples, p.m_inner)?;
                 trees
                     .iter()
-                    .map(|sub| {
-                        let (_, trace) = frank_wolfe::run_mv(
-                            &mut backend, x0.clone(), p.iters, sub)?;
+                    .enumerate()
+                    .map(|(r, sub)| {
+                        let (_, trace) = frank_wolfe::run_mv_ctl(
+                            &mut backend, x0.clone(), p.iters, sub, r,
+                            sink)?;
                         Ok(RepRecord::from_fw(trace))
                     })
                     .collect()
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
+                let shared = Mutex::new(sink);
                 parallel_map(spec.reps, cx.native_threads, |r| {
                     let mut backend = NativeCvar::new(
                         universe.clone(), p.samples, p.m_inner, mode);
-                    frank_wolfe::run_mv(&mut backend, x0.clone(), p.iters,
-                                        &trees[r])
+                    let mut sink = SharedSink(&shared);
+                    frank_wolfe::run_mv_ctl(&mut backend, x0.clone(),
+                                            p.iters, &trees[r], r,
+                                            &mut sink)
                         .map(|(_, t)| RepRecord::from_fw(t))
                 })
                 .into_iter()
@@ -801,7 +862,8 @@ impl SimTask for MeanCvarTask {
     }
 
     fn run_batch(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-                 shards: usize) -> Result<Vec<RepRecord>> {
+                 shards: usize, sink: &mut dyn ProgressSink)
+        -> Result<BatchRun> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
@@ -809,7 +871,8 @@ impl SimTask for MeanCvarTask {
         // the joint [w, t] iterate makes the row width d+1 (tasks::cvar)
         let row = spec.size + 1;
         let trees = rep_subtrees(&tree, spec.reps);
-        let traces = match spec.backend {
+        let mut ctl = PanelCtl { sink, budget: spec.budget };
+        let out = match spec.backend {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
                 let mut backend = ShardedBatch::serial(
@@ -817,9 +880,8 @@ impl SimTask for MeanCvarTask {
                         XlaCvarBatch::new(engine, &universe, p.samples,
                                           p.m_inner, rows.len())
                     })?;
-                frank_wolfe::run_mv_batch(&mut backend, &x0, p.iters,
-                                          &trees)?
-                    .1
+                frank_wolfe::run_mv_batch_ctl(&mut backend, &x0, p.iters,
+                                              &trees, &mut ctl)?
             }
             _ => {
                 let threads = cx.native_threads;
@@ -830,12 +892,16 @@ impl SimTask for MeanCvarTask {
                                                 p.m_inner, rows.len(),
                                                 inner))
                     })?;
-                frank_wolfe::run_mv_batch(&mut backend, &x0, p.iters,
-                                          &trees)?
-                    .1
+                frank_wolfe::run_mv_batch_ctl(&mut backend, &x0, p.iters,
+                                              &trees, &mut ctl)?
             }
         };
-        Ok(traces.into_iter().map(RepRecord::from_fw).collect())
+        Ok(BatchRun {
+            records: out.traces.into_iter().map(RepRecord::from_fw)
+                .collect(),
+            frozen: out.frozen,
+            early_stop: out.early_stop,
+        })
     }
 }
 

@@ -9,14 +9,19 @@
 //! frame, and invalid specs answer typed `error` frames.  Registering a
 //! new scenario must pass this suite with zero suite changes.
 
+use std::io::{BufReader, Write};
+use std::os::unix::net::UnixStream;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::thread::JoinHandle;
 
-use simopt::config::ExecMode;
+use simopt::config::{BudgetPolicy, ExecMode};
 use simopt::coordinator::Coordinator;
-use simopt::service::{Client, Response, Server, ServerConfig, ServerStats};
+use simopt::service::protocol::{read_frame, write_frame};
+use simopt::service::{Client, Response, Server, ServerConfig, ServerStats,
+                      PROTOCOL_VERSION};
 use simopt::tasks::registry;
+use simopt::util::json::{num, obj, s, Value};
 
 fn temp_socket(tag: &str) -> PathBuf {
     static N: AtomicU64 = AtomicU64::new(0);
@@ -242,4 +247,245 @@ fn status_counters_track_the_conversation() {
     let stats = shut_down(&socket, handle);
     assert_eq!(stats.executed, 1);
     assert_eq!(stats.cache_hits, 1);
+}
+
+#[test]
+fn streaming_submissions_keep_the_terminal_payload_bitwise_identical() {
+    // With `stream` on and no budget policy, the only difference from a
+    // plain submit is the interim `progress` frames: the terminal payload
+    // must stay byte-identical to a direct run — for EVERY registered
+    // task, on the sequential, batched, and sharded plans.
+    let (socket, handle) = spawn_server("stream", 1, 8);
+    let mut direct = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut plans = 0u64;
+    for task in registry::all() {
+        for exec in [ExecMode::Sequential, ExecMode::Batched { shards: 1 },
+                     ExecMode::Batched { shards: 2 }] {
+            let mut spec = task.smoke_spec();
+            spec.reps = 3;
+            spec.exec = exec;
+            let want = direct.run(&spec).unwrap();
+            let mut client = Client::connect(&socket).unwrap();
+            let session = client.session(&spec, true).unwrap();
+            let mut progress = 0usize;
+            let resp = session
+                .finish_with(|p| {
+                    assert!(p.epoch >= 1 && p.epoch <= p.epochs,
+                            "task {} exec {:?}", task.name(), exec);
+                    assert_eq!(p.reps.len(), p.objs.len());
+                    assert!(p.live >= 1 && p.live <= p.reps.len());
+                    progress += 1;
+                })
+                .unwrap();
+            match resp {
+                Response::Completed { cache_hit, result, .. } => {
+                    assert!(!cache_hit,
+                            "task {} exec {:?}", task.name(), exec);
+                    assert!(progress >= 1,
+                            "task {} exec {:?}: a streaming submit must \
+                             see progress frames", task.name(), exec);
+                    assert_eq!(
+                        result.canonical_json().to_string_pretty(),
+                        want.canonical_json().to_string_pretty(),
+                        "task {} exec {:?}: streaming must not perturb \
+                         the payload", task.name(), exec
+                    );
+                    assert!(result.frozen.is_empty(),
+                            "no budget policy, no freezes");
+                    assert_eq!(result.early_stop, None);
+                }
+                other => panic!("task {} exec {:?}: {:?}",
+                                task.name(), exec, other),
+            }
+            plans += 1;
+        }
+    }
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, plans);
+    assert_eq!(stats.cache_hits, 0);
+}
+
+#[test]
+fn budget_submissions_stream_shrinking_live_sets_and_record_freezes() {
+    let (socket, handle) = spawn_server("budget", 1, 4);
+    let mut spec = registry::all().next().unwrap().smoke_spec();
+    spec.reps = 3;
+    spec.exec = ExecMode::Batched { shards: 1 };
+    // gap 0 freezes every strictly-dominated row at the first checkpoint;
+    // tol 0 keeps early stop out of the picture
+    spec.budget = Some(BudgetPolicy { check_every: 1, gap: 0.0, tol: 0.0 });
+    let mut client = Client::connect(&socket).unwrap();
+    let session = client.session(&spec, true).unwrap();
+    let mut last_live = usize::MAX;
+    let resp = session
+        .finish_with(|p| {
+            assert!(p.live <= p.reps.len());
+            last_live = p.live;
+        })
+        .unwrap();
+    match resp {
+        Response::Completed { cache_hit, result, .. } => {
+            assert!(!cache_hit);
+            assert!(!result.frozen.is_empty(),
+                    "gap 0 must freeze the dominated rows");
+            assert!(result.frozen.len() < spec.reps,
+                    "the incumbent can never freeze");
+            assert!(last_live < spec.reps,
+                    "late progress frames must see the shrunk live set");
+            // the freeze decisions ride on the wire payload (what the CI
+            // smoke greps out of `--out`)
+            let payload = result.to_json().to_string_compact();
+            assert!(payload.contains("\"frozen\""), "{}", payload);
+        }
+        other => panic!("{:?}", other),
+    }
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 1);
+    assert_eq!(stats.cache_hits, 0);
+}
+
+#[test]
+fn raw_v1_conversations_are_served_verbatim_by_the_v2_server() {
+    let (socket, handle) = spawn_server("v1", 1, 4);
+    let spec = registry::all().next().unwrap().smoke_spec();
+    let stream = UnixStream::connect(&socket).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    // a v1 submit — even one carrying the v2-only `stream` key — answers
+    // in the v1 grammar: queued ack, then the terminal result, with the
+    // whole conversation stamped v1 and no progress frames in between
+    let frame = obj(vec![
+        ("v", num(1.0)),
+        ("type", s("submit")),
+        ("stream", Value::Bool(true)),
+        ("spec", spec.to_json()),
+    ]);
+    write_frame(&mut writer, &frame).unwrap();
+    let ack = read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ack.get("v").and_then(Value::as_uint), Some(1));
+    assert_eq!(ack.get("type").and_then(Value::as_str), Some("queued"));
+    let term = read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(term.get("v").and_then(Value::as_uint), Some(1));
+    assert_eq!(term.get("type").and_then(Value::as_str), Some("result"),
+               "a v1 conversation must never see progress frames");
+    assert_eq!(read_frame(&mut reader).unwrap(), None,
+               "one request per connection");
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 1);
+}
+
+#[test]
+fn out_of_range_versions_answer_the_typed_ceiling() {
+    let (socket, handle) = spawn_server("vmax", 1, 4);
+    let stream = UnixStream::connect(&socket).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    write_frame(&mut writer,
+                &obj(vec![("v", num(9.0)), ("type", s("status"))]))
+        .unwrap();
+    let ans = read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ans.get("type").and_then(Value::as_str),
+               Some("unsupported_version"));
+    assert_eq!(ans.get("max").and_then(Value::as_uint),
+               Some(PROTOCOL_VERSION),
+               "the refusal must name the server's ceiling");
+    assert_eq!(ans.get("v").and_then(Value::as_uint),
+               Some(PROTOCOL_VERSION));
+    assert_eq!(read_frame(&mut reader).unwrap(), None);
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 0);
+}
+
+#[test]
+fn truncated_frames_and_unknown_keys_do_not_wedge_the_server() {
+    let (socket, handle) = spawn_server("robust", 1, 4);
+    // a client dying mid-frame gets a typed error, not a hang
+    let stream = UnixStream::connect(&socket).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    writer.write_all(br#"{"v":2,"type":"sub"#).unwrap();
+    writer.shutdown(std::net::Shutdown::Write).unwrap();
+    let ans = read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ans.get("type").and_then(Value::as_str), Some("error"));
+    // unknown top-level keys are foreign grammar, ignored — not a parse
+    // error (what lets v1 servers skip a v2 `stream` key)
+    let stream = UnixStream::connect(&socket).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    write_frame(&mut writer, &obj(vec![
+        ("v", num(2.0)),
+        ("type", s("status")),
+        ("x-extension", s("ignored")),
+    ]))
+    .unwrap();
+    let ans = read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(ans.get("type").and_then(Value::as_str), Some("status"));
+    // and the server is still fully operational afterwards
+    let spec = registry::all().next().unwrap().smoke_spec();
+    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        Response::Completed { .. } => {}
+        other => panic!("{:?}", other),
+    }
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 1);
+}
+
+#[test]
+fn interleaved_streaming_sessions_never_cross_talk() {
+    let (socket, handle) = spawn_server("interleave", 2, 8);
+    let mut direct = Coordinator::new("artifacts", &results_dir()).unwrap();
+    let mut specs = Vec::new();
+    for task in registry::all().take(2) {
+        let mut spec = task.smoke_spec();
+        spec.reps = 3;
+        spec.exec = ExecMode::Batched { shards: 1 };
+        specs.push(spec);
+    }
+    let wants: Vec<String> = specs
+        .iter()
+        .map(|s| direct.run(s).unwrap().canonical_json().to_string_pretty())
+        .collect();
+    // two concurrent streaming conversations on two workers: every frame
+    // a session sees must carry its own id, and each terminal payload
+    // must be the session's own run
+    let threads: Vec<_> = specs
+        .into_iter()
+        .map(|spec| {
+            let socket = socket.clone();
+            std::thread::spawn(move || -> (usize, String) {
+                let mut client = Client::connect(&socket).unwrap();
+                let mut session = client.session(&spec, true).unwrap();
+                let mut sid = None;
+                let mut progress = 0usize;
+                loop {
+                    match session.next_event().unwrap() {
+                        Some(Response::Queued { id, .. }) => sid = Some(id),
+                        Some(Response::Progress(p)) => {
+                            assert_eq!(Some(p.id), sid,
+                                       "progress frame leaked across \
+                                        sessions");
+                            progress += 1;
+                        }
+                        Some(Response::Completed { id, result, .. }) => {
+                            assert_eq!(Some(id), sid);
+                            return (progress,
+                                    result.canonical_json()
+                                        .to_string_pretty());
+                        }
+                        Some(other) => panic!("{:?}", other),
+                        None => panic!("session ended without a terminal \
+                                        frame"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for (t, want) in threads.into_iter().zip(&wants) {
+        let (progress, got) = t.join().unwrap();
+        assert!(progress >= 1);
+        assert_eq!(&got, want, "each session must stream its own run");
+    }
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 2);
+    assert_eq!(stats.cache_hits, 0);
 }
