@@ -198,6 +198,19 @@ impl RunResult {
         s
     }
 
+    /// Append the budget-outcome keys (only when a budget acted) — shared
+    /// by the `"plan"` object and the legacy flat payload.
+    fn push_budget_keys(&self, kv: &mut Vec<(&'static str, Value)>) {
+        if !self.frozen.is_empty() {
+            kv.push(("frozen", arr(self.frozen.iter()
+                .map(|&(r, e)| arr(vec![num(r as f64), num(e as f64)]))
+                .collect())));
+        }
+        if let Some(e) = self.early_stop {
+            kv.push(("early_stop", num(e as f64)));
+        }
+    }
+
     /// The structured `"plan"` object both payload forms embed: the
     /// resolved execution plan plus (only when a budget acted) the freeze
     /// decisions and the early-stop epoch.  Budget-off payloads carry
@@ -207,14 +220,7 @@ impl RunResult {
             ("exec", s(if self.batched { "batched" } else { "sequential" })),
             ("shards", num(self.shards as f64)),
         ];
-        if !self.frozen.is_empty() {
-            kv.push(("frozen", arr(self.frozen.iter()
-                .map(|&(r, e)| arr(vec![num(r as f64), num(e as f64)]))
-                .collect())));
-        }
-        if let Some(e) = self.early_stop {
-            kv.push(("early_stop", num(e as f64)));
-        }
+        self.push_budget_keys(&mut kv);
         obj(kv)
     }
 
@@ -234,6 +240,26 @@ impl RunResult {
             ("records",
              arr(self.reps.iter().map(RepRecord::to_json).collect())),
         ])
+    }
+
+    /// The pre-v2 wire encoding: [`RunResult::to_json`] with the plan as
+    /// the flat top-level `batched`/`shards` keys the v1 grammar used.
+    /// A v1 conversation's `result` frame must carry this form — a
+    /// deployed v1 client's `from_json` is strict about those keys and
+    /// has never heard of `"plan"`.  Budget outcomes ride as extra
+    /// top-level keys: a v1 parser ignores unknown keys, and
+    /// [`RunResult::from_json`]'s legacy branch reads them back so this
+    /// form round-trips too.
+    pub fn to_json_legacy(&self) -> Value {
+        let mut kv = vec![
+            ("spec", self.spec.canonical_json()),
+            ("batched", Value::Bool(self.batched)),
+            ("shards", num(self.shards as f64)),
+        ];
+        self.push_budget_keys(&mut kv);
+        kv.push(("records",
+                 arr(self.reps.iter().map(RepRecord::to_json).collect())));
+        obj(kv)
     }
 
     /// The *deterministic* payload — [`RunResult::to_json`] with the
@@ -273,6 +299,35 @@ impl RunResult {
             .iter()
             .map(RepRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
+        // budget-outcome keys, read off the `"plan"` object (v2) or the
+        // payload's top level (legacy form) — same grammar either way
+        fn budget_keys(holder: &Value)
+            -> Result<(Vec<(usize, usize)>, Option<usize>)> {
+            let frozen = match holder.get("frozen") {
+                None | Some(Value::Null) => Vec::new(),
+                Some(fv) => fv.as_arr()
+                    .context("'frozen' must be an array")?
+                    .iter()
+                    .map(|pair| {
+                        let p = pair.as_arr()
+                            .filter(|p| p.len() == 2)
+                            .context("'frozen' entries must be \
+                                      [rep, epoch] pairs")?;
+                        Ok((p[0].as_usize()
+                                .context("frozen rep must be an integer")?,
+                            p[1].as_usize()
+                                .context("frozen epoch must be an \
+                                          integer")?))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            let early_stop = match holder.get("early_stop") {
+                None | Some(Value::Null) => None,
+                Some(e) => Some(e.as_usize()
+                    .context("'early_stop' must be an integer")?),
+            };
+            Ok((frozen, early_stop))
+        }
         let (batched, shards, frozen, early_stop) =
             if let Some(plan) = v.get("plan") {
                 let exec = plan.get("exec").and_then(Value::as_str)
@@ -284,40 +339,19 @@ impl RunResult {
                 };
                 let shards = plan.get("shards").and_then(Value::as_usize)
                     .context("plan 'shards' must be an integer")?;
-                let frozen = match plan.get("frozen") {
-                    None | Some(Value::Null) => Vec::new(),
-                    Some(fv) => fv.as_arr()
-                        .context("plan 'frozen' must be an array")?
-                        .iter()
-                        .map(|pair| {
-                            let p = pair.as_arr()
-                                .filter(|p| p.len() == 2)
-                                .context("plan 'frozen' entries must be \
-                                          [rep, epoch] pairs")?;
-                            Ok((p[0].as_usize()
-                                    .context("frozen rep must be an \
-                                              integer")?,
-                                p[1].as_usize()
-                                    .context("frozen epoch must be an \
-                                              integer")?))
-                        })
-                        .collect::<Result<Vec<_>>>()?,
-                };
-                let early_stop = match plan.get("early_stop") {
-                    None | Some(Value::Null) => None,
-                    Some(e) => Some(e.as_usize()
-                        .context("plan 'early_stop' must be an integer")?),
-                };
+                let (frozen, early_stop) = budget_keys(plan)?;
                 (batched, shards, frozen, early_stop)
             } else {
-                // pre-v2 payloads carried the plan as flat top-level keys;
-                // old `--out` files and cached entries still parse
+                // the legacy flat form: pre-v2 `--out` files and cached
+                // entries, and what `to_json_legacy` renders for v1
+                // conversations
+                let (frozen, early_stop) = budget_keys(v)?;
                 (v.get("batched").and_then(Value::as_bool)
                      .context("result 'batched' must be a bool")?,
                  v.get("shards").and_then(Value::as_usize)
                      .context("result 'shards' must be an integer")?,
-                 Vec::new(),
-                 None)
+                 frozen,
+                 early_stop)
             };
         Ok(RunResult { spec, reps, batched, shards, frozen, early_stop })
     }
@@ -511,6 +545,42 @@ mod tests {
         assert_eq!(back.reps[0].objs, modern.reps[0].objs);
         // …and re-rendering emits the modern plan object
         assert!(back.to_json().to_string_compact().contains("\"plan\""));
+    }
+
+    #[test]
+    fn legacy_render_speaks_the_v1_grammar_and_roundtrips() {
+        // what a v1 conversation's result frame carries: the flat
+        // top-level batched/shards keys, no "plan" object — exactly what
+        // a deployed v1 client's strict parser reads
+        let rr = RunResult::new(dummy_spec(),
+                                vec![rec(vec![2.0, 1.0], 0.25)])
+            .executed(Some(3));
+        let text = rr.to_json_legacy().to_string_compact();
+        assert!(text.contains("\"batched\":true"), "{}", text);
+        assert!(text.contains("\"shards\":3"), "{}", text);
+        assert!(!text.contains("\"plan\""), "{}", text);
+        // the legacy form is the pre-v2 grammar byte for byte
+        let v2 = rr.to_json().to_string_compact();
+        assert_eq!(text,
+                   v2.replace("\"plan\":{\"exec\":\"batched\",\"shards\":3}",
+                              "\"batched\":true,\"shards\":3"));
+        let back = RunResult::from_json(&Value::parse(&text).unwrap())
+            .unwrap();
+        assert!(back.batched);
+        assert_eq!(back.shards, 3);
+        assert_eq!(back.reps[0].objs, rr.reps[0].objs);
+        // budget outcomes survive the legacy detour too (extra top-level
+        // keys a v1 parser ignores, ours reads back)
+        let budgeted = RunResult::new(dummy_spec(),
+                                      vec![rec(vec![1.0], 0.1)])
+            .executed(Some(1))
+            .with_budget_outcome(vec![(1, 2)], Some(6));
+        let text = budgeted.to_json_legacy().to_string_compact();
+        assert!(text.contains("\"frozen\":[[1,2]]"), "{}", text);
+        let back = RunResult::from_json(&Value::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.frozen, vec![(1, 2)]);
+        assert_eq!(back.early_stop, Some(6));
     }
 
     #[test]

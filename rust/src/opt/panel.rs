@@ -5,7 +5,7 @@
 //! start iterate into an `[R × n]` row-major panel (row r = replication
 //! r), advance every row one outer step per iteration through a
 //! task-specific hook, and attribute each step's wall-clock to the
-//! per-replication traces as `batch_time / live_rows`.  What differs per
+//! per-replication traces as `batch_time / R`.  What differs per
 //! task — key derivation, inner Frank-Wolfe iterations, LP LMO solves,
 //! the SQN correction-memory machinery — lives entirely behind
 //! [`PanelHook`], so `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}`
@@ -93,15 +93,22 @@ pub struct PanelOutcome {
     pub early_stop: Option<usize>,
 }
 
-/// Distribute one batched-call wall-clock across the live per-replication
-/// traces (total batched time == sum over live replications stays
-/// comparable with the sequential protocol's per-replication totals; the
-/// cross-replication timing band is methodologically n/a — see
-/// `coordinator::report`).
+/// Attribute one batched-call wall-clock to the live per-replication
+/// traces as `batch_s / R` (DESIGN.md §11/§14).  The divisor is the
+/// FULL row count, not the live count: frozen rows are masked, not
+/// resliced, so the backend advances all R rows every step and each
+/// row's true per-step cost is the full-panel share — dividing by the
+/// live count instead would inflate survivors' timings as rows freeze
+/// and make a budgeted run's traces incomparable to an unbudgeted run
+/// of the same spec.  Frozen rows' shares go unattributed (their traces
+/// ended at the freeze), so under a budget the attributed total
+/// undercounts the batch wall-clock: a freeze saves no per-step
+/// compute; the budget's savings come from early stop.  The
+/// cross-replication timing band is methodologically n/a either way —
+/// see `coordinator::report`.
 pub(crate) fn push_step(traces: &mut [FwTrace], vals: &[f64], batch_s: f64,
                         live: &[bool]) {
-    let n_live = live.iter().filter(|&&l| l).count().max(1);
-    let share = batch_s / n_live as f64;
+    let share = batch_s / live.len().max(1) as f64;
     for ((trace, &v), &l) in traces.iter_mut().zip(vals).zip(live) {
         if l {
             trace.epoch_s.push(share);
@@ -221,11 +228,15 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
                     }
                 }
                 if have_ck {
+                    // same small-magnitude floor as the gap rule: tol is
+                    // genuinely relative (the 1e-12 floor only guards
+                    // v == 0), so objectives at loss scales ≪ 1 converge
+                    // on relative movement, not a hidden absolute one
                     let converged = ev_reps.iter().zip(&ev_objs).all(
                         |(&i, &v)| {
                             !live[i]
                                 || (v - last_ck[i]).abs()
-                                    <= b.tol * v.abs().max(1.0)
+                                    <= b.tol * v.abs().max(1e-12)
                         });
                     let any_live = live.iter().any(|&l| l);
                     if converged && any_live {
@@ -453,6 +464,69 @@ mod tests {
         assert!(out.frozen.is_empty());
         assert_eq!(out.traces[0].objs.len(), 4);
         assert_eq!(sink.0.len(), 4);
+    }
+
+    #[test]
+    fn early_stop_tolerance_stays_relative_for_small_magnitudes() {
+        let trees: Vec<StreamTree> =
+            (0..2).map(|i| StreamTree::new(i)).collect();
+        // objectives at loss scale ~1e-4, each checkpoint moving ~0.2%
+        // relative: far from converged at tol 1e-6 even though the
+        // absolute movement (2e-7) is tiny.  An absolute floor of 1.0
+        // (the old `max(|v|, 1.0)` scaling) would have stopped the run
+        // at the second checkpoint.
+        let mut hook = ScheduleHook {
+            base: vec![1e-4, 1e-4],
+            slope: vec![-1e-7, -1e-7],
+        };
+        let mut sink = NullSink;
+        let mut ctl = PanelCtl {
+            sink: &mut sink,
+            budget: Some(BudgetPolicy { check_every: 2, gap: 10.0,
+                                        tol: 1e-6 }),
+        };
+        let out = run_panel_ctl(&mut hook, &[0.0], 8, &trees, &mut ctl)
+            .unwrap();
+        assert_eq!(out.early_stop, None);
+        assert_eq!(out.traces[0].objs.len(), 8);
+    }
+
+    struct StepSecondsSink(Vec<f64>);
+
+    impl ProgressSink for StepSecondsSink {
+        fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+            self.0.push(ev.step_s);
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn survivor_timings_stay_full_panel_shares_after_a_freeze() {
+        let trees: Vec<StreamTree> =
+            (0..3).map(|i| StreamTree::new(i)).collect();
+        // row 2 freezes at the first checkpoint; the backend still
+        // advances the full 3-row panel afterwards, so every step's
+        // share stays batch_s / 3 — a survivor's trace must not inflate
+        // to batch_s / 2 once a row freezes
+        let mut hook = ScheduleHook {
+            base: vec![1.0, 1.01, 50.0],
+            slope: vec![-0.001, -0.001, 0.0],
+        };
+        let mut sink = StepSecondsSink(Vec::new());
+        let mut ctl = PanelCtl {
+            sink: &mut sink,
+            budget: Some(BudgetPolicy { check_every: 2, gap: 0.5,
+                                        tol: 0.0 }),
+        };
+        let out = run_panel_ctl(&mut hook, &[0.0], 6, &trees, &mut ctl)
+            .unwrap();
+        assert_eq!(out.frozen, vec![(2, 2)]);
+        assert_eq!(out.traces[0].epoch_s.len(), 6);
+        for (k, &share) in out.traces[0].epoch_s.iter().enumerate() {
+            // bitwise: the loop computes the identical batch_s / 3.0
+            assert_eq!(share.to_bits(), (sink.0[k] / 3.0).to_bits(),
+                       "epoch {} share must be the full-panel third", k);
+        }
     }
 
     #[test]

@@ -18,8 +18,11 @@
 //! only) and finally the terminal `result` frame; `status` and `shutdown`
 //! are answered by a single frame.  Specs travel in the canonical
 //! [`ExperimentSpec::to_json`] encoding, results as
-//! [`RunResult::to_json`].  Unknown top-level keys on any frame are
-//! ignored, so v2+ additions never break a v1 parser.
+//! [`RunResult::to_json`] — except on v1 conversations, whose `result`
+//! frames embed the flat legacy payload ([`RunResult::to_json_legacy`])
+//! that a deployed v1 client's strict parser expects.  Unknown
+//! top-level keys on any frame are ignored, so v2+ additions never
+//! break a v1 parser.
 
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::UnixStream;
@@ -181,7 +184,11 @@ impl Response {
                 let mut kv = head("result");
                 kv.push(("id", num(*id as f64)));
                 kv.push(("cache_hit", Value::Bool(*cache_hit)));
-                kv.push(("result", result.to_json()));
+                // the payload is versioned too: a v1 conversation's
+                // result embeds the flat legacy grammar its deployed
+                // strict parser expects, not the v2 "plan" object
+                kv.push(("result", if ver < 2 { result.to_json_legacy() }
+                                   else { result.to_json() }));
                 obj(kv)
             }
             Response::Busy { capacity } => {
@@ -634,6 +641,21 @@ mod tests {
         let queued = Response::Queued { id: 4, position: 1 };
         assert_eq!(queued.to_json_for(1).to_string_compact(),
                    r#"{"v":1,"type":"queued","id":4,"position":1}"#);
+        // …including the result PAYLOAD: a v1 result frame embeds the
+        // flat legacy grammar (top-level batched/shards, no "plan"),
+        // because a deployed v1 RunResult::from_json is strict about it
+        let completed = Response::Completed {
+            id: 4,
+            cache_hit: false,
+            result: Box::new(RunResult::new(spec(), vec![])
+                .executed(Some(2))),
+        };
+        let v1_text = completed.to_json_for(1).to_string_compact();
+        assert!(v1_text.contains("\"batched\":true"), "{}", v1_text);
+        assert!(v1_text.contains("\"shards\":2"), "{}", v1_text);
+        assert!(!v1_text.contains("\"plan\""), "{}", v1_text);
+        let v2_text = completed.to_json_for(2).to_string_compact();
+        assert!(v2_text.contains("\"plan\""), "{}", v2_text);
         // …and a v1 submit carrying the v2 'stream' key treats it as an
         // unknown key: ignored, never honored
         let line = format!(r#"{{"v":1,"type":"submit","stream":true,

@@ -220,11 +220,26 @@ impl Server {
     }
 }
 
-/// Build a `result` frame around an already-encoded payload (cache hits
-/// reuse the stored `RunResult::to_json` Value without re-parsing it),
-/// stamped at the conversation's protocol version.
+/// Build a `result` frame around an already-encoded payload, stamped at
+/// the conversation's protocol version.  The payload is versioned too:
+/// stored payloads are `RunResult::to_json` (the v2 grammar) and a v2
+/// conversation reuses them without re-parsing, but a v1 conversation
+/// must carry the flat legacy grammar its deployed strict parser
+/// expects — so for v1 the payload is re-rendered through the
+/// `RunResult` codec.
 fn completed_frame(ver: u64, id: u64, cache_hit: bool, payload: Value)
     -> Value {
+    let payload = if ver < 2 {
+        match RunResult::from_json(&payload) {
+            Ok(r) => r.to_json_legacy(),
+            // unreachable for payloads we rendered ourselves; a typed
+            // error beats handing a v1 client a frame it cannot parse
+            Err(e) => return error_frame(ver, &format!(
+                "stored payload unreadable: {:#}", e)),
+        }
+    } else {
+        payload
+    };
     obj(vec![
         ("v", num(ver as f64)),
         ("type", s("result")),
@@ -375,13 +390,18 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
+    // errors emitted before version negotiation (unreadable frame,
+    // missing/invalid 'v') are stamped at MIN_PROTOCOL_VERSION: the
+    // sender's version is unknown, and the floor is the one stamp every
+    // client in the supported range parses — a strict v1 client rejects
+    // a v:2 frame outright
     let frame = match read_frame(&mut reader) {
         Ok(Some(v)) => v,
         Ok(None) => return, // client connected and hung up
         Err(e) => {
             let _ = write_frame(
                 &mut writer,
-                &error_frame(PROTOCOL_VERSION, &format!("{:#}", e)));
+                &error_frame(MIN_PROTOCOL_VERSION, &format!("{:#}", e)));
             return;
         }
     };
@@ -392,7 +412,7 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
         Err(e) => {
             let _ = write_frame(
                 &mut writer,
-                &error_frame(PROTOCOL_VERSION, &format!("{:#}", e)));
+                &error_frame(MIN_PROTOCOL_VERSION, &format!("{:#}", e)));
             return;
         }
     };

@@ -368,6 +368,21 @@ fn raw_v1_conversations_are_served_verbatim_by_the_v2_server() {
     assert_eq!(term.get("v").and_then(Value::as_uint), Some(1));
     assert_eq!(term.get("type").and_then(Value::as_str), Some("result"),
                "a v1 conversation must never see progress frames");
+    // the embedded payload speaks the v1 grammar too: a deployed v1
+    // client's RunResult::from_json is strict about the flat top-level
+    // batched/shards keys and has never heard of "plan"
+    let payload = term.get("result").expect("result frame has a payload");
+    assert!(payload.get("plan").is_none(),
+            "'plan' is v2 grammar; a v1 payload must stay flat");
+    assert!(matches!(payload.get("batched"), Some(Value::Bool(_))),
+            "v1 payload must carry the flat 'batched' key");
+    assert!(payload.get("shards").and_then(Value::as_uint).is_some(),
+            "v1 payload must carry the flat 'shards' key");
+    assert!(payload.get("spec").is_some()
+                && payload.get("records").and_then(Value::as_arr).is_some(),
+            "v1 payload must carry 'spec' and 'records'");
+    // and it decodes through the shared codec's legacy branch
+    simopt::coordinator::RunResult::from_json(payload).unwrap();
     assert_eq!(read_frame(&mut reader).unwrap(), None,
                "one request per connection");
     let stats = shut_down(&socket, handle);
