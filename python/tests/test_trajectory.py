@@ -5,14 +5,17 @@ import json
 from tools import trajectory as tj
 
 
-def _write(tmp_path, name, bench, commit, ci_run, cases, smoke=True):
+def _write(tmp_path, name, bench, commit, ci_run, cases, smoke=True,
+           phases=None):
     rec = {
         "bench": bench,
         "commit": commit,
         "ci_run": str(ci_run),
         "smoke": smoke,
         "cases": [{"label": l, "reps": 1, "mean_s": m, "std_s": 0.0,
-                   "min_s": m, "median_s": m} for l, m in cases.items()],
+                   "min_s": m, "median_s": m,
+                   "per_phase": (phases or {}).get(l, {})}
+                  for l, m in cases.items()],
     }
     p = tmp_path / name
     p.write_text(json.dumps(rec))
@@ -104,6 +107,35 @@ def test_mixed_local_and_ci_records_order_by_mtime(tmp_path):
     # a local record (no ci_run) must not sort before a newer-by-wallclock
     # CI record just because run ids dwarf mtimes
     assert [r["commit"] for r in runs] == ["old", "new"]
+
+
+def test_per_phase_series_and_trend_table(tmp_path):
+    _write(tmp_path, "BENCH_1.json", "bs", "aaa", 1, {"case": 1.0},
+           phases={"case": {"dispatch": 0.2, "compute": 0.8}})
+    _write(tmp_path, "BENCH_2.json", "bs", "bbb", 2, {"case": 1.1},
+           phases={"case": {"dispatch": 0.4, "compute": 0.7}})
+    runs = tj.load_runs(tj.find_files([tmp_path]))
+    series = tj.phase_series_by_case(runs)
+    assert series[("bs", "case", True)] == [
+        ("aaa", {"dispatch": 0.2, "compute": 0.8}),
+        ("bbb", {"dispatch": 0.4, "compute": 0.7}),
+    ]
+    table = tj.render_phase_table(series)
+    assert "| dispatch |" in table
+    assert "| compute |" in table
+    assert "+100.0%" in table  # dispatch doubled
+
+
+def test_pre_profiler_records_render_no_phase_table(tmp_path):
+    # telemetry from before DESIGN.md §15 has no per_phase key at all —
+    # the mean_s gate must keep working and the phase table must vanish
+    rec = {"bench": "bs", "commit": "x", "ci_run": "1", "smoke": True,
+           "cases": [{"label": "case", "mean_s": 1.0}]}
+    (tmp_path / "BENCH_old.json").write_text(json.dumps(rec))
+    runs = tj.load_runs(tj.find_files([tmp_path]))
+    assert runs[0]["cases"] == {"case": 1.0}
+    assert tj.phase_series_by_case(runs) == {}
+    assert tj.render_phase_table({}) == ""
 
 
 def test_rerun_of_same_commit_supersedes(tmp_path):

@@ -11,6 +11,11 @@ false-positive on scheduler noise).  Smoke runs (``"smoke": true``) and
 real timing runs are tracked as separate series — CI smoke workloads are
 bit-rot probes, not timings, and must never gate against real numbers.
 
+Cases whose telemetry carries a ``per_phase`` object (the always-on
+profiler of DESIGN.md §15) additionally get per-phase trend rows, so a
+regression can be read down to the phase that moved — dispatch growing
+while compute holds is a very different bug from compute growing.
+
 Runs are ordered by ``ci_run`` id when present (GitHub run ids are
 monotonic), else by file modification time, so both a directory of
 per-run downloads and a local accumulation directory work.
@@ -20,8 +25,8 @@ Usage:
   python python/tools/trajectory.py DIR --sigma 2 --min-history 3
 
 Exit codes: 0 = no regression (or not enough history), 1 = regression,
-2 = no telemetry found.  The CI job wiring this is advisory
-(continue-on-error) until enough cross-run history accumulates.
+2 = no telemetry found.  The CI bench-trajectory job wiring this is a
+BLOCKING perf gate: exit 1 fails the build.
 """
 
 from __future__ import annotations
@@ -70,6 +75,7 @@ def load_runs(files):
             print(f"[trajectory] skipping {f}: {e}", file=sys.stderr)
             continue
         cases = {}
+        phases = {}
         for c in rec.get("cases", []):
             label, mean_s = c.get("label"), c.get("mean_s")
             if not isinstance(label, str) \
@@ -79,6 +85,13 @@ def load_runs(files):
                       file=sys.stderr)
                 continue
             cases[label] = float(mean_s)
+            pp = c.get("per_phase")
+            if isinstance(pp, dict):
+                clean = {k: float(v) for k, v in pp.items()
+                         if isinstance(k, str)
+                         and isinstance(v, (int, float))}
+                if clean:
+                    phases[label] = clean
         if not cases:
             continue
         try:
@@ -92,6 +105,7 @@ def load_runs(files):
             "ci_order": ci_order,
             "mtime": int(Path(f).stat().st_mtime),
             "cases": cases,
+            "phases": phases,
         })
     if runs and all(r["ci_order"] is not None for r in runs):
         runs.sort(key=lambda r: r["ci_order"])
@@ -116,6 +130,23 @@ def series_by_case(runs):
                 hist[-1] = (run["commit"], mean_s)
             else:
                 hist.append((run["commit"], mean_s))
+    return series
+
+
+def phase_series_by_case(runs):
+    """{(bench, label, smoke): [(commit, {phase: s}), ...]} in run order,
+    for cases whose telemetry carries per-phase attribution (records from
+    before the DESIGN.md §15 profiler simply contribute no points).  Same
+    consecutive-duplicate supersede rule as series_by_case."""
+    series = {}
+    for run in runs:
+        for label, phases in run.get("phases", {}).items():
+            key = (run["bench"], label, run["smoke"])
+            hist = series.setdefault(key, [])
+            if hist and hist[-1][0] == run["commit"]:
+                hist[-1] = (run["commit"], phases)
+            else:
+                hist.append((run["commit"], phases))
     return series
 
 
@@ -166,6 +197,27 @@ def render_table(series):
     return "\n".join(lines)
 
 
+def render_phase_table(phase_series):
+    """Per-phase trend rows (one per case × phase, first → last seconds);
+    empty string when no run carried per-phase telemetry."""
+    if not phase_series:
+        return ""
+    lines = ["| bench | case | phase | runs | first | last | Δ |",
+             "|---|---|---|---|---|---|---|"]
+    for (bench, label, smoke), hist in sorted(phase_series.items()):
+        tag = " [smoke]" if smoke else ""
+        names = sorted({p for _, phases in hist for p in phases})
+        for phase in names:
+            pts = [(c, ph[phase]) for c, ph in hist if phase in ph]
+            first, last = pts[0][1], pts[-1][1]
+            delta = "–" if first == 0 \
+                else f"{(last / first - 1) * 100:+.1f}%"
+            lines.append(f"| {bench} | {label}{tag} | {phase} | "
+                         f"{len(pts)} | {fmt_s(first)} | {fmt_s(last)} | "
+                         f"{delta} |")
+    return "\n".join(lines)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("roots", nargs="+",
@@ -188,6 +240,9 @@ def main(argv=None):
     print(f"[trajectory] {len(files)} telemetry files, {len(runs)} runs, "
           f"{len(series)} case series\n")
     print(render_table(series))
+    phase_table = render_phase_table(phase_series_by_case(runs))
+    if phase_table:
+        print("\nper-phase attribution trends:\n" + phase_table)
 
     regressions = detect_regressions(series, sigma=args.sigma,
                                      rel_margin=args.rel_margin,

@@ -64,9 +64,10 @@ pub fn emit(task: TaskKind, name: &str, results: &[RunResult]) {
     let mut bench = Bench::new(name);
     for r in results {
         let samples: Vec<f64> = r.reps.iter().map(|rep| rep.total_s).collect();
-        bench.record(
+        bench.record_profiled(
             &format!("{}_{}_d{}", task, r.spec.backend, r.spec.size),
             &samples,
+            r.profile,
         );
     }
     bench.finish();

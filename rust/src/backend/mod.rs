@@ -18,6 +18,7 @@ pub mod xla;
 use anyhow::Result;
 
 use crate::tasks::{BatchMemView, CorrectionMemory};
+use crate::util::profile::Profiler;
 
 /// Task 1: one full Algorithm-1 epoch (resample + `m_inner` FW steps).
 ///
@@ -29,6 +30,14 @@ pub trait MvBackend {
     /// Returns the updated iterate and the end-of-epoch empirical objective.
     fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
         -> Result<(Vec<f32>, f64)>;
+
+    /// Drain the backend's per-phase attribution accumulated since the
+    /// last drain (DESIGN.md §15).  `None` (the default) means the
+    /// backend does not self-attribute — the driver books the whole
+    /// timed wall as `compute`.
+    fn take_profile(&mut self) -> Option<Profiler> {
+        None
+    }
 }
 
 /// Task 2: the Monte-Carlo gradient + objective estimate at `x`
@@ -38,6 +47,12 @@ pub trait NvBackend {
 
     fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
         -> Result<(Vec<f32>, f64)>;
+
+    /// Drain the backend's per-phase attribution (see
+    /// [`MvBackend::take_profile`]).
+    fn take_profile(&mut self) -> Option<Profiler> {
+        None
+    }
 }
 
 /// Task 3: the SQN compute kernels (Algorithm 3).  The driver samples the
@@ -59,6 +74,12 @@ pub trait LrBackend {
     /// H_t·g via Algorithm 4 over the correction memory.
     fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
         -> Result<Vec<f32>>;
+
+    /// Drain the backend's per-phase attribution (see
+    /// [`MvBackend::take_profile`]).
+    fn take_profile(&mut self) -> Option<Profiler> {
+        None
+    }
 }
 
 /// Which Hessian application Algorithm 4 uses (ablation A2).
@@ -128,6 +149,12 @@ pub trait MvBatchBackend {
     /// per-replication end-of-epoch empirical objectives.
     fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
                    keys: &[[u32; 2]]) -> Result<Vec<f64>>;
+
+    /// Drain the backend's per-phase attribution (see
+    /// [`MvBackend::take_profile`]).
+    fn take_profile(&mut self) -> Option<Profiler> {
+        None
+    }
 }
 
 /// Task 2, batched: the Monte-Carlo gradient + objective estimate for all R
@@ -143,6 +170,12 @@ pub trait NvBatchBackend {
     /// RNG).  Returns the per-replication objective estimates.
     fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
                       g: &mut [f32]) -> Result<Vec<f64>>;
+
+    /// Drain the backend's per-phase attribution (see
+    /// [`MvBackend::take_profile`]).
+    fn take_profile(&mut self) -> Option<Profiler> {
+        None
+    }
 }
 
 /// Task 3, batched: the SQN compute kernels for all R replications.  The
@@ -179,4 +212,10 @@ pub trait LrBatchBackend {
     /// identity, so d = g bitwise either way.
     fn direction_batch(&mut self, mem: BatchMemView<'_>, g: &[f32],
                        out: &mut [f32]) -> Result<()>;
+
+    /// Drain the backend's per-phase attribution (see
+    /// [`MvBackend::take_profile`]).
+    fn take_profile(&mut self) -> Option<Profiler> {
+        None
+    }
 }

@@ -18,6 +18,8 @@ use crate::tasks::mean_variance as mv;
 use crate::tasks::newsvendor as nv;
 use crate::tasks::{BatchMemView, CorrectionMemory};
 use crate::util::pool::parallel_map_chunks;
+use crate::util::profile::{Phase, Profiler};
+use crate::util::timer::Timer;
 
 use super::{
     HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
@@ -526,6 +528,8 @@ pub struct NativeEpochBatch<B> {
     /// Per-row iterate length (d for Task 1, d+1 for Task 4's `[w, t]`).
     d: usize,
     threads: usize,
+    /// Per-phase attribution since the last drain (DESIGN.md §15).
+    prof: Profiler,
 }
 
 impl<B: MvBackend + Send> NativeEpochBatch<B> {
@@ -536,6 +540,7 @@ impl<B: MvBackend + Send> NativeEpochBatch<B> {
             reps: rows.into_iter().map(Mutex::new).collect(),
             d: row_dim,
             threads,
+            prof: Profiler::new(),
         }
     }
 }
@@ -597,6 +602,7 @@ impl<B: MvBackend + Send> MvBatchBackend for NativeEpochBatch<B> {
         anyhow::ensure!(keys.len() == r, "need one key per replication");
         let reps = &self.reps;
         let w_in: &[f32] = w;
+        let t_par = Timer::start();
         let parts = parallel_map_chunks(r, self.threads, |range| {
             let start = range.start;
             let mut rows = Vec::with_capacity(range.len());
@@ -609,7 +615,15 @@ impl<B: MvBackend + Send> MvBatchBackend for NativeEpochBatch<B> {
             }
             (start, Ok(rows))
         });
-        merge_rows(parts, d, w)
+        self.prof.add(Phase::Compute, t_par.elapsed_s());
+        let t_red = Timer::start();
+        let out = merge_rows(parts, d, w);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
+        out
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -618,6 +632,8 @@ pub struct NativeNvBatch {
     reps: Vec<Mutex<NativeNv>>,
     d: usize,
     threads: usize,
+    /// Per-phase attribution since the last drain (DESIGN.md §15).
+    prof: Profiler,
 }
 
 impl NativeNvBatch {
@@ -630,7 +646,7 @@ impl NativeNvBatch {
                                          NativeMode::Sequential))
             })
             .collect();
-        NativeNvBatch { reps, d, threads }
+        NativeNvBatch { reps, d, threads, prof: Profiler::new() }
     }
 }
 
@@ -651,6 +667,7 @@ impl NvBatchBackend for NativeNvBatch {
         anyhow::ensure!(g.len() == r * d, "gradient panel shape mismatch");
         anyhow::ensure!(keys.len() == r, "need one key per replication");
         let reps = &self.reps;
+        let t_par = Timer::start();
         let parts = parallel_map_chunks(r, self.threads, |range| {
             let start = range.start;
             let mut rows = Vec::with_capacity(range.len());
@@ -663,7 +680,15 @@ impl NvBatchBackend for NativeNvBatch {
             }
             (start, Ok(rows))
         });
-        merge_rows(parts, d, g)
+        self.prof.add(Phase::Compute, t_par.elapsed_s());
+        let t_red = Timer::start();
+        let out = merge_rows(parts, d, g);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
+        out
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -695,6 +720,8 @@ pub struct NativeLrBatch {
     mem_generation: u64,
     n: usize,
     threads: usize,
+    /// Per-phase attribution since the last drain (DESIGN.md §15).
+    prof: Profiler,
 }
 
 impl NativeLrBatch {
@@ -713,6 +740,7 @@ impl NativeLrBatch {
             mem_generation: 0,
             n: data.n_features,
             threads,
+            prof: Profiler::new(),
         }
     }
 }
@@ -734,6 +762,7 @@ impl LrBatchBackend for NativeLrBatch {
         anyhow::ensure!(g.len() == r * n, "gradient panel shape mismatch");
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
         let reps = &self.reps;
+        let t_par = Timer::start();
         let parts = parallel_map_chunks(r, self.threads, |range| {
             let start = range.start;
             let mut rows = Vec::with_capacity(range.len());
@@ -746,7 +775,11 @@ impl LrBatchBackend for NativeLrBatch {
             }
             (start, Ok(rows))
         });
-        merge_rows(parts, n, g)
+        self.prof.add(Phase::Compute, t_par.elapsed_s());
+        let t_red = Timer::start();
+        let out = merge_rows(parts, n, g);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
+        out
     }
 
     fn hvp_batch(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
@@ -759,6 +792,7 @@ impl LrBatchBackend for NativeLrBatch {
         anyhow::ensure!(y.len() == r * n, "output panel shape mismatch");
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
         let reps = &self.reps;
+        let t_par = Timer::start();
         let parts = parallel_map_chunks(r, self.threads, |range| {
             let start = range.start;
             let mut rows = Vec::with_capacity(range.len());
@@ -772,7 +806,10 @@ impl LrBatchBackend for NativeLrBatch {
             }
             (start, Ok(rows))
         });
+        self.prof.add(Phase::Compute, t_par.elapsed_s());
+        let t_red = Timer::start();
         merge_rows(parts, n, y)?;
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(())
     }
 
@@ -787,6 +824,7 @@ impl LrBatchBackend for NativeLrBatch {
         let hessian_mode = self.hessian_mode;
         let generation = self.mem_generation;
         let caches = &self.h_caches;
+        let t_dir = Timer::start();
         let parts = parallel_map_chunks(r, self.threads, |range| {
             let mut rows: Vec<(usize, Vec<f32>)> =
                 Vec::with_capacity(range.len());
@@ -831,7 +869,12 @@ impl LrBatchBackend for NativeLrBatch {
                 out[i * n..(i + 1) * n].copy_from_slice(&row);
             }
         }
+        self.prof.add(Phase::Direction, t_dir.elapsed_s());
         Ok(())
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 

@@ -35,6 +35,8 @@ use anyhow::Result;
 
 use crate::tasks::BatchMemView;
 use crate::util::pool::parallel_map_chunks;
+use crate::util::profile::{Phase, Profiler};
+use crate::util::timer::Timer;
 
 use super::{LrBatchBackend, MvBatchBackend, NvBatchBackend};
 
@@ -225,6 +227,12 @@ pub struct Shard<B> {
 /// `B: Send`, [`Serial`] works for single-thread-affine backends (the
 /// PJRT handles inside the XLA arms are deliberately not `Send`).
 pub trait ShardPolicy<B> {
+    /// Whether shards advance concurrently.  Concurrent shard walls
+    /// overlap, so a plane must NOT sum drained per-shard attributions
+    /// into its own wall-clock — it books the plane-level wall instead
+    /// (DESIGN.md §15).
+    const CONCURRENT: bool;
+
     /// Apply `f` to every (shard, per-shard context) pair.  Contexts are
     /// produced by pre-splitting panels along the shard map, so shards
     /// never alias; the first error wins.
@@ -243,6 +251,8 @@ pub trait ShardPolicy<B> {
 pub struct Pooled;
 
 impl<B: Send> ShardPolicy<B> for Pooled {
+    const CONCURRENT: bool = true;
+
     fn for_each<C, F>(shards: &mut [Shard<B>], threads: usize, ctxs: Vec<C>,
                       f: F) -> Result<()>
     where
@@ -283,6 +293,8 @@ impl<B: Send> ShardPolicy<B> for Pooled {
 pub struct Serial;
 
 impl<B> ShardPolicy<B> for Serial {
+    const CONCURRENT: bool = false;
+
     fn for_each<C, F>(shards: &mut [Shard<B>], _threads: usize,
                       ctxs: Vec<C>, f: F) -> Result<()>
     where
@@ -313,7 +325,25 @@ pub struct ShardedBatch<B, P> {
     /// joint `[w, t]` rows, n features for SQN).
     width: usize,
     threads: usize,
+    /// Per-phase attribution since the last drain (DESIGN.md §15).
+    prof: Profiler,
     _policy: PhantomData<P>,
+}
+
+/// Fold one plane-level dispatch into `prof`.  `inner` is the merged
+/// drained attribution of every shard: a serial policy's shard walls tile
+/// the plane's wall, so the split is kept and the residual books as
+/// dispatch; a concurrent policy's shard walls overlap (their sum exceeds
+/// the wall), so the split is discarded and the plane books its own wall
+/// under the call's dominant phase.
+fn book_shard_call(prof: &mut Profiler, concurrent: bool, call_s: f64,
+                   dominant: Phase, inner: Profiler) {
+    if concurrent || inner.is_empty() {
+        prof.add(dominant, call_s);
+    } else {
+        prof.merge(&inner);
+        prof.add(Phase::Dispatch, call_s - inner.sum());
+    }
 }
 
 impl<B, P> ShardedBatch<B, P> {
@@ -330,7 +360,28 @@ impl<B, P> ShardedBatch<B, P> {
                 rows: range.clone(),
             });
         }
-        Ok(ShardedBatch { shards, map, width, threads, _policy: PhantomData })
+        Ok(ShardedBatch {
+            shards,
+            map,
+            width,
+            threads,
+            prof: Profiler::new(),
+            _policy: PhantomData,
+        })
+    }
+
+    /// Drain every shard's attribution into one merged profiler.
+    fn drain_shards<D>(&mut self, mut drain: D) -> Profiler
+    where
+        D: FnMut(&mut B) -> Option<Profiler>,
+    {
+        let mut inner = Profiler::new();
+        for shard in &mut self.shards {
+            if let Some(p) = drain(&mut shard.backend) {
+                inner.merge(&p);
+            }
+        }
+        inner
     }
 
     pub fn shards(&self) -> usize {
@@ -394,6 +445,7 @@ impl<B: MvBatchBackend, P: ShardPolicy<B>> MvBatchBackend
         let r = self.map.reps();
         self.ensure_panel(w.len(), "iterate")?;
         anyhow::ensure!(keys.len() == r, "need one key per replication");
+        let t_split = Timer::start();
         let mut objs = vec![0.0f64; r];
         let ctxs: Vec<_> = {
             let w_parts =
@@ -408,6 +460,8 @@ impl<B: MvBatchBackend, P: ShardPolicy<B>> MvBatchBackend
                 .map(|((w_s, k_s), o_s)| (w_s, k_s, o_s))
                 .collect()
         };
+        self.prof.add(Phase::Dispatch, t_split.elapsed_s());
+        let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (w_s, k_s, o_s)| {
             let vals = shard.backend.epoch_batch(
@@ -419,7 +473,15 @@ impl<B: MvBatchBackend, P: ShardPolicy<B>> MvBatchBackend
             o_s.copy_from_slice(&vals);
             Ok(())
         })?;
+        let call_s = t_call.elapsed_s();
+        let inner = self.drain_shards(|b| b.take_profile());
+        book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
+                        Phase::Compute, inner);
         Ok(objs)
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -443,6 +505,7 @@ impl<B: NvBatchBackend, P: ShardPolicy<B>> NvBatchBackend
         self.ensure_panel(x.len(), "iterate")?;
         self.ensure_panel(g.len(), "gradient")?;
         anyhow::ensure!(keys.len() == r, "need one key per replication");
+        let t_split = Timer::start();
         let mut objs = vec![0.0f64; r];
         let ctxs: Vec<_> = {
             let x_parts = Panel::new(x, r, self.width).split_shards(&self.map);
@@ -459,6 +522,8 @@ impl<B: NvBatchBackend, P: ShardPolicy<B>> NvBatchBackend
                 .map(|(((x_s, k_s), g_s), o_s)| (x_s, k_s, g_s, o_s))
                 .collect()
         };
+        self.prof.add(Phase::Dispatch, t_split.elapsed_s());
+        let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (x_s, k_s, g_s, o_s)| {
             let vals = shard.backend.grad_obj_batch(
@@ -470,7 +535,15 @@ impl<B: NvBatchBackend, P: ShardPolicy<B>> NvBatchBackend
             o_s.copy_from_slice(&vals);
             Ok(())
         })?;
+        let call_s = t_call.elapsed_s();
+        let inner = self.drain_shards(|b| b.take_profile());
+        book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
+                        Phase::Compute, inner);
         Ok(objs)
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -494,6 +567,7 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
         self.ensure_panel(w.len(), "iterate")?;
         self.ensure_panel(g.len(), "gradient")?;
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        let t_split = Timer::start();
         let mut losses = vec![0.0f64; r];
         let ctxs: Vec<_> = {
             let w_parts = Panel::new(w, r, self.width).split_shards(&self.map);
@@ -510,6 +584,8 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
                 .map(|(((w_s, i_s), g_s), l_s)| (w_s, i_s, g_s, l_s))
                 .collect()
         };
+        self.prof.add(Phase::Dispatch, t_split.elapsed_s());
+        let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (w_s, i_s, g_s, l_s)| {
             let vals = shard.backend.grad_batch(
@@ -521,6 +597,10 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
             l_s.copy_from_slice(&vals);
             Ok(())
         })?;
+        let call_s = t_call.elapsed_s();
+        let inner = self.drain_shards(|b| b.take_profile());
+        book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
+                        Phase::Compute, inner);
         Ok(losses)
     }
 
@@ -532,6 +612,7 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
         self.ensure_panel(s.len(), "s")?;
         self.ensure_panel(y.len(), "output")?;
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        let t_split = Timer::start();
         let ctxs: Vec<_> = {
             let wb_parts =
                 Panel::new(wbar, r, self.width).split_shards(&self.map);
@@ -547,11 +628,18 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
                 .map(|(((wb_s, s_s), i_s), y_s)| (wb_s, s_s, i_s, y_s))
                 .collect()
         };
+        self.prof.add(Phase::Dispatch, t_split.elapsed_s());
+        let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (wb_s, s_s, i_s, y_s)| {
             shard.backend.hvp_batch(wb_s.as_slice(), s_s.as_slice(), data,
                                     i_s.as_slice(), y_s.into_inner())
-        })
+        })?;
+        let call_s = t_call.elapsed_s();
+        let inner = self.drain_shards(|b| b.take_profile());
+        book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
+                        Phase::Compute, inner);
+        Ok(())
     }
 
     fn direction_batch(&mut self, mem: BatchMemView<'_>, g: &[f32],
@@ -562,6 +650,7 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
                         mem.reps(), mem.dim(), r, self.width);
         self.ensure_panel(g.len(), "gradient")?;
         self.ensure_panel(out.len(), "output")?;
+        let t_split = Timer::start();
         let ctxs: Vec<_> = {
             let g_parts = Panel::new(g, r, self.width).split_shards(&self.map);
             let out_parts =
@@ -576,11 +665,22 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
                 })
                 .collect()
         };
+        self.prof.add(Phase::Dispatch, t_split.elapsed_s());
+        let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (m_s, g_s, o_s)| {
             shard.backend.direction_batch(m_s, g_s.as_slice(),
                                           o_s.into_inner())
-        })
+        })?;
+        let call_s = t_call.elapsed_s();
+        let inner = self.drain_shards(|b| b.take_profile());
+        book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
+                        Phase::Direction, inner);
+        Ok(())
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 

@@ -15,6 +15,8 @@ use crate::runtime::exec::DeviceBuf;
 use crate::runtime::{exec, Arg, BufArg, Engine, Exec};
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use crate::tasks::{BatchMemView, CorrectionMemory};
+use crate::util::profile::{Phase, Profiler};
+use crate::util::timer::Timer;
 
 use super::{
     HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
@@ -606,6 +608,10 @@ pub struct XlaMvBatch {
     r: usize,
     d: usize,
     keys_flat: Vec<u32>,
+    /// Per-phase attribution since the last drain (DESIGN.md §15):
+    /// key/index staging → dispatch, the artifact call → compute, output
+    /// decode + copy-out → reduce.
+    prof: Profiler,
 }
 
 impl XlaMvBatch {
@@ -629,6 +635,7 @@ impl XlaMvBatch {
             r: r_reps,
             d,
             keys_flat: Vec::with_capacity(2 * r_reps),
+            prof: Profiler::new(),
         })
     }
 }
@@ -647,7 +654,10 @@ impl MvBatchBackend for XlaMvBatch {
         anyhow::ensure!(w.len() == self.r * self.d,
                         "iterate panel {} != {}×{}", w.len(), self.r, self.d);
         anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        let t_stage = Timer::start();
         flatten_keys(keys, &mut self.keys_flat);
+        self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
+        let t_exec = Timer::start();
         let outs = self.exec.call(&[
             Arg::F32(w),
             Arg::F32(&self.mu),
@@ -655,6 +665,8 @@ impl MvBatchBackend for XlaMvBatch {
             Arg::U32(&self.keys_flat),
             Arg::ScalarI32(k_epoch as i32),
         ])?;
+        self.prof.add(Phase::Compute, t_exec.elapsed_s());
+        let t_red = Timer::start();
         let w_out = exec::f32_vec(&outs[0])?;
         anyhow::ensure!(w_out.len() == w.len(),
                         "mv_epoch_batch returned wrong panel shape");
@@ -663,7 +675,12 @@ impl MvBatchBackend for XlaMvBatch {
         anyhow::ensure!(objs.len() == self.r,
                         "mv_epoch_batch returned {} objectives for {} \
                          replications", objs.len(), self.r);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(objs.into_iter().map(|o| o as f64).collect())
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -678,6 +695,8 @@ pub struct XlaCvarBatch {
     /// Per-row iterate length d+1.
     row: usize,
     keys_flat: Vec<u32>,
+    /// Per-phase attribution (see [`XlaMvBatch`]).
+    prof: Profiler,
 }
 
 impl XlaCvarBatch {
@@ -701,6 +720,7 @@ impl XlaCvarBatch {
             r: r_reps,
             row: d + 1,
             keys_flat: Vec::with_capacity(2 * r_reps),
+            prof: Profiler::new(),
         })
     }
 }
@@ -720,7 +740,10 @@ impl MvBatchBackend for XlaCvarBatch {
                         "iterate panel {} != {}×{}", w.len(), self.r,
                         self.row);
         anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        let t_stage = Timer::start();
         flatten_keys(keys, &mut self.keys_flat);
+        self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
+        let t_exec = Timer::start();
         let outs = self.exec.call(&[
             Arg::F32(w),
             Arg::F32(&self.mu),
@@ -728,6 +751,8 @@ impl MvBatchBackend for XlaCvarBatch {
             Arg::U32(&self.keys_flat),
             Arg::ScalarI32(k_epoch as i32),
         ])?;
+        self.prof.add(Phase::Compute, t_exec.elapsed_s());
+        let t_red = Timer::start();
         let w_out = exec::f32_vec(&outs[0])?;
         anyhow::ensure!(w_out.len() == w.len(),
                         "cv_epoch_batch returned wrong panel shape");
@@ -736,7 +761,12 @@ impl MvBatchBackend for XlaCvarBatch {
         anyhow::ensure!(objs.len() == self.r,
                         "cv_epoch_batch returned {} objectives for {} \
                          replications", objs.len(), self.r);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(objs.into_iter().map(|o| o as f64).collect())
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -760,6 +790,10 @@ pub struct XlaNvBatch {
     r: usize,
     d: usize,
     keys_flat: Vec<u32>,
+    /// Per-phase attribution (see [`XlaMvBatch`]); the once-per-epoch
+    /// panel (re)sampling + upload books as dispatch — it stages the
+    /// resident buffer the M inner iterations consume.
+    prof: Profiler,
 }
 
 impl XlaNvBatch {
@@ -793,6 +827,7 @@ impl XlaNvBatch {
             r: r_reps,
             d: inst.dim(),
             keys_flat: Vec::with_capacity(2 * r_reps),
+            prof: Profiler::new(),
         })
     }
 
@@ -830,8 +865,11 @@ impl NvBatchBackend for XlaNvBatch {
                         "iterate panel {} != {}×{}", x.len(), self.r, self.d);
         anyhow::ensure!(g.len() == x.len(), "gradient panel shape mismatch");
         anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        let t_stage = Timer::start();
         self.ensure_panel(keys)?;
+        self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
         let (_, panel) = self.panel.as_ref().unwrap();
+        let t_exec = Timer::start();
         let outs = self.grad_exec.call_b(&[
             BufArg::Host(Arg::F32(x)),
             BufArg::Dev(panel),
@@ -839,6 +877,8 @@ impl NvBatchBackend for XlaNvBatch {
             BufArg::Dev(&self.h_buf),
             BufArg::Dev(&self.v_buf),
         ])?;
+        self.prof.add(Phase::Compute, t_exec.elapsed_s());
+        let t_red = Timer::start();
         let g_out = exec::f32_vec(&outs[0])?;
         anyhow::ensure!(g_out.len() == g.len(),
                         "nv_grad_panel_batch returned wrong panel shape");
@@ -847,7 +887,12 @@ impl NvBatchBackend for XlaNvBatch {
         anyhow::ensure!(objs.len() == self.r,
                         "nv_grad_panel_batch returned {} objectives for {} \
                          replications", objs.len(), self.r);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(objs.into_iter().map(|o| o as f64).collect())
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 
@@ -875,6 +920,9 @@ pub struct XlaLrBatch {
     z_buf: DeviceBuf,
     idx_i32: Vec<i32>,
     counts_i32: Vec<i32>,
+    /// Per-phase attribution (see [`XlaMvBatch`]); the fused Algorithm-4
+    /// dispatch books as direction.
+    prof: Profiler,
 }
 
 impl XlaLrBatch {
@@ -924,6 +972,7 @@ impl XlaLrBatch {
             z_buf,
             idx_i32: Vec::new(),
             counts_i32: Vec::with_capacity(r_reps),
+            prof: Profiler::new(),
         })
     }
 
@@ -951,13 +1000,18 @@ impl LrBatchBackend for XlaLrBatch {
         anyhow::ensure!(g.len() == w.len(), "gradient panel shape mismatch");
         anyhow::ensure!(idx.len() == self.r,
                         "need one index set per replication");
+        let t_stage = Timer::start();
         self.flatten_idx(idx);
+        self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
+        let t_exec = Timer::start();
         let outs = self.grad_exec.call_b(&[
             BufArg::Host(Arg::F32(w)),
             BufArg::Dev(&self.x_buf),
             BufArg::Dev(&self.z_buf),
             BufArg::Host(Arg::I32(&self.idx_i32)),
         ])?;
+        self.prof.add(Phase::Compute, t_exec.elapsed_s());
+        let t_red = Timer::start();
         let g_out = exec::f32_vec(&outs[0])?;
         anyhow::ensure!(g_out.len() == g.len(),
                         "lr_grad_batch returned wrong panel shape");
@@ -966,6 +1020,7 @@ impl LrBatchBackend for XlaLrBatch {
         anyhow::ensure!(losses.len() == self.r,
                         "lr_grad_batch returned {} losses for {} \
                          replications", losses.len(), self.r);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(losses.into_iter().map(|l| l as f64).collect())
     }
 
@@ -978,17 +1033,23 @@ impl LrBatchBackend for XlaLrBatch {
                         "output panel shape mismatch");
         anyhow::ensure!(idx.len() == self.r,
                         "need one index set per replication");
+        let t_stage = Timer::start();
         self.flatten_idx(idx);
+        self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
+        let t_exec = Timer::start();
         let outs = self.hvp_exec.call_b(&[
             BufArg::Host(Arg::F32(wbar)),
             BufArg::Host(Arg::F32(s)),
             BufArg::Dev(&self.x_buf),
             BufArg::Host(Arg::I32(&self.idx_i32)),
         ])?;
+        self.prof.add(Phase::Compute, t_exec.elapsed_s());
+        let t_red = Timer::start();
         let y_out = exec::f32_vec(&outs[0])?;
         anyhow::ensure!(y_out.len() == y.len(),
                         "lr_hvp_batch returned wrong panel shape");
         y.copy_from_slice(&y_out);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(())
     }
 
@@ -1007,20 +1068,30 @@ impl LrBatchBackend for XlaLrBatch {
         // (the artifact masks invalid slots by zeroing ρ, so rows with
         // empty or partial memories are handled in-graph — an empty row
         // reduces to the identity, d = g).
+        let t_stage = Timer::start();
         self.counts_i32.clear();
         self.counts_i32
             .extend(mem.counts().iter().map(|&c| c as i32));
+        self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
+        let t_exec = Timer::start();
         let outs = self.dir_exec.call(&[
             Arg::F32(mem.s_panel()),
             Arg::F32(mem.y_panel()),
             Arg::I32(&self.counts_i32),
             Arg::F32(g),
         ])?;
+        self.prof.add(Phase::Direction, t_exec.elapsed_s());
+        let t_red = Timer::start();
         let d = exec::f32_vec(&outs[0])?;
         anyhow::ensure!(d.len() == out.len(),
                         "direction artifact returned wrong panel shape");
         out.copy_from_slice(&d);
+        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(())
+    }
+
+    fn take_profile(&mut self) -> Option<Profiler> {
+        Some(self.prof.take())
     }
 }
 

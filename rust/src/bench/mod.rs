@@ -11,6 +11,7 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
+use crate::util::profile::{Phase, Profiler};
 use crate::util::stats::OnlineStats;
 use crate::util::timer::{fmt_duration, Timer};
 
@@ -34,6 +35,9 @@ pub struct Measurement {
     pub std_s: f64,
     pub min_s: f64,
     pub median_s: f64,
+    /// Per-phase attribution of the measured work (DESIGN.md §15); empty
+    /// for cases whose workload doesn't report a profile.
+    pub profile: Profiler,
 }
 
 impl Measurement {
@@ -89,6 +93,7 @@ impl Bench {
             std_s: stats.std(),
             min_s: stats.min(),
             median_s: median,
+            profile: Profiler::new(),
         });
         self.rows.last().unwrap()
     }
@@ -96,6 +101,14 @@ impl Bench {
     /// Record an externally-timed sample set (e.g. per-epoch times collected
     /// inside a driver).
     pub fn record(&mut self, label: &str, samples_s: &[f64]) -> &Measurement {
+        self.record_profiled(label, samples_s, Profiler::new())
+    }
+
+    /// [`Bench::record`] plus the workload's per-phase attribution
+    /// (DESIGN.md §15), so `BENCH_*.json` telemetry carries where the
+    /// measured seconds went — not just how many there were.
+    pub fn record_profiled(&mut self, label: &str, samples_s: &[f64],
+                           profile: Profiler) -> &Measurement {
         let mut stats = OnlineStats::new();
         for &s in samples_s {
             stats.push(s);
@@ -110,6 +123,7 @@ impl Bench {
             std_s: stats.std(),
             min_s: stats.min(),
             median_s: median,
+            profile,
         });
         self.rows.last().unwrap()
     }
@@ -144,12 +158,20 @@ impl Bench {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("label,reps,mean_s,std_s,min_s,median_s\n");
+        let mut out = String::from("label,reps,mean_s,std_s,min_s,median_s");
+        for p in Phase::ALL {
+            out.push_str(&format!(",phase_{}_s", p));
+        }
+        out.push('\n');
         for m in &self.rows {
             out.push_str(&format!(
-                "{},{},{:.9},{:.9},{:.9},{:.9}\n",
+                "{},{},{:.9},{:.9},{:.9},{:.9}",
                 m.label, m.reps, m.mean_s, m.std_s, m.min_s, m.median_s
             ));
+            for p in Phase::ALL {
+                out.push_str(&format!(",{:.9}", m.profile.get(p)));
+            }
+            out.push('\n');
         }
         out
     }
@@ -172,6 +194,7 @@ impl Bench {
                     ("std_s", num(m.std_s)),
                     ("min_s", num(m.min_s)),
                     ("median_s", num(m.median_s)),
+                    ("per_phase", m.profile.to_json()),
                 ])
             })
             .collect();
@@ -262,6 +285,28 @@ mod tests {
         assert_eq!(cases[0].get("label").and_then(|x| x.as_str()),
                    Some("case_a"));
         assert_eq!(cases[0].get("mean_s").and_then(|x| x.as_f64()), Some(2.0));
+        // every case carries a per_phase object, empty when unprofiled
+        assert!(cases[0].get("per_phase").unwrap().as_obj().unwrap()
+                        .is_empty());
+    }
+
+    #[test]
+    fn profiled_record_reaches_telemetry() {
+        let mut b = Bench::new("pshape");
+        let mut prof = Profiler::new();
+        prof.add(Phase::Compute, 0.75);
+        prof.add(Phase::Dispatch, 0.25);
+        b.record_profiled("case_p", &[1.0], prof);
+        let v = crate::util::json::Value::parse(&b.to_json()).unwrap();
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        let pp = cases[0].get("per_phase").unwrap();
+        assert_eq!(pp.get("compute").and_then(|x| x.as_f64()), Some(0.75));
+        assert_eq!(pp.get("dispatch").and_then(|x| x.as_f64()), Some(0.25));
+        let csv = b.to_csv();
+        assert!(csv.lines().next().unwrap().contains(",phase_compute_s"));
+        assert!(csv.lines().nth(1).unwrap().ends_with(
+            ",0.250000000,0.750000000,0.000000000,0.000000000,\
+             0.000000000,0.000000000"), "{}", csv);
     }
 
     #[test]

@@ -6,6 +6,7 @@ use anyhow::{Context, Result};
 
 use crate::opt::{FwTrace, SqnTrace};
 use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::profile::Profiler;
 use crate::util::stats::{self, OnlineStats};
 
 use super::experiment::ExperimentSpec;
@@ -47,9 +48,11 @@ impl RepRecord {
         stats::rse_trace(&self.objs)
     }
 
-    /// Wire encoding (DESIGN.md §14).  Finite f64s survive the JSON layer
-    /// exactly: the writer emits the shortest string that parses back to
-    /// the same value, so objective traces round-trip bitwise.
+    /// The v1 per-record wire encoding (flat timing keys inline) — what
+    /// [`RunResult::to_json_legacy`] still renders verbatim for deployed
+    /// v1 clients.  Finite f64s survive the JSON layer exactly: the
+    /// writer emits the shortest string that parses back to the same
+    /// value, so objective traces round-trip bitwise.
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("total_s", num(self.total_s)),
@@ -57,6 +60,17 @@ impl RepRecord {
             ("obj_iters",
              arr(self.obj_iters.iter().map(|&i| num(i as f64)).collect())),
             ("step_s", arr(self.step_s.iter().map(|&t| num(t)).collect())),
+        ])
+    }
+
+    /// The timing-free record core (`objs` + `obj_iters`) — what the v2
+    /// payload and the canonical payload embed per record; the v2 form
+    /// moves the measurements into the result-level `"timing"` object.
+    fn core_json(&self) -> Value {
+        obj(vec![
+            ("objs", arr(self.objs.iter().map(|&o| num(o)).collect())),
+            ("obj_iters",
+             arr(self.obj_iters.iter().map(|&i| num(i as f64)).collect())),
         ])
     }
 
@@ -74,14 +88,23 @@ impl RepRecord {
                 .collect()
         };
         Ok(RepRecord {
-            total_s: v.get("total_s").and_then(Value::as_f64)
-                .context("record 'total_s' must be a number")?,
+            // v2 records carry no inline timings (they ride the result's
+            // "timing" object, re-attached by RunResult::from_json); the
+            // legacy flat keys still parse when present.
+            total_s: match v.get("total_s") {
+                None | Some(Value::Null) => 0.0,
+                Some(t) => t.as_f64()
+                    .context("record 'total_s' must be a number")?,
+            },
             objs: f64s("objs")?,
             obj_iters: f64s("obj_iters")?
                 .into_iter()
                 .map(|i| i as usize)
                 .collect(),
-            step_s: f64s("step_s")?,
+            step_s: match v.get("step_s") {
+                None | Some(Value::Null) => Vec::new(),
+                Some(_) => f64s("step_s")?,
+            },
         })
     }
 }
@@ -109,12 +132,25 @@ pub struct RunResult {
     /// 1-based epoch after which a budget stopped the run early, if one
     /// did.
     pub early_stop: Option<usize>,
+    /// Per-phase wall-clock attribution of the whole run (DESIGN.md §15):
+    /// merged over replications on the sequential plan, panel-level on the
+    /// batched plane.  Always populated by the coordinator; empty on
+    /// hand-built results and payloads from pre-profiler producers.
+    pub profile: Profiler,
 }
 
 impl RunResult {
     pub fn new(spec: ExperimentSpec, reps: Vec<RepRecord>) -> Self {
         RunResult { spec, reps, batched: false, shards: 1,
-                    frozen: Vec::new(), early_stop: None }
+                    frozen: Vec::new(), early_stop: None,
+                    profile: Profiler::new() }
+    }
+
+    /// Attach the run's per-phase profile (set by the coordinator from
+    /// the execution plane's drained accumulators).
+    pub fn with_profile(mut self, profile: Profiler) -> Self {
+        self.profile = profile;
+        self
     }
 
     /// Record the execution plan that actually ran (set by the coordinator
@@ -224,21 +260,49 @@ impl RunResult {
         obj(kv)
     }
 
-    /// Full wire encoding (DESIGN.md §14): spec + resolved plan + every
-    /// replication record, timings included.  This is what a `result`
-    /// frame carries.  The embedded spec is its *canonical* form
-    /// (`results_dir` omitted): a result describes a computation, and
-    /// where one submitter asked for delivery must not leak into the
-    /// payload another submitter receives from the cache.  The plan is
-    /// the structured `"plan"` object; [`RunResult::from_json`] still
-    /// accepts the pre-v2 flat `batched`/`shards` keys so old `--out`
-    /// files and cached entries round-trip.
+    /// The structured `"timing"` object (DESIGN.md §15) the v2 payload
+    /// embeds — the same fold the PR 6 `"plan"` object performed on the
+    /// flat exec keys, applied to the measurements: aggregate wall-clock,
+    /// the per-phase attribution, how batched wall-clock was attributed
+    /// to replications, and the per-replication timing vectors the flat
+    /// v1 records used to carry inline.
+    fn timing_json(&self) -> Value {
+        obj(vec![
+            ("total_s",
+             num(self.reps.iter().map(|r| r.total_s).sum::<f64>())),
+            ("per_phase", self.profile.to_json()),
+            ("attribution",
+             s(if self.batched { "batch_s/R" } else { "wall" })),
+            ("per_rep",
+             arr(self.reps
+                 .iter()
+                 .map(|r| obj(vec![
+                     ("total_s", num(r.total_s)),
+                     ("step_s",
+                      arr(r.step_s.iter().map(|&t| num(t)).collect())),
+                 ]))
+                 .collect())),
+        ])
+    }
+
+    /// Full wire encoding (DESIGN.md §14): spec + resolved plan + the
+    /// structured `"timing"` object + every replication record.  This is
+    /// what a `result` frame carries.  The embedded spec is its
+    /// *canonical* form (`results_dir` omitted): a result describes a
+    /// computation, and where one submitter asked for delivery must not
+    /// leak into the payload another submitter receives from the cache.
+    /// Records are timing-free in this form — the measurements ride
+    /// `"timing"` (aligned `per_rep` entries plus the per-phase profile);
+    /// [`RunResult::from_json`] still accepts the pre-v2 flat record
+    /// timings and `batched`/`shards` keys so old `--out` files and
+    /// cached entries round-trip.
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("spec", self.spec.canonical_json()),
             ("plan", self.plan_json()),
+            ("timing", self.timing_json()),
             ("records",
-             arr(self.reps.iter().map(RepRecord::to_json).collect())),
+             arr(self.reps.iter().map(RepRecord::core_json).collect())),
         ])
     }
 
@@ -263,8 +327,8 @@ impl RunResult {
     }
 
     /// The *deterministic* payload — [`RunResult::to_json`] with the
-    /// timing measurements (`total_s`, `step_s`) dropped from every
-    /// record.  Two runs of the same spec produce byte-identical canonical
+    /// whole `"timing"` object dropped (records are already timing-free
+    /// in v2).  Two runs of the same spec produce byte-identical canonical
     /// payloads however they executed (direct or served, any exec plan on
     /// the native arm), which is exactly what the service conformance
     /// suite and the CI serve-vs-run diff compare; wall-clock is a
@@ -274,31 +338,43 @@ impl RunResult {
             ("spec", self.spec.canonical_json()),
             ("plan", self.plan_json()),
             ("records",
-             arr(self.reps
-                 .iter()
-                 .map(|r| obj(vec![
-                     ("objs",
-                      arr(r.objs.iter().map(|&o| num(o)).collect())),
-                     ("obj_iters",
-                      arr(r.obj_iters
-                          .iter()
-                          .map(|&i| num(i as f64))
-                          .collect())),
-                 ]))
-                 .collect())),
+             arr(self.reps.iter().map(RepRecord::core_json).collect())),
         ])
     }
 
     pub fn from_json(v: &Value) -> Result<RunResult> {
         let spec = ExperimentSpec::from_json(
             v.get("spec").context("result is missing 'spec'")?)?;
-        let reps = v
+        let mut reps = v
             .get("records")
             .and_then(Value::as_arr)
             .context("result 'records' must be an array")?
             .iter()
             .map(RepRecord::from_json)
             .collect::<Result<Vec<_>>>()?;
+        // v2 timing fold: re-attach the per-rep measurements the flat v1
+        // records carried inline, and read the per-phase profile
+        let mut profile = Profiler::new();
+        if let Some(t) = v.get("timing") {
+            if let Some(pp) = t.get("per_phase") {
+                profile = Profiler::from_json(pp)
+                    .context("parsing timing 'per_phase'")?;
+            }
+            if let Some(per_rep) = t.get("per_rep").and_then(Value::as_arr) {
+                anyhow::ensure!(per_rep.len() == reps.len(),
+                                "timing 'per_rep' must align with records");
+                for (rec, tv) in reps.iter_mut().zip(per_rep) {
+                    rec.total_s = tv.get("total_s").and_then(Value::as_f64)
+                        .context("per_rep 'total_s' must be a number")?;
+                    rec.step_s = tv.get("step_s").and_then(Value::as_arr)
+                        .context("per_rep 'step_s' must be an array")?
+                        .iter()
+                        .map(|x| x.as_f64()
+                            .context("per_rep 'step_s' holds a non-number"))
+                        .collect::<Result<Vec<_>>>()?;
+                }
+            }
+        }
         // budget-outcome keys, read off the `"plan"` object (v2) or the
         // payload's top level (legacy form) — same grammar either way
         fn budget_keys(holder: &Value)
@@ -353,7 +429,8 @@ impl RunResult {
                  frozen,
                  early_stop)
             };
-        Ok(RunResult { spec, reps, batched, shards, frozen, early_stop })
+        Ok(RunResult { spec, reps, batched, shards, frozen, early_stop,
+                       profile })
     }
 
     pub fn summary(&self) -> String {
@@ -404,7 +481,8 @@ mod tests {
 
     #[test]
     fn from_fw_preserves_trace() {
-        let t = FwTrace { objs: vec![3.0, 2.0, 1.0], epoch_s: vec![0.1; 3] };
+        let t = FwTrace { objs: vec![3.0, 2.0, 1.0], epoch_s: vec![0.1; 3],
+                          ..FwTrace::default() };
         let r = RepRecord::from_fw(t);
         assert_eq!(r.objs, vec![3.0, 2.0, 1.0]);
         assert!((r.total_s - 0.3).abs() < 1e-12);
@@ -559,11 +637,10 @@ mod tests {
         assert!(text.contains("\"batched\":true"), "{}", text);
         assert!(text.contains("\"shards\":3"), "{}", text);
         assert!(!text.contains("\"plan\""), "{}", text);
-        // the legacy form is the pre-v2 grammar byte for byte
-        let v2 = rr.to_json().to_string_compact();
-        assert_eq!(text,
-                   v2.replace("\"plan\":{\"exec\":\"batched\",\"shards\":3}",
-                              "\"batched\":true,\"shards\":3"));
+        // the v1 grammar: no "timing" fold, per-record flat timing keys
+        assert!(!text.contains("\"timing\""), "{}", text);
+        assert!(text.contains("\"records\":[{\"total_s\":"), "{}", text);
+        assert!(text.contains("\"step_s\":[0.25,0.25]"), "{}", text);
         let back = RunResult::from_json(&Value::parse(&text).unwrap())
             .unwrap();
         assert!(back.batched);
@@ -581,6 +658,43 @@ mod tests {
             .unwrap();
         assert_eq!(back.frozen, vec![(1, 2)]);
         assert_eq!(back.early_stop, Some(6));
+    }
+
+    #[test]
+    fn timing_fold_mirrors_the_plan_fold_and_roundtrips() {
+        use crate::util::profile::Phase;
+        let mut prof = Profiler::new();
+        prof.add(Phase::Compute, 0.75);
+        prof.add(Phase::Dispatch, 0.25);
+        let rr = RunResult::new(dummy_spec(),
+                                vec![rec(vec![2.0, 1.0], 0.5)])
+            .executed(None)
+            .with_profile(prof);
+        let text = rr.to_json().to_string_compact();
+        // the fold: ONE structured "timing" object (the PR 6 "plan" fold
+        // applied to the measurements), timing-free records
+        assert!(text.contains(
+            "\"timing\":{\"total_s\":1,\
+             \"per_phase\":{\"dispatch\":0.25,\"compute\":0.75},\
+             \"attribution\":\"wall\","), "{}", text);
+        assert!(text.contains("\"records\":[{\"objs\":"), "{}", text);
+        assert!(!text.contains("\"records\":[{\"total_s\""), "{}", text);
+        // an `--out` / cached payload round-trips: measurements, profile,
+        // and bytes
+        let back =
+            RunResult::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.profile, rr.profile);
+        assert_eq!(back.reps[0].total_s.to_bits(), 1.0f64.to_bits());
+        assert_eq!(back.reps[0].step_s, vec![0.5, 0.5]);
+        assert_eq!(back.to_json().to_string_compact(), text);
+        // batched runs label their per-replication attribution rule
+        let b = RunResult::new(dummy_spec(), vec![rec(vec![1.0], 0.1)])
+            .executed(Some(2));
+        assert!(b.to_json().to_string_compact()
+            .contains("\"attribution\":\"batch_s/R\""));
+        // …and the canonical payload never grows a timing key
+        assert!(!b.canonical_json().to_string_compact()
+            .contains("\"timing\""));
     }
 
     #[test]

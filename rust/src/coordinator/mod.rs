@@ -108,10 +108,13 @@ impl Coordinator {
                 RunResult::new(spec.clone(), run.records)
                     .executed(plan)
                     .with_budget_outcome(run.frozen, run.early_stop)
+                    .with_profile(run.profile)
             }
             None => {
-                let records = task.run_seq(self, spec, sink)?;
-                RunResult::new(spec.clone(), records).executed(plan)
+                let (records, prof) = task.run_seq(self, spec, sink)?;
+                RunResult::new(spec.clone(), records)
+                    .executed(plan)
+                    .with_profile(prof)
             }
         };
         // Per-run report isolation (DESIGN.md §14): a spec that names its

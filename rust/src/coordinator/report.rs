@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::config::BackendKind;
 use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::profile::Phase;
 use crate::util::timer::fmt_duration;
 
 use super::metrics::RunResult;
@@ -106,6 +107,31 @@ pub fn figure2_markdown(results: &[RunResult]) -> String {
         };
         out.push_str(&format!(" {} |\n", speed));
     }
+    // per-phase attribution rows (DESIGN.md §15) — only for results that
+    // carry a profile, so hand-built or pre-profiler results render the
+    // historical table unchanged
+    let profiled: Vec<&RunResult> =
+        results.iter().filter(|r| !r.profile.is_empty()).collect();
+    if !profiled.is_empty() {
+        out.push_str("\n#### Per-phase attribution (seconds, DESIGN.md \
+                      §15)\n\n| backend | size |");
+        for p in Phase::ALL {
+            out.push_str(&format!(" {} |", p));
+        }
+        out.push_str("\n|---|---|");
+        for _ in Phase::ALL {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for r in profiled {
+            out.push_str(&format!("| {} | {} |", r.spec.backend,
+                                  r.spec.size));
+            for p in Phase::ALL {
+                out.push_str(&format!(" {:.6} |", r.profile.get(p)));
+            }
+            out.push('\n');
+        }
+    }
     out
 }
 
@@ -164,8 +190,14 @@ pub fn table2_markdown(results: &[RunResult], fracs: &[f64]) -> String {
 pub fn results_csv(results: &[RunResult]) -> String {
     let mut out = String::from(
         "task,backend,size,reps,shards,total_mean_s,total_std_s,\
-         step_mean_s,final_obj_mean,final_obj_std\n",
+         step_mean_s,final_obj_mean,final_obj_std",
     );
+    // per-phase attribution columns ride at the END so historical column
+    // indices stay stable for downstream consumers (DESIGN.md §15)
+    for p in Phase::ALL {
+        out.push_str(&format!(",phase_{}_s", p));
+    }
+    out.push('\n');
     for r in results {
         let t = r.time_stats();
         let st = r.step_stats();
@@ -178,7 +210,7 @@ pub fn results_csv(results: &[RunResult]) -> String {
             format!("{:.9}", t.std())
         };
         out.push_str(&format!(
-            "{},{},{},{},{},{:.9},{},{:.9},{:.9},{:.9}\n",
+            "{},{},{},{},{},{:.9},{},{:.9},{:.9},{:.9}",
             r.spec.task,
             r.spec.backend,
             r.spec.size,
@@ -190,6 +222,10 @@ pub fn results_csv(results: &[RunResult]) -> String {
             fo.mean(),
             fo.std()
         ));
+        for p in Phase::ALL {
+            out.push_str(&format!(",{:.9}", r.profile.get(p)));
+        }
+        out.push('\n');
     }
     out
 }
@@ -235,6 +271,7 @@ pub fn results_json(results: &[RunResult]) -> Value {
                 ("batched", Value::Bool(r.batched)),
                 ("shards", num(r.shards as f64)),
                 ("final_obj", num(r.final_obj_stats().mean())),
+                ("per_phase", r.profile.to_json()),
             ])
         })
         .collect())
@@ -404,6 +441,52 @@ mod tests {
         let csv = results_csv(&sample_results());
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.contains("mean_variance,native,128,2,"));
+    }
+
+    #[test]
+    fn renderers_surface_per_phase_attribution() {
+        // Per-phase totals (DESIGN.md §15) must reach every machine-
+        // readable renderer: trailing CSV columns, a `per_phase` object in
+        // the JSON summary, and an attribution table in the markdown —
+        // while profile-less results keep the historical shapes.
+        use crate::util::profile::{Phase, Profiler};
+        let mut prof = Profiler::new();
+        prof.add(Phase::Compute, 1.25);
+        prof.add(Phase::Lmo, 0.5);
+        let profiled = fake_result(BackendKind::Native, 128, 0.4)
+            .with_profile(prof);
+        let bare = fake_result(BackendKind::Xla, 128, 0.1);
+        let results = vec![profiled, bare];
+
+        let csv = results_csv(&results);
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with(
+            ",phase_dispatch_s,phase_compute_s,phase_reduce_s,\
+             phase_lmo_s,phase_direction_s,phase_freeze_check_s"),
+            "{}", header);
+        let row = csv.lines().nth(1).unwrap();
+        assert_eq!(row.split(',').nth(11).unwrap(), "1.250000000", "{}", row);
+        assert_eq!(row.split(',').nth(13).unwrap(), "0.500000000", "{}", row);
+        let bare_row = csv.lines().nth(2).unwrap();
+        assert_eq!(bare_row.split(',').nth(11).unwrap(), "0.000000000");
+
+        let json = results_json(&results).to_string_pretty();
+        let back = crate::util::json::Value::parse(&json).unwrap();
+        let arr = back.as_arr().unwrap();
+        let pp = arr[0].get("per_phase").unwrap();
+        assert_eq!(pp.get("compute").unwrap().as_f64(), Some(1.25));
+        assert_eq!(pp.get("lmo").unwrap().as_f64(), Some(0.5));
+        assert!(arr[1].get("per_phase").unwrap().as_obj().unwrap()
+                      .is_empty());
+
+        let md = figure2_markdown(&results);
+        assert!(md.contains("Per-phase attribution"), "{}", md);
+        assert!(md.contains("| compute |"), "{}", md);
+        assert!(md.contains("1.250000"), "{}", md);
+        // a profile-less batch keeps the historical figure untouched
+        let plain = figure2_markdown(&[fake_result(BackendKind::Xla, 128,
+                                                   0.1)]);
+        assert!(!plain.contains("Per-phase"), "{}", plain);
     }
 
     #[test]

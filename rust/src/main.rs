@@ -221,14 +221,15 @@ fn spec_from_flags(a: &Args) -> Result<ExperimentSpec> {
     Ok(spec)
 }
 
-/// Persist the deterministic result payload (`RunResult::canonical_json`
-/// — spec + objective traces, timings excluded) when `--out` was given;
-/// byte-identical between `run` and `submit` for the same spec, which is
-/// what the CI service smoke diffs.
+/// Persist the full result payload (`RunResult::to_json` — spec, plan,
+/// the structured `"timing"` object with the per-phase attribution, and
+/// the records) when `--out` was given.  For the same spec, `run` and
+/// `submit` payloads are byte-identical except for the measured
+/// `"timing"` object — the CI service smoke strips that one key before
+/// diffing the two, and greps `per_phase` out of it (DESIGN.md §15).
 fn write_out(a: &Args, result: &RunResult) -> Result<()> {
     if let Some(path) = a.get("out") {
-        std::fs::write(&path,
-                       result.canonical_json().to_string_pretty())?;
+        std::fs::write(&path, result.to_json().to_string_pretty())?;
         eprintln!("[out] wrote {}", path);
     }
     Ok(())
@@ -274,6 +275,10 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             t.band2().0,
             t.band2().1
         );
+    }
+    if !result.profile.is_empty() {
+        println!("per-phase attribution: {}",
+                 result.profile.to_json().to_string_compact());
     }
     Ok(())
 }
@@ -425,6 +430,13 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
             st.queue_depth, st.capacity, st.workers, st.executed,
             st.cache_entries, st.cache_hits
         );
+        // the v2 structured stats object (DESIGN.md §15)
+        for (i, w) in st.per_worker.iter().enumerate() {
+            println!("[status] worker {}: executed={} cache_hits={}",
+                     i, w.executed, w.cache_hits);
+        }
+        println!("[status] per_phase: {}",
+                 st.per_phase.to_json().to_string_compact());
         return Ok(());
     }
     if a.get_bool("shutdown") {

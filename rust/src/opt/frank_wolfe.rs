@@ -11,6 +11,7 @@ use anyhow::Result;
 use crate::backend::{MvBackend, MvBatchBackend, NvBackend, NvBatchBackend};
 use crate::rng::StreamTree;
 use crate::tasks::newsvendor::NvLmo;
+use crate::util::profile::{Phase, Profiler};
 use crate::util::timer::Timer;
 
 use super::panel::{run_panel_ctl, PanelCtl, PanelHook, PanelOutcome};
@@ -24,6 +25,10 @@ pub struct FwTrace {
     pub objs: Vec<f64>,
     /// Wall-clock seconds per epoch.
     pub epoch_s: Vec<f64>,
+    /// Per-phase attribution of this replication's wall-clock
+    /// (DESIGN.md §15).  Batched runs attribute at the panel level
+    /// instead — see [`super::panel::PanelOutcome::profile`].
+    pub profile: Profiler,
 }
 
 impl FwTrace {
@@ -66,6 +71,18 @@ pub fn run_mv_ctl<B: MvBackend + ?Sized>(
         trace.epoch_s.push(step_s);
         trace.objs.push(obj);
         w = w_next;
+        // phase attribution outside the timed region: a self-attributing
+        // backend's drained split covers the kernel, the residual is
+        // dispatch overhead; otherwise the whole wall is compute
+        let mut step_prof = Profiler::new();
+        match backend.take_profile() {
+            Some(p) => {
+                step_prof.merge(&p);
+                step_prof.add(Phase::Dispatch, step_s - p.sum());
+            }
+            None => step_prof.add(Phase::Compute, step_s),
+        }
+        trace.profile.merge(&step_prof);
         sink.on_step(&StepEvent {
             reps: &[rep],
             epoch: k + 1,
@@ -73,6 +90,7 @@ pub fn run_mv_ctl<B: MvBackend + ?Sized>(
             objs: &[obj],
             live: 1,
             step_s,
+            profile: step_prof,
         })?;
     }
     Ok((w, trace))
@@ -113,16 +131,36 @@ pub fn run_nv_ctl<B: NvBackend + ?Sized>(
         // steps (Algorithm 2 line 5), counter-based RNG guarantees identity
         let key = tree.jax_key(&[k as u64]);
         let t = Timer::start();
+        // sub-interval walls for phase attribution — raw accumulators
+        // only; booking happens after the timed region ends
+        let mut lmo_s = 0.0f64;
+        let mut upd_s = 0.0f64;
         for m in 0..m_inner {
             let (g, o) = backend.grad_obj(&x, key)?;
             obj = o;
+            let t_lmo = Timer::start();
             let s = lmo.solve(&g)?;
+            lmo_s += t_lmo.elapsed_s();
             let gamma = fw_gamma(k, m, m_inner);
+            let t_upd = Timer::start();
             crate::linalg::vector::fw_update(&mut x, &s, gamma);
+            upd_s += t_upd.elapsed_s();
         }
         let step_s = t.elapsed_s();
         trace.epoch_s.push(step_s);
         trace.objs.push(obj);
+        let mut step_prof = Profiler::new();
+        match backend.take_profile() {
+            Some(p) => {
+                step_prof.merge(&p);
+                step_prof.add(Phase::Dispatch,
+                              step_s - p.sum() - lmo_s - upd_s);
+            }
+            None => step_prof.add(Phase::Compute, step_s - lmo_s - upd_s),
+        }
+        step_prof.add(Phase::Lmo, lmo_s);
+        step_prof.add(Phase::Reduce, upd_s);
+        trace.profile.merge(&step_prof);
         sink.on_step(&StepEvent {
             reps: &[rep],
             epoch: k + 1,
@@ -130,6 +168,7 @@ pub fn run_nv_ctl<B: NvBackend + ?Sized>(
             objs: &[obj],
             live: 1,
             step_s,
+            profile: step_prof,
         })?;
     }
     Ok((x, trace))
@@ -160,6 +199,16 @@ impl<B: MvBatchBackend + ?Sized> PanelHook for EpochHook<'_, B> {
     fn advance(&mut self, k: usize, panel: &mut [f32],
                _trees: &[StreamTree]) -> Result<Vec<f64>> {
         self.backend.epoch_batch(panel, k, &self.keys)
+    }
+
+    fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
+        match self.backend.take_profile() {
+            Some(p) => {
+                prof.merge(&p);
+                prof.add(Phase::Dispatch, step_s - p.sum());
+            }
+            None => prof.add(Phase::Compute, step_s),
+        }
     }
 }
 
@@ -207,6 +256,9 @@ struct NvStepHook<'a, B: ?Sized> {
     d: usize,
     g: Vec<f32>,
     keys: Vec<[u32; 2]>,
+    /// Host-side LMO + update wall accumulated during the current step
+    /// (drained by `collect_profile`).
+    lmo_s: f64,
 }
 
 impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
@@ -225,13 +277,29 @@ impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
             objs = self.backend.grad_obj_batch(panel, &self.keys,
                                                &mut self.g)?;
             let gamma = fw_gamma(k, m, self.m_inner);
+            let t_host = Timer::start();
             for (i, lmo) in self.lmos.iter_mut().enumerate() {
                 let s = lmo.solve(&self.g[i * d..(i + 1) * d])?;
                 crate::linalg::vector::fw_update(
                     &mut panel[i * d..(i + 1) * d], &s, gamma);
             }
+            self.lmo_s += t_host.elapsed_s();
         }
         Ok(objs)
+    }
+
+    fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
+        // the host LMO solves + FW updates are one sub-interval; the
+        // update axpy is negligible next to the LP, so it books as lmo
+        let lmo_s = std::mem::take(&mut self.lmo_s);
+        match self.backend.take_profile() {
+            Some(p) => {
+                prof.merge(&p);
+                prof.add(Phase::Dispatch, step_s - p.sum() - lmo_s);
+            }
+            None => prof.add(Phase::Compute, step_s - lmo_s),
+        }
+        prof.add(Phase::Lmo, lmo_s);
     }
 }
 
@@ -277,6 +345,7 @@ pub fn run_nv_batch_ctl<B: NvBatchBackend + ?Sized>(
         d,
         g: vec![0.0f32; r * d],
         keys: Vec::with_capacity(r),
+        lmo_s: 0.0,
     };
     run_panel_ctl(&mut hook, x0, epochs, trees, ctl)
 }

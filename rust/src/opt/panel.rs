@@ -31,6 +31,7 @@ use anyhow::Result;
 
 use crate::config::BudgetPolicy;
 use crate::rng::StreamTree;
+use crate::util::profile::{Phase, Profiler};
 use crate::util::timer::Timer;
 
 use super::frank_wolfe::FwTrace;
@@ -64,6 +65,17 @@ pub trait PanelHook {
         -> Result<()> {
         Ok(())
     }
+
+    /// Attribute the step's timed wall (`step_s`, the `advance` region
+    /// just measured) to `prof`'s phases (DESIGN.md §15).  Runs OUTSIDE
+    /// the timed region, right after it — a hook that timed sub-intervals
+    /// during `advance` books them here and drains its backend's own
+    /// dispatch/compute split; the default books the whole wall as
+    /// `compute`.  The phase totals of one step must sum to `step_s` (up
+    /// to clock noise on the residual), never more.
+    fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
+        prof.add(Phase::Compute, step_s);
+    }
 }
 
 /// Observer + budget for one [`run_panel_ctl`] run.
@@ -91,6 +103,9 @@ pub struct PanelOutcome {
     /// 1-based epoch after which the run stopped early (all survivors
     /// converged), if it did.
     pub early_stop: Option<usize>,
+    /// Per-phase wall-clock attribution accumulated over every step
+    /// (DESIGN.md §15).
+    pub profile: Profiler,
 }
 
 /// Attribute one batched-call wall-clock to the live per-replication
@@ -178,6 +193,7 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
     let mut ev_reps: Vec<usize> = Vec::with_capacity(r);
     let mut ev_objs: Vec<f64> = Vec::with_capacity(r);
 
+    let mut profile = Profiler::new();
     for k in 0..steps {
         hook.prepare(k, trees)?;
         let t = Timer::start();
@@ -186,6 +202,10 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
         anyhow::ensure!(vals.len() == r,
                         "hook returned {} values for {} replications",
                         vals.len(), r);
+        // phase attribution happens OUTSIDE the timed region, so the
+        // recorded step_s (and every trace bit) matches an unprofiled run
+        let mut step_prof = Profiler::new();
+        hook.collect_profile(step_s, &mut step_prof);
         // mask frozen rows: the backend advanced the whole panel (shard
         // shapes are sacred), the loop pins the frozen iterates back
         if let Some(pin) = &pinned {
@@ -212,6 +232,7 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
         // budget checkpoint (never at the final epoch — nothing left to
         // save)
         let epoch = k + 1;
+        let t_ck = Timer::start();
         if let Some(b) = &ctl.budget {
             if epoch % b.check_every == 0 && epoch < steps {
                 let best = ev_objs.iter().cloned().fold(f64::INFINITY,
@@ -250,6 +271,11 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
             }
         }
 
+        if ctl.budget.is_some() {
+            step_prof.add(Phase::FreezeCheck, t_ck.elapsed_s());
+        }
+        profile.merge(&step_prof);
+
         let n_live = live.iter().filter(|&&l| l).count();
         ctl.sink.on_step(&StepEvent {
             reps: &ev_reps,
@@ -258,12 +284,13 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
             objs: &ev_objs,
             live: n_live,
             step_s,
+            profile: step_prof,
         })?;
         if early_stop.is_some() {
             break;
         }
     }
-    Ok(PanelOutcome { panel, traces, frozen, early_stop })
+    Ok(PanelOutcome { panel, traces, frozen, early_stop, profile })
 }
 
 #[cfg(test)]
@@ -527,6 +554,26 @@ mod tests {
             assert_eq!(share.to_bits(), (sink.0[k] / 3.0).to_bits(),
                        "epoch {} share must be the full-panel third", k);
         }
+    }
+
+    #[test]
+    fn default_profile_books_the_whole_wall_as_compute() {
+        let trees: Vec<StreamTree> =
+            (0..2).map(|i| StreamTree::new(i)).collect();
+        let mut hook =
+            ScheduleHook { base: vec![1.0, 2.0], slope: vec![0.0, 0.0] };
+        let mut sink = StepSecondsSink(Vec::new());
+        let mut ctl = PanelCtl { sink: &mut sink, budget: None };
+        let out = run_panel_ctl(&mut hook, &[0.0], 3, &trees, &mut ctl)
+            .unwrap();
+        // a hook without collect_profile books every step wall as
+        // compute — bitwise, since both sides sum the same f64s in order
+        let wall: f64 = sink.0.iter().sum();
+        assert_eq!(out.profile.get(Phase::Compute).to_bits(),
+                   wall.to_bits());
+        assert_eq!(out.profile.sum().to_bits(), wall.to_bits());
+        assert_eq!(out.profile.get(Phase::FreezeCheck), 0.0,
+                   "no budget ⇒ no freeze_check phase");
     }
 
     #[test]

@@ -17,6 +17,8 @@
 
 use anyhow::Result;
 
+use crate::util::profile::Profiler;
+
 /// One outer optimization step, as seen by an observer.
 #[derive(Debug, Clone, Copy)]
 pub struct StepEvent<'a> {
@@ -35,6 +37,9 @@ pub struct StepEvent<'a> {
     pub live: usize,
     /// Wall-clock seconds of the step's timed region.
     pub step_s: f64,
+    /// Per-phase attribution of THIS step (DESIGN.md §15) — already
+    /// accumulated outside the timed region, so reading it here is free.
+    pub profile: Profiler,
 }
 
 /// Per-step observer threaded through the drivers.  `Send` so the
@@ -93,6 +98,7 @@ mod tests {
             objs: &[0.5, 0.25],
             live: 2,
             step_s: 0.0,
+            profile: Profiler::default(),
         };
         assert!(NullSink.on_step(&ev).is_ok());
     }
@@ -110,6 +116,7 @@ mod tests {
                 objs: &[1.5],
                 live: 1,
                 step_s: 0.0,
+                profile: Profiler::default(),
             };
             SharedSink(&shared).on_step(&ev).unwrap();
         }

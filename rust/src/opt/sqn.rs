@@ -12,6 +12,7 @@ use crate::backend::{LrBackend, LrBatchBackend};
 use crate::rng::StreamTree;
 use crate::sim::ClassifyData;
 use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
+use crate::util::profile::{Phase, Profiler};
 use crate::util::timer::Timer;
 
 use super::panel::{run_panel_ctl, PanelCtl, PanelHook};
@@ -65,6 +66,9 @@ pub struct SqnTrace {
     pub pairs_accepted: usize,
     /// Number of pairs rejected for curvature.
     pub pairs_rejected: usize,
+    /// Per-phase attribution of this replication's wall-clock
+    /// (DESIGN.md §15).  Batched runs attribute at the panel level.
+    pub profile: Profiler,
 }
 
 impl SqnTrace {
@@ -126,32 +130,45 @@ pub fn run_sqn_ctl<B: LrBackend + ?Sized>(
         // -- Algorithm 3 line 5: choose the minibatch S ---------------------
         // (indices only — each backend owns its gather path: host rows for
         // native, in-graph take() against the resident dataset for XLA)
+        let t_idx = Timer::start();
         let mut rng = tree.stream(&[1, k as u64]);
         let idx = rng.sample_indices(data.n_samples, cfg.batch.min(data.n_samples));
+        let dispatch_s = t_idx.elapsed_s();
 
         // -- line 6: stochastic gradient -----------------------------------
         let (g, loss) = backend.grad(&w, data, &idx)?;
 
         // -- line 7: ω̄ accumulation + step size ---------------------------
+        let t_red = Timer::start();
         for j in 0..n {
             wbar_acc[j] += w[j];
         }
         let alpha = sqn_alpha(cfg.beta, k);
+        let mut red_s = t_red.elapsed_s();
 
         // -- lines 8-12: gradient or quasi-Newton step ---------------------
+        let mut dir_s = 0.0f64;
         if k <= 2 * cfg.l_every || mem.is_empty() {
+            let t_upd = Timer::start();
             for j in 0..n {
                 w[j] -= alpha * g[j];
             }
+            red_s += t_upd.elapsed_s();
         } else {
+            let t_dir = Timer::start();
             let d = backend.direction(&mem, &g)?;
+            dir_s = t_dir.elapsed_s();
+            let t_upd = Timer::start();
             for j in 0..n {
                 w[j] -= alpha * d[j];
             }
+            red_s += t_upd.elapsed_s();
         }
 
         // -- lines 13-21: correction pairs every L iterations --------------
         if k % cfg.l_every == 0 {
+            let t_pair = Timer::start();
+            let mut hvp_s = 0.0f64;
             t_count += 1;
             let inv = 1.0 / cfg.l_every as f32;
             let wbar_t: Vec<f32> = wbar_acc.iter().map(|&v| v * inv).collect();
@@ -164,7 +181,9 @@ pub fn run_sqn_ctl<B: LrBackend + ?Sized>(
                 let hidx = hrng.sample_indices(
                     data.n_samples, cfg.hbatch.min(data.n_samples));
                 // line 18: y_t = ∇²F(ω̄_t) s_t
+                let t_hvp = Timer::start();
                 let y_t = backend.hvp(&wbar_t, &s_t, data, &hidx)?;
+                hvp_s = t_hvp.elapsed_s();
                 if mem.push(&s_t, &y_t) {
                     trace.pairs_accepted += 1;
                 } else {
@@ -173,10 +192,35 @@ pub fn run_sqn_ctl<B: LrBackend + ?Sized>(
             }
             wbar_prev = Some(wbar_t);
             wbar_acc.iter_mut().for_each(|v| *v = 0.0);
+            // the pair bookkeeping minus the HVP kernel itself
+            red_s += t_pair.elapsed_s() - hvp_s;
         }
         let step_s = timer.elapsed_s();
         trace.iter_s.push(step_s);
         trace.batch_loss.push(loss);
+
+        // phase attribution, outside the timed region: the host-side
+        // sub-intervals book directly; the kernel walls (grad, hvp,
+        // direction) come from the backend's drained split — a backend
+        // that self-attributes owns ALL its entry points, so the driver's
+        // own direction/hvp call timers are only used in the fallback
+        let mut step_prof = Profiler::new();
+        step_prof.add(Phase::Reduce, red_s);
+        step_prof.add(Phase::Dispatch, dispatch_s);
+        match backend.take_profile() {
+            Some(p) => {
+                step_prof.merge(&p);
+                step_prof.add(Phase::Dispatch,
+                              step_s - p.sum() - dispatch_s - red_s);
+            }
+            None => {
+                step_prof.add(Phase::Direction, dir_s);
+                // grad + hvp kernels land here (hvp_s stays inside)
+                step_prof.add(Phase::Compute,
+                              step_s - dispatch_s - red_s - dir_s);
+            }
+        }
+        trace.profile.merge(&step_prof);
 
         // -- convergence tracking (outside the timed region) ---------------
         if cfg.track_every > 0 && (k % cfg.track_every == 0 || k == 1) {
@@ -190,6 +234,7 @@ pub fn run_sqn_ctl<B: LrBackend + ?Sized>(
             objs: &[loss],
             live: 1,
             step_s,
+            profile: step_prof,
         })?;
     }
     Ok((w, trace))
@@ -224,6 +269,11 @@ struct SqnHook<'a, B: ?Sized> {
     checkpoints: Vec<Vec<(usize, f64)>>,
     pairs_accepted: Vec<usize>,
     pairs_rejected: Vec<usize>,
+    // host-side sub-interval walls of the current step, drained by
+    // collect_profile after the step's wall-clock is recorded
+    dispatch_s: f64,
+    red_s: f64,
+    dir_s: f64,
 }
 
 impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
@@ -234,36 +284,45 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
         let w = panel;
 
         // -- line 5: per-replication minibatch indices ----------------------
+        let t_idx = Timer::start();
         for (row, tree) in self.idx.iter_mut().zip(trees) {
             let mut rng = tree.stream(&[1, k as u64]);
             *row = rng.sample_indices(data.n_samples,
                                       cfg.batch.min(data.n_samples));
         }
+        self.dispatch_s += t_idx.elapsed_s();
 
         // -- line 6: ONE batched stochastic-gradient dispatch ---------------
         let losses =
             self.backend.grad_batch(w, data, &self.idx, &mut self.g)?;
 
         // -- line 7: ω̄ accumulation + step size ----------------------------
+        let t_red = Timer::start();
         for j in 0..r * n {
             self.wbar_acc[j] += w[j];
         }
         let alpha = sqn_alpha(cfg.beta, k);
+        self.red_s += t_red.elapsed_s();
 
         // -- lines 8-12: gradient or quasi-Newton step ----------------------
         if k <= 2 * cfg.l_every {
+            let t_upd = Timer::start();
             for j in 0..r * n {
                 w[j] -= alpha * self.g[j];
             }
+            self.red_s += t_upd.elapsed_s();
         } else {
             if self.mem.any_active() {
                 // ONE padded dispatch produces every replication's
                 // Algorithm-4 direction (DESIGN.md §11); the backend sees
                 // a borrowed view so a sharded plane can slice it per
                 // shard with zero copies (DESIGN.md §13)
+                let t_dir = Timer::start();
                 self.backend.direction_batch(self.mem.view(), &self.g,
                                              &mut self.dirs)?;
+                self.dir_s += t_dir.elapsed_s();
             }
+            let t_upd = Timer::start();
             for i in 0..r {
                 // rows whose memory hasn't accepted a pair yet take the
                 // plain gradient step, exactly as the sequential path does
@@ -276,10 +335,13 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
                     w[j] -= alpha * step[j];
                 }
             }
+            self.red_s += t_upd.elapsed_s();
         }
 
         // -- lines 13-21: correction pairs every L iterations ---------------
         if k % cfg.l_every == 0 {
+            let t_pair = Timer::start();
+            let mut hvp_s = 0.0f64;
             self.t_count += 1;
             let inv = 1.0 / cfg.l_every as f32;
             let wbar_ts: Vec<Vec<f32>> = (0..r)
@@ -310,8 +372,10 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
                 }
                 // line 18: ONE batched Hessian-vector dispatch
                 let mut y_panel = vec![0.0f32; r * n];
+                let t_hvp = Timer::start();
                 self.backend.hvp_batch(&wbar_panel, &s_panel, data, &hidx,
                                        &mut y_panel)?;
+                hvp_s = t_hvp.elapsed_s();
                 for i in 0..r {
                     if self.mem.push_row(i, &s_panel[i * n..(i + 1) * n],
                                          &y_panel[i * n..(i + 1) * n]) {
@@ -325,8 +389,30 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
                 *prev = Some(wbar_t);
             }
             self.wbar_acc.iter_mut().for_each(|v| *v = 0.0);
+            // the pair bookkeeping minus the HVP kernel itself
+            self.red_s += t_pair.elapsed_s() - hvp_s;
         }
         Ok(losses)
+    }
+
+    fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
+        let dispatch_s = std::mem::take(&mut self.dispatch_s);
+        let red_s = std::mem::take(&mut self.red_s);
+        let dir_s = std::mem::take(&mut self.dir_s);
+        prof.add(Phase::Dispatch, dispatch_s);
+        prof.add(Phase::Reduce, red_s);
+        match self.backend.take_profile() {
+            Some(p) => {
+                prof.merge(&p);
+                prof.add(Phase::Dispatch,
+                         step_s - p.sum() - dispatch_s - red_s);
+            }
+            None => {
+                prof.add(Phase::Direction, dir_s);
+                prof.add(Phase::Compute,
+                         step_s - dispatch_s - red_s - dir_s);
+            }
+        }
     }
 
     fn observe(&mut self, k0: usize, panel: &[f32], live: &[bool])
@@ -382,6 +468,8 @@ pub struct SqnBatchOutcome {
     pub frozen: Vec<(usize, usize)>,
     /// 1-based iteration after which the run stopped early, if it did.
     pub early_stop: Option<usize>,
+    /// Panel-level per-phase attribution of the whole run (DESIGN.md §15).
+    pub profile: Profiler,
 }
 
 /// [`run_sqn_batch`] under a [`PanelCtl`]: per-iteration progress events
@@ -429,6 +517,9 @@ pub fn run_sqn_batch_ctl<B: LrBatchBackend + ?Sized>(
         checkpoints: vec![Vec::new(); r],
         pairs_accepted: vec![0; r],
         pairs_rejected: vec![0; r],
+        dispatch_s: 0.0,
+        red_s: 0.0,
+        dir_s: 0.0,
     };
     let x0 = vec![0.0f32; n];
     let out = run_panel_ctl(&mut hook, &x0, cfg.iters, trees, ctl)?;
@@ -443,6 +534,7 @@ pub fn run_sqn_batch_ctl<B: LrBatchBackend + ?Sized>(
             iter_s: ft.epoch_s,
             pairs_accepted: hook.pairs_accepted[i],
             pairs_rejected: hook.pairs_rejected[i],
+            profile: Profiler::default(),
         });
     }
     Ok(SqnBatchOutcome {
@@ -450,6 +542,7 @@ pub fn run_sqn_batch_ctl<B: LrBatchBackend + ?Sized>(
         traces,
         frozen: out.frozen,
         early_stop: out.early_stop,
+        profile: out.profile,
     })
 }
 

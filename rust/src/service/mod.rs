@@ -40,6 +40,7 @@ pub mod server;
 
 pub use cache::ResultCache;
 pub use protocol::{Client, ProgressInfo, Request, Response, Session,
-                   StatusInfo, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
+                   StatusInfo, WorkerStats, MIN_PROTOCOL_VERSION,
+                   PROTOCOL_VERSION};
 pub use queue::{Bounded, PushError};
 pub use server::{Server, ServerConfig, ServerStats};

@@ -32,6 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{ExperimentSpec, RunResult};
 use crate::util::json::{arr, num, obj, s, Value};
+use crate::util::profile::Profiler;
 
 /// Highest protocol version this build speaks; bump on any frame-grammar
 /// change.  v2 added streaming submits (`stream` on `submit`, `progress`
@@ -96,8 +97,21 @@ impl Request {
     }
 }
 
-/// Server status counters (the `status` response payload).
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// One worker's execution counters (an entry of the structured `stats`
+/// object a v2 `status` frame carries).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Experiments this worker executed (cache hits excluded).
+    pub executed: u64,
+    /// Submits this worker answered straight from the cache.
+    pub cache_hits: u64,
+}
+
+/// Server status counters (the `status` response payload).  The flat
+/// totals are the v1 grammar; v2 frames additionally carry a structured
+/// `"stats"` object (per-worker counters + aggregate per-phase seconds)
+/// — additive-only keys, so a v1 parser never notices.
+#[derive(Debug, Clone, PartialEq)]
 pub struct StatusInfo {
     pub queue_depth: usize,
     pub capacity: usize,
@@ -106,6 +120,12 @@ pub struct StatusInfo {
     pub executed: u64,
     pub cache_entries: usize,
     pub cache_hits: u64,
+    /// Per-worker executed/cache-hit split (`stats.per_worker`; empty on
+    /// frames from v1 producers).
+    pub per_worker: Vec<WorkerStats>,
+    /// Aggregate per-phase seconds over every run this server executed
+    /// (`stats.per_phase`, DESIGN.md §15).
+    pub per_phase: Profiler,
 }
 
 /// One per-epoch snapshot of a streamed run (the v2 `progress` frame):
@@ -125,6 +145,9 @@ pub struct ProgressInfo {
     pub live: usize,
     /// Timed seconds of this step's kernel region.
     pub step_s: f64,
+    /// Per-phase attribution of this step (DESIGN.md §15); empty on
+    /// frames from pre-profiler producers.
+    pub per_phase: Profiler,
 }
 
 /// Server → client frames.
@@ -178,6 +201,7 @@ impl Response {
                     .map(|&o| num(o)).collect())));
                 kv.push(("live", num(p.live as f64)));
                 kv.push(("step_s", num(p.step_s)));
+                kv.push(("per_phase", p.per_phase.to_json()));
                 obj(kv)
             }
             Response::Completed { id, cache_hit, result } => {
@@ -209,6 +233,18 @@ impl Response {
                 kv.push(("executed", num(st.executed as f64)));
                 kv.push(("cache_entries", num(st.cache_entries as f64)));
                 kv.push(("cache_hits", num(st.cache_hits as f64)));
+                // the structured stats object is v2 grammar; a v1
+                // conversation's status frame stays bit-identical
+                if ver >= 2 {
+                    kv.push(("stats", obj(vec![
+                        ("per_worker",
+                         arr(st.per_worker.iter().map(|w| obj(vec![
+                             ("executed", num(w.executed as f64)),
+                             ("cache_hits", num(w.cache_hits as f64)),
+                         ])).collect())),
+                        ("per_phase", st.per_phase.to_json()),
+                    ])));
+                }
                 obj(kv)
             }
             Response::ShuttingDown => obj(head("shutting_down")),
@@ -256,6 +292,11 @@ impl Response {
                     live: get_u64("live")? as usize,
                     step_s: v.get("step_s").and_then(Value::as_f64)
                         .context("progress frame is missing 'step_s'")?,
+                    per_phase: match v.get("per_phase") {
+                        None | Some(Value::Null) => Profiler::new(),
+                        Some(pp) => Profiler::from_json(pp)
+                            .context("parsing progress 'per_phase'")?,
+                    },
                 }))
             }
             "result" => Ok(Response::Completed {
@@ -276,14 +317,37 @@ impl Response {
                     .context("error frame is missing 'error'")?
                     .to_string(),
             }),
-            "status" => Ok(Response::Status(StatusInfo {
-                queue_depth: get_u64("queue_depth")? as usize,
-                capacity: get_u64("capacity")? as usize,
-                workers: get_u64("workers")? as usize,
-                executed: get_u64("executed")?,
-                cache_entries: get_u64("cache_entries")? as usize,
-                cache_hits: get_u64("cache_hits")?,
-            })),
+            "status" => {
+                // the stats object is additive v2 grammar — absent on v1
+                // frames, so both halves default to empty
+                let mut per_worker = Vec::new();
+                let mut per_phase = Profiler::new();
+                if let Some(stats) = v.get("stats") {
+                    if let Some(ws) =
+                        stats.get("per_worker").and_then(Value::as_arr) {
+                        for w in ws {
+                            per_worker.push(WorkerStats {
+                                executed: frame_u64(w, "executed")?,
+                                cache_hits: frame_u64(w, "cache_hits")?,
+                            });
+                        }
+                    }
+                    if let Some(pp) = stats.get("per_phase") {
+                        per_phase = Profiler::from_json(pp)
+                            .context("parsing status 'per_phase'")?;
+                    }
+                }
+                Ok(Response::Status(StatusInfo {
+                    queue_depth: get_u64("queue_depth")? as usize,
+                    capacity: get_u64("capacity")? as usize,
+                    workers: get_u64("workers")? as usize,
+                    executed: get_u64("executed")?,
+                    cache_entries: get_u64("cache_entries")? as usize,
+                    cache_hits: get_u64("cache_hits")?,
+                    per_worker,
+                    per_phase,
+                }))
+            }
             "shutting_down" => Ok(Response::ShuttingDown),
             "unsupported_version" => Ok(Response::UnsupportedVersion {
                 max: get_u64("max")?,
@@ -555,6 +619,8 @@ mod tests {
             }
             other => panic!("{:?}", other),
         }
+        let mut per_phase = Profiler::new();
+        per_phase.add(crate::util::profile::Phase::Compute, 1.5);
         let info = StatusInfo {
             queue_depth: 1,
             capacity: 8,
@@ -562,11 +628,26 @@ mod tests {
             executed: 40,
             cache_entries: 3,
             cache_hits: 7,
+            per_worker: vec![
+                WorkerStats { executed: 25, cache_hits: 3 },
+                WorkerStats { executed: 15, cache_hits: 4 },
+            ],
+            per_phase,
         };
         match roundtrip_resp(&Response::Status(info.clone())) {
             Response::Status(back) => assert_eq!(back, info),
             other => panic!("{:?}", other),
         }
+        // the stats object is v2-only, additive grammar
+        let v2_text = Response::Status(info.clone()).to_json_for(2)
+            .to_string_compact();
+        assert!(v2_text.contains(
+            "\"stats\":{\"per_worker\":[{\"executed\":25,\
+             \"cache_hits\":3},{\"executed\":15,\"cache_hits\":4}],\
+             \"per_phase\":{\"compute\":1.5}}"), "{}", v2_text);
+        let v1_text = Response::Status(info).to_json_for(1)
+            .to_string_compact();
+        assert!(!v1_text.contains("\"stats\""), "{}", v1_text);
         assert!(matches!(roundtrip_resp(&Response::ShuttingDown),
                          Response::ShuttingDown));
     }
@@ -610,6 +691,9 @@ mod tests {
 
     #[test]
     fn progress_and_unsupported_version_frames_roundtrip() {
+        let mut per_phase = Profiler::new();
+        per_phase.add(crate::util::profile::Phase::Compute, 0.05);
+        per_phase.add(crate::util::profile::Phase::Lmo, 0.0125);
         let info = ProgressInfo {
             id: 12,
             epoch: 3,
@@ -618,9 +702,25 @@ mod tests {
             objs: vec![1.25, -0.5],
             live: 2,
             step_s: 0.0625,
+            per_phase,
         };
         match roundtrip_resp(&Response::Progress(info.clone())) {
             Response::Progress(back) => assert_eq!(back, info),
+            other => panic!("{:?}", other),
+        }
+        // the snapshot carries its per-phase split on the wire…
+        assert!(Response::Progress(info.clone()).to_json()
+            .to_string_compact()
+            .contains("\"per_phase\":{\"compute\":0.05,\"lmo\":0.0125}"));
+        // …and a frame without one (pre-profiler producer) still parses
+        let mut bare = info;
+        bare.per_phase = Profiler::new();
+        let line = Response::Progress(bare.clone()).to_json()
+            .to_string_compact()
+            .replace(",\"per_phase\":{}", "");
+        assert!(!line.contains("per_phase"), "{}", line);
+        match Response::from_json(&Value::parse(&line).unwrap()).unwrap() {
+            Response::Progress(back) => assert_eq!(back, bare),
             other => panic!("{:?}", other),
         }
         match roundtrip_resp(&Response::UnsupportedVersion { max: 2 }) {

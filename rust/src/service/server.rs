@@ -29,7 +29,7 @@ use std::io::{self, BufReader};
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
@@ -38,11 +38,12 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::coordinator::{report, Coordinator, ExperimentSpec, RunResult};
 use crate::opt::{ProgressSink, StepEvent};
 use crate::util::json::{num, obj, s, Value};
+use crate::util::profile::Profiler;
 
 use super::cache::ResultCache;
 use super::protocol::{frame_version, read_frame, write_frame,
                       ProgressInfo, Request, Response, StatusInfo,
-                      MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
+                      WorkerStats, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
 use super::queue::{Bounded, PushError};
 
 /// How `simopt serve` configures the plane.
@@ -93,6 +94,15 @@ struct Job {
     reply: mpsc::Sender<Value>,
 }
 
+/// One worker's counters behind the v2 status `stats.per_worker` entry.
+struct WorkerCounters {
+    executed: AtomicU64,
+    /// Worker-side dedup hits (the second cache look in `worker_loop`);
+    /// handler fast-path hits never reach a worker and are counted only
+    /// in the global cache totals.
+    cache_hits: AtomicU64,
+}
+
 struct Shared {
     queue: Bounded<Job>,
     cache: ResultCache,
@@ -100,6 +110,13 @@ struct Shared {
     next_id: AtomicU64,
     shutdown: AtomicBool,
     workers: usize,
+    /// Per-worker executed/cache-hit split, indexed by worker
+    /// (`stats.per_worker` on v2 status frames).
+    worker_counters: Vec<WorkerCounters>,
+    /// Aggregate per-phase seconds over every run this server executed
+    /// (`stats.per_phase`, DESIGN.md §15) — merged from each completed
+    /// run's profile, outside any timed region.
+    phase_totals: Mutex<Profiler>,
     socket: PathBuf,
 }
 
@@ -161,15 +178,22 @@ impl Server {
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             workers: self.cfg.workers,
+            worker_counters: (0..self.cfg.workers)
+                .map(|_| WorkerCounters {
+                    executed: AtomicU64::new(0),
+                    cache_hits: AtomicU64::new(0),
+                })
+                .collect(),
+            phase_totals: Mutex::new(Profiler::new()),
             socket: self.cfg.socket.clone(),
         });
         let mut workers = Vec::with_capacity(self.cfg.workers);
-        for _ in 0..self.cfg.workers {
+        for idx in 0..self.cfg.workers {
             let shared = Arc::clone(&shared);
             let artifacts = self.cfg.artifact_dir.clone();
             let results = self.cfg.results_dir.clone();
             workers.push(thread::spawn(move || {
-                worker_loop(&shared, &artifacts, &results)
+                worker_loop(&shared, idx, &artifacts, &results)
             }));
         }
         let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
@@ -273,6 +297,7 @@ impl ProgressSink for ChannelSink {
             objs: ev.objs.to_vec(),
             live: ev.live,
             step_s: ev.step_s,
+            per_phase: ev.profile,
         })
         .to_json_for(self.v);
         let _ = self.tx.send(frame);
@@ -311,7 +336,8 @@ fn cache_hit_frame(ver: u64, id: u64, spec: &ExperimentSpec, hit: &Value)
 
 /// One warm executor: a Coordinator built once, reused for every job this
 /// worker pops — the engine/artifact state survives across requests.
-fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
+fn worker_loop(shared: &Shared, idx: usize, artifacts: &str,
+               results: &str) {
     let mut coord = match Coordinator::new(artifacts, results) {
         Ok(c) => Some(c),
         Err(e) => {
@@ -331,6 +357,8 @@ fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
         let (key, canonical) = (job.key, &job.canonical);
         let frame = if let Some(hit) = shared.cache.get(key, canonical) {
             // cache hits never stream — the terminal frame is the answer
+            shared.worker_counters[idx].cache_hits
+                .fetch_add(1, Ordering::SeqCst);
             cache_hit_frame(job.v, job.id, &job.spec, &hit)
         } else if coord.is_some() {
             // contain panics per job: one poisoned spec must not take the
@@ -357,6 +385,10 @@ fn worker_loop(shared: &Shared, artifacts: &str, results: &str) {
                     shared.cache.insert(key, canonical,
                                         Arc::clone(&payload));
                     shared.executed.fetch_add(1, Ordering::SeqCst);
+                    shared.worker_counters[idx].executed
+                        .fetch_add(1, Ordering::SeqCst);
+                    shared.phase_totals.lock().unwrap()
+                        .merge(&result.profile);
                     completed_frame(job.v, job.id, false,
                                     (*payload).clone())
                 }
@@ -440,6 +472,13 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
                 executed: shared.executed.load(Ordering::SeqCst),
                 cache_entries: shared.cache.entries(),
                 cache_hits: shared.cache.hits(),
+                per_worker: shared.worker_counters.iter()
+                    .map(|w| WorkerStats {
+                        executed: w.executed.load(Ordering::SeqCst),
+                        cache_hits: w.cache_hits.load(Ordering::SeqCst),
+                    })
+                    .collect(),
+                per_phase: *shared.phase_totals.lock().unwrap(),
             };
             let _ = write_frame(&mut writer,
                                 &Response::Status(info).to_json_for(ver));

@@ -40,6 +40,7 @@ use crate::runtime::Engine;
 use crate::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use crate::tasks::{cvar, NvLmo};
 use crate::util::pool::parallel_map;
+use crate::util::profile::Profiler;
 
 /// A per-replication backend boxed by task family — what
 /// [`Coordinator::make_backend`] hands to examples and benches.
@@ -62,6 +63,8 @@ pub struct BatchRun {
     pub frozen: Vec<(usize, usize)>,
     /// Checkpoint epoch at which every surviving replication converged.
     pub early_stop: Option<usize>,
+    /// Panel-level per-phase attribution of the whole run (DESIGN.md §15).
+    pub profile: Profiler,
 }
 
 /// One registered scenario: everything the execution plane needs to run
@@ -112,8 +115,14 @@ pub trait SimTask: Sync {
     /// hook, DESIGN.md §14); pass [`crate::opt::NullSink`] for the
     /// historical silent behavior.  On the native arm replications run on
     /// pool threads, so events from different replications may interleave.
+    ///
+    /// The second return value is the merged per-phase profile of all
+    /// replications (DESIGN.md §15) — probes read clocks outside the
+    /// timed regions, so profiled traces are bitwise-identical to the
+    /// pre-profiler behavior.
     fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>>;
+               sink: &mut dyn ProgressSink)
+        -> Result<(Vec<RepRecord>, Profiler)>;
 
     /// Advance all replications together through the shard-aware panel
     /// plane (DESIGN.md §11/§13): `shards` contiguous row shards, one
@@ -191,6 +200,21 @@ fn native_mode(kind: BackendKind, threads: usize) -> NativeMode {
             unreachable!("native_mode called with Xla")
         }
     }
+}
+
+/// Fold `(record, profile)` results off the pool threads into the
+/// `run_seq` return shape, merging per-replication profiles in
+/// replication order.
+fn collect_seq(results: Vec<Result<(RepRecord, Profiler)>>, reps: usize)
+    -> Result<(Vec<RepRecord>, Profiler)> {
+    let mut prof = Profiler::new();
+    let mut records = Vec::with_capacity(reps);
+    for res in results {
+        let (rec, p) = res?;
+        prof.merge(&p);
+        records.push(rec);
+    }
+    Ok((records, prof))
 }
 
 fn ensure_fw_params(spec: &ExperimentSpec) -> Result<()> {
@@ -282,7 +306,8 @@ impl SimTask for MeanVarianceTask {
     }
 
     fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
+               sink: &mut dyn ProgressSink)
+        -> Result<(Vec<RepRecord>, Profiler)> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
@@ -293,31 +318,33 @@ impl SimTask for MeanVarianceTask {
                 let engine = cx.engine()?;
                 let mut backend =
                     XlaMv::new(engine, &universe, p.samples, p.m_inner)?;
-                trees
-                    .iter()
-                    .enumerate()
-                    .map(|(r, sub)| {
-                        let (_, trace) = frank_wolfe::run_mv_ctl(
-                            &mut backend, w0.clone(), p.iters, sub, r,
-                            sink)?;
-                        Ok(RepRecord::from_fw(trace))
-                    })
-                    .collect()
+                let mut prof = Profiler::new();
+                let mut records = Vec::with_capacity(spec.reps);
+                for (r, sub) in trees.iter().enumerate() {
+                    let (_, trace) = frank_wolfe::run_mv_ctl(
+                        &mut backend, w0.clone(), p.iters, sub, r, sink)?;
+                    prof.merge(&trace.profile);
+                    records.push(RepRecord::from_fw(trace));
+                }
+                Ok((records, prof))
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
                 let shared = Mutex::new(sink);
-                parallel_map(spec.reps, cx.native_threads, |r| {
-                    let mut backend = NativeMv::new(
-                        universe.clone(), p.samples, p.m_inner, mode);
-                    let mut sink = SharedSink(&shared);
-                    frank_wolfe::run_mv_ctl(&mut backend, w0.clone(),
-                                            p.iters, &trees[r], r,
-                                            &mut sink)
-                        .map(|(_, t)| RepRecord::from_fw(t))
-                })
-                .into_iter()
-                .collect()
+                let results =
+                    parallel_map(spec.reps, cx.native_threads, |r| {
+                        let mut backend = NativeMv::new(
+                            universe.clone(), p.samples, p.m_inner, mode);
+                        let mut sink = SharedSink(&shared);
+                        frank_wolfe::run_mv_ctl(&mut backend, w0.clone(),
+                                                p.iters, &trees[r], r,
+                                                &mut sink)
+                            .map(|(_, t)| {
+                                let p = t.profile;
+                                (RepRecord::from_fw(t), p)
+                            })
+                    });
+                collect_seq(results, spec.reps)
             }
         }
     }
@@ -360,6 +387,7 @@ impl SimTask for MeanVarianceTask {
                 .collect(),
             frozen: out.frozen,
             early_stop: out.early_stop,
+            profile: out.profile,
         })
     }
 }
@@ -447,7 +475,8 @@ impl SimTask for NewsvendorTask {
     }
 
     fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
+               sink: &mut dyn ProgressSink)
+        -> Result<(Vec<RepRecord>, Profiler)> {
         let tree = StreamTree::new(spec.seed);
         let inst = NewsvendorInstance::generate(
             &tree, spec.size, spec.params.resources,
@@ -459,33 +488,37 @@ impl SimTask for NewsvendorTask {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
                 let mut backend = XlaNv::new(engine, &inst, p.samples)?;
-                trees
-                    .iter()
-                    .enumerate()
-                    .map(|(r, sub)| {
-                        let mut lmo = NvLmo::new(&inst);
-                        let (_, trace) = frank_wolfe::run_nv_ctl(
-                            &mut backend, &mut lmo, x0.clone(), p.iters,
-                            p.m_inner, sub, r, sink)?;
-                        Ok(RepRecord::from_fw(trace))
-                    })
-                    .collect()
+                let mut prof = Profiler::new();
+                let mut records = Vec::with_capacity(spec.reps);
+                for (r, sub) in trees.iter().enumerate() {
+                    let mut lmo = NvLmo::new(&inst);
+                    let (_, trace) = frank_wolfe::run_nv_ctl(
+                        &mut backend, &mut lmo, x0.clone(), p.iters,
+                        p.m_inner, sub, r, sink)?;
+                    prof.merge(&trace.profile);
+                    records.push(RepRecord::from_fw(trace));
+                }
+                Ok((records, prof))
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
                 let shared = Mutex::new(sink);
-                parallel_map(spec.reps, cx.native_threads, |r| {
-                    let mut backend =
-                        NativeNv::new(inst.clone(), p.samples, mode);
-                    let mut lmo = NvLmo::new(&inst);
-                    let mut sink = SharedSink(&shared);
-                    frank_wolfe::run_nv_ctl(&mut backend, &mut lmo,
-                                            x0.clone(), p.iters, p.m_inner,
-                                            &trees[r], r, &mut sink)
-                        .map(|(_, t)| RepRecord::from_fw(t))
-                })
-                .into_iter()
-                .collect()
+                let results =
+                    parallel_map(spec.reps, cx.native_threads, |r| {
+                        let mut backend =
+                            NativeNv::new(inst.clone(), p.samples, mode);
+                        let mut lmo = NvLmo::new(&inst);
+                        let mut sink = SharedSink(&shared);
+                        frank_wolfe::run_nv_ctl(&mut backend, &mut lmo,
+                                                x0.clone(), p.iters,
+                                                p.m_inner, &trees[r], r,
+                                                &mut sink)
+                            .map(|(_, t)| {
+                                let p = t.profile;
+                                (RepRecord::from_fw(t), p)
+                            })
+                    });
+                collect_seq(results, spec.reps)
             }
         }
     }
@@ -533,6 +566,7 @@ impl SimTask for NewsvendorTask {
                 .collect(),
             frozen: out.frozen,
             early_stop: out.early_stop,
+            profile: out.profile,
         })
     }
 }
@@ -642,7 +676,8 @@ impl SimTask for ClassificationTask {
     }
 
     fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
+               sink: &mut dyn ProgressSink)
+        -> Result<(Vec<RepRecord>, Profiler)> {
         let tree = StreamTree::new(spec.seed);
         let data = ClassifyData::generate(&tree, spec.size);
         let cfg = Self::sqn_config(spec);
@@ -654,29 +689,32 @@ impl SimTask for ClassificationTask {
                 let mut backend = XlaLr::new(engine, &data, p.batch,
                                              p.hbatch, p.memory,
                                              spec.hessian_mode)?;
-                trees
-                    .iter()
-                    .enumerate()
-                    .map(|(r, sub)| {
-                        let (_, trace) = sqn::run_sqn_ctl(
-                            &mut backend, &data, &cfg, sub, r, sink)?;
-                        Ok(RepRecord::from_sqn(trace))
-                    })
-                    .collect()
+                let mut prof = Profiler::new();
+                let mut records = Vec::with_capacity(spec.reps);
+                for (r, sub) in trees.iter().enumerate() {
+                    let (_, trace) = sqn::run_sqn_ctl(
+                        &mut backend, &data, &cfg, sub, r, sink)?;
+                    prof.merge(&trace.profile);
+                    records.push(RepRecord::from_sqn(trace));
+                }
+                Ok((records, prof))
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
                 let shared = Mutex::new(sink);
-                parallel_map(spec.reps, cx.native_threads, |r| {
-                    let mut backend =
-                        NativeLr::new(&data, mode, spec.hessian_mode);
-                    let mut sink = SharedSink(&shared);
-                    sqn::run_sqn_ctl(&mut backend, &data, &cfg, &trees[r],
-                                     r, &mut sink)
-                        .map(|(_, t)| RepRecord::from_sqn(t))
-                })
-                .into_iter()
-                .collect()
+                let results =
+                    parallel_map(spec.reps, cx.native_threads, |r| {
+                        let mut backend =
+                            NativeLr::new(&data, mode, spec.hessian_mode);
+                        let mut sink = SharedSink(&shared);
+                        sqn::run_sqn_ctl(&mut backend, &data, &cfg,
+                                         &trees[r], r, &mut sink)
+                            .map(|(_, t)| {
+                                let p = t.profile;
+                                (RepRecord::from_sqn(t), p)
+                            })
+                    });
+                collect_seq(results, spec.reps)
             }
         }
     }
@@ -719,6 +757,7 @@ impl SimTask for ClassificationTask {
                 .collect(),
             frozen: out.frozen,
             early_stop: out.early_stop,
+            profile: out.profile,
         })
     }
 
@@ -821,7 +860,8 @@ impl SimTask for MeanCvarTask {
     }
 
     fn run_seq(&self, cx: &mut Coordinator, spec: &ExperimentSpec,
-               sink: &mut dyn ProgressSink) -> Result<Vec<RepRecord>> {
+               sink: &mut dyn ProgressSink)
+        -> Result<(Vec<RepRecord>, Profiler)> {
         let tree = StreamTree::new(spec.seed);
         let universe = AssetUniverse::generate(&tree, spec.size);
         let p = &spec.params;
@@ -832,31 +872,33 @@ impl SimTask for MeanCvarTask {
                 let engine = cx.engine()?;
                 let mut backend =
                     XlaCvar::new(engine, &universe, p.samples, p.m_inner)?;
-                trees
-                    .iter()
-                    .enumerate()
-                    .map(|(r, sub)| {
-                        let (_, trace) = frank_wolfe::run_mv_ctl(
-                            &mut backend, x0.clone(), p.iters, sub, r,
-                            sink)?;
-                        Ok(RepRecord::from_fw(trace))
-                    })
-                    .collect()
+                let mut prof = Profiler::new();
+                let mut records = Vec::with_capacity(spec.reps);
+                for (r, sub) in trees.iter().enumerate() {
+                    let (_, trace) = frank_wolfe::run_mv_ctl(
+                        &mut backend, x0.clone(), p.iters, sub, r, sink)?;
+                    prof.merge(&trace.profile);
+                    records.push(RepRecord::from_fw(trace));
+                }
+                Ok((records, prof))
             }
             b => {
                 let mode = native_mode(b, cx.native_threads);
                 let shared = Mutex::new(sink);
-                parallel_map(spec.reps, cx.native_threads, |r| {
-                    let mut backend = NativeCvar::new(
-                        universe.clone(), p.samples, p.m_inner, mode);
-                    let mut sink = SharedSink(&shared);
-                    frank_wolfe::run_mv_ctl(&mut backend, x0.clone(),
-                                            p.iters, &trees[r], r,
-                                            &mut sink)
-                        .map(|(_, t)| RepRecord::from_fw(t))
-                })
-                .into_iter()
-                .collect()
+                let results =
+                    parallel_map(spec.reps, cx.native_threads, |r| {
+                        let mut backend = NativeCvar::new(
+                            universe.clone(), p.samples, p.m_inner, mode);
+                        let mut sink = SharedSink(&shared);
+                        frank_wolfe::run_mv_ctl(&mut backend, x0.clone(),
+                                                p.iters, &trees[r], r,
+                                                &mut sink)
+                            .map(|(_, t)| {
+                                let p = t.profile;
+                                (RepRecord::from_fw(t), p)
+                            })
+                    });
+                collect_seq(results, spec.reps)
             }
         }
     }
@@ -901,6 +943,7 @@ impl SimTask for MeanCvarTask {
                 .collect(),
             frozen: out.frozen,
             early_stop: out.early_stop,
+            profile: out.profile,
         })
     }
 }

@@ -11,10 +11,12 @@
 //! * [`stats`] — streaming moments, confidence intervals, RSE traces
 //! * [`prop`] — miniature property-based testing harness
 //! * [`timer`] — monotonic timing helpers used by the bench harness
+//! * [`profile`] — the always-on per-phase profiler (DESIGN.md §15)
 
 pub mod cli;
 pub mod json;
 pub mod pool;
+pub mod profile;
 pub mod prop;
 pub mod stats;
 pub mod timer;

@@ -1,0 +1,228 @@
+//! Always-on per-phase profiling (DESIGN.md §15).
+//!
+//! Every run attributes its wall-clock to a fixed taxonomy of six phases.
+//! The accumulator is a plain `[f64; 6]` — adding a sample is one array
+//! store, reading the monotonic clock is the only real cost, and every
+//! probe *read* (draining a backend's accumulator, serializing totals)
+//! happens outside the timed regions, so profiling never perturbs the
+//! optimization arithmetic or the recorded step timings beyond the
+//! nanosecond-scale clock reads themselves.
+//!
+//! Attribution is cooperative and drain-based: backends accumulate their
+//! own dispatch/compute/reduce splits into a private [`Profiler`] and
+//! expose it via `take_profile` (drain semantics — returns everything
+//! accumulated since the last drain and resets), and the driver-level
+//! hooks drain at phase boundaries so no interval is ever counted twice.
+
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::util::json::{num, obj, Value};
+
+/// The fixed phase taxonomy (DESIGN.md §15).
+///
+/// * `Dispatch` — staging, slicing, buffer uploads, key routing: the work
+///   of getting a kernel launched (the overhead Lee et al. show dominates
+///   at small batch sizes).
+/// * `Compute` — the kernel itself (MC panel simulation, gradients, HVPs).
+/// * `Reduce` — copy-out, merging shard outputs, objective reduction.
+/// * `Lmo` — host-side LMO solves (the newsvendor LP).
+/// * `Direction` — the Algorithm-4 two-loop / explicit H·g application.
+/// * `FreezeCheck` — the adaptive-budget checkpoint logic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Dispatch,
+    Compute,
+    Reduce,
+    Lmo,
+    Direction,
+    FreezeCheck,
+}
+
+impl Phase {
+    /// Every phase, in canonical wire order.
+    pub const ALL: [Phase; 6] = [
+        Phase::Dispatch,
+        Phase::Compute,
+        Phase::Reduce,
+        Phase::Lmo,
+        Phase::Direction,
+        Phase::FreezeCheck,
+    ];
+
+    /// Canonical wire / report name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Dispatch => "dispatch",
+            Phase::Compute => "compute",
+            Phase::Reduce => "reduce",
+            Phase::Lmo => "lmo",
+            Phase::Direction => "direction",
+            Phase::FreezeCheck => "freeze_check",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        Phase::ALL.iter().copied().find(|p| p.as_str() == s)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Phase::Dispatch => 0,
+            Phase::Compute => 1,
+            Phase::Reduce => 2,
+            Phase::Lmo => 3,
+            Phase::Direction => 4,
+            Phase::FreezeCheck => 5,
+        }
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-phase wall-clock accumulator.  `Copy` on purpose: a step's profile
+/// rides a [`crate::opt::StepEvent`] by value, and merging is six adds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Profiler {
+    totals: [f64; 6],
+}
+
+impl Profiler {
+    pub fn new() -> Self {
+        Profiler::default()
+    }
+
+    /// Accumulate `secs` into `phase`.  Negative or non-finite samples
+    /// (clock noise on near-zero residuals) are dropped, never subtracted.
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        if secs.is_finite() && secs > 0.0 {
+            self.totals[phase.index()] += secs;
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.totals[phase.index()]
+    }
+
+    /// Sum over every phase.
+    pub fn sum(&self) -> f64 {
+        self.totals.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.totals.iter().all(|&t| t == 0.0)
+    }
+
+    pub fn merge(&mut self, other: &Profiler) {
+        for (a, b) in self.totals.iter_mut().zip(&other.totals) {
+            *a += b;
+        }
+    }
+
+    /// Drain: return everything accumulated since the last drain and
+    /// reset.  Backends expose their splits this way so a caller that
+    /// also timed the enclosing wall can attribute the residual without
+    /// double counting.
+    pub fn take(&mut self) -> Profiler {
+        std::mem::take(self)
+    }
+
+    /// `{"dispatch": s, ...}` with zero phases omitted, in canonical
+    /// phase order — deterministic for byte-diffing payloads.
+    pub fn to_json(&self) -> Value {
+        obj(Phase::ALL
+            .iter()
+            .filter(|p| self.get(**p) != 0.0)
+            .map(|p| (p.as_str(), num(self.get(*p))))
+            .collect())
+    }
+
+    /// Parse a `per_phase` object.  Unknown keys are ignored (forward
+    /// compatibility: a newer producer may know more phases).
+    pub fn from_json(v: &Value) -> Result<Profiler> {
+        let entries = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("per_phase must be an object"))?;
+        let mut prof = Profiler::new();
+        for (key, val) in entries {
+            if let Some(phase) = Phase::parse(key) {
+                let secs = val.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("phase '{}' must be a number", key)
+                })?;
+                prof.add(phase, secs);
+            }
+        }
+        Ok(prof)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_roundtrip_their_names() {
+        for p in Phase::ALL {
+            assert_eq!(Phase::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Phase::parse("warp_drive"), None);
+    }
+
+    #[test]
+    fn add_merge_take_accumulate_and_drain() {
+        let mut a = Profiler::new();
+        assert!(a.is_empty());
+        a.add(Phase::Compute, 1.5);
+        a.add(Phase::Compute, 0.5);
+        a.add(Phase::Lmo, 0.25);
+        // negative / non-finite samples are dropped, not subtracted
+        a.add(Phase::Compute, -4.0);
+        a.add(Phase::Reduce, f64::NAN);
+        assert_eq!(a.get(Phase::Compute), 2.0);
+        assert_eq!(a.get(Phase::Reduce), 0.0);
+        assert_eq!(a.sum(), 2.25);
+
+        let mut b = Profiler::new();
+        b.add(Phase::Lmo, 0.75);
+        a.merge(&b);
+        assert_eq!(a.get(Phase::Lmo), 1.0);
+
+        let drained = a.take();
+        assert_eq!(drained.get(Phase::Compute), 2.0);
+        assert!(a.is_empty(), "take must reset the accumulator");
+    }
+
+    #[test]
+    fn json_roundtrips_nonzero_phases_in_canonical_order() {
+        let mut p = Profiler::new();
+        p.add(Phase::Reduce, 0.125);
+        p.add(Phase::Dispatch, 2.5);
+        let v = p.to_json();
+        // canonical order: dispatch before reduce, zero phases omitted
+        assert_eq!(v.to_string_compact(),
+                   "{\"dispatch\":2.5,\"reduce\":0.125}");
+        let back = Profiler::from_json(&v).unwrap();
+        assert_eq!(back, p);
+        // empty profile serializes to an empty object
+        assert_eq!(Profiler::new().to_json().to_string_compact(), "{}");
+        assert!(Profiler::from_json(&Profiler::new().to_json())
+            .unwrap()
+            .is_empty());
+    }
+
+    #[test]
+    fn from_json_ignores_unknown_phases_and_rejects_non_numbers() {
+        let v = Value::parse("{\"compute\": 1.0, \"quantum\": 9.0}").unwrap();
+        let p = Profiler::from_json(&v).unwrap();
+        assert_eq!(p.get(Phase::Compute), 1.0);
+        assert_eq!(p.sum(), 1.0);
+        let bad = Value::parse("{\"compute\": \"fast\"}").unwrap();
+        assert!(Profiler::from_json(&bad).is_err());
+        assert!(Profiler::from_json(&Value::parse("[]").unwrap()).is_err());
+    }
+}

@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::thread::JoinHandle;
 
 use simopt::config::{BudgetPolicy, ExecMode};
-use simopt::coordinator::Coordinator;
+use simopt::coordinator::{Coordinator, ExperimentSpec};
 use simopt::service::protocol::{read_frame, write_frame};
 use simopt::service::{Client, Response, Server, ServerConfig, ServerStats,
                       PROTOCOL_VERSION};
@@ -63,6 +63,19 @@ fn shut_down(socket: &PathBuf, handle: JoinHandle<ServerStats>)
     handle.join().unwrap()
 }
 
+/// One non-streaming submission over the Session API — the suite's only
+/// submit path; the deprecated `Client::submit`/`submit_with` wrappers are
+/// exercised solely by `deprecated_submit_wrappers_still_speak_the_\
+/// session_grammar`.
+fn submit(socket: &PathBuf, spec: &ExperimentSpec) -> Response {
+    Client::connect(socket)
+        .unwrap()
+        .session(spec, false)
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
 #[test]
 fn served_results_are_bitwise_identical_to_direct_runs_for_every_task() {
     let (socket, handle) = spawn_server("conf", 1, 8);
@@ -75,8 +88,7 @@ fn served_results_are_bitwise_identical_to_direct_runs_for_every_task() {
             spec.reps = 3; // makes shards=2 an uneven 2+1 split
             spec.exec = exec;
             let want = direct.run(&spec).unwrap();
-            let mut client = Client::connect(&socket).unwrap();
-            match client.submit(&spec).unwrap() {
+            match submit(&socket, &spec) {
                 Response::Completed { cache_hit, result, .. } => {
                     assert!(!cache_hit, "task {} exec {:?}: first \
                              submission cannot hit the cache",
@@ -113,8 +125,7 @@ fn repeat_submission_answers_from_the_cache_without_reexecution() {
     let (socket, handle) = spawn_server("cache", 1, 4);
     for task in registry::all() {
         let spec = task.smoke_spec();
-        let first = match Client::connect(&socket).unwrap()
-            .submit(&spec).unwrap() {
+        let first = match submit(&socket, &spec) {
             Response::Completed { cache_hit, result, .. } => {
                 assert!(!cache_hit, "task {}", task.name());
                 result
@@ -122,7 +133,7 @@ fn repeat_submission_answers_from_the_cache_without_reexecution() {
             other => panic!("{:?}", other),
         };
         // identical spec → served from the cache, payload identical
-        match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        match submit(&socket, &spec) {
             Response::Completed { cache_hit, result, .. } => {
                 assert!(cache_hit, "task {}: resubmission must hit",
                         task.name());
@@ -140,8 +151,7 @@ fn repeat_submission_answers_from_the_cache_without_reexecution() {
         let _ = std::fs::remove_dir_all(&reloc_dir);
         let relocated =
             spec.clone().results_dir(&reloc_dir.to_string_lossy());
-        match Client::connect(&socket).unwrap()
-            .submit(&relocated).unwrap() {
+        match submit(&socket, &relocated) {
             Response::Completed { cache_hit, result, .. } => {
                 assert!(cache_hit, "task {}: results_dir must not change \
                          the cache key", task.name());
@@ -160,8 +170,7 @@ fn repeat_submission_answers_from_the_cache_without_reexecution() {
                  {}", task.name(), bundle.display());
         // a different seed is different content — miss
         let reseeded = spec.clone().seed(spec.seed + 1);
-        match Client::connect(&socket).unwrap()
-            .submit(&reseeded).unwrap() {
+        match submit(&socket, &reseeded) {
             Response::Completed { cache_hit, .. } => {
                 assert!(!cache_hit, "task {}", task.name());
             }
@@ -180,7 +189,7 @@ fn full_queue_answers_typed_busy_instead_of_hanging() {
     // capacity 0 admits nothing: the deterministic backpressure arm
     let (socket, handle) = spawn_server("busy", 1, 0);
     let spec = registry::all().next().unwrap().smoke_spec();
-    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+    match submit(&socket, &spec) {
         Response::Busy { capacity } => assert_eq!(capacity, 0),
         other => panic!("expected busy, got {:?}", other),
     }
@@ -200,7 +209,7 @@ fn invalid_and_malformed_submissions_answer_typed_errors() {
     // semantically invalid: reps == 0 fails spec validation server-side
     let mut spec = registry::all().next().unwrap().smoke_spec();
     spec.reps = 0;
-    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+    match submit(&socket, &spec) {
         Response::Error { message } => {
             assert!(message.contains("reps"), "{}", message)
         }
@@ -209,7 +218,7 @@ fn invalid_and_malformed_submissions_answer_typed_errors() {
     // shards > reps dies at validation too, as a frame, not a hang
     let mut spec = registry::all().next().unwrap().smoke_spec();
     spec.exec = ExecMode::Batched { shards: 9 };
-    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+    match submit(&socket, &spec) {
         Response::Error { message } => {
             assert!(message.contains("shards"), "{}", message)
         }
@@ -235,7 +244,7 @@ fn status_counters_track_the_conversation() {
     assert_eq!(st.capacity, 4);
     let spec = registry::all().next().unwrap().smoke_spec();
     for _ in 0..2 {
-        match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        match submit(&socket, &spec) {
             Response::Completed { .. } => {}
             other => panic!("{:?}", other),
         }
@@ -244,6 +253,41 @@ fn status_counters_track_the_conversation() {
     assert_eq!(st.executed, 1, "one execution, one cache hit");
     assert_eq!(st.cache_hits, 1);
     assert_eq!(st.cache_entries, 1);
+    // the structured stats object (protocol v2): per-worker counters and
+    // aggregate per-phase seconds from the always-on profiler
+    assert_eq!(st.per_worker.len(), 1);
+    assert_eq!(st.per_worker[0].executed, 1);
+    assert_eq!(st.per_worker[0].cache_hits, 0,
+               "the repeat answered from the handler fast path, which \
+                counts only in the global cache totals");
+    assert!(!st.per_phase.is_empty(),
+            "an executed run must leave per-phase seconds behind");
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, 1);
+    assert_eq!(stats.cache_hits, 1);
+}
+
+#[test]
+fn deprecated_submit_wrappers_still_speak_the_session_grammar() {
+    // `Client::submit` / `submit_with` are doc-deprecated conveniences
+    // kept for external callers; this is their single remaining exercise
+    // — every other submission in the suite rides the Session API.
+    let (socket, handle) = spawn_server("compat", 1, 4);
+    let spec = registry::all().next().unwrap().smoke_spec();
+    let mut queued = 0usize;
+    match Client::connect(&socket).unwrap()
+        .submit_with(&spec, |_, _| queued += 1).unwrap() {
+        Response::Completed { cache_hit, .. } => assert!(!cache_hit),
+        other => panic!("{:?}", other),
+    }
+    assert_eq!(queued, 1, "the wrapper must surface the queued ack");
+    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+        Response::Completed { cache_hit, result, .. } => {
+            assert!(cache_hit, "wrappers share the session cache path");
+            assert_eq!(result.spec.task, spec.task);
+        }
+        other => panic!("{:?}", other),
+    }
     let stats = shut_down(&socket, handle);
     assert_eq!(stats.executed, 1);
     assert_eq!(stats.cache_hits, 1);
@@ -437,7 +481,7 @@ fn truncated_frames_and_unknown_keys_do_not_wedge_the_server() {
     assert_eq!(ans.get("type").and_then(Value::as_str), Some("status"));
     // and the server is still fully operational afterwards
     let spec = registry::all().next().unwrap().smoke_spec();
-    match Client::connect(&socket).unwrap().submit(&spec).unwrap() {
+    match submit(&socket, &spec) {
         Response::Completed { .. } => {}
         other => panic!("{:?}", other),
     }
