@@ -164,6 +164,83 @@ def test_merged_history_dirs_order_by_ci_run(tmp_path):
     assert series[("bs", "case", True)] == [("old", 1.0), ("new", 2.0)]
 
 
+def test_phase_budget_violation_fires_on_share_growth():
+    # reduce share 10% → 30%: +20pp breaks the default 5pp budget even
+    # though the absolute compute seconds barely moved
+    series = {("bs", "case", True): [
+        ("a", {"compute": 0.9, "reduce": 0.1}),
+        ("b", {"compute": 0.88, "reduce": 0.12}),
+        ("c", {"compute": 0.7, "reduce": 0.3}),
+    ]}
+    out = tj.detect_phase_budget_violations(series, budget_pp=5.0,
+                                            min_history=3)
+    assert len(out) == 1
+    v = out[0]
+    assert (v["phase"], v["commit"]) == ("reduce", "c")
+    assert abs(v["baseline_share"] - 0.11) < 1e-9
+    assert abs(v["last_share"] - 0.3) < 1e-9
+    # a wider budget absorbs the same move
+    assert tj.detect_phase_budget_violations(series, budget_pp=25.0,
+                                             min_history=3) == []
+
+
+def test_phase_budget_passes_within_budget_or_short_history():
+    flat = {("bs", "case", True): [
+        ("a", {"compute": 0.9, "reduce": 0.1}),
+        ("b", {"compute": 0.9, "reduce": 0.1}),
+        ("c", {"compute": 0.89, "reduce": 0.11}),
+    ]}
+    assert tj.detect_phase_budget_violations(flat) == []
+    # two points only: advisory pass regardless of the jump
+    short = {("bs", "case", True): [
+        ("a", {"compute": 1.0, "reduce": 0.0}),
+        ("b", {"compute": 0.5, "reduce": 0.5}),
+    ]}
+    assert tj.detect_phase_budget_violations(short) == []
+
+
+def test_phase_budget_zero_attribution_runs_contribute_no_point():
+    # an all-zero per_phase object has no shares to compare; it must
+    # neither divide by zero nor count toward min_history
+    series = {("bs", "case", True): [
+        ("a", {"compute": 0.0, "reduce": 0.0}),
+        ("b", {"compute": 0.9, "reduce": 0.1}),
+        ("c", {"compute": 0.5, "reduce": 0.5}),
+    ]}
+    assert tj.detect_phase_budget_violations(series, min_history=3) == []
+
+
+def test_phase_budget_handles_phase_missing_from_baseline():
+    # a phase that first appears in the newest run has baseline share 0 —
+    # it must still be budget-checked, not crash on the missing key
+    series = {("bs", "case", True): [
+        ("a", {"compute": 1.0}),
+        ("b", {"compute": 1.0}),
+        ("c", {"compute": 0.8, "reduce": 0.2}),
+    ]}
+    out = tj.detect_phase_budget_violations(series, budget_pp=5.0,
+                                            min_history=3)
+    assert [v["phase"] for v in out] == ["reduce"]
+    assert out[0]["baseline_share"] == 0.0
+
+
+def test_main_exits_1_on_phase_budget_violation(tmp_path, capsys):
+    # total mean_s is flat (the σ gate stays quiet) but the reduce share
+    # creeps from 5% to 40% — exactly the merge-copy regression the
+    # budget exists to catch (DESIGN.md §16)
+    for run, reduce_s in ((1, 0.05), (2, 0.05), (3, 0.40)):
+        _write(tmp_path, f"BENCH_{run}.json", "bs", f"c{run}", run,
+               {"case": 1.0},
+               phases={"case": {"compute": 1.0 - reduce_s,
+                                "reduce": reduce_s}})
+    assert tj.main([str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "phase-budget" in out
+    assert "reduce" in out
+    # widening the budget clears the gate
+    assert tj.main([str(tmp_path), "--phase-budget-pp", "90"]) == 0
+
+
 def test_merged_history_gates_on_the_newest_run(tmp_path):
     # End-to-end over a merged history tree: three healthy runs then a
     # regressed newest run in a lexically-early directory must exit 1.

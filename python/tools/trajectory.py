@@ -15,6 +15,13 @@ Cases whose telemetry carries a ``per_phase`` object (the always-on
 profiler of DESIGN.md §15) additionally get per-phase trend rows, so a
 regression can be read down to the phase that moved — dispatch growing
 while compute holds is a very different bug from compute growing.
+Those cases are also held to a per-phase REGRESSION BUDGET: when a
+phase's share of the case's attributed time grows by more than
+``--phase-budget-pp`` percentage points over its baseline mean share,
+the build fails even if total mean_s held — that is exactly how a
+reduce/merge copy creeps back into a zero-copy spine (DESIGN.md §16)
+while faster kernels mask it.  Like the σ gate, the budget needs
+``--min-history`` points per case; shorter histories pass advisorily.
 
 Runs are ordered by ``ci_run`` id when present (GitHub run ids are
 monotonic), else by file modification time, so both a directory of
@@ -176,6 +183,45 @@ def detect_regressions(series, sigma=2.0, rel_margin=1.05, min_history=3):
     return out
 
 
+def detect_phase_budget_violations(phase_series, budget_pp=5.0,
+                                   min_history=3):
+    """Cases where a phase's share of the attributed total grew by more
+    than `budget_pp` percentage points over the baseline mean share
+    (history excluding the newest run).  Shares, not seconds: absolute
+    phase times legitimately move with the workload, but the SPLIT
+    between dispatch/compute/reduce is a structural property of the
+    execution spine.  Needs `min_history` total points per case, so a
+    cold history passes advisorily; runs whose phases sum to zero carry
+    no attribution and contribute no point."""
+    out = []
+    for key, hist in sorted(phase_series.items()):
+        shares = []
+        for commit, phases in hist:
+            total = sum(phases.values())
+            if total > 0:
+                shares.append(
+                    (commit, {p: v / total for p, v in phases.items()}))
+        if len(shares) < min_history:
+            continue
+        prev = [s for _, s in shares[:-1]]
+        last_commit, last = shares[-1]
+        names = sorted({p for s in prev for p in s} | set(last))
+        for phase in names:
+            base = sum(s.get(phase, 0.0) for s in prev) / len(prev)
+            now = last.get(phase, 0.0)
+            if (now - base) * 100.0 > budget_pp:
+                out.append({
+                    "bench": key[0],
+                    "label": key[1],
+                    "smoke": key[2],
+                    "commit": last_commit,
+                    "phase": phase,
+                    "last_share": now,
+                    "baseline_share": base,
+                })
+    return out
+
+
 def fmt_s(v):
     if v < 1e-3:
         return f"{v * 1e6:.1f}µs"
@@ -228,6 +274,9 @@ def main(argv=None):
                     help="additional relative guard (default 1.05 = +5%%)")
     ap.add_argument("--min-history", type=int, default=3,
                     help="points needed before a case can regress")
+    ap.add_argument("--phase-budget-pp", type=float, default=5.0,
+                    help="max growth of a phase's share of attributed "
+                         "time, in percentage points (default 5)")
     args = ap.parse_args(argv)
 
     files = find_files(args.roots)
@@ -240,7 +289,8 @@ def main(argv=None):
     print(f"[trajectory] {len(files)} telemetry files, {len(runs)} runs, "
           f"{len(series)} case series\n")
     print(render_table(series))
-    phase_table = render_phase_table(phase_series_by_case(runs))
+    phase_series = phase_series_by_case(runs)
+    phase_table = render_phase_table(phase_series)
     if phase_table:
         print("\nper-phase attribution trends:\n" + phase_table)
 
@@ -254,8 +304,21 @@ def main(argv=None):
             print(f"  {r['bench']} / {r['label']}{tag} @ {r['commit']}: "
                   f"{fmt_s(r['last'])} vs baseline "
                   f"{fmt_s(r['baseline_mean'])} ±{fmt_s(r['baseline_std'])}")
+    violations = detect_phase_budget_violations(
+        phase_series, budget_pp=args.phase_budget_pp,
+        min_history=args.min_history)
+    if violations:
+        print(f"\n{len(violations)} phase-budget violation(s) "
+              f"> {args.phase_budget_pp}pp:")
+        for v in violations:
+            tag = " [smoke]" if v["smoke"] else ""
+            print(f"  {v['bench']} / {v['label']}{tag} @ {v['commit']}: "
+                  f"{v['phase']} share {v['last_share'] * 100:.1f}% vs "
+                  f"baseline {v['baseline_share'] * 100:.1f}% "
+                  f"(+{(v['last_share'] - v['baseline_share']) * 100:.1f}pp)")
+    if regressions or violations:
         return 1
-    print("\nno regressions beyond the threshold")
+    print("\nno regressions beyond the thresholds")
     return 0
 
 

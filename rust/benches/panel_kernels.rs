@@ -1,0 +1,332 @@
+//! Zero-copy native panel kernels vs the legacy owned-rows pattern
+//! (DESIGN.md §16): one epoch of every native batch arm, per-phase.
+//!
+//! Each task pairs two cells at the same R×n shape:
+//! * `*_zero_copy` — the shipped spine: `Native*Batch` hands every worker
+//!   disjoint `&mut` windows of the output panel, per-row scratch lives in
+//!   backend arenas, and nothing is copied after the kernels return.  The
+//!   whole wall books as `compute`; there is no reduce phase to book.
+//! * `*_legacy_merge` — the pre-§16 shape, reconstructed: every row
+//!   builds an owned `Vec` result through the allocating per-replication
+//!   entry points, then a merge pass copies the rows back into the panel.
+//!   The merge copy books as `reduce`, so the reduce-share drop of the
+//!   zero-copy arm is directly visible in `BENCH_panel_kernels.json`.
+//!
+//! Both arms run the bit-identical per-row arithmetic (asserted on the
+//! final panels), and both run single-threaded so the comparison isolates
+//! allocation + copy-back cost, not scheduling.
+//!
+//! Knobs: SIMOPT_BENCH_EPOCHS (epochs per cell, default 8).
+
+mod common;
+
+use simopt::backend::native::{
+    NativeCvar, NativeCvarBatch, NativeLr, NativeLrBatch, NativeMode,
+    NativeMv, NativeMvBatch, NativeNv, NativeNvBatch,
+};
+use simopt::backend::{
+    HessianMode, LrBackend, LrBatchBackend, MvBackend, MvBatchBackend,
+    NvBackend, NvBatchBackend,
+};
+use simopt::backend::plane::tile_rows;
+use simopt::bench::Bench;
+use simopt::coordinator::rep_subtrees;
+use simopt::rng::StreamTree;
+use simopt::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use simopt::tasks::cvar;
+use simopt::util::profile::{Phase, Profiler};
+use simopt::util::timer::Timer;
+
+/// Reduce share of a drained profile, for the end-of-run summary.
+fn reduce_share(prof: &Profiler) -> f64 {
+    let total = prof.sum();
+    if total > 0.0 {
+        prof.get(Phase::Reduce) / total
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let epochs =
+        if smoke { 2 } else { common::env_usize("SIMOPT_BENCH_EPOCHS", 8) };
+    // (d, R) cells: small and medium replication panels
+    let shapes: Vec<(usize, usize)> =
+        if smoke { vec![(16, 4)] } else { vec![(16, 4), (96, 8)] };
+    let (n_samples, m_inner) = (64usize, 10usize);
+
+    println!("panel_kernels: {} epochs per cell, single-threaded, \
+              shapes {:?}\n", epochs, shapes);
+    // every cell records its own per-epoch samples via record_profiled,
+    // so the harness-level warmup/reps protocol is unused here
+    let mut bench = Bench::new("panel_kernels");
+    // (label, legacy reduce share, zero-copy reduce share)
+    let mut summary: Vec<(String, f64, f64)> = Vec::new();
+
+    for &(d, r) in &shapes {
+        // ---- Task 1: mean-variance epochs --------------------------------
+        let tree = StreamTree::new(71);
+        let trees = rep_subtrees(&tree, r);
+        let u = AssetUniverse::generate(&tree, d);
+        let w0 = vec![1.0f32 / d as f32; d];
+
+        let mut panel = tile_rows(&w0, r);
+        let mut objs = vec![0.0f64; r];
+        let mut batch = NativeMvBatch::new(&u, n_samples, m_inner, r, 1);
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let keys: Vec<[u32; 2]> =
+                trees.iter().map(|t| t.jax_key(&[k as u64])).collect();
+            let t = Timer::start();
+            batch.epoch_batch(&mut panel, k, &keys, &mut objs).unwrap();
+            samples.push(t.elapsed_s());
+            if let Some(p) = batch.take_profile() {
+                prof.merge(&p);
+            }
+        }
+        let zc_share = reduce_share(&prof);
+        bench.record_profiled(&format!("mv_zero_copy_d{}_R{}", d, r),
+                              &samples, prof);
+
+        let mut rows: Vec<NativeMv> = (0..r)
+            .map(|_| NativeMv::new(u.clone(), n_samples, m_inner,
+                                   NativeMode::Sequential))
+            .collect();
+        let mut lpanel = tile_rows(&w0, r);
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let keys: Vec<[u32; 2]> =
+                trees.iter().map(|t| t.jax_key(&[k as u64])).collect();
+            let t = Timer::start();
+            let t_c = Timer::start();
+            let out: Vec<(Vec<f32>, f64)> = rows
+                .iter_mut()
+                .enumerate()
+                .map(|(i, rep)| {
+                    rep.epoch(&lpanel[i * d..(i + 1) * d], k, keys[i])
+                        .unwrap()
+                })
+                .collect();
+            prof.add(Phase::Compute, t_c.elapsed_s());
+            let t_m = Timer::start();
+            for (i, (row, _)) in out.iter().enumerate() {
+                lpanel[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+            prof.add(Phase::Reduce, t_m.elapsed_s());
+            samples.push(t.elapsed_s());
+        }
+        let legacy_share = reduce_share(&prof);
+        bench.record_profiled(&format!("mv_legacy_merge_d{}_R{}", d, r),
+                              &samples, prof);
+        assert_eq!(panel, lpanel, "mv d={} R={}: zero-copy != legacy", d, r);
+        summary.push((format!("mv_d{}_R{}", d, r), legacy_share, zc_share));
+
+        // ---- Task 4: mean-CVaR epochs (joint [w, t] rows) ----------------
+        let row_len = d + 1;
+        let x0 = cvar::start_iterate(d);
+        let mut panel = tile_rows(&x0, r);
+        let mut batch = NativeCvarBatch::new(&u, n_samples, m_inner, r, 1);
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let keys: Vec<[u32; 2]> =
+                trees.iter().map(|t| t.jax_key(&[k as u64])).collect();
+            let t = Timer::start();
+            batch.epoch_batch(&mut panel, k, &keys, &mut objs).unwrap();
+            samples.push(t.elapsed_s());
+            if let Some(p) = batch.take_profile() {
+                prof.merge(&p);
+            }
+        }
+        let zc_share = reduce_share(&prof);
+        bench.record_profiled(&format!("cvar_zero_copy_d{}_R{}", d, r),
+                              &samples, prof);
+
+        let mut rows: Vec<NativeCvar> = (0..r)
+            .map(|_| NativeCvar::new(u.clone(), n_samples, m_inner,
+                                     NativeMode::Sequential))
+            .collect();
+        let mut lpanel = tile_rows(&x0, r);
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let keys: Vec<[u32; 2]> =
+                trees.iter().map(|t| t.jax_key(&[k as u64])).collect();
+            let t = Timer::start();
+            let t_c = Timer::start();
+            let out: Vec<(Vec<f32>, f64)> = rows
+                .iter_mut()
+                .enumerate()
+                .map(|(i, rep)| {
+                    rep.epoch(&lpanel[i * row_len..(i + 1) * row_len], k,
+                              keys[i])
+                        .unwrap()
+                })
+                .collect();
+            prof.add(Phase::Compute, t_c.elapsed_s());
+            let t_m = Timer::start();
+            for (i, (row, _)) in out.iter().enumerate() {
+                lpanel[i * row_len..(i + 1) * row_len]
+                    .copy_from_slice(row);
+            }
+            prof.add(Phase::Reduce, t_m.elapsed_s());
+            samples.push(t.elapsed_s());
+        }
+        let legacy_share = reduce_share(&prof);
+        bench.record_profiled(&format!("cvar_legacy_merge_d{}_R{}", d, r),
+                              &samples, prof);
+        assert_eq!(panel, lpanel, "cvar d={} R={}: zero-copy != legacy",
+                   d, r);
+        summary.push((format!("cvar_d{}_R{}", d, r), legacy_share,
+                      zc_share));
+
+        // ---- Task 2: newsvendor gradient panels --------------------------
+        let inst = NewsvendorInstance::generate(&tree, d, 2, 0.6);
+        let nd = inst.dim();
+        let x0 = inst.feasible_start();
+        let x_panel = tile_rows(&x0, r);
+        let mut g = vec![0.0f32; r * nd];
+        let mut batch = NativeNvBatch::new(&inst, n_samples, r, 1);
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let keys: Vec<[u32; 2]> =
+                trees.iter().map(|t| t.jax_key(&[k as u64])).collect();
+            let t = Timer::start();
+            batch.grad_obj_batch(&x_panel, &keys, &mut g, &mut objs)
+                .unwrap();
+            samples.push(t.elapsed_s());
+            if let Some(p) = batch.take_profile() {
+                prof.merge(&p);
+            }
+        }
+        let zc_share = reduce_share(&prof);
+        bench.record_profiled(&format!("nv_zero_copy_d{}_R{}", nd, r),
+                              &samples, prof);
+
+        let mut rows: Vec<NativeNv> = (0..r)
+            .map(|_| NativeNv::new(inst.clone(), n_samples,
+                                   NativeMode::Sequential))
+            .collect();
+        let mut lg = vec![0.0f32; r * nd];
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let keys: Vec<[u32; 2]> =
+                trees.iter().map(|t| t.jax_key(&[k as u64])).collect();
+            let t = Timer::start();
+            let t_c = Timer::start();
+            let out: Vec<(Vec<f32>, f64)> = rows
+                .iter_mut()
+                .enumerate()
+                .map(|(i, rep)| {
+                    rep.grad_obj(&x_panel[i * nd..(i + 1) * nd], keys[i])
+                        .unwrap()
+                })
+                .collect();
+            prof.add(Phase::Compute, t_c.elapsed_s());
+            let t_m = Timer::start();
+            for (i, (row, _)) in out.iter().enumerate() {
+                lg[i * nd..(i + 1) * nd].copy_from_slice(row);
+            }
+            prof.add(Phase::Reduce, t_m.elapsed_s());
+            samples.push(t.elapsed_s());
+        }
+        let legacy_share = reduce_share(&prof);
+        bench.record_profiled(&format!("nv_legacy_merge_d{}_R{}", nd, r),
+                              &samples, prof);
+        assert_eq!(g, lg, "nv d={} R={}: zero-copy != legacy", nd, r);
+        summary.push((format!("nv_d{}_R{}", nd, r), legacy_share,
+                      zc_share));
+
+        // ---- Task 3: SQN minibatch-gradient panels -----------------------
+        let data = ClassifyData::generate(&tree, d);
+        let w_panel = vec![0.0f32; r * d];
+        let mut g = vec![0.0f32; r * d];
+        let mut losses = vec![0.0f64; r];
+        let mut batch =
+            NativeLrBatch::new(&data, r, 1, HessianMode::Explicit);
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            // minibatch draws stay outside the timed region, as in the
+            // SQN driver
+            let idx: Vec<Vec<usize>> = trees
+                .iter()
+                .map(|tr| {
+                    let mut rng = tr.stream(&[1, (k + 1) as u64]);
+                    rng.sample_indices(data.n_samples,
+                                       32.min(data.n_samples))
+                })
+                .collect();
+            let t = Timer::start();
+            batch.grad_batch(&w_panel, &data, &idx, &mut g, &mut losses)
+                .unwrap();
+            samples.push(t.elapsed_s());
+            if let Some(p) = batch.take_profile() {
+                prof.merge(&p);
+            }
+        }
+        let zc_share = reduce_share(&prof);
+        bench.record_profiled(&format!("lr_zero_copy_n{}_R{}", d, r),
+                              &samples, prof);
+
+        let mut rows: Vec<NativeLr> = (0..r)
+            .map(|_| NativeLr::new(&data, NativeMode::Sequential,
+                                   HessianMode::Explicit))
+            .collect();
+        let mut lg = vec![0.0f32; r * d];
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let idx: Vec<Vec<usize>> = trees
+                .iter()
+                .map(|tr| {
+                    let mut rng = tr.stream(&[1, (k + 1) as u64]);
+                    rng.sample_indices(data.n_samples,
+                                       32.min(data.n_samples))
+                })
+                .collect();
+            let t = Timer::start();
+            let t_c = Timer::start();
+            let out: Vec<(Vec<f32>, f64)> = rows
+                .iter_mut()
+                .enumerate()
+                .map(|(i, rep)| {
+                    rep.grad(&w_panel[i * d..(i + 1) * d], &data, &idx[i])
+                        .unwrap()
+                })
+                .collect();
+            prof.add(Phase::Compute, t_c.elapsed_s());
+            let t_m = Timer::start();
+            for (i, (row, _)) in out.iter().enumerate() {
+                lg[i * d..(i + 1) * d].copy_from_slice(row);
+            }
+            prof.add(Phase::Reduce, t_m.elapsed_s());
+            samples.push(t.elapsed_s());
+        }
+        let legacy_share = reduce_share(&prof);
+        bench.record_profiled(&format!("lr_legacy_merge_n{}_R{}", d, r),
+                              &samples, prof);
+        assert_eq!(g, lg, "lr n={} R={}: zero-copy != legacy", d, r);
+        summary.push((format!("lr_n{}_R{}", d, r), legacy_share,
+                      zc_share));
+    }
+
+    bench.finish();
+    println!("\nreduce-phase share (merge copy-back cost):");
+    println!("| arm | legacy | zero-copy |");
+    println!("|---|---|---|");
+    for (label, legacy, zc) in &summary {
+        println!("| {} | {:.2}% | {:.2}% |", label, legacy * 100.0,
+                 zc * 100.0);
+    }
+    println!("\n(The zero-copy arm writes every row in place through the \
+              backends' `_into` entry points — its reduce share is \
+              structurally zero; the legacy arm pays an owned-row \
+              allocation per replication per epoch plus the merge copy, \
+              DESIGN.md §16.)");
+}

@@ -31,6 +31,18 @@ pub trait MvBackend {
     fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
         -> Result<(Vec<f32>, f64)>;
 
+    /// In-place variant: advance `w` where it lives and return only the
+    /// objective.  The default routes through [`MvBackend::epoch`] (one
+    /// owned iterate per call); allocation-free backends override it
+    /// (DESIGN.md §16) — the batched native engine steps each panel row
+    /// through this entry point.
+    fn epoch_into(&mut self, w: &mut [f32], k_epoch: usize, key: [u32; 2])
+        -> Result<f64> {
+        let (next, obj) = self.epoch(w, k_epoch, key)?;
+        w.copy_from_slice(&next);
+        Ok(obj)
+    }
+
     /// Drain the backend's per-phase attribution accumulated since the
     /// last drain (DESIGN.md §15).  `None` (the default) means the
     /// backend does not self-attribute — the driver books the whole
@@ -47,6 +59,16 @@ pub trait NvBackend {
 
     fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
         -> Result<(Vec<f32>, f64)>;
+
+    /// In-place variant: write the gradient into `g` and return the
+    /// objective.  Default routes through [`NvBackend::grad_obj`];
+    /// allocation-free backends override it (DESIGN.md §16).
+    fn grad_obj_into(&mut self, x: &[f32], key: [u32; 2], g: &mut [f32])
+        -> Result<f64> {
+        let (grad, obj) = self.grad_obj(x, key)?;
+        g.copy_from_slice(&grad);
+        Ok(obj)
+    }
 
     /// Drain the backend's per-phase attribution (see
     /// [`MvBackend::take_profile`]).
@@ -145,10 +167,12 @@ pub trait MvBatchBackend {
     fn batch_reps(&self) -> usize;
 
     /// Advance the `[R × d]` iterate panel `w` in place by one fused epoch;
-    /// `keys[r]` addresses replication r's Monte-Carlo panel.  Returns the
-    /// per-replication end-of-epoch empirical objectives.
+    /// `keys[r]` addresses replication r's Monte-Carlo panel.  Writes the
+    /// per-replication end-of-epoch empirical objectives into `objs`
+    /// (length R) — an out-param so steady-state callers allocate nothing
+    /// per epoch (DESIGN.md §16).
     fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
-                   keys: &[[u32; 2]]) -> Result<Vec<f64>>;
+                   keys: &[[u32; 2]], objs: &mut [f64]) -> Result<()>;
 
     /// Drain the backend's per-phase attribution (see
     /// [`MvBackend::take_profile`]).
@@ -167,9 +191,10 @@ pub trait NvBatchBackend {
 
     /// `x` and `g` are `[R × d]` row-major panels; `keys[r]` addresses
     /// replication r's epoch panel (same key ⇒ same panel, counter-based
-    /// RNG).  Returns the per-replication objective estimates.
+    /// RNG).  Writes the per-replication objective estimates into `objs`
+    /// (length R).
     fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
-                      g: &mut [f32]) -> Result<Vec<f64>>;
+                      g: &mut [f32], objs: &mut [f64]) -> Result<()>;
 
     /// Drain the backend's per-phase attribution (see
     /// [`MvBackend::take_profile`]).
@@ -187,9 +212,11 @@ pub trait LrBatchBackend {
     fn batch_reps(&self) -> usize;
 
     /// Minibatch gradient (12) + mean loss per replication: `w`/`g` are
-    /// `[R × n]` panels, `idx[r]` is replication r's minibatch.
+    /// `[R × n]` panels, `idx[r]` is replication r's minibatch; the mean
+    /// losses land in `losses` (length R).
     fn grad_batch(&mut self, w: &[f32], data: &crate::sim::ClassifyData,
-                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>>;
+                  idx: &[Vec<usize>], g: &mut [f32], losses: &mut [f64])
+        -> Result<()>;
 
     /// Sub-sampled Hessian-vector product (13) per replication on
     /// `[R × n]` panels.

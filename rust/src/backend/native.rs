@@ -6,8 +6,6 @@
 //! idiomatic Rust (no artificial slowdowns): row-by-row matvecs, per-sample
 //! indicator counting, per-sample sigmoid accumulation.
 
-use std::sync::Mutex;
-
 use anyhow::Result;
 
 use crate::linalg::matrix::Mat;
@@ -17,7 +15,7 @@ use crate::tasks::cvar as cv;
 use crate::tasks::mean_variance as mv;
 use crate::tasks::newsvendor as nv;
 use crate::tasks::{BatchMemView, CorrectionMemory};
-use crate::util::pool::parallel_map_chunks;
+use crate::util::pool::{chunk_len, parallel_map_chunks, parallel_try_jobs};
 use crate::util::profile::{Phase, Profiler};
 use crate::util::timer::Timer;
 
@@ -47,6 +45,7 @@ pub struct NativeMv {
     mode: NativeMode,
     // scratch (reused across epochs)
     panel: Mat,
+    rbar: Vec<f32>,
     scratch: mv::MvScratch,
 }
 
@@ -60,18 +59,18 @@ impl NativeMv {
             m_inner,
             mode,
             panel: Mat::zeros(n_samples, d),
+            rbar: vec![0.0; d],
             scratch: mv::MvScratch::new(n_samples, d),
         }
     }
 
-    fn resample(&mut self, key: [u32; 2]) -> Vec<f32> {
+    fn resample(&mut self, key: [u32; 2]) {
         let seed = (key[0] as u64) << 32 | key[1] as u64;
         let mut sampler = crate::rng::NormalSampler::from_seed(seed);
         self.universe.sample_panel(&mut sampler, self.n_samples,
                                    &mut self.panel.data);
-        let rbar = self.panel.col_means();
-        self.panel.center_rows(&rbar);
-        rbar
+        self.panel.col_means_into(&mut self.rbar);
+        self.panel.center_rows(&self.rbar);
     }
 
     /// Cᵀ(Cw)/(n−1) into `scratch.g` (no R̄ subtraction — the epoch loop
@@ -138,22 +137,30 @@ impl MvBackend for NativeMv {
 
     fn epoch(&mut self, w: &[f32], k_epoch: usize, key: [u32; 2])
         -> Result<(Vec<f32>, f64)> {
-        let rbar = self.resample(key);
         let mut w = w.to_vec();
+        let obj = self.epoch_into(&mut w, k_epoch, key)?;
+        Ok((w, obj))
+    }
+
+    /// Allocation-free epoch: every temporary (return panel, R̄, matvec
+    /// scratch) lives in `self` and `w` advances where it lies
+    /// (DESIGN.md §16) — the entry point the batched arm steps each panel
+    /// row through.
+    fn epoch_into(&mut self, w: &mut [f32], k_epoch: usize, key: [u32; 2])
+        -> Result<f64> {
+        self.resample(key);
         let m_inner = self.m_inner;
         for m in 0..m_inner {
-            self.grad_dispatch(&w);
-            // grad_dispatch leaves Cᵀ(Cw)/(n−1) (sequential path already
-            // subtracted nothing since rbar slice was empty) — finish:
+            self.grad_dispatch(w);
+            // grad_dispatch leaves Cᵀ(Cw)/(n−1) — finish the gradient:
             for j in 0..w.len() {
-                self.scratch.g[j] -= rbar[j];
+                self.scratch.g[j] -= self.rbar[j];
             }
             let s = mv::simplex_lmo(&self.scratch.g);
             let gamma = crate::opt::schedule::fw_gamma(k_epoch, m, m_inner);
-            mv::fw_vertex_update(&mut w, s, gamma);
+            mv::fw_vertex_update(w, s, gamma);
         }
-        let obj = mv::objective(&self.panel, &rbar, &w, &mut self.scratch);
-        Ok((w, obj))
+        Ok(mv::objective(&self.panel, &self.rbar, w, &mut self.scratch))
     }
 }
 
@@ -198,7 +205,7 @@ impl NativeCvar {
         let mut sampler = crate::rng::NormalSampler::from_seed(seed);
         self.universe.sample_panel(&mut sampler, self.n_samples,
                                    &mut self.panel.data);
-        self.rbar = self.panel.col_means();
+        self.panel.col_means_into(&mut self.rbar);
     }
 
     /// ∇f(w, t) into `scratch.g`.
@@ -270,20 +277,26 @@ impl MvBackend for NativeCvar {
 
     fn epoch(&mut self, x: &[f32], k_epoch: usize, key: [u32; 2])
         -> Result<(Vec<f32>, f64)> {
+        let mut x = x.to_vec();
+        let obj = self.epoch_into(&mut x, k_epoch, key)?;
+        Ok((x, obj))
+    }
+
+    /// Allocation-free epoch on the joint `[w, t]` row in place (see
+    /// [`NativeMv::epoch_into`]; DESIGN.md §16).
+    fn epoch_into(&mut self, x: &mut [f32], k_epoch: usize, key: [u32; 2])
+        -> Result<f64> {
         anyhow::ensure!(x.len() == self.universe.dim() + 1,
                         "iterate must be [w, t] of length d+1");
         self.resample(key);
-        let mut x = x.to_vec();
         let m_inner = self.m_inner;
         for m in 0..m_inner {
-            self.grad_dispatch(&x);
+            self.grad_dispatch(x);
             let (vertex, t_vertex) = cv::product_lmo(&self.scratch.g);
             let gamma = crate::opt::schedule::fw_gamma(k_epoch, m, m_inner);
-            cv::fw_product_update(&mut x, vertex, t_vertex, gamma);
+            cv::fw_product_update(x, vertex, t_vertex, gamma);
         }
-        let obj = cv::objective(&self.panel, &self.rbar, &x,
-                                &mut self.scratch);
-        Ok((x, obj))
+        Ok(cv::objective(&self.panel, &self.rbar, x, &mut self.scratch))
     }
 }
 
@@ -337,12 +350,21 @@ impl NvBackend for NativeNv {
 
     fn grad_obj(&mut self, x: &[f32], key: [u32; 2])
         -> Result<(Vec<f32>, f64)> {
+        let mut g = vec![0.0f32; self.inst.dim()];
+        let obj = self.grad_obj_into(x, key, &mut g)?;
+        Ok((g, obj))
+    }
+
+    /// Allocation-free gradient: the Monte-Carlo panel is cached per key
+    /// and the gradient lands in the caller's row (DESIGN.md §16).
+    fn grad_obj_into(&mut self, x: &[f32], key: [u32; 2], g: &mut [f32])
+        -> Result<f64> {
         self.ensure_panel(key);
         let d = self.inst.dim();
-        let mut g = vec![0.0f32; d];
+        anyhow::ensure!(g.len() == d, "gradient row {} != {}", g.len(), d);
         match self.mode {
             NativeMode::Sequential => {
-                nv::grad(&self.inst, &self.panel, self.s_samples, x, &mut g);
+                nv::grad(&self.inst, &self.panel, self.s_samples, x, g);
             }
             NativeMode::Parallel { threads } => {
                 let inst = &self.inst;
@@ -368,8 +390,7 @@ impl NvBackend for NativeNv {
                 }
             }
         }
-        let obj = nv::objective(&self.inst, &self.panel, self.s_samples, x);
-        Ok((g, obj))
+        Ok(nv::objective(&self.inst, &self.panel, self.s_samples, x))
     }
 }
 
@@ -389,6 +410,10 @@ pub struct NativeLr {
     // the same schedule the paper's Algorithm 3 line 11 implies.
     h_cache: Option<(u64, Mat)>,
     mem_generation: u64,
+    // Algorithm-4 arenas (DESIGN.md §16): H-rebuild matvec scratch and
+    // two-loop temporaries, reused across rebuilds/steps.
+    hy: Vec<f32>,
+    two_loop: lr::TwoLoopScratch,
 }
 
 impl NativeLr {
@@ -407,28 +432,23 @@ impl NativeLr {
             zb: Vec::new(),
             h_cache: None,
             mem_generation: 0,
-        }
-    }
-}
-
-impl LrBackend for NativeLr {
-    fn name(&self) -> &'static str {
-        match self.mode {
-            NativeMode::Sequential => "native",
-            NativeMode::Parallel { .. } => "native_par",
+            hy: Vec::new(),
+            two_loop: lr::TwoLoopScratch::default(),
         }
     }
 
-    fn grad(&mut self, w: &[f32], data: &ClassifyData, idx: &[usize])
-        -> Result<(Vec<f32>, f64)> {
+    /// Allocation-free minibatch gradient: gather scratch and the output
+    /// row are caller/arena-owned (DESIGN.md §16).
+    pub fn grad_into(&mut self, w: &[f32], data: &ClassifyData,
+                     idx: &[usize], g: &mut [f32]) -> Result<f64> {
         let n = self.n;
         anyhow::ensure!(w.len() == n, "w dim {} != {}", w.len(), n);
+        anyhow::ensure!(g.len() == n, "gradient row {} != {}", g.len(), n);
         anyhow::ensure!(data.n_features == n, "dataset feature mismatch");
         data.gather(idx, &mut self.xb, &mut self.zb);
         let (xb, zb) = (&self.xb, &self.zb);
-        let mut g = vec![0.0f32; n];
         let loss = match self.mode {
-            NativeMode::Sequential => lr::grad(w, xb, zb, &mut g),
+            NativeMode::Sequential => lr::grad(w, xb, zb, g),
             NativeMode::Parallel { threads } => {
                 let b = zb.len();
                 let parts = parallel_map_chunks(b, threads, |rows| {
@@ -446,6 +466,7 @@ impl LrBackend for NativeLr {
                     }
                     (gp, lp)
                 });
+                g.fill(0.0);
                 let mut loss = 0.0f64;
                 for (gp, lp) in parts {
                     for j in 0..n {
@@ -458,65 +479,101 @@ impl LrBackend for NativeLr {
                 loss / b as f64
             }
         };
+        Ok(loss)
+    }
+
+    /// Allocation-free sub-sampled HVP (13) into a caller-owned row.
+    pub fn hvp_into(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
+                    idx: &[usize], out: &mut [f32]) -> Result<()> {
+        // a new correction pair is about to land ⇒ H_t will change
+        self.mem_generation += 1;
+        anyhow::ensure!(out.len() == self.n, "output row {} != {}",
+                        out.len(), self.n);
+        data.gather(idx, &mut self.xb, &mut self.zb);
+        lr::hvp(wbar, s, &self.xb, out);
+        Ok(())
+    }
+
+    /// Allocation-free Algorithm-4 direction: the explicit-H cache is
+    /// rebuilt IN PLACE on the sequential cadence and the two-loop
+    /// recursion runs on arena temporaries (DESIGN.md §16).
+    pub fn direction_into(&mut self, mem: &CorrectionMemory, g: &[f32],
+                          out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(out.len() == g.len(), "direction row {} != {}",
+                        out.len(), g.len());
+        match self.hessian_mode {
+            HessianMode::Explicit => {
+                let rebuild = match &self.h_cache {
+                    Some((generation, _)) => {
+                        *generation != self.mem_generation
+                    }
+                    None => true,
+                };
+                if rebuild {
+                    if self.h_cache.is_none() {
+                        self.h_cache = Some((0, Mat::zeros(0, 0)));
+                    }
+                    let cache = self.h_cache.as_mut().unwrap();
+                    cache.0 = self.mem_generation;
+                    lr::hbuild_explicit_into(mem.view(), &mut cache.1,
+                                             &mut self.hy);
+                }
+                let (_, h) = self.h_cache.as_ref().unwrap();
+                h.matvec(g, out);
+            }
+            HessianMode::TwoLoop => {
+                lr::hdir_twoloop_into(mem.view(), g, &mut self.two_loop,
+                                      out);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl LrBackend for NativeLr {
+    fn name(&self) -> &'static str {
+        match self.mode {
+            NativeMode::Sequential => "native",
+            NativeMode::Parallel { .. } => "native_par",
+        }
+    }
+
+    fn grad(&mut self, w: &[f32], data: &ClassifyData, idx: &[usize])
+        -> Result<(Vec<f32>, f64)> {
+        let mut g = vec![0.0f32; self.n];
+        let loss = self.grad_into(w, data, idx, &mut g)?;
         Ok((g, loss))
     }
 
     fn hvp(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
            idx: &[usize]) -> Result<Vec<f32>> {
-        // a new correction pair is about to land ⇒ H_t will change
-        self.mem_generation += 1;
-        data.gather(idx, &mut self.xb, &mut self.zb);
         let mut out = vec![0.0f32; self.n];
-        lr::hvp(wbar, s, &self.xb, &mut out);
+        self.hvp_into(wbar, s, data, idx, &mut out)?;
         Ok(out)
     }
 
     fn direction(&mut self, mem: &CorrectionMemory, g: &[f32])
         -> Result<Vec<f32>> {
-        Ok(match self.hessian_mode {
-            HessianMode::Explicit => {
-                let rebuild = match &self.h_cache {
-                    Some((generation, _)) => *generation != self.mem_generation,
-                    None => true,
-                };
-                if rebuild {
-                    self.h_cache = Some((self.mem_generation,
-                                         lr::hbuild_explicit(mem)));
-                }
-                let (_, h) = self.h_cache.as_ref().unwrap();
-                let mut d = vec![0.0f32; g.len()];
-                h.matvec(g, &mut d);
-                d
-            }
-            HessianMode::TwoLoop => lr::hdir_twoloop(mem, g),
-        })
+        let mut out = vec![0.0f32; g.len()];
+        self.direction_into(mem, g, &mut out)?;
+        Ok(out)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Replication-batched arms (DESIGN.md §11)
+// Replication-batched arms (DESIGN.md §11, §16)
 // ---------------------------------------------------------------------------
 //
 // Each batch backend holds one per-replication backend per row so every
-// row runs the *bit-identical* arithmetic of the sequential path, and
-// spreads the replication axis over `parallel_map_chunks` (contiguous
-// row chunks per OS thread).  The `Mutex` per row exists only to hand the
-// shared closure `&mut` access to its own rows; chunks are disjoint, so
-// the locks are never contended.
-
-/// First-error helper for the chunked merge loops below.
-fn merge_rows(parts: Vec<(usize, Result<Vec<(Vec<f32>, f64)>>)>,
-              row_len: usize, out: &mut [f32]) -> Result<Vec<f64>> {
-    let mut scalars = vec![0.0f64; out.len() / row_len.max(1)];
-    for (start, part) in parts {
-        for (offset, (row, scalar)) in part?.into_iter().enumerate() {
-            let i = start + offset;
-            out[i * row_len..(i + 1) * row_len].copy_from_slice(&row);
-            scalars[i] = scalar;
-        }
-    }
-    Ok(scalars)
-}
+// row runs the *bit-identical* arithmetic of the sequential path.  The
+// replication axis is spread over `pool::parallel_try_jobs`: the backend
+// list, the output panel and the scalar row are split into the SAME
+// contiguous chunks (`split_at_mut` via `chunks_mut`, boundaries
+// identical to `parallel_map_chunks` — pinned in util::pool's tests) and
+// each job receives exclusive `&mut` slices.  No `Mutex`, no owned row
+// vectors, no merge copy: every worker writes its rows where they live,
+// through the sequential backends' `_into` entry points, whose scratch
+// lives in per-backend arenas reused across epochs.
 
 /// Generic epoch-task batch arm (Tasks 1 and 4): one sequential-mode
 /// per-replication backend per row — ANY [`MvBackend`] — with contiguous
@@ -524,7 +581,7 @@ fn merge_rows(parts: Vec<(usize, Result<Vec<(Vec<f32>, f64)>>)>,
 /// epoch-structured scenario costs one `from_rows` constructor, not a new
 /// batch backend (DESIGN.md §12).
 pub struct NativeEpochBatch<B> {
-    reps: Vec<Mutex<B>>,
+    reps: Vec<B>,
     /// Per-row iterate length (d for Task 1, d+1 for Task 4's `[w, t]`).
     d: usize,
     threads: usize,
@@ -537,7 +594,7 @@ impl<B: MvBackend + Send> NativeEpochBatch<B> {
     /// `row_dim` is the iterate length of one row.
     pub fn from_rows(rows: Vec<B>, row_dim: usize, threads: usize) -> Self {
         NativeEpochBatch {
-            reps: rows.into_iter().map(Mutex::new).collect(),
+            reps: rows,
             d: row_dim,
             threads,
             prof: Profiler::new(),
@@ -595,31 +652,37 @@ impl<B: MvBackend + Send> MvBatchBackend for NativeEpochBatch<B> {
     }
 
     fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
-                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+                   keys: &[[u32; 2]], objs: &mut [f64]) -> Result<()> {
         let (r, d) = (self.reps.len(), self.d);
         anyhow::ensure!(w.len() == r * d, "iterate panel {} != {}×{}",
                         w.len(), r, d);
         anyhow::ensure!(keys.len() == r, "need one key per replication");
-        let reps = &self.reps;
-        let w_in: &[f32] = w;
+        anyhow::ensure!(objs.len() == r,
+                        "need one objective slot per replication");
+        let chunk = chunk_len(r, self.threads);
         let t_par = Timer::start();
-        let parts = parallel_map_chunks(r, self.threads, |range| {
-            let start = range.start;
-            let mut rows = Vec::with_capacity(range.len());
-            for i in range {
-                let mut rep = reps[i].lock().unwrap();
-                match rep.epoch(&w_in[i * d..(i + 1) * d], k_epoch, keys[i]) {
-                    Ok((w_next, obj)) => rows.push((w_next, obj)),
-                    Err(e) => return (start, Err(e)),
-                }
-            }
-            (start, Ok(rows))
-        });
+        parallel_try_jobs(
+            self.reps
+                .chunks_mut(chunk)
+                .zip(w.chunks_mut(chunk * d))
+                .zip(objs.chunks_mut(chunk))
+                .enumerate()
+                .map(|(c, ((reps, w_rows), obj_rows))| {
+                    let base = c * chunk;
+                    move || -> Result<()> {
+                        for (o, rep) in reps.iter_mut().enumerate() {
+                            let row = &mut w_rows[o * d..(o + 1) * d];
+                            obj_rows[o] =
+                                rep.epoch_into(row, k_epoch, keys[base + o])?;
+                        }
+                        Ok(())
+                    }
+                }),
+        )?;
         self.prof.add(Phase::Compute, t_par.elapsed_s());
-        let t_red = Timer::start();
-        let out = merge_rows(parts, d, w);
-        self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        out
+        // No reduce phase: rows and objectives are written in place by
+        // the jobs themselves (DESIGN.md §16).
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -629,7 +692,7 @@ impl<B: MvBackend + Send> MvBatchBackend for NativeEpochBatch<B> {
 
 /// Task 2 batched: one Monte-Carlo gradient panel per call.
 pub struct NativeNvBatch {
-    reps: Vec<Mutex<NativeNv>>,
+    reps: Vec<NativeNv>,
     d: usize,
     threads: usize,
     /// Per-phase attribution since the last drain (DESIGN.md §15).
@@ -642,8 +705,8 @@ impl NativeNvBatch {
         let d = inst.dim();
         let reps = (0..r_reps)
             .map(|_| {
-                Mutex::new(NativeNv::new(inst.clone(), s_samples,
-                                         NativeMode::Sequential))
+                NativeNv::new(inst.clone(), s_samples,
+                              NativeMode::Sequential)
             })
             .collect();
         NativeNvBatch { reps, d, threads, prof: Profiler::new() }
@@ -660,31 +723,37 @@ impl NvBatchBackend for NativeNvBatch {
     }
 
     fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
-                      g: &mut [f32]) -> Result<Vec<f64>> {
+                      g: &mut [f32], objs: &mut [f64]) -> Result<()> {
         let (r, d) = (self.reps.len(), self.d);
         anyhow::ensure!(x.len() == r * d, "iterate panel {} != {}×{}",
                         x.len(), r, d);
         anyhow::ensure!(g.len() == r * d, "gradient panel shape mismatch");
         anyhow::ensure!(keys.len() == r, "need one key per replication");
-        let reps = &self.reps;
+        anyhow::ensure!(objs.len() == r,
+                        "need one objective slot per replication");
+        let chunk = chunk_len(r, self.threads);
         let t_par = Timer::start();
-        let parts = parallel_map_chunks(r, self.threads, |range| {
-            let start = range.start;
-            let mut rows = Vec::with_capacity(range.len());
-            for i in range {
-                let mut rep = reps[i].lock().unwrap();
-                match rep.grad_obj(&x[i * d..(i + 1) * d], keys[i]) {
-                    Ok((g_row, obj)) => rows.push((g_row, obj)),
-                    Err(e) => return (start, Err(e)),
-                }
-            }
-            (start, Ok(rows))
-        });
+        parallel_try_jobs(
+            self.reps
+                .chunks_mut(chunk)
+                .zip(g.chunks_mut(chunk * d))
+                .zip(objs.chunks_mut(chunk))
+                .enumerate()
+                .map(|(c, ((reps, g_rows), obj_rows))| {
+                    let base = c * chunk;
+                    move || -> Result<()> {
+                        for (o, rep) in reps.iter_mut().enumerate() {
+                            let i = base + o;
+                            let g_row = &mut g_rows[o * d..(o + 1) * d];
+                            obj_rows[o] = rep.grad_obj_into(
+                                &x[i * d..(i + 1) * d], keys[i], g_row)?;
+                        }
+                        Ok(())
+                    }
+                }),
+        )?;
         self.prof.add(Phase::Compute, t_par.elapsed_s());
-        let t_red = Timer::start();
-        let out = merge_rows(parts, d, g);
-        self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        out
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -700,12 +769,11 @@ impl NvBatchBackend for NativeNvBatch {
 /// row, with per-row explicit-H caches rebuilt on the sequential cadence
 /// (only when that row's memory generation moves, i.e. every L iterations).
 pub struct NativeLrBatch {
-    reps: Vec<Mutex<NativeLr>>,
+    reps: Vec<NativeLr>,
     hessian_mode: HessianMode,
-    /// Per-row Algorithm-4 cache: ((generation, row count) it was built
-    /// at, H).  The `Mutex` exists only to hand the chunked closure
-    /// `&mut` access to its own rows; chunks are disjoint, so locks are
-    /// never contended.
+    /// Per-row Algorithm-4 arenas (explicit-H cache + two-loop scratch);
+    /// handed to the fan-out jobs as disjoint `&mut` chunks, so no lock
+    /// is needed.
     ///
     /// Cache validity leans on the SQN driver protocol: correction pairs
     /// only land via `hvp_batch` (which bumps the generation) followed by
@@ -714,7 +782,7 @@ pub struct NativeLrBatch {
     /// unrelated `BatchCorrectionMemory` values at the same generation
     /// AND per-row counts (impossible through `run_sqn_batch`) would
     /// reuse a stale H.
-    h_caches: Vec<Mutex<Option<((u64, usize), Mat)>>>,
+    dir_arenas: Vec<RowDirArena>,
     /// Bumped by [`Self::hvp_batch`] — a correction pair is about to land,
     /// so every row's H_t goes stale (mirrors `NativeLr::hvp`).
     mem_generation: u64,
@@ -724,19 +792,30 @@ pub struct NativeLrBatch {
     prof: Profiler,
 }
 
+/// One replication row's Algorithm-4 arena: the `(generation, count)`
+/// stamp its explicit H was built at, the H itself (rebuilt IN PLACE via
+/// [`lr::hbuild_explicit_into`]), and the rebuild/two-loop scratch.
+#[derive(Debug, Default)]
+struct RowDirArena {
+    built: Option<(u64, usize)>,
+    h: Mat,
+    hy: Vec<f32>,
+    two_loop: lr::TwoLoopScratch,
+}
+
 impl NativeLrBatch {
     pub fn new(data: &ClassifyData, r_reps: usize, threads: usize,
                hessian_mode: HessianMode) -> Self {
         let reps = (0..r_reps)
             .map(|_| {
-                Mutex::new(NativeLr::new(data, NativeMode::Sequential,
-                                         hessian_mode))
+                NativeLr::new(data, NativeMode::Sequential, hessian_mode)
             })
             .collect();
         NativeLrBatch {
             reps,
             hessian_mode,
-            h_caches: (0..r_reps).map(|_| Mutex::new(None)).collect(),
+            dir_arenas: (0..r_reps).map(|_| RowDirArena::default())
+                .collect(),
             mem_generation: 0,
             n: data.n_features,
             threads,
@@ -755,31 +834,39 @@ impl LrBatchBackend for NativeLrBatch {
     }
 
     fn grad_batch(&mut self, w: &[f32], data: &ClassifyData,
-                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>> {
+                  idx: &[Vec<usize>], g: &mut [f32], losses: &mut [f64])
+        -> Result<()> {
         let (r, n) = (self.reps.len(), self.n);
         anyhow::ensure!(w.len() == r * n, "iterate panel {} != {}×{}",
                         w.len(), r, n);
         anyhow::ensure!(g.len() == r * n, "gradient panel shape mismatch");
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
-        let reps = &self.reps;
+        anyhow::ensure!(losses.len() == r,
+                        "need one loss slot per replication");
+        let chunk = chunk_len(r, self.threads);
         let t_par = Timer::start();
-        let parts = parallel_map_chunks(r, self.threads, |range| {
-            let start = range.start;
-            let mut rows = Vec::with_capacity(range.len());
-            for i in range {
-                let mut rep = reps[i].lock().unwrap();
-                match rep.grad(&w[i * n..(i + 1) * n], data, &idx[i]) {
-                    Ok((g_row, loss)) => rows.push((g_row, loss)),
-                    Err(e) => return (start, Err(e)),
-                }
-            }
-            (start, Ok(rows))
-        });
+        parallel_try_jobs(
+            self.reps
+                .chunks_mut(chunk)
+                .zip(g.chunks_mut(chunk * n))
+                .zip(losses.chunks_mut(chunk))
+                .enumerate()
+                .map(|(c, ((reps, g_rows), loss_rows))| {
+                    let base = c * chunk;
+                    move || -> Result<()> {
+                        for (o, rep) in reps.iter_mut().enumerate() {
+                            let i = base + o;
+                            let g_row = &mut g_rows[o * n..(o + 1) * n];
+                            loss_rows[o] = rep.grad_into(
+                                &w[i * n..(i + 1) * n], data, &idx[i],
+                                g_row)?;
+                        }
+                        Ok(())
+                    }
+                }),
+        )?;
         self.prof.add(Phase::Compute, t_par.elapsed_s());
-        let t_red = Timer::start();
-        let out = merge_rows(parts, n, g);
-        self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        out
+        Ok(())
     }
 
     fn hvp_batch(&mut self, wbar: &[f32], s: &[f32], data: &ClassifyData,
@@ -791,25 +878,28 @@ impl LrBatchBackend for NativeLrBatch {
                         "ω̄/s panel shape mismatch");
         anyhow::ensure!(y.len() == r * n, "output panel shape mismatch");
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
-        let reps = &self.reps;
+        let chunk = chunk_len(r, self.threads);
         let t_par = Timer::start();
-        let parts = parallel_map_chunks(r, self.threads, |range| {
-            let start = range.start;
-            let mut rows = Vec::with_capacity(range.len());
-            for i in range {
-                let mut rep = reps[i].lock().unwrap();
-                match rep.hvp(&wbar[i * n..(i + 1) * n],
-                              &s[i * n..(i + 1) * n], data, &idx[i]) {
-                    Ok(y_row) => rows.push((y_row, 0.0)),
-                    Err(e) => return (start, Err(e)),
-                }
-            }
-            (start, Ok(rows))
-        });
+        parallel_try_jobs(
+            self.reps
+                .chunks_mut(chunk)
+                .zip(y.chunks_mut(chunk * n))
+                .enumerate()
+                .map(|(c, (reps, y_rows))| {
+                    let base = c * chunk;
+                    move || -> Result<()> {
+                        for (o, rep) in reps.iter_mut().enumerate() {
+                            let i = base + o;
+                            let y_row = &mut y_rows[o * n..(o + 1) * n];
+                            rep.hvp_into(&wbar[i * n..(i + 1) * n],
+                                         &s[i * n..(i + 1) * n], data,
+                                         &idx[i], y_row)?;
+                        }
+                        Ok(())
+                    }
+                }),
+        )?;
         self.prof.add(Phase::Compute, t_par.elapsed_s());
-        let t_red = Timer::start();
-        merge_rows(parts, n, y)?;
-        self.prof.add(Phase::Reduce, t_red.elapsed_s());
         Ok(())
     }
 
@@ -823,52 +913,54 @@ impl LrBatchBackend for NativeLrBatch {
                         "gradient/output panel shape mismatch");
         let hessian_mode = self.hessian_mode;
         let generation = self.mem_generation;
-        let caches = &self.h_caches;
+        let chunk = chunk_len(r, self.threads);
+        let mem = &mem;
         let t_dir = Timer::start();
-        let parts = parallel_map_chunks(r, self.threads, |range| {
-            let mut rows: Vec<(usize, Vec<f32>)> =
-                Vec::with_capacity(range.len());
-            for i in range {
-                if !mem.is_active(i) {
-                    // the driver steps with the plain gradient here, as the
-                    // sequential path does before the memory fills
-                    continue;
-                }
-                let g_row = &g[i * n..(i + 1) * n];
-                let d_row = match hessian_mode {
-                    HessianMode::Explicit => {
-                        // rebuild row i's H only when its generation or
-                        // fill level moved (every L iterations) — the
-                        // sequential cadence
-                        let stamp = (generation, mem.count(i));
-                        let mut cache = caches[i].lock().unwrap();
-                        let rebuild = match &*cache {
-                            Some((built, _)) => *built != stamp,
-                            None => true,
-                        };
-                        if rebuild {
-                            *cache = Some((stamp,
-                                           lr::hbuild_explicit_view(
-                                               mem.row(i))));
+        parallel_try_jobs(
+            self.dir_arenas
+                .chunks_mut(chunk)
+                .zip(out.chunks_mut(chunk * n))
+                .enumerate()
+                .map(|(c, (arenas, out_rows))| {
+                    let base = c * chunk;
+                    move || -> Result<()> {
+                        for (o, arena) in arenas.iter_mut().enumerate() {
+                            let i = base + o;
+                            if !mem.is_active(i) {
+                                // the driver steps with the plain gradient
+                                // here, as the sequential path does before
+                                // the memory fills
+                                continue;
+                            }
+                            let g_row = &g[i * n..(i + 1) * n];
+                            let out_row =
+                                &mut out_rows[o * n..(o + 1) * n];
+                            match hessian_mode {
+                                HessianMode::Explicit => {
+                                    // rebuild row i's H only when its
+                                    // generation or fill level moved
+                                    // (every L iterations) — the
+                                    // sequential cadence
+                                    let stamp = (generation, mem.count(i));
+                                    if arena.built != Some(stamp) {
+                                        lr::hbuild_explicit_into(
+                                            mem.row(i), &mut arena.h,
+                                            &mut arena.hy);
+                                        arena.built = Some(stamp);
+                                    }
+                                    arena.h.matvec(g_row, out_row);
+                                }
+                                HessianMode::TwoLoop => {
+                                    lr::hdir_twoloop_into(
+                                        mem.row(i), g_row,
+                                        &mut arena.two_loop, out_row);
+                                }
+                            }
                         }
-                        let (_, h) = cache.as_ref().unwrap();
-                        let mut d = vec![0.0f32; n];
-                        h.matvec(g_row, &mut d);
-                        d
+                        Ok(())
                     }
-                    HessianMode::TwoLoop => {
-                        lr::hdir_twoloop_view(mem.row(i), g_row)
-                    }
-                };
-                rows.push((i, d_row));
-            }
-            rows
-        });
-        for part in parts {
-            for (i, row) in part {
-                out[i * n..(i + 1) * n].copy_from_slice(&row);
-            }
-        }
+                }),
+        )?;
         self.prof.add(Phase::Direction, t_dir.elapsed_s());
         Ok(())
     }
@@ -982,7 +1074,8 @@ mod tests {
         for _ in 0..r {
             panel.extend_from_slice(&w0);
         }
-        let objs = batch.epoch_batch(&mut panel, 2, &keys).unwrap();
+        let mut objs = vec![0.0f64; r];
+        batch.epoch_batch(&mut panel, 2, &keys, &mut objs).unwrap();
 
         for i in 0..r {
             let mut single =
@@ -1039,7 +1132,8 @@ mod tests {
         for _ in 0..r {
             panel.extend_from_slice(&x0);
         }
-        let objs = batch.epoch_batch(&mut panel, 1, &keys).unwrap();
+        let mut objs = vec![0.0f64; r];
+        batch.epoch_batch(&mut panel, 1, &keys, &mut objs).unwrap();
 
         let row = d + 1;
         for i in 0..r {
@@ -1057,10 +1151,19 @@ mod tests {
     fn mv_batch_shape_checked() {
         let u = AssetUniverse::generate(&StreamTree::new(32), 8);
         let mut batch = NativeMvBatch::new(&u, 4, 2, 3, 2);
+        let mut objs = vec![0.0f64; 3];
         let mut wrong = vec![0.0f32; 8]; // 1 row, 3 expected
-        assert!(batch.epoch_batch(&mut wrong, 0, &[[0, 0]; 3]).is_err());
+        assert!(batch
+            .epoch_batch(&mut wrong, 0, &[[0, 0]; 3], &mut objs)
+            .is_err());
         let mut ok = vec![0.1f32; 3 * 8];
-        assert!(batch.epoch_batch(&mut ok, 0, &[[0, 0]; 2]).is_err());
+        assert!(batch
+            .epoch_batch(&mut ok, 0, &[[0, 0]; 2], &mut objs)
+            .is_err());
+        // objective slot count must match the replication count too
+        assert!(batch
+            .epoch_batch(&mut ok, 0, &[[0, 0]; 3], &mut objs[..2])
+            .is_err());
         assert_eq!(batch.batch_reps(), 3);
     }
 
@@ -1078,7 +1181,8 @@ mod tests {
         }
         let mut g = vec![0.0f32; r * d];
         let mut batch = NativeNvBatch::new(&inst, s, r, 3);
-        let objs = batch.grad_obj_batch(&x, &keys, &mut g).unwrap();
+        let mut objs = vec![0.0f64; r];
+        batch.grad_obj_batch(&x, &keys, &mut g, &mut objs).unwrap();
         for i in 0..r {
             let mut single =
                 NativeNv::new(inst.clone(), s, NativeMode::Sequential);
@@ -1109,7 +1213,8 @@ mod tests {
             .collect();
 
         let mut g = vec![0.0f32; r * n];
-        let losses = batch.grad_batch(&w, &data, &idx, &mut g).unwrap();
+        let mut losses = vec![0.0f64; r];
+        batch.grad_batch(&w, &data, &idx, &mut g, &mut losses).unwrap();
         for i in 0..r {
             let (g1, l1) = singles[i]
                 .grad(&w[i * n..(i + 1) * n], &data, &idx[i])

@@ -441,18 +441,19 @@ impl<B: MvBatchBackend, P: ShardPolicy<B>> MvBatchBackend
     }
 
     fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
-                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+                   keys: &[[u32; 2]], objs: &mut [f64]) -> Result<()> {
         let r = self.map.reps();
         self.ensure_panel(w.len(), "iterate")?;
         anyhow::ensure!(keys.len() == r, "need one key per replication");
+        anyhow::ensure!(objs.len() == r,
+                        "need one objective slot per replication");
         let t_split = Timer::start();
-        let mut objs = vec![0.0f64; r];
         let ctxs: Vec<_> = {
             let w_parts =
                 PanelMut::new(w, r, self.width).split_shards(&self.map);
             let key_parts = Panel::new(keys, r, 1).split_shards(&self.map);
             let obj_parts =
-                PanelMut::new(&mut objs, r, 1).split_shards(&self.map);
+                PanelMut::new(objs, r, 1).split_shards(&self.map);
             w_parts
                 .into_iter()
                 .zip(key_parts)
@@ -464,20 +465,15 @@ impl<B: MvBatchBackend, P: ShardPolicy<B>> MvBatchBackend
         let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (w_s, k_s, o_s)| {
-            let vals = shard.backend.epoch_batch(
-                w_s.into_inner(), k_epoch, k_s.as_slice())?;
-            let o_s = o_s.into_inner();
-            anyhow::ensure!(vals.len() == o_s.len(),
-                            "shard returned {} objectives for {} rows",
-                            vals.len(), o_s.len());
-            o_s.copy_from_slice(&vals);
-            Ok(())
+            // each shard writes its own objective window — no copy-back
+            shard.backend.epoch_batch(w_s.into_inner(), k_epoch,
+                                      k_s.as_slice(), o_s.into_inner())
         })?;
         let call_s = t_call.elapsed_s();
         let inner = self.drain_shards(|b| b.take_profile());
         book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
                         Phase::Compute, inner);
-        Ok(objs)
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -500,20 +496,21 @@ impl<B: NvBatchBackend, P: ShardPolicy<B>> NvBatchBackend
     }
 
     fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
-                      g: &mut [f32]) -> Result<Vec<f64>> {
+                      g: &mut [f32], objs: &mut [f64]) -> Result<()> {
         let r = self.map.reps();
         self.ensure_panel(x.len(), "iterate")?;
         self.ensure_panel(g.len(), "gradient")?;
         anyhow::ensure!(keys.len() == r, "need one key per replication");
+        anyhow::ensure!(objs.len() == r,
+                        "need one objective slot per replication");
         let t_split = Timer::start();
-        let mut objs = vec![0.0f64; r];
         let ctxs: Vec<_> = {
             let x_parts = Panel::new(x, r, self.width).split_shards(&self.map);
             let key_parts = Panel::new(keys, r, 1).split_shards(&self.map);
             let g_parts =
                 PanelMut::new(g, r, self.width).split_shards(&self.map);
             let obj_parts =
-                PanelMut::new(&mut objs, r, 1).split_shards(&self.map);
+                PanelMut::new(objs, r, 1).split_shards(&self.map);
             x_parts
                 .into_iter()
                 .zip(key_parts)
@@ -526,20 +523,14 @@ impl<B: NvBatchBackend, P: ShardPolicy<B>> NvBatchBackend
         let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (x_s, k_s, g_s, o_s)| {
-            let vals = shard.backend.grad_obj_batch(
-                x_s.as_slice(), k_s.as_slice(), g_s.into_inner())?;
-            let o_s = o_s.into_inner();
-            anyhow::ensure!(vals.len() == o_s.len(),
-                            "shard returned {} objectives for {} rows",
-                            vals.len(), o_s.len());
-            o_s.copy_from_slice(&vals);
-            Ok(())
+            shard.backend.grad_obj_batch(x_s.as_slice(), k_s.as_slice(),
+                                         g_s.into_inner(), o_s.into_inner())
         })?;
         let call_s = t_call.elapsed_s();
         let inner = self.drain_shards(|b| b.take_profile());
         book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
                         Phase::Compute, inner);
-        Ok(objs)
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -562,20 +553,22 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
     }
 
     fn grad_batch(&mut self, w: &[f32], data: &crate::sim::ClassifyData,
-                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>> {
+                  idx: &[Vec<usize>], g: &mut [f32], losses: &mut [f64])
+        -> Result<()> {
         let r = self.map.reps();
         self.ensure_panel(w.len(), "iterate")?;
         self.ensure_panel(g.len(), "gradient")?;
         anyhow::ensure!(idx.len() == r, "need one index set per replication");
+        anyhow::ensure!(losses.len() == r,
+                        "need one loss slot per replication");
         let t_split = Timer::start();
-        let mut losses = vec![0.0f64; r];
         let ctxs: Vec<_> = {
             let w_parts = Panel::new(w, r, self.width).split_shards(&self.map);
             let idx_parts = Panel::new(idx, r, 1).split_shards(&self.map);
             let g_parts =
                 PanelMut::new(g, r, self.width).split_shards(&self.map);
             let loss_parts =
-                PanelMut::new(&mut losses, r, 1).split_shards(&self.map);
+                PanelMut::new(losses, r, 1).split_shards(&self.map);
             w_parts
                 .into_iter()
                 .zip(idx_parts)
@@ -588,20 +581,14 @@ impl<B: LrBatchBackend, P: ShardPolicy<B>> LrBatchBackend
         let t_call = Timer::start();
         P::for_each(&mut self.shards, self.threads, ctxs,
                     |shard, (w_s, i_s, g_s, l_s)| {
-            let vals = shard.backend.grad_batch(
-                w_s.as_slice(), data, i_s.as_slice(), g_s.into_inner())?;
-            let l_s = l_s.into_inner();
-            anyhow::ensure!(vals.len() == l_s.len(),
-                            "shard returned {} losses for {} rows",
-                            vals.len(), l_s.len());
-            l_s.copy_from_slice(&vals);
-            Ok(())
+            shard.backend.grad_batch(w_s.as_slice(), data, i_s.as_slice(),
+                                     g_s.into_inner(), l_s.into_inner())
         })?;
         let call_s = t_call.elapsed_s();
         let inner = self.drain_shards(|b| b.take_profile());
         book_shard_call(&mut self.prof, P::CONCURRENT, call_s,
                         Phase::Compute, inner);
-        Ok(losses)
+        Ok(())
     }
 
     fn hvp_batch(&mut self, wbar: &[f32], s: &[f32],
@@ -757,7 +744,7 @@ mod tests {
         }
 
         fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
-                       keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+                       keys: &[[u32; 2]], objs: &mut [f64]) -> Result<()> {
             self.calls += 1;
             let d = w.len() / keys.len();
             for (i, row) in w.chunks_mut(d).enumerate() {
@@ -769,8 +756,9 @@ mod tests {
                 for v in row.iter_mut() {
                     *v += (global * 100 + k_epoch) as f32;
                 }
+                objs[i] = keys[i][0] as f64;
             }
-            Ok(keys.iter().map(|k| k[0] as f64).collect())
+            Ok(())
         }
     }
 
@@ -779,7 +767,8 @@ mod tests {
         -> (Vec<f32>, Vec<f64>) {
         let keys: Vec<[u32; 2]> = (0..reps as u32).map(|i| [i, 0]).collect();
         let mut w = vec![0.0f32; reps * d];
-        let objs = plane.epoch_batch(&mut w, 7, &keys).unwrap();
+        let mut objs = vec![0.0f64; reps];
+        plane.epoch_batch(&mut w, 7, &keys, &mut objs).unwrap();
         (w, objs)
     }
 
@@ -813,13 +802,21 @@ mod tests {
         let make =
             |rows: Range<usize>| Ok(MarkerBackend { rows, calls: 0 });
         let mut plane = ShardedBatch::pooled(3, 3, 2, 2, make).unwrap();
+        let mut objs = vec![0.0f64; 3];
         let mut wrong = vec![0.0f32; 2]; // 1 row, 3 expected
-        assert!(plane.epoch_batch(&mut wrong, 0, &[[0, 0]; 3]).is_err());
+        assert!(plane
+            .epoch_batch(&mut wrong, 0, &[[0, 0]; 3], &mut objs)
+            .is_err());
         let mut ok = vec![0.0f32; 6];
-        assert!(plane.epoch_batch(&mut ok, 0, &[[0, 0]; 2]).is_err());
+        assert!(plane
+            .epoch_batch(&mut ok, 0, &[[0, 0]; 2], &mut objs)
+            .is_err());
+        assert!(plane
+            .epoch_batch(&mut ok, 0, &[[0, 0]; 3], &mut objs[..1])
+            .is_err());
         // a mis-routed key surfaces the shard's error, first error wins
         let err = plane
-            .epoch_batch(&mut ok, 0, &[[9, 0], [9, 0], [9, 0]])
+            .epoch_batch(&mut ok, 0, &[[9, 0], [9, 0], [9, 0]], &mut objs)
             .unwrap_err();
         assert!(format!("{:#}", err).contains("wrong shard row"));
     }

@@ -650,10 +650,12 @@ impl MvBatchBackend for XlaMvBatch {
     }
 
     fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
-                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+                   keys: &[[u32; 2]], objs: &mut [f64]) -> Result<()> {
         anyhow::ensure!(w.len() == self.r * self.d,
                         "iterate panel {} != {}×{}", w.len(), self.r, self.d);
         anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        anyhow::ensure!(objs.len() == self.r,
+                        "need one objective slot per replication");
         let t_stage = Timer::start();
         flatten_keys(keys, &mut self.keys_flat);
         self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
@@ -671,12 +673,15 @@ impl MvBatchBackend for XlaMvBatch {
         anyhow::ensure!(w_out.len() == w.len(),
                         "mv_epoch_batch returned wrong panel shape");
         w.copy_from_slice(&w_out);
-        let objs = exec::f32_vec(&outs[1])?;
-        anyhow::ensure!(objs.len() == self.r,
+        let obj_out = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(obj_out.len() == self.r,
                         "mv_epoch_batch returned {} objectives for {} \
-                         replications", objs.len(), self.r);
+                         replications", obj_out.len(), self.r);
+        for (slot, o) in objs.iter_mut().zip(obj_out) {
+            *slot = o as f64;
+        }
         self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        Ok(objs.into_iter().map(|o| o as f64).collect())
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -735,11 +740,13 @@ impl MvBatchBackend for XlaCvarBatch {
     }
 
     fn epoch_batch(&mut self, w: &mut [f32], k_epoch: usize,
-                   keys: &[[u32; 2]]) -> Result<Vec<f64>> {
+                   keys: &[[u32; 2]], objs: &mut [f64]) -> Result<()> {
         anyhow::ensure!(w.len() == self.r * self.row,
                         "iterate panel {} != {}×{}", w.len(), self.r,
                         self.row);
         anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        anyhow::ensure!(objs.len() == self.r,
+                        "need one objective slot per replication");
         let t_stage = Timer::start();
         flatten_keys(keys, &mut self.keys_flat);
         self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
@@ -757,12 +764,15 @@ impl MvBatchBackend for XlaCvarBatch {
         anyhow::ensure!(w_out.len() == w.len(),
                         "cv_epoch_batch returned wrong panel shape");
         w.copy_from_slice(&w_out);
-        let objs = exec::f32_vec(&outs[1])?;
-        anyhow::ensure!(objs.len() == self.r,
+        let obj_out = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(obj_out.len() == self.r,
                         "cv_epoch_batch returned {} objectives for {} \
-                         replications", objs.len(), self.r);
+                         replications", obj_out.len(), self.r);
+        for (slot, o) in objs.iter_mut().zip(obj_out) {
+            *slot = o as f64;
+        }
         self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        Ok(objs.into_iter().map(|o| o as f64).collect())
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -860,11 +870,13 @@ impl NvBatchBackend for XlaNvBatch {
     }
 
     fn grad_obj_batch(&mut self, x: &[f32], keys: &[[u32; 2]],
-                      g: &mut [f32]) -> Result<Vec<f64>> {
+                      g: &mut [f32], objs: &mut [f64]) -> Result<()> {
         anyhow::ensure!(x.len() == self.r * self.d,
                         "iterate panel {} != {}×{}", x.len(), self.r, self.d);
         anyhow::ensure!(g.len() == x.len(), "gradient panel shape mismatch");
         anyhow::ensure!(keys.len() == self.r, "need one key per replication");
+        anyhow::ensure!(objs.len() == self.r,
+                        "need one objective slot per replication");
         let t_stage = Timer::start();
         self.ensure_panel(keys)?;
         self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
@@ -883,12 +895,15 @@ impl NvBatchBackend for XlaNvBatch {
         anyhow::ensure!(g_out.len() == g.len(),
                         "nv_grad_panel_batch returned wrong panel shape");
         g.copy_from_slice(&g_out);
-        let objs = exec::f32_vec(&outs[1])?;
-        anyhow::ensure!(objs.len() == self.r,
+        let obj_out = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(obj_out.len() == self.r,
                         "nv_grad_panel_batch returned {} objectives for {} \
-                         replications", objs.len(), self.r);
+                         replications", obj_out.len(), self.r);
+        for (slot, o) in objs.iter_mut().zip(obj_out) {
+            *slot = o as f64;
+        }
         self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        Ok(objs.into_iter().map(|o| o as f64).collect())
+        Ok(())
     }
 
     fn take_profile(&mut self) -> Option<Profiler> {
@@ -994,12 +1009,15 @@ impl LrBatchBackend for XlaLrBatch {
     }
 
     fn grad_batch(&mut self, w: &[f32], _data: &ClassifyData,
-                  idx: &[Vec<usize>], g: &mut [f32]) -> Result<Vec<f64>> {
+                  idx: &[Vec<usize>], g: &mut [f32], losses: &mut [f64])
+        -> Result<()> {
         anyhow::ensure!(w.len() == self.r * self.n,
                         "iterate panel {} != {}×{}", w.len(), self.r, self.n);
         anyhow::ensure!(g.len() == w.len(), "gradient panel shape mismatch");
         anyhow::ensure!(idx.len() == self.r,
                         "need one index set per replication");
+        anyhow::ensure!(losses.len() == self.r,
+                        "need one loss slot per replication");
         let t_stage = Timer::start();
         self.flatten_idx(idx);
         self.prof.add(Phase::Dispatch, t_stage.elapsed_s());
@@ -1016,12 +1034,15 @@ impl LrBatchBackend for XlaLrBatch {
         anyhow::ensure!(g_out.len() == g.len(),
                         "lr_grad_batch returned wrong panel shape");
         g.copy_from_slice(&g_out);
-        let losses = exec::f32_vec(&outs[1])?;
-        anyhow::ensure!(losses.len() == self.r,
+        let loss_out = exec::f32_vec(&outs[1])?;
+        anyhow::ensure!(loss_out.len() == self.r,
                         "lr_grad_batch returned {} losses for {} \
-                         replications", losses.len(), self.r);
+                         replications", loss_out.len(), self.r);
+        for (slot, l) in losses.iter_mut().zip(loss_out) {
+            *slot = l as f64;
+        }
         self.prof.add(Phase::Reduce, t_red.elapsed_s());
-        Ok(losses.into_iter().map(|l| l as f64).collect())
+        Ok(())
     }
 
     fn hvp_batch(&mut self, wbar: &[f32], s: &[f32], _data: &ClassifyData,

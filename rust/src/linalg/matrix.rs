@@ -4,7 +4,7 @@
 use super::vector::dot;
 
 /// Row-major dense matrix.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
@@ -118,14 +118,26 @@ impl Mat {
 
     /// Column means — R̄ in Algorithm 1's panel.
     pub fn col_means(&self) -> Vec<f32> {
-        let mut m = vec![0.0f64; self.cols];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            for j in 0..self.cols {
-                m[j] += row[j] as f64;
+        let mut out = vec![0.0f32; self.cols];
+        self.col_means_into(&mut out);
+        out
+    }
+
+    /// Column means written into a caller-owned buffer — the arena variant
+    /// of [`Mat::col_means`].  Each column accumulates in f64 over ascending
+    /// rows (columns are independent, so per-column scalar accumulation is
+    /// the same addition sequence the row-major pass performs), hence the
+    /// two variants are bitwise-identical.
+    pub fn col_means_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cols);
+        let denom = self.rows.max(1) as f64;
+        for (j, slot) in out.iter_mut().enumerate() {
+            let mut s = 0.0f64;
+            for i in 0..self.rows {
+                s += self.data[i * self.cols + j] as f64;
             }
+            *slot = (s / denom) as f32;
         }
-        m.iter().map(|&s| (s / self.rows.max(1) as f64) as f32).collect()
     }
 
     /// Subtract `mu` from every row in place — panel centering.
@@ -203,6 +215,21 @@ mod tests {
     fn transpose_involution() {
         let m = sample();
         assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn col_means_into_is_bitwise_col_means() {
+        let m = Mat::from_rows(vec![
+            vec![1.0e-3, 2.5, -3.75],
+            vec![0.125, 5.0, 6.5],
+            vec![9.25, -0.5, 0.0625],
+        ]);
+        let want = m.col_means();
+        let mut got = vec![f32::NAN; 3];
+        m.col_means_into(&mut got);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

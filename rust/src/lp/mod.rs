@@ -9,4 +9,5 @@
 
 pub mod simplex;
 
-pub use simplex::{is_feasible, solve, LpProblem, LpResult};
+pub use simplex::{is_feasible, solve, solve_into, LpProblem, LpResult,
+                  LpStatus, Workspace};

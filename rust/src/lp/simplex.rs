@@ -178,22 +178,78 @@ impl Tableau {
     }
 }
 
+/// Reusable buffers for [`solve_into`] — sized on first use,
+/// allocation-free on every later solve of the same (or smaller) shape.
+/// Every buffer is fully re-initialized per call (`clear` + `resize` /
+/// `extend`), so a reused workspace is bitwise-identical to a fresh one.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    slack_sign: Vec<f64>,
+    needs_art: Vec<bool>,
+    t: Vec<f64>,
+    basis: Vec<usize>,
+    /// Primal solution after an `Optimal` return.
+    pub x: Vec<f64>,
+    /// Objective-row slack values (σᵢ, sign-corrected) after an `Optimal`
+    /// return — see [`LpResult::Optimal::duals`].
+    pub duals: Vec<f64>,
+}
+
+/// Outcome of [`solve_into`]; the primal/dual vectors stay in the
+/// [`Workspace`] so the hot path never allocates a result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LpStatus {
+    Optimal { obj: f64 },
+    Unbounded,
+    Infeasible,
+}
+
 /// Solve the LP.  See module docs for the algorithm.
 pub fn solve(p: &LpProblem) -> LpResult {
-    let (m, n) = (p.m, p.n);
+    let mut ws = Workspace::default();
+    match solve_into(&p.c, &p.a, &p.b, p.m, p.n, &mut ws) {
+        LpStatus::Optimal { obj } => LpResult::Optimal {
+            x: std::mem::take(&mut ws.x),
+            obj,
+            duals: std::mem::take(&mut ws.duals),
+        },
+        LpStatus::Unbounded => LpResult::Unbounded,
+        LpStatus::Infeasible => LpResult::Infeasible,
+    }
+}
+
+/// Arena variant of [`solve`]: minimize `c·x` s.t. `a x ≤ b`, `x ≥ 0`,
+/// with every intermediate living in `ws`.  Identical arithmetic to
+/// [`solve`] — only the storage is caller-owned.
+pub fn solve_into(c_in: &[f64], a_in: &[f64], b_in: &[f64], m: usize,
+                  n: usize, ws: &mut Workspace) -> LpStatus {
+    assert_eq!(c_in.len(), n);
+    assert_eq!(b_in.len(), m);
+    assert_eq!(a_in.len(), m * n, "A must be m×n row-major");
     if m == 0 {
         // Only x ≥ 0: bounded iff c ≥ 0, optimum at the origin.
-        return if p.c.iter().all(|&ci| ci >= -EPS) {
-            LpResult::Optimal { x: vec![0.0; n], obj: 0.0, duals: vec![] }
+        return if c_in.iter().all(|&ci| ci >= -EPS) {
+            ws.x.clear();
+            ws.x.resize(n, 0.0);
+            ws.duals.clear();
+            LpStatus::Optimal { obj: 0.0 }
         } else {
-            LpResult::Unbounded
+            LpStatus::Unbounded
         };
     }
 
     // Normalize rows to b ≥ 0 and track which need artificials.
-    let mut a = p.a.clone();
-    let mut b = p.b.clone();
-    let mut slack_sign = vec![1.0f64; m];
+    ws.a.clear();
+    ws.a.extend_from_slice(a_in);
+    ws.b.clear();
+    ws.b.extend_from_slice(b_in);
+    let a = &mut ws.a;
+    let b = &mut ws.b;
+    ws.slack_sign.clear();
+    ws.slack_sign.resize(m, 1.0);
+    let slack_sign = &mut ws.slack_sign;
     for r in 0..m {
         if b[r] < 0.0 {
             b[r] = -b[r];
@@ -203,15 +259,21 @@ pub fn solve(p: &LpProblem) -> LpResult {
             slack_sign[r] = -1.0; // slack col becomes -1 ⇒ artificial needed
         }
     }
-    let needs_art: Vec<bool> = slack_sign.iter().map(|&s| s < 0.0).collect();
+    ws.needs_art.clear();
+    ws.needs_art.extend(slack_sign.iter().map(|&s| s < 0.0));
+    let needs_art = &ws.needs_art;
     let n_art = needs_art.iter().filter(|&&x| x).count();
     let cols = n + m + n_art;
     let w = cols + 1;
-    let mut t = vec![0.0f64; (m + 1) * w];
+    let mut t = std::mem::take(&mut ws.t);
+    t.clear();
+    t.resize((m + 1) * w, 0.0);
 
     // Constraint rows.
     let mut art_col = n + m;
-    let mut basis = vec![0usize; m];
+    let mut basis = std::mem::take(&mut ws.basis);
+    basis.clear();
+    basis.resize(m, 0);
     for r in 0..m {
         for c in 0..n {
             t[r * w + c] = a[r * n + c];
@@ -248,7 +310,9 @@ pub fn solve(p: &LpProblem) -> LpResult {
         debug_assert!(bounded, "phase 1 is bounded below by 0");
         let phase1_obj = -tab.rhs(m);
         if phase1_obj > 1e-7 {
-            return LpResult::Infeasible;
+            ws.t = tab.t;
+            ws.basis = tab.basis;
+            return LpStatus::Infeasible;
         }
         // Drive any residual artificial out of the basis.
         for r in 0..m {
@@ -277,7 +341,7 @@ pub fn solve(p: &LpProblem) -> LpResult {
             tab.t[m * w2 + c] = 0.0;
         }
         for c in 0..n {
-            tab.t[m * w2 + c] = p.c[c];
+            tab.t[m * w2 + c] = c_in[c];
         }
         for r in 0..m {
             let bc = tab.basis[r];
@@ -292,22 +356,26 @@ pub fn solve(p: &LpProblem) -> LpResult {
     }
     let bounded = tab.optimize(&|c| c < n + m); // artificials barred
     if !bounded {
-        return LpResult::Unbounded;
+        ws.t = tab.t;
+        ws.basis = tab.basis;
+        return LpStatus::Unbounded;
     }
 
-    let mut x = vec![0.0f64; n];
+    ws.x.clear();
+    ws.x.resize(n, 0.0);
     for r in 0..m {
         if tab.basis[r] < n {
-            x[tab.basis[r]] = tab.rhs(r).max(0.0);
+            ws.x[tab.basis[r]] = tab.rhs(r).max(0.0);
         }
     }
-    let obj = p.c.iter().zip(&x).map(|(c, v)| c * v).sum();
+    let obj = c_in.iter().zip(&ws.x).map(|(c, v)| c * v).sum();
     // σᵢ: objective-row entries at the slack columns.  Rows that were
     // negated for phase 1 flip the slack sign, so un-flip here.
-    let duals = (0..m)
-        .map(|i| tab.at(m, n + i) * slack_sign[i])
-        .collect();
-    LpResult::Optimal { x, obj, duals }
+    ws.duals.clear();
+    ws.duals.extend((0..m).map(|i| tab.at(m, n + i) * slack_sign[i]));
+    ws.t = tab.t;
+    ws.basis = tab.basis;
+    LpStatus::Optimal { obj }
 }
 
 /// Feasibility check used by tests and the FW driver's debug assertions.
@@ -442,6 +510,45 @@ mod tests {
                 assert!(is_feasible(&p, &x, 1e-7));
             }
             other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn reused_workspace_is_bitwise_fresh_solve() {
+        // One workspace driven through problems of different shapes and
+        // outcomes must reproduce the allocating solver exactly, bit for
+        // bit — the arena path re-initializes every buffer per call.
+        let problems = [
+            LpProblem::new(vec![-3.0, -5.0],
+                           vec![1.0, 0.0, 0.0, 2.0, 3.0, 2.0],
+                           vec![4.0, 12.0, 18.0]),
+            LpProblem::new(vec![1.0], vec![1.0], vec![-1.0]), // infeasible
+            LpProblem::new(vec![1.0], vec![-1.0], vec![-2.0]), // phase 1
+            LpProblem::new(vec![-1.0, 0.0], vec![0.0, 1.0], vec![5.0]),
+            LpProblem::new(vec![2.0, 1.0],
+                           vec![1.0, 1.0, -1.0, -1.0],
+                           vec![5.0, -5.0]),
+        ];
+        let mut ws = Workspace::default();
+        for p in &problems {
+            let want = solve(p);
+            let status = solve_into(&p.c, &p.a, &p.b, p.m, p.n, &mut ws);
+            match (want, status) {
+                (LpResult::Optimal { x, obj, duals },
+                 LpStatus::Optimal { obj: obj2 }) => {
+                    assert_eq!(obj.to_bits(), obj2.to_bits());
+                    assert_eq!(x.len(), ws.x.len());
+                    for (a, b) in x.iter().zip(&ws.x) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                    for (a, b) in duals.iter().zip(&ws.duals) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+                (LpResult::Unbounded, LpStatus::Unbounded) => {}
+                (LpResult::Infeasible, LpStatus::Infeasible) => {}
+                (w, g) => panic!("solve {:?} vs solve_into {:?}", w, g),
+            }
         }
     }
 

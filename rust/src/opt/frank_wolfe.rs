@@ -197,8 +197,8 @@ impl<B: MvBatchBackend + ?Sized> PanelHook for EpochHook<'_, B> {
     }
 
     fn advance(&mut self, k: usize, panel: &mut [f32],
-               _trees: &[StreamTree]) -> Result<Vec<f64>> {
-        self.backend.epoch_batch(panel, k, &self.keys)
+               _trees: &[StreamTree], vals: &mut [f64]) -> Result<()> {
+        self.backend.epoch_batch(panel, k, &self.keys, vals)
     }
 
     fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
@@ -255,6 +255,9 @@ struct NvStepHook<'a, B: ?Sized> {
     m_inner: usize,
     d: usize,
     g: Vec<f32>,
+    /// Vertex arena for the per-row LMO solves, reused across every
+    /// solve of the run (DESIGN.md §16).
+    s: Vec<f32>,
     keys: Vec<[u32; 2]>,
     /// Host-side LMO + update wall accumulated during the current step
     /// (drained by `collect_profile`).
@@ -270,22 +273,23 @@ impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
     }
 
     fn advance(&mut self, k: usize, panel: &mut [f32],
-               trees: &[StreamTree]) -> Result<Vec<f64>> {
+               _trees: &[StreamTree], vals: &mut [f64]) -> Result<()> {
         let d = self.d;
-        let mut objs = vec![f64::NAN; trees.len()];
         for m in 0..self.m_inner {
-            objs = self.backend.grad_obj_batch(panel, &self.keys,
-                                               &mut self.g)?;
+            // each inner iteration overwrites vals; the step records the
+            // LAST inner objective, exactly as run_nv's sequential loop
+            self.backend.grad_obj_batch(panel, &self.keys, &mut self.g,
+                                        vals)?;
             let gamma = fw_gamma(k, m, self.m_inner);
             let t_host = Timer::start();
             for (i, lmo) in self.lmos.iter_mut().enumerate() {
-                let s = lmo.solve(&self.g[i * d..(i + 1) * d])?;
+                lmo.solve_into(&self.g[i * d..(i + 1) * d], &mut self.s)?;
                 crate::linalg::vector::fw_update(
-                    &mut panel[i * d..(i + 1) * d], &s, gamma);
+                    &mut panel[i * d..(i + 1) * d], &self.s, gamma);
             }
             self.lmo_s += t_host.elapsed_s();
         }
-        Ok(objs)
+        Ok(())
     }
 
     fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
@@ -344,6 +348,7 @@ pub fn run_nv_batch_ctl<B: NvBatchBackend + ?Sized>(
         m_inner,
         d,
         g: vec![0.0f32; r * d],
+        s: vec![0.0f32; d],
         keys: Vec::with_capacity(r),
         lmo_s: 0.0,
     };

@@ -51,10 +51,12 @@ pub trait PanelHook {
     /// `panel` is the `[R × n]` iterate panel; `trees[r]` is replication
     /// r's stream subtree — the SAME subtree the sequential driver
     /// receives, so batched and sequential runs stay bit-identical.
-    /// Returns the per-row value recorded for this step (the epoch
-    /// objective for FW tasks, the minibatch loss for SQN).
+    /// Writes the per-row value recorded for this step (the epoch
+    /// objective for FW tasks, the minibatch loss for SQN) into `vals`
+    /// (length R) — an out-param owned by the loop so the steady-state
+    /// step allocates nothing (DESIGN.md §16).
     fn advance(&mut self, k: usize, panel: &mut [f32],
-               trees: &[StreamTree]) -> Result<Vec<f64>>;
+               trees: &[StreamTree], vals: &mut [f64]) -> Result<()>;
 
     /// Untimed per-step observation (e.g. SQN tracked-loss checkpoints);
     /// runs after `advance`'s wall-clock has been recorded, mirroring the
@@ -181,6 +183,14 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
     }
     let mut panel = crate::backend::plane::tile_rows(x0, r);
     let mut traces = vec![FwTrace::default(); r];
+    for t in traces.iter_mut() {
+        // full-run capacity up front so the steady-state pushes in
+        // push_step never reallocate (DESIGN.md §16)
+        t.objs.reserve(steps);
+        t.epoch_s.reserve(steps);
+    }
+    // per-row step values, written in place by the hook every step
+    let mut vals = vec![f64::NAN; r];
     let mut live = vec![true; r];
     let mut frozen: Vec<(usize, usize)> = Vec::new();
     let mut early_stop = None;
@@ -197,11 +207,8 @@ pub fn run_panel_ctl<H: PanelHook + ?Sized>(
     for k in 0..steps {
         hook.prepare(k, trees)?;
         let t = Timer::start();
-        let vals = hook.advance(k, &mut panel, trees)?;
+        hook.advance(k, &mut panel, trees, &mut vals)?;
         let step_s = t.elapsed_s();
-        anyhow::ensure!(vals.len() == r,
-                        "hook returned {} values for {} replications",
-                        vals.len(), r);
         // phase attribution happens OUTSIDE the timed region, so the
         // recorded step_s (and every trace bit) matches an unprofiled run
         let mut step_prof = Profiler::new();
@@ -314,7 +321,7 @@ mod tests {
         }
 
         fn advance(&mut self, k: usize, panel: &mut [f32],
-                   trees: &[StreamTree]) -> Result<Vec<f64>> {
+                   trees: &[StreamTree], vals: &mut [f64]) -> Result<()> {
             self.advanced.push(k);
             let n = panel.len() / trees.len();
             for (r, row) in panel.chunks_mut(n).enumerate() {
@@ -322,7 +329,10 @@ mod tests {
                     *v -= r as f32;
                 }
             }
-            Ok((0..trees.len()).map(|r| (k * 10 + r) as f64).collect())
+            for (r, slot) in vals.iter_mut().enumerate() {
+                *slot = (k * 10 + r) as f64;
+            }
+            Ok(())
         }
 
         fn observe(&mut self, _k: usize, _panel: &[f32], _live: &[bool])
@@ -362,7 +372,7 @@ mod tests {
 
     impl PanelHook for FailingHook {
         fn advance(&mut self, _k: usize, _panel: &mut [f32],
-                   _trees: &[StreamTree]) -> Result<Vec<f64>> {
+                   _trees: &[StreamTree], _vals: &mut [f64]) -> Result<()> {
             anyhow::bail!("boom")
         }
     }
@@ -372,22 +382,6 @@ mod tests {
         let trees = vec![StreamTree::new(1)];
         let err = run_panel(&mut FailingHook, &[0.0], 1, &trees).unwrap_err();
         assert!(format!("{:#}", err).contains("boom"));
-    }
-
-    /// Wrong hook arity is caught by the loop, not silently zipped away.
-    struct ShortHook;
-
-    impl PanelHook for ShortHook {
-        fn advance(&mut self, _k: usize, _panel: &mut [f32],
-                   _trees: &[StreamTree]) -> Result<Vec<f64>> {
-            Ok(vec![0.0]) // one value for two replications
-        }
-    }
-
-    #[test]
-    fn wrong_value_count_rejected() {
-        let trees = vec![StreamTree::new(1), StreamTree::new(2)];
-        assert!(run_panel(&mut ShortHook, &[0.0], 1, &trees).is_err());
     }
 
     /// Hook with a fixed per-row objective schedule: row r's value at
@@ -400,12 +394,16 @@ mod tests {
 
     impl PanelHook for ScheduleHook {
         fn advance(&mut self, k: usize, panel: &mut [f32],
-                   _trees: &[StreamTree]) -> Result<Vec<f64>> {
+                   _trees: &[StreamTree], vals: &mut [f64]) -> Result<()> {
             for v in panel.iter_mut() {
                 *v -= 1.0;
             }
-            Ok(self.base.iter().zip(&self.slope)
-                .map(|(b, s)| b + s * k as f64).collect())
+            for ((slot, b), s) in
+                vals.iter_mut().zip(&self.base).zip(&self.slope)
+            {
+                *slot = b + s * k as f64;
+            }
+            Ok(())
         }
     }
 

@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::backend::{LrBackend, LrBatchBackend};
-use crate::rng::StreamTree;
+use crate::rng::{SampleScratch, StreamTree};
 use crate::sim::ClassifyData;
 use crate::tasks::{BatchCorrectionMemory, CorrectionMemory};
 use crate::util::profile::{Phase, Profiler};
@@ -258,14 +258,25 @@ struct SqnHook<'a, B: ?Sized> {
     mem: BatchCorrectionMemory,
     g: Vec<f32>,
     dirs: Vec<f32>,
-    // ω̄ accumulators (Algorithm 3 lines 3, 7, 15), one row per replication
+    // ω̄ accumulators (Algorithm 3 lines 3, 7, 15), one row per replication.
+    // All per-pair-step state below is flat `[R × n]` panels allocated once
+    // at hook construction, so the steady-state loop never touches the heap
+    // (DESIGN.md §16).  Every replication crosses t_count = 0 at the same
+    // iteration (the schedule is global), so ONE `has_prev` flag replaces
+    // the old per-row `Option<Vec<f32>>`.
     wbar_acc: Vec<f32>,
-    wbar_prev: Vec<Option<Vec<f32>>>,
+    wbar_t: Vec<f32>,
+    wbar_prev: Vec<f32>,
+    has_prev: bool,
+    s_panel: Vec<f32>,
+    y_panel: Vec<f32>,
     t_count: i64,
     /// Fixed tracked-loss evaluation subsets — the same per-subtree draw
     /// the sequential path makes.
     evals: Vec<(Vec<f32>, Vec<f32>)>,
     idx: Vec<Vec<usize>>,
+    hidx: Vec<Vec<usize>>,
+    scratch: SampleScratch,
     checkpoints: Vec<Vec<(usize, f64)>>,
     pairs_accepted: Vec<usize>,
     pairs_rejected: Vec<usize>,
@@ -278,23 +289,23 @@ struct SqnHook<'a, B: ?Sized> {
 
 impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
     fn advance(&mut self, k0: usize, panel: &mut [f32],
-               trees: &[StreamTree]) -> Result<Vec<f64>> {
+               trees: &[StreamTree], vals: &mut [f64]) -> Result<()> {
         let (r, n, cfg, data) = (self.r, self.n, self.cfg, self.data);
         let k = k0 + 1; // Algorithm 3 counts iterations from 1
         let w = panel;
 
         // -- line 5: per-replication minibatch indices ----------------------
+        // (fixed-length rows + reused scratch: the same draw sequence as
+        // `sample_indices`, with no per-step heap traffic)
         let t_idx = Timer::start();
         for (row, tree) in self.idx.iter_mut().zip(trees) {
             let mut rng = tree.stream(&[1, k as u64]);
-            *row = rng.sample_indices(data.n_samples,
-                                      cfg.batch.min(data.n_samples));
+            rng.sample_indices_into(data.n_samples, &mut self.scratch, row);
         }
         self.dispatch_s += t_idx.elapsed_s();
 
         // -- line 6: ONE batched stochastic-gradient dispatch ---------------
-        let losses =
-            self.backend.grad_batch(w, data, &self.idx, &mut self.g)?;
+        self.backend.grad_batch(w, data, &self.idx, &mut self.g, vals)?;
 
         // -- line 7: ω̄ accumulation + step size ----------------------------
         let t_red = Timer::start();
@@ -344,55 +355,48 @@ impl<B: LrBatchBackend + ?Sized> PanelHook for SqnHook<'_, B> {
             let mut hvp_s = 0.0f64;
             self.t_count += 1;
             let inv = 1.0 / cfg.l_every as f32;
-            let wbar_ts: Vec<Vec<f32>> = (0..r)
-                .map(|i| {
-                    self.wbar_acc[i * n..(i + 1) * n]
-                        .iter()
-                        .map(|&v| v * inv)
-                        .collect()
-                })
-                .collect();
+            // ω̄_t = accumulated iterates / L, straight into the flat panel
+            // (same per-element arithmetic as the old row-by-row collect)
+            for (slot, &acc) in self.wbar_t.iter_mut().zip(&self.wbar_acc) {
+                *slot = acc * inv;
+            }
             if self.t_count > 0 {
-                // s_t and Hessian-batch indices per replication
-                let mut s_panel = vec![0.0f32; r * n];
-                let mut wbar_panel = vec![0.0f32; r * n];
-                let mut hidx: Vec<Vec<usize>> = Vec::with_capacity(r);
-                for i in 0..r {
-                    let prev = self.wbar_prev[i]
-                        .as_ref()
-                        .expect("t>0 ⇒ previous ω̄");
-                    for j in 0..n {
-                        wbar_panel[i * n + j] = wbar_ts[i][j];
-                        s_panel[i * n + j] = wbar_ts[i][j] - prev[j];
-                    }
-                    let mut hrng =
-                        trees[i].stream(&[2, self.t_count as u64]);
-                    hidx.push(hrng.sample_indices(
-                        data.n_samples, cfg.hbatch.min(data.n_samples)));
+                anyhow::ensure!(self.has_prev, "t>0 ⇒ previous ω̄");
+                // s_t = ω̄_t − ω̄_{t−1}, and Hessian-batch indices per row
+                for ((slot, &a), &b) in self.s_panel.iter_mut()
+                    .zip(&self.wbar_t)
+                    .zip(&self.wbar_prev)
+                {
+                    *slot = a - b;
+                }
+                for (row, tree) in self.hidx.iter_mut().zip(trees) {
+                    let mut hrng = tree.stream(&[2, self.t_count as u64]);
+                    hrng.sample_indices_into(data.n_samples,
+                                             &mut self.scratch, row);
                 }
                 // line 18: ONE batched Hessian-vector dispatch
-                let mut y_panel = vec![0.0f32; r * n];
                 let t_hvp = Timer::start();
-                self.backend.hvp_batch(&wbar_panel, &s_panel, data, &hidx,
-                                       &mut y_panel)?;
+                self.backend.hvp_batch(&self.wbar_t, &self.s_panel, data,
+                                       &self.hidx, &mut self.y_panel)?;
                 hvp_s = t_hvp.elapsed_s();
                 for i in 0..r {
-                    if self.mem.push_row(i, &s_panel[i * n..(i + 1) * n],
-                                         &y_panel[i * n..(i + 1) * n]) {
+                    if self.mem.push_row(i,
+                                         &self.s_panel[i * n..(i + 1) * n],
+                                         &self.y_panel[i * n..(i + 1) * n])
+                    {
                         self.pairs_accepted[i] += 1;
                     } else {
                         self.pairs_rejected[i] += 1;
                     }
                 }
             }
-            for (prev, wbar_t) in self.wbar_prev.iter_mut().zip(wbar_ts) {
-                *prev = Some(wbar_t);
-            }
+            self.wbar_prev.copy_from_slice(&self.wbar_t);
+            self.has_prev = true;
             self.wbar_acc.iter_mut().for_each(|v| *v = 0.0);
             // the pair bookkeeping minus the HVP kernel itself
             self.red_s += t_pair.elapsed_s() - hvp_s;
         }
-        Ok(losses)
+        Ok(())
     }
 
     fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
@@ -510,10 +514,18 @@ pub fn run_sqn_batch_ctl<B: LrBatchBackend + ?Sized>(
         g: vec![0.0f32; r * n],
         dirs: vec![0.0f32; r * n],
         wbar_acc: vec![0.0f32; r * n],
-        wbar_prev: vec![None; r],
+        wbar_t: vec![0.0f32; r * n],
+        wbar_prev: vec![0.0f32; r * n],
+        has_prev: false,
+        s_panel: vec![0.0f32; r * n],
+        y_panel: vec![0.0f32; r * n],
         t_count: -1,
         evals,
-        idx: vec![Vec::new(); r],
+        idx: vec![vec![0usize; cfg.batch.min(data.n_samples)]; r],
+        hidx: vec![vec![0usize; cfg.hbatch.min(data.n_samples)]; r],
+        scratch: SampleScratch::for_draws(
+            data.n_samples,
+            cfg.batch.max(cfg.hbatch).min(data.n_samples)),
         checkpoints: vec![Vec::new(); r],
         pairs_accepted: vec![0; r],
         pairs_rejected: vec![0; r],

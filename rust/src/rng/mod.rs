@@ -17,5 +17,5 @@ pub mod philox;
 pub mod streams;
 
 pub use normal::NormalSampler;
-pub use philox::Philox;
+pub use philox::{Philox, SampleScratch};
 pub use streams::StreamTree;

@@ -110,27 +110,66 @@ impl Philox {
 
     /// Sample `k` distinct indices from [0, n) (partial Fisher-Yates).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut scratch = SampleScratch::for_draws(n, k);
+        let mut out = vec![0usize; k];
+        self.sample_indices_into(n, &mut scratch, &mut out);
+        out
+    }
+
+    /// Arena variant of [`Philox::sample_indices`]: writes `out.len()`
+    /// distinct indices from [0, n) into `out` using caller-owned scratch.
+    ///
+    /// The draw sequence is identical to `sample_indices` — both branches
+    /// consume the same `below` calls in the same order (set membership and
+    /// swap targets do not depend on scratch layout), so a reused scratch is
+    /// bitwise-equivalent to a fresh one.  With a scratch sized by
+    /// [`SampleScratch::for_draws`], steady-state calls touch no heap.
+    pub fn sample_indices_into(&mut self, n: usize,
+                               scratch: &mut SampleScratch,
+                               out: &mut [usize]) {
+        let k = out.len();
         assert!(k <= n, "cannot sample {} from {}", k, n);
         // For small k relative to n use a set-based draw; else shuffle.
         if k * 8 < n {
-            let mut seen = std::collections::HashSet::with_capacity(k * 2);
-            let mut out = Vec::with_capacity(k);
-            while out.len() < k {
+            scratch.seen.clear();
+            let mut filled = 0;
+            while filled < k {
                 let i = self.below(n as u32) as usize;
-                if seen.insert(i) {
-                    out.push(i);
+                if scratch.seen.insert(i) {
+                    out[filled] = i;
+                    filled += 1;
                 }
             }
-            out
         } else {
-            let mut idx: Vec<usize> = (0..n).collect();
+            scratch.idx.clear();
+            scratch.idx.extend(0..n);
             for i in 0..k {
                 let j = i + self.below((n - i) as u32) as usize;
-                idx.swap(i, j);
+                scratch.idx.swap(i, j);
             }
-            idx.truncate(k);
-            idx
+            out.copy_from_slice(&scratch.idx[..k]);
         }
+    }
+}
+
+/// Reusable scratch for [`Philox::sample_indices_into`].  The rejection set
+/// never holds more than `k` entries and the shuffle buffer never more than
+/// `n`, so a scratch built by [`SampleScratch::for_draws`] is allocation-free
+/// for every subsequent draw of the same (or smaller) shape.
+#[derive(Debug, Default)]
+pub struct SampleScratch {
+    seen: std::collections::HashSet<usize>,
+    idx: Vec<usize>,
+}
+
+impl SampleScratch {
+    pub fn for_draws(n: usize, k: usize) -> Self {
+        let mut s = SampleScratch::default();
+        s.seen.reserve(k * 2);
+        if !(k * 8 < n) {
+            s.idx.reserve(n);
+        }
+        s
     }
 }
 
@@ -229,5 +268,23 @@ mod tests {
     #[should_panic(expected = "cannot sample")]
     fn sample_more_than_population_panics() {
         Philox::new(0).sample_indices(3, 4);
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating_variant() {
+        // (100, 5) takes the set branch, (50, 50) and (1000, 100) exercise
+        // both Fisher-Yates and the borderline; one REUSED scratch across
+        // all shapes must still reproduce the fresh-scratch draws exactly.
+        let mut scratch = SampleScratch::default();
+        for (n, k) in [(100usize, 5usize), (50, 50), (1000, 100), (100, 5)] {
+            let mut a = Philox::new(11);
+            let mut b = Philox::new(11);
+            let want = a.sample_indices(n, k);
+            let mut got = vec![0usize; k];
+            b.sample_indices_into(n, &mut scratch, &mut got);
+            assert_eq!(want, got, "n={} k={}", n, k);
+            assert_eq!(a.next_u32(), b.next_u32(),
+                       "stream positions diverged at n={} k={}", n, k);
+        }
     }
 }

@@ -375,17 +375,38 @@ pub fn hbuild_explicit(mem: &CorrectionMemory) -> Mat {
 /// per-replication path and the batched engine's padded rows run, so the
 /// two are bit-identical by construction.
 pub fn hbuild_explicit_view(mem: MemView<'_>) -> Mat {
+    let mut h = Mat::zeros(mem.n, mem.n);
+    let mut hy = Vec::new();
+    hbuild_explicit_into(mem, &mut h, &mut hy);
+    h
+}
+
+/// Arena variant of [`hbuild_explicit_view`]: rebuild H_t INTO a
+/// caller-owned matrix (reshaped/zeroed in place) with a reusable `hy`
+/// scratch.  Every cell is re-initialized per call, so a reused `h` is
+/// bitwise-identical to a fresh build — this is what lets the native
+/// batch arm's per-row explicit-H caches refresh without reallocating
+/// an n×n matrix every L steps.
+pub fn hbuild_explicit_into(mem: MemView<'_>, h: &mut Mat,
+                            hy: &mut Vec<f32>) {
     let n = mem.n;
+    h.rows = n;
+    h.cols = n;
+    h.data.clear();
+    h.data.resize(n * n, 0.0);
+    hy.clear();
+    hy.resize(n, 0.0);
     if mem.is_empty() {
-        return Mat::eye(n);
+        for i in 0..n {
+            h.set(i, i, 1.0);
+        }
+        return;
     }
     let (s_l, y_l) = mem.pair(mem.count - 1);
     let gamma = (dot(s_l, y_l) / dot(y_l, y_l).max(EPS)).max(EPS);
-    let mut h = Mat::zeros(n, n);
     for i in 0..n {
         h.set(i, i, gamma);
     }
-    let mut hy = vec![0.0f32; n];
     for idx in 0..mem.count {
         let (s, y) = mem.pair(idx);
         let denom = dot(y, s);
@@ -393,8 +414,8 @@ pub fn hbuild_explicit_view(mem: MemView<'_>) -> Mat {
             continue;
         }
         let rho = 1.0 / denom;
-        h.matvec(y, &mut hy); // H is symmetric ⇒ yᵀH = hyᵀ
-        let q = dot(y, &hy);
+        h.matvec(y, hy); // H is symmetric ⇒ yᵀH = hyᵀ
+        let q = dot(y, hy);
         let c2 = rho * rho * q + rho;
         for i in 0..n {
             let si = s[i];
@@ -405,7 +426,6 @@ pub fn hbuild_explicit_view(mem: MemView<'_>) -> Mat {
             }
         }
     }
-    h
 }
 
 /// Build H (Algorithm 4) and apply it to `g` in one shot.
@@ -424,19 +444,46 @@ pub fn hdir_twoloop(mem: &CorrectionMemory, g: &[f32]) -> Vec<f32> {
 
 /// [`hdir_twoloop`] on a padded view (see [`hbuild_explicit_view`]).
 pub fn hdir_twoloop_view(mem: MemView<'_>, g: &[f32]) -> Vec<f32> {
+    let mut scratch = TwoLoopScratch::default();
+    let mut out = vec![0.0f32; g.len()];
+    hdir_twoloop_into(mem, g, &mut scratch, &mut out);
+    out
+}
+
+/// Reusable q/alpha/rho buffers for [`hdir_twoloop_into`]; every field is
+/// re-initialized per call, so one scratch serves any sequence of views.
+#[derive(Debug, Default, Clone)]
+pub struct TwoLoopScratch {
+    q: Vec<f32>,
+    alpha: Vec<f32>,
+    rho: Vec<f32>,
+}
+
+/// Arena variant of [`hdir_twoloop_view`]: write the two-loop direction
+/// INTO a caller-owned slice using caller-owned temporaries.
+pub fn hdir_twoloop_into(mem: MemView<'_>, g: &[f32],
+                         scratch: &mut TwoLoopScratch, out: &mut [f32]) {
     let n = mem.n;
     assert_eq!(g.len(), n);
+    assert_eq!(out.len(), n);
     if mem.is_empty() {
-        return g.to_vec();
+        out.copy_from_slice(g);
+        return;
     }
-    let mut q = g.to_vec();
-    let mut alpha = vec![0.0f32; mem.count];
-    let mut rho = vec![0.0f32; mem.count];
+    let q = &mut scratch.q;
+    q.clear();
+    q.extend_from_slice(g);
+    let alpha = &mut scratch.alpha;
+    alpha.clear();
+    alpha.resize(mem.count, 0.0);
+    let rho = &mut scratch.rho;
+    rho.clear();
+    rho.resize(mem.count, 0.0);
     for i in (0..mem.count).rev() {
         let (s, y) = mem.pair(i);
         let denom = dot(y, s);
         rho[i] = if denom > EPS { 1.0 / denom } else { 0.0 };
-        let a = rho[i] * dot(s, &q);
+        let a = rho[i] * dot(s, q);
         alpha[i] = a;
         for j in 0..n {
             q[j] -= a * y[j];
@@ -444,16 +491,17 @@ pub fn hdir_twoloop_view(mem: MemView<'_>, g: &[f32]) -> Vec<f32> {
     }
     let (s_l, y_l) = mem.pair(mem.count - 1);
     let gamma = (dot(s_l, y_l) / dot(y_l, y_l).max(EPS)).max(EPS);
-    let mut r: Vec<f32> = q.iter().map(|&v| gamma * v).collect();
+    for (slot, &v) in out.iter_mut().zip(q.iter()) {
+        *slot = gamma * v;
+    }
     for i in 0..mem.count {
         let (s, y) = mem.pair(i);
-        let b = rho[i] * dot(y, &r);
+        let b = rho[i] * dot(y, out);
         let coef = alpha[i] - b;
         for j in 0..n {
-            r[j] += coef * s[j];
+            out[j] += coef * s[j];
         }
     }
-    r
 }
 
 /// Full-dataset (or subset) mean loss — the convergence metric the RSE trace
@@ -653,6 +701,37 @@ mod tests {
         let h_b = hbuild_explicit_view(mem.view());
         assert_eq!(h_a.data, h_b.data);
         assert_eq!(hdir_twoloop(&mem, &g), hdir_twoloop_view(mem.view(), &g));
+    }
+
+    #[test]
+    fn into_recursions_with_reused_arenas_are_bitwise() {
+        let mut p = Philox::new(17);
+        let n = 6;
+        // Reused arenas across four views of growing count (incl. empty).
+        let mut h = Mat::zeros(1, 1);
+        let mut hy = Vec::new();
+        let mut scratch = TwoLoopScratch::default();
+        let mut out = vec![0.0f32; n];
+        let mut mem = CorrectionMemory::new(4, n);
+        for round in 0..4 {
+            let g: Vec<f32> =
+                (0..n).map(|_| p.uniform_f32(-1.0, 1.0)).collect();
+            let h_fresh = hbuild_explicit_view(mem.view());
+            hbuild_explicit_into(mem.view(), &mut h, &mut hy);
+            assert_eq!(h_fresh.rows, h.rows);
+            for (a, b) in h_fresh.data.iter().zip(&h.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {}", round);
+            }
+            let d_fresh = hdir_twoloop_view(mem.view(), &g);
+            hdir_twoloop_into(mem.view(), &g, &mut scratch, &mut out);
+            for (a, b) in d_fresh.iter().zip(&out) {
+                assert_eq!(a.to_bits(), b.to_bits(), "round {}", round);
+            }
+            let s: Vec<f32> =
+                (0..n).map(|_| p.uniform_f32(-0.5, 0.5)).collect();
+            let y: Vec<f32> = s.iter().map(|&v| 1.5 * v + 0.01).collect();
+            mem.push(&s, &y);
+        }
     }
 
     #[test]

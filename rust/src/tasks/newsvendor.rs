@@ -1,7 +1,7 @@
 //! Task 2 math (paper §3.2): Monte-Carlo gradient/objective on a demand
 //! panel, and the LP-backed LMO over {Ax ≤ C, x ≥ 0} (Algorithm 2 line 8).
 
-use crate::lp::{self, LpProblem, LpResult};
+use crate::lp::{self, LpStatus};
 use crate::sim::NewsvendorInstance;
 
 /// MC gradient (paper eq. (9)) — sequential, one product at a time, one
@@ -73,6 +73,17 @@ pub struct NvLmo {
     /// Set true to bypass column generation (used by tests/benches to
     /// compare against the full dense solve).
     pub full_solve: bool,
+    // Arenas (DESIGN.md §16): every per-call intermediate is re-initialized
+    // from scratch each solve, so a reused LMO is bitwise-identical to a
+    // fresh one; after the first call of a given shape, none of them
+    // touches the heap again.
+    neg: Vec<usize>,
+    active: Vec<usize>,
+    in_active: Vec<bool>,
+    violators: Vec<(usize, f64)>,
+    a_sub: Vec<f64>,
+    c_sub: Vec<f64>,
+    ws: lp::Workspace,
 }
 
 impl NvLmo {
@@ -81,105 +92,152 @@ impl NvLmo {
         let n = inst.dim();
         let a = inst.a.data.iter().map(|&v| v as f64).collect();
         let cap = inst.cap.iter().map(|&v| v as f64).collect();
-        NvLmo { a, cap, m, n, solves: 0, rounds: 0, full_solve: false }
+        NvLmo {
+            a,
+            cap,
+            m,
+            n,
+            solves: 0,
+            rounds: 0,
+            full_solve: false,
+            neg: Vec::new(),
+            active: Vec::new(),
+            in_active: Vec::new(),
+            violators: Vec::new(),
+            a_sub: Vec::new(),
+            c_sub: Vec::new(),
+            ws: lp::Workspace::default(),
+        }
     }
 
     /// Solve the LMO for gradient `g`, returning the optimal vertex.
     pub fn solve(&mut self, g: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let mut x = vec![0.0f32; self.n];
+        self.solve_into(g, &mut x)?;
+        Ok(x)
+    }
+
+    /// Arena variant of [`NvLmo::solve`]: the optimal vertex is written
+    /// into `x`, and every intermediate (candidate pool, restricted LP,
+    /// pricing pass) lives in the LMO's own scratch.
+    pub fn solve_into(&mut self, g: &[f32], x: &mut [f32])
+        -> anyhow::Result<()> {
         assert_eq!(g.len(), self.n);
+        assert_eq!(x.len(), self.n);
         self.solves += 1;
         if self.full_solve {
-            return self.solve_full(g);
+            return self.solve_full_into(g, x);
         }
 
         // candidate pool: negative-gradient columns, most negative first
-        let mut neg: Vec<usize> = (0..self.n).filter(|&j| g[j] < 0.0).collect();
-        if neg.is_empty() {
-            return Ok(vec![0.0; self.n]); // origin is optimal
+        self.neg.clear();
+        self.neg.extend((0..self.n).filter(|&j| g[j] < 0.0));
+        if self.neg.is_empty() {
+            x.fill(0.0); // origin is optimal
+            return Ok(());
         }
-        let pool = (8 * self.m).max(64).min(neg.len());
-        if pool < neg.len() {
+        let pool = (8 * self.m).max(64).min(self.neg.len());
+        if pool < self.neg.len() {
             // partial selection: only the pool prefix needs ordering
-            neg.select_nth_unstable_by(pool - 1, |&i, &j| {
+            self.neg.select_nth_unstable_by(pool - 1, |&i, &j| {
                 g[i].partial_cmp(&g[j]).unwrap()
             });
         }
-        let mut active: Vec<usize> = neg[..pool].to_vec();
-        let mut in_active = vec![false; self.n];
-        for &j in &active {
-            in_active[j] = true;
+        self.active.clear();
+        self.active.extend_from_slice(&self.neg[..pool]);
+        self.in_active.clear();
+        self.in_active.resize(self.n, false);
+        for &j in &self.active {
+            self.in_active[j] = true;
         }
 
         const MAX_ROUNDS: usize = 12;
         for _ in 0..MAX_ROUNDS {
             self.rounds += 1;
-            let (x_sub, duals) = self.solve_restricted(g, &active)?;
+            // restricted LP over the active columns (inlined so every
+            // buffer is an arena field)
+            let k = self.active.len();
+            self.a_sub.clear();
+            self.a_sub.resize(self.m * k, 0.0);
+            for i in 0..self.m {
+                for (pos, &j) in self.active.iter().enumerate() {
+                    self.a_sub[i * k + pos] = self.a[i * self.n + j];
+                }
+            }
+            self.c_sub.clear();
+            self.c_sub.extend(self.active.iter().map(|&j| g[j] as f64));
+            match lp::solve_into(&self.c_sub, &self.a_sub, &self.cap,
+                                 self.m, k, &mut self.ws) {
+                LpStatus::Optimal { .. } => {}
+                LpStatus::Unbounded => anyhow::bail!(
+                    "newsvendor LMO unbounded — technology matrix must be \
+                     positive"
+                ),
+                LpStatus::Infeasible => anyhow::bail!(
+                    "newsvendor LMO infeasible — capacities must be \
+                     nonnegative"
+                ),
+            }
             // price the remaining candidates against the duals
-            let mut violators: Vec<(usize, f64)> = Vec::new();
-            for &j in &neg {
-                if in_active[j] {
+            self.violators.clear();
+            for &j in &self.neg {
+                if self.in_active[j] {
                     continue;
                 }
                 let mut r = g[j] as f64;
                 for i in 0..self.m {
-                    r += duals[i] * self.a[i * self.n + j];
+                    r += self.ws.duals[i] * self.a[i * self.n + j];
                 }
                 if r < -1e-7 {
-                    violators.push((j, r));
+                    self.violators.push((j, r));
                 }
             }
-            if violators.is_empty() {
+            if self.violators.is_empty() {
                 // restricted optimum is globally optimal
-                let mut x = vec![0.0f32; self.n];
-                for (pos, &j) in active.iter().enumerate() {
-                    x[j] = x_sub[pos] as f32;
+                x.fill(0.0);
+                for (pos, &j) in self.active.iter().enumerate() {
+                    x[j] = self.ws.x[pos] as f32;
                 }
-                return Ok(x);
+                return Ok(());
             }
-            violators.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            for (j, _) in violators.into_iter().take((4 * self.m).max(16)) {
-                active.push(j);
-                in_active[j] = true;
+            // unstable sort: in-place (a stable sort allocates its merge
+            // buffer); deterministic for any fixed input either way
+            self.violators
+                .sort_unstable_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let take = (4 * self.m).max(16).min(self.violators.len());
+            for pos in 0..take {
+                let j = self.violators[pos].0;
+                self.active.push(j);
+                self.in_active[j] = true;
             }
         }
         // pathological instance: fall back to the dense solve
-        self.solve_full(g)
-    }
-
-    fn solve_restricted(&self, g: &[f32], cols: &[usize])
-        -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
-        let k = cols.len();
-        let mut a_sub = vec![0.0f64; self.m * k];
-        for i in 0..self.m {
-            for (pos, &j) in cols.iter().enumerate() {
-                a_sub[i * k + pos] = self.a[i * self.n + j];
-            }
-        }
-        let c_sub: Vec<f64> = cols.iter().map(|&j| g[j] as f64).collect();
-        let p = LpProblem::new(c_sub, a_sub, self.cap.clone());
-        match lp::solve(&p) {
-            LpResult::Optimal { x, duals, .. } => Ok((x, duals)),
-            LpResult::Unbounded => anyhow::bail!(
-                "newsvendor LMO unbounded — technology matrix must be positive"
-            ),
-            LpResult::Infeasible => anyhow::bail!(
-                "newsvendor LMO infeasible — capacities must be nonnegative"
-            ),
-        }
+        self.solve_full_into(g, x)
     }
 
     /// Dense full-column solve (reference path / fallback).
     pub fn solve_full(&mut self, g: &[f32]) -> anyhow::Result<Vec<f32>> {
-        let c: Vec<f64> = g.iter().map(|&v| v as f64).collect();
-        let p = LpProblem::new(c, self.a.clone(), self.cap.clone());
-        match lp::solve(&p) {
-            LpResult::Optimal { x, .. } => {
-                Ok(x.into_iter().map(|v| v as f32).collect())
+        let mut x = vec![0.0f32; self.n];
+        self.solve_full_into(g, &mut x)?;
+        Ok(x)
+    }
+
+    fn solve_full_into(&mut self, g: &[f32], x: &mut [f32])
+        -> anyhow::Result<()> {
+        self.c_sub.clear();
+        self.c_sub.extend(g.iter().map(|&v| v as f64));
+        match lp::solve_into(&self.c_sub, &self.a, &self.cap, self.m,
+                             self.n, &mut self.ws) {
+            LpStatus::Optimal { .. } => {
+                for (slot, &v) in x.iter_mut().zip(&self.ws.x) {
+                    *slot = v as f32;
+                }
+                Ok(())
             }
-            LpResult::Unbounded => anyhow::bail!(
+            LpStatus::Unbounded => anyhow::bail!(
                 "newsvendor LMO unbounded — technology matrix must be positive"
             ),
-            LpResult::Infeasible => anyhow::bail!(
+            LpStatus::Infeasible => anyhow::bail!(
                 "newsvendor LMO infeasible — capacities must be nonnegative"
             ),
         }
@@ -291,6 +349,25 @@ mod tests {
         // pool almost always suffices in one round
         assert!(lmo.rounds <= lmo.solves * 3, "rounds {} solves {}",
                 lmo.rounds, lmo.solves);
+    }
+
+    #[test]
+    fn solve_into_reuse_is_bitwise_fresh_solve() {
+        // One arena-backed LMO driven across many gradients must match a
+        // fresh LMO per gradient bit-for-bit.
+        let inst = NewsvendorInstance::generate(&StreamTree::new(9), 64, 4, 0.6);
+        let mut reused = NvLmo::new(&inst);
+        let mut rng = crate::rng::Philox::new(31);
+        let mut x = vec![0.0f32; 64];
+        for case in 0..10 {
+            let g: Vec<f32> =
+                (0..64).map(|_| rng.uniform_f32(-3.0, 2.0)).collect();
+            let want = NvLmo::new(&inst).solve(&g).unwrap();
+            reused.solve_into(&g, &mut x).unwrap();
+            for (a, b) in want.iter().zip(&x) {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {}", case);
+            }
+        }
     }
 
     #[test]

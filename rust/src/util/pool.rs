@@ -1,12 +1,19 @@
 //! Worker thread pool + scoped parallel map (no rayon/tokio offline).
 //!
-//! Two tools:
+//! Three tools:
 //! * [`ThreadPool`] — long-lived workers consuming boxed jobs from a shared
 //!   queue; used by the coordinator for replication fan-out.
 //! * [`parallel_map_chunks`] — scoped data-parallel helper for the
 //!   `native_par` ablation backend: splits an index range over N threads and
 //!   merges results in order.
+//! * [`parallel_try_jobs`] — the disjoint-slice variant for the native batch
+//!   engines: the caller pre-splits its output panel into `&mut` chunks with
+//!   [`chunk_len`] + `chunks_mut` (the exact same boundaries
+//!   `parallel_map_chunks` would use) and hands one `FnOnce` job per chunk;
+//!   no `Mutex`, no merge copy, and a single job runs inline on the calling
+//!   thread without touching the heap (DESIGN.md §16).
 
+use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
@@ -144,6 +151,85 @@ where
     out.into_iter().map(|o| o.unwrap()).collect()
 }
 
+/// Chunk length [`parallel_map_chunks`] uses for `n` items over `threads`
+/// workers — exposed so slice-handing callers can reproduce the exact same
+/// split with `chunks_mut` and stay bitwise-aligned with the range-based
+/// fan-out (same rows land on the same worker either way).
+pub fn chunk_len(n: usize, threads: usize) -> usize {
+    let threads = threads.max(1).min(n.max(1));
+    n.div_ceil(threads).max(1)
+}
+
+/// Run one `FnOnce` job per pre-split chunk of a disjoint workload.
+///
+/// * an empty iterator is a no-op;
+/// * exactly ONE job runs inline on the calling thread — no spawn, no heap
+///   traffic, which is what keeps the `threads == 1` native batch hot path
+///   allocation-free at steady state (pinned by `tests/alloc_regression.rs`);
+/// * two or more jobs run on scoped threads, and the first error in job
+///   order is the one propagated (later errors are dropped, matching the
+///   old first-error `merge_rows` contract).
+///
+/// Jobs capture `&mut` slices of the caller's output panel directly
+/// (`chunks_mut`-split, hence disjoint), so no per-row `Mutex` and no
+/// copy-back merge phase is needed.
+pub fn parallel_try_jobs<I, J>(jobs: I) -> Result<()>
+where
+    I: IntoIterator<Item = J>,
+    J: FnOnce() -> Result<()> + Send,
+{
+    let mut it = jobs.into_iter();
+    let first = match it.next() {
+        None => return Ok(()),
+        Some(j) => j,
+    };
+    let second = match it.next() {
+        None => return first(), // single chunk: inline, zero-alloc
+        Some(j) => j,
+    };
+    thread::scope(|s| {
+        let mut handles = Vec::new();
+        handles.push(s.spawn(first));
+        handles.push(s.spawn(second));
+        for job in it {
+            handles.push(s.spawn(job));
+        }
+        let mut err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if err.is_none() {
+                        err = Some(e);
+                    }
+                }
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        match err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    })
+}
+
+/// Number of rows in a `len`-element row-major panel with `row_len`-wide
+/// rows, or a typed error when the panel is ragged.
+///
+/// `row_len == 0` is a valid shape only for the empty panel — the retired
+/// `len / row_len.max(1)` folklore silently reported `len` rows there.
+pub fn panel_rows(len: usize, row_len: usize) -> Result<usize> {
+    if row_len == 0 {
+        ensure!(len == 0,
+                "ragged panel: {} values cannot tile into rows of 0", len);
+        return Ok(0);
+    }
+    ensure!(len % row_len == 0,
+            "ragged panel: {} values do not tile into rows of {}",
+            len, row_len);
+    Ok(len / row_len)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +301,88 @@ mod tests {
     fn parallel_map_chunks_single_thread() {
         let chunks = parallel_map_chunks(10, 1, |r| (r.start, r.end));
         assert_eq!(chunks, vec![(0, 10)]);
+    }
+
+    #[test]
+    fn chunk_len_matches_parallel_map_chunks_boundaries() {
+        for &(n, threads) in &[(103usize, 4usize), (10, 1), (7, 16), (1, 3),
+                               (12, 3), (13, 3), (0, 4)] {
+            let want: Vec<(usize, usize)> =
+                parallel_map_chunks(n, threads, |r| (r.start, r.end));
+            let chunk = chunk_len(n, threads);
+            let data: Vec<usize> = (0..n).collect();
+            let got: Vec<(usize, usize)> = data
+                .chunks(chunk)
+                .scan(0usize, |start, c| {
+                    let s = *start;
+                    *start += c.len();
+                    Some((s, s + c.len()))
+                })
+                .collect();
+            assert_eq!(got, want, "n={} threads={}", n, threads);
+        }
+    }
+
+    #[test]
+    fn try_jobs_single_runs_inline() {
+        let caller = thread::current().id();
+        let mut ran_on = None;
+        {
+            let slot = &mut ran_on;
+            parallel_try_jobs([move || {
+                *slot = Some(thread::current().id());
+                Ok(())
+            }])
+            .unwrap();
+        }
+        assert_eq!(ran_on, Some(caller));
+    }
+
+    #[test]
+    fn try_jobs_disjoint_chunks_fill_the_panel() {
+        let n = 103usize;
+        let threads = 4usize;
+        let chunk = chunk_len(n, threads);
+        let mut panel = vec![0usize; n];
+        let jobs = panel.chunks_mut(chunk).enumerate().map(|(t, c)| {
+            move || {
+                for (i, v) in c.iter_mut().enumerate() {
+                    *v = t * chunk + i + 1;
+                }
+                Ok(())
+            }
+        });
+        parallel_try_jobs(jobs).unwrap();
+        let want: Vec<usize> = (1..=n).collect();
+        assert_eq!(panel, want);
+    }
+
+    #[test]
+    fn try_jobs_first_error_in_job_order_wins() {
+        let jobs: Vec<Box<dyn FnOnce() -> Result<()> + Send>> = vec![
+            Box::new(|| Ok(())),
+            Box::new(|| Err(anyhow::anyhow!("chunk 1 failed"))),
+            Box::new(|| Err(anyhow::anyhow!("chunk 2 failed"))),
+        ];
+        let err = parallel_try_jobs(jobs).unwrap_err();
+        assert!(err.to_string().contains("chunk 1 failed"), "{}", err);
+    }
+
+    #[test]
+    fn try_jobs_empty_is_a_noop() {
+        let jobs: [fn() -> Result<()>; 0] = [];
+        parallel_try_jobs(jobs).unwrap();
+    }
+
+    #[test]
+    fn panel_rows_counts_and_rejects_ragged_shapes() {
+        assert_eq!(panel_rows(12, 4).unwrap(), 3);
+        assert_eq!(panel_rows(0, 4).unwrap(), 0);
+        assert_eq!(panel_rows(0, 0).unwrap(), 0);
+        let err = panel_rows(13, 4).unwrap_err();
+        assert!(err.to_string().contains("ragged panel"), "{}", err);
+        let err = panel_rows(3, 0).unwrap_err();
+        assert!(err.to_string().contains("ragged panel"), "{}", err);
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Allocation-regression gate for the zero-copy native batch spine
+//! (DESIGN.md §16): once a warmup pass has filled every arena, the
+//! steady-state panel loop of EVERY registered task's native batch
+//! backend must perform ZERO heap allocations.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator, and the
+//! whole suite lives in ONE `#[test]` function: libtest runs tests on
+//! parallel threads, so a second test's allocations would pollute the
+//! counter mid-window.  Backends run at `threads = 1`, where
+//! `pool::parallel_try_jobs` executes the single chunk inline on the
+//! calling thread — the zero-alloc contract this test pins covers the
+//! whole dispatch path, not just the kernels.
+//!
+//! Everything a steady-state iteration consumes (keys, index draws,
+//! panels, objective rows) is prebuilt OUTSIDE the measured window,
+//! mirroring the drivers, which allocate their step buffers once per
+//! run (`opt::panel::run_panel_ctl`, `opt::sqn::SqnHook`).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use simopt::backend::native::{
+    NativeCvarBatch, NativeLrBatch, NativeMvBatch, NativeNvBatch,
+};
+use simopt::backend::plane::tile_rows;
+use simopt::backend::{
+    HessianMode, LrBatchBackend, MvBatchBackend, NvBatchBackend,
+};
+use simopt::rng::StreamTree;
+use simopt::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
+use simopt::tasks::cvar;
+use simopt::tasks::BatchCorrectionMemory;
+
+/// Counts every allocation request (alloc / alloc_zeroed / realloc);
+/// frees are not counted — a steady-state loop that neither allocates
+/// nor frees trivially satisfies both directions.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+        -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+/// Run `f` and assert it performed zero heap allocations.  The closure
+/// must only touch borrowed, pre-sized buffers — exactly the property
+/// under test.
+fn assert_no_allocs<F: FnMut()>(label: &str, mut f: F) {
+    let before = allocs();
+    f();
+    let delta = allocs() - before;
+    assert_eq!(delta, 0,
+               "{}: steady-state loop performed {} heap allocation(s); \
+                the native batch hot path must be allocation-free after \
+                warmup (DESIGN.md §16)",
+               label, delta);
+}
+
+#[test]
+fn steady_state_batch_loops_do_not_allocate() {
+    // Sanity: the counting allocator is actually wired in.
+    let before = allocs();
+    let probe = vec![0u8; 256];
+    drop(probe);
+    assert!(allocs() > before, "counting allocator not installed");
+
+    let (r, d, n_samples, m_inner) = (3usize, 8usize, 16usize, 3usize);
+    let tree = StreamTree::new(0xA110C);
+    let trees: Vec<StreamTree> =
+        (0..r).map(|i| tree.subtree(&[1000 + i as u64])).collect();
+    // epoch 0..2 warm the arenas, 2..5 are the measured window
+    let (warmup, measured) = (2usize, 3usize);
+    let keys: Vec<Vec<[u32; 2]>> = (0..warmup + measured)
+        .map(|k| trees.iter().map(|t| t.jax_key(&[k as u64])).collect())
+        .collect();
+
+    // ---- Task 1: mean-variance epoch panels ------------------------------
+    let u = AssetUniverse::generate(&tree, d);
+    let mut batch = NativeMvBatch::new(&u, n_samples, m_inner, r, 1);
+    let w0 = vec![1.0f32 / d as f32; d];
+    let mut panel = tile_rows(&w0, r);
+    let mut objs = vec![0.0f64; r];
+    for k in 0..warmup {
+        batch.epoch_batch(&mut panel, k, &keys[k], &mut objs).unwrap();
+    }
+    assert_no_allocs("mv epoch_batch", || {
+        for k in warmup..warmup + measured {
+            batch.epoch_batch(&mut panel, k, &keys[k], &mut objs).unwrap();
+        }
+    });
+
+    // ---- Task 4: mean-CVaR epoch panels (joint [w, t] rows) --------------
+    let mut batch = NativeCvarBatch::new(&u, n_samples, m_inner, r, 1);
+    let mut panel = tile_rows(&cvar::start_iterate(d), r);
+    for k in 0..warmup {
+        batch.epoch_batch(&mut panel, k, &keys[k], &mut objs).unwrap();
+    }
+    assert_no_allocs("cvar epoch_batch", || {
+        for k in warmup..warmup + measured {
+            batch.epoch_batch(&mut panel, k, &keys[k], &mut objs).unwrap();
+        }
+    });
+
+    // ---- Task 2: newsvendor gradient panels ------------------------------
+    // distinct keys per step force `ensure_panel` to regenerate the MC
+    // panel — in place, into the buffer sized at construction
+    let inst = NewsvendorInstance::generate(&tree, d, 2, 0.6);
+    let nd = inst.dim();
+    let mut batch = NativeNvBatch::new(&inst, n_samples, r, 1);
+    let x_panel = tile_rows(&inst.feasible_start(), r);
+    let mut g = vec![0.0f32; r * nd];
+    for k in 0..warmup {
+        batch.grad_obj_batch(&x_panel, &keys[k], &mut g, &mut objs)
+            .unwrap();
+    }
+    assert_no_allocs("nv grad_obj_batch", || {
+        for k in warmup..warmup + measured {
+            batch.grad_obj_batch(&x_panel, &keys[k], &mut g, &mut objs)
+                .unwrap();
+        }
+    });
+
+    // ---- Task 3: SQN gradient / HVP / push / direction cycles ------------
+    // the full per-iteration cycle of the batched SQN driver, in both
+    // Hessian modes: minibatch gradient, sub-sampled HVP, correction-pair
+    // push (ring-evicting — the memory is filled to capacity during
+    // warmup so `count` never grows inside the window), Algorithm-4
+    // direction (explicit-H rebuilt IN PLACE every cycle, because
+    // `hvp_batch` bumps the memory generation)
+    let data = ClassifyData::generate(&tree, d);
+    let n = data.n_features;
+    let (bsz, hbsz, capacity) = (16usize, 8usize, 3usize);
+    let cycles = warmup + measured;
+    let idx: Vec<Vec<Vec<usize>>> = (0..cycles)
+        .map(|c| {
+            trees
+                .iter()
+                .map(|t| {
+                    let mut rng = t.stream(&[2, c as u64]);
+                    rng.sample_indices(data.n_samples, bsz)
+                })
+                .collect()
+        })
+        .collect();
+    let hidx: Vec<Vec<Vec<usize>>> = (0..cycles)
+        .map(|c| {
+            trees
+                .iter()
+                .map(|t| {
+                    let mut rng = t.stream(&[3, c as u64]);
+                    rng.sample_indices(data.n_samples, hbsz)
+                })
+                .collect()
+        })
+        .collect();
+
+    for mode in [HessianMode::Explicit, HessianMode::TwoLoop] {
+        let label = match mode {
+            HessianMode::Explicit => "lr cycle (explicit H)",
+            HessianMode::TwoLoop => "lr cycle (two-loop)",
+        };
+        let mut batch = NativeLrBatch::new(&data, r, 1, mode);
+        let mut mem = BatchCorrectionMemory::new(r, capacity, n);
+        // saturate the ring during warmup: curvature > 0 by construction,
+        // so every push is accepted and `count` reaches `capacity`
+        for t in 0..capacity + 1 {
+            for row in 0..r {
+                let s: Vec<f32> =
+                    (0..n).map(|j| 0.1 + ((t + row + j) % 5) as f32).collect();
+                let y: Vec<f32> = s.iter().map(|&v| 1.5 * v + 0.01).collect();
+                assert!(mem.push_row(row, &s, &y), "warmup pair rejected");
+            }
+        }
+        let w_panel = vec![0.05f32; r * n];
+        let mut g = vec![0.0f32; r * n];
+        let mut losses = vec![0.0f64; r];
+        let s_panel = vec![0.02f32; r * n];
+        let mut y_panel = vec![0.0f32; r * n];
+        let mut dirs = vec![0.0f32; r * n];
+        let cycle = |c: usize,
+                         batch: &mut NativeLrBatch,
+                         mem: &mut BatchCorrectionMemory,
+                         g: &mut [f32],
+                         losses: &mut [f64],
+                         y_panel: &mut [f32],
+                         dirs: &mut [f32]| {
+            batch.grad_batch(&w_panel, &data, &idx[c], g, losses).unwrap();
+            batch
+                .hvp_batch(&w_panel, &s_panel, &data, &hidx[c], y_panel)
+                .unwrap();
+            for row in 0..r {
+                let _ = mem.push_row(row, &s_panel[row * n..(row + 1) * n],
+                                     &y_panel[row * n..(row + 1) * n]);
+            }
+            batch.direction_batch(mem.view(), g, dirs).unwrap();
+        };
+        for c in 0..warmup {
+            cycle(c, &mut batch, &mut mem, &mut g, &mut losses,
+                  &mut y_panel, &mut dirs);
+        }
+        assert_no_allocs(label, || {
+            for c in warmup..cycles {
+                cycle(c, &mut batch, &mut mem, &mut g, &mut losses,
+                      &mut y_panel, &mut dirs);
+            }
+        });
+    }
+}
