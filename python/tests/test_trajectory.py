@@ -241,6 +241,34 @@ def test_main_exits_1_on_phase_budget_violation(tmp_path, capsys):
     assert tj.main([str(tmp_path), "--phase-budget-pp", "90"]) == 0
 
 
+def test_lmo_only_share_regression_fires_the_gate(tmp_path, capsys):
+    # The panel-LMO hold (DESIGN.md §17): BENCH_lmo_panel.json history
+    # where total mean_s is flat and every phase except `lmo` holds its
+    # share — a serial row loop creeping back into the panel LMO grows
+    # ONLY the lmo share, and the budget gate must fire on exactly that
+    # phase.
+    label = "panel_R96_m16"
+    for run, lmo_s in ((1, 0.10), (2, 0.11), (3, 0.45)):
+        _write(tmp_path, f"BENCH_{run}.json", "lmo_panel", f"c{run}", run,
+               {label: 1.0},
+               phases={label: {"dispatch": 0.05,
+                               "compute": 0.90 - lmo_s,
+                               "lmo": lmo_s,
+                               "reduce": 0.05}})
+    runs = tj.load_runs(tj.find_files([tmp_path]))
+    series = tj.phase_series_by_case(runs)
+    out = tj.detect_phase_budget_violations(series, budget_pp=5.0,
+                                            min_history=3)
+    assert [v["phase"] for v in out] == ["lmo"]
+    assert out[0]["bench"] == "lmo_panel"
+    assert out[0]["label"] == label
+    # the lmo split shows up as its own trend row…
+    assert "| lmo |" in tj.render_phase_table(series)
+    # …and the violation is a BLOCKING exit through main
+    assert tj.main([str(tmp_path)]) == 1
+    assert "lmo" in capsys.readouterr().out
+
+
 def test_merged_history_gates_on_the_newest_run(tmp_path):
     # End-to-end over a merged history tree: three healthy runs then a
     # regressed newest run in a lexically-early directory must exit 1.

@@ -19,8 +19,10 @@ Those cases are also held to a per-phase REGRESSION BUDGET: when a
 phase's share of the case's attributed time grows by more than
 ``--phase-budget-pp`` percentage points over its baseline mean share,
 the build fails even if total mean_s held — that is exactly how a
-reduce/merge copy creeps back into a zero-copy spine (DESIGN.md §16)
-while faster kernels mask it.  Like the σ gate, the budget needs
+reduce/merge copy creeps back into a zero-copy spine (DESIGN.md §16),
+or how a serial per-replication LP loop creeps back into the panel LMO
+(the ``lmo`` phase of ``BENCH_lmo_panel.json``, DESIGN.md §17), while
+faster kernels mask it.  Like the σ gate, the budget needs
 ``--min-history`` points per case; shorter histories pass advisorily.
 
 Runs are ordered by ``ci_run`` id when present (GitHub run ids are

@@ -116,7 +116,7 @@ fn main() {
                 let mut lmos: Vec<NvLmo> =
                     (0..r_reps).map(|_| NvLmo::new(&inst)).collect();
                 run_nv_batch(&mut backend, &mut lmos, &x0, epochs, m_inner,
-                             &trees)
+                             &trees, threads)
                     .unwrap();
             })
             .clone();

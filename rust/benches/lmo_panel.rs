@@ -1,0 +1,189 @@
+//! Panel LMO vs the reconstructed serial per-replication loop
+//! (DESIGN.md §17): the Algorithm-2 inner step — batched gradient, R LP
+//! LMO solves, R FW updates — at two replication scales.
+//!
+//! Each (R, m) cell pairs two arms over identical gradients and keys:
+//! * `seq_loop` — the pre-§17 shape, reconstructed: every inner step
+//!   walks `lmos` one row at a time through `NvLmo::solve_into`, each
+//!   solve paying its own two-phase simplex from scratch on the driver
+//!   thread.  The row loop books as `lmo`, the update loop as `reduce`.
+//! * `panel` — the shipped spine: ONE `NvLmo::solve_panel_into` call per
+//!   inner step; the shared `(A, cap)` seed is factored once and
+//!   warm-reused across steps, and the rows fan out over the worker pool
+//!   with disjoint `&mut` vertex chunks.  Same phase bookings, so the
+//!   lmo-share drop is directly visible in `BENCH_lmo_panel.json` and
+//!   ridden by the trajectory gate (`python/tools/trajectory.py`).
+//!
+//! Both arms run the bit-identical per-row arithmetic: every inner
+//! step's vertex panel and the final iterate panels are asserted equal
+//! bit for bit (the `lp::panel` contract).
+//!
+//! Knobs: SIMOPT_BENCH_EPOCHS (outer steps per cell, default 6),
+//! SIMOPT_BENCH_THREADS (panel-arm pool width, default: hardware).
+
+mod common;
+
+use simopt::backend::native::NativeNvBatch;
+use simopt::backend::plane::tile_rows;
+use simopt::backend::NvBatchBackend;
+use simopt::bench::Bench;
+use simopt::coordinator::rep_subtrees;
+use simopt::linalg::vector::fw_update;
+use simopt::lp::PanelWorkspace;
+use simopt::opt::schedule::fw_gamma;
+use simopt::rng::StreamTree;
+use simopt::sim::NewsvendorInstance;
+use simopt::tasks::NvLmo;
+use simopt::util::profile::{Phase, Profiler};
+use simopt::util::timer::Timer;
+
+/// Lmo share of a drained profile, for the end-of-run summary.
+fn lmo_share(prof: &Profiler) -> f64 {
+    let total = prof.sum();
+    if total > 0.0 {
+        prof.get(Phase::Lmo) / total
+    } else {
+        0.0
+    }
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let epochs =
+        if smoke { 2 } else { common::env_usize("SIMOPT_BENCH_EPOCHS", 6) };
+    let m_inner = if smoke { 2 } else { 5 };
+    // (R, m) cells: replication count × resource rows; d = 4m products
+    let shapes: Vec<(usize, usize)> =
+        if smoke { vec![(4, 2)] } else { vec![(16, 8), (96, 16)] };
+    let n_samples = 32usize;
+    let hw = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let threads = common::env_usize("SIMOPT_BENCH_THREADS", hw);
+
+    println!("lmo_panel: {} epochs × {} inner steps per cell, panel arm \
+              at {} threads, (R, m) shapes {:?}\n",
+             epochs, m_inner, threads, shapes);
+    // every cell records its own per-epoch samples via record_profiled,
+    // so the harness-level warmup/reps protocol is unused here
+    let mut bench = Bench::new("lmo_panel");
+    // (label, serial-loop lmo share, panel lmo share)
+    let mut summary: Vec<(String, f64, f64)> = Vec::new();
+
+    for &(r, m) in &shapes {
+        let d = 4 * m;
+        let tree = StreamTree::new(417);
+        let trees = rep_subtrees(&tree, r);
+        let inst = NewsvendorInstance::generate(&tree, d, m, 0.6);
+        let x0 = inst.feasible_start();
+        let keys_by_epoch: Vec<Vec<[u32; 2]>> = (0..epochs)
+            .map(|k| trees.iter().map(|t| t.jax_key(&[k as u64])).collect())
+            .collect();
+
+        // ---- arm 1: reconstructed serial row loop ------------------------
+        let mut backend = NativeNvBatch::new(&inst, n_samples, r, 1);
+        let mut lmos: Vec<NvLmo> =
+            (0..r).map(|_| NvLmo::new(&inst)).collect();
+        let mut panel_seq = tile_rows(&x0, r);
+        let mut g = vec![0.0f32; r * d];
+        let mut verts = vec![0.0f32; r * d];
+        let mut objs = vec![0.0f64; r];
+        // per-inner-step vertex panels, kept for the cross-arm bit-assert
+        let mut vert_log: Vec<Vec<f32>> = Vec::new();
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let t = Timer::start();
+            for mi in 0..m_inner {
+                backend
+                    .grad_obj_batch(&panel_seq, &keys_by_epoch[k], &mut g,
+                                    &mut objs)
+                    .unwrap();
+                let gamma = fw_gamma(k, mi, m_inner);
+                let t_l = Timer::start();
+                for (i, lmo) in lmos.iter_mut().enumerate() {
+                    lmo.solve_into(&g[i * d..(i + 1) * d],
+                                   &mut verts[i * d..(i + 1) * d])
+                        .unwrap();
+                }
+                prof.add(Phase::Lmo, t_l.elapsed_s());
+                let t_u = Timer::start();
+                for (xi, vi) in panel_seq.chunks_mut(d).zip(verts.chunks(d))
+                {
+                    fw_update(xi, vi, gamma);
+                }
+                prof.add(Phase::Reduce, t_u.elapsed_s());
+                vert_log.push(verts.clone());
+            }
+            samples.push(t.elapsed_s());
+            if let Some(p) = backend.take_profile() {
+                prof.merge(&p);
+            }
+        }
+        let seq_share = lmo_share(&prof);
+        bench.record_profiled(&format!("seq_loop_R{}_m{}", r, m), &samples,
+                              prof);
+
+        // ---- arm 2: panel LMO --------------------------------------------
+        let mut backend = NativeNvBatch::new(&inst, n_samples, r, 1);
+        let mut lmos: Vec<NvLmo> =
+            (0..r).map(|_| NvLmo::new(&inst)).collect();
+        let mut seed = PanelWorkspace::new();
+        let mut panel_par = tile_rows(&x0, r);
+        let mut step = 0usize;
+        let mut samples = Vec::with_capacity(epochs);
+        let mut prof = Profiler::new();
+        for k in 0..epochs {
+            let t = Timer::start();
+            for mi in 0..m_inner {
+                backend
+                    .grad_obj_batch(&panel_par, &keys_by_epoch[k], &mut g,
+                                    &mut objs)
+                    .unwrap();
+                let gamma = fw_gamma(k, mi, m_inner);
+                let t_l = Timer::start();
+                NvLmo::solve_panel_into(&mut lmos, &mut seed, &g, &mut verts,
+                                        threads)
+                    .unwrap();
+                prof.add(Phase::Lmo, t_l.elapsed_s());
+                let t_u = Timer::start();
+                for (xi, vi) in panel_par.chunks_mut(d).zip(verts.chunks(d))
+                {
+                    fw_update(xi, vi, gamma);
+                }
+                prof.add(Phase::Reduce, t_u.elapsed_s());
+                // the lp::panel contract, asserted inner step by inner
+                // step: same gradients ⇒ bitwise-identical vertices
+                assert_eq!(verts, vert_log[step],
+                           "R={} m={} step {}: panel verts != serial verts",
+                           r, m, step);
+                step += 1;
+            }
+            samples.push(t.elapsed_s());
+            if let Some(p) = backend.take_profile() {
+                prof.merge(&p);
+            }
+        }
+        let panel_share = lmo_share(&prof);
+        bench.record_profiled(&format!("panel_R{}_m{}", r, m), &samples,
+                              prof);
+        assert_eq!(panel_seq, panel_par,
+                   "R={} m={}: panel iterates != serial iterates", r, m);
+        summary.push((format!("R{}_m{}", r, m), seq_share, panel_share));
+    }
+
+    bench.finish();
+    println!("\nlmo-phase share (LP wall / total step wall):");
+    println!("| cell | serial loop | panel |");
+    println!("|---|---|---|");
+    for (label, seq, panel) in &summary {
+        println!("| {} | {:.2}% | {:.2}% |", label, seq * 100.0,
+                 panel * 100.0);
+    }
+    println!("\n(The panel arm factors the shared (A, cap) seed once, \
+              warm-reuses it across steps, and fans the per-row phase-2 \
+              solves out over the worker pool — the serial arm pays a \
+              from-scratch two-phase simplex per row per inner step on \
+              the driver thread, so its lmo share grows with R, \
+              DESIGN.md §17.)");
+}

@@ -182,8 +182,9 @@ pub trait MvBatchBackend {
 }
 
 /// Task 2, batched: the Monte-Carlo gradient + objective estimate for all R
-/// replications at their own iterates.  The LP LMO stays per-replication in
-/// the driver (it is host-side in both arms).
+/// replications at their own iterates.  The LP LMO stays in the driver (it
+/// is host-side in both arms), advanced as one pool-parallel panel per
+/// inner step (`NvLmo::solve_panel_into`, DESIGN.md §17).
 pub trait NvBatchBackend {
     fn name(&self) -> &'static str;
 

@@ -7,7 +7,9 @@
 //! simplex on a dense tableau with Bland's anti-cycling rule
 //! ([`simplex::solve`]).
 
+pub mod panel;
 pub mod simplex;
 
+pub use panel::PanelWorkspace;
 pub use simplex::{is_feasible, solve, solve_into, LpProblem, LpResult,
                   LpStatus, Workspace};

@@ -1,0 +1,297 @@
+//! Panel LMO batch core (DESIGN.md §17): advance R per-replication LPs
+//! that share ONE constraint system `{Ax ≤ b, x ≥ 0}` together instead of
+//! serially, exploiting that only the objective row differs per
+//! replication.
+//!
+//! The two-phase simplex splits cleanly along that axis
+//! (`simplex::build_seed` / `simplex::phase2`): row normalization, the
+//! initial tableau, phase 1, and the artificial drive-out never read the
+//! objective, so their result — "the seed" — is computed ONCE per shared
+//! `(A, b)` and cached in a [`PanelWorkspace`] across steps (warm-start:
+//! re-`ensure_seed` calls with unchanged data are O(m·n) compares, no
+//! pivots).  Each row then copies the seed tableau into its own
+//! [`Workspace`] arena and runs phase 2 alone — the EXACT state
+//! `lp::solve_into` reaches before its phase 2, so every row's pivot
+//! sequence, vertex, objective, and duals are bitwise-identical to the
+//! sequential solver by construction (pinned by the property tests
+//! below and `tests/batch_determinism.rs`).
+//!
+//! Row fan-out rides the PR 8 idiom: `pool::chunk_len` +
+//! `pool::parallel_try_jobs` over disjoint `&mut` workspace/status
+//! chunks, so `threads > 1` parallelizes the per-row phase-2 wall while
+//! `threads == 1` runs the single chunk inline with zero heap traffic
+//! (pinned by `tests/alloc_regression.rs`).
+
+use super::simplex::{self, LpStatus, SeedStatus, Workspace};
+use crate::util::pool;
+
+/// Cached c-independent simplex state for one shared `(A, b)`: the
+/// post-phase-1 tableau, basis, and row signs, plus a copy of the inputs
+/// so reuse can be verified instead of trusted.  Build once via
+/// [`PanelWorkspace::ensure_seed`], then solve any number of objective
+/// rows against it with [`PanelWorkspace::solve_row`] (`&self` — safe to
+/// share across pool workers).
+#[derive(Debug, Default)]
+pub struct PanelWorkspace {
+    m: usize,
+    n: usize,
+    cols: usize,
+    /// The `(A, b)` the cached seed was built from, kept to make
+    /// `ensure_seed` self-validating (bitwise compare, no allocation).
+    a: Vec<f64>,
+    b: Vec<f64>,
+    /// Seed tableau / basis / slack signs live in a plain [`Workspace`]
+    /// so the build path is literally `simplex::build_seed`.
+    seed: Workspace,
+    feasible: bool,
+    ready: bool,
+}
+
+impl PanelWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True once a seed is cached (after the first [`Self::ensure_seed`]).
+    pub fn is_ready(&self) -> bool {
+        self.ready
+    }
+
+    /// Build the shared seed for `(a, b)` — or, when the cached seed was
+    /// built for bitwise-identical inputs, reuse it untouched (the
+    /// warm-start across steps).  Returns `true` when a build ran.
+    pub fn ensure_seed(&mut self, a: &[f64], b: &[f64], m: usize, n: usize)
+        -> bool {
+        assert_eq!(b.len(), m);
+        assert_eq!(a.len(), m * n, "A must be m×n row-major");
+        if self.ready && self.m == m && self.n == n && self.a == a
+            && self.b == b {
+            return false;
+        }
+        self.m = m;
+        self.n = n;
+        self.a.clear();
+        self.a.extend_from_slice(a);
+        self.b.clear();
+        self.b.extend_from_slice(b);
+        if m == 0 {
+            // Constraint-free shape: no tableau exists; solve_row mirrors
+            // solve_into's origin/unbounded early return per objective.
+            self.cols = 0;
+            self.feasible = true;
+        } else {
+            let (cols, status) = simplex::build_seed(a, b, m, n,
+                                                     &mut self.seed);
+            self.cols = cols;
+            self.feasible = status == SeedStatus::Feasible;
+        }
+        self.ready = true;
+        true
+    }
+
+    /// Solve `min c·x  s.t.  A x ≤ b, x ≥ 0` for ONE objective row from
+    /// the cached seed, with every intermediate in the caller's `row`
+    /// arena.  Bitwise-identical to `lp::solve_into(c, a, b, m, n, row)`:
+    /// the seed copy reproduces the exact pre-phase-2 tableau the
+    /// sequential path reaches, and phase 2 is the same code.  `&self`,
+    /// so disjoint rows solve concurrently against one shared seed.
+    pub fn solve_row(&self, c: &[f64], row: &mut Workspace) -> LpStatus {
+        assert!(self.ready, "ensure_seed must run before solve_row");
+        assert_eq!(c.len(), self.n);
+        if self.m == 0 {
+            const EPS: f64 = 1e-9;
+            return if c.iter().all(|&ci| ci >= -EPS) {
+                row.x.clear();
+                row.x.resize(self.n, 0.0);
+                row.duals.clear();
+                LpStatus::Optimal { obj: 0.0 }
+            } else {
+                LpStatus::Unbounded
+            };
+        }
+        if !self.feasible {
+            return LpStatus::Infeasible;
+        }
+        // copy-on-read of the shared seed: phase 2 pivots in place, so
+        // each row works on its own tableau (arena-backed — after the
+        // first solve of this shape the copy is allocation-free)
+        row.t.clear();
+        row.t.extend_from_slice(&self.seed.t);
+        row.basis.clear();
+        row.basis.extend_from_slice(&self.seed.basis);
+        simplex::phase2(c, self.m, self.n, self.cols,
+                        &self.seed.slack_sign, &mut row.t, &mut row.basis,
+                        &mut row.x, &mut row.duals)
+    }
+
+    /// Solve all R rows of the `[R × n]` objective panel `c` against the
+    /// cached seed, fanning the rows out over `threads` pool workers with
+    /// disjoint `&mut` chunks of `rows`/`statuses` (the PR 8 idiom —
+    /// one chunk at `threads == 1` runs inline and allocation-free).
+    /// `rows[i]` receives row i's vertex/duals, `statuses[i]` its status.
+    pub fn solve_rows(&self, c: &[f64], rows: &mut [Workspace],
+                      statuses: &mut [LpStatus], threads: usize) {
+        let r = rows.len();
+        assert_eq!(statuses.len(), r);
+        assert_eq!(c.len(), r * self.n, "objective panel must be R×n");
+        if r == 0 {
+            return;
+        }
+        let n = self.n;
+        let chunk = pool::chunk_len(r, threads);
+        let jobs = rows
+            .chunks_mut(chunk)
+            .zip(statuses.chunks_mut(chunk))
+            .zip(c.chunks(chunk * n))
+            .map(|((row_chunk, status_chunk), c_chunk)| {
+                move || {
+                    for ((row, status), ci) in row_chunk
+                        .iter_mut()
+                        .zip(status_chunk.iter_mut())
+                        .zip(c_chunk.chunks(n))
+                    {
+                        *status = self.solve_row(ci, row);
+                    }
+                    Ok(())
+                }
+            });
+        // phase 2 cannot fail, so the Result plumbing is vestigial here;
+        // the pool helper is shared with fallible batch engines
+        pool::parallel_try_jobs(jobs).expect("panel rows are infallible");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lp::{solve_into, LpProblem};
+    use crate::rng::Philox;
+
+    fn assert_bitwise(label: &str, want: LpStatus, want_ws: &Workspace,
+                      got: LpStatus, got_ws: &Workspace) {
+        match (want, got) {
+            (LpStatus::Optimal { obj: a }, LpStatus::Optimal { obj: b }) => {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: obj", label);
+                assert_eq!(want_ws.x.len(), got_ws.x.len(), "{}", label);
+                for (a, b) in want_ws.x.iter().zip(&got_ws.x) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}: x", label);
+                }
+                assert_eq!(want_ws.duals.len(), got_ws.duals.len(),
+                           "{}", label);
+                for (a, b) in want_ws.duals.iter().zip(&got_ws.duals) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}: duals",
+                               label);
+                }
+            }
+            (a, b) => assert_eq!(a, b, "{}: status", label),
+        }
+    }
+
+    #[test]
+    fn seed_rows_are_bitwise_sequential_solves() {
+        // Random shared (A, b) × many objective rows: solve_row from one
+        // seed must reproduce solve_into per row, bit for bit — vertex,
+        // objective, AND duals.
+        let mut rng = Philox::new(0x9A41);
+        for case in 0..30 {
+            let n = 2 + (case % 5);
+            let m = 1 + (case % 3);
+            let a: Vec<f64> = (0..m * n)
+                .map(|_| rng.uniform_f32(0.1, 1.5) as f64)
+                .collect();
+            let b: Vec<f64> =
+                (0..m).map(|_| rng.uniform_f32(0.5, 4.0) as f64).collect();
+            let mut panel = PanelWorkspace::new();
+            assert!(panel.ensure_seed(&a, &b, m, n));
+            assert!(!panel.ensure_seed(&a, &b, m, n), "warm reuse");
+            let mut row = Workspace::default();
+            let mut seq = Workspace::default();
+            for _ in 0..8 {
+                let c: Vec<f64> = (0..n)
+                    .map(|_| rng.uniform_f32(-2.0, 2.0) as f64)
+                    .collect();
+                let want = solve_into(&c, &a, &b, m, n, &mut seq);
+                let got = panel.solve_row(&c, &mut row);
+                assert_bitwise(&format!("case {}", case), want, &seq, got,
+                               &row);
+            }
+        }
+    }
+
+    #[test]
+    fn seed_covers_phase1_and_degenerate_shapes() {
+        // The seed path must agree with solve_into on every outcome class:
+        // phase-1 instances (negative b), infeasible systems, unbounded
+        // objectives, equality-via-pair rows, and m == 0.
+        let problems = [
+            LpProblem::new(vec![1.0], vec![-1.0], vec![-2.0]), // phase 1
+            LpProblem::new(vec![1.0], vec![1.0], vec![-1.0]),  // infeasible
+            LpProblem::new(vec![-1.0, 0.0], vec![0.0, 1.0], vec![5.0]),
+            LpProblem::new(vec![2.0, 1.0],
+                           vec![1.0, 1.0, -1.0, -1.0],
+                           vec![5.0, -5.0]),
+            LpProblem::new(vec![-1.0], vec![], vec![]), // m == 0 unbounded
+            LpProblem::new(vec![1.0], vec![], vec![]),  // m == 0 origin
+        ];
+        for (i, p) in problems.iter().enumerate() {
+            let mut panel = PanelWorkspace::new();
+            panel.ensure_seed(&p.a, &p.b, p.m, p.n);
+            let mut row = Workspace::default();
+            let mut seq = Workspace::default();
+            let want = solve_into(&p.c, &p.a, &p.b, p.m, p.n, &mut seq);
+            let got = panel.solve_row(&p.c, &mut row);
+            assert_bitwise(&format!("problem {}", i), want, &seq, got,
+                           &row);
+        }
+    }
+
+    #[test]
+    fn ensure_seed_rebuilds_on_changed_inputs() {
+        let mut panel = PanelWorkspace::new();
+        assert!(panel.ensure_seed(&[1.0, 1.0], &[2.0], 1, 2));
+        assert!(!panel.ensure_seed(&[1.0, 1.0], &[2.0], 1, 2));
+        // changed b ⇒ rebuild; the stale seed must not leak through
+        assert!(panel.ensure_seed(&[1.0, 1.0], &[3.0], 1, 2));
+        let mut row = Workspace::default();
+        let mut seq = Workspace::default();
+        let c = [-1.0f64, -0.5];
+        let want = solve_into(&c, &[1.0, 1.0], &[3.0], 1, 2, &mut seq);
+        let got = panel.solve_row(&c, &mut row);
+        assert_bitwise("rebuilt", want, &seq, got, &row);
+    }
+
+    #[test]
+    fn solve_rows_matches_solve_row_for_every_thread_count() {
+        // The fan-out wrapper is pure plumbing: any thread count must
+        // produce the identical bits the inline path does, chunk
+        // boundaries included (R=5 exercises uneven splits).
+        let (m, n, r) = (2usize, 4usize, 5usize);
+        let mut rng = Philox::new(0xF00);
+        let a: Vec<f64> =
+            (0..m * n).map(|_| rng.uniform_f32(0.1, 1.5) as f64).collect();
+        let b: Vec<f64> =
+            (0..m).map(|_| rng.uniform_f32(0.5, 4.0) as f64).collect();
+        let c: Vec<f64> =
+            (0..r * n).map(|_| rng.uniform_f32(-2.0, 2.0) as f64).collect();
+        let mut panel = PanelWorkspace::new();
+        panel.ensure_seed(&a, &b, m, n);
+        let mut want_rows: Vec<Workspace> =
+            (0..r).map(|_| Workspace::default()).collect();
+        let mut want_status = vec![LpStatus::Unbounded; r];
+        for i in 0..r {
+            want_status[i] =
+                panel.solve_row(&c[i * n..(i + 1) * n], &mut want_rows[i]);
+        }
+        for threads in 1..=r + 1 {
+            let mut rows: Vec<Workspace> =
+                (0..r).map(|_| Workspace::default()).collect();
+            let mut statuses = vec![LpStatus::Infeasible; r];
+            panel.solve_rows(&c, &mut rows, &mut statuses, threads);
+            for i in 0..r {
+                assert_bitwise(&format!("threads {} row {}", threads, i),
+                               want_status[i], &want_rows[i], statuses[i],
+                               &rows[i]);
+            }
+        }
+    }
+}

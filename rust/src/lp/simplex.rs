@@ -182,14 +182,18 @@ impl Tableau {
 /// allocation-free on every later solve of the same (or smaller) shape.
 /// Every buffer is fully re-initialized per call (`clear` + `resize` /
 /// `extend`), so a reused workspace is bitwise-identical to a fresh one.
+///
+/// The tableau-side fields are `pub(crate)` so the panel layer
+/// (`lp::panel`) can seed a row workspace from a shared post-phase-1
+/// tableau without re-running the c-independent work per row.
 #[derive(Debug, Default)]
 pub struct Workspace {
     a: Vec<f64>,
     b: Vec<f64>,
-    slack_sign: Vec<f64>,
+    pub(crate) slack_sign: Vec<f64>,
     needs_art: Vec<bool>,
-    t: Vec<f64>,
-    basis: Vec<usize>,
+    pub(crate) t: Vec<f64>,
+    pub(crate) basis: Vec<usize>,
     /// Primal solution after an `Optimal` return.
     pub x: Vec<f64>,
     /// Objective-row slack values (σᵢ, sign-corrected) after an `Optimal`
@@ -220,26 +224,30 @@ pub fn solve(p: &LpProblem) -> LpResult {
     }
 }
 
-/// Arena variant of [`solve`]: minimize `c·x` s.t. `a x ≤ b`, `x ≥ 0`,
-/// with every intermediate living in `ws`.  Identical arithmetic to
-/// [`solve`] — only the storage is caller-owned.
-pub fn solve_into(c_in: &[f64], a_in: &[f64], b_in: &[f64], m: usize,
-                  n: usize, ws: &mut Workspace) -> LpStatus {
-    assert_eq!(c_in.len(), n);
-    assert_eq!(b_in.len(), m);
-    assert_eq!(a_in.len(), m * n, "A must be m×n row-major");
-    if m == 0 {
-        // Only x ≥ 0: bounded iff c ≥ 0, optimum at the origin.
-        return if c_in.iter().all(|&ci| ci >= -EPS) {
-            ws.x.clear();
-            ws.x.resize(n, 0.0);
-            ws.duals.clear();
-            LpStatus::Optimal { obj: 0.0 }
-        } else {
-            LpStatus::Unbounded
-        };
-    }
+/// Whether the c-independent seed build found a basic feasible solution.
+/// On `Infeasible` the phase-1 tableau stays in the workspace, exactly as
+/// [`solve_into`] leaves it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) enum SeedStatus {
+    Feasible,
+    Infeasible,
+}
 
+/// The c-independent half of [`solve_into`]: normalize rows to `b ≥ 0`,
+/// build the initial tableau, and (when artificials are needed) run
+/// phase 1 and drive residual artificials out of the basis.  None of this
+/// arithmetic reads the objective row, so the resulting tableau + basis
+/// ("the seed") is shared by EVERY objective over the same `(A, b)` —
+/// the fact the panel LMO layer (`lp::panel`) exploits to factor the
+/// shared constraint matrix once per step instead of once per row.
+///
+/// On return `ws.t` / `ws.basis` hold the post-phase-1 tableau and
+/// `ws.slack_sign` the row-negation signs; the column count is returned
+/// so phase 2 can address the tableau.  Requires `m > 0` (the caller
+/// handles the constraint-free shape).
+pub(crate) fn build_seed(a_in: &[f64], b_in: &[f64], m: usize, n: usize,
+                         ws: &mut Workspace) -> (usize, SeedStatus) {
+    debug_assert!(m > 0);
     // Normalize rows to b ≥ 0 and track which need artificials.
     ws.a.clear();
     ws.a.extend_from_slice(a_in);
@@ -312,7 +320,7 @@ pub fn solve_into(c_in: &[f64], a_in: &[f64], b_in: &[f64], m: usize,
         if phase1_obj > 1e-7 {
             ws.t = tab.t;
             ws.basis = tab.basis;
-            return LpStatus::Infeasible;
+            return (cols, SeedStatus::Infeasible);
         }
         // Drive any residual artificial out of the basis.
         for r in 0..m {
@@ -332,8 +340,27 @@ pub fn solve_into(c_in: &[f64], a_in: &[f64], b_in: &[f64], m: usize,
             }
         }
     }
+    ws.t = tab.t;
+    ws.basis = tab.basis;
+    (cols, SeedStatus::Feasible)
+}
 
-    // ---- Phase 2 ----------------------------------------------------------
+/// The c-dependent half of [`solve_into`]: phase 2 over a seed tableau
+/// left by [`build_seed`] (in `t`/`basis`, with `cols` columns and the
+/// row-negation signs in `slack_sign`).  Consumes the tableau in place —
+/// callers that reuse a seed for many objectives (the panel layer) must
+/// hand a COPY per row.  The primal vertex and sign-corrected duals land
+/// in `x`/`duals` exactly as `solve_into` leaves them.
+pub(crate) fn phase2(c_in: &[f64], m: usize, n: usize, cols: usize,
+                     slack_sign: &[f64], t: &mut Vec<f64>,
+                     basis: &mut Vec<usize>, x: &mut Vec<f64>,
+                     duals: &mut Vec<f64>) -> LpStatus {
+    let mut tab = Tableau {
+        t: std::mem::take(t),
+        m,
+        cols,
+        basis: std::mem::take(basis),
+    };
     // Reset objective row to the real costs, then price out basic variables.
     {
         let w2 = tab.cols + 1;
@@ -356,26 +383,57 @@ pub fn solve_into(c_in: &[f64], a_in: &[f64], b_in: &[f64], m: usize,
     }
     let bounded = tab.optimize(&|c| c < n + m); // artificials barred
     if !bounded {
-        ws.t = tab.t;
-        ws.basis = tab.basis;
+        *t = tab.t;
+        *basis = tab.basis;
         return LpStatus::Unbounded;
     }
 
-    ws.x.clear();
-    ws.x.resize(n, 0.0);
+    x.clear();
+    x.resize(n, 0.0);
     for r in 0..m {
         if tab.basis[r] < n {
-            ws.x[tab.basis[r]] = tab.rhs(r).max(0.0);
+            x[tab.basis[r]] = tab.rhs(r).max(0.0);
         }
     }
-    let obj = c_in.iter().zip(&ws.x).map(|(c, v)| c * v).sum();
+    let obj = c_in.iter().zip(x.iter()).map(|(c, v)| c * v).sum();
     // σᵢ: objective-row entries at the slack columns.  Rows that were
     // negated for phase 1 flip the slack sign, so un-flip here.
-    ws.duals.clear();
-    ws.duals.extend((0..m).map(|i| tab.at(m, n + i) * slack_sign[i]));
-    ws.t = tab.t;
-    ws.basis = tab.basis;
+    duals.clear();
+    duals.extend((0..m).map(|i| tab.at(m, n + i) * slack_sign[i]));
+    *t = tab.t;
+    *basis = tab.basis;
     LpStatus::Optimal { obj }
+}
+
+/// Arena variant of [`solve`]: minimize `c·x` s.t. `a x ≤ b`, `x ≥ 0`,
+/// with every intermediate living in `ws`.  Identical arithmetic to
+/// [`solve`] — only the storage is caller-owned.  Internally this is the
+/// composition [`build_seed`] (c-independent: normalization + tableau +
+/// phase 1) then [`phase2`] (the objective-dependent pivots), which is
+/// what lets the panel layer share one seed across all R objective rows
+/// while staying bitwise-equal to this sequential path by construction.
+pub fn solve_into(c_in: &[f64], a_in: &[f64], b_in: &[f64], m: usize,
+                  n: usize, ws: &mut Workspace) -> LpStatus {
+    assert_eq!(c_in.len(), n);
+    assert_eq!(b_in.len(), m);
+    assert_eq!(a_in.len(), m * n, "A must be m×n row-major");
+    if m == 0 {
+        // Only x ≥ 0: bounded iff c ≥ 0, optimum at the origin.
+        return if c_in.iter().all(|&ci| ci >= -EPS) {
+            ws.x.clear();
+            ws.x.resize(n, 0.0);
+            ws.duals.clear();
+            LpStatus::Optimal { obj: 0.0 }
+        } else {
+            LpStatus::Unbounded
+        };
+    }
+    let (cols, status) = build_seed(a_in, b_in, m, n, ws);
+    if status == SeedStatus::Infeasible {
+        return LpStatus::Infeasible;
+    }
+    phase2(c_in, m, n, cols, &ws.slack_sign, &mut ws.t, &mut ws.basis,
+           &mut ws.x, &mut ws.duals)
 }
 
 /// Feasibility check used by tests and the FW driver's debug assertions.

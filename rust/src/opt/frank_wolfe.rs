@@ -247,21 +247,31 @@ pub fn run_mv_batch_ctl<B: MvBatchBackend + ?Sized>(
 }
 
 /// Algorithm-2 hook: one outer step = M inner iterations, each ONE batched
-/// gradient call plus R host-side LP LMO solves (the LMO is host-side in
-/// the sequential path too).
+/// gradient call plus ONE panel LMO solve over all R replications
+/// (`NvLmo::solve_panel_into`, DESIGN.md §17) — the LP wall fans out over
+/// `threads` pool workers instead of looping rows on the driver thread.
 struct NvStepHook<'a, B: ?Sized> {
     backend: &'a mut B,
     lmos: &'a mut [NvLmo],
     m_inner: usize,
     d: usize,
+    threads: usize,
     g: Vec<f32>,
-    /// Vertex arena for the per-row LMO solves, reused across every
-    /// solve of the run (DESIGN.md §16).
-    s: Vec<f32>,
+    /// R×d vertex panel for the batched LMO solves, reused across every
+    /// step of the run (DESIGN.md §16) and carved into disjoint per-row
+    /// `&mut` chunks by the pool fan-out.
+    verts: Vec<f32>,
+    /// Shared-constraint seed for the panel LMO: phase-1 tableau of the
+    /// one `(A, cap)` system all rows share, built once and warm-reused
+    /// across steps (`lp::PanelWorkspace`).
+    seed: crate::lp::PanelWorkspace,
     keys: Vec<[u32; 2]>,
-    /// Host-side LMO + update wall accumulated during the current step
-    /// (drained by `collect_profile`).
+    /// Panel-LMO wall accumulated during the current step (drained by
+    /// `collect_profile` into `Phase::Lmo`).
     lmo_s: f64,
+    /// Host FW-update wall for the current step (drained into
+    /// `Phase::Reduce`, matching `run_nv`'s `upd_s` attribution).
+    upd_s: f64,
 }
 
 impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
@@ -281,34 +291,45 @@ impl<B: NvBatchBackend + ?Sized> PanelHook for NvStepHook<'_, B> {
             self.backend.grad_obj_batch(panel, &self.keys, &mut self.g,
                                         vals)?;
             let gamma = fw_gamma(k, m, self.m_inner);
-            let t_host = Timer::start();
-            for (i, lmo) in self.lmos.iter_mut().enumerate() {
-                lmo.solve_into(&self.g[i * d..(i + 1) * d], &mut self.s)?;
-                crate::linalg::vector::fw_update(
-                    &mut panel[i * d..(i + 1) * d], &self.s, gamma);
+            // all R LPs advance as one panel: shared-seed phase 2 per
+            // row, rows fanned out over the worker pool
+            let t_lmo = Timer::start();
+            NvLmo::solve_panel_into(self.lmos, &mut self.seed, &self.g,
+                                    &mut self.verts, self.threads)?;
+            self.lmo_s += t_lmo.elapsed_s();
+            let t_upd = Timer::start();
+            for (xi, vi) in panel.chunks_mut(d)
+                .zip(self.verts.chunks(d)) {
+                crate::linalg::vector::fw_update(xi, vi, gamma);
             }
-            self.lmo_s += t_host.elapsed_s();
+            self.upd_s += t_upd.elapsed_s();
         }
         Ok(())
     }
 
     fn collect_profile(&mut self, step_s: f64, prof: &mut Profiler) {
-        // the host LMO solves + FW updates are one sub-interval; the
-        // update axpy is negligible next to the LP, so it books as lmo
+        // panel-core LP time books as lmo; the host fw_update loop books
+        // as reduce — the same split run_nv applies to its sequential
+        // lmo_s / upd_s sub-intervals, so batch and sequential profiles
+        // stay comparable phase-by-phase
         let lmo_s = std::mem::take(&mut self.lmo_s);
+        let upd_s = std::mem::take(&mut self.upd_s);
         match self.backend.take_profile() {
             Some(p) => {
                 prof.merge(&p);
-                prof.add(Phase::Dispatch, step_s - p.sum() - lmo_s);
+                prof.add(Phase::Dispatch, step_s - p.sum() - lmo_s - upd_s);
             }
-            None => prof.add(Phase::Compute, step_s - lmo_s),
+            None => prof.add(Phase::Compute, step_s - lmo_s - upd_s),
         }
         prof.add(Phase::Lmo, lmo_s);
+        prof.add(Phase::Reduce, upd_s);
     }
 }
 
-/// Algorithm 2 over all replications at once.  Equivalent to
-/// [`run_nv_batch_ctl`] with a null sink and no budget.
+/// Algorithm 2 over all replications at once.  `threads` sizes the pool
+/// fan-out of the panel LMO (1 = inline on the driver thread).  Equivalent
+/// to [`run_nv_batch_ctl`] with a null sink and no budget.
+#[allow(clippy::too_many_arguments)]
 pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
     backend: &mut B,
     lmos: &mut [NvLmo],
@@ -316,17 +337,19 @@ pub fn run_nv_batch<B: NvBatchBackend + ?Sized>(
     epochs: usize,
     m_inner: usize,
     trees: &[StreamTree],
+    threads: usize,
 ) -> Result<(Vec<f32>, Vec<FwTrace>)> {
     let mut sink = NullSink;
     let mut ctl = PanelCtl { sink: &mut sink, budget: None };
     let out =
-        run_nv_batch_ctl(backend, lmos, x0, epochs, m_inner, trees,
+        run_nv_batch_ctl(backend, lmos, x0, epochs, m_inner, trees, threads,
                          &mut ctl)?;
     Ok((out.panel, out.traces))
 }
 
 /// [`run_nv_batch`] under a [`PanelCtl`]: per-step progress events plus
 /// the opt-in adaptive replication budget (DESIGN.md §14).
+#[allow(clippy::too_many_arguments)]
 pub fn run_nv_batch_ctl<B: NvBatchBackend + ?Sized>(
     backend: &mut B,
     lmos: &mut [NvLmo],
@@ -334,6 +357,7 @@ pub fn run_nv_batch_ctl<B: NvBatchBackend + ?Sized>(
     epochs: usize,
     m_inner: usize,
     trees: &[StreamTree],
+    threads: usize,
     ctl: &mut PanelCtl<'_>,
 ) -> Result<PanelOutcome> {
     let r = trees.len();
@@ -347,10 +371,13 @@ pub fn run_nv_batch_ctl<B: NvBatchBackend + ?Sized>(
         lmos,
         m_inner,
         d,
+        threads: threads.max(1),
         g: vec![0.0f32; r * d],
-        s: vec![0.0f32; d],
+        verts: vec![0.0f32; r * d],
+        seed: crate::lp::PanelWorkspace::new(),
         keys: Vec::with_capacity(r),
         lmo_s: 0.0,
+        upd_s: 0.0,
     };
     run_panel_ctl(&mut hook, x0, epochs, trees, ctl)
 }
@@ -487,7 +514,8 @@ mod tests {
         let mut lmos: Vec<NvLmo> =
             (0..reps).map(|_| NvLmo::new(&inst)).collect();
         let (x_panel, traces) =
-            run_nv_batch(&mut batch, &mut lmos, &x0, epochs, m_inner, &trees)
+            run_nv_batch(&mut batch, &mut lmos, &x0, epochs, m_inner, &trees,
+                         2)
                 .unwrap();
 
         for (r, tree) in trees.iter().enumerate() {

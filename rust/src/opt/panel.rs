@@ -6,11 +6,11 @@
 //! r), advance every row one outer step per iteration through a
 //! task-specific hook, and attribute each step's wall-clock to the
 //! per-replication traces as `batch_time / R`.  What differs per
-//! task — key derivation, inner Frank-Wolfe iterations, LP LMO solves,
-//! the SQN correction-memory machinery — lives entirely behind
-//! [`PanelHook`], so `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}`
-//! are thin wrappers and a new scenario's batched driver is one hook,
-//! not a new loop.
+//! task — key derivation, inner Frank-Wolfe iterations, the
+//! pool-parallel panel LMO (DESIGN.md §17), the SQN correction-memory
+//! machinery — lives entirely behind [`PanelHook`], so
+//! `opt::{run_mv_batch, run_nv_batch, run_sqn_batch}` are thin wrappers
+//! and a new scenario's batched driver is one hook, not a new loop.
 //!
 //! The loop is also shard-agnostic: sharded execution (DESIGN.md §13)
 //! happens entirely inside the backend — `backend::plane::ShardedBatch`

@@ -1,8 +1,9 @@
 //! Task 2 math (paper §3.2): Monte-Carlo gradient/objective on a demand
 //! panel, and the LP-backed LMO over {Ax ≤ C, x ≥ 0} (Algorithm 2 line 8).
 
-use crate::lp::{self, LpStatus};
+use crate::lp::{self, LpStatus, PanelWorkspace};
 use crate::sim::NewsvendorInstance;
+use crate::util::pool;
 
 /// MC gradient (paper eq. (9)) — sequential, one product at a time, one
 /// sample at a time (the paper's description of CPU execution):
@@ -122,11 +123,67 @@ impl NvLmo {
     /// pricing pass) lives in the LMO's own scratch.
     pub fn solve_into(&mut self, g: &[f32], x: &mut [f32])
         -> anyhow::Result<()> {
+        self.solve_row_with(g, x, None)
+    }
+
+    /// Panel entry point (DESIGN.md §17): solve all R LMOs of one step
+    /// together — `lmos[i]` takes gradient row i of the `[R × d]` panel
+    /// `g` and writes vertex row i of `verts`.  Every `lmos[i]` must be
+    /// built from the SAME instance: the shared `(A, cap)` seed is
+    /// factored once into `seed` (and reused warm across steps via
+    /// [`PanelWorkspace::ensure_seed`]), and dense/full solves run phase 2
+    /// from it.  Rows fan out over `threads` pool workers with disjoint
+    /// `&mut` LMO/vertex chunks (`pool::chunk_len` boundaries); one chunk
+    /// at `threads == 1` runs inline and allocation-free at steady state.
+    /// Per-row results are bitwise-identical to [`NvLmo::solve_into`]
+    /// (pinned by `tests/batch_determinism.rs`).
+    pub fn solve_panel_into(lmos: &mut [NvLmo], seed: &mut PanelWorkspace,
+                            g: &[f32], verts: &mut [f32], threads: usize)
+        -> anyhow::Result<()> {
+        let r = lmos.len();
+        if r == 0 {
+            return Ok(());
+        }
+        let d = lmos[0].n;
+        let m = lmos[0].m;
+        anyhow::ensure!(lmos.iter().all(|l| l.n == d && l.m == m),
+                        "panel LMOs must share one instance shape");
+        anyhow::ensure!(g.len() == r * d, "gradient panel must be R×d");
+        anyhow::ensure!(verts.len() == r * d, "vertex panel must be R×d");
+        seed.ensure_seed(&lmos[0].a, &lmos[0].cap, m, d);
+        let seed = &*seed;
+        let chunk = pool::chunk_len(r, threads);
+        let jobs = lmos
+            .chunks_mut(chunk)
+            .zip(g.chunks(chunk * d))
+            .zip(verts.chunks_mut(chunk * d))
+            .map(|((lmo_chunk, g_chunk), v_chunk)| {
+                move || {
+                    for ((lmo, gi), vi) in lmo_chunk
+                        .iter_mut()
+                        .zip(g_chunk.chunks(d))
+                        .zip(v_chunk.chunks_mut(d))
+                    {
+                        lmo.solve_row_with(gi, vi, Some(seed))?;
+                    }
+                    Ok(())
+                }
+            });
+        pool::parallel_try_jobs(jobs)
+    }
+
+    /// One row of the panel solve — [`NvLmo::solve_into`] with an
+    /// optional shared-A seed for the dense/full path.  The column
+    /// generation itself is unchanged (its restricted subproblems have
+    /// per-row column sets, so they keep the plain arena solver), which
+    /// is what keeps panel and sequential rows bitwise-equal.
+    fn solve_row_with(&mut self, g: &[f32], x: &mut [f32],
+                      seed: Option<&PanelWorkspace>) -> anyhow::Result<()> {
         assert_eq!(g.len(), self.n);
         assert_eq!(x.len(), self.n);
         self.solves += 1;
         if self.full_solve {
-            return self.solve_full_into(g, x);
+            return self.solve_full_with(g, x, seed);
         }
 
         // candidate pool: negative-gradient columns, most negative first
@@ -212,7 +269,7 @@ impl NvLmo {
             }
         }
         // pathological instance: fall back to the dense solve
-        self.solve_full_into(g, x)
+        self.solve_full_with(g, x, seed)
     }
 
     /// Dense full-column solve (reference path / fallback).
@@ -224,10 +281,23 @@ impl NvLmo {
 
     fn solve_full_into(&mut self, g: &[f32], x: &mut [f32])
         -> anyhow::Result<()> {
+        self.solve_full_with(g, x, None)
+    }
+
+    /// Dense solve over the full shared `A` — the one LP in the LMO whose
+    /// constraint system is exactly the shared `(A, cap)`, so the panel
+    /// path runs it as phase 2 from the cached seed (bitwise-equal to the
+    /// from-scratch solve by the `lp::panel` contract).
+    fn solve_full_with(&mut self, g: &[f32], x: &mut [f32],
+                       seed: Option<&PanelWorkspace>) -> anyhow::Result<()> {
         self.c_sub.clear();
         self.c_sub.extend(g.iter().map(|&v| v as f64));
-        match lp::solve_into(&self.c_sub, &self.a, &self.cap, self.m,
-                             self.n, &mut self.ws) {
+        let status = match seed {
+            Some(s) => s.solve_row(&self.c_sub, &mut self.ws),
+            None => lp::solve_into(&self.c_sub, &self.a, &self.cap,
+                                   self.m, self.n, &mut self.ws),
+        };
+        match status {
             LpStatus::Optimal { .. } => {
                 for (slot, &v) in x.iter_mut().zip(&self.ws.x) {
                     *slot = v as f32;
@@ -377,5 +447,69 @@ mod tests {
         let g = vec![1.0f32; 6];
         let s = lmo.solve(&g).unwrap();
         assert!(s.iter().all(|&v| v.abs() < 1e-8));
+    }
+
+    #[test]
+    fn panel_solve_is_bitwise_sequential_rows() {
+        // solve_panel_into == per-row solve_into bit-for-bit, for every
+        // thread count (uneven chunks included) and on both the CG and
+        // dense/full paths.
+        let d = 40;
+        let inst = NewsvendorInstance::generate(&StreamTree::new(17), d, 3,
+                                                0.6);
+        let mut rng = crate::rng::Philox::new(53);
+        for full in [false, true] {
+            let r = 5usize;
+            let g: Vec<f32> = (0..r * d)
+                .map(|_| rng.uniform_f32(-3.0, 2.0))
+                .collect();
+            // reference: independent sequential rows
+            let mut want = vec![0.0f32; r * d];
+            for i in 0..r {
+                let mut lmo = NvLmo::new(&inst);
+                lmo.full_solve = full;
+                lmo.solve_into(&g[i * d..(i + 1) * d],
+                               &mut want[i * d..(i + 1) * d])
+                    .unwrap();
+            }
+            for threads in 1..=4 {
+                let mut lmos: Vec<NvLmo> = (0..r)
+                    .map(|_| {
+                        let mut l = NvLmo::new(&inst);
+                        l.full_solve = full;
+                        l
+                    })
+                    .collect();
+                let mut seed = PanelWorkspace::new();
+                let mut got = vec![0.0f32; r * d];
+                // two passes through the SAME warm seed + arenas: the
+                // second must still match a fresh sequential solve
+                for pass in 0..2 {
+                    NvLmo::solve_panel_into(&mut lmos, &mut seed, &g,
+                                            &mut got, threads)
+                        .unwrap();
+                    for (pos, (a, b)) in
+                        want.iter().zip(&got).enumerate()
+                    {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "full={} threads={} pass={} pos={}",
+                                   full, threads, pass, pos);
+                    }
+                }
+                assert!(seed.is_ready());
+            }
+        }
+    }
+
+    #[test]
+    fn panel_solve_rejects_mismatched_shapes() {
+        let a = inst(8);
+        let b = NewsvendorInstance::generate(&StreamTree::new(5), 10, 3, 0.6);
+        let mut lmos = vec![NvLmo::new(&a), NvLmo::new(&b)];
+        let mut seed = PanelWorkspace::new();
+        let g = vec![0.0f32; 18];
+        let mut v = vec![0.0f32; 18];
+        assert!(NvLmo::solve_panel_into(&mut lmos, &mut seed, &g, &mut v, 1)
+            .is_err());
     }
 }

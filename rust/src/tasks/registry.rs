@@ -536,6 +536,9 @@ impl SimTask for NewsvendorTask {
         let mut lmos: Vec<NvLmo> =
             (0..spec.reps).map(|_| NvLmo::new(&inst)).collect();
         let mut ctl = PanelCtl { sink, budget: spec.budget };
+        // the panel LMO is pure host-side LP work on either backend, so
+        // both arms fan its rows out over the native worker pool
+        let threads = cx.native_threads;
         let out = match spec.backend {
             BackendKind::Xla => {
                 let engine = cx.engine()?;
@@ -546,10 +549,9 @@ impl SimTask for NewsvendorTask {
                     })?;
                 frank_wolfe::run_nv_batch_ctl(&mut backend, &mut lmos, &x0,
                                               p.iters, p.m_inner, &trees,
-                                              &mut ctl)?
+                                              threads, &mut ctl)?
             }
             _ => {
-                let threads = cx.native_threads;
                 let inner = plane::inner_threads(threads, shards);
                 let mut backend = ShardedBatch::pooled(
                     spec.reps, shards, spec.size, threads, |rows| {
@@ -558,7 +560,7 @@ impl SimTask for NewsvendorTask {
                     })?;
                 frank_wolfe::run_nv_batch_ctl(&mut backend, &mut lmos, &x0,
                                               p.iters, p.m_inner, &trees,
-                                              &mut ctl)?
+                                              threads, &mut ctl)?
             }
         };
         Ok(BatchRun {

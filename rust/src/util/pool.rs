@@ -7,7 +7,8 @@
 //!   `native_par` ablation backend: splits an index range over N threads and
 //!   merges results in order.
 //! * [`parallel_try_jobs`] — the disjoint-slice variant for the native batch
-//!   engines: the caller pre-splits its output panel into `&mut` chunks with
+//!   engines and the panel LMO (`NvLmo::solve_panel_into`, DESIGN.md §17):
+//!   the caller pre-splits its output panel into `&mut` chunks with
 //!   [`chunk_len`] + `chunks_mut` (the exact same boundaries
 //!   `parallel_map_chunks` would use) and hands one `FnOnce` job per chunk;
 //!   no `Mutex`, no merge copy, and a single job runs inline on the calling

@@ -26,9 +26,11 @@ use simopt::backend::plane::tile_rows;
 use simopt::backend::{
     HessianMode, LrBatchBackend, MvBatchBackend, NvBatchBackend,
 };
-use simopt::rng::StreamTree;
+use simopt::lp::PanelWorkspace;
+use simopt::rng::{Philox, StreamTree};
 use simopt::sim::{AssetUniverse, ClassifyData, NewsvendorInstance};
 use simopt::tasks::cvar;
+use simopt::tasks::newsvendor::NvLmo;
 use simopt::tasks::BatchCorrectionMemory;
 
 /// Counts every allocation request (alloc / alloc_zeroed / realloc);
@@ -141,6 +143,39 @@ fn steady_state_batch_loops_do_not_allocate() {
     assert_no_allocs("nv grad_obj_batch", || {
         for k in warmup..warmup + measured {
             batch.grad_obj_batch(&x_panel, &keys[k], &mut g, &mut objs)
+                .unwrap();
+        }
+    });
+
+    // ---- Task 2: panel LMO (DESIGN.md §17) -------------------------------
+    // At threads = 1 the row fan-out is the inline single-chunk path, so
+    // after warmup the whole panel solve — shared-seed reuse check, column
+    // generation, restricted simplex — must run allocation-free even as
+    // the gradient panel changes every step.  The first warmup pass uses
+    // an all-negative gradient so every CG arena (candidate pool, active
+    // set, restricted tableau) reaches its maximum shape (k = d columns)
+    // before the window; later steps only shrink.
+    let mut lmos: Vec<NvLmo> = (0..r).map(|_| NvLmo::new(&inst)).collect();
+    let mut lmo_seed = PanelWorkspace::new();
+    let mut verts = vec![0.0f32; r * nd];
+    let mut rng = Philox::new(0x1A0);
+    let g_steps: Vec<Vec<f32>> = (0..warmup + measured)
+        .map(|k| {
+            if k == 0 {
+                vec![-1.0f32; r * nd]
+            } else {
+                (0..r * nd).map(|_| rng.uniform_f32(-3.0, 2.0)).collect()
+            }
+        })
+        .collect();
+    for g in g_steps.iter().take(warmup) {
+        NvLmo::solve_panel_into(&mut lmos, &mut lmo_seed, g, &mut verts, 1)
+            .unwrap();
+    }
+    assert_no_allocs("nv panel lmo", || {
+        for g in g_steps.iter().skip(warmup) {
+            NvLmo::solve_panel_into(&mut lmos, &mut lmo_seed, g, &mut verts,
+                                    1)
                 .unwrap();
         }
     });

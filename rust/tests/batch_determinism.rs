@@ -294,6 +294,131 @@ fn sharded_batched_equals_unsharded_bitwise() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// The panel LMO (DESIGN.md §17)
+// ---------------------------------------------------------------------------
+
+/// One panel-LMO cell: an NV instance shape plus a replication count.
+#[derive(Debug)]
+struct LmoCell {
+    seed: u64,
+    d: usize,
+    m: usize,
+    reps: usize,
+}
+
+fn random_lmo_cell(g: &mut Gen) -> LmoCell {
+    LmoCell {
+        seed: g.u64_in(0..10_000),
+        d: 8 + 4 * g.usize_in(0..5),
+        m: 1 + g.usize_in(0..4),
+        reps: g.usize_in(2..6),
+    }
+}
+
+#[test]
+fn panel_lmo_bitwise_matches_per_row_solves() {
+    // The tentpole property: one solve_panel_into call (shared-A seed +
+    // pool fan-out) must reproduce, bit for bit, R independent
+    // NvLmo::solve_into calls — over random instances, random mixed-sign
+    // gradient panels, EVERY thread count 1..=R+1 (uneven chunks and the
+    // degenerate threads > R case included), and repeated steps through
+    // the same warm seed.
+    use simopt::lp::PanelWorkspace;
+    use simopt::sim::NewsvendorInstance;
+    use simopt::tasks::NvLmo;
+    check("panel lmo == per-row lmo", 6, random_lmo_cell, |cell| {
+        let (d, reps) = (cell.d, cell.reps);
+        let inst = NewsvendorInstance::generate(
+            &StreamTree::new(cell.seed), d, cell.m, 0.6);
+        let mut p = Philox::new(cell.seed ^ 0x1310);
+        let steps: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                (0..reps * d).map(|_| p.uniform_f32(-3.0, 2.0)).collect()
+            })
+            .collect();
+        // reference: fresh sequential rows per step
+        let want: Vec<Vec<f32>> = steps
+            .iter()
+            .map(|g| {
+                let mut out = vec![0.0f32; reps * d];
+                for i in 0..reps {
+                    NvLmo::new(&inst)
+                        .solve_into(&g[i * d..(i + 1) * d],
+                                    &mut out[i * d..(i + 1) * d])
+                        .unwrap();
+                }
+                out
+            })
+            .collect();
+        (1..=reps + 1).all(|threads| {
+            let mut lmos: Vec<NvLmo> =
+                (0..reps).map(|_| NvLmo::new(&inst)).collect();
+            let mut seed = PanelWorkspace::new();
+            let mut verts = vec![0.0f32; reps * d];
+            steps.iter().zip(&want).all(|(g, want_step)| {
+                NvLmo::solve_panel_into(&mut lmos, &mut seed, g, &mut verts,
+                                        threads)
+                    .unwrap();
+                verts
+                    .iter()
+                    .zip(want_step)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+            })
+        })
+    });
+}
+
+#[test]
+fn nv_panel_driver_bitwise_for_every_shard_and_thread_count() {
+    // Driver-level closure of the same contract: the batched NV run —
+    // panel LMO riding a sharded plane — stays bit-identical to the
+    // sequential driver for S ∈ {1, 2, 3} × threads ∈ {1, 2, 3}.
+    use simopt::backend::native::{NativeNv, NativeNvBatch};
+    use simopt::backend::plane::ShardedBatch;
+    use simopt::opt::{run_nv, run_nv_batch};
+    use simopt::sim::NewsvendorInstance;
+    use simopt::tasks::NvLmo;
+    let (d, m, reps, epochs, m_inner, samples) = (10usize, 2usize, 5usize,
+                                                  3usize, 3usize, 8usize);
+    let root = StreamTree::new(61);
+    let inst = NewsvendorInstance::generate(&root, d, m, 0.6);
+    let x0 = inst.feasible_start();
+    let trees: Vec<StreamTree> =
+        (0..reps).map(|r| root.subtree(&[1000 + r as u64])).collect();
+
+    let mut seq = Vec::new();
+    for tree in &trees {
+        let mut single = NativeNv::new(inst.clone(), samples,
+                                       NativeMode::Sequential);
+        let mut lmo = NvLmo::new(&inst);
+        let (x, _) = run_nv(&mut single, &mut lmo, x0.clone(), epochs,
+                            m_inner, tree)
+            .unwrap();
+        seq.extend_from_slice(&x);
+    }
+
+    for shards in [1usize, 2, 3] {
+        for threads in [1usize, 2, 3] {
+            let mut backend = ShardedBatch::pooled(
+                reps, shards, d, threads, |rows| {
+                    Ok(NativeNvBatch::new(&inst, samples, rows.len(), 1))
+                })
+                .unwrap();
+            let mut lmos: Vec<NvLmo> =
+                (0..reps).map(|_| NvLmo::new(&inst)).collect();
+            let (panel, _) = run_nv_batch(&mut backend, &mut lmos, &x0,
+                                          epochs, m_inner, &trees, threads)
+                .unwrap();
+            assert_eq!(panel.len(), seq.len());
+            for (pos, (a, b)) in panel.iter().zip(&seq).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "S={} threads={} pos={}", shards, threads, pos);
+            }
+        }
+    }
+}
+
 #[test]
 fn sharded_equals_sequential_for_every_task() {
     // The acceptance triangle, pinned (not randomized): R = 5 with
