@@ -269,6 +269,118 @@ def test_lmo_only_share_regression_fires_the_gate(tmp_path, capsys):
     assert "lmo" in capsys.readouterr().out
 
 
+def _write_metrics(tmp_path, name, mtime, runs=0, hits=0, misses=0,
+                   wait_sum=0.0, wait_count=0):
+    import os
+    rec = {
+        "counters": {
+            "submits_total": runs + hits,
+            "runs_executed_total": runs,
+            "cache_hits_total": hits,
+            "cache_misses_total": misses,
+            "busy_rejections_total": 0,
+            "frames_relayed_total": runs,
+            "frozen_rows_total": 0,
+        },
+        "gauges": {"queue_depth": 0, "queue_depth_high_water": 1,
+                   "cache_entries": misses},
+        "histograms": {
+            "queue_wait_seconds": {"bounds": [0.001, 0.01, 0.1],
+                                   "counts": [wait_count, 0, 0, 0],
+                                   "sum_s": wait_sum,
+                                   "count": wait_count},
+            "run_latency_seconds": {"bounds": [0.001], "counts": [0, 0],
+                                    "sum_s": 0.0, "count": 0},
+        },
+        "per_phase": {},
+    }
+    p = tmp_path / name
+    p.write_text(json.dumps(rec))
+    os.utime(p, (mtime, mtime))
+    return p
+
+
+def test_service_snapshots_ordered_by_mtime_and_derived(tmp_path):
+    # written "newest" first: mtime, not directory order, is the axis
+    _write_metrics(tmp_path, "late.json", 2_000, runs=10, hits=5,
+                   misses=5, wait_sum=1.0, wait_count=10)
+    _write_metrics(tmp_path, "early.json", 1_000, runs=2, hits=0,
+                   misses=2, wait_sum=0.1, wait_count=2)
+    snaps = tj.load_service_snapshots(tj.find_metrics_files([tmp_path]))
+    assert [s["name"] for s in snaps] == ["early", "late"]
+    runs, wait, ratio = tj.service_derived(snaps[0])
+    assert (runs, wait, ratio) == (2.0, 0.05, 0.0)
+    runs, wait, ratio = tj.service_derived(snaps[1])
+    assert (runs, wait, ratio) == (10.0, 0.1, 0.5)
+
+
+def test_service_idle_snapshot_has_no_mean_or_ratio(tmp_path):
+    p = _write_metrics(tmp_path, "idle.json", 1_000)
+    snaps = tj.load_service_snapshots([p])
+    runs, wait, ratio = tj.service_derived(snaps[0])
+    assert (runs, wait, ratio) == (0.0, None, None)
+    # renders as dashes, not a ZeroDivisionError
+    table = tj.render_service_table(snaps)
+    assert "| idle | 0 | – | – |" in table
+
+
+def test_service_table_renders_trend_rows(tmp_path):
+    _write_metrics(tmp_path, "a.json", 1_000, runs=2, hits=1, misses=3,
+                   wait_sum=0.004, wait_count=2)
+    _write_metrics(tmp_path, "b.json", 2_000, runs=4, hits=2, misses=2,
+                   wait_sum=0.4, wait_count=4)
+    snaps = tj.load_service_snapshots(tj.find_metrics_files([tmp_path]))
+    table = tj.render_service_table(snaps)
+    lines = table.splitlines()
+    assert lines[0].startswith("| snapshot |")
+    assert "| a | 2 | 2.00ms | 25.0% |" in table
+    assert "| b | 4 | 100.00ms | 50.0% |" in table
+
+
+def test_service_shapeless_file_skipped_not_fatal(tmp_path, capsys):
+    (tmp_path / "junk.json").write_text("{\"not\": \"a snapshot\"}")
+    (tmp_path / "broken.json").write_text("{")
+    _write_metrics(tmp_path, "ok.json", 1_000, runs=1, misses=1)
+    snaps = tj.load_service_snapshots(tj.find_metrics_files([tmp_path]))
+    assert [s["name"] for s in snaps] == ["ok"]
+    err = capsys.readouterr().err
+    assert "junk.json" in err
+    assert "broken.json" in err
+
+
+def test_main_service_metrics_only_exits_0(tmp_path, capsys):
+    _write_metrics(tmp_path, "snap.json", 1_000, runs=3, hits=1, misses=2,
+                   wait_sum=0.03, wait_count=3)
+    assert tj.main(["--service-metrics", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "| snapshot |" in out
+    assert "| snap | 3 |" in out
+
+
+def test_main_service_metrics_never_gate_alongside_bench(tmp_path, capsys):
+    # a bench regression still exits 1 with service metrics present;
+    # service rows render but cannot change the verdict either way
+    bench = tmp_path / "bench"
+    bench.mkdir()
+    for run, mean in ((1, 1.0), (2, 1.0), (3, 5.0)):
+        _write(bench, f"BENCH_{run}.json", "bs", f"c{run}", run,
+               {"case": mean})
+    metrics = tmp_path / "metrics"
+    metrics.mkdir()
+    _write_metrics(metrics, "snap.json", 1_000, runs=1, misses=1)
+    assert tj.main([str(bench), "--service-metrics", str(metrics)]) == 1
+    out = capsys.readouterr().out
+    assert "| snapshot |" in out
+    assert "regression" in out
+
+
+def test_main_no_inputs_at_all_exits_2(tmp_path, capsys):
+    assert tj.main([]) == 2
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert tj.main(["--service-metrics", str(empty)]) == 2
+
+
 def test_merged_history_gates_on_the_newest_run(tmp_path):
     # End-to-end over a merged history tree: three healthy runs then a
     # regressed newest run in a lexically-early directory must exit 1.

@@ -29,9 +29,20 @@ Runs are ordered by ``ci_run`` id when present (GitHub run ids are
 monotonic), else by file modification time, so both a directory of
 per-run downloads and a local accumulation directory work.
 
+The tool also ingests **service metrics snapshots** (DESIGN.md §18) via
+``--service-metrics``: JSON files captured with ``simopt submit
+--metrics --metrics-format json``, ordered by file mtime.  Each
+snapshot contributes one trend row deriving the serving plane's health
+numbers — runs executed, mean queue wait (``sum_s/count`` of the
+``queue_wait_seconds`` histogram), and the cache-hit ratio
+``hits/(hits+misses)``.  Service rows are observability, never a gate:
+they cannot fail the build, and a service-metrics-only invocation (no
+bench roots) exits 0 when snapshots were found.
+
 Usage:
   python python/tools/trajectory.py DIR [DIR...]        # dirs are rglobbed
   python python/tools/trajectory.py DIR --sigma 2 --min-history 3
+  python python/tools/trajectory.py --service-metrics METRICS_DIR
 
 Exit codes: 0 = no regression (or not enough history), 1 = regression,
 2 = no telemetry found.  The CI bench-trajectory job wiring this is a
@@ -64,6 +75,91 @@ def find_files(roots):
             seen.add(r)
             uniq.append(f)
     return uniq
+
+
+def find_metrics_files(paths):
+    """Service metrics snapshots under the given paths (dirs rglobbed
+    for *.json, files taken as-is), deduplicated, ordered oldest-first
+    by file mtime — snapshots have no embedded run id, so capture time
+    IS the trend axis."""
+    out = []
+    for root in paths:
+        p = Path(root)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.json")))
+        elif p.is_file():
+            out.append(p)
+    seen, uniq = set(), []
+    for f in out:
+        r = f.resolve()
+        if r not in seen:
+            seen.add(r)
+            uniq.append(f)
+    uniq.sort(key=lambda f: (f.stat().st_mtime, str(f)))
+    return uniq
+
+
+def load_service_snapshots(files):
+    """Parse `simopt submit --metrics --metrics-format json` output
+    (the MetricsSnapshot wire shape: counters/gauges/histograms maps);
+    skip unreadable or shapeless files with a warning.  Returns a list
+    of dicts with keys name, counters, gauges, histograms, in the given
+    (mtime) order."""
+    snaps = []
+    for f in files:
+        try:
+            rec = json.loads(Path(f).read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[trajectory] skipping {f}: {e}", file=sys.stderr)
+            continue
+        if not isinstance(rec, dict) \
+                or not isinstance(rec.get("counters"), dict):
+            print(f"[trajectory] {f}: not a metrics snapshot "
+                  "(no 'counters' object)", file=sys.stderr)
+            continue
+        snaps.append({
+            "name": Path(f).stem,
+            "counters": {k: float(v) for k, v in rec["counters"].items()
+                         if isinstance(v, (int, float))},
+            "gauges": {k: float(v)
+                       for k, v in (rec.get("gauges") or {}).items()
+                       if isinstance(v, (int, float))},
+            "histograms": {k: v
+                           for k, v in (rec.get("histograms") or {}).items()
+                           if isinstance(v, dict)},
+        })
+    return snaps
+
+
+def service_derived(snap):
+    """The three serving-plane health numbers one snapshot yields:
+    (runs_executed, queue_wait_mean_s | None, cache_hit_ratio | None).
+    Means and ratios are None when their denominator is zero — an idle
+    server has no queue-wait distribution to average."""
+    runs = snap["counters"].get("runs_executed_total", 0.0)
+    hist = snap["histograms"].get("queue_wait_seconds") or {}
+    count = hist.get("count") or 0
+    wait = (float(hist.get("sum_s", 0.0)) / count) if count else None
+    hits = snap["counters"].get("cache_hits_total", 0.0)
+    misses = snap["counters"].get("cache_misses_total", 0.0)
+    ratio = hits / (hits + misses) if (hits + misses) > 0 else None
+    return runs, wait, ratio
+
+
+def render_service_table(snaps):
+    """One row per snapshot (oldest-first): the derived health numbers.
+    Counters are cumulative since server start, so within one server's
+    lifetime the runs column is monotone — a drop marks a restart."""
+    lines = ["| snapshot | runs_executed | queue_wait mean | "
+             "cache-hit ratio |",
+             "|---|---|---|---|"]
+    for snap in snaps:
+        runs, wait, ratio = service_derived(snap)
+        wait_s = "–" if wait is None else fmt_s(wait)
+        ratio_s = "–" if ratio is None else f"{ratio * 100:.1f}%"
+        lines.append(f"| {snap['name']} | {runs:.0f} | {wait_s} | "
+                     f"{ratio_s} |")
+    return "\n".join(lines)
 
 
 def load_runs(files):
@@ -268,8 +364,14 @@ def render_phase_table(phase_series):
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("roots", nargs="+",
+    ap.add_argument("roots", nargs="*",
                     help="directories (rglobbed) or BENCH_*.json files")
+    ap.add_argument("--service-metrics", nargs="+", default=[],
+                    metavar="PATH",
+                    help="service metrics snapshots (`simopt submit "
+                         "--metrics --metrics-format json` output; files "
+                         "or dirs rglobbed for *.json), ordered by file "
+                         "mtime — rendered as trend rows, never a gate")
     ap.add_argument("--sigma", type=float, default=2.0,
                     help="regression threshold in history σ (default 2)")
     ap.add_argument("--rel-margin", type=float, default=1.05,
@@ -280,6 +382,29 @@ def main(argv=None):
                     help="max growth of a phase's share of attributed "
                          "time, in percentage points (default 5)")
     args = ap.parse_args(argv)
+    if not args.roots and not args.service_metrics:
+        ap.print_usage(sys.stderr)
+        print("[trajectory] nothing to do: give bench roots and/or "
+              "--service-metrics", file=sys.stderr)
+        return 2
+
+    service_snaps = []
+    if args.service_metrics:
+        service_snaps = load_service_snapshots(
+            find_metrics_files(args.service_metrics))
+        if service_snaps:
+            print(f"[trajectory] {len(service_snaps)} service metrics "
+                  "snapshot(s)\n")
+            print(render_service_table(service_snaps))
+        else:
+            print("[trajectory] no service metrics snapshots found under "
+                  + ", ".join(args.service_metrics), file=sys.stderr)
+    if not args.roots:
+        # service rows are observability, never a gate: found snapshots
+        # mean success, an empty ingest means no telemetry at all
+        return 0 if service_snaps else 2
+    if service_snaps:
+        print()
 
     files = find_files(args.roots)
     if not files:

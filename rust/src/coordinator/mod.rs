@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::{BackendKind, ExecMode};
 use crate::opt::{NullSink, ProgressSink};
+use crate::util::log;
 use crate::rng::StreamTree;
 use crate::runtime::Engine;
 use crate::tasks::registry::{self, TaskBackend};
@@ -152,10 +153,12 @@ impl Coordinator {
         for &size in &sweep.sizes {
             for &backend in &sweep.backends {
                 let spec = sweep.spec_for(size, backend);
-                eprintln!(
-                    "[sweep] {} size={} backend={} reps={}",
-                    spec.task, size, backend, spec.reps
-                );
+                log::info("sweep", "run")
+                    .field("task", spec.task)
+                    .field("size", size)
+                    .field("backend", backend)
+                    .field("reps", spec.reps)
+                    .emit();
                 out.push(self.run(&spec)?);
             }
         }

@@ -9,6 +9,8 @@
 //!   artifacts  list AOT artifacts from the manifest
 //!   hardware   print the execution-backend spec table (Table-1 analogue)
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use simopt::backend::HessianMode;
@@ -16,17 +18,22 @@ use simopt::config::{default_sizes, BackendKind, BudgetPolicy, ExecMode,
                      TaskKind};
 use simopt::coordinator::{report, Coordinator, ExperimentSpec, RunResult,
                           SweepSpec};
+use simopt::opt::{NullSink, TracingSink};
 use simopt::service::{Client, Response, Server, ServerConfig,
                       PROTOCOL_VERSION};
 use simopt::tasks::registry;
 use simopt::util::cli::Args;
+use simopt::util::log;
+use simopt::util::trace::{now_us, Span, TraceId, Tracer};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match dispatch(&argv) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("{:#}", e);
+            log::error("simopt", "fatal")
+                .field("err", format!("{:#}", e))
+                .emit();
             1
         }
     };
@@ -120,8 +127,24 @@ fn task_help() -> &'static str {
         .as_str()
 }
 
+/// The `--log-level` gate every command takes (DESIGN.md §18); call
+/// [`apply_log_level`] right after parsing so every later diagnostic
+/// respects it.
+fn log_flag(args: Args) -> Args {
+    args.flag("log-level", Some("info"),
+              "stderr log gate: error | warn | info | debug")
+}
+
+fn apply_log_level(a: &Args) -> Result<()> {
+    let v = a.get("log-level").unwrap_or_default();
+    let level = log::Level::parse(&v).ok_or_else(|| anyhow::anyhow!(
+        "--log-level must be error|warn|info|debug, got '{}'", v))?;
+    log::set_level(level);
+    Ok(())
+}
+
 fn common_flags(args: Args) -> Args {
-    args.flag("task", Some("mv"), task_help())
+    log_flag(args).flag("task", Some("mv"), task_help())
         .flag("artifacts", Some("artifacts"), "artifact directory")
         .flag("results", Some("results"), "results directory")
         .flag("seed", Some("42"), "experiment seed")
@@ -230,7 +253,7 @@ fn spec_from_flags(a: &Args) -> Result<ExperimentSpec> {
 fn write_out(a: &Args, result: &RunResult) -> Result<()> {
     if let Some(path) = a.get("out") {
         std::fs::write(&path, result.to_json().to_string_pretty())?;
-        eprintln!("[out] wrote {}", path);
+        log::info("out", "wrote").field("path", path).emit();
     }
     Ok(())
 }
@@ -245,13 +268,39 @@ fn cmd_run(rest: &[String]) -> Result<()> {
                so concurrent runs don't collide; DESIGN.md §14)")
         .flag("out", None,
               "write the deterministic result payload (JSON) here")
+        .flag("trace-out", None,
+              "append this run's spans (a `run` parent + per-epoch \
+               execution spans) here as Chrome-trace JSONL \
+               (DESIGN.md §18)")
         .parse(rest)
         .map_err(|e| anyhow::anyhow!("{}", e))?;
+    apply_log_level(&a)?;
     let task = parse_task(&a)?;
     let spec = spec_from_flags(&a)?;
     let mut coord =
         Coordinator::new(&a.get("artifacts").unwrap(), &a.get("results").unwrap())?;
-    let result = coord.run(&spec)?;
+    let result = match a.get("trace-out") {
+        Some(path) => {
+            // same recording surface the server uses: a TracingSink over
+            // the null observer, so the traced run is bitwise-identical
+            // to an untraced one (tests/trace_invariance.rs)
+            let tracer = Arc::new(Tracer::to_file(&path)?);
+            let trace = TraceId::mint();
+            let t0 = now_us();
+            let mut base = NullSink;
+            let mut sink =
+                TracingSink::new(Arc::clone(&tracer), trace, &mut base);
+            let result = coord.run_with(&spec, &mut sink)?;
+            tracer.record(&Span::new(trace, "run", t0, now_us())
+                .with("task", spec.label()));
+            log::info("run", "trace_written")
+                .field("path", &path)
+                .field("trace", trace.as_hex())
+                .emit();
+            result
+        }
+        None => coord.run(&spec)?,
+    };
     println!("{}", result.summary());
     write_out(&a, &result)?;
     let t = result.time_stats();
@@ -290,6 +339,7 @@ fn cmd_sweep(rest: &[String]) -> Result<()> {
         .flag("backends", Some("native,xla"), "comma list of backends")
         .parse(rest)
         .map_err(|e| anyhow::anyhow!("{}", e))?;
+    apply_log_level(&a)?;
     let task = parse_task(&a)?;
     let mut sweep = SweepSpec::figure2(task);
     if a.get("sizes").is_some() {
@@ -322,6 +372,7 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
               "checkpoint fractions of the run")
         .parse(rest)
         .map_err(|e| anyhow::anyhow!("{}", e))?;
+    apply_log_level(&a)?;
     let task = parse_task(&a)?;
     let sizes = default_sizes(task);
     let size = match a.get("size") {
@@ -346,7 +397,10 @@ fn cmd_accuracy(rest: &[String]) -> Result<()> {
             .seed(a.get_u64("seed")?)
             .hessian(hessian_mode(&a)?)
             .execution(exec_mode(&a)?);
-        eprintln!("[accuracy] {} backend={}", task, backend);
+        log::info("accuracy", "run")
+            .field("task", task)
+            .field("backend", backend)
+            .emit();
         results.push(coord.run(&spec)?);
     }
     println!("{}", report::table2_markdown(&results, &fracs));
@@ -369,8 +423,15 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .flag("cache", Some("256"),
               "result-cache bound in entries (FIFO eviction; 0 disables \
                caching)")
+        .flag("trace-out", None,
+              "append request spans (admission → cache check → queue wait \
+               → per-epoch execution → relay) here as Chrome-trace JSONL \
+               (DESIGN.md §18)")
+        .flag("log-level", Some("info"),
+              "stderr log gate: error | warn | info | debug")
         .parse(rest)
         .map_err(|e| anyhow::anyhow!("{}", e))?;
+    apply_log_level(&a)?;
     let cfg = ServerConfig {
         socket: a.get("socket").unwrap().into(),
         artifact_dir: a.get("artifacts").unwrap(),
@@ -378,20 +439,22 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         workers: a.get_usize("workers")?,
         queue_capacity: a.get_usize("queue")?,
         cache_capacity: a.get_usize("cache")?,
+        trace_out: a.get("trace-out").map(Into::into),
     };
     let server = Server::bind(cfg)?;
     let cfg = server.config();
-    eprintln!(
-        "[serve] listening on {} (workers={}, queue={}, artifacts={})",
-        cfg.socket.display(), cfg.workers, cfg.queue_capacity,
-        cfg.artifact_dir
-    );
+    log::info("serve", "listening")
+        .field("socket", cfg.socket.display())
+        .field("workers", cfg.workers)
+        .field("queue", cfg.queue_capacity)
+        .field("artifacts", &cfg.artifact_dir)
+        .emit();
     let stats = server.run()?;
-    eprintln!(
-        "[serve] graceful shutdown: {} executed, {} cache hits, {} cached \
-         entries",
-        stats.executed, stats.cache_hits, stats.cache_entries
-    );
+    log::info("serve", "shutdown")
+        .field("executed", stats.executed)
+        .field("cache_hits", stats.cache_hits)
+        .field("cache_entries", stats.cache_entries)
+        .emit();
     Ok(())
 }
 
@@ -417,11 +480,30 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
                     "stream per-epoch progress frames ahead of the result \
                      (protocol v2)")
             .switch("status", "query server counters instead of submitting")
-            .switch("shutdown", "request graceful server shutdown"),
+            .switch("metrics",
+                    "scrape the server's metrics registry (protocol v2) \
+                     instead of submitting")
+            .flag("metrics-format", Some("prom"),
+                  "--metrics rendering: prom (Prometheus-style text) | \
+                   json")
+            .switch("shutdown", "request graceful server shutdown")
+            .flag("log-level", Some("info"),
+                  "stderr log gate: error | warn | info | debug"),
         "auto"))
         .parse(rest)
         .map_err(|e| anyhow::anyhow!("{}", e))?;
+    apply_log_level(&a)?;
     let mut client = Client::connect(a.get("socket").unwrap())?;
+    if a.get_bool("metrics") {
+        let snap = client.metrics()?;
+        match a.get("metrics-format").unwrap_or_default().as_str() {
+            "json" => println!("{}", snap.to_json().to_string_pretty()),
+            "prom" | "prometheus" => print!("{}", snap.to_prometheus()),
+            other => bail!("--metrics-format must be prom|json, got '{}'",
+                           other),
+        }
+        return Ok(());
+    }
     if a.get_bool("status") {
         let st = client.status()?;
         println!(
@@ -450,12 +532,20 @@ fn cmd_submit(rest: &[String]) -> Result<()> {
     let resp = loop {
         match session.next_event()? {
             Some(Response::Queued { id, position }) => {
-                eprintln!("[submit] queued id={} position={}", id, position)
+                log::info("submit", "queued")
+                    .field("id", id)
+                    .field("position", position)
+                    .emit()
             }
             Some(Response::Progress(p)) => {
-                eprintln!("[submit] progress id={} epoch={}/{} live={} \
-                           step_s={:.6}",
-                          p.id, p.epoch, p.epochs, p.live, p.step_s)
+                // `event=progress id=…` keeps the line greppable by the
+                // same `progress id=` probe the CI smoke always used
+                log::info("submit", "progress")
+                    .field("id", p.id)
+                    .field("epoch", format!("{}/{}", p.epoch, p.epochs))
+                    .field("live", p.live)
+                    .field("step_s", format!("{:.6}", p.step_s))
+                    .emit()
             }
             Some(terminal) => break terminal,
             None => bail!("session ended without a terminal frame"),

@@ -31,6 +31,7 @@ pub use frank_wolfe::{run_mv, run_mv_batch, run_mv_batch_ctl, run_mv_ctl,
                       FwTrace};
 pub use panel::{run_panel, run_panel_ctl, PanelCtl, PanelHook,
                 PanelOutcome};
-pub use progress::{NullSink, ProgressSink, SharedSink, StepEvent};
+pub use progress::{NullSink, ProgressSink, SharedSink, StepEvent,
+                   TracingSink};
 pub use sqn::{run_sqn, run_sqn_batch, run_sqn_batch_ctl, run_sqn_ctl,
               SqnBatchOutcome, SqnConfig, SqnTrace};

@@ -18,6 +18,7 @@
 use anyhow::Result;
 
 use crate::util::profile::Profiler;
+use crate::util::trace::{now_us, Span, TraceId, Tracer};
 
 /// One outer optimization step, as seen by an observer.
 #[derive(Debug, Clone, Copy)]
@@ -56,6 +57,42 @@ pub struct NullSink;
 impl ProgressSink for NullSink {
     fn on_step(&mut self, _ev: &StepEvent<'_>) -> Result<()> {
         Ok(())
+    }
+}
+
+/// Observer that records one `epoch` [`Span`] per step event and passes
+/// the event through to `inner` untouched — how `--trace-out` gets
+/// per-epoch execution spans without a second hook into the drivers
+/// (DESIGN.md §18).
+///
+/// Invariance: the span is derived from the event's already-measured
+/// `step_s` (its start is back-computed from one clock read taken here,
+/// after the timed region closed), so tracing a run cannot perturb it.
+pub struct TracingSink<'a> {
+    tracer: std::sync::Arc<Tracer>,
+    trace: TraceId,
+    inner: &'a mut dyn ProgressSink,
+}
+
+impl<'a> TracingSink<'a> {
+    pub fn new(tracer: std::sync::Arc<Tracer>, trace: TraceId,
+               inner: &'a mut dyn ProgressSink) -> TracingSink<'a> {
+        TracingSink { tracer, trace, inner }
+    }
+}
+
+impl ProgressSink for TracingSink<'_> {
+    fn on_step(&mut self, ev: &StepEvent<'_>) -> Result<()> {
+        let end_us = now_us();
+        // truncation can only shrink the back-computed interval, so the
+        // epoch span never starts before its enclosing execute span
+        let start_us = end_us.saturating_sub((ev.step_s * 1e6) as u64);
+        self.tracer.record(
+            &Span::new(self.trace, "epoch", start_us, end_us)
+                .with("epoch", ev.epoch)
+                .with("epochs", ev.epochs)
+                .with("live", ev.live));
+        self.inner.on_step(ev)
     }
 }
 
@@ -101,6 +138,45 @@ mod tests {
             profile: Profiler::default(),
         };
         assert!(NullSink.on_step(&ev).is_ok());
+    }
+
+    #[test]
+    fn tracing_sink_records_epoch_spans_and_passes_through() {
+        use crate::util::json::Value;
+        use crate::util::trace::SharedBuf;
+        let buf = SharedBuf::default();
+        let tracer =
+            std::sync::Arc::new(Tracer::to_writer(Box::new(buf.clone())));
+        let trace = TraceId::mint();
+        let mut inner = RecordingSink::default();
+        {
+            let mut sink = TracingSink::new(tracer, trace, &mut inner);
+            let ev = StepEvent {
+                reps: &[0],
+                epoch: 2,
+                epochs: 4,
+                objs: &[0.75],
+                live: 1,
+                step_s: 0.001,
+                profile: Profiler::default(),
+            };
+            sink.on_step(&ev).unwrap();
+        }
+        // the event reached the inner sink untouched…
+        assert_eq!(inner.0, vec![(0, 2, 0.75)]);
+        // …and exactly one epoch span landed in the trace, carrying the
+        // event's already-measured duration
+        let text =
+            String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let v = Value::parse(lines[0]).unwrap();
+        assert_eq!(v.get("name").and_then(Value::as_str), Some("epoch"));
+        assert_eq!(v.get("dur").and_then(Value::as_f64), Some(1000.0));
+        let args = v.get("args").unwrap();
+        assert_eq!(args.get("trace").and_then(Value::as_str),
+                   Some(trace.as_hex().as_str()));
+        assert_eq!(args.get("epoch").and_then(Value::as_str), Some("2"));
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! The service metrics registry (DESIGN.md §18): lock-cheap counters
+//! and fixed-bucket histograms the serving plane updates as requests
+//! flow, snapshotted on demand by the v2-only `metrics` protocol verb.
+//!
+//! Everything on the hot path is a relaxed atomic — one `fetch_add` per
+//! event, no locks, no allocation — and every update happens OUTSIDE
+//! the timed regions (admission, relay, post-run bookkeeping), so the
+//! §15/§18 invariance bar holds: a metered run is bitwise-identical to
+//! an unmetered one.
+//!
+//! A [`MetricsSnapshot`] is the exposition surface, rendered two ways:
+//! * JSON — what the `metrics` frame carries on the wire
+//!   (`{"counters":…,"gauges":…,"histograms":…,"per_phase":…}`);
+//! * Prometheus-style text ([`MetricsSnapshot::to_prometheus`]) — what
+//!   `simopt submit --metrics` prints for scraping/grepping, every
+//!   family prefixed `simopt_` with `# TYPE` headers, histograms in
+//!   cumulative `_bucket{le=…}` / `_sum` / `_count` form.
+//!
+//! Gauges (queue depth / high-water mark, cache entries) and the
+//! per-phase totals are *read at snapshot time* from their owners (the
+//! queue, the cache, `Shared.phase_totals`) rather than duplicated as
+//! registry state — one source of truth per number.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, Value};
+use crate::util::profile::Profiler;
+
+/// Monotone event counter.  Relaxed ordering: counters are statistics,
+/// not synchronization.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket upper bounds (seconds) shared by the latency histograms —
+/// spanning the sub-millisecond native smoke runs through multi-minute
+/// sweeps.  An implicit `+Inf` bucket follows the last bound.
+pub const LATENCY_BOUNDS_S: [f64; 8] =
+    [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0, 60.0];
+
+/// Fixed-bucket histogram of seconds.  `observe` is two relaxed
+/// `fetch_add`s plus one bounded scan of the 8 bounds; the sum is
+/// accumulated in integer microseconds so it needs no float CAS loop.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; LATENCY_BOUNDS_S.len() + 1],
+    sum_us: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: Default::default(),
+            sum_us: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, seconds: f64) {
+        let seconds = if seconds.is_finite() && seconds > 0.0 {
+            seconds
+        } else {
+            0.0
+        };
+        let idx = LATENCY_BOUNDS_S
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(LATENCY_BOUNDS_S.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((seconds * 1e6) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: LATENCY_BOUNDS_S.to_vec(),
+            counts: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            sum_s: self.sum_us.load(Ordering::Relaxed) as f64 / 1e6,
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram.  `counts` is per-bucket
+/// (NON-cumulative; one extra overflow bucket past the last bound) —
+/// the Prometheus renderer produces the cumulative form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub sum_s: f64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Mean observed seconds (0 when empty) — what the trajectory
+    /// tool's queue-wait trend row plots.
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        obj(vec![
+            ("bounds", arr(self.bounds.iter().map(|&b| num(b)).collect())),
+            ("counts",
+             arr(self.counts.iter().map(|&c| num(c as f64)).collect())),
+            ("sum_s", num(self.sum_s)),
+            ("count", num(self.count as f64)),
+        ])
+    }
+
+    fn from_json(v: &Value) -> Result<HistogramSnapshot> {
+        let floats = |key: &str| -> Result<Vec<f64>> {
+            v.get(key)
+                .and_then(Value::as_arr)
+                .with_context(|| format!("histogram missing '{}'", key))?
+                .iter()
+                .map(|x| {
+                    x.as_f64().with_context(|| {
+                        format!("'{}' entries must be numbers", key)
+                    })
+                })
+                .collect()
+        };
+        let counts: Vec<u64> = v
+            .get("counts")
+            .and_then(Value::as_arr)
+            .context("histogram missing 'counts'")?
+            .iter()
+            .map(|x| {
+                x.as_uint()
+                    .context("'counts' entries must be non-negative \
+                              integers")
+            })
+            .collect::<Result<_>>()?;
+        Ok(HistogramSnapshot {
+            bounds: floats("bounds")?,
+            counts,
+            sum_s: v
+                .get("sum_s")
+                .and_then(Value::as_f64)
+                .context("histogram missing 'sum_s'")?,
+            count: v
+                .get("count")
+                .and_then(Value::as_uint)
+                .context("histogram missing 'count'")?,
+        })
+    }
+}
+
+/// The live registry the server owns (one per `Server::run`).  Field
+/// names ARE the metric names (suffixed `_total` in expositions).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    /// Submit requests admitted for parsing (any outcome).
+    pub submits: Counter,
+    /// Experiments actually executed by a worker (cache hits excluded).
+    pub runs_executed: Counter,
+    /// Admission-time fast-path cache misses (submissions that had to
+    /// queue); total hits come from the cache itself at snapshot time.
+    pub cache_misses: Counter,
+    /// Submits bounced with the typed `busy` frame (queue full).
+    pub busy_rejections: Counter,
+    /// Worker frames relayed onto submit conversations (progress +
+    /// terminal) — the relay volume.  Admission acks and fast-path cache
+    /// answers are handler-local writes, not relays.
+    pub frames_relayed: Counter,
+    /// Replication rows frozen by adaptive budgets, summed over runs.
+    pub frozen_rows: Counter,
+    /// Per-job admission-queue wait, measured from the queue's own
+    /// enqueue timestamps (never inferred).
+    pub queue_wait: Histogram,
+    /// Worker wall-clock per executed run (outside-timed-region stamps
+    /// around the run; the run's own §15 profile is untouched).
+    pub run_latency: Histogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> ServiceMetrics {
+        ServiceMetrics::default()
+    }
+
+    /// Freeze the registry plus the externally-owned gauges into one
+    /// exposition value.
+    pub fn snapshot(&self, queue_depth: usize, queue_high_water: usize,
+                    cache_entries: usize, cache_hits: u64,
+                    per_phase: &Profiler) -> MetricsSnapshot {
+        MetricsSnapshot {
+            counters: vec![
+                ("submits_total".into(), self.submits.get()),
+                ("runs_executed_total".into(), self.runs_executed.get()),
+                ("cache_hits_total".into(), cache_hits),
+                ("cache_misses_total".into(), self.cache_misses.get()),
+                ("busy_rejections_total".into(),
+                 self.busy_rejections.get()),
+                ("frames_relayed_total".into(), self.frames_relayed.get()),
+                ("frozen_rows_total".into(), self.frozen_rows.get()),
+            ],
+            gauges: vec![
+                ("queue_depth".into(), queue_depth as u64),
+                ("queue_depth_high_water".into(), queue_high_water as u64),
+                ("cache_entries".into(), cache_entries as u64),
+            ],
+            histograms: vec![
+                ("queue_wait_seconds".into(), self.queue_wait.snapshot()),
+                ("run_latency_seconds".into(),
+                 self.run_latency.snapshot()),
+            ],
+            per_phase: *per_phase,
+        }
+    }
+}
+
+/// What the `metrics` verb answers (and `submit --metrics` renders):
+/// ordered counters/gauges/histograms plus the server's aggregate
+/// per-phase seconds (§15), as one wire value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+    pub per_phase: Profiler,
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<u64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.iter().find(|(n, _)| n == name).map(|(_, h)| h)
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("counters",
+             Value::Obj(self.counters.iter()
+                 .map(|(n, v)| (n.clone(), num(*v as f64)))
+                 .collect())),
+            ("gauges",
+             Value::Obj(self.gauges.iter()
+                 .map(|(n, v)| (n.clone(), num(*v as f64)))
+                 .collect())),
+            ("histograms",
+             Value::Obj(self.histograms.iter()
+                 .map(|(n, h)| (n.clone(), h.to_json()))
+                 .collect())),
+            ("per_phase", self.per_phase.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<MetricsSnapshot> {
+        let uint_entries = |key: &str| -> Result<Vec<(String, u64)>> {
+            v.get(key)
+                .and_then(Value::as_obj)
+                .with_context(|| format!("metrics missing '{}'", key))?
+                .iter()
+                .map(|(n, x)| {
+                    x.as_uint()
+                        .map(|u| (n.clone(), u))
+                        .with_context(|| format!(
+                            "metrics '{}.{}' must be a non-negative \
+                             integer", key, n))
+                })
+                .collect()
+        };
+        let histograms = v
+            .get("histograms")
+            .and_then(Value::as_obj)
+            .context("metrics missing 'histograms'")?
+            .iter()
+            .map(|(n, h)| {
+                HistogramSnapshot::from_json(h)
+                    .map(|s| (n.clone(), s))
+                    .with_context(|| format!("parsing histogram '{}'", n))
+            })
+            .collect::<Result<_>>()?;
+        Ok(MetricsSnapshot {
+            counters: uint_entries("counters")?,
+            gauges: uint_entries("gauges")?,
+            histograms,
+            per_phase: match v.get("per_phase") {
+                None | Some(Value::Null) => Profiler::new(),
+                Some(pp) => Profiler::from_json(pp)
+                    .context("parsing metrics 'per_phase'")?,
+            },
+        })
+    }
+
+    /// Prometheus-style text exposition: `simopt_`-prefixed families
+    /// with `# TYPE` headers; histograms in cumulative
+    /// `_bucket{le="…"}` / `_sum` / `_count` form; per-phase seconds as
+    /// one labeled counter family.
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        for (name, value) in &self.counters {
+            let _ = writeln!(out, "# TYPE simopt_{} counter", name);
+            let _ = writeln!(out, "simopt_{} {}", name, value);
+        }
+        for (name, value) in &self.gauges {
+            let _ = writeln!(out, "# TYPE simopt_{} gauge", name);
+            let _ = writeln!(out, "simopt_{} {}", name, value);
+        }
+        for (name, h) in &self.histograms {
+            let _ = writeln!(out, "# TYPE simopt_{} histogram", name);
+            let mut cumulative = 0u64;
+            for (i, bound) in h.bounds.iter().enumerate() {
+                cumulative += h.counts.get(i).copied().unwrap_or(0);
+                let _ = writeln!(out,
+                                 "simopt_{}_bucket{{le=\"{}\"}} {}",
+                                 name, bound, cumulative);
+            }
+            let _ = writeln!(out, "simopt_{}_bucket{{le=\"+Inf\"}} {}",
+                             name, h.count);
+            let _ = writeln!(out, "simopt_{}_sum {}", name, h.sum_s);
+            let _ = writeln!(out, "simopt_{}_count {}", name, h.count);
+        }
+        let _ = writeln!(out, "# TYPE simopt_phase_seconds_total counter");
+        for phase in crate::util::profile::Phase::ALL {
+            let _ = writeln!(out,
+                             "simopt_phase_seconds_total{{phase=\"{}\"}} {}",
+                             phase.as_str(), self.per_phase.get(phase));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::profile::Phase;
+
+    fn sample() -> MetricsSnapshot {
+        let m = ServiceMetrics::new();
+        m.submits.add(3);
+        m.runs_executed.add(2);
+        m.cache_misses.add(2);
+        m.frames_relayed.add(7);
+        m.queue_wait.observe(0.0004);
+        m.queue_wait.observe(0.3);
+        m.run_latency.observe(0.02);
+        let mut pp = Profiler::new();
+        pp.add(Phase::Compute, 1.25);
+        m.snapshot(1, 4, 2, 1, &pp)
+    }
+
+    #[test]
+    fn counters_and_gauges_land_in_the_snapshot() {
+        let snap = sample();
+        assert_eq!(snap.counter("submits_total"), Some(3));
+        assert_eq!(snap.counter("runs_executed_total"), Some(2));
+        assert_eq!(snap.counter("cache_hits_total"), Some(1));
+        assert_eq!(snap.counter("cache_misses_total"), Some(2));
+        assert_eq!(snap.counter("busy_rejections_total"), Some(0));
+        assert_eq!(snap.counter("no_such"), None);
+        assert_eq!(snap.gauge("queue_depth"), Some(1));
+        assert_eq!(snap.gauge("queue_depth_high_water"), Some(4));
+        assert_eq!(snap.gauge("cache_entries"), Some(2));
+    }
+
+    #[test]
+    fn histogram_buckets_sums_and_mean() {
+        let h = Histogram::default();
+        h.observe(0.0005); // ≤ 0.001 → bucket 0
+        h.observe(0.05); // ≤ 0.1 → bucket 3
+        h.observe(120.0); // > 60 → overflow bucket
+        h.observe(-1.0); // clamped to 0 → bucket 0
+        let s = h.snapshot();
+        assert_eq!(s.count, 4);
+        assert_eq!(s.counts.len(), LATENCY_BOUNDS_S.len() + 1);
+        assert_eq!(s.counts[0], 2);
+        assert_eq!(s.counts[3], 1);
+        assert_eq!(s.counts[LATENCY_BOUNDS_S.len()], 1);
+        assert!((s.sum_s - 120.0505).abs() < 1e-3, "{}", s.sum_s);
+        assert!((s.mean_s() - s.sum_s / 4.0).abs() < 1e-12);
+        assert_eq!(HistogramSnapshot {
+            bounds: vec![],
+            counts: vec![],
+            sum_s: 0.0,
+            count: 0,
+        }.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_json() {
+        let snap = sample();
+        let back =
+            MetricsSnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(back, snap);
+        // corrupt counters are typed errors, not truncated data
+        let mut bad = snap.to_json();
+        if let Value::Obj(kv) = &mut bad {
+            kv.retain(|(k, _)| k != "counters");
+        }
+        assert!(MetricsSnapshot::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn prometheus_exposition_grammar() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("# TYPE simopt_submits_total counter"));
+        assert!(text.contains("\nsimopt_submits_total 3\n")
+                    || text.starts_with("simopt_submits_total 3"),
+                "{}", text);
+        assert!(text.contains("simopt_runs_executed_total 2"));
+        assert!(text.contains("# TYPE simopt_queue_depth gauge"));
+        assert!(text.contains("simopt_queue_depth 1"));
+        assert!(text.contains(
+            "# TYPE simopt_queue_wait_seconds histogram"));
+        // cumulative buckets: the 0.3s observation joins at le="0.5"
+        assert!(text.contains(
+            "simopt_queue_wait_seconds_bucket{le=\"0.001\"} 1"));
+        assert!(text.contains(
+            "simopt_queue_wait_seconds_bucket{le=\"0.5\"} 2"));
+        assert!(text.contains(
+            "simopt_queue_wait_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("simopt_queue_wait_seconds_count 2"));
+        assert!(text.contains(
+            "simopt_phase_seconds_total{phase=\"compute\"} 1.25"));
+        // every line is header or sample — no blank or stray lines
+        for line in text.lines() {
+            assert!(line.starts_with("# TYPE simopt_")
+                        || line.starts_with("simopt_"),
+                    "stray line: {:?}", line);
+        }
+    }
+}

@@ -17,11 +17,21 @@
 //!   submits (`stream` → per-epoch `progress` frames) and typed
 //!   `unsupported_version` answers; v1 conversations are still served
 //!   verbatim, at their own version.
-//! * [`queue`] — bounded FIFO admission with typed `busy` backpressure.
+//! * [`queue`] — bounded FIFO admission with typed `busy` backpressure;
+//!   per-job enqueue timestamps make queue-wait a measured quantity
+//!   (DESIGN.md §18).
 //! * [`cache`] — content-addressed results keyed by
 //!   [`ExperimentSpec::spec_hash`]; repeat submissions re-execute nothing.
+//! * [`metrics`] — the lock-cheap service metrics registry behind the
+//!   v2-only `metrics` verb (counters, gauges, fixed-bucket histograms;
+//!   JSON + Prometheus-style expositions; DESIGN.md §18).
 //! * [`server`] — accept loop, warm per-worker coordinators, graceful
-//!   drain on `shutdown`.
+//!   drain on `shutdown`; mints a [`TraceId`] per conversation, stamps
+//!   it on every v2 frame, and (with `--trace-out`) records the
+//!   request's admission/cache/queue/execute/relay spans as
+//!   Chrome-trace JSONL.
+//!
+//! [`TraceId`]: crate::util::trace::TraceId
 //!
 //! The serving path inherits the repo's core invariant unchanged: a
 //! served result is bit-identical to a direct `simopt run` of the same
@@ -34,13 +44,15 @@
 //!     crate::coordinator::ExperimentSpec::spec_hash
 
 pub mod cache;
+pub mod metrics;
 pub mod protocol;
 pub mod queue;
 pub mod server;
 
 pub use cache::ResultCache;
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use protocol::{Client, ProgressInfo, Request, Response, Session,
                    StatusInfo, WorkerStats, MIN_PROTOCOL_VERSION,
                    PROTOCOL_VERSION};
-pub use queue::{Bounded, PushError};
+pub use queue::{Bounded, Popped, PushError};
 pub use server::{Server, ServerConfig, ServerStats};

@@ -23,6 +23,17 @@
 //! that a deployed v1 client's strict parser expects.  Unknown
 //! top-level keys on any frame are ignored, so v2+ additions never
 //! break a v1 parser.
+//!
+//! Observability additions (DESIGN.md §18), both v2-only:
+//! * every server frame of a v2 conversation carries a `"trace"` key —
+//!   the request's [`TraceId`] in hex, stamped by [`stamp_trace`] so a
+//!   client can find its spans in the server's `--trace-out` JSONL.  On
+//!   a v1 conversation the key is never emitted (those frames stay
+//!   bit-identical), and every parser treats it as an ignorable
+//!   unknown key.
+//! * the `metrics` request verb answers a [`MetricsSnapshot`] frame; a
+//!   v1 frame asking for it is rejected at parse with a typed error
+//!   (the v1 grammar is frozen).
 
 use std::io::{BufRead, BufReader, Write};
 use std::os::unix::net::UnixStream;
@@ -33,6 +44,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::{ExperimentSpec, RunResult};
 use crate::util::json::{arr, num, obj, s, Value};
 use crate::util::profile::Profiler;
+use crate::util::trace::TraceId;
+
+use super::metrics::MetricsSnapshot;
 
 /// Highest protocol version this build speaks; bump on any frame-grammar
 /// change.  v2 added streaming submits (`stream` on `submit`, `progress`
@@ -52,6 +66,10 @@ pub enum Request {
     Submit { spec: Box<ExperimentSpec>, stream: bool },
     /// Report queue/cache/worker counters.
     Status,
+    /// Report the metrics registry (DESIGN.md §18).  v2-only: the v1
+    /// grammar is frozen, so a v1 frame with this type parses to a
+    /// typed error.
+    Metrics,
     /// Stop accepting, drain admitted work, exit.
     Shutdown,
 }
@@ -70,6 +88,7 @@ impl Request {
                 obj(kv)
             }
             Request::Status => obj(head("status")),
+            Request::Metrics => obj(head("metrics")),
             Request::Shutdown => obj(head("shutdown")),
         }
     }
@@ -91,6 +110,13 @@ impl Request {
                 })
             }
             "status" => Ok(Request::Status),
+            "metrics" => {
+                anyhow::ensure!(
+                    ver >= 2,
+                    "the 'metrics' verb requires protocol v2 (the v1 \
+                     grammar is frozen; this frame spoke v{})", ver);
+                Ok(Request::Metrics)
+            }
             "shutdown" => Ok(Request::Shutdown),
             other => bail!("unknown request type '{}'", other),
         }
@@ -165,6 +191,8 @@ pub enum Response {
     /// Parse/validation/execution failure, with the reason.
     Error { message: String },
     Status(StatusInfo),
+    /// The metrics registry snapshot (v2-only `metrics` answer, §18).
+    Metrics(MetricsSnapshot),
     /// Shutdown ack; the server drains admitted work, then exits.
     ShuttingDown,
     /// The request's `v` is outside this build's range; `max` names the
@@ -245,6 +273,11 @@ impl Response {
                         ("per_phase", st.per_phase.to_json()),
                     ])));
                 }
+                obj(kv)
+            }
+            Response::Metrics(snapshot) => {
+                let mut kv = head("metrics");
+                kv.push(("metrics", snapshot.to_json()));
                 obj(kv)
             }
             Response::ShuttingDown => obj(head("shutting_down")),
@@ -348,6 +381,9 @@ impl Response {
                     per_phase,
                 }))
             }
+            "metrics" => Ok(Response::Metrics(MetricsSnapshot::from_json(
+                v.get("metrics")
+                    .context("metrics frame is missing 'metrics'")?)?)),
             "shutting_down" => Ok(Response::ShuttingDown),
             "unsupported_version" => Ok(Response::UnsupportedVersion {
                 max: get_u64("max")?,
@@ -379,6 +415,22 @@ fn frame_u64(v: &Value, key: &str) -> Result<u64> {
 pub fn frame_version(v: &Value) -> Result<u64> {
     frame_u64(v, "v")
         .context("frame carries no valid protocol version 'v'")
+}
+
+/// Stamp a server frame with the conversation's [`TraceId`] (`"trace"`
+/// key, 16 hex digits).  v2-only additive grammar: a v1 frame is left
+/// untouched so deployed v1 parsers keep seeing bit-identical bytes.
+pub fn stamp_trace(frame: &mut Value, ver: u64, trace: TraceId) {
+    if ver >= 2 {
+        if let Value::Obj(kv) = frame {
+            kv.push(("trace".to_string(), s(&trace.as_hex())));
+        }
+    }
+}
+
+/// The frame's `"trace"` stamp, if it carries one.
+pub fn frame_trace(v: &Value) -> Option<TraceId> {
+    v.get("trace").and_then(Value::as_str).and_then(TraceId::from_hex)
 }
 
 fn check_version(v: &Value) -> Result<u64> {
@@ -439,9 +491,14 @@ impl Client {
     /// Read the next frame; EOF before a frame is a protocol error here
     /// (callers only recv when an answer is owed).
     pub fn recv(&mut self) -> Result<Response> {
-        let v = read_frame(&mut self.reader)?
-            .context("server closed the connection mid-conversation")?;
-        Response::from_json(&v)
+        Response::from_json(&self.recv_frame()?)
+    }
+
+    /// Read the next raw frame value (what [`Session`] uses to also
+    /// capture the conversation's `"trace"` stamp).
+    fn recv_frame(&mut self) -> Result<Value> {
+        read_frame(&mut self.reader)?
+            .context("server closed the connection mid-conversation")
     }
 
     /// Open a submit conversation and return its [`Session`] handle —
@@ -454,7 +511,7 @@ impl Client {
             spec: Box::new(spec.clone()),
             stream,
         })?;
-        Ok(Session { client: self, done: false })
+        Ok(Session { client: self, done: false, trace: None })
     }
 
     /// Submit a spec and return the terminal answer (`Completed`, `Busy`,
@@ -496,6 +553,16 @@ impl Client {
         }
     }
 
+    /// Fetch the server's metrics registry snapshot (v2-only verb).
+    pub fn metrics(&mut self) -> Result<MetricsSnapshot> {
+        self.send(&Request::Metrics)?;
+        match self.recv()? {
+            Response::Metrics(snapshot) => Ok(snapshot),
+            Response::Error { message } => bail!("server error: {}", message),
+            other => bail!("expected a metrics frame, got {:?}", other),
+        }
+    }
+
     /// Request graceful shutdown; returns once the server acked it.
     pub fn shutdown(&mut self) -> Result<()> {
         self.send(&Request::Shutdown)?;
@@ -516,6 +583,7 @@ impl Client {
 pub struct Session<'a> {
     client: &'a mut Client,
     done: bool,
+    trace: Option<TraceId>,
 }
 
 impl Session<'_> {
@@ -525,12 +593,23 @@ impl Session<'_> {
         if self.done {
             return Ok(None);
         }
-        let event = self.client.recv()?;
+        let frame = self.client.recv_frame()?;
+        if let Some(trace) = frame_trace(&frame) {
+            self.trace = Some(trace);
+        }
+        let event = Response::from_json(&frame)?;
         if !matches!(event,
                      Response::Queued { .. } | Response::Progress(_)) {
             self.done = true;
         }
         Ok(Some(event))
+    }
+
+    /// The conversation's server-minted trace id, once any v2 frame has
+    /// carried it — the handle for finding this request's spans in the
+    /// server's `--trace-out` JSONL.
+    pub fn trace(&self) -> Option<TraceId> {
+        self.trace
     }
 
     /// Drain the remaining events and return the terminal answer,
@@ -796,5 +875,47 @@ mod tests {
         assert!(matches!(Request::from_json(&b).unwrap(),
                          Request::Shutdown));
         assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn metrics_verb_is_v2_only_and_roundtrips() {
+        assert!(matches!(roundtrip_req(&Request::Metrics),
+                         Request::Metrics));
+        // a v1 frame asking for metrics is a typed parse error — the
+        // v1 grammar is frozen
+        let v1 = Value::parse(r#"{"v":1,"type":"metrics"}"#).unwrap();
+        let err = Request::from_json(&v1).unwrap_err();
+        assert!(format!("{:#}", err).contains("protocol v2"), "{:#}", err);
+        // the response frame carries the full snapshot
+        let metrics = crate::service::metrics::ServiceMetrics::new();
+        metrics.submits.add(5);
+        metrics.queue_wait.observe(0.01);
+        let snap = metrics.snapshot(0, 2, 1, 3, &Profiler::new());
+        match roundtrip_resp(&Response::Metrics(snap.clone())) {
+            Response::Metrics(back) => assert_eq!(back, snap),
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn trace_stamp_is_v2_only_additive_grammar() {
+        let trace = TraceId::from_hex("00000000000000ff").unwrap();
+        // a v2 frame gains the trace key (appended, so the base
+        // grammar's byte order is untouched)…
+        let mut v2 = Response::Queued { id: 4, position: 1 }.to_json_for(2);
+        stamp_trace(&mut v2, 2, trace);
+        assert_eq!(
+            v2.to_string_compact(),
+            r#"{"v":2,"type":"queued","id":4,"position":1,"trace":"00000000000000ff"}"#);
+        assert_eq!(frame_trace(&v2), Some(trace));
+        // …the stamped frame still parses (unknown-key tolerance)…
+        assert!(matches!(Response::from_json(&v2).unwrap(),
+                         Response::Queued { id: 4, position: 1 }));
+        // …and a v1 frame stays bit-identical
+        let mut v1 = Response::Queued { id: 4, position: 1 }.to_json_for(1);
+        stamp_trace(&mut v1, 1, trace);
+        assert_eq!(v1.to_string_compact(),
+                   r#"{"v":1,"type":"queued","id":4,"position":1}"#);
+        assert_eq!(frame_trace(&v1), None);
     }
 }

@@ -8,9 +8,17 @@
 //! queue is empty, then return `None` so workers exit, which is exactly
 //! the graceful-shutdown order the server needs (admitted work always
 //! gets an answer).
+//!
+//! Observability (DESIGN.md §18): every push stamps the item with the
+//! process-wide monotonic clock, so the queue-wait a [`Popped`] reports
+//! is *measured per job*, never inferred from depth; the queue also
+//! keeps its all-time high-water mark, which the metrics registry
+//! exposes as a gauge next to the live depth.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+
+use crate::util::trace::now_us;
 
 /// Why an item was not admitted.  Both variants hand the item back so the
 /// caller can still answer the client that carried it.
@@ -22,9 +30,23 @@ pub enum PushError<T> {
     Closed(T),
 }
 
+/// A popped item plus its measured admission-queue residence.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Popped<T> {
+    pub item: T,
+    /// When the item was pushed, on the `util::trace::now_us` clock —
+    /// the span recorder uses it as the `queue_wait` span's start.
+    pub enqueued_us: u64,
+    /// Seconds between push and this pop.
+    pub wait_s: f64,
+}
+
 struct State<T> {
-    q: VecDeque<T>,
+    q: VecDeque<(T, u64)>,
     closed: bool,
+    /// Deepest the queue has ever been (post-push depth), for the
+    /// `queue_depth_high_water` gauge.
+    high_water: usize,
 }
 
 /// A mutex/condvar bounded FIFO.  `capacity == 0` is legal and admits
@@ -39,7 +61,11 @@ pub struct Bounded<T> {
 impl<T> Bounded<T> {
     pub fn new(capacity: usize) -> Self {
         Bounded {
-            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            state: Mutex::new(State {
+                q: VecDeque::new(),
+                closed: false,
+                high_water: 0,
+            }),
             cv: Condvar::new(),
             capacity,
         }
@@ -49,7 +75,7 @@ impl<T> Bounded<T> {
         self.capacity
     }
 
-    /// Queued (not yet popped) item count.
+    /// Queued (not yet popped) item count — the live depth gauge.
     pub fn len(&self) -> usize {
         self.state.lock().unwrap().q.len()
     }
@@ -58,8 +84,16 @@ impl<T> Bounded<T> {
         self.len() == 0
     }
 
+    /// Deepest post-push depth ever observed — the
+    /// `queue_depth_high_water` gauge.  Monotone; never resets.
+    pub fn high_water(&self) -> usize {
+        self.state.lock().unwrap().high_water
+    }
+
     /// Admit `item` if there is room; returns its 1-based queue position
-    /// (how many pops until a worker holds it).
+    /// (how many pops until a worker holds it).  The enqueue instant is
+    /// stamped under the same lock, so wait measurement starts exactly
+    /// at admission.
     pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
         let mut st = self.state.lock().unwrap();
         if st.closed {
@@ -68,20 +102,23 @@ impl<T> Bounded<T> {
         if st.q.len() >= self.capacity {
             return Err(PushError::Full(item));
         }
-        st.q.push_back(item);
+        st.q.push_back((item, now_us()));
         let pos = st.q.len();
+        st.high_water = st.high_water.max(pos);
         drop(st);
         self.cv.notify_one();
         Ok(pos)
     }
 
-    /// Block until an item is available and return it; `None` once the
-    /// queue is closed AND drained.
-    pub fn pop(&self) -> Option<T> {
+    /// Block until an item is available and return it with its measured
+    /// queue residence; `None` once the queue is closed AND drained.
+    pub fn pop(&self) -> Option<Popped<T>> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(item) = st.q.pop_front() {
-                return Some(item);
+            if let Some((item, enqueued_us)) = st.q.pop_front() {
+                let wait_s =
+                    now_us().saturating_sub(enqueued_us) as f64 / 1e6;
+                return Some(Popped { item, enqueued_us, wait_s });
             }
             if st.closed {
                 return None;
@@ -103,6 +140,11 @@ mod tests {
     use super::*;
     use std::sync::Arc;
 
+    /// Item-only view of a pop, for the ordering assertions.
+    fn pop_item<T>(q: &Bounded<T>) -> Option<T> {
+        q.pop().map(|p| p.item)
+    }
+
     #[test]
     fn fifo_order_and_positions() {
         let q = Bounded::new(3);
@@ -110,12 +152,53 @@ mod tests {
         assert_eq!(q.try_push(11).unwrap(), 2);
         assert_eq!(q.try_push(12).unwrap(), 3);
         assert_eq!(q.len(), 3);
-        assert_eq!(q.pop(), Some(10));
-        assert_eq!(q.pop(), Some(11));
+        assert_eq!(pop_item(&q), Some(10));
+        assert_eq!(pop_item(&q), Some(11));
         assert_eq!(q.try_push(13).unwrap(), 2);
-        assert_eq!(q.pop(), Some(12));
-        assert_eq!(q.pop(), Some(13));
+        assert_eq!(pop_item(&q), Some(12));
+        assert_eq!(pop_item(&q), Some(13));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn queue_wait_is_measured_not_inferred() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let popped = q.pop().unwrap();
+        assert_eq!(popped.item, 1);
+        // the 5ms sleep happened between push and pop, so the measured
+        // wait must cover it (and the stamp must predate the pop)
+        assert!(popped.wait_s >= 0.004, "wait_s={}", popped.wait_s);
+        assert!(popped.enqueued_us <= crate::util::trace::now_us());
+        // an instant pop measures (almost) nothing
+        q.try_push(2).unwrap();
+        let quick = q.pop().unwrap();
+        assert!(quick.wait_s < 1.0, "wait_s={}", quick.wait_s);
+        assert!(quick.enqueued_us >= popped.enqueued_us, "same clock");
+    }
+
+    #[test]
+    fn high_water_tracks_the_deepest_push() {
+        let q = Bounded::new(3);
+        assert_eq!(q.high_water(), 0);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.high_water(), 2);
+        // draining does not lower the mark…
+        assert_eq!(pop_item(&q), Some(1));
+        assert_eq!(pop_item(&q), Some(2));
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.high_water(), 2);
+        // …and only a deeper push raises it
+        q.try_push(3).unwrap();
+        assert_eq!(q.high_water(), 2);
+        q.try_push(4).unwrap();
+        q.try_push(5).unwrap();
+        assert_eq!(q.high_water(), 3);
+        // rejected pushes never count
+        assert!(matches!(q.try_push(6), Err(PushError::Full(6))));
+        assert_eq!(q.high_water(), 3);
     }
 
     #[test]
@@ -128,7 +211,7 @@ mod tests {
             other => panic!("expected Full, got {:?}", other),
         }
         // popping frees a slot
-        assert_eq!(q.pop(), Some(1));
+        assert_eq!(pop_item(&q), Some(1));
         assert_eq!(q.try_push(3).unwrap(), 2);
     }
 
@@ -146,14 +229,14 @@ mod tests {
         q.try_push(2).unwrap();
         q.close();
         // admitted work survives the close…
-        assert_eq!(q.pop(), Some(1));
-        assert_eq!(q.pop(), Some(2));
+        assert_eq!(pop_item(&q), Some(1));
+        assert_eq!(pop_item(&q), Some(2));
         // …new work does not
         assert!(matches!(q.try_push(3), Err(PushError::Closed(3))));
-        assert_eq!(q.pop(), None);
+        assert!(q.pop().is_none());
         // close is idempotent
         q.close();
-        assert_eq!(q.pop(), None);
+        assert!(q.pop().is_none());
     }
 
     #[test]
@@ -166,7 +249,7 @@ mod tests {
         // the worker blocks on the empty queue until close() wakes it
         std::thread::sleep(std::time::Duration::from_millis(20));
         q.close();
-        assert_eq!(worker.join().unwrap(), None);
+        assert!(worker.join().unwrap().is_none());
     }
 
     #[test]
@@ -176,8 +259,8 @@ mod tests {
             let q = Arc::clone(&q);
             std::thread::spawn(move || {
                 let mut got = Vec::new();
-                while let Some(v) = q.pop() {
-                    got.push(v);
+                while let Some(p) = q.pop() {
+                    got.push(p.item);
                 }
                 got
             })

@@ -36,14 +36,18 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::coordinator::{report, Coordinator, ExperimentSpec, RunResult};
-use crate::opt::{ProgressSink, StepEvent};
+use crate::opt::{NullSink, ProgressSink, StepEvent, TracingSink};
 use crate::util::json::{num, obj, s, Value};
+use crate::util::log;
 use crate::util::profile::Profiler;
+use crate::util::trace::{now_us, Span, TraceId, Tracer};
 
 use super::cache::ResultCache;
-use super::protocol::{frame_version, read_frame, write_frame,
-                      ProgressInfo, Request, Response, StatusInfo,
-                      WorkerStats, MIN_PROTOCOL_VERSION, PROTOCOL_VERSION};
+use super::metrics::{MetricsSnapshot, ServiceMetrics};
+use super::protocol::{frame_version, read_frame, stamp_trace,
+                      write_frame, ProgressInfo, Request, Response,
+                      StatusInfo, WorkerStats, MIN_PROTOCOL_VERSION,
+                      PROTOCOL_VERSION};
 use super::queue::{Bounded, PushError};
 
 /// How `simopt serve` configures the plane.
@@ -63,6 +67,10 @@ pub struct ServerConfig {
     /// caching) — payloads carry full traces, so a long-lived server
     /// must not grow without limit.
     pub cache_capacity: usize,
+    /// Append request spans (admission → cache check → queue wait →
+    /// per-epoch execution → relay) to this file as Chrome-trace JSONL
+    /// (`--trace-out`; `None` records nothing — DESIGN.md §18).
+    pub trace_out: Option<PathBuf>,
 }
 
 /// Counters [`Server::run`] reports after a graceful shutdown.
@@ -76,6 +84,10 @@ pub struct ServerStats {
 
 struct Job {
     id: u64,
+    /// The conversation's trace id (minted at admission) — the worker
+    /// tags its queue-wait/execute spans with it; frame stamping stays
+    /// with the handler, the single place that writes the socket.
+    trace: TraceId,
     spec: Box<ExperimentSpec>,
     /// Cache key + canonical spec string, computed once at admission —
     /// the worker reuses them, so admission and execution dedup are
@@ -117,7 +129,36 @@ struct Shared {
     /// (`stats.per_phase`, DESIGN.md §15) — merged from each completed
     /// run's profile, outside any timed region.
     phase_totals: Mutex<Profiler>,
+    /// The always-on metrics registry behind the v2 `metrics` verb
+    /// (DESIGN.md §18); queue/cache gauges are read from their owners
+    /// at snapshot time.
+    metrics: ServiceMetrics,
+    /// Span sink when the server runs with `--trace-out`.
+    tracer: Option<Arc<Tracer>>,
     socket: PathBuf,
+}
+
+impl Shared {
+    /// Record a completed span, when tracing is on.  Every call site
+    /// sits outside the timed regions (§18 invariance bar).
+    fn span(&self, span: Span) {
+        if let Some(tracer) = &self.tracer {
+            tracer.record(&span);
+        }
+    }
+
+    /// Freeze the registry + owner-held gauges into the `metrics`
+    /// answer.
+    fn snapshot_metrics(&self) -> MetricsSnapshot {
+        let per_phase = *self.phase_totals.lock().unwrap();
+        self.metrics.snapshot(
+            self.queue.len(),
+            self.queue.high_water(),
+            self.cache.entries(),
+            self.cache.hits(),
+            &per_phase,
+        )
+    }
 }
 
 /// A bound-but-not-yet-running server.  Splitting bind from run lets the
@@ -171,6 +212,10 @@ impl Server {
 
     /// Serve until a `shutdown` frame arrives; drain, then report.
     pub fn run(self) -> Result<ServerStats> {
+        let tracer = match &self.cfg.trace_out {
+            Some(path) => Some(Arc::new(Tracer::to_file(path)?)),
+            None => None,
+        };
         let shared = Arc::new(Shared {
             queue: Bounded::new(self.cfg.queue_capacity),
             cache: ResultCache::new(self.cfg.cache_capacity),
@@ -185,6 +230,8 @@ impl Server {
                 })
                 .collect(),
             phase_totals: Mutex::new(Profiler::new()),
+            metrics: ServiceMetrics::new(),
+            tracer,
             socket: self.cfg.socket.clone(),
         });
         let mut workers = Vec::with_capacity(self.cfg.workers);
@@ -209,7 +256,10 @@ impl Server {
                     // persistent accept errors (EMFILE under load) must
                     // not become a silent busy-spin: say why, back off,
                     // give the handler/worker threads room to free fds
-                    eprintln!("[serve] accept failed: {} — backing off", e);
+                    log::warn("serve", "accept_failed")
+                        .field("err", e)
+                        .field("backoff_ms", 100)
+                        .emit();
                     thread::sleep(Duration::from_millis(100));
                     continue;
                 }
@@ -343,11 +393,25 @@ fn worker_loop(shared: &Shared, idx: usize, artifacts: &str,
         Err(e) => {
             // stay up and answer every job with a typed error — but make
             // sure the operator can see WHY from the server log
-            eprintln!("[serve] worker coordinator init failed: {:#}", e);
+            log::error("serve", "worker_init_failed")
+                .field("worker", idx)
+                .field("err", format!("{:#}", e))
+                .emit();
             None
         }
     };
-    while let Some(job) = shared.queue.pop() {
+    while let Some(popped) = shared.queue.pop() {
+        let job = popped.item;
+        // queue wait is a *measured* quantity — enqueue and pop
+        // timestamps both come from the queue (DESIGN.md §18) — and both
+        // the span and the histogram are fed outside any timed region
+        shared.metrics.queue_wait.observe(popped.wait_s);
+        shared.span(
+            Span::new(job.trace, "queue_wait", popped.enqueued_us,
+                      popped.enqueued_us + (popped.wait_s * 1e6) as u64)
+                .with("id", job.id)
+                .with("worker", idx));
+        let exec_start = now_us();
         // second look at the cache (admission-time key/canonical reused):
         // identical specs admitted back-to-back both missed at admission,
         // but only the first needs to execute.  This dedup is best-effort
@@ -355,11 +419,14 @@ fn worker_loop(shared: &Shared, idx: usize, artifacts: &str,
         // execute (determinism makes the duplicate harmless: both produce
         // the identical payload) — and exact on a single-worker plane.
         let (key, canonical) = (job.key, &job.canonical);
-        let frame = if let Some(hit) = shared.cache.get(key, canonical) {
+        let mut executed_run = false;
+        let (frame, outcome) = if let Some(hit) =
+            shared.cache.get(key, canonical)
+        {
             // cache hits never stream — the terminal frame is the answer
             shared.worker_counters[idx].cache_hits
                 .fetch_add(1, Ordering::SeqCst);
-            cache_hit_frame(job.v, job.id, &job.spec, &hit)
+            (cache_hit_frame(job.v, job.id, &job.spec, &hit), "cache_hit")
         } else if coord.is_some() {
             // contain panics per job: one poisoned spec must not take the
             // worker down and leave every queued client hanging
@@ -367,15 +434,29 @@ fn worker_loop(shared: &Shared, idx: usize, artifacts: &str,
                 let c = coord.as_mut().unwrap();
                 std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| {
-                        if job.stream {
-                            let mut sink = ChannelSink {
+                        // one sink chain for both arms: the base observer
+                        // is the streaming relay or the null sink, and
+                        // --trace-out wraps either in a TracingSink that
+                        // records per-epoch spans from already-measured
+                        // step times
+                        let mut base: Box<dyn ProgressSink> = if job.stream
+                        {
+                            Box::new(ChannelSink {
                                 v: job.v,
                                 id: job.id,
                                 tx: job.reply.clone(),
-                            };
-                            c.run_with(&job.spec, &mut sink)
+                            })
                         } else {
-                            c.run(&job.spec)
+                            Box::new(NullSink)
+                        };
+                        match &shared.tracer {
+                            Some(tracer) => {
+                                let mut sink = TracingSink::new(
+                                    Arc::clone(tracer), job.trace,
+                                    &mut *base);
+                                c.run_with(&job.spec, &mut sink)
+                            }
+                            None => c.run_with(&job.spec, &mut *base),
                         }
                     }))
             };
@@ -387,29 +468,54 @@ fn worker_loop(shared: &Shared, idx: usize, artifacts: &str,
                     shared.executed.fetch_add(1, Ordering::SeqCst);
                     shared.worker_counters[idx].executed
                         .fetch_add(1, Ordering::SeqCst);
+                    executed_run = true;
+                    shared.metrics.runs_executed.inc();
+                    shared.metrics.frozen_rows
+                        .add(result.frozen.len() as u64);
                     shared.phase_totals.lock().unwrap()
                         .merge(&result.profile);
-                    completed_frame(job.v, job.id, false,
-                                    (*payload).clone())
+                    (completed_frame(job.v, job.id, false,
+                                     (*payload).clone()),
+                     "executed")
                 }
-                Ok(Err(e)) => error_frame(job.v, &format!("{:#}", e)),
+                Ok(Err(e)) => {
+                    (error_frame(job.v, &format!("{:#}", e)), "error")
+                }
                 Err(_) => {
                     // the coordinator may be mid-mutation; rebuild it so
                     // the next job starts from a clean slate
-                    eprintln!("[serve] worker panicked running {} — \
-                               rebuilding its coordinator",
-                              job.spec.label());
+                    log::error("serve", "worker_panicked")
+                        .field("worker", idx)
+                        .field("label", job.spec.label())
+                        .field("action", "rebuilding coordinator")
+                        .emit();
                     coord = Coordinator::new(artifacts, results).ok();
-                    error_frame(job.v, &format!(
+                    (error_frame(job.v, &format!(
                         "execution panicked running {} (see server log)",
-                        job.spec.label()))
+                        job.spec.label())),
+                     "panicked")
                 }
             }
         } else {
-            error_frame(job.v,
-                        "worker failed to initialize its coordinator \
-                         (see server log)")
+            (error_frame(job.v,
+                         "worker failed to initialize its coordinator \
+                          (see server log)"),
+             "init_failed")
         };
+        // exactly one execute span per popped job, recorded (and the
+        // latency observed) BEFORE the terminal frame travels back, so
+        // the handler's relay/request spans always close after it
+        let exec_end = now_us();
+        if executed_run {
+            shared.metrics.run_latency
+                .observe(exec_end.saturating_sub(exec_start) as f64 / 1e6);
+        }
+        shared.span(
+            Span::new(job.trace, "execute", exec_start, exec_end)
+                .with("id", job.id)
+                .with("worker", idx)
+                .with("task", job.spec.label())
+                .with("outcome", outcome));
         // a vanished handler (client hung up) just drops the frame
         let _ = job.reply.send(frame);
     }
@@ -418,7 +524,13 @@ fn worker_loop(shared: &Shared, idx: usize, artifacts: &str,
 /// Parse and answer one request; submits wait here for the worker's
 /// frames (every `progress` frame, then the terminal one) so every byte
 /// on the socket comes from this thread.
+///
+/// This thread is also the conversation's single trace point: it mints
+/// the [`TraceId`] once the protocol version is known and stamps it on
+/// every v2 frame it writes — its own answers and the frames it relays
+/// from the worker alike — so the worker never touches frame grammar.
 fn handle_connection(stream: UnixStream, shared: &Shared) {
+    let t_admit = now_us();
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
@@ -463,6 +575,20 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
             return;
         }
     };
+    // version gate passed, request parsed: this conversation gets an
+    // identity.  Every frame written below goes through `send`, the one
+    // place that stamps it (v2 grammar only — v1 stays frozen).
+    let trace = TraceId::mint();
+    let send = |writer: &mut UnixStream, mut frame: Value| {
+        stamp_trace(&mut frame, ver, trace);
+        let _ = write_frame(writer, &frame);
+    };
+    let verb = match &req {
+        Request::Status => "status",
+        Request::Shutdown => "shutdown",
+        Request::Metrics => "metrics",
+        Request::Submit { .. } => "submit",
+    };
     match req {
         Request::Status => {
             let info = StatusInfo {
@@ -480,12 +606,18 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
                     .collect(),
                 per_phase: *shared.phase_totals.lock().unwrap(),
             };
-            let _ = write_frame(&mut writer,
-                                &Response::Status(info).to_json_for(ver));
+            send(&mut writer, Response::Status(info).to_json_for(ver));
+        }
+        Request::Metrics => {
+            // freeze the registry + owner-held gauges in one read; the
+            // answer is the JSON exposition (the CLI renders prometheus
+            // text from it client-side)
+            send(&mut writer,
+                 Response::Metrics(shared.snapshot_metrics())
+                     .to_json_for(ver));
         }
         Request::Shutdown => {
-            let _ = write_frame(&mut writer,
-                                &Response::ShuttingDown.to_json_for(ver));
+            send(&mut writer, Response::ShuttingDown.to_json_for(ver));
             shared.shutdown.store(true, Ordering::SeqCst);
             // wake the blocking accept loop so it observes the flag.
             // This nudge is load-bearing (without it the loop waits for
@@ -500,74 +632,106 @@ fn handle_connection(stream: UnixStream, shared: &Shared) {
                 thread::sleep(Duration::from_millis(25));
             }
             if !woke {
-                eprintln!("[serve] shutdown waker could not connect; the \
-                           accept loop will notice at the next connection");
+                log::warn("serve", "shutdown_waker_failed")
+                    .field("note", "accept loop will notice at the next \
+                                    connection")
+                    .emit();
             }
         }
         Request::Submit { spec, stream } => {
+            shared.metrics.submits.inc();
             if let Err(e) = spec.validate() {
-                let _ = write_frame(
-                    &mut writer,
-                    &error_frame(ver, &format!("invalid spec: {:#}", e)));
-                return;
+                send(&mut writer,
+                     error_frame(ver, &format!("invalid spec: {:#}", e)));
+            } else {
+                submit(&mut writer, shared, &send, t_admit, trace, ver,
+                       spec, stream);
             }
-            // fast path: cached specs answer instantly, without taking a
-            // queue slot — repeat submissions cannot be crowded out by a
-            // full queue.  A cache hit never streams: no epochs run.
-            let key = spec.spec_hash();
-            let canonical = spec.canonical_json().to_string_compact();
-            let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
-            if let Some(hit) = shared.cache.get(key, &canonical) {
-                let _ = write_frame(&mut writer,
-                                    &cache_hit_frame(ver, id, &spec, &hit));
-                return;
-            }
-            let (reply, result_rx) = mpsc::channel();
-            match shared.queue.try_push(Job { id, spec, key, canonical,
-                                              v: ver, stream, reply }) {
-                Ok(position) => {
-                    let _ = write_frame(
-                        &mut writer,
-                        &Response::Queued { id, position }
-                            .to_json_for(ver));
-                    // relay worker frames until the terminal one: every
-                    // frame that is not `progress` ends the conversation
-                    loop {
-                        match result_rx.recv() {
-                            Ok(frame) => {
-                                let terminal = frame.get("type")
-                                    .and_then(Value::as_str)
-                                    != Some("progress");
-                                let _ = write_frame(&mut writer, &frame);
-                                if terminal {
-                                    break;
-                                }
-                            }
-                            Err(_) => {
-                                let _ = write_frame(
-                                    &mut writer,
-                                    &error_frame(ver,
-                                                 "worker exited before \
-                                                  answering"));
-                                break;
-                            }
+        }
+    }
+    // the conversation's parent span: admission timestamp → last frame
+    // written, recorded after all socket writes
+    shared.span(Span::new(trace, "request", t_admit, now_us())
+        .with("verb", verb)
+        .with("v", ver));
+}
+
+/// The submit arm of [`handle_connection`]: cache fast path, admission
+/// into the queue, then the relay loop.  Split out so the span/counter
+/// bookkeeping reads linearly.
+#[allow(clippy::too_many_arguments)]
+fn submit(writer: &mut UnixStream, shared: &Shared,
+          send: &dyn Fn(&mut UnixStream, Value), t_admit: u64,
+          trace: TraceId, ver: u64, spec: Box<ExperimentSpec>,
+          stream: bool) {
+    // fast path: cached specs answer instantly, without taking a
+    // queue slot — repeat submissions cannot be crowded out by a
+    // full queue.  A cache hit never streams: no epochs run.
+    let key = spec.spec_hash();
+    let canonical = spec.canonical_json().to_string_compact();
+    let id = shared.next_id.fetch_add(1, Ordering::SeqCst);
+    // admission covers read/parse/validate/hash; cache_check is the
+    // fast-path probe.  The boundary timestamp is shared so the request's
+    // spans chain without gaps.
+    let t_cache = now_us();
+    let hit = shared.cache.get(key, &canonical);
+    let t_cache_end = now_us();
+    shared.span(Span::new(trace, "admission", t_admit, t_cache)
+        .with("id", id));
+    shared.span(Span::new(trace, "cache_check", t_cache, t_cache_end)
+        .with("id", id)
+        .with("hit", hit.is_some()));
+    if let Some(hit) = hit {
+        send(writer, cache_hit_frame(ver, id, &spec, &hit));
+        return;
+    }
+    shared.metrics.cache_misses.inc();
+    let (reply, result_rx) = mpsc::channel();
+    match shared.queue.try_push(Job { id, trace, spec, key, canonical,
+                                      v: ver, stream, reply }) {
+        Ok(position) => {
+            send(writer, Response::Queued { id, position }
+                .to_json_for(ver));
+            // relay worker frames until the terminal one: every frame
+            // that is not `progress` ends the conversation
+            loop {
+                match result_rx.recv() {
+                    Ok(frame) => {
+                        let t_recv = now_us();
+                        let terminal = frame.get("type")
+                            .and_then(Value::as_str)
+                            != Some("progress");
+                        // counted before the write: a client that reads
+                        // its terminal frame and immediately queries
+                        // `metrics` must see this frame in the total
+                        shared.metrics.frames_relayed.inc();
+                        send(writer, frame);
+                        if terminal {
+                            shared.span(
+                                Span::new(trace, "relay", t_recv,
+                                          now_us())
+                                    .with("id", id));
+                            break;
                         }
                     }
-                }
-                Err(PushError::Full(_)) => {
-                    let _ = write_frame(
-                        &mut writer,
-                        &Response::Busy {
-                            capacity: shared.queue.capacity(),
-                        }
-                        .to_json_for(ver));
-                }
-                Err(PushError::Closed(_)) => {
-                    let _ = write_frame(
-                        &mut writer,
-                        &error_frame(ver, "service is shutting down"));
+                    Err(_) => {
+                        send(writer,
+                             error_frame(ver, "worker exited before \
+                                               answering"));
+                        break;
+                    }
                 }
             }
+        }
+        Err(PushError::Full(_)) => {
+            shared.metrics.busy_rejections.inc();
+            send(writer, Response::Busy {
+                capacity: shared.queue.capacity(),
+            }
+            .to_json_for(ver));
+        }
+        Err(PushError::Closed(_)) => {
+            send(writer, error_frame(ver, "service is shutting down"));
         }
     }
 }

@@ -12,11 +12,16 @@
 //! * [`prop`] — miniature property-based testing harness
 //! * [`timer`] — monotonic timing helpers used by the bench harness
 //! * [`profile`] — the always-on per-phase profiler (DESIGN.md §15)
+//! * [`log`] — leveled structured (key=value) stderr logger (§18)
+//! * [`trace`] — request-scoped trace ids, spans, Chrome-JSONL export
+//!   (§18)
 
 pub mod cli;
 pub mod json;
+pub mod log;
 pub mod pool;
 pub mod profile;
 pub mod prop;
 pub mod stats;
 pub mod timer;
+pub mod trace;

@@ -1,6 +1,17 @@
 //! Monotonic timing helpers shared by the coordinator and bench harness.
 
+use std::sync::OnceLock;
 use std::time::Instant;
+
+/// Process-wide monotonic microseconds since the first call.  This is the
+/// one clock the tracing spans (DESIGN.md §18), the queue's enqueue
+/// timestamps, and the structured log prefix all share, so intervals
+/// recorded on different threads are directly comparable.
+pub fn monotonic_us() -> u64 {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    let origin = *ORIGIN.get_or_init(Instant::now);
+    origin.elapsed().as_micros() as u64
+}
 
 /// Simple scope timer returning elapsed seconds.
 pub struct Timer {
@@ -80,6 +91,16 @@ mod tests {
         let e = t.restart();
         assert!(e > 0.0);
         assert!(t.elapsed_s() < e + 1.0);
+    }
+
+    #[test]
+    fn monotonic_us_never_goes_backward() {
+        let a = monotonic_us();
+        let b = monotonic_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let c = monotonic_us();
+        assert!(b >= a);
+        assert!(c > a, "2ms of sleep must advance the µs clock");
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Request-scoped tracing: trace ids, spans, and a Chrome-trace JSONL
+//! exporter (DESIGN.md §18).
+//!
+//! The serving plane (DESIGN.md §14) executes a request across three
+//! threads — the accept loop, a connection handler, and a warm worker —
+//! so no single stack trace ever shows where a request's wall-clock
+//! went.  This module makes that life cycle observable: a [`TraceId`]
+//! is minted at admission, stamped onto every v2 protocol frame of the
+//! conversation, and carried by every [`Span`] the server records for
+//! it (admission → cache check → queue wait → per-epoch execution →
+//! relay).  Spans share one process-wide monotonic clock
+//! ([`now_us`] = `util::timer::monotonic_us`), so intervals recorded on
+//! different threads nest and chain exactly.
+//!
+//! The exporter ([`Tracer`]) appends one Chrome-trace *complete event*
+//! (`"ph":"X"`) per line — newline-delimited JSON, each line
+//! independently parseable (the compact writer never emits a newline),
+//! with `ts`/`dur` in microseconds and the trace id under `args.trace`.
+//! Wrap the lines in `[...]` (or load them as-is: the Chrome/Perfetto
+//! loaders tolerate newline-separated event streams) to render a
+//! request's life in any trace viewer.
+//!
+//! Invariance bar (same as the §15 profiler): spans are recorded from
+//! timestamps taken OUTSIDE the timed regions — before a run starts,
+//! after it completes, and from the already-measured `step_s` of a
+//! [`StepEvent`] — so a traced run is bitwise-identical to an untraced
+//! one.  `tests/trace_invariance.rs` pins that.
+//!
+//! [`StepEvent`]: crate::opt::StepEvent
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{num, obj, s, Value};
+use crate::util::timer::monotonic_us;
+
+/// Microseconds on the process-wide monotonic span clock.
+pub fn now_us() -> u64 {
+    monotonic_us()
+}
+
+/// Identity of one request's trace, minted at admission and threaded
+/// through every v2 protocol frame (`"trace"` key) and every span the
+/// request produces.  Rendered as 16 lowercase hex digits on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TraceId(u64);
+
+impl TraceId {
+    /// Mint the next id: a per-process wall-clock seed (so traces from
+    /// restarted servers don't collide in a merged file) plus a counter.
+    /// The value stays below 2^53, so it survives JSON's f64 numerics
+    /// when used as a Chrome `tid`.
+    pub fn mint() -> TraceId {
+        static SEED: OnceLock<u64> = OnceLock::new();
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        let seed = *SEED.get_or_init(|| {
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs() ^ u64::from(d.subsec_nanos()))
+                .unwrap_or(0x9e37_79b9)
+        });
+        let n = NEXT.fetch_add(1, Ordering::Relaxed);
+        TraceId(((seed & 0xffff_ffff) << 20) | (n & 0xf_ffff))
+    }
+
+    pub fn as_u64(&self) -> u64 {
+        self.0
+    }
+
+    /// The wire encoding: 16 lowercase hex digits.
+    pub fn as_hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+
+    pub fn from_hex(text: &str) -> Option<TraceId> {
+        u64::from_str_radix(text, 16).ok().map(TraceId)
+    }
+}
+
+/// One recorded interval of a request's life.  `start_us`/`dur_us` are
+/// on the [`now_us`] clock; `meta` rides into the Chrome event's `args`.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub trace_id: TraceId,
+    pub meta: Vec<(String, String)>,
+}
+
+impl Span {
+    /// Span over `[start_us, end_us]`; a clock tie (`end < start` can
+    /// only come from a caller bug) clamps to zero duration.
+    pub fn new(trace_id: TraceId, name: &str, start_us: u64, end_us: u64)
+        -> Span {
+        Span {
+            name: name.to_string(),
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+            trace_id,
+            meta: Vec::new(),
+        }
+    }
+
+    pub fn with(mut self, key: &str, value: impl std::fmt::Display)
+        -> Span {
+        self.meta.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Render as a Chrome-trace *complete event*: `ph:"X"`, `ts`/`dur`
+    /// in µs, the full trace id under `args.trace`, and the id's low
+    /// 32 bits as `tid` so a viewer lanes spans per request.
+    pub fn to_chrome(&self) -> Value {
+        let mut args = vec![("trace", s(&self.trace_id.as_hex()))];
+        for (k, v) in &self.meta {
+            args.push((k.as_str(), s(v)));
+        }
+        obj(vec![
+            ("name", s(&self.name)),
+            ("cat", s("simopt")),
+            ("ph", s("X")),
+            ("ts", num(self.start_us as f64)),
+            ("dur", num(self.dur_us as f64)),
+            ("pid", num(1.0)),
+            ("tid", num((self.trace_id.as_u64() & 0xffff_ffff) as f64)),
+            ("args", obj(args)),
+        ])
+    }
+}
+
+/// Span sink: serializes completed spans as Chrome-trace JSONL.  Writes
+/// are line-buffered and flushed per span so a reader (or a crashed
+/// server's operator) always sees whole lines; the lock is only ever
+/// held for one line's formatting + write, far from any timed region.
+pub struct Tracer {
+    out: Mutex<Box<dyn Write + Send>>,
+}
+
+impl Tracer {
+    /// Append spans to `path` (created if absent).
+    pub fn to_file(path: impl AsRef<Path>) -> Result<Tracer> {
+        let path = path.as_ref();
+        let file = File::options()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| {
+                format!("opening trace output {}", path.display())
+            })?;
+        Ok(Tracer::to_writer(Box::new(BufWriter::new(file))))
+    }
+
+    /// Write spans to an arbitrary sink (tests use an in-memory buffer).
+    pub fn to_writer(w: Box<dyn Write + Send>) -> Tracer {
+        Tracer { out: Mutex::new(w) }
+    }
+
+    /// Serialize one completed span as a single JSONL line.  Sink
+    /// failures are swallowed: tracing is an observer and must never
+    /// turn a healthy request into an error.
+    pub fn record(&self, span: &Span) {
+        let mut line = span.to_chrome().to_string_compact();
+        line.push('\n');
+        if let Ok(mut out) = self.out.lock() {
+            let _ = out.write_all(line.as_bytes());
+            let _ = out.flush();
+        }
+    }
+}
+
+/// Shared in-memory byte sink for [`Tracer::to_writer`] in tests.
+#[derive(Clone, Default)]
+pub struct SharedBuf(pub Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_unique_hex_and_roundtrip() {
+        let a = TraceId::mint();
+        let b = TraceId::mint();
+        assert_ne!(a, b);
+        for id in [a, b] {
+            assert_eq!(id.as_hex().len(), 16);
+            assert!(id.as_u64() < (1 << 53), "must survive f64 JSON");
+            assert_eq!(TraceId::from_hex(&id.as_hex()), Some(id));
+        }
+        assert_eq!(TraceId::from_hex("not hex"), None);
+    }
+
+    #[test]
+    fn span_intervals_clamp_and_carry_meta() {
+        let id = TraceId::mint();
+        let sp = Span::new(id, "execute", 100, 350).with("task", "mv_d16");
+        assert_eq!(sp.dur_us, 250);
+        assert_eq!(Span::new(id, "x", 10, 5).dur_us, 0, "tie clamps");
+        let chrome = sp.to_chrome();
+        assert_eq!(chrome.get("ph").and_then(Value::as_str), Some("X"));
+        assert_eq!(chrome.get("ts").and_then(Value::as_f64), Some(100.0));
+        assert_eq!(chrome.get("dur").and_then(Value::as_f64), Some(250.0));
+        let args = chrome.get("args").unwrap();
+        assert_eq!(args.get("trace").and_then(Value::as_str),
+                   Some(id.as_hex().as_str()));
+        assert_eq!(args.get("task").and_then(Value::as_str),
+                   Some("mv_d16"));
+    }
+
+    #[test]
+    fn tracer_emits_one_parseable_line_per_span() {
+        let buf = SharedBuf::default();
+        let tracer = Tracer::to_writer(Box::new(buf.clone()));
+        let id = TraceId::mint();
+        tracer.record(&Span::new(id, "request", 0, 10));
+        tracer.record(&Span::new(id, "execute", 2, 9).with("epoch", 3));
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let v = Value::parse(line).expect("well-formed JSONL");
+            assert!(v.get("name").is_some());
+            assert_eq!(v.get("args").and_then(|a| a.get("trace"))
+                           .and_then(Value::as_str),
+                       Some(id.as_hex().as_str()));
+        }
+    }
+
+    #[test]
+    fn now_us_is_monotonic() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

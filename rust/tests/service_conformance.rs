@@ -51,6 +51,7 @@ fn spawn_server(tag: &str, workers: usize, queue: usize)
         workers,
         queue_capacity: queue,
         cache_capacity: 64,
+        trace_out: None,
     })
     .unwrap();
     let handle = std::thread::spawn(move || server.run().unwrap());

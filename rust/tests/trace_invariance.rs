@@ -1,0 +1,331 @@
+//! The tracing/metrics invariance suite (DESIGN.md §18).
+//!
+//! Three contracts:
+//! * **Invariance** — a server running with `--trace-out` hands back
+//!   results bitwise-identical to direct untraced `Coordinator::run`s
+//!   of the same specs, for EVERY registered task on every execution
+//!   plan: span recording happens strictly outside the timed regions,
+//!   so observing a run cannot perturb it.
+//! * **Metrics** — the v2-only `metrics` verb reports exactly the
+//!   counters a scripted conversation implies (N submits, one fast-path
+//!   cache hit, `busy` on a capacity-0 queue), and a v1 frame asking
+//!   for it gets a typed error, not data.
+//! * **Trace structure** — the `--trace-out` JSONL is well-formed, the
+//!   conversation's spans (admission → cache check → queue wait →
+//!   execute → relay, one `epoch` per progress frame) appear exactly
+//!   once each, nest inside the `request` parent, and sum to the
+//!   request's wall-clock within tolerance.
+
+use std::io::BufReader;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread::JoinHandle;
+
+use simopt::config::ExecMode;
+use simopt::coordinator::{Coordinator, ExperimentSpec};
+use simopt::service::protocol::{read_frame, write_frame};
+use simopt::service::{Client, Response, Server, ServerConfig, ServerStats};
+use simopt::tasks::registry;
+use simopt::util::json::Value;
+use simopt::util::trace::now_us;
+
+fn temp_path(tag: &str, ext: &str) -> PathBuf {
+    static N: AtomicU64 = AtomicU64::new(0);
+    std::env::temp_dir().join(format!(
+        "simopt-{}-{}-{}.{}",
+        tag,
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed),
+        ext
+    ))
+}
+
+fn results_dir() -> String {
+    std::env::temp_dir()
+        .join("simopt_trace_invariance")
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Bind + run an in-process server writing spans to a fresh trace file;
+/// the socket exists when this returns.
+fn spawn_traced_server(tag: &str, queue: usize)
+    -> (PathBuf, PathBuf, JoinHandle<ServerStats>) {
+    let socket = temp_path(tag, "sock");
+    let trace_out = temp_path(tag, "jsonl");
+    let _ = std::fs::remove_file(&trace_out); // Tracer::to_file appends
+    let server = Server::bind(ServerConfig {
+        socket: socket.clone(),
+        artifact_dir: "artifacts".into(),
+        results_dir: results_dir(),
+        workers: 1,
+        queue_capacity: queue,
+        cache_capacity: 64,
+        trace_out: Some(trace_out.clone()),
+    })
+    .unwrap();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+    (socket, trace_out, handle)
+}
+
+/// Shut down and JOIN the server: `Server::run` joins its handler
+/// threads before returning, so once this returns every span of every
+/// conversation has been flushed to the trace file — the suite reads
+/// the JSONL only after this barrier.
+fn shut_down(socket: &PathBuf, handle: JoinHandle<ServerStats>)
+    -> ServerStats {
+    Client::connect(socket).unwrap().shutdown().unwrap();
+    handle.join().unwrap()
+}
+
+fn submit(socket: &PathBuf, spec: &ExperimentSpec) -> Response {
+    Client::connect(socket)
+        .unwrap()
+        .session(spec, false)
+        .unwrap()
+        .finish()
+        .unwrap()
+}
+
+/// One parsed span line of the Chrome-trace JSONL.
+#[derive(Debug, Clone)]
+struct SpanLine {
+    name: String,
+    trace: String,
+    ts: f64,
+    dur: f64,
+}
+
+fn parse_trace_file(path: &PathBuf) -> Vec<SpanLine> {
+    let text = std::fs::read_to_string(path).unwrap();
+    text.lines()
+        .map(|line| {
+            let v = Value::parse(line)
+                .unwrap_or_else(|e| panic!("bad JSONL line {:?}: {}",
+                                           line, e));
+            // Chrome complete-event grammar, every line
+            assert_eq!(v.get("ph").and_then(Value::as_str), Some("X"),
+                       "{}", line);
+            assert_eq!(v.get("cat").and_then(Value::as_str),
+                       Some("simopt"), "{}", line);
+            SpanLine {
+                name: v.get("name").and_then(Value::as_str)
+                    .expect("span name").to_string(),
+                trace: v.get("args").and_then(|a| a.get("trace"))
+                    .and_then(Value::as_str)
+                    .expect("args.trace").to_string(),
+                ts: v.get("ts").and_then(Value::as_f64).expect("ts"),
+                dur: v.get("dur").and_then(Value::as_f64).expect("dur"),
+            }
+        })
+        .collect()
+}
+
+fn one<'a>(spans: &'a [SpanLine], name: &str) -> &'a SpanLine {
+    let hits: Vec<&SpanLine> =
+        spans.iter().filter(|s| s.name == name).collect();
+    assert_eq!(hits.len(), 1, "span '{}' must appear exactly once, got \
+                {:?}", name, spans);
+    hits[0]
+}
+
+#[test]
+fn traced_served_results_are_bitwise_identical_to_untraced_direct_runs() {
+    let (socket, trace_out, handle) = spawn_traced_server("inv", 8);
+    let mut direct = Coordinator::new("artifacts", &results_dir()).unwrap();
+    for task in registry::all() {
+        for exec in [ExecMode::Sequential, ExecMode::Batched { shards: 1 },
+                     ExecMode::Batched { shards: 2 }] {
+            let mut spec = task.smoke_spec();
+            spec.reps = 3; // makes shards=2 an uneven 2+1 split
+            spec.exec = exec;
+            let want = direct.run(&spec).unwrap();
+            match submit(&socket, &spec) {
+                Response::Completed { cache_hit, result, .. } => {
+                    assert!(!cache_hit);
+                    // the deterministic payloads are byte-identical:
+                    // tracing recorded spans but perturbed nothing
+                    assert_eq!(
+                        result.canonical_json().to_string_pretty(),
+                        want.canonical_json().to_string_pretty(),
+                        "task {} exec {:?}", task.name(), exec
+                    );
+                    for (a, b) in want.reps.iter().zip(&result.reps) {
+                        assert_eq!(a.objs, b.objs,
+                                   "task {} exec {:?}", task.name(), exec);
+                    }
+                }
+                other => panic!("task {} exec {:?}: expected a result, \
+                                 got {:?}", task.name(), exec, other),
+            }
+        }
+    }
+    let stats = shut_down(&socket, handle);
+    assert_eq!(stats.executed, (registry::all().count() * 3) as u64);
+    // every traced conversation recorded a full, distinct span chain
+    let spans = parse_trace_file(&trace_out);
+    let requests: Vec<&SpanLine> =
+        spans.iter().filter(|s| s.name == "request").collect();
+    assert_eq!(requests.len(), registry::all().count() * 3 + 1,
+               "one request span per submit + one for the shutdown");
+    for req in &requests {
+        assert!(req.trace.len() == 16
+                    && req.trace.chars().all(|c| c.is_ascii_hexdigit()),
+                "trace ids are 16 hex digits, got {:?}", req.trace);
+    }
+    let _ = std::fs::remove_file(&trace_out);
+}
+
+#[test]
+fn metrics_verb_reports_the_scripted_conversation() {
+    let (socket, trace_out, handle) = spawn_traced_server("met", 8);
+    let mut spec_a = registry::all().next().unwrap().smoke_spec();
+    spec_a.seed = 101;
+    let mut spec_b = spec_a.clone();
+    spec_b.seed = 202;
+    // two distinct submits execute; resubmitting the first answers from
+    // the handler's fast-path cache probe without queueing
+    for spec in [&spec_a, &spec_b] {
+        match submit(&socket, spec) {
+            Response::Completed { cache_hit, .. } => assert!(!cache_hit),
+            other => panic!("expected a result, got {:?}", other),
+        }
+    }
+    match submit(&socket, &spec_a) {
+        Response::Completed { cache_hit, .. } => assert!(cache_hit),
+        other => panic!("expected a cached result, got {:?}", other),
+    }
+    let snap = Client::connect(&socket).unwrap().metrics().unwrap();
+    assert_eq!(snap.counter("submits_total"), Some(3));
+    assert_eq!(snap.counter("runs_executed_total"), Some(2));
+    assert_eq!(snap.counter("cache_hits_total"), Some(1));
+    assert_eq!(snap.counter("cache_misses_total"), Some(2));
+    assert_eq!(snap.counter("busy_rejections_total"), Some(0));
+    // one terminal frame relayed per executed (non-streaming) submit;
+    // the fast-path hit is a handler-local write, not a relay
+    assert_eq!(snap.counter("frames_relayed_total"), Some(2));
+    assert_eq!(snap.counter("frozen_rows_total"), Some(0),
+               "no budget on these specs");
+    assert_eq!(snap.gauge("queue_depth"), Some(0), "drained");
+    assert!(snap.gauge("queue_depth_high_water").unwrap() >= 1);
+    assert_eq!(snap.gauge("cache_entries"), Some(2));
+    let qw = snap.histogram("queue_wait_seconds").unwrap();
+    assert_eq!(qw.count, 2, "one measured wait per popped job");
+    assert_eq!(qw.counts.iter().sum::<u64>(), qw.count);
+    let rl = snap.histogram("run_latency_seconds").unwrap();
+    assert_eq!(rl.count, 2, "one latency per executed run");
+    assert!(rl.sum_s > 0.0);
+    // per-phase totals ride the snapshot (DESIGN.md §15)
+    assert!(!snap.per_phase.is_empty());
+    // the Prometheus rendering exposes the same numbers
+    let prom = snap.to_prometheus();
+    assert!(prom.contains("simopt_runs_executed_total 2"), "{}", prom);
+    assert!(prom.contains("simopt_queue_wait_seconds_count 2"), "{}", prom);
+    shut_down(&socket, handle);
+    let _ = std::fs::remove_file(&trace_out);
+}
+
+#[test]
+fn capacity_zero_counts_busy_rejections_and_v1_metrics_is_refused() {
+    let (socket, trace_out, handle) = spawn_traced_server("busy", 0);
+    let spec = registry::all().next().unwrap().smoke_spec();
+    match submit(&socket, &spec) {
+        Response::Busy { capacity: 0 } => {}
+        other => panic!("expected busy, got {:?}", other),
+    }
+    let snap = Client::connect(&socket).unwrap().metrics().unwrap();
+    assert_eq!(snap.counter("submits_total"), Some(1));
+    assert_eq!(snap.counter("busy_rejections_total"), Some(1));
+    assert_eq!(snap.counter("cache_misses_total"), Some(1),
+               "the fast path probed the cache before the queue bounced");
+    assert_eq!(snap.counter("runs_executed_total"), Some(0));
+    // a raw v1 frame asking for metrics gets a typed error — the v1
+    // grammar is frozen (DESIGN.md §18)
+    let stream =
+        std::os::unix::net::UnixStream::connect(&socket).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    write_frame(&mut writer,
+                &Value::parse(r#"{"v":1,"type":"metrics"}"#).unwrap())
+        .unwrap();
+    let answer = read_frame(&mut reader).unwrap().unwrap();
+    assert_eq!(answer.get("type").and_then(Value::as_str), Some("error"));
+    assert_eq!(answer.get("v").and_then(Value::as_f64), Some(1.0));
+    let msg = answer.get("error").and_then(Value::as_str).unwrap();
+    assert!(msg.contains("protocol v2"), "{}", msg);
+    shut_down(&socket, handle);
+    let _ = std::fs::remove_file(&trace_out);
+}
+
+#[test]
+fn streaming_spans_chain_nest_and_sum_to_the_observed_wall_clock() {
+    let (socket, trace_out, handle) = spawn_traced_server("span", 8);
+    let mut spec = registry::all().next().unwrap().smoke_spec();
+    spec.seed = 4242; // unique — must execute, not hit another test's cache
+    spec.exec = ExecMode::Batched { shards: 1 };
+    let wall_start = now_us();
+    let mut client = Client::connect(&socket).unwrap();
+    let mut session = client.session(&spec, true).unwrap();
+    let mut progress_frames = 0usize;
+    let terminal = loop {
+        match session.next_event().unwrap() {
+            Some(Response::Queued { .. }) => {}
+            Some(Response::Progress(_)) => progress_frames += 1,
+            Some(t) => break t,
+            None => panic!("session ended without a terminal frame"),
+        }
+    };
+    let wall_us = (now_us() - wall_start) as f64;
+    assert!(matches!(terminal, Response::Completed { .. }),
+            "{:?}", terminal);
+    assert!(progress_frames >= 1, "a streaming submit must progress");
+    // every v2 frame carried the conversation's trace id
+    let trace = session.trace().expect("v2 frames carry a trace stamp");
+    drop(session);
+    shut_down(&socket, handle); // span-flush barrier (see shut_down)
+    let all = parse_trace_file(&trace_out);
+    let spans: Vec<SpanLine> = all.iter()
+        .filter(|s| s.trace == trace.as_hex())
+        .cloned()
+        .collect();
+    // the five life-cycle spans appear exactly once each…
+    let request = one(&spans, "request");
+    let stages = ["admission", "cache_check", "queue_wait", "execute",
+                  "relay"];
+    let mut stage_sum = 0.0;
+    for name in stages {
+        let sp = one(&spans, name);
+        // …nested inside the request parent…
+        assert!(sp.ts >= request.ts
+                    && sp.ts + sp.dur <= request.ts + request.dur,
+                "{} [{}, {}] outside request [{}, {}]",
+                name, sp.ts, sp.ts + sp.dur,
+                request.ts, request.ts + request.dur);
+        stage_sum += sp.dur;
+    }
+    // …with one epoch span per relayed progress frame, nested in execute
+    let execute = one(&spans, "execute");
+    let epochs: Vec<&SpanLine> =
+        spans.iter().filter(|s| s.name == "epoch").collect();
+    assert_eq!(epochs.len(), progress_frames);
+    for ep in &epochs {
+        assert!(ep.ts >= execute.ts
+                    && ep.ts + ep.dur <= execute.ts + execute.dur,
+                "epoch [{}, {}] outside execute [{}, {}]",
+                ep.ts, ep.ts + ep.dur, execute.ts,
+                execute.ts + execute.dur);
+    }
+    // the stage spans are disjoint and contiguous-by-construction, so
+    // they sum to at most the request's duration, and account for it
+    // within tolerance (scheduling gaps: channel handoff, thread wakes)
+    assert!(stage_sum <= request.dur + 1.0,
+            "stages sum {} > request {}", stage_sum, request.dur);
+    let gap = request.dur - stage_sum;
+    assert!(gap <= 0.10 * request.dur + 100_000.0,
+            "unattributed gap {}µs of a {}µs request", gap, request.dur);
+    // and the request span itself is bounded by the client-observed wall
+    assert!(request.dur <= wall_us + 1_000.0,
+            "request span {}µs exceeds observed wall {}µs",
+            request.dur, wall_us);
+    let _ = std::fs::remove_file(&trace_out);
+}
